@@ -1,0 +1,32 @@
+//! Asynchronous serving under Poisson load (paper §4.3): sweep the arrival
+//! rate and watch the aLoRA speedup grow with utilization, then print the
+//! Prometheus metrics snapshot of the last engine.
+//!
+//!     cargo run --release --example async_serving
+
+use alora_serve::figures::make_engine;
+use alora_serve::pipeline::{run_poisson, PipelineSpec};
+
+fn main() {
+    let spec = PipelineSpec::base_adapter(256, 256, 16);
+    let n = 200;
+    println!("async base-adapter, prompt 256 / gen 256 / eval 16, n={n} conversations\n");
+    println!("{:>12} {:>14} {:>14} {:>10}", "rate(req/s)", "LoRA e2e(s)", "aLoRA e2e(s)", "speedup");
+
+    let mut last_prom = String::new();
+    for rate in [0.5, 1.0, 2.0, 4.0, 8.0, 16.0] {
+        let mut ea = make_engine("granite-8b", true, 1);
+        let ra = run_poisson(&mut ea, &spec, n, rate, 42);
+        let mut el = make_engine("granite-8b", false, 1);
+        let rl = run_poisson(&mut el, &spec, n, rate, 42);
+        let a = ra.eval_latencies().mean("e2e");
+        let l = rl.eval_latencies().mean("e2e");
+        println!("{rate:>12} {l:>14.4} {a:>14.4} {:>9.1}x", l / a);
+        last_prom = ea.metrics.render_prometheus();
+    }
+
+    println!("\n--- /metrics snapshot of the final aLoRA engine (excerpt) ---");
+    for line in last_prom.lines().filter(|l| !l.starts_with('#')).take(14) {
+        println!("{line}");
+    }
+}

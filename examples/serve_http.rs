@@ -1,0 +1,68 @@
+//! HTTP serving demo: start the server on the simulated engine, issue a
+//! few /generate calls (base + adapter), print /metrics, shut down.
+//!
+//!     cargo run --release --example serve_http
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use alora_serve::engine::Engine;
+use alora_serve::pipeline::workload;
+use alora_serve::server::Server;
+use alora_serve::simulator::SimExecutor;
+
+fn http(addr: std::net::SocketAddr, req: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(req.as_bytes()).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn post(addr: std::net::SocketAddr, path: &str, body: &str) -> String {
+    http(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = alora_serve::config::presets::granite_8b();
+    let reg = workload::build_registry(2, cfg.model.vocab_size, true);
+    let exec = SimExecutor::new(&cfg);
+    let engine = Engine::with_registry(cfg, reg, exec);
+    let mut srv = Server::start(engine, "127.0.0.1:0")?;
+    println!("server listening on http://{}\n", srv.addr());
+
+    // base request
+    let body = r#"{"prompt": [11,12,13,14,15,16,17,18,19,20,21,22,23,24,25,26], "max_new_tokens": 8}"#;
+    let resp = post(srv.addr(), "/generate", body);
+    println!("POST /generate (base):\n{}\n", resp.lines().last().unwrap_or(""));
+
+    // adapter request over the same prefix (cross-model cache reuse)
+    let inv = workload::invocation_for(49_155, 0);
+    let mut prompt: Vec<u32> = (11..27).collect();
+    prompt.extend(inv);
+    let body = format!(
+        r#"{{"prompt": {:?}, "adapter": "alora-0", "max_new_tokens": 4}}"#,
+        prompt
+    );
+    let resp = post(srv.addr(), "/generate", &body);
+    println!("POST /generate (alora-0):\n{}\n", resp.lines().last().unwrap_or(""));
+
+    let metrics = http(
+        srv.addr(),
+        "GET /metrics HTTP/1.1\r\nHost: localhost\r\n\r\n",
+    );
+    println!("GET /metrics (excerpt):");
+    for line in metrics.lines().filter(|l| l.starts_with("alora_serve")).take(12) {
+        println!("  {line}");
+    }
+
+    srv.shutdown();
+    println!("\nserver stopped.");
+    Ok(())
+}

@@ -1,0 +1,153 @@
+"""L2/L1 performance analysis: HLO op audit + VMEM/MXU estimates.
+
+    cd python && python -m compile.analysis
+
+Two jobs (DESIGN.md §11):
+
+1. **L2 HLO audit** — count ops in the lowered `step` module, flag
+   recomputation smells (duplicate large matmuls), and report the
+   total FLOPs/bytes so the L3 cost model and the artifact agree.
+2. **L1 structure estimates** — per Pallas kernel and tile configuration,
+   compute the VMEM working set and the MXU utilization proxy
+   (fraction of the matmul's inner dimensions that fill the 128×128
+   systolic array). interpret=True gives CPU-numpy timings only, so
+   *structure* is what we optimize; these numbers are the ones recorded
+   in EXPERIMENTS.md §Perf.
+"""
+
+import collections
+import re
+
+from . import aot, model
+from .configs import TINY
+
+
+def hlo_op_histogram(hlo_text: str) -> dict:
+    """Count HLO opcodes in the entry + nested computations."""
+    ops = collections.Counter()
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\S+\s+([a-z\-]+)\(", line)
+        if m:
+            ops[m.group(1)] += 1
+    return dict(ops)
+
+
+def audit_step_module(cfg=TINY):
+    params = model.init_params(cfg)
+    text = aot.to_hlo_text(aot.lower_step(params, cfg))
+    ops = hlo_op_histogram(text)
+    dots = ops.get("dot", 0)
+    # Expected dot count: per layer 3 QKV pallas kernels × (1 base + 2
+    # adapter dots per grid cell, grid cells unrolled or looped) + attn
+    # (2 dots per cell) + wo + mlp(2) + lm head.
+    report = {
+        "total_ops": sum(ops.values()),
+        "dot": dots,
+        "while": ops.get("while", 0),
+        "dynamic-update-slice": ops.get("dynamic-update-slice", 0),
+        "transpose": ops.get("transpose", 0),
+        "bytes_hlo_text": len(text),
+    }
+    return report, ops
+
+
+# ---------------------------------------------------------------------------
+# L1 estimates
+# ---------------------------------------------------------------------------
+
+MXU_DIM = 128            # TPU systolic array edge
+VMEM_BYTES = 16 * 2**20  # ~16 MiB/core
+
+
+def qkv_kernel_estimate(s, d_in, d_out, r, tile_tokens, tile_out, dtype_bytes=4):
+    """VMEM working set + MXU utilization proxy for alora_qkv tiles."""
+    vmem = dtype_bytes * (
+        tile_tokens * d_in      # x tile
+        + d_in * tile_out       # W tile
+        + d_in * r              # A
+        + r * tile_out          # B tile
+        + tile_tokens           # gate
+        + tile_tokens * tile_out  # out
+    )
+    # MXU proxy: each dot's (M, K, N) vs the 128×128 array. The base matmul
+    # dominates; utilization ~ min(dim,128)/128 per axis.
+    def util(m, k, n):
+        return (min(m, MXU_DIM) / MXU_DIM) * (min(k, MXU_DIM) / MXU_DIM) * (
+            min(n, MXU_DIM) / MXU_DIM)
+
+    base_util = util(tile_tokens, d_in, tile_out)
+    corr_util = 0.5 * (util(tile_tokens, d_in, r) + util(tile_tokens, r, tile_out))
+    grid = (s // tile_tokens) * (d_out // tile_out)
+    flops = 2 * s * d_in * d_out + 2 * s * (d_in * r + r * d_out)
+    return {
+        "grid_cells": grid,
+        "vmem_bytes_per_cell": vmem,
+        "vmem_frac": vmem / VMEM_BYTES,
+        "mxu_util_base": base_util,
+        "mxu_util_adapter": corr_util,
+        "flops": flops,
+    }
+
+
+def attention_kernel_estimate(s, h, dh, tile_q, dtype_bytes=4):
+    vmem = dtype_bytes * (
+        tile_q * dh         # q tile
+        + 2 * s * dh        # K, V for the head
+        + tile_q * s        # bias tile
+        + tile_q * dh       # out
+        + tile_q * s        # scores scratch
+    )
+    def util(m, k, n):
+        return (min(m, MXU_DIM) / MXU_DIM) * (min(k, MXU_DIM) / MXU_DIM) * (
+            min(n, MXU_DIM) / MXU_DIM)
+    return {
+        "grid_cells": h * (s // tile_q),
+        "vmem_bytes_per_cell": vmem,
+        "vmem_frac": vmem / VMEM_BYTES,
+        "mxu_util_scores": util(tile_q, dh, s),
+        "mxu_util_values": util(tile_q, s, dh),
+        "flops": 4 * h * s * s * dh,
+    }
+
+
+def sweep_qkv_tiles(cfg=TINY):
+    """Block-shape sweep for the fused QKV kernel (the L1 §Perf table)."""
+    rows = []
+    for tt in (8, 16, 32, 80, 160):
+        for to in (32, 64, 128):
+            if cfg.max_seq_len % tt or cfg.d_model % to:
+                continue
+            est = qkv_kernel_estimate(
+                cfg.max_seq_len, cfg.d_model, cfg.d_model, cfg.rank, tt, to)
+            rows.append((tt, to, est))
+    return rows
+
+
+def main():
+    report, ops = audit_step_module()
+    print("== L2 HLO audit (tiny step module) ==")
+    for k, v in report.items():
+        print(f"  {k:>24}: {v}")
+    top = sorted(ops.items(), key=lambda kv: -kv[1])[:12]
+    print("  top ops:", ", ".join(f"{k}×{v}" for k, v in top))
+
+    cfg = TINY
+    print("\n== L1 alora_qkv tile sweep (VMEM / MXU-util estimates) ==")
+    print(f"  {'tile_t':>6} {'tile_o':>6} {'grid':>5} {'VMEM/cell':>10} "
+          f"{'%VMEM':>6} {'MXU(base)':>9}")
+    for tt, to, est in sweep_qkv_tiles(cfg):
+        star = " <= current" if (tt, to) == (cfg.tile_tokens, cfg.tile_out) else ""
+        print(f"  {tt:>6} {to:>6} {est['grid_cells']:>5} "
+              f"{est['vmem_bytes_per_cell']:>10,} {est['vmem_frac']*100:>5.1f}% "
+              f"{est['mxu_util_base']:>9.3f}{star}")
+
+    print("\n== L1 attention (per-head K/V resident) ==")
+    est = attention_kernel_estimate(cfg.max_seq_len, cfg.n_heads, cfg.head_dim,
+                                    cfg.tile_tokens)
+    for k, v in est.items():
+        print(f"  {k:>22}: {v:,}" if isinstance(v, int) else f"  {k:>22}: {v:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,239 @@
+"""AOT compile path: lower the L2 `step` to HLO text + export goldens.
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Produces:
+    tiny_step.hlo.txt   — the executable the rust runtime loads (PJRT CPU).
+                          Weights are baked in as constants; the only
+                          runtime inputs are tokens/KV/window/mask/one-hot.
+    manifest.json       — shapes, dtypes and argument order for rust.
+    golden.json         — scripted multi-turn scenario with expected logits
+                          so rust/tests/real_runtime.rs can verify the
+                          cross-model KV-reuse numerics end-to-end.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the `xla` rust crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONLY here — never on the request path. `make artifacts` is a
+no-op when inputs are unchanged (mtime-based, via the Makefile rule).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import TINY, TinyConfig
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked weights must survive the text
+    # round-trip — the default printer elides them as `constant({...})`.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_step(params, cfg: TinyConfig):
+    """Lower `step` with weights closed over as constants."""
+
+    def fn(tokens, k_in, v_in, start, length, mask_pre, adapter_onehot):
+        logits, k, v = model.step(
+            params, cfg, tokens, k_in, v_in, start, length, mask_pre,
+            adapter_onehot,
+        )
+        return logits, k, v
+
+    s = cfg.max_seq_len
+    kv = jax.ShapeDtypeStruct(model.kv_shape(cfg), jnp.float32)
+    specs = (
+        jax.ShapeDtypeStruct((s,), jnp.int32),          # tokens
+        kv,                                             # k_in
+        kv,                                             # v_in
+        jax.ShapeDtypeStruct((), jnp.int32),            # start
+        jax.ShapeDtypeStruct((), jnp.int32),            # length
+        jax.ShapeDtypeStruct((s,), jnp.float32),        # mask_pre
+        jax.ShapeDtypeStruct((cfg.n_adapters,), jnp.float32),  # adapter_onehot
+    )
+    # Perf pass: donate the KV buffers. The input_output_alias survives the
+    # HLO-text round-trip (verified in EXPERIMENTS.md §Perf), letting the
+    # PJRT runtime update KV in place instead of materializing fresh
+    # 327 KiB outputs per step.
+    return jax.jit(fn, donate_argnums=(1, 2)).lower(*specs)
+
+
+def manifest(cfg: TinyConfig) -> dict:
+    return {
+        "model": "tiny",
+        "vocab_size": cfg.vocab_size,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "head_dim": cfg.head_dim,
+        "max_seq_len": cfg.max_seq_len,
+        "block_size": cfg.block_size,
+        "n_adapters": cfg.n_adapters,
+        "rank": cfg.rank,
+        "invocation_len": cfg.invocation_len,
+        "invocation_tokens": [
+            cfg.invocation_tokens(a) for a in range(cfg.n_adapters)
+        ],
+        "args": [
+            {"name": "tokens", "shape": [cfg.max_seq_len], "dtype": "s32"},
+            {"name": "k_in", "shape": list(model.kv_shape(cfg)), "dtype": "f32"},
+            {"name": "v_in", "shape": list(model.kv_shape(cfg)), "dtype": "f32"},
+            {"name": "start", "shape": [], "dtype": "s32"},
+            {"name": "length", "shape": [], "dtype": "s32"},
+            {"name": "mask_pre", "shape": [cfg.max_seq_len], "dtype": "f32"},
+            {"name": "adapter_onehot", "shape": [cfg.n_adapters], "dtype": "f32"},
+        ],
+        "outputs": [
+            {"name": "logits", "shape": [cfg.vocab_size], "dtype": "f32"},
+            {"name": "k_out", "shape": list(model.kv_shape(cfg)), "dtype": "f32"},
+            {"name": "v_out", "shape": list(model.kv_shape(cfg)), "dtype": "f32"},
+        ],
+    }
+
+
+def build_golden(params, cfg: TinyConfig) -> dict:
+    """Scripted multi-turn base→aLoRA→base scenario with expected logits.
+
+    The scenario mirrors the paper's atomic pipeline (§4.1): base prefill
+    over prompt x, adapter evaluation over (x + invocation), and a final
+    base continuation — exercising reuse in both directions (Fig 4).
+
+    Uses the *reference* (pure-jnp) path so goldens are independent of the
+    Pallas kernels; pytest separately proves pallas == ref, and the rust
+    test proves artifact == golden, closing the triangle.
+    """
+    rng = jax.random.PRNGKey(123)
+    prompt_len = 40
+    prompt = jax.random.randint(
+        rng, (prompt_len,), 0, cfg.vocab_size - 4 * cfg.invocation_len
+    ).tolist()
+    adapter_id = 1
+    inv = cfg.invocation_tokens(adapter_id)
+
+    k0, v0 = model.empty_kv(cfg)
+
+    # (1) Base prefill over the prompt.
+    base_logits, k1, v1 = model.run_step(
+        params, cfg, prompt, k0, v0, 0, prompt_len,
+        inv_start=cfg.max_seq_len, adapter_id=None,
+    )
+    y = int(jnp.argmax(base_logits))
+
+    # (2a) aLoRA eval, FULL recompute (what a cache-miss would do).
+    eval_tokens = prompt + [y] + inv
+    inv_start = prompt_len + 1
+    full_logits, kf, vf = model.run_step(
+        params, cfg, eval_tokens, k0, v0, 0, len(eval_tokens),
+        inv_start=inv_start, adapter_id=adapter_id,
+    )
+
+    # (2b) aLoRA eval REUSING base-prefilled KV — the paper's contribution.
+    # Only [prompt_len, len(eval_tokens)) is recomputed.
+    reuse_logits, kr, vr = model.run_step(
+        params, cfg, eval_tokens, k1, v1, prompt_len, len(eval_tokens),
+        inv_start=inv_start, adapter_id=adapter_id,
+    )
+    assert jnp.allclose(full_logits, reuse_logits, atol=1e-4), (
+        "cross-model KV reuse must be numerically exact"
+    )
+
+    # (2c) Standard-LoRA eval (mask 0 everywhere) — differs from base KV,
+    # demonstrating why LoRA cannot reuse base cache.
+    lora_logits, _, _ = model.run_step(
+        params, cfg, eval_tokens, k0, v0, 0, len(eval_tokens),
+        inv_start=0, adapter_id=adapter_id,
+    )
+
+    # (3) Base continuation reusing the aLoRA's *pre-activation* blocks:
+    # the base model extends from prompt_len using k1/v1 (identical to the
+    # aLoRA's pre-activation KV), generating a few tokens.
+    decode_tokens = []
+    cur_tokens = prompt + [y]
+    k, v = k1, v1
+    logits = None
+    for _ in range(4):
+        logits, k, v = model.run_step(
+            params, cfg, cur_tokens, k, v, len(cur_tokens) - 1,
+            len(cur_tokens), inv_start=cfg.max_seq_len, adapter_id=None,
+        )
+        nxt = int(jnp.argmax(logits))
+        decode_tokens.append(nxt)
+        cur_tokens.append(nxt)
+
+    def head(x, n=16):
+        return [float(t) for t in jnp.asarray(x)[:n]]
+
+    return {
+        "prompt": prompt,
+        "prompt_len": prompt_len,
+        "adapter_id": adapter_id,
+        "invocation_tokens": inv,
+        "base_next_token": y,
+        "eval_tokens": eval_tokens,
+        "inv_start": inv_start,
+        "logits_head_n": 16,
+        "base_logits_head": head(base_logits),
+        "alora_full_logits_head": head(full_logits),
+        "alora_reuse_logits_head": head(reuse_logits),
+        "lora_logits_head": head(lora_logits),
+        "alora_argmax": int(jnp.argmax(full_logits)),
+        "lora_argmax": int(jnp.argmax(lora_logits)),
+        "base_decode_tokens": decode_tokens,
+        "final_base_logits_head": head(logits),
+        "atol": 2e-3,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--tile-tokens", type=int, default=None,
+                    help="override L1 token-tile (perf sweep; see "
+                         "EXPERIMENTS.md §Perf)")
+    ap.add_argument("--tile-out", type=int, default=None,
+                    help="override L1 output-feature tile")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = TINY
+    if args.tile_tokens or args.tile_out:
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg,
+            tile_tokens=args.tile_tokens or cfg.tile_tokens,
+            tile_out=args.tile_out or cfg.tile_out,
+        )
+    params = model.init_params(cfg)
+
+    hlo = to_hlo_text(lower_step(params, cfg))
+    hlo_path = os.path.join(args.out_dir, "tiny_step.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+    print(f"wrote {hlo_path} ({len(hlo)/1e6:.1f} MB, "
+          f"{cfg.param_count()/1e6:.2f}M params baked in)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest(cfg), f, indent=2)
+    print("wrote manifest.json")
+
+    golden = build_golden(params, cfg)
+    with open(os.path.join(args.out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=2)
+    print("wrote golden.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Model configurations for the AOT compile path.
+
+Only the `tiny` config is actually lowered to an executable artifact — it is
+the model that runs on the PJRT CPU client from the rust coordinator. The
+large configs from the paper's Table 1 (Granite 3.2 8B, Llama 3.3 70B,
+Mistral Large 2) exist on the rust side as *cost-model presets* for the
+discrete-event simulator (see rust/src/config/presets.rs and DESIGN.md §7).
+
+All shapes here are static: the rust runtime executes one fixed-shape
+`step` artifact, so max_seq_len bounds the KV buffer and prompt+generation
+lengths of the real-model path.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class TinyConfig:
+    """~0.9M-parameter transformer used on the real PJRT path.
+
+    The paper's speedups are independent of weight values ("all low-rank
+    adapters and all inputs were generated randomly, as the values of these
+    do not affect inference speed" — §4.1), so a tiny deterministic model is
+    sufficient to validate the *numerics* of cross-model KV-cache reuse;
+    large-model timing behaviour is reproduced by the rust simulator.
+    """
+
+    vocab_size: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 256
+    max_seq_len: int = 160
+    # KV-cache block size used by the rust block manager. Must divide
+    # max_seq_len. Matches the Figure-3 example semantics (activation
+    # tokens only cached once they fill a block).
+    block_size: int = 16
+    # Number of baked-in adapters selectable via one-hot at runtime.
+    n_adapters: int = 3
+    # Rank of the baked aLoRA adapters (paper §4.1 uses 32 for aLoRA).
+    rank: int = 32
+    # Length of each adapter's invocation (activation) token sequence.
+    invocation_len: int = 4
+    rms_eps: float = 1e-5
+    seed: int = 0
+
+    # Pallas tiling knobs (see DESIGN.md §8 / §11 for the VMEM story).
+    # Perf pass (EXPERIMENTS.md §Perf): at tiny-model shapes, whole-sequence
+    # token tiles maximize the MXU-utilization estimate (0.25 -> 1.0) at
+    # 1.6% of VMEM and run the compiled artifact 2.1x faster than tile 16;
+    # on production shapes the same sweep would cap tiles at the VMEM
+    # budget instead. Sweep: `python -m compile.aot --tile-tokens N`.
+    tile_tokens: int = 160     # token-axis tile for qkv projection + attention
+    tile_out: int = 128        # output-feature tile for qkv projection
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def n_blocks(self) -> int:
+        assert self.max_seq_len % self.block_size == 0
+        return self.max_seq_len // self.block_size
+
+    def param_count(self) -> int:
+        d, L = self.d_model, self.n_layers
+        embed = self.vocab_size * d + self.max_seq_len * d
+        attn = 4 * d * d            # Wq Wk Wv Wo
+        mlp = 2 * d * self.d_ff
+        norms = 2 * d
+        adapters = self.n_adapters * L * 3 * (d * self.rank + self.rank * d)
+        return embed + L * (attn + mlp + norms) + d + adapters
+
+    def invocation_tokens(self, adapter_id: int) -> list[int]:
+        """Deterministic invocation sequence for adapter `adapter_id`.
+
+        Mirrored byte-for-byte by rust/src/adapter/registry.rs — the rust
+        coordinator scans prompts for these sequences to locate the aLoRA
+        activation point (paper Figure 5).
+        """
+        assert 0 <= adapter_id < self.n_adapters
+        base = self.vocab_size - (adapter_id + 1) * self.invocation_len
+        return list(range(base, base + self.invocation_len))
+
+
+TINY = TinyConfig()

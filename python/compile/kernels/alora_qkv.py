@@ -1,0 +1,96 @@
+"""Pallas kernel: fused activation-aware adapted projection (L1 hot spot).
+
+This is the paper's Algorithm-1 computation — base projection plus a
+per-token-gated low-rank correction — fused into a single tiled kernel:
+
+    out = x @ W + gate ⊙ ((x @ A) @ B)
+
+GPU→TPU adaptation (DESIGN.md §8): the paper implements this as a masked
+add around vLLM's CUDA LoRA path. On TPU we instead tile the token axis so
+that each (token-tile, out-tile) grid cell issues one MXU matmul for the
+base projection and two *skinny* (rank-32) matmuls for the correction, all
+resident in VMEM. The gate is applied per token-row in the tile, so a batch
+mixing pre- and post-activation tokens (heterogeneous invocation points,
+paper Appendix B) is handled inside one kernel launch — no per-request
+dispatch.
+
+VMEM footprint per grid cell (f32):
+    x tile   Ts×d_in, W tile d_in×To, A d_in×r, B tile r×To,
+    gate Ts×1, out Ts×To
+With the defaults (Ts=32, To=128, d_in=128, r=32) that is ~37 KiB — far
+under the ~16 MiB/core VMEM budget, leaving room to scale Ts/To up on real
+hardware (see EXPERIMENTS.md §Perf for the block-shape sweep).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO through the pallas
+interpreter. Structure (tiling, fusion, accumulation dtype) is what we
+optimize; wallclock on CPU is not a TPU proxy.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _alora_qkv_kernel(x_ref, w_ref, a_ref, b_ref, gate_ref, o_ref):
+    """One (token-tile, out-tile) grid cell.
+
+    Shapes (per tile):
+        x_ref:    (Ts, d_in)
+        w_ref:    (d_in, To)
+        a_ref:    (d_in, r)
+        b_ref:    (r, To)
+        gate_ref: (Ts, 1)
+        o_ref:    (Ts, To)
+    """
+    x = x_ref[...]
+    # Base path: one MXU-shaped matmul, f32 accumulation.
+    base = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    # Adapter path: two skinny matmuls through the rank-r bottleneck.
+    xa = jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32)
+    corr = jnp.dot(xa, b_ref[...], preferred_element_type=jnp.float32)
+    # Per-token gate: 0 before the invocation point (base behaviour),
+    # 1 after it. This single line is the aLoRA masking of Algorithm 1.
+    o_ref[...] = (base + gate_ref[...] * corr).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_tokens", "tile_out"))
+def alora_qkv(x, w, a, b, gate, *, tile_tokens=32, tile_out=128):
+    """Fused adapted projection. See module docstring.
+
+    Args:
+        x:    [S, d_in] activations; S divisible by tile_tokens.
+        w:    [d_in, d_out] frozen base weight; d_out divisible by tile_out.
+        a:    [d_in, r] adapter down-projection (adapter-selected upstream).
+        b:    [r, d_out] adapter up-projection.
+        gate: [S, 1] float, 1.0 where the adapter is active for that token.
+        tile_tokens / tile_out: tile sizes for the (token, feature) grid.
+
+    Returns:
+        [S, d_out] with x's dtype; f32 accumulation inside.
+    """
+    s, d_in = x.shape
+    d_in_w, d_out = w.shape
+    r = a.shape[1]
+    assert d_in == d_in_w, (d_in, d_in_w)
+    assert s % tile_tokens == 0, (s, tile_tokens)
+    assert d_out % tile_out == 0, (d_out, tile_out)
+    assert gate.shape == (s, 1), gate.shape
+
+    grid = (s // tile_tokens, d_out // tile_out)
+    return pl.pallas_call(
+        _alora_qkv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_tokens, d_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((d_in, tile_out), lambda i, j: (0, j)),
+            pl.BlockSpec((d_in, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((r, tile_out), lambda i, j: (0, j)),
+            pl.BlockSpec((tile_tokens, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_tokens, tile_out), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, d_out), x.dtype),
+        interpret=True,
+    )(x, w, a, b, gate)

@@ -1,0 +1,130 @@
+"""Pallas kernel: blocked masked attention over the paged KV buffer (L1).
+
+The rust coordinator manages KV in PagedAttention-style blocks; by the time
+the executable runs, the (gathered) KV buffer is a dense padded [H, S, Dh]
+tensor whose valid region is encoded in an additive bias. The kernel tiles
+the query axis per head — each grid cell holds one q tile plus that head's
+full K/V in VMEM:
+
+    VMEM per cell (f32, defaults Tq=32, S=160, Dh=32):
+        q 32×32 + K,V 2×160×32 + bias 32×160 + out 32×32  ≈ 69 KiB
+
+For the tiny model a whole head's KV fits VMEM, so a single-pass softmax
+per q tile is optimal (no K-axis loop, no rescaling traffic). On real
+hardware with long S the K axis would be tiled with a running-max
+(flash-style) inner loop; that variant exists as `attention_flash` below
+and is exercised by tests and the L1 block-shape sweep.
+
+interpret=True for CPU-PJRT executability (see alora_qkv.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(scale, q_ref, k_ref, v_ref, bias_ref, o_ref):
+    """Grid cell: (head h, q-tile i). Full K/V for head h in VMEM."""
+    q = q_ref[0].astype(jnp.float32) * scale
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) + bias_ref[...]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o = jnp.dot(p, v, preferred_element_type=jnp.float32)
+    o_ref[0] = (o / jnp.sum(p, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "tile_q"))
+def attention(q, k, v, bias, *, scale, tile_q=32):
+    """Masked attention, blocked over (head, q-tile).
+
+    Args:
+        q, k, v: [H, S, Dh]; S divisible by tile_q.
+        bias:    [S, S] additive mask (0 allowed / -1e30 disallowed),
+                 encoding causality and the valid KV length.
+        scale:   softmax scale (1/sqrt(Dh)).
+        tile_q:  query-axis tile.
+
+    Returns:
+        [H, S, Dh] in q's dtype.
+    """
+    h, s, dh = q.shape
+    assert s % tile_q == 0, (s, tile_q)
+    grid = (h, s // tile_q)
+    kernel = functools.partial(_attn_kernel, float(scale))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_q, dh), lambda hh, i: (hh, i, 0)),
+            pl.BlockSpec((1, s, dh), lambda hh, i: (hh, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda hh, i: (hh, 0, 0)),
+            pl.BlockSpec((tile_q, s), lambda hh, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_q, dh), lambda hh, i: (hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, bias)
+
+
+def _flash_kernel(scale, n_kv, q_ref, k_ref, v_ref, bias_ref, o_ref):
+    """Flash-style grid cell: K axis tiled with running-max rescaling.
+
+    k_ref/v_ref/bias_ref hold the full row for this head / q-tile; the loop
+    slices K tiles out of VMEM. On real TPU the BlockSpec would stream K
+    tiles HBM→VMEM instead; the loop structure (running max `m`, running
+    normalizer `l`, rescaled accumulator) is the part that transfers.
+    """
+    q = q_ref[0].astype(jnp.float32) * scale
+    tq, dh = q.shape
+    s_total = k_ref.shape[1]
+    tk = s_total // n_kv
+
+    def body(j, carry):
+        acc, m, l = carry
+        kj = jax.lax.dynamic_slice(k_ref[0], (j * tk, 0), (tk, dh)).astype(jnp.float32)
+        vj = jax.lax.dynamic_slice(v_ref[0], (j * tk, 0), (tk, dh)).astype(jnp.float32)
+        bj = jax.lax.dynamic_slice(bias_ref[...], (0, j * tk), (tq, tk))
+        sj = jnp.dot(q, kj.T, preferred_element_type=jnp.float32) + bj
+        mj = jnp.maximum(m, jnp.max(sj, axis=-1, keepdims=True))
+        p = jnp.exp(sj - mj)
+        alpha = jnp.exp(m - mj)
+        acc = acc * alpha + jnp.dot(p, vj, preferred_element_type=jnp.float32)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        return acc, mj, l
+
+    acc0 = jnp.zeros((tq, dh), jnp.float32)
+    m0 = jnp.full((tq, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((tq, 1), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_kv, body, (acc0, m0, l0))
+    o_ref[0] = (acc / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "tile_q", "tile_k"))
+def attention_flash(q, k, v, bias, *, scale, tile_q=32, tile_k=32):
+    """Flash-style variant of `attention` with a tiled K axis.
+
+    Numerically equivalent to `attention` / `attention_ref`; used for the
+    L1 structure ablation (EXPERIMENTS.md §Perf) and long-S settings where
+    a head's KV would not fit VMEM.
+    """
+    h, s, dh = q.shape
+    assert s % tile_q == 0 and s % tile_k == 0, (s, tile_q, tile_k)
+    grid = (h, s // tile_q)
+    kernel = functools.partial(_flash_kernel, float(scale), s // tile_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_q, dh), lambda hh, i: (hh, i, 0)),
+            pl.BlockSpec((1, s, dh), lambda hh, i: (hh, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda hh, i: (hh, 0, 0)),
+            pl.BlockSpec((tile_q, s), lambda hh, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_q, dh), lambda hh, i: (hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, bias)

@@ -1,0 +1,65 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its `*_ref` twin to float tolerance under pytest (including
+hypothesis sweeps over shapes/dtypes in python/tests/test_kernels.py).
+
+The reference implementations are also used directly by `model.step_ref`,
+the no-Pallas reference forward pass that the full Pallas model is checked
+against end-to-end.
+"""
+
+import jax.numpy as jnp
+
+
+def alora_qkv_ref(x, w, a, b, gate):
+    """Activation-aware adapted projection (paper §2.3, Algorithm 1).
+
+        out[t] = x[t] @ W + gate[t] * ((x[t] @ A) @ B)
+
+    `gate[t] = 0` for tokens *before* the aLoRA invocation point (base
+    behaviour — identical K/V to the base model, which is exactly what
+    makes the KV-cache reusable across models) and `1` after it. A standard
+    LoRA is the special case `gate = 1` everywhere; the base model is
+    `gate = 0` everywhere (or zero A/B).
+
+    Args:
+        x:    [S, d_in]  activations.
+        w:    [d_in, d_out] frozen base projection.
+        a:    [d_in, r]  low-rank down-projection (already adapter-selected).
+        b:    [r, d_out] low-rank up-projection.
+        gate: [S, 1]     1.0 where the adapter is active for that token.
+
+    Returns:
+        [S, d_out] projected activations, float32 accumulation.
+    """
+    base = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    corr = jnp.dot(
+        jnp.dot(x, a, preferred_element_type=jnp.float32),
+        b,
+        preferred_element_type=jnp.float32,
+    )
+    return (base + gate * corr).astype(x.dtype)
+
+
+def attention_ref(q, k, v, bias, scale):
+    """Masked multi-head attention over a padded sequence.
+
+    Args:
+        q, k, v: [H, S, Dh].
+        bias:    [S, S] additive mask; 0 where position i may attend to j,
+                 large-negative otherwise (encodes causality + the valid
+                 length of the padded KV buffer).
+        scale:   softmax scale, typically 1/sqrt(Dh).
+
+    Returns:
+        [H, S, Dh] attention outputs.
+    """
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("hqd,hkd->hqk", qf, kf) * scale + bias[None, :, :]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    out = jnp.einsum("hqk,hkd->hqd", p, vf) / jnp.sum(p, axis=-1, keepdims=True)
+    return out.astype(q.dtype)

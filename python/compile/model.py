@@ -1,0 +1,227 @@
+"""L2: the JAX model — a functional KV-in/KV-out transformer `step`.
+
+One executable serves every phase of the request lifecycle (DESIGN.md §9):
+
+    step(tokens, k_in, v_in, start, length, mask_pre, adapter_onehot)
+        -> (logits_at_length_minus_1, k_out, v_out)
+
+  * fresh prefill:            start = 0,          length = prompt_len
+  * cache-extension prefill:  start = cached_len, length = total_len
+        — THE cross-model-reuse path: k_in/v_in carry blocks prefilled by
+          the base model (or another aLoRA), and only [start, length) is
+          recomputed. Positions outside the window pass K/V through
+          untouched, so cache reuse is observable in the numerics.
+  * decode:                   start = length - 1
+
+aLoRA semantics (paper §2.3): `mask_pre[t] = 1` marks tokens *before* the
+invocation point — their Q/K/V use the frozen base weights only, making
+their K/V bit-identical to the base model's. `mask_pre = 1` everywhere is
+the base model; `mask_pre = 0` everywhere is a standard LoRA (the paper's
+baseline, which adapts every token and therefore cannot reuse base cache).
+`adapter_onehot` selects one of the baked adapter weight sets (all-zero =
+base model).
+
+The Q/K/V projections go through the L1 Pallas kernel (kernels.alora_qkv);
+attention goes through kernels.attention. `step_ref` is the pure-jnp twin
+used as the end-to-end oracle in pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import TinyConfig, TINY
+from .kernels import ref
+from .kernels.alora_qkv import alora_qkv
+from .kernels.attention import attention
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: TinyConfig = TINY):
+    """Deterministic parameter pytree (baked into the HLO as constants).
+
+    Weight values are irrelevant to serving performance (paper §4.1 uses
+    random adapters/inputs); determinism is what matters so that the golden
+    outputs exported by aot.py stay valid for the rust integration tests.
+    """
+    key = jax.random.PRNGKey(cfg.seed)
+    ks = iter(jax.random.split(key, 16 + 16 * cfg.n_layers))
+    d, dff, r = cfg.d_model, cfg.d_ff, cfg.rank
+
+    def dense(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale)
+
+    params = {
+        "embed": dense(next(ks), (cfg.vocab_size, d), 0.02),
+        "pos_embed": dense(next(ks), (cfg.max_seq_len, d), 0.02),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        layer = {
+            "norm1": jnp.ones((d,), jnp.float32),
+            "norm2": jnp.ones((d,), jnp.float32),
+            "wq": dense(next(ks), (d, d), d ** -0.5),
+            "wk": dense(next(ks), (d, d), d ** -0.5),
+            "wv": dense(next(ks), (d, d), d ** -0.5),
+            "wo": dense(next(ks), (d, d), d ** -0.5),
+            "w1": dense(next(ks), (d, dff), d ** -0.5),
+            "w2": dense(next(ks), (dff, d), dff ** -0.5),
+            # Adapter stacks: [n_adapters, ...]. a/b per projection, as in
+            # the paper's ΔQ/ΔK/ΔV formulation (§2.2–2.3).
+            "aq": dense(next(ks), (cfg.n_adapters, d, r), d ** -0.5),
+            "bq": dense(next(ks), (cfg.n_adapters, r, d), r ** -0.5),
+            "ak": dense(next(ks), (cfg.n_adapters, d, r), d ** -0.5),
+            "bk": dense(next(ks), (cfg.n_adapters, r, d), r ** -0.5),
+            "av": dense(next(ks), (cfg.n_adapters, d, r), d ** -0.5),
+            "bv": dense(next(ks), (cfg.n_adapters, r, d), r ** -0.5),
+        }
+        params["layers"].append(layer)
+    return params
+
+
+def kv_shape(cfg: TinyConfig = TINY):
+    """[L, S, H, Dh] — the KV buffer shape the rust runtime manages."""
+    return (cfg.n_layers, cfg.max_seq_len, cfg.n_heads, cfg.head_dim)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _rms_norm(x, g, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def _attn_bias(cfg, length):
+    """[S, S] additive mask: position i attends to j iff j <= i and j < length."""
+    s = cfg.max_seq_len
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(s)[None, :]
+    allowed = (cols <= rows) & (cols < length)
+    return jnp.where(allowed, 0.0, -1e30).astype(jnp.float32)
+
+
+def _select_adapter(stack, onehot):
+    """[NA, ...] stack × [NA] one-hot -> [...]; all-zero one-hot -> zeros."""
+    return jnp.tensordot(onehot, stack, axes=1)
+
+
+def _step_impl(params, cfg, tokens, k_in, v_in, start, length, mask_pre,
+               adapter_onehot, *, use_pallas):
+    s, d, h, dh = cfg.max_seq_len, cfg.d_model, cfg.n_heads, cfg.head_dim
+    pos = jnp.arange(s)
+    # Update window: positions whose K/V this call recomputes.
+    upd = (pos >= start) & (pos < length)
+    gate = (1.0 - mask_pre).astype(jnp.float32)[:, None]       # [S,1]
+    bias = _attn_bias(cfg, length)
+    scale = dh ** -0.5
+
+    def proj(x, w, a_stack, b_stack):
+        a = _select_adapter(a_stack, adapter_onehot)
+        b = _select_adapter(b_stack, adapter_onehot)
+        if use_pallas:
+            return alora_qkv(x, w, a, b, gate,
+                             tile_tokens=cfg.tile_tokens, tile_out=cfg.tile_out)
+        return ref.alora_qkv_ref(x, w, a, b, gate)
+
+    x = params["embed"][tokens] + params["pos_embed"]
+    k_out, v_out = [], []
+    for li, layer in enumerate(params["layers"]):
+        xn = _rms_norm(x, layer["norm1"], cfg.rms_eps)
+        q = proj(xn, layer["wq"], layer["aq"], layer["bq"])
+        k = proj(xn, layer["wk"], layer["ak"], layer["bk"])
+        v = proj(xn, layer["wv"], layer["av"], layer["bv"])
+        q = q.reshape(s, h, dh)
+        k = k.reshape(s, h, dh)
+        v = v.reshape(s, h, dh)
+        # KV pass-through outside [start, length): reused cache enters here.
+        k_eff = jnp.where(upd[:, None, None], k, k_in[li])
+        v_eff = jnp.where(upd[:, None, None], v, v_in[li])
+        k_out.append(k_eff)
+        v_out.append(v_eff)
+        qh = jnp.transpose(q, (1, 0, 2))      # [H,S,Dh]
+        kh = jnp.transpose(k_eff, (1, 0, 2))
+        vh = jnp.transpose(v_eff, (1, 0, 2))
+        if use_pallas:
+            attn = attention(qh, kh, vh, bias, scale=scale, tile_q=cfg.tile_tokens)
+        else:
+            attn = ref.attention_ref(qh, kh, vh, bias, scale)
+        attn = jnp.transpose(attn, (1, 0, 2)).reshape(s, d)
+        x = x + attn @ layer["wo"]
+        xn2 = _rms_norm(x, layer["norm2"], cfg.rms_eps)
+        x = x + jax.nn.gelu(xn2 @ layer["w1"]) @ layer["w2"]
+
+    x = _rms_norm(x, params["final_norm"], cfg.rms_eps)
+    # LM head only at the last valid position (tied embedding).
+    x_last = jax.lax.dynamic_slice(x, (length - 1, 0), (1, d))[0]
+    logits = x_last @ params["embed"].T
+    return logits, jnp.stack(k_out), jnp.stack(v_out)
+
+
+def step(params, cfg, tokens, k_in, v_in, start, length, mask_pre,
+         adapter_onehot):
+    """Pallas-kernel forward. See module docstring for the contract."""
+    return _step_impl(params, cfg, tokens, k_in, v_in, start, length,
+                      mask_pre, adapter_onehot, use_pallas=True)
+
+
+def step_ref(params, cfg, tokens, k_in, v_in, start, length, mask_pre,
+             adapter_onehot):
+    """Pure-jnp oracle — identical contract, no Pallas."""
+    return _step_impl(params, cfg, tokens, k_in, v_in, start, length,
+                      mask_pre, adapter_onehot, use_pallas=False)
+
+
+# ---------------------------------------------------------------------------
+# Convenience drivers (used by tests and by aot.py golden generation)
+# ---------------------------------------------------------------------------
+
+def empty_kv(cfg: TinyConfig = TINY):
+    shape = kv_shape(cfg)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def pad_tokens(cfg: TinyConfig, tokens):
+    out = jnp.zeros((cfg.max_seq_len,), jnp.int32)
+    return out.at[: len(tokens)].set(jnp.asarray(tokens, jnp.int32))
+
+
+def mask_for(cfg: TinyConfig, inv_start):
+    """mask_pre for an aLoRA activated at absolute position `inv_start`.
+
+    inv_start >= max_seq_len  -> all-pre (base model behaviour)
+    inv_start == 0            -> standard LoRA behaviour (adapt everything)
+    """
+    return (jnp.arange(cfg.max_seq_len) < inv_start).astype(jnp.float32)
+
+
+def onehot_for(cfg: TinyConfig, adapter_id):
+    """adapter_id None -> base model (all zeros)."""
+    oh = jnp.zeros((cfg.n_adapters,), jnp.float32)
+    if adapter_id is None:
+        return oh
+    return oh.at[adapter_id].set(1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
+def _jitted_step(params, cfg, tokens, k_in, v_in, start, length, mask_pre,
+                 adapter_onehot, use_pallas):
+    return _step_impl(params, cfg, tokens, k_in, v_in, start, length,
+                      mask_pre, adapter_onehot, use_pallas=use_pallas)
+
+
+def run_step(params, cfg, tokens, k, v, start, length, inv_start, adapter_id,
+             use_pallas=False):
+    """Ergonomic wrapper: scalars/lists in, jitted step out."""
+    return _jitted_step(
+        params, cfg, pad_tokens(cfg, tokens), k, v,
+        jnp.int32(start), jnp.int32(length),
+        mask_for(cfg, inv_start), onehot_for(cfg, adapter_id),
+        use_pallas,
+    )

@@ -1,0 +1,63 @@
+"""Tests for the HLO audit + L1 estimate tooling (compile/analysis.py)."""
+
+import jax
+
+from compile import analysis
+from compile.configs import TINY
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_hlo_histogram_counts_ops():
+    text = """
+HloModule m
+ENTRY e {
+  a = f32[2,2]{1,0} parameter(0)
+  b = f32[2,2]{1,0} parameter(1)
+  d = f32[2,2]{1,0} dot(a, b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT r = f32[2,2]{1,0} add(d, a)
+}
+"""
+    ops = analysis.hlo_op_histogram(text)
+    assert ops.get("dot") == 1
+    assert ops.get("add") == 1
+    assert ops.get("parameter") == 2
+
+
+def test_audit_runs_on_real_module():
+    report, ops = analysis.audit_step_module()
+    assert report["total_ops"] > 100
+    assert report["dot"] > 0, "matmuls must be present"
+    assert "while" in ops or report["while"] >= 0
+
+
+def test_qkv_estimate_vmem_under_budget():
+    cfg = TINY
+    est = analysis.qkv_kernel_estimate(
+        cfg.max_seq_len, cfg.d_model, cfg.d_model, cfg.rank,
+        cfg.tile_tokens, cfg.tile_out)
+    assert est["vmem_frac"] < 0.05, "tiny tiles must be far under VMEM"
+    assert 0 < est["mxu_util_base"] <= 1.0
+    assert est["flops"] > 0
+
+
+def test_qkv_estimate_scales_with_tiles():
+    small = analysis.qkv_kernel_estimate(160, 128, 128, 32, 8, 32)
+    big = analysis.qkv_kernel_estimate(160, 128, 128, 32, 32, 128)
+    assert big["vmem_bytes_per_cell"] > small["vmem_bytes_per_cell"]
+    assert big["grid_cells"] < small["grid_cells"]
+    assert big["mxu_util_base"] > small["mxu_util_base"]
+
+
+def test_attention_estimate_sane():
+    cfg = TINY
+    est = analysis.attention_kernel_estimate(
+        cfg.max_seq_len, cfg.n_heads, cfg.head_dim, cfg.tile_tokens)
+    assert est["grid_cells"] == cfg.n_heads * cfg.max_seq_len // cfg.tile_tokens
+    assert est["vmem_frac"] < 0.05
+
+
+def test_tile_sweep_includes_current_config():
+    rows = analysis.sweep_qkv_tiles(TINY)
+    assert any((tt, to) == (TINY.tile_tokens, TINY.tile_out) for tt, to, _ in rows)
+    assert len(rows) >= 6

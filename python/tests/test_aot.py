@@ -1,0 +1,89 @@
+"""AOT path: lowering determinism, manifest consistency, golden validity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.configs import TINY
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = TINY
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG)
+
+
+def test_lowering_produces_parseable_hlo_text(params):
+    text = aot.to_hlo_text(aot.lower_step(params, CFG))
+    assert text.startswith("HloModule")
+    assert "{...}" not in text, "large constants must not be elided"
+    # entry signature carries exactly the 7 runtime args
+    assert "s32[160]" in text and "f32[4,160,4,32]" in text
+
+
+def test_lowering_is_deterministic(params):
+    t1 = aot.to_hlo_text(aot.lower_step(params, CFG))
+    t2 = aot.to_hlo_text(aot.lower_step(params, CFG))
+    assert t1 == t2
+
+
+def test_manifest_matches_config():
+    m = aot.manifest(CFG)
+    assert m["max_seq_len"] == CFG.max_seq_len
+    assert m["block_size"] == CFG.block_size
+    assert [a["name"] for a in m["args"]] == [
+        "tokens", "k_in", "v_in", "start", "length", "mask_pre",
+        "adapter_onehot",
+    ]
+    assert m["invocation_tokens"] == [
+        CFG.invocation_tokens(a) for a in range(CFG.n_adapters)
+    ]
+
+
+def test_golden_scenario_selfconsistent(params):
+    """Rebuild the golden dict and re-verify its claims with fresh runs."""
+    g = aot.build_golden(params, CFG)
+    np.testing.assert_allclose(g["alora_full_logits_head"],
+                               g["alora_reuse_logits_head"], atol=1e-6)
+    # LoRA head must differ from aLoRA head somewhere
+    d = np.abs(np.array(g["lora_logits_head"]) -
+               np.array(g["alora_full_logits_head"]))
+    assert d.max() > 1e-3
+    # replay base prefill and check the exported head
+    k0, v0 = model.empty_kv(CFG)
+    logits, _, _ = model.run_step(params, CFG, g["prompt"], k0, v0, 0,
+                                  g["prompt_len"], CFG.max_seq_len, None)
+    np.testing.assert_allclose(np.asarray(logits)[:g["logits_head_n"]],
+                               g["base_logits_head"], atol=1e-5)
+    assert int(jnp.argmax(logits)) == g["base_next_token"]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "golden.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_emitted_golden_matches_current_model(params):
+    """The checked-out artifacts must correspond to the current model code —
+    guards against stale artifacts after model changes."""
+    with open(os.path.join(ART, "golden.json")) as f:
+        g = json.load(f)
+    k0, v0 = model.empty_kv(CFG)
+    logits, _, _ = model.run_step(params, CFG, g["prompt"], k0, v0, 0,
+                                  g["prompt_len"], CFG.max_seq_len, None)
+    np.testing.assert_allclose(np.asarray(logits)[:g["logits_head_n"]],
+                               g["base_logits_head"], atol=1e-5)
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_emitted_manifest_matches_current_config():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m = json.load(f)
+    assert m == aot.manifest(CFG)

@@ -1,0 +1,207 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (kernels/ref.py).
+
+Hypothesis sweeps shapes/dtypes per the repo testing policy; every case
+asserts allclose against the reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.alora_qkv import alora_qkv
+from compile.kernels.attention import attention, attention_flash
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    # Inputs are unscaled normals, so accumulations reach O(1e2); tolerances
+    # are relative to that magnitude (f32 matmul reassociation ~1e-6 rel).
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(
+        atol=1e-3, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# alora_qkv
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles_s=st.integers(1, 4),
+    tile_tokens=st.sampled_from([8, 16, 32]),
+    d_in=st.sampled_from([32, 64, 128]),
+    tiles_o=st.integers(1, 3),
+    tile_out=st.sampled_from([32, 64, 128]),
+    r=st.sampled_from([8, 32]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    inv_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_alora_qkv_matches_ref(tiles_s, tile_tokens, d_in, tiles_o, tile_out,
+                               r, dtype, inv_frac, seed):
+    s = tiles_s * tile_tokens
+    d_out = tiles_o * tile_out
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = _rand(ks[0], (s, d_in), dtype)
+    w = _rand(ks[1], (d_in, d_out), dtype)
+    a = _rand(ks[2], (d_in, r), dtype)
+    b = _rand(ks[3], (r, d_out), dtype)
+    inv_start = int(inv_frac * s)
+    gate = (jnp.arange(s) >= inv_start).astype(jnp.float32)[:, None]
+
+    got = alora_qkv(x, w, a, b, gate, tile_tokens=tile_tokens,
+                    tile_out=tile_out)
+    want = ref.alora_qkv_ref(x, w, a, b, gate)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_alora_qkv_gate_zero_is_base():
+    """gate=0 must be *exactly* the base projection — the property that
+    makes pre-activation KV bit-identical to the base model's."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = _rand(ks[0], (32, 64), jnp.float32)
+    w = _rand(ks[1], (64, 64), jnp.float32)
+    a = _rand(ks[2], (64, 32), jnp.float32)
+    b = _rand(ks[3], (32, 64), jnp.float32)
+    gate = jnp.zeros((32, 1), jnp.float32)
+    got = alora_qkv(x, w, a, b, gate, tile_tokens=16, tile_out=64)
+    base = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base), atol=1e-6)
+
+
+def test_alora_qkv_gate_one_is_lora():
+    """gate=1 everywhere reproduces a standard LoRA projection."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    x = _rand(ks[0], (32, 64), jnp.float32)
+    w = _rand(ks[1], (64, 64), jnp.float32)
+    a = _rand(ks[2], (64, 8), jnp.float32)
+    b = _rand(ks[3], (8, 64), jnp.float32)
+    gate = jnp.ones((32, 1), jnp.float32)
+    got = alora_qkv(x, w, a, b, gate, tile_tokens=16, tile_out=64)
+    want = x @ w + (x @ a) @ b
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_alora_qkv_mixed_gate_rowwise():
+    """Rows are gated independently (heterogeneous invocation points in one
+    batch, paper Appendix B)."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    x = _rand(ks[0], (16, 32), jnp.float32)
+    w = _rand(ks[1], (32, 32), jnp.float32)
+    a = _rand(ks[2], (32, 8), jnp.float32)
+    b = _rand(ks[3], (8, 32), jnp.float32)
+    gate = (jnp.arange(16) % 2).astype(jnp.float32)[:, None]
+    got = np.asarray(alora_qkv(x, w, a, b, gate, tile_tokens=8, tile_out=32))
+    base = np.asarray(x @ w)
+    lora = np.asarray(x @ w + (x @ a) @ b)
+    for t in range(16):
+        want = lora[t] if t % 2 else base[t]
+        np.testing.assert_allclose(got[t], want, atol=1e-4)
+
+
+def test_alora_qkv_rejects_bad_tiling():
+    x = jnp.zeros((30, 32))
+    w = jnp.zeros((32, 32))
+    a = jnp.zeros((32, 8))
+    b = jnp.zeros((8, 32))
+    gate = jnp.zeros((30, 1))
+    with pytest.raises(AssertionError):
+        alora_qkv(x, w, a, b, gate, tile_tokens=16, tile_out=32)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _bias(s, length):
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(s)[None, :]
+    return jnp.where((cols <= rows) & (cols < length), 0.0, -1e30).astype(
+        jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(1, 4),
+    tiles_q=st.integers(1, 4),
+    tile_q=st.sampled_from([8, 16, 32]),
+    dh=st.sampled_from([16, 32, 64]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    len_frac=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(h, tiles_q, tile_q, dh, dtype, len_frac, seed):
+    s = tiles_q * tile_q
+    length = max(1, int(len_frac * s))
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = _rand(ks[0], (h, s, dh), dtype)
+    k = _rand(ks[1], (h, s, dh), dtype)
+    v = _rand(ks[2], (h, s, dh), dtype)
+    bias = _bias(s, length)
+    scale = dh ** -0.5
+    got = attention(q, k, v, bias, scale=scale, tile_q=tile_q)
+    want = ref.attention_ref(q, k, v, bias, scale)
+    np.testing.assert_allclose(np.asarray(got, np.float32)[:, :length],
+                               np.asarray(want, np.float32)[:, :length],
+                               **_tol(dtype))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    tile_q=st.sampled_from([16, 32]),
+    tile_k=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_flash_matches_ref(tile_q, tile_k, seed):
+    h, s, dh = 2, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = _rand(ks[0], (h, s, dh), jnp.float32)
+    k = _rand(ks[1], (h, s, dh), jnp.float32)
+    v = _rand(ks[2], (h, s, dh), jnp.float32)
+    bias = _bias(s, s)
+    scale = dh ** -0.5
+    got = attention_flash(q, k, v, bias, scale=scale, tile_q=tile_q,
+                          tile_k=tile_k)
+    want = ref.attention_ref(q, k, v, bias, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_attention_causality():
+    """Changing K/V at position j must not affect outputs at i < j."""
+    h, s, dh = 2, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = _rand(ks[0], (h, s, dh), jnp.float32)
+    k = _rand(ks[1], (h, s, dh), jnp.float32)
+    v = _rand(ks[2], (h, s, dh), jnp.float32)
+    bias = _bias(s, s)
+    out1 = np.asarray(attention(q, k, v, bias, scale=0.25, tile_q=16))
+    k2 = k.at[:, 20].add(100.0)
+    v2 = v.at[:, 20].add(100.0)
+    out2 = np.asarray(attention(q, k2, v2, bias, scale=0.25, tile_q=16))
+    np.testing.assert_allclose(out1[:, :20], out2[:, :20], atol=1e-6)
+    assert np.abs(out1[:, 20:] - out2[:, 20:]).max() > 1e-3
+
+
+def test_attention_padding_ignored():
+    """Positions >= length must not influence valid outputs."""
+    h, s, dh, length = 2, 32, 16, 17
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = _rand(ks[0], (h, s, dh), jnp.float32)
+    k = _rand(ks[1], (h, s, dh), jnp.float32)
+    v = _rand(ks[2], (h, s, dh), jnp.float32)
+    bias = _bias(s, length)
+    out1 = np.asarray(attention(q, k, v, bias, scale=0.25, tile_q=16))
+    k2 = k.at[:, length:].set(99.0)
+    v2 = v.at[:, length:].set(-99.0)
+    out2 = np.asarray(attention(q, k2, v2, bias, scale=0.25, tile_q=16))
+    np.testing.assert_allclose(out1[:, :length], out2[:, :length], atol=1e-6)

@@ -1,0 +1,148 @@
+"""L2 model correctness: Pallas step vs pure-jnp step_ref, contract checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import TINY
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG)
+
+
+def _prompt(n, seed=0):
+    return list(
+        np.random.default_rng(seed).integers(0, CFG.vocab_size - 32, n)
+    )
+
+
+def test_pallas_step_matches_ref(params):
+    k0, v0 = model.empty_kv(CFG)
+    prompt = _prompt(48)
+    ref_logits, ref_k, ref_v = model.run_step(
+        params, CFG, prompt, k0, v0, 0, 48, CFG.max_seq_len, None)
+    pal_logits, pal_k, pal_v = model.run_step(
+        params, CFG, prompt, k0, v0, 0, 48, CFG.max_seq_len, None,
+        use_pallas=True)
+    np.testing.assert_allclose(np.asarray(pal_logits), np.asarray(ref_logits),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(pal_k), np.asarray(ref_k),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(pal_v), np.asarray(ref_v),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_pallas_step_matches_ref_with_adapter(params):
+    k0, v0 = model.empty_kv(CFG)
+    tokens = _prompt(40) + CFG.invocation_tokens(2)
+    n = len(tokens)
+    for adapter_id in range(CFG.n_adapters):
+        ref_out = model.run_step(params, CFG, tokens, k0, v0, 0, n, 40,
+                                 adapter_id)
+        pal_out = model.run_step(params, CFG, tokens, k0, v0, 0, n, 40,
+                                 adapter_id, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(pal_out[0]),
+                                   np.asarray(ref_out[0]),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_kv_passthrough_outside_window(params):
+    """K/V outside [start, length) must be returned untouched — the property
+    that lets the rust block manager own cache lifetime."""
+    kin = jnp.full(model.kv_shape(CFG), 7.5, jnp.float32)
+    vin = jnp.full(model.kv_shape(CFG), -3.25, jnp.float32)
+    prompt = _prompt(30)
+    _, k, v = model.run_step(params, CFG, prompt + [1] * 10, kin, vin,
+                             30, 40, CFG.max_seq_len, None)
+    k, v = np.asarray(k), np.asarray(v)
+    # positions < start and >= length untouched
+    np.testing.assert_array_equal(k[:, :30], 7.5)
+    np.testing.assert_array_equal(k[:, 40:], 7.5)
+    np.testing.assert_array_equal(v[:, :30], -3.25)
+    np.testing.assert_array_equal(v[:, 40:], -3.25)
+    # updated window actually written
+    assert np.abs(k[:, 30:40] - 7.5).min() > 0
+
+
+def test_all_pre_mask_equals_base(params):
+    """An aLoRA with the mask all-pre must be bit-equivalent to the base
+    model regardless of the one-hot — pre-activation tokens never see
+    adapter weights."""
+    k0, v0 = model.empty_kv(CFG)
+    prompt = _prompt(32)
+    base = model.run_step(params, CFG, prompt, k0, v0, 0, 32,
+                          CFG.max_seq_len, None)
+    for adapter_id in range(CFG.n_adapters):
+        ad = model.run_step(params, CFG, prompt, k0, v0, 0, 32,
+                            CFG.max_seq_len, adapter_id)
+        np.testing.assert_array_equal(np.asarray(base[0]), np.asarray(ad[0]))
+        np.testing.assert_array_equal(np.asarray(base[1]), np.asarray(ad[1]))
+
+
+def test_lora_mask_changes_kv(params):
+    """mask=0 everywhere (standard LoRA) must produce *different* K/V for
+    the prompt — why LoRA cannot reuse base cache."""
+    k0, v0 = model.empty_kv(CFG)
+    prompt = _prompt(32)
+    _, kb, _ = model.run_step(params, CFG, prompt, k0, v0, 0, 32,
+                              CFG.max_seq_len, None)
+    _, kl, _ = model.run_step(params, CFG, prompt, k0, v0, 0, 32, 0, 1)
+    assert np.abs(np.asarray(kb)[:, :32] - np.asarray(kl)[:, :32]).max() > 1e-3
+
+
+def test_decode_equals_prefill_suffix(params):
+    """Token-by-token decode over cached KV must equal a one-shot prefill."""
+    k0, v0 = model.empty_kv(CFG)
+    toks = _prompt(20)
+    # one-shot
+    one_logits, k1, v1 = model.run_step(params, CFG, toks, k0, v0, 0, 20,
+                                        CFG.max_seq_len, None)
+    # incremental: prefill 16, then 4 single-token extensions
+    _, k, v = model.run_step(params, CFG, toks, k0, v0, 0, 16,
+                             CFG.max_seq_len, None)
+    logits = None
+    for i in range(16, 20):
+        logits, k, v = model.run_step(params, CFG, toks, k, v, i, i + 1,
+                                      CFG.max_seq_len, None)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(one_logits),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(k)[:, :20], np.asarray(k1)[:, :20],
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_logits_at_length_minus_one(params):
+    """Shortening length must move the readout position."""
+    k0, v0 = model.empty_kv(CFG)
+    toks = _prompt(24)
+    l24 = model.run_step(params, CFG, toks, k0, v0, 0, 24,
+                         CFG.max_seq_len, None)[0]
+    l12 = model.run_step(params, CFG, toks, k0, v0, 0, 12,
+                         CFG.max_seq_len, None)[0]
+    l12b = model.run_step(params, CFG, toks[:12], k0, v0, 0, 12,
+                          CFG.max_seq_len, None)[0]
+    assert np.abs(np.asarray(l24) - np.asarray(l12)).max() > 1e-3
+    np.testing.assert_allclose(np.asarray(l12), np.asarray(l12b), atol=1e-5)
+
+
+def test_param_count_matches_config():
+    p = model.init_params(CFG)
+    total = sum(np.asarray(x).size for x in jax.tree.leaves(p))
+    assert total == CFG.param_count()
+
+
+def test_invocation_tokens_disjoint_and_in_vocab():
+    seen = set()
+    for a in range(CFG.n_adapters):
+        toks = CFG.invocation_tokens(a)
+        assert len(toks) == CFG.invocation_len
+        assert all(0 <= t < CFG.vocab_size for t in toks)
+        assert not (set(toks) & seen), "invocation sequences must be disjoint"
+        seen |= set(toks)

@@ -1,0 +1,13 @@
+//! Figure 10 reproduction: base-adapter-base generation-length sweep +
+//! 5-parallel-adapter variant with the base2 queuing-damage table.
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let t0 = Instant::now();
+    for table in alora_serve::figures::fig10::run(quick) {
+        table.print();
+    }
+    println!("\n[bench_fig10 completed in {:.1}s]", t0.elapsed().as_secs_f64());
+}

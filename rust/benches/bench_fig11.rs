@@ -1,0 +1,11 @@
+//! Figure 11 (Appendix C) reproduction: adapter-base pipeline — the
+//! reverse reuse direction (base consumes adapter-prefilled blocks).
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let t0 = Instant::now();
+    alora_serve::figures::fig11::run(quick).print();
+    println!("\n[bench_fig11 completed in {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,11 @@
+//! Figure 12 (Appendix D) reproduction: TTFT and inference-time breakdown
+//! of the base-adapter eval step.
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let t0 = Instant::now();
+    alora_serve::figures::fig12::run(quick).print();
+    println!("\n[bench_fig12 completed in {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,13 @@
+//! Figures 13–14 (Appendix E) reproduction: async base+eval step —
+//! aggregate metrics and stage breakdown vs arrival rate.
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let t0 = Instant::now();
+    for table in alora_serve::figures::fig13_14::run(quick) {
+        table.print();
+    }
+    println!("\n[bench_fig13_14 completed in {:.1}s]", t0.elapsed().as_secs_f64());
+}

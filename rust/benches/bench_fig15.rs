@@ -1,0 +1,12 @@
+//! Figure 15 (Appendix F) reproduction: per-length KV-filling batch sizes
+//! — decode times dominate short prompts, motivating the fixed-batch
+//! methodology of the synchronous trials.
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let t0 = Instant::now();
+    alora_serve::figures::fig15::run(quick).print();
+    println!("\n[bench_fig15 completed in {:.1}s]", t0.elapsed().as_secs_f64());
+}

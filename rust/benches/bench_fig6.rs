@@ -1,0 +1,14 @@
+//! Figure 6 reproduction: synchronous base-adapter pipeline, prompt-length
+//! sweep over all three Table-1 models, LoRA vs aLoRA, per-stage latencies
+//! + speedups. `QUICK=1` shrinks the sweep (CI).
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let t0 = Instant::now();
+    for table in alora_serve::figures::fig6::run(quick) {
+        table.print();
+    }
+    println!("\n[bench_fig6 completed in {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,10 @@
+//! Figure 7 reproduction: eval-step token throughput @65k prompt,
+//! KV-filling batch, all three models.
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    alora_serve::figures::fig7::run().print();
+    println!("\n[bench_fig7 completed in {:.1}s]", t0.elapsed().as_secs_f64());
+}

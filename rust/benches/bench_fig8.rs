@@ -1,0 +1,11 @@
+//! Figure 8 reproduction: async base-adapter pipeline, Poisson arrival
+//! rate sweep (n=500 unless QUICK=1).
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let t0 = Instant::now();
+    alora_serve::figures::fig8::run(quick).print();
+    println!("\n[bench_fig8 completed in {:.1}s]", t0.elapsed().as_secs_f64());
+}

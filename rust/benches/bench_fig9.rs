@@ -1,0 +1,16 @@
+//! Figure 9 reproduction: speedup vs arrival rate × generation length,
+//! plus the cache-overflow probe showing reuse collapse past capacity.
+
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let t0 = Instant::now();
+    alora_serve::figures::fig9::run(quick).print();
+    let (small, big) = alora_serve::figures::fig9::overflow_probe();
+    println!(
+        "\ncache-overflow probe: hit rate {:.2} (16k-token cache) vs {:.2} (full cache)",
+        small, big
+    );
+    println!("[bench_fig9 completed in {:.1}s]", t0.elapsed().as_secs_f64());
+}

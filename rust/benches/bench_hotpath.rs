@@ -1,0 +1,175 @@
+//! Hot-path microbenches — the §Perf iteration loop's instrument.
+//!
+//! Covers every L3 operation on the engine's per-step critical path:
+//! chained block hashing, prefix matching, block alloc/free, admission,
+//! scheduler step packing, mask building, and the end-to-end sim step.
+//! Before/after numbers for each optimization are recorded in
+//! EXPERIMENTS.md §Perf.
+
+use alora_serve::util::fxmap::FxHashMap;
+
+use alora_serve::config::presets;
+use alora_serve::engine::{build_batch_mask, Engine};
+use alora_serve::kvcache::manager::KvCacheManager;
+use alora_serve::kvcache::prefix::{block_hashes, HashContext};
+use alora_serve::pipeline::workload;
+use alora_serve::request::{ModelTarget, Request, RequestId, SamplingParams};
+use alora_serve::scheduler::Scheduler;
+use alora_serve::simulator::SimExecutor;
+use alora_serve::util::bench::{bench, black_box, section};
+use alora_serve::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+
+    section("block hashing");
+    let tokens_4k = rng.tokens(4096, 49155, 64);
+    let tokens_64k = rng.tokens(65536, 49155, 64);
+    let ctx = HashContext::base();
+    println!("{}", bench("hash chain, 4k tokens (256 blocks)", || {
+        black_box(block_hashes(&tokens_4k, 16, &ctx))
+    }));
+    println!("{}", bench("hash chain, 64k tokens (4096 blocks)", || {
+        black_box(block_hashes(&tokens_64k, 16, &ctx))
+    }));
+    let alora_ctx = HashContext {
+        adapter_id: Some(1),
+        is_alora: true,
+        inv_start: 4000,
+        base_aligned: true,
+        cache_salt: 0,
+    };
+    println!("{}", bench("hash chain, 4k tokens, aLoRA salting", || {
+        black_box(block_hashes(&tokens_4k, 16, &alora_ctx))
+    }));
+
+    section("kv-cache manager");
+    let hashes = block_hashes(&tokens_4k, 16, &ctx);
+    println!("{}", bench("admission miss + alloc + commit + free (4k)", || {
+        let mut kv = KvCacheManager::new(512, 16, true);
+        kv.start_request(1, &hashes, 4096);
+        assert!(kv.ensure_capacity(1, 4096));
+        kv.commit_full_blocks(1, &hashes);
+        kv.free_request(1);
+    }));
+    {
+        let mut kv = KvCacheManager::new(512, 16, true);
+        kv.start_request(1, &hashes, 4096);
+        assert!(kv.ensure_capacity(1, 4096));
+        kv.commit_full_blocks(1, &hashes);
+        kv.free_request(1);
+        let mut next = 2u64;
+        println!("{}", bench("warm admission (full 256-block hit) + free", || {
+            let key = next;
+            next += 1;
+            let c = kv.start_request(key, &hashes, 4096);
+            assert_eq!(c.blocks, 256);
+            kv.free_request(key);
+        }));
+        println!("{}", bench("peek cached prefix (hit, 256 blocks)", || {
+            black_box(kv.peek_cached_prefix(&hashes))
+        }));
+    }
+
+    section("scheduler");
+    {
+        let cfg = presets::granite_8b();
+        let mut sched = Scheduler::new(cfg.scheduler.clone());
+        let mut kv = KvCacheManager::new(cfg.cache.num_blocks() as u32, 16, true);
+        let mut reqs: FxHashMap<RequestId, Request> = FxHashMap::default();
+        // 64 decoding requests, steady state.
+        for i in 0..64u64 {
+            let mut r = Request::new(
+                RequestId(i),
+                ModelTarget::Base,
+                rng.tokens(512, 49155, 64),
+                SamplingParams { max_new_tokens: 1000, ..Default::default() },
+                0.0,
+            );
+            r.hash_ctx = HashContext::base();
+            reqs.insert(r.id, r);
+            sched.enqueue(RequestId(i), false);
+        }
+        // Drain prefill so everything decodes.
+        for _ in 0..64 {
+            let s = sched.schedule(&mut reqs, &mut kv);
+            for sq in &s.seqs {
+                let r = reqs.get_mut(&sq.id).unwrap();
+                r.num_computed_tokens = sq.chunk_start + sq.chunk_len;
+                if sq.produces_token {
+                    r.output_tokens.push(1);
+                }
+            }
+        }
+        println!("{}", bench("schedule() 64-seq decode steady state", || {
+            let s = sched.schedule(&mut reqs, &mut kv);
+            for sq in &s.seqs {
+                let r = reqs.get_mut(&sq.id).unwrap();
+                r.num_computed_tokens = sq.chunk_start + sq.chunk_len;
+                if sq.produces_token {
+                    r.output_tokens.push(1);
+                }
+            }
+            black_box(s.total_tokens)
+        }));
+
+        let seqs: Vec<_> = reqs
+            .values()
+            .take(64)
+            .map(|r| alora_serve::scheduler::ScheduledSeq {
+                id: r.id,
+                chunk_start: r.num_computed_tokens.max(1) - 1,
+                chunk_len: 1,
+                produces_token: true,
+                is_decode: true,
+            })
+            .collect();
+        println!("{}", bench("build_batch_mask 64-seq decode", || {
+            black_box(build_batch_mask(&seqs, &reqs))
+        }));
+    }
+
+    section("end-to-end sim engine step");
+    {
+        let cfg = presets::granite_8b();
+        let reg = workload::build_registry(1, cfg.model.vocab_size, true);
+        let exec = SimExecutor::new(&cfg);
+        let mut engine = Engine::with_registry(cfg, reg, exec);
+        let mut rng = Rng::new(3);
+        for _ in 0..32 {
+            engine
+                .submit(
+                    ModelTarget::Base,
+                    rng.tokens(1024, 49155, 64),
+                    SamplingParams { max_new_tokens: 100_000, ..Default::default() },
+                )
+                .unwrap();
+        }
+        // prefill out of the way
+        for _ in 0..40 {
+            engine.step();
+        }
+        println!("{}", bench("engine.step() 32-seq decode (granite-8b sim)", || {
+            black_box(engine.step())
+        }));
+    }
+
+    section("full pipeline wall-clock (sim)");
+    {
+        let t0 = std::time::Instant::now();
+        let spec = alora_serve::pipeline::PipelineSpec::base_adapter(1024, 128, 16);
+        let mut e = {
+            let cfg = presets::granite_8b();
+            let reg = workload::build_registry(1, cfg.model.vocab_size, true);
+            let exec = SimExecutor::new(&cfg);
+            Engine::with_registry(cfg, reg, exec)
+        };
+        let r = alora_serve::pipeline::run_sync(&mut e, &spec, 16, 42);
+        println!(
+            "base-adapter sync, batch 16, prompt 1k: wall {:.3}s for {} reqs (virtual makespan {:.3}s)",
+            t0.elapsed().as_secs_f64(),
+            r.outputs.len(),
+            r.makespan
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! Bench/repro target for paper Table 1: model & server configurations.
+//! Prints the table and times the config/validation path.
+
+use alora_serve::figures::table1;
+use alora_serve::util::bench::{bench, section};
+
+fn main() {
+    section("Table 1 — model and server configurations");
+    table1::run().print();
+
+    section("config-path microbench");
+    let r = bench("preset construction + validation", || {
+        for name in alora_serve::config::presets::PRESET_NAMES {
+            let c = alora_serve::config::presets::by_name(name).unwrap();
+            c.validate().unwrap();
+        }
+    });
+    println!("{r}");
+}

@@ -1,0 +1,253 @@
+//! Adapter registry: standard LoRA vs Activated LoRA (aLoRA).
+//!
+//! An aLoRA adapter is identified by its *invocation tokens* field (paper
+//! Figure 5): when a request targets an aLoRA, the engine scans the prompt
+//! for the adapter's invocation sequence to locate the activation point;
+//! everything before it keeps base-model attention weights and is therefore
+//! cache-interchangeable with the base model.
+
+use crate::kvcache::prefix::HashContext;
+
+/// Internal adapter ID (index into the registry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AdapterId(pub u32);
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdapterKind {
+    /// Standard LoRA: adapts every token; cache isolated per adapter.
+    Lora,
+    /// Activated LoRA: adapts only tokens from the invocation sequence on.
+    ALora {
+        /// The activation token sequence baked in at adapter training time.
+        invocation_tokens: Vec<u32>,
+    },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Adapter {
+    pub id: AdapterId,
+    pub name: String,
+    pub kind: AdapterKind,
+    /// Low-rank dimension (paper: 8 for LoRA, 32 for aLoRA).
+    pub rank: u32,
+}
+
+impl Adapter {
+    pub fn is_alora(&self) -> bool {
+        matches!(self.kind, AdapterKind::ALora { .. })
+    }
+
+    pub fn invocation_tokens(&self) -> Option<&[u32]> {
+        match &self.kind {
+            AdapterKind::ALora { invocation_tokens } => Some(invocation_tokens),
+            AdapterKind::Lora => None,
+        }
+    }
+}
+
+/// Where an aLoRA activates within a prompt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    /// Token index where the invocation sequence starts. Tokens at indices
+    /// `< start` are pre-activation (base-identical K/V).
+    At { start: usize },
+    /// Invocation sequence not present in the prompt: the adapter
+    /// activates from the first generated token (vLLM appends the
+    /// invocation; we model the equivalent "activate at end of prompt").
+    EndOfPrompt,
+}
+
+impl Activation {
+    pub fn start(&self, prompt_len: usize) -> usize {
+        match *self {
+            Activation::At { start } => start,
+            Activation::EndOfPrompt => prompt_len,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct AdapterRegistry {
+    adapters: Vec<Adapter>,
+}
+
+impl AdapterRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Registry mirroring the AOT-baked adapters of the `tiny` model:
+    /// aLoRAs 0..n with python/compile/configs.py invocation sequences.
+    pub fn tiny_default(n_adapters: u32, vocab: u32, inv_len: u32) -> Self {
+        let mut reg = Self::new();
+        for a in 0..n_adapters {
+            let base = vocab - (a + 1) * inv_len;
+            reg.register(
+                format!("alora-{a}"),
+                AdapterKind::ALora {
+                    invocation_tokens: (base..base + inv_len).collect(),
+                },
+                32,
+            );
+        }
+        reg
+    }
+
+    pub fn register(&mut self, name: impl Into<String>, kind: AdapterKind, rank: u32) -> AdapterId {
+        let id = AdapterId(self.adapters.len() as u32);
+        self.adapters.push(Adapter { id, name: name.into(), kind, rank });
+        id
+    }
+
+    pub fn get(&self, id: AdapterId) -> Option<&Adapter> {
+        self.adapters.get(id.0 as usize)
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Adapter> {
+        self.adapters.iter().find(|a| a.name == name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.adapters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.adapters.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Adapter> {
+        self.adapters.iter()
+    }
+
+    /// Locate the aLoRA activation point in `prompt` (paper Figure 5: the
+    /// *last* occurrence of the invocation sequence governs — re-invocation
+    /// deeper in a conversation re-activates from there).
+    pub fn find_activation(&self, id: AdapterId, prompt: &[u32]) -> Option<Activation> {
+        let adapter = self.get(id)?;
+        let inv = adapter.invocation_tokens()?;
+        if inv.is_empty() || prompt.len() < inv.len() {
+            return Some(Activation::EndOfPrompt);
+        }
+        // rfind of the subsequence
+        for start in (0..=prompt.len() - inv.len()).rev() {
+            if &prompt[start..start + inv.len()] == inv {
+                return Some(Activation::At { start });
+            }
+        }
+        Some(Activation::EndOfPrompt)
+    }
+
+    /// Build the hash-chain salting context for a request (None adapter =
+    /// base model). `base_aligned` is the engine feature flag.
+    pub fn hash_context(
+        &self,
+        adapter: Option<AdapterId>,
+        activation_start: usize,
+        base_aligned: bool,
+        cache_salt: u64,
+    ) -> HashContext {
+        match adapter {
+            None => HashContext { cache_salt, ..HashContext::base() },
+            Some(id) => {
+                let a = self.get(id).expect("unknown adapter");
+                HashContext {
+                    adapter_id: Some(id.0),
+                    is_alora: a.is_alora(),
+                    inv_start: activation_start,
+                    base_aligned,
+                    cache_salt,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> AdapterRegistry {
+        let mut r = AdapterRegistry::new();
+        r.register("lora-a", AdapterKind::Lora, 8);
+        r.register(
+            "alora-b",
+            AdapterKind::ALora { invocation_tokens: vec![100, 101, 102] },
+            32,
+        );
+        r
+    }
+
+    #[test]
+    fn register_and_lookup() {
+        let r = reg();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.by_name("alora-b").unwrap().id, AdapterId(1));
+        assert!(!r.get(AdapterId(0)).unwrap().is_alora());
+        assert!(r.get(AdapterId(1)).unwrap().is_alora());
+        assert!(r.get(AdapterId(9)).is_none());
+    }
+
+    #[test]
+    fn finds_activation_sequence() {
+        let r = reg();
+        let prompt = [1, 2, 100, 101, 102, 7, 8];
+        match r.find_activation(AdapterId(1), &prompt) {
+            Some(Activation::At { start }) => assert_eq!(start, 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let r = reg();
+        let prompt = [100, 101, 102, 5, 100, 101, 102, 9];
+        match r.find_activation(AdapterId(1), &prompt) {
+            Some(Activation::At { start }) => assert_eq!(start, 4),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_sequence_activates_at_end() {
+        let r = reg();
+        let prompt = [1, 2, 3];
+        assert_eq!(
+            r.find_activation(AdapterId(1), &prompt),
+            Some(Activation::EndOfPrompt)
+        );
+        assert_eq!(Activation::EndOfPrompt.start(3), 3);
+    }
+
+    #[test]
+    fn lora_has_no_activation() {
+        let r = reg();
+        assert_eq!(r.find_activation(AdapterId(0), &[1, 2, 3]), None);
+    }
+
+    #[test]
+    fn tiny_default_matches_python_invocations() {
+        // python/compile/configs.py: base = vocab - (a+1)*inv_len
+        let r = AdapterRegistry::tiny_default(3, 512, 4);
+        assert_eq!(
+            r.get(AdapterId(0)).unwrap().invocation_tokens().unwrap(),
+            &[508, 509, 510, 511]
+        );
+        assert_eq!(
+            r.get(AdapterId(2)).unwrap().invocation_tokens().unwrap(),
+            &[500, 501, 502, 503]
+        );
+    }
+
+    #[test]
+    fn hash_context_for_each_kind() {
+        let r = reg();
+        let base = r.hash_context(None, 0, true, 0);
+        assert_eq!(base.adapter_id, None);
+        let lora = r.hash_context(Some(AdapterId(0)), 0, true, 0);
+        assert_eq!(lora.adapter_id, Some(0));
+        assert!(!lora.is_alora);
+        let alora = r.hash_context(Some(AdapterId(1)), 42, true, 0);
+        assert!(alora.is_alora);
+        assert_eq!(alora.inv_start, 42);
+    }
+}

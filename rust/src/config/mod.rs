@@ -1,0 +1,274 @@
+//! Engine / model / cache / scheduler configuration.
+//!
+//! A single [`EngineConfig`] drives every entrypoint (CLI, HTTP server,
+//! pipelines, figure harness). Presets for the paper's Table-1 testbeds
+//! live in [`presets`]; configs can also be loaded from JSON files via
+//! [`EngineConfig::from_json`].
+
+pub mod presets;
+
+use crate::util::json::Json;
+
+/// Transformer dimensions + adapter ranks. For the large presets these are
+/// inputs to the H100 cost model; for `tiny` they mirror the AOT manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Total parameter count (weights touched per token in decode).
+    pub n_params: f64,
+    pub n_layers: u32,
+    pub d_model: u32,
+    pub n_heads: u32,
+    /// KV heads (GQA); == n_heads when no grouping.
+    pub n_kv_heads: u32,
+    pub vocab_size: u32,
+    /// Bytes per weight/activation element (bf16 = 2 on the paper's setup,
+    /// f32 = 4 on the tiny CPU path).
+    pub dtype_bytes: u32,
+    /// LoRA adapter rank (paper uses 8).
+    pub lora_rank: u32,
+    /// aLoRA adapter rank (paper uses 32).
+    pub alora_rank: u32,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> u32 {
+        self.d_model / self.n_heads
+    }
+
+    /// KV-cache bytes per token across all layers (both K and V).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.n_layers as f64
+            * self.n_kv_heads as f64
+            * self.head_dim() as f64
+            * self.dtype_bytes as f64
+    }
+}
+
+/// The GPU substrate the simulator models (paper: NVIDIA H100 80GB HBM3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuConfig {
+    /// Tensor-parallel degree == number of GPUs serving one replica.
+    pub n_gpus: u32,
+    /// Peak dense bf16 throughput per GPU, FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth per GPU, bytes/s.
+    pub hbm_bw: f64,
+    /// Achievable model-FLOPs utilization for compute-bound prefill.
+    pub prefill_mfu: f64,
+    /// Achievable bandwidth utilization for memory-bound decode.
+    pub decode_membw_util: f64,
+}
+
+impl GpuConfig {
+    pub fn h100(n_gpus: u32) -> Self {
+        GpuConfig {
+            n_gpus,
+            peak_flops: 989e12, // H100 SXM dense bf16
+            hbm_bw: 3.35e12,    // HBM3
+            prefill_mfu: 0.45,
+            decode_membw_util: 0.55,
+        }
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        // TP scaling is sub-linear; 0.9 efficiency per the usual NVLink
+        // all-reduce overhead at these sizes.
+        let eff = if self.n_gpus > 1 { 0.9 } else { 1.0 };
+        self.peak_flops * self.n_gpus as f64 * eff
+    }
+
+    pub fn total_bw(&self) -> f64 {
+        self.hbm_bw * self.n_gpus as f64
+    }
+}
+
+/// PagedAttention-style cache geometry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheConfig {
+    /// Tokens per KV block (vLLM default 16).
+    pub block_size: u32,
+    /// Total KV-cache capacity in tokens (paper Table 1 reports these
+    /// directly: 351104 / 407984 / 912688).
+    pub max_kv_tokens: u64,
+    /// Enable automatic prefix caching (hash-based block reuse).
+    pub enable_prefix_caching: bool,
+    /// THE paper's switch: when true, pre-activation blocks of aLoRA
+    /// requests hash *without* the adapter-ID salt, making base and aLoRA
+    /// blocks interchangeable (Figure 3). When false, behave like vanilla
+    /// vLLM (every adapter block salted) — the LoRA baseline.
+    pub base_aligned_hashing: bool,
+}
+
+impl CacheConfig {
+    pub fn num_blocks(&self) -> u64 {
+        self.max_kv_tokens / self.block_size as u64
+    }
+}
+
+/// Continuous-batching scheduler knobs (vLLM semantics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulerConfig {
+    /// Per-step token budget shared by prefill chunks and decodes
+    /// (chunked-prefill: long prefills are split to this granularity and
+    /// batched with decodes — Agrawal et al. 2023, paper §2.5).
+    pub max_batch_tokens: u32,
+    /// Maximum concurrently RUNNING requests.
+    pub max_num_seqs: u32,
+    /// Upper bound on any request's total sequence length.
+    pub max_seq_len: u32,
+    /// KV-pressure admission control (paper §4.3: "speedups ... may
+    /// require smart allocation of incoming requests to maximize
+    /// utilization ... without exceeding memory capacity"). A request is
+    /// only admitted if the *projected* block usage — blocks in use plus
+    /// the candidate's final-length demand — stays below this fraction of
+    /// the pool. 1.0 disables the control (vanilla vLLM behaviour:
+    /// admit, then preempt/evict under pressure, destroying reusable
+    /// cache). See `figures::ablations::watermark_sweep`.
+    pub admission_watermark: f64,
+}
+
+/// Everything the engine needs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineConfig {
+    pub model: ModelConfig,
+    pub gpu: GpuConfig,
+    pub cache: CacheConfig,
+    pub scheduler: SchedulerConfig,
+    /// Random seed for anything stochastic downstream.
+    pub seed: u64,
+}
+
+impl EngineConfig {
+    /// Validate cross-field invariants; called by every constructor path.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.cache.block_size > 0, "block_size must be > 0");
+        anyhow::ensure!(
+            self.cache.max_kv_tokens >= self.scheduler.max_seq_len as u64,
+            "KV capacity ({}) below max_seq_len ({})",
+            self.cache.max_kv_tokens,
+            self.scheduler.max_seq_len
+        );
+        anyhow::ensure!(
+            self.scheduler.max_seq_len % self.cache.block_size == 0,
+            "max_seq_len must be a multiple of block_size"
+        );
+        anyhow::ensure!(self.scheduler.max_batch_tokens > 0, "zero token budget");
+        anyhow::ensure!(self.scheduler.max_num_seqs > 0, "zero max_num_seqs");
+        anyhow::ensure!(
+            self.scheduler.admission_watermark > 0.0
+                && self.scheduler.admission_watermark <= 1.0,
+            "admission_watermark must be in (0, 1]"
+        );
+        anyhow::ensure!(
+            self.model.d_model % self.model.n_heads == 0,
+            "d_model not divisible by n_heads"
+        );
+        Ok(())
+    }
+
+    /// Load from a JSON file. Unknown keys are rejected to catch typos.
+    pub fn from_json(j: &Json) -> anyhow::Result<EngineConfig> {
+        let preset = j
+            .get("preset")
+            .and_then(Json::as_str)
+            .unwrap_or("granite-8b");
+        let mut cfg = presets::by_name(preset)
+            .ok_or_else(|| anyhow::anyhow!("unknown preset `{preset}`"))?;
+        if let Some(obj) = j.as_obj() {
+            for (k, v) in obj {
+                match k.as_str() {
+                    "preset" => {}
+                    "seed" => cfg.seed = v.as_u64().unwrap_or(cfg.seed),
+                    "block_size" => {
+                        cfg.cache.block_size =
+                            v.as_u64().unwrap_or(cfg.cache.block_size as u64) as u32
+                    }
+                    "max_kv_tokens" => {
+                        cfg.cache.max_kv_tokens = v.as_u64().unwrap_or(cfg.cache.max_kv_tokens)
+                    }
+                    "enable_prefix_caching" => {
+                        cfg.cache.enable_prefix_caching =
+                            v.as_bool().unwrap_or(cfg.cache.enable_prefix_caching)
+                    }
+                    "base_aligned_hashing" => {
+                        cfg.cache.base_aligned_hashing =
+                            v.as_bool().unwrap_or(cfg.cache.base_aligned_hashing)
+                    }
+                    "max_batch_tokens" => {
+                        cfg.scheduler.max_batch_tokens =
+                            v.as_u64().unwrap_or(cfg.scheduler.max_batch_tokens as u64) as u32
+                    }
+                    "max_num_seqs" => {
+                        cfg.scheduler.max_num_seqs =
+                            v.as_u64().unwrap_or(cfg.scheduler.max_num_seqs as u64) as u32
+                    }
+                    "max_seq_len" => {
+                        cfg.scheduler.max_seq_len =
+                            v.as_u64().unwrap_or(cfg.scheduler.max_seq_len as u64) as u32
+                    }
+                    "admission_watermark" => {
+                        cfg.scheduler.admission_watermark =
+                            v.as_f64().unwrap_or(cfg.scheduler.admission_watermark)
+                    }
+                    other => anyhow::bail!("unknown config key `{other}`"),
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for name in presets::PRESET_NAMES {
+            let cfg = presets::by_name(name).unwrap();
+            cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn kv_bytes_per_token_granite() {
+        let cfg = presets::granite_8b();
+        // 40 layers * 8 kv heads * 128 head_dim * 2 (K+V) * 2 bytes
+        assert_eq!(cfg.model.kv_bytes_per_token(), 163840.0);
+    }
+
+    #[test]
+    fn from_json_overrides() {
+        let j = Json::parse(
+            r#"{"preset": "llama-70b", "seed": 9, "base_aligned_hashing": false}"#,
+        )
+        .unwrap();
+        let cfg = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.model.name, "llama-70b");
+        assert_eq!(cfg.seed, 9);
+        assert!(!cfg.cache.base_aligned_hashing);
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_keys() {
+        let j = Json::parse(r#"{"preset": "tiny", "blok_size": 4}"#).unwrap();
+        assert!(EngineConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_misaligned_seq_len() {
+        let mut cfg = presets::tiny();
+        cfg.scheduler.max_seq_len = 150; // not multiple of 16
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn tp_scaling_subunit() {
+        let one = GpuConfig::h100(1);
+        let four = GpuConfig::h100(4);
+        assert!(four.total_flops() < 4.0 * one.total_flops());
+        assert!(four.total_flops() > 3.0 * one.total_flops());
+    }
+}

@@ -1,0 +1,212 @@
+//! Table-1 testbed presets + the `tiny` real-model config.
+//!
+//! | Model            | params | GPUs    | max KV tokens |
+//! |------------------|--------|---------|---------------|
+//! | Granite 3.2 8B   | 8B     | 1×H100  | 351,104       |
+//! | Llama 3.3 70B    | 70B    | 4×H100  | 407,984       |
+//! | Mistral Large 2  | 123B   | 8×H100  | 912,688       |
+//!
+//! Architecture dims for the large models follow their public model cards;
+//! they only feed the cost model (FLOPs + bytes), not numerics. The `tiny`
+//! preset mirrors python/compile/configs.py and must stay in sync with the
+//! AOT manifest (enforced by rust/tests/real_runtime.rs).
+
+use super::{CacheConfig, EngineConfig, GpuConfig, ModelConfig, SchedulerConfig};
+
+pub const PRESET_NAMES: &[&str] = &["tiny", "granite-8b", "llama-70b", "mistral-large-2"];
+
+pub fn by_name(name: &str) -> Option<EngineConfig> {
+    match name {
+        "tiny" => Some(tiny()),
+        "granite-8b" => Some(granite_8b()),
+        "llama-70b" => Some(llama_70b()),
+        "mistral-large-2" => Some(mistral_large_2()),
+        _ => None,
+    }
+}
+
+/// The real-PJRT-path model (python/compile/configs.py::TINY).
+pub fn tiny() -> EngineConfig {
+    EngineConfig {
+        model: ModelConfig {
+            name: "tiny".into(),
+            n_params: 0.91e6,
+            n_layers: 4,
+            d_model: 128,
+            n_heads: 4,
+            n_kv_heads: 4,
+            vocab_size: 512,
+            dtype_bytes: 4, // f32 on CPU
+            lora_rank: 8,
+            alora_rank: 32,
+        },
+        gpu: GpuConfig::h100(1), // unused on the real path; kept for uniformity
+        cache: CacheConfig {
+            block_size: 16,
+            // 128 blocks — enough for a handful of concurrent tiny requests
+            // while still being exhaustible in eviction tests.
+            max_kv_tokens: 2048,
+            enable_prefix_caching: true,
+            base_aligned_hashing: true,
+        },
+        scheduler: SchedulerConfig {
+            max_batch_tokens: 256,
+            max_num_seqs: 8,
+            max_seq_len: 160,
+            admission_watermark: 1.0,
+        },
+        seed: 0,
+    }
+}
+
+/// Granite 3.2 8B on 1×H100 (Table 1 col 1).
+pub fn granite_8b() -> EngineConfig {
+    EngineConfig {
+        model: ModelConfig {
+            name: "granite-8b".into(),
+            n_params: 8.17e9,
+            n_layers: 40,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 8,
+            vocab_size: 49_155,
+            dtype_bytes: 2,
+            lora_rank: 8,
+            alora_rank: 32,
+        },
+        gpu: GpuConfig::h100(1),
+        cache: CacheConfig {
+            block_size: 16,
+            max_kv_tokens: 351_104,
+            enable_prefix_caching: true,
+            base_aligned_hashing: true,
+        },
+        scheduler: SchedulerConfig {
+            max_batch_tokens: 8192,
+            max_num_seqs: 256,
+            max_seq_len: 131_072,
+            admission_watermark: 1.0,
+        },
+        seed: 0,
+    }
+}
+
+/// Llama 3.3 70B on 4×H100 TP (Table 1 col 2).
+pub fn llama_70b() -> EngineConfig {
+    EngineConfig {
+        model: ModelConfig {
+            name: "llama-70b".into(),
+            n_params: 70.6e9,
+            n_layers: 80,
+            d_model: 8192,
+            n_heads: 64,
+            n_kv_heads: 8,
+            vocab_size: 128_256,
+            dtype_bytes: 2,
+            lora_rank: 8,
+            alora_rank: 32,
+        },
+        gpu: GpuConfig::h100(4),
+        cache: CacheConfig {
+            block_size: 16,
+            max_kv_tokens: 407_984,
+            enable_prefix_caching: true,
+            base_aligned_hashing: true,
+        },
+        scheduler: SchedulerConfig {
+            max_batch_tokens: 8192,
+            max_num_seqs: 256,
+            max_seq_len: 131_072,
+            admission_watermark: 1.0,
+        },
+        seed: 0,
+    }
+}
+
+/// Mistral Large 2 (123B) on 8×H100 TP (Table 1 col 3).
+pub fn mistral_large_2() -> EngineConfig {
+    EngineConfig {
+        model: ModelConfig {
+            name: "mistral-large-2".into(),
+            n_params: 123e9,
+            n_layers: 88,
+            d_model: 12_288,
+            n_heads: 96,
+            n_kv_heads: 8,
+            vocab_size: 32_768,
+            dtype_bytes: 2,
+            lora_rank: 8,
+            alora_rank: 32,
+        },
+        gpu: GpuConfig::h100(8),
+        cache: CacheConfig {
+            block_size: 16,
+            max_kv_tokens: 912_688,
+            enable_prefix_caching: true,
+            base_aligned_hashing: true,
+        },
+        scheduler: SchedulerConfig {
+            max_batch_tokens: 8192,
+            max_num_seqs: 512,
+            max_seq_len: 131_072,
+            admission_watermark: 1.0,
+        },
+        seed: 0,
+    }
+}
+
+/// The paper's baseline: identical engine, but standard-LoRA semantics —
+/// adapter blocks always salted (no cross-model reuse) and full re-prefill
+/// on every adapter switch. Constructed from any preset.
+pub fn lora_baseline_of(mut cfg: EngineConfig) -> EngineConfig {
+    cfg.cache.base_aligned_hashing = false;
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_kv_capacities() {
+        assert_eq!(granite_8b().cache.max_kv_tokens, 351_104);
+        assert_eq!(llama_70b().cache.max_kv_tokens, 407_984);
+        assert_eq!(mistral_large_2().cache.max_kv_tokens, 912_688);
+    }
+
+    #[test]
+    fn table1_gpu_counts() {
+        assert_eq!(granite_8b().gpu.n_gpus, 1);
+        assert_eq!(llama_70b().gpu.n_gpus, 4);
+        assert_eq!(mistral_large_2().gpu.n_gpus, 8);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in PRESET_NAMES {
+            assert_eq!(by_name(name).unwrap().model.name, *name);
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn baseline_flips_only_hashing() {
+        let a = granite_8b();
+        let b = lora_baseline_of(granite_8b());
+        assert!(!b.cache.base_aligned_hashing);
+        assert_eq!(a.model, b.model);
+        assert_eq!(a.scheduler, b.scheduler);
+    }
+
+    #[test]
+    fn tiny_matches_python_config() {
+        // Mirrors python/compile/configs.py::TINY; drift is caught again at
+        // runtime against manifest.json, but fail fast here too.
+        let t = tiny();
+        assert_eq!(t.model.vocab_size, 512);
+        assert_eq!(t.model.d_model, 128);
+        assert_eq!(t.model.n_layers, 4);
+        assert_eq!(t.scheduler.max_seq_len, 160);
+        assert_eq!(t.cache.block_size, 16);
+    }
+}

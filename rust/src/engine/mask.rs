@@ -1,0 +1,148 @@
+//! Activation-aware batch mask (paper Algorithm 1 + Appendix A/B).
+//!
+//! Before each forward pass the GPU model runner prepares one flat mask
+//! over every scheduled token in the batch: `true` = the token precedes its
+//! request's aLoRA activation point, so the QKV projection must use frozen
+//! base weights (which is what keeps pre-activation K/V base-identical).
+//! Invocation points vary per request within a batch; the mask unifies them
+//! into a single tensor so the model forward needs no per-request dispatch
+//! — exactly the vLLM-side design the paper describes.
+
+use crate::util::fxmap::FxHashMap;
+
+use crate::request::{Request, RequestId};
+use crate::scheduler::ScheduledSeq;
+
+/// Flat per-token mask + per-sequence spans for one scheduled step.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct BatchMask {
+    /// One entry per scheduled token, in seq order then position order.
+    /// `true` = pre-activation (base weights).
+    pub mask_pre: Vec<bool>,
+    /// (request, offset into mask_pre, len) per scheduled sequence.
+    pub spans: Vec<(RequestId, usize, usize)>,
+}
+
+impl BatchMask {
+    /// Slice of the mask belonging to one request's chunk.
+    pub fn span_of(&self, id: RequestId) -> Option<&[bool]> {
+        self.spans
+            .iter()
+            .find(|(r, _, _)| *r == id)
+            .map(|&(_, off, len)| &self.mask_pre[off..off + len])
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.mask_pre.len()
+    }
+}
+
+/// Build the mask for a scheduled step (mirrors `build_alora_metadata` in
+/// the paper's Appendix B: `position_within_req < inv_start[req]`).
+pub fn build_batch_mask(
+    seqs: &[ScheduledSeq],
+    reqs: &FxHashMap<RequestId, Request>,
+) -> BatchMask {
+    let total: usize = seqs.iter().map(|s| s.chunk_len).sum();
+    let mut mask_pre = Vec::with_capacity(total);
+    let mut spans = Vec::with_capacity(seqs.len());
+    for s in seqs {
+        let r = &reqs[&s.id];
+        let off = mask_pre.len();
+        // `activation_start` is prompt_len for base requests (everything
+        // pre), 0 for standard LoRA (everything adapted), and the
+        // invocation index for aLoRA.
+        let inv = r.activation_start;
+        for p in s.chunk_start..s.chunk_start + s.chunk_len {
+            mask_pre.push(p < inv);
+        }
+        spans.push((s.id, off, s.chunk_len));
+    }
+    BatchMask { mask_pre, spans }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::{ModelTarget, SamplingParams};
+
+    fn req_with_activation(id: u64, prompt_len: usize, inv: usize) -> Request {
+        let mut r = Request::new(
+            RequestId(id),
+            ModelTarget::Base,
+            (0..prompt_len as u32).collect(),
+            SamplingParams::default(),
+            0.0,
+        );
+        r.activation_start = inv;
+        r
+    }
+
+    fn seq(id: u64, start: usize, len: usize) -> ScheduledSeq {
+        ScheduledSeq {
+            id: RequestId(id),
+            chunk_start: start,
+            chunk_len: len,
+            produces_token: false,
+            is_decode: false,
+        }
+    }
+
+    #[test]
+    fn mask_isolates_pre_activation_tokens() {
+        let mut reqs = FxHashMap::default();
+        reqs.insert(RequestId(1), req_with_activation(1, 10, 6));
+        let m = build_batch_mask(&[seq(1, 0, 10)], &reqs);
+        assert_eq!(
+            m.mask_pre,
+            vec![true, true, true, true, true, true, false, false, false, false]
+        );
+    }
+
+    #[test]
+    fn heterogeneous_invocation_points_in_one_batch() {
+        // Paper Appendix B: "the actual aLoRA mask covers all requests in a
+        // batch simultaneously and accounts for varying points of
+        // invocation."
+        let mut reqs = FxHashMap::default();
+        reqs.insert(RequestId(1), req_with_activation(1, 8, 4)); // aLoRA @4
+        reqs.insert(RequestId(2), req_with_activation(2, 8, 0)); // LoRA
+        reqs.insert(RequestId(3), req_with_activation(3, 8, 8)); // base
+        let m = build_batch_mask(&[seq(1, 0, 8), seq(2, 0, 8), seq(3, 0, 8)], &reqs);
+        assert_eq!(m.total_tokens(), 24);
+        assert_eq!(m.span_of(RequestId(1)).unwrap()[3], true);
+        assert_eq!(m.span_of(RequestId(1)).unwrap()[4], false);
+        assert!(m.span_of(RequestId(2)).unwrap().iter().all(|&b| !b));
+        assert!(m.span_of(RequestId(3)).unwrap().iter().all(|&b| b));
+    }
+
+    #[test]
+    fn chunk_offsets_respect_absolute_positions() {
+        // A chunk starting mid-request uses absolute token positions, so a
+        // cache-extension prefill after the activation point is all-post.
+        let mut reqs = FxHashMap::default();
+        reqs.insert(RequestId(1), req_with_activation(1, 64, 40));
+        let m = build_batch_mask(&[seq(1, 40, 8)], &reqs);
+        assert!(m.span_of(RequestId(1)).unwrap().iter().all(|&b| !b));
+        let m = build_batch_mask(&[seq(1, 32, 8)], &reqs);
+        assert!(m.span_of(RequestId(1)).unwrap().iter().all(|&b| b));
+    }
+
+    #[test]
+    fn decode_token_masked_by_position() {
+        let mut reqs = FxHashMap::default();
+        reqs.insert(RequestId(1), req_with_activation(1, 16, 16));
+        // decode at position 20 (>= inv 16): adapted
+        let m = build_batch_mask(
+            &[ScheduledSeq {
+                id: RequestId(1),
+                chunk_start: 20,
+                chunk_len: 1,
+                produces_token: true,
+                is_decode: true,
+            }],
+            &reqs,
+        );
+        assert_eq!(m.mask_pre, vec![false]);
+    }
+}

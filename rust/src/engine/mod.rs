@@ -1,0 +1,558 @@
+//! The serving engine core loop (vLLM Figure 2, rust edition).
+//!
+//! `Engine<E: Executor>` owns the scheduler, the KV-cache manager, the
+//! adapter registry, the clock, and metrics. One `step()`:
+//!
+//! 1. scheduler packs a batch (continuous batching + chunked prefill,
+//!    consulting the base-aligned prefix cache at admission),
+//! 2. the activation-aware [`mask::BatchMask`] is built for the batch,
+//! 3. the executor runs the batch — either the H100 cost-model simulator
+//!    or the real PJRT CPU runtime; both return elapsed virtual seconds,
+//! 4. progress, block-hash commits, lifecycle timestamps and metrics are
+//!    applied.
+//!
+//! The clock is *virtual*: the simulator advances it by modeled GPU time,
+//! the real executor by measured wall time, so Table-2 metrics come out of
+//! the same pipeline either way.
+
+pub mod mask;
+
+use crate::util::fxmap::FxHashMap;
+
+use crate::adapter::AdapterRegistry;
+use crate::config::EngineConfig;
+use crate::kvcache::manager::KvCacheManager;
+use crate::kvcache::prefix::next_block_hash;
+use crate::metrics::Metrics;
+use crate::request::{ModelTarget, Request, RequestId, RequestOutput, SamplingParams, State};
+use crate::scheduler::{ScheduledStep, Scheduler};
+
+pub use mask::{build_batch_mask, BatchMask};
+
+/// Result of executing one scheduled step.
+#[derive(Debug, Clone, Default)]
+pub struct StepResult {
+    /// Virtual seconds the step took (model time, not coordinator time).
+    pub elapsed: f64,
+    /// Sampled next token for every sequence that produced one this step.
+    /// Sequences missing here default to token 0 (simulator executors
+    /// don't model token values — paper §4.1: values don't affect speed).
+    pub sampled: Vec<(RequestId, u32)>,
+}
+
+/// A model-execution backend: the discrete-event simulator or the real
+/// PJRT runtime. Implementations receive the full scheduled step, request
+/// states and the activation-aware batch mask.
+pub trait Executor {
+    fn execute(
+        &mut self,
+        step: &ScheduledStep,
+        reqs: &FxHashMap<RequestId, Request>,
+        kv: &KvCacheManager,
+        mask: &BatchMask,
+    ) -> StepResult;
+}
+
+pub struct Engine<E: Executor> {
+    pub cfg: EngineConfig,
+    pub registry: AdapterRegistry,
+    pub metrics: Metrics,
+    exec: E,
+    sched: Scheduler,
+    kv: KvCacheManager,
+    reqs: FxHashMap<RequestId, Request>,
+    clock: f64,
+    next_id: u64,
+    finished: Vec<RequestOutput>,
+}
+
+impl<E: Executor> Engine<E> {
+    pub fn new(cfg: EngineConfig, exec: E) -> Self {
+        Self::with_registry(cfg, AdapterRegistry::new(), exec)
+    }
+
+    pub fn with_registry(cfg: EngineConfig, registry: AdapterRegistry, exec: E) -> Self {
+        cfg.validate().expect("invalid engine config");
+        let kv = KvCacheManager::new(
+            cfg.cache.num_blocks() as u32,
+            cfg.cache.block_size,
+            cfg.cache.enable_prefix_caching,
+        );
+        let sched = Scheduler::new(cfg.scheduler.clone());
+        Engine {
+            kv,
+            sched,
+            registry,
+            exec,
+            reqs: FxHashMap::default(),
+            clock: 0.0,
+            next_id: 0,
+            metrics: Metrics::new(),
+            finished: Vec::new(),
+        cfg,
+        }
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Advance the virtual clock (used by async drivers between arrivals).
+    /// Panics on attempts to move time backwards.
+    pub fn advance_clock_to(&mut self, t: f64) {
+        assert!(t >= self.clock, "clock must be monotonic ({t} < {})", self.clock);
+        self.clock = t;
+    }
+
+    pub fn num_waiting(&self) -> usize {
+        self.sched.num_waiting()
+    }
+
+    pub fn num_running(&self) -> usize {
+        self.sched.num_running()
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.sched.has_work()
+    }
+
+    pub fn kv_stats(&self) -> crate::kvcache::manager::CacheStats {
+        self.kv.stats()
+    }
+
+    pub fn executor(&self) -> &E {
+        &self.exec
+    }
+
+    pub fn executor_mut(&mut self) -> &mut E {
+        &mut self.exec
+    }
+
+    /// Submit a request arriving *now* (at the current virtual clock).
+    pub fn submit(
+        &mut self,
+        target: ModelTarget,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+    ) -> anyhow::Result<RequestId> {
+        self.submit_with_priority(target, prompt, params, false)
+    }
+
+    /// Like [`submit`](Self::submit), but `priority = true` enqueues at the
+    /// FRONT of the waiting queue. Used for conversation continuations
+    /// (adapter evaluations, follow-up base turns): admitting them before
+    /// newly arrived conversations harvests their still-cached prefixes
+    /// before eviction can claim the blocks (paper §4.3's load-management
+    /// point; see `figures::ablations::watermark_sweep`).
+    pub fn submit_with_priority(
+        &mut self,
+        target: ModelTarget,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        priority: bool,
+    ) -> anyhow::Result<RequestId> {
+        let final_len = prompt.len() + params.max_new_tokens as usize;
+        anyhow::ensure!(
+            final_len <= self.cfg.scheduler.max_seq_len as usize,
+            "request length {final_len} exceeds max_seq_len {}",
+            self.cfg.scheduler.max_seq_len
+        );
+        anyhow::ensure!(
+            final_len as u64 <= self.cfg.cache.max_kv_tokens,
+            "request length {final_len} exceeds KV capacity"
+        );
+        let id = RequestId(self.next_id);
+        self.next_id += 1;
+        let mut req = Request::new(id, target, prompt, params, self.clock);
+
+        // aLoRA identification (paper Figure 5): locate the activation
+        // point; LoRA adapts everything (activation at 0); base adapts
+        // nothing (activation at prompt end, i.e. "never" for the prompt).
+        if let ModelTarget::Adapter(aid) = target {
+            let adapter = self
+                .registry
+                .get(aid)
+                .ok_or_else(|| anyhow::anyhow!("unknown adapter {aid:?}"))?;
+            req.activation_start = match self.registry.find_activation(aid, &req.prompt) {
+                Some(act) => act.start(req.prompt.len()),
+                None => {
+                    debug_assert!(!adapter.is_alora());
+                    0 // standard LoRA: adapted from the first token
+                }
+            };
+            req.hash_ctx = self.registry.hash_context(
+                Some(aid),
+                req.activation_start,
+                self.cfg.cache.base_aligned_hashing,
+                0,
+            );
+        }
+
+        self.metrics.requests_received += 1;
+        self.metrics.prompt_tokens += req.prompt.len() as u64;
+        self.reqs.insert(id, req);
+        self.sched.enqueue(id, priority);
+        Ok(id)
+    }
+
+    /// Drive one engine step. Returns false when nothing was schedulable
+    /// (idle: caller advances the clock to the next arrival or stops).
+    pub fn step(&mut self) -> bool {
+        let step = self.sched.schedule(&mut self.reqs, &mut self.kv);
+        self.metrics.engine_steps += 1;
+        if step.is_empty() {
+            self.refresh_gauges();
+            return false;
+        }
+
+        // Lifecycle: first_scheduled for newly admitted (not re-admissions
+        // after preemption — queue time is measured to FIRST execution).
+        for id in &step.admitted {
+            let r = self.reqs.get_mut(id).unwrap();
+            if r.timeline.first_scheduled.is_nan() {
+                r.timeline.first_scheduled = self.clock;
+            }
+        }
+        self.metrics.requests_preempted += step.preempted.len() as u64;
+
+        // Prefill accounting (hit tokens counted once, at admission).
+        for id in &step.admitted {
+            let r = &self.reqs[id];
+            self.metrics.prefill_tokens_cached += r.num_cached_tokens as u64;
+        }
+        self.metrics.prefill_tokens_computed += step.num_prefill_tokens() as u64;
+
+        // The activation-aware mask for this batch (Appendix B).
+        let mask = build_batch_mask(&step.seqs, &self.reqs);
+
+        // Execute (sim: modeled seconds; real: measured seconds).
+        let result = self.exec.execute(&step, &self.reqs, &self.kv, &mask);
+        self.clock += result.elapsed;
+
+        let sampled: FxHashMap<RequestId, u32> = result.sampled.into_iter().collect();
+
+        // Apply progress + sampling + commits.
+        for s in &step.seqs {
+            let block_size = self.kv.block_size();
+            let r = self.reqs.get_mut(&s.id).unwrap();
+            r.num_computed_tokens = s.chunk_start + s.chunk_len;
+
+            if s.produces_token {
+                let tok = sampled.get(&s.id).copied().unwrap_or(0);
+                r.output_tokens.push(tok);
+                if r.timeline.first_token.is_nan() {
+                    r.timeline.first_token = self.clock;
+                }
+            }
+
+            // Extend the hash chain over any newly completed blocks and
+            // commit them (shareable from now on). The chain covers
+            // `num_computed / block_size` full blocks.
+            let full_blocks = r.num_computed_tokens / block_size;
+            if full_blocks > r.hash_chain.len() {
+                let tokens = r.all_tokens();
+                let mut parent = r.hash_chain.last().copied();
+                for idx in r.hash_chain.len()..full_blocks {
+                    let h = next_block_hash(parent, &tokens, idx, block_size, &r.hash_ctx);
+                    r.hash_chain.push(h);
+                    parent = Some(h);
+                }
+            }
+            // Commit without cloning the chain: `reqs` and `kv` are
+            // disjoint fields, so the borrows split (perf pass: this was
+            // a per-seq Vec allocation on the hot loop).
+            let upto = full_blocks.min(r.hash_chain.len());
+            let chain = &self.reqs[&s.id].hash_chain[..upto];
+            self.kv.commit_full_blocks(s.id.0, chain);
+
+            // Finish?
+            let r = self.reqs.get_mut(&s.id).unwrap();
+            if r.output_tokens.len() as u32 >= r.params.max_new_tokens {
+                r.state = State::Finished;
+                r.timeline.finished = self.clock;
+                let out = RequestOutput::from_request(r);
+                self.metrics.observe_finished(&out);
+                self.finished.push(out);
+                self.sched.finish(s.id);
+                self.kv.free_request(s.id.0);
+                self.reqs.remove(&s.id);
+            }
+        }
+
+        self.refresh_gauges();
+        true
+    }
+
+    fn refresh_gauges(&mut self) {
+        self.metrics.running_requests = self.sched.num_running() as u64;
+        self.metrics.waiting_requests = self.sched.num_waiting() as u64;
+        self.metrics.free_blocks = self.kv.num_free_blocks() as u64;
+        self.metrics.clock = self.clock;
+        let ks = self.kv.stats();
+        self.metrics.blocks_allocated = ks.pool.allocations;
+        self.metrics.cache_hit_blocks = ks.pool.hits;
+        self.metrics.cache_evictions = ks.pool.evictions;
+    }
+
+    /// Run until every submitted request has finished.
+    pub fn run_until_idle(&mut self) {
+        while self.has_work() {
+            if !self.step() {
+                // Nothing schedulable but work exists => stuck (request too
+                // large for capacity). Surface loudly rather than spin.
+                panic!(
+                    "engine stalled: {} waiting / {} running but nothing schedulable",
+                    self.num_waiting(),
+                    self.num_running()
+                );
+            }
+        }
+    }
+
+    /// Drain finished request records (ownership transferred).
+    pub fn take_finished(&mut self) -> Vec<RequestOutput> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Test hook: sweep KV-manager invariants; when idle, additionally
+    /// check that no blocks leaked.
+    #[doc(hidden)]
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.kv.check_invariants()?;
+        if !self.has_work() && self.kv.num_free_blocks() != self.kv.num_total_blocks() {
+            return Err(format!(
+                "idle engine leaked blocks: {} free of {}",
+                self.kv.num_free_blocks(),
+                self.kv.num_total_blocks()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Wait for one specific request (drives steps until it completes) and
+    /// return its record. Panics if the engine stalls first.
+    pub fn run_to_completion(&mut self, id: RequestId) -> RequestOutput {
+        loop {
+            if let Some(pos) = self.finished.iter().position(|o| o.id == id) {
+                return self.finished.remove(pos);
+            }
+            assert!(self.step(), "engine stalled waiting on {id:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::AdapterKind;
+    use crate::config::presets;
+
+    /// Trivial executor: fixed 1ms per step, argmax = position count.
+    struct FixedExecutor;
+
+    impl Executor for FixedExecutor {
+        fn execute(
+            &mut self,
+            step: &ScheduledStep,
+            _reqs: &FxHashMap<RequestId, Request>,
+            _kv: &KvCacheManager,
+            _mask: &BatchMask,
+        ) -> StepResult {
+            StepResult {
+                elapsed: 0.001,
+                sampled: step
+                    .seqs
+                    .iter()
+                    .filter(|s| s.produces_token)
+                    .map(|s| (s.id, 1u32))
+                    .collect(),
+            }
+        }
+    }
+
+    fn tiny_engine() -> Engine<FixedExecutor> {
+        let cfg = presets::tiny();
+        let reg = AdapterRegistry::tiny_default(3, 512, 4);
+        Engine::with_registry(cfg, reg, FixedExecutor)
+    }
+
+    #[test]
+    fn single_request_lifecycle_and_metrics() {
+        let mut e = tiny_engine();
+        let id = e
+            .submit(
+                ModelTarget::Base,
+                (0..40).collect(),
+                SamplingParams { max_new_tokens: 4, ..Default::default() },
+            )
+            .unwrap();
+        let out = e.run_to_completion(id);
+        assert_eq!(out.output_tokens, vec![1, 1, 1, 1]);
+        let t = out.timeline;
+        assert!(t.queue_time() >= 0.0);
+        assert!(t.prefill_time() > 0.0);
+        assert!(t.decode_time() > 0.0);
+        assert!((t.e2e() - (t.queue_time() + t.prefill_time() + t.decode_time())).abs() < 1e-12);
+        assert_eq!(e.metrics.requests_finished, 1);
+        assert_eq!(e.metrics.generated_tokens, 4);
+    }
+
+    #[test]
+    fn oversized_request_rejected() {
+        let mut e = tiny_engine();
+        let err = e.submit(
+            ModelTarget::Base,
+            (0..200).collect(),
+            SamplingParams { max_new_tokens: 100, ..Default::default() },
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn alora_request_reuses_base_blocks() {
+        let mut e = tiny_engine();
+        // Base conversation.
+        let base = e
+            .submit(
+                ModelTarget::Base,
+                (0..64).collect(),
+                SamplingParams { max_new_tokens: 16, ..Default::default() },
+            )
+            .unwrap();
+        let base_out = e.run_to_completion(base);
+        assert_eq!(base_out.num_cached_tokens, 0);
+
+        // aLoRA 0 evaluates prompt+generation+invocation.
+        let mut ev: Vec<u32> = (0..64).collect();
+        ev.extend(base_out.output_tokens.iter());
+        ev.extend([508, 509, 510, 511]); // adapter 0 invocation
+        let ev_len = ev.len(); // 84
+        let al = e
+            .submit(
+                ModelTarget::Adapter(crate::adapter::AdapterId(0)),
+                ev,
+                SamplingParams { max_new_tokens: 4, ..Default::default() },
+            )
+            .unwrap();
+        let al_out = e.run_to_completion(al);
+        // Base computed KV for 79 of its 80 tokens (the final sampled
+        // token's KV is computed only when consumed, and the request
+        // finished first) => 4 full blocks = 64 tokens are shareable, and
+        // the aLoRA hits all of them (pre-activation chain == base chain).
+        assert_eq!(al_out.num_cached_tokens, 64, "cross-model prefix hit");
+        assert!(al_out.timeline.prefill_time() > 0.0);
+        assert_eq!(al_out.prompt_len, ev_len);
+    }
+
+    #[test]
+    fn lora_request_cannot_reuse() {
+        let cfg = presets::tiny();
+        let mut reg = AdapterRegistry::new();
+        reg.register("plain-lora", AdapterKind::Lora, 8);
+        let mut e = Engine::with_registry(cfg, reg, FixedExecutor);
+        let base = e
+            .submit(
+                ModelTarget::Base,
+                (0..64).collect(),
+                SamplingParams { max_new_tokens: 16, ..Default::default() },
+            )
+            .unwrap();
+        e.run_to_completion(base);
+        let lora = e
+            .submit(
+                ModelTarget::Adapter(crate::adapter::AdapterId(0)),
+                (0..64).collect(),
+                SamplingParams { max_new_tokens: 4, ..Default::default() },
+            )
+            .unwrap();
+        let out = e.run_to_completion(lora);
+        assert_eq!(out.num_cached_tokens, 0, "LoRA must re-prefill");
+    }
+
+    #[test]
+    fn base_aligned_flag_off_behaves_like_vanilla() {
+        let mut cfg = presets::tiny();
+        cfg.cache.base_aligned_hashing = false;
+        let reg = AdapterRegistry::tiny_default(3, 512, 4);
+        let mut e = Engine::with_registry(cfg, reg, FixedExecutor);
+        let base = e
+            .submit(
+                ModelTarget::Base,
+                (0..64).collect(),
+                SamplingParams { max_new_tokens: 16, ..Default::default() },
+            )
+            .unwrap();
+        let base_out = e.run_to_completion(base);
+        let mut ev: Vec<u32> = (0..64).collect();
+        ev.extend(base_out.output_tokens.iter());
+        ev.extend([508, 509, 510, 511]);
+        let al = e
+            .submit(
+                ModelTarget::Adapter(crate::adapter::AdapterId(0)),
+                ev,
+                SamplingParams { max_new_tokens: 4, ..Default::default() },
+            )
+            .unwrap();
+        let out = e.run_to_completion(al);
+        assert_eq!(out.num_cached_tokens, 0, "feature off: adapter isolated");
+    }
+
+    #[test]
+    fn base_reuses_own_prefix_across_turns() {
+        let mut e = tiny_engine();
+        let id1 = e
+            .submit(
+                ModelTarget::Base,
+                (0..64).collect(),
+                SamplingParams { max_new_tokens: 8, ..Default::default() },
+            )
+            .unwrap();
+        let o1 = e.run_to_completion(id1);
+        let mut next: Vec<u32> = (0..64).collect();
+        next.extend(o1.output_tokens.iter());
+        next.push(3);
+        let id2 = e
+            .submit(
+                ModelTarget::Base,
+                next,
+                SamplingParams { max_new_tokens: 8, ..Default::default() },
+            )
+            .unwrap();
+        let o2 = e.run_to_completion(id2);
+        // 64 + 8 = 72 -> 4 full blocks of first conversation reusable.
+        assert_eq!(o2.num_cached_tokens, 64);
+    }
+
+    #[test]
+    fn clock_monotonic_and_advance() {
+        let mut e = tiny_engine();
+        assert_eq!(e.clock(), 0.0);
+        e.advance_clock_to(5.0);
+        assert_eq!(e.clock(), 5.0);
+        let id = e
+            .submit(ModelTarget::Base, vec![1, 2, 3], SamplingParams::default())
+            .unwrap();
+        let out = e.run_to_completion(id);
+        assert!(out.timeline.arrival >= 5.0);
+        assert!(e.clock() > 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "monotonic")]
+    fn clock_cannot_go_back() {
+        let mut e = tiny_engine();
+        e.advance_clock_to(5.0);
+        e.advance_clock_to(4.0);
+    }
+
+    #[test]
+    fn prometheus_endpoint_renders() {
+        let mut e = tiny_engine();
+        let id = e
+            .submit(ModelTarget::Base, (0..32).collect(), SamplingParams::default())
+            .unwrap();
+        e.run_to_completion(id);
+        let text = e.metrics.render_prometheus();
+        assert!(text.contains("alora_serve_requests_finished_total 1"));
+    }
+}

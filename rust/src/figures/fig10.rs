@@ -1,0 +1,125 @@
+//! Figure 10: base-adapter-base pipeline, generation-length sweep +
+//! the 5-parallel-adapter variant (§4.4, §4.4.1).
+//!
+//! Top row: varying the FIRST base call's generation length produces the
+//! same speedups as varying prompt length (prefix caching doesn't
+//! distinguish prefilled from generated blocks). Bottom row: with LoRA,
+//! the long adapter prefills queue up and delay the SECOND base call's
+//! TTFT — queuing damage propagates down the pipeline.
+
+use crate::adapter::AdapterId;
+use crate::pipeline::{PipelineKind, PipelineSpec};
+
+use super::{run_sync_pair, Table};
+
+pub fn gen_sweep(quick: bool) -> Vec<u32> {
+    if quick {
+        vec![256, 4096]
+    } else {
+        vec![256, 1024, 4096, 16384, 32768]
+    }
+}
+
+fn spec(gen: u32, n_adapters: usize) -> PipelineSpec {
+    PipelineSpec {
+        kind: if n_adapters > 1 { PipelineKind::MultiAdapter } else { PipelineKind::BaseAdapterBase },
+        prompt_len: 256,
+        base_gen: gen,
+        eval_gen: 16,
+        adapters: (0..n_adapters as u32).map(AdapterId).collect(),
+        base2_gen: 16, priority_continuations: false,
+    }
+}
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut eval_t = Table::new(
+        "fig10-eval",
+        "base-adapter-base: eval-step latencies vs first-base generation length",
+        &["gen_len", "variant", "e2e(s)", "queue(s)", "prefill(s)", "decode(s)", "e2e_speedup"],
+    );
+    let mut base2_t = Table::new(
+        "fig10-base2",
+        "base-adapter-base: second base call TTFT/queue (LoRA queuing damage)",
+        &["gen_len", "variant", "ttft(s)", "queue(s)", "e2e(s)"],
+    );
+
+    for &gen in &gen_sweep(quick) {
+        let sp = spec(gen, 1);
+        let cfg = crate::config::presets::granite_8b();
+        let batch = crate::pipeline::workload::batch_size_for(
+            &cfg,
+            spec(*gen_sweep(quick).last().unwrap(), 1).max_total_len(),
+        );
+        let pair = run_sync_pair("granite-8b", &sp, batch, 42);
+        let a = pair.alora.eval_latencies();
+        let l = pair.lora.eval_latencies();
+        let speedup = l.mean("e2e") / a.mean("e2e");
+        for (name, r) in [("aLoRA", &a), ("LoRA", &l)] {
+            eval_t.push(
+                &[gen.to_string(), name.to_string()],
+                &[r.mean("e2e"), r.mean("queue"), r.mean("prefill"), r.mean("decode"), speedup],
+            );
+        }
+        let ab = pair.alora.base2_latencies();
+        let lb = pair.lora.base2_latencies();
+        for (name, r) in [("aLoRA", &ab), ("LoRA", &lb)] {
+            base2_t.push(
+                &[gen.to_string(), name.to_string()],
+                &[r.mean("ttft"), r.mean("queue"), r.mean("e2e")],
+            );
+        }
+    }
+
+    // 5-adapter variant (fixed sizes per §4.4.1).
+    let mut multi_t = Table::new(
+        "fig10-multi",
+        "5 parallel adapters: eval + consolidated base2 (prompt 256, gen 256)",
+        &["variant", "eval_e2e(s)", "eval_hit", "base2_ttft(s)", "base2_queue(s)"],
+    );
+    let sp = spec(256, 5);
+    let cfg = crate::config::presets::granite_8b();
+    let batch = crate::pipeline::workload::batch_size_for(&cfg, sp.max_total_len());
+    let pair = run_sync_pair("granite-8b", &sp, batch.min(32), 42);
+    for (name, r) in [("aLoRA", &pair.alora), ("LoRA", &pair.lora)] {
+        let ev = r.eval_latencies();
+        let b2 = r.base2_latencies();
+        multi_t.push(
+            &[name.to_string()],
+            &[ev.mean("e2e"), r.eval_hit_rate(), b2.mean("ttft"), b2.mean("queue")],
+        );
+    }
+
+    vec![eval_t, base2_t, multi_t]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig10_gen_length_behaves_like_prompt_length() {
+        let tables = super::run(true);
+        let sp = tables[0].col("e2e_speedup");
+        let per_gen: Vec<f64> = sp.chunks(2).map(|c| c[0]).collect();
+        assert!(per_gen.iter().all(|&x| x > 1.0), "{per_gen:?}");
+        assert!(per_gen.last().unwrap() > per_gen.first().unwrap());
+    }
+
+    #[test]
+    fn fig10_lora_queuing_hits_second_base_call() {
+        let tables = super::run(true);
+        let ttft = tables[1].col("ttft(s)");
+        // rows per gen: aLoRA then LoRA; at the longest gen the LoRA
+        // pipeline's base2 TTFT must exceed aLoRA's.
+        let n = ttft.len();
+        assert!(ttft[n - 1] > ttft[n - 2], "{ttft:?}");
+    }
+
+    #[test]
+    fn fig10_multi_adapter_alora_wins() {
+        let tables = super::run(true);
+        let t = &tables[2];
+        let e2e = t.col("eval_e2e(s)");
+        assert!(e2e[0] < e2e[1], "aLoRA eval faster with 5 adapters");
+        let hit = t.col("eval_hit");
+        assert!(hit[0] > 0.8 && hit[1] == 0.0);
+    }
+}

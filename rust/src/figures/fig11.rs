@@ -1,0 +1,72 @@
+//! Figure 11 (Appendix C): adapter-base pipeline — reuse in the reverse
+//! direction. Adapter evaluates the prompt first (eval 256), then the base
+//! model generates (16), reusing the adapter's pre-activation blocks.
+
+use crate::adapter::AdapterId;
+use crate::pipeline::{PipelineKind, PipelineSpec};
+
+use super::{run_sync_pair, Table};
+
+pub fn run(quick: bool) -> Table {
+    let lens = super::prompt_sweep(quick);
+    let mut t = Table::new(
+        "fig11",
+        "adapter-base: base-step latencies vs prompt length (reverse reuse)",
+        &["prompt_len", "variant", "e2e(s)", "queue(s)", "prefill(s)", "decode(s)", "base_hit"],
+    );
+    let spec_max = PipelineSpec {
+        kind: PipelineKind::AdapterBase,
+        prompt_len: *lens.last().unwrap(),
+        base_gen: 0,
+        eval_gen: 256,
+        adapters: vec![AdapterId(0)],
+        base2_gen: 16, priority_continuations: false,
+    };
+    let cfg = crate::config::presets::granite_8b();
+    let batch = crate::pipeline::workload::batch_size_for(&cfg, spec_max.max_total_len());
+    for &plen in &lens {
+        let spec = PipelineSpec { prompt_len: plen, ..spec_max.clone() };
+        let pair = run_sync_pair("granite-8b", &spec, batch, 42);
+        for (name, r) in [("aLoRA", &pair.alora), ("LoRA", &pair.lora)] {
+            let b2 = r.base2_latencies();
+            let hit: f64 = {
+                let hits: Vec<f64> = r
+                    .outputs
+                    .iter()
+                    .filter(|(s, _)| *s == crate::pipeline::Stage::Base2)
+                    .map(|(_, o)| o.cache_hit_rate())
+                    .collect();
+                hits.iter().sum::<f64>() / hits.len().max(1) as f64
+            };
+            t.push(
+                &[plen.to_string(), name.to_string()],
+                &[b2.mean("e2e"), b2.mean("queue"), b2.mean("prefill"), b2.mean("decode"), hit],
+            );
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig11_base_reuses_adapter_blocks() {
+        let t = super::run(true);
+        let hits = t.col("base_hit");
+        let e2e = t.col("e2e(s)");
+        // rows alternate aLoRA / LoRA per prompt length. Only the
+        // pre-activation span (the prompt) is base-reusable, so the hit
+        // fraction is ~prompt/(prompt + eval_out) and grows with prompt.
+        let alora_hits: Vec<f64> = hits.iter().step_by(2).copied().collect();
+        assert!(alora_hits.iter().all(|&h| h > 0.25), "{alora_hits:?}");
+        assert!(
+            alora_hits.last().unwrap() > alora_hits.first().unwrap(),
+            "{alora_hits:?}"
+        );
+        for pair in hits.chunks(2) {
+            assert_eq!(pair[1], 0.0, "LoRA blocks are adapter-salted");
+        }
+        let last = e2e.len() - 2;
+        assert!(e2e[last] < e2e[last + 1], "aLoRA base step faster at long prompts");
+    }
+}

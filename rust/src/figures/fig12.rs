@@ -1,0 +1,55 @@
+//! Figure 12 (Appendix D): TTFT (= queue + prefill) and inference time
+//! (= prefill + decode) of the evaluation step in the base-adapter
+//! pipeline — the two aggregate views whose optimization trade-off the
+//! appendix discusses.
+
+use crate::pipeline::PipelineSpec;
+
+use super::{run_sync_pair, Table};
+
+pub fn run(quick: bool) -> Table {
+    let lens = super::prompt_sweep(quick);
+    let mut t = Table::new(
+        "fig12",
+        "base-adapter eval: TTFT and inference time vs prompt length",
+        &["prompt_len", "variant", "ttft(s)", "inference(s)", "ttft_x", "inference_x"],
+    );
+    let max_spec = PipelineSpec::base_adapter(*lens.last().unwrap(), 256, 16);
+    let cfg = crate::config::presets::granite_8b();
+    let batch = crate::pipeline::workload::batch_size_for(&cfg, max_spec.max_total_len());
+    for &plen in &lens {
+        let spec = PipelineSpec::base_adapter(plen, 256, 16);
+        let pair = run_sync_pair("granite-8b", &spec, batch, 42);
+        let a = pair.alora.eval_latencies();
+        let l = pair.lora.eval_latencies();
+        let ttft_x = l.mean("ttft") / a.mean("ttft");
+        let inf_x = l.mean("inference") / a.mean("inference");
+        for (name, r) in [("aLoRA", &a), ("LoRA", &l)] {
+            t.push(
+                &[plen.to_string(), name.to_string()],
+                &[r.mean("ttft"), r.mean("inference"), ttft_x, inf_x],
+            );
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig12_ttft_speedup_exceeds_inference_speedup_at_long_prompts() {
+        let t = super::run(true);
+        let ttft_x = t.col("ttft_x");
+        let inf_x = t.col("inference_x");
+        let n = ttft_x.len();
+        // TTFT includes queue savings on top of prefill — at the longest
+        // prompt it is the paper's ">100x" headline metric.
+        assert!(ttft_x[n - 1] > 1.0 && inf_x[n - 1] > 1.0);
+        assert!(
+            ttft_x[n - 1] >= inf_x[n - 1] * 0.8,
+            "ttft_x={:?} inf_x={:?}",
+            ttft_x,
+            inf_x
+        );
+    }
+}

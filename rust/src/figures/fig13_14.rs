@@ -1,0 +1,61 @@
+//! Figures 13–14 (Appendix E): asynchronous base-adapter pipeline, full
+//! base+eval step — aggregate metrics (E2E / TTFT / inference, Fig 13)
+//! and stage breakdown (queue / prefill / decode, Fig 14) vs arrival rate.
+//!
+//! Unlike Figure 8 (eval step only), these cover the ENTIRE conversation
+//! (base call + evaluation), matching the appendix's "entire base +
+//! evaluation step" framing.
+
+use crate::metrics::StageLatencies;
+use crate::pipeline::PipelineSpec;
+
+use super::{run_poisson_pair, Table};
+
+fn all_latencies(r: &crate::pipeline::PipelineResult) -> StageLatencies {
+    r.stage_latencies(|_| true)
+}
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let n = if quick { 100 } else { 500 };
+    let rates = super::fig8::rates(quick);
+    let mut t13 = Table::new(
+        "fig13",
+        &format!("async base+eval: E2E / TTFT / inference vs rate (n={n})"),
+        &["rate(req/s)", "variant", "e2e(s)", "ttft(s)", "inference(s)"],
+    );
+    let mut t14 = Table::new(
+        "fig14",
+        &format!("async base+eval: queue / prefill / decode vs rate (n={n})"),
+        &["rate(req/s)", "variant", "queue(s)", "prefill(s)", "decode(s)"],
+    );
+    let spec = PipelineSpec::base_adapter(256, 256, 16);
+    for &rate in &rates {
+        let pair = run_poisson_pair("granite-8b", &spec, n, rate, 42);
+        for (name, r) in [("aLoRA", &pair.alora), ("LoRA", &pair.lora)] {
+            let s = all_latencies(r);
+            t13.push(
+                &[format!("{rate}"), name.to_string()],
+                &[s.mean("e2e"), s.mean("ttft"), s.mean("inference")],
+            );
+            t14.push(
+                &[format!("{rate}"), name.to_string()],
+                &[s.mean("queue"), s.mean("prefill"), s.mean("decode")],
+            );
+        }
+    }
+    vec![t13, t14]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig13_14_full_step_alora_wins_at_load() {
+        let tables = super::run(true);
+        let e2e = tables[0].col("e2e(s)");
+        // at the highest rate (last aLoRA/LoRA pair) aLoRA must win
+        let n = e2e.len();
+        assert!(e2e[n - 2] < e2e[n - 1], "{e2e:?}");
+        let q = tables[1].col("queue(s)");
+        assert!(q[n - 2] <= q[n - 1] + 1e-9, "queue should favor aLoRA: {q:?}");
+    }
+}

@@ -1,0 +1,47 @@
+//! Figure 15 (Appendix F): what happens when batch size is chosen to fill
+//! the KV cache *per prompt length* instead of being fixed across the
+//! sweep — decode time from the huge batches dominates E2E at short
+//! prompt lengths, which is why the synchronous trials fix batch size.
+
+use crate::pipeline::PipelineSpec;
+
+use super::{run_sync_pair, Table};
+
+pub fn run(quick: bool) -> Table {
+    let lens = super::prompt_sweep(quick);
+    let mut t = Table::new(
+        "fig15",
+        "base-adapter eval with per-length KV-filling batch size",
+        &["prompt_len", "batch", "variant", "e2e(s)", "queue(s)", "prefill(s)", "decode(s)"],
+    );
+    let cfg = crate::config::presets::granite_8b();
+    for &plen in &lens {
+        let spec = PipelineSpec::base_adapter(plen, 256, 16);
+        // Per-length batch (the misleading methodology the appendix warns
+        // about): short prompts -> enormous batches -> decode dominated.
+        let batch = crate::pipeline::workload::batch_size_for(&cfg, spec.max_total_len());
+        let pair = run_sync_pair("granite-8b", &spec, batch, 42);
+        for (name, r) in [("aLoRA", &pair.alora.eval_latencies()), ("LoRA", &pair.lora.eval_latencies())] {
+            t.push(
+                &[plen.to_string(), batch.to_string(), name.to_string()],
+                &[r.mean("e2e"), r.mean("queue"), r.mean("prefill"), r.mean("decode")],
+            );
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig15_decode_dominates_short_prompts_with_filling_batches() {
+        let t = super::run(true);
+        let decode = t.col("decode(s)");
+        let prefill = t.col("prefill(s)");
+        // first row = shortest prompt, aLoRA: decode must dominate prefill
+        assert!(
+            decode[0] > prefill[0],
+            "decode {decode:?} should dominate prefill {prefill:?} at short lengths"
+        );
+    }
+}

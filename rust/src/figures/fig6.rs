@@ -1,0 +1,108 @@
+//! Figure 6: synchronous base-adapter pipeline, prompt-length sweep.
+//!
+//! Paper: evaluation-step latencies (E2E / queue / prefill / decode) for
+//! LoRA vs aLoRA across prompt lengths and all three models; speedups
+//! scale with prompt length and model size up to 58× E2E / 45× prefill /
+//! 21× decode. Batch size is fixed by the paper's rule at the *largest*
+//! prompt length of the sweep (fairness — Appendix F / Figure 15 shows
+//! what happens otherwise).
+
+use crate::metrics::STAGES;
+use crate::pipeline::PipelineSpec;
+
+use super::{run_sync_pair, Table};
+
+pub const BASE_GEN: u32 = 256;
+pub const EVAL_GEN: u32 = 16;
+
+pub fn models(quick: bool) -> Vec<&'static str> {
+    if quick {
+        vec!["granite-8b"]
+    } else {
+        vec!["granite-8b", "llama-70b", "mistral-large-2"]
+    }
+}
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let lens = super::prompt_sweep(quick);
+    let max_len_spec = PipelineSpec::base_adapter(*lens.last().unwrap(), BASE_GEN, EVAL_GEN);
+    let mut tables = Vec::new();
+
+    for model in models(quick) {
+        let cfg = crate::config::presets::by_name(model).unwrap();
+        // Fixed batch: the paper sizes it for the LARGEST prompt length.
+        let batch = crate::pipeline::workload::batch_size_for(&cfg, max_len_spec.max_total_len());
+        let mut t = Table::new(
+            "fig6",
+            &format!("base-adapter eval latencies vs prompt length — {model} (batch {batch})"),
+            &[
+                "prompt_len",
+                "variant",
+                "e2e(s)",
+                "queue(s)",
+                "prefill(s)",
+                "decode(s)",
+                "hit_rate",
+            ],
+        );
+        let mut speedups = Table::new(
+            "fig6-speedup",
+            &format!("aLoRA speedup over LoRA — {model}"),
+            &["prompt_len", "e2e_x", "queue_x", "prefill_x", "decode_x"],
+        );
+        for &plen in &lens {
+            let spec = PipelineSpec::base_adapter(plen, BASE_GEN, EVAL_GEN);
+            let pair = run_sync_pair(model, &spec, batch, 42);
+            let a = pair.alora.eval_latencies();
+            let l = pair.lora.eval_latencies();
+            for (name, r, hit) in [
+                ("aLoRA", &a, pair.alora.eval_hit_rate()),
+                ("LoRA", &l, pair.lora.eval_hit_rate()),
+            ] {
+                t.push(
+                    &[plen.to_string(), name.to_string()],
+                    &[
+                        r.mean("e2e"),
+                        r.mean("queue"),
+                        r.mean("prefill"),
+                        r.mean("decode"),
+                        hit,
+                    ],
+                );
+            }
+            let sx = |stage: &str| {
+                let num = l.mean(stage);
+                let den = a.mean(stage);
+                if den <= 0.0 { f64::NAN } else { num / den }
+            };
+            speedups.push(
+                &[plen.to_string()],
+                &[sx("e2e"), sx("queue"), sx("prefill"), sx("decode")],
+            );
+        }
+        let _ = STAGES; // (stage list documented in metrics)
+        tables.push(t);
+        tables.push(speedups);
+    }
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig6_quick_shape() {
+        let tables = super::run(true);
+        assert_eq!(tables.len(), 2);
+        let sp = &tables[1];
+        let e2e: Vec<f64> = sp.col("e2e_x");
+        // speedup > 1 everywhere and grows with prompt length
+        assert!(e2e.iter().all(|&x| x > 1.0), "{e2e:?}");
+        assert!(e2e.last().unwrap() > e2e.first().unwrap());
+        // prefill savings present at every length. (The 45×-style growth
+        // only appears once prompts exceed the chunked-prefill budget —
+        // quick mode tops out at 4096 < 8192; the full sweep in
+        // `cargo bench --bench bench_fig6` covers 65k.)
+        let pf: Vec<f64> = sp.col("prefill_x");
+        assert!(pf.iter().all(|&x| x > 3.0), "{pf:?}");
+    }
+}

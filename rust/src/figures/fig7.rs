@@ -1,0 +1,48 @@
+//! Figure 7: token-level throughput of the evaluation step at 65k prompt,
+//! batch chosen to fill the KV cache.
+
+use crate::pipeline::PipelineSpec;
+
+use super::{run_sync_pair, Table};
+
+pub fn run() -> Table {
+    let mut t = Table::new(
+        "fig7",
+        "eval-step token throughput @65k prompt (batch fills KV)",
+        &["model", "variant", "throughput(tok/s)", "e2e(s)"],
+    );
+    for model in ["granite-8b", "llama-70b", "mistral-large-2"] {
+        let spec = PipelineSpec::base_adapter(65536, 256, 16);
+        let cfg = crate::config::presets::by_name(model).unwrap();
+        let batch = crate::pipeline::workload::batch_size_for(&cfg, spec.max_total_len());
+        let pair = run_sync_pair(model, &spec, batch, 42);
+        for (name, r) in [("aLoRA", &pair.alora), ("LoRA", &pair.lora)] {
+            let evals = r.eval_latencies();
+            // Table-2 throughput: tokens processed / E2E. The eval step
+            // processes (prompt + gen + inv) input + 16 output per request.
+            let tokens_per_req = (spec.prompt_len
+                + spec.base_gen as usize
+                + crate::pipeline::workload::INVOCATION_LEN as usize
+                + spec.eval_gen as usize) as f64;
+            let e2e = evals.mean("e2e");
+            t.push(
+                &[model.to_string(), name.to_string()],
+                &[tokens_per_req / e2e, e2e],
+            );
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    #[ignore = "65k sweep is slow in debug; covered by cargo bench --bench bench_fig7"]
+    fn fig7_alora_throughput_wins() {
+        let t = super::run();
+        let thr = t.col("throughput(tok/s)");
+        for pair in thr.chunks(2) {
+            assert!(pair[0] > pair[1], "aLoRA throughput must exceed LoRA");
+        }
+    }
+}

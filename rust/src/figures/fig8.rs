@@ -1,0 +1,73 @@
+//! Figure 8: asynchronous base-adapter pipeline — evaluation-step
+//! latencies vs Poisson arrival rate.
+//!
+//! Paper params: prompt 256, base gen 256, eval 16, 500 requests. Higher
+//! arrival rates yield greater end-to-end speedups (queue + decode savings
+//! from higher GPU utilization), plateauing once compute saturates.
+
+use crate::pipeline::PipelineSpec;
+
+use super::{run_poisson_pair, Table};
+
+pub const N_REQUESTS: usize = 500;
+
+pub fn rates(quick: bool) -> Vec<f64> {
+    if quick {
+        vec![0.5, 4.0, 16.0]
+    } else {
+        vec![0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0]
+    }
+}
+
+pub fn run(quick: bool) -> Table {
+    let n = if quick { 120 } else { N_REQUESTS };
+    let mut t = Table::new(
+        "fig8",
+        &format!("async base-adapter eval latencies vs arrival rate (n={n})"),
+        &[
+            "rate(req/s)",
+            "variant",
+            "e2e(s)",
+            "queue(s)",
+            "prefill(s)",
+            "decode(s)",
+            "e2e_speedup",
+        ],
+    );
+    let spec = PipelineSpec::base_adapter(256, 256, 16);
+    for &rate in &rates(quick) {
+        let pair = run_poisson_pair("granite-8b", &spec, n, rate, 42);
+        let a = pair.alora.eval_latencies();
+        let l = pair.lora.eval_latencies();
+        let speedup = l.mean("e2e") / a.mean("e2e");
+        for (name, r) in [("aLoRA", &a), ("LoRA", &l)] {
+            t.push(
+                &[format!("{rate}"), name.to_string()],
+                &[
+                    r.mean("e2e"),
+                    r.mean("queue"),
+                    r.mean("prefill"),
+                    r.mean("decode"),
+                    speedup,
+                ],
+            );
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig8_speedup_grows_with_rate() {
+        let t = super::run(true);
+        let sp = t.col("e2e_speedup");
+        // rows come in (aLoRA, LoRA) pairs with identical speedup values
+        let per_rate: Vec<f64> = sp.chunks(2).map(|c| c[0]).collect();
+        assert!(per_rate.iter().all(|&x| x > 1.0), "{per_rate:?}");
+        assert!(
+            per_rate.last().unwrap() > per_rate.first().unwrap(),
+            "speedup should grow with arrival rate: {per_rate:?}"
+        );
+    }
+}

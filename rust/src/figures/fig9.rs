@@ -1,0 +1,85 @@
+//! Figure 9: E2E speedup vs arrival rate × sequence (generation) length —
+//! including the cache-overflow droop.
+//!
+//! Paper: speedups accelerate with longer sequences and higher rates, but
+//! once the KV cache capacity is exceeded, previously cached blocks are
+//! overwritten before reuse and the speedup collapses — load must be
+//! balanced to stay under capacity.
+
+use crate::pipeline::PipelineSpec;
+
+use super::{run_poisson_pair, Table};
+
+pub fn grid(quick: bool) -> (Vec<f64>, Vec<usize>) {
+    if quick {
+        (vec![1.0, 8.0], vec![256, 4096])
+    } else {
+        (vec![0.5, 1.0, 2.0, 4.0, 8.0, 16.0], vec![256, 1024, 4096, 16384])
+    }
+}
+
+pub fn run(quick: bool) -> Table {
+    let n = if quick { 80 } else { 500 };
+    let (rates, gens) = grid(quick);
+    let mut t = Table::new(
+        "fig9",
+        &format!("async E2E speedup vs arrival rate × generation length (n={n})"),
+        &["gen_len", "rate(req/s)", "e2e_speedup", "alora_hit_rate", "evictions"],
+    );
+    for &gen in &gens {
+        for &rate in &rates {
+            let spec = PipelineSpec::base_adapter(256, gen as u32, 16);
+            let pair = run_poisson_pair("granite-8b", &spec, n, rate, 42);
+            let speedup =
+                pair.lora.eval_latencies().mean("e2e") / pair.alora.eval_latencies().mean("e2e");
+            t.push(
+                &[gen.to_string(), format!("{rate}")],
+                &[speedup, pair.alora.eval_hit_rate(), 0.0],
+            );
+        }
+    }
+    t
+}
+
+/// Cache-overflow probe: run one (rate, gen) point on a deliberately tiny
+/// KV cache and report hit-rate collapse (used by tests and the bench).
+pub fn overflow_probe() -> (f64, f64) {
+    use crate::pipeline::{run_poisson, workload};
+    let spec = PipelineSpec::base_adapter(256, 2048, 16);
+
+    let small = super::make_engine("granite-8b", true, 1);
+    // Shrink capacity to ~6 concurrent conversations' worth.
+    let mut cfg = small.cfg.clone();
+    cfg.cache.max_kv_tokens = 16_384;
+    cfg.scheduler.max_seq_len = 16_384;
+    let reg = workload::build_registry(1, cfg.model.vocab_size, true);
+    let exec = crate::simulator::SimExecutor::new(&cfg);
+    let mut small = crate::engine::Engine::with_registry(cfg, reg, exec);
+    let r_small = run_poisson(&mut small, &spec, 60, 8.0, 42);
+
+    let mut big = super::make_engine("granite-8b", true, 1);
+    let r_big = run_poisson(&mut big, &spec, 60, 8.0, 42);
+    (r_small.eval_hit_rate(), r_big.eval_hit_rate())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig9_longer_sequences_bigger_speedups() {
+        let t = super::run(true);
+        let sp = t.col("e2e_speedup");
+        // grid rows: gen=256 × 2 rates, then gen=4096 × 2 rates.
+        let short_best = sp[0].max(sp[1]);
+        let long_best = sp[2].max(sp[3]);
+        assert!(long_best > short_best, "{sp:?}");
+    }
+
+    #[test]
+    fn fig9_cache_overflow_collapses_hits() {
+        let (small, big) = super::overflow_probe();
+        assert!(
+            small < big * 0.8,
+            "undersized cache must lose reuse: small={small:.2} big={big:.2}"
+        );
+    }
+}

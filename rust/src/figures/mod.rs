@@ -1,0 +1,266 @@
+//! Reproduction harness: one function per paper table/figure.
+//!
+//! Every `figN()` runs the corresponding workload on the discrete-event
+//! simulator — the identical L3 code path as production, with the H100
+//! cost model supplying step durations (DESIGN.md §7) — for both the
+//! aLoRA engine (base-aligned hashing ON) and the standard-LoRA baseline
+//! (OFF), and returns the paper's rows. Absolute seconds are this
+//! testbed's; the *shape* (who wins, scaling, crossovers) is the
+//! reproduction target and is asserted in rust/tests/figures.rs.
+//!
+//! Figure index (DESIGN.md §4): T1 configs · F6 prompt-length sweep ·
+//! F7 throughput@65k · F8 async rates · F9 rate×length grid · F10
+//! gen-length + multi-adapter · F11 adapter-base · F12 TTFT/inference ·
+//! F13/14 async full-step breakdowns · F15 KV-filling batch sizes.
+
+pub mod ablations;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13_14;
+pub mod fig15;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table1;
+
+use crate::adapter::AdapterId;
+use crate::config::{presets, EngineConfig};
+use crate::engine::Engine;
+use crate::pipeline::{self, workload, PipelineResult, PipelineSpec};
+use crate::simulator::SimExecutor;
+
+/// A rendered result table (also machine-readable: `data` holds the raw
+/// numbers keyed like the header row).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub id: String,
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Raw numeric cells: (row index, header) -> value, for assertions.
+    pub data: Vec<Vec<f64>>,
+}
+
+impl Table {
+    pub fn new(id: &str, title: &str, headers: &[&str]) -> Self {
+        Table {
+            id: id.into(),
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            data: Vec::new(),
+        }
+    }
+
+    /// Push a row: label columns first, then numeric columns.
+    pub fn push(&mut self, labels: &[String], nums: &[f64]) {
+        let mut row: Vec<String> = labels.to_vec();
+        for &x in nums {
+            row.push(fmt_value(x));
+        }
+        self.rows.push(row);
+        self.data.push(nums.to_vec());
+    }
+
+    /// Column value by header name (numeric columns only).
+    pub fn col(&self, header: &str) -> Vec<f64> {
+        let label_cols = self.headers.len() - self.data.first().map(|d| d.len()).unwrap_or(0);
+        let idx = self
+            .headers
+            .iter()
+            .position(|h| h == header)
+            .unwrap_or_else(|| panic!("no column `{header}` in {}", self.id));
+        assert!(idx >= label_cols, "`{header}` is a label column");
+        self.data.iter().map(|d| d[idx - label_cols]).collect()
+    }
+
+    pub fn print(&self) {
+        println!("\n## {} — {}", self.id, self.title);
+        let hdrs: Vec<&str> = self.headers.iter().map(String::as_str).collect();
+        crate::util::bench::print_table(&hdrs, &self.rows);
+    }
+
+    /// CSV rendering (rendered cells, header row first).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Machine-readable JSON: {id, title, headers, rows (rendered), data (raw)}.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("id", Json::str(self.id.clone())),
+            ("title", Json::str(self.title.clone())),
+            (
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::str(h.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::str(c.clone())).collect()))
+                        .collect(),
+                ),
+            ),
+            (
+                "data",
+                Json::Arr(self.data.iter().map(|d| Json::arr_f64(d)).collect()),
+            ),
+        ])
+    }
+
+    /// Write `<dir>/<id>.csv` and `<dir>/<id>.json`.
+    pub fn save(&self, dir: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{}.csv", self.id)), self.to_csv())?;
+        std::fs::write(dir.join(format!("{}.json", self.id)), self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+fn fmt_value(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1000.0 {
+        format!("{x:.0}")
+    } else if x.abs() >= 1.0 {
+        format!("{x:.2}")
+    } else if x.abs() >= 0.001 {
+        format!("{:.2}ms", x * 1000.0).replace("ms", "e-3")
+    } else {
+        format!("{x:.2e}")
+    }
+}
+
+/// Engine factory for one variant.
+pub fn make_engine(cfg_name: &str, alora: bool, n_adapters: u32) -> Engine<SimExecutor> {
+    let mut cfg: EngineConfig = presets::by_name(cfg_name).expect("unknown preset");
+    cfg.cache.base_aligned_hashing = alora;
+    let reg = workload::build_registry(n_adapters, cfg.model.vocab_size, alora);
+    let exec = SimExecutor::new(&cfg);
+    Engine::with_registry(cfg, reg, exec)
+}
+
+/// Run one pipeline spec on both variants (aLoRA ours / LoRA baseline)
+/// with the paper's batch rule, same seed.
+pub struct VariantPair {
+    pub alora: PipelineResult,
+    pub lora: PipelineResult,
+    pub batch: usize,
+}
+
+pub fn run_sync_pair(
+    cfg_name: &str,
+    spec: &PipelineSpec,
+    batch: usize,
+    seed: u64,
+) -> VariantPair {
+    let n_adapters = spec.adapters.len().max(1) as u32;
+    let mut ea = make_engine(cfg_name, true, n_adapters);
+    let alora = pipeline::run_sync(&mut ea, spec, batch, seed);
+    let mut el = make_engine(cfg_name, false, n_adapters);
+    let lora = pipeline::run_sync(&mut el, spec, batch, seed);
+    VariantPair { alora, lora, batch }
+}
+
+pub fn run_poisson_pair(
+    cfg_name: &str,
+    spec: &PipelineSpec,
+    n: usize,
+    lambda: f64,
+    seed: u64,
+) -> VariantPair {
+    let n_adapters = spec.adapters.len().max(1) as u32;
+    let mut ea = make_engine(cfg_name, true, n_adapters);
+    let alora = pipeline::run_poisson(&mut ea, spec, n, lambda, seed);
+    let mut el = make_engine(cfg_name, false, n_adapters);
+    let lora = pipeline::run_poisson(&mut el, spec, n, lambda, seed);
+    VariantPair { alora, lora, batch: 0 }
+}
+
+/// Default prompt-length sweep (paper: up to 65k).
+pub fn prompt_sweep(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![128, 1024, 4096]
+    } else {
+        vec![128, 512, 1024, 4096, 16384, 65536]
+    }
+}
+
+/// Single adapter id used by single-adapter pipelines.
+pub fn a0() -> AdapterId {
+    AdapterId(0)
+}
+
+/// Run every figure (CLI `figure --id all`); quick mode shrinks sweeps.
+pub fn run_all(quick: bool) -> Vec<Table> {
+    let mut out = vec![table1::run()];
+    out.extend(fig6::run(quick));
+    out.push(fig7::run());
+    out.push(fig8::run(quick));
+    out.push(fig9::run(quick));
+    out.extend(fig10::run(quick));
+    out.push(fig11::run(quick));
+    out.push(fig12::run(quick));
+    out.extend(fig13_14::run(quick));
+    out.push(fig15::run(quick));
+    out
+}
+
+/// Look up a figure by id ("table1", "fig6", ... or "all").
+pub fn run_by_id(id: &str, quick: bool) -> Vec<Table> {
+    match id {
+        "all" => run_all(quick),
+        "table1" => vec![table1::run()],
+        "fig6" => fig6::run(quick),
+        "fig7" => vec![fig7::run()],
+        "fig8" => vec![fig8::run(quick)],
+        "fig9" => vec![fig9::run(quick)],
+        "fig10" => fig10::run(quick),
+        "fig11" => vec![fig11::run(quick)],
+        "fig12" => vec![fig12::run(quick)],
+        "fig13_14" => fig13_14::run(quick),
+        "fig15" => vec![fig15::run(quick)],
+        "ablations" => ablations::run_all(),
+        other => panic!("unknown figure id `{other}` (try table1, fig6..fig15, ablations, all)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_push_and_col() {
+        let mut t = Table::new("t", "test", &["name", "a", "b"]);
+        t.push(&["x".into()], &[1.0, 2.0]);
+        t.push(&["y".into()], &[3.0, 4.0]);
+        assert_eq!(t.col("a"), vec![1.0, 3.0]);
+        assert_eq!(t.col("b"), vec![2.0, 4.0]);
+        t.print();
+    }
+
+    #[test]
+    #[should_panic(expected = "no column")]
+    fn missing_column_panics() {
+        let t = Table::new("t", "test", &["name", "a"]);
+        t.col("zzz");
+    }
+}

@@ -1,0 +1,38 @@
+//! Table 1: model and server configurations.
+
+use crate::config::presets;
+
+use super::Table;
+
+pub fn run() -> Table {
+    let mut t = Table::new(
+        "table1",
+        "Model and server configurations (paper Table 1)",
+        &["model", "params(B)", "gpus", "gpu_mem(GB)", "max_kv_tokens", "kv_bytes/tok", "blocks"],
+    );
+    for name in ["granite-8b", "llama-70b", "mistral-large-2"] {
+        let cfg = presets::by_name(name).unwrap();
+        t.push(
+            &[cfg.model.name.clone()],
+            &[
+                cfg.model.n_params / 1e9,
+                cfg.gpu.n_gpus as f64,
+                cfg.gpu.n_gpus as f64 * 80.0,
+                cfg.cache.max_kv_tokens as f64,
+                cfg.model.kv_bytes_per_token(),
+                cfg.cache.num_blocks() as f64,
+            ],
+        );
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table1_matches_paper() {
+        let t = super::run();
+        assert_eq!(t.col("max_kv_tokens"), vec![351104.0, 407984.0, 912688.0]);
+        assert_eq!(t.col("gpus"), vec![1.0, 4.0, 8.0]);
+    }
+}

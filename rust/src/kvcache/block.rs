@@ -1,0 +1,403 @@
+//! Physical KV block bookkeeping (PagedAttention-style, Kwon et al. 2023).
+//!
+//! A [`BlockPool`] owns `num_blocks` fixed-size physical blocks. Freed
+//! blocks keep their contents and hash and sit in an LRU free list — any
+//! later request whose chained hash matches may resurrect them (vLLM's
+//! automatic prefix caching, paper §3). Eviction happens lazily when a
+//! fresh allocation pops the LRU end.
+
+use crate::util::fxmap::FxHashMap;
+
+/// Physical block index into the (simulated or real) KV arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId(pub u32);
+
+/// Chained content hash of a full block (kvcache::hash).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BlockHash(pub u64);
+
+#[derive(Debug, Clone)]
+struct BlockMeta {
+    ref_count: u32,
+    /// Content hash once the block is full and committed; None for
+    /// partially-filled tail blocks (never shareable — Figure 3: the
+    /// activation tokens are not cached while they don't fill a block).
+    hash: Option<BlockHash>,
+    /// Free-list links (intrusive doubly-linked list, usize::MAX = none).
+    prev: usize,
+    next: usize,
+    in_free_list: bool,
+}
+
+/// Counters exported through the metrics registry.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PoolStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub allocations: u64,
+}
+
+/// Fixed-capacity pool with hash lookup + LRU reuse of freed blocks.
+#[derive(Debug)]
+pub struct BlockPool {
+    meta: Vec<BlockMeta>,
+    /// hash -> block holding those contents (in use or free-but-cached).
+    by_hash: FxHashMap<BlockHash, BlockId>,
+    /// LRU list head/tail over FREE blocks (head = oldest = evict first).
+    free_head: usize,
+    free_tail: usize,
+    free_count: usize,
+    stats: PoolStats,
+}
+
+const NONE: usize = usize::MAX;
+
+impl BlockPool {
+    pub fn new(num_blocks: u32) -> Self {
+        assert!(num_blocks > 0, "empty block pool");
+        let mut pool = BlockPool {
+            meta: (0..num_blocks)
+                .map(|_| BlockMeta {
+                    ref_count: 0,
+                    hash: None,
+                    prev: NONE,
+                    next: NONE,
+                    in_free_list: false,
+                })
+                .collect(),
+            by_hash: FxHashMap::default(),
+            free_head: NONE,
+            free_tail: NONE,
+            free_count: 0,
+            stats: PoolStats::default(),
+        };
+        // All blocks start free (and hashless).
+        for i in 0..num_blocks {
+            pool.push_free(BlockId(i));
+        }
+        pool
+    }
+
+    pub fn num_blocks(&self) -> u32 {
+        self.meta.len() as u32
+    }
+
+    pub fn num_free(&self) -> u32 {
+        self.free_count as u32
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    pub fn ref_count(&self, b: BlockId) -> u32 {
+        self.meta[b.0 as usize].ref_count
+    }
+
+    pub fn hash_of(&self, b: BlockId) -> Option<BlockHash> {
+        self.meta[b.0 as usize].hash
+    }
+
+    // -- free-list plumbing --------------------------------------------------
+
+    fn push_free(&mut self, b: BlockId) {
+        let i = b.0 as usize;
+        debug_assert!(!self.meta[i].in_free_list);
+        self.meta[i].prev = self.free_tail;
+        self.meta[i].next = NONE;
+        if self.free_tail != NONE {
+            self.meta[self.free_tail].next = i;
+        } else {
+            self.free_head = i;
+        }
+        self.free_tail = i;
+        self.meta[i].in_free_list = true;
+        self.free_count += 1;
+    }
+
+    fn unlink_free(&mut self, b: BlockId) {
+        let i = b.0 as usize;
+        debug_assert!(self.meta[i].in_free_list);
+        let (p, n) = (self.meta[i].prev, self.meta[i].next);
+        if p != NONE {
+            self.meta[p].next = n;
+        } else {
+            self.free_head = n;
+        }
+        if n != NONE {
+            self.meta[n].prev = p;
+        } else {
+            self.free_tail = p;
+        }
+        self.meta[i].prev = NONE;
+        self.meta[i].next = NONE;
+        self.meta[i].in_free_list = false;
+        self.free_count -= 1;
+    }
+
+    // -- public API ------------------------------------------------------------
+
+    /// Cache lookup: if a block with `hash` exists (in use or free), bump
+    /// its ref count (resurrecting it from the free list if needed) and
+    /// return it. Counts a hit/miss.
+    pub fn lookup(&mut self, hash: BlockHash) -> Option<BlockId> {
+        match self.by_hash.get(&hash).copied() {
+            Some(b) => {
+                let i = b.0 as usize;
+                if self.meta[i].in_free_list {
+                    self.unlink_free(b);
+                }
+                self.meta[i].ref_count += 1;
+                self.stats.hits += 1;
+                Some(b)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Peek-only variant (no refcount change, no stats) — used by the
+    /// scheduler to size a request's cached prefix before committing.
+    pub fn contains(&self, hash: BlockHash) -> bool {
+        self.by_hash.contains_key(&hash)
+    }
+
+    /// Allocate a fresh block: pops the LRU free block, evicting whatever
+    /// hashed contents it still carried. Returns None when the pool is
+    /// exhausted (all blocks referenced) — the scheduler then preempts.
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        if self.free_head == NONE {
+            return None;
+        }
+        let b = BlockId(self.free_head as u32);
+        self.unlink_free(b);
+        let i = b.0 as usize;
+        if let Some(h) = self.meta[i].hash.take() {
+            self.by_hash.remove(&h);
+            self.stats.evictions += 1;
+        }
+        self.meta[i].ref_count = 1;
+        self.stats.allocations += 1;
+        Some(b)
+    }
+
+    /// Commit a full block's content hash, making it shareable. If another
+    /// block already holds this hash, keeps the existing mapping (dedup:
+    /// concurrent identical prefills converge on first-committed).
+    pub fn commit_hash(&mut self, b: BlockId, hash: BlockHash) {
+        let i = b.0 as usize;
+        debug_assert!(self.meta[i].ref_count > 0, "committing a free block");
+        if self.meta[i].hash.is_some() {
+            return; // already committed (e.g. resurrected cached block)
+        }
+        self.meta[i].hash = Some(hash);
+        self.by_hash.entry(hash).or_insert(b);
+    }
+
+    /// Add a reference to an already-referenced block (shared prefix).
+    pub fn add_ref(&mut self, b: BlockId) {
+        let i = b.0 as usize;
+        debug_assert!(self.meta[i].ref_count > 0);
+        self.meta[i].ref_count += 1;
+    }
+
+    /// Drop a reference; at zero the block joins the free-list tail with
+    /// contents + hash retained (reusable until evicted).
+    pub fn free(&mut self, b: BlockId) {
+        let i = b.0 as usize;
+        assert!(self.meta[i].ref_count > 0, "double free of {b:?}");
+        self.meta[i].ref_count -= 1;
+        if self.meta[i].ref_count == 0 {
+            // Hashless partial blocks can never be reused; drop their
+            // identity entirely so they're plain free space.
+            self.push_free(b);
+        }
+    }
+
+    /// Invariant check for tests: free list is consistent, hashes map to
+    /// the blocks claiming them.
+    #[doc(hidden)]
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = 0;
+        let mut i = self.free_head;
+        let mut prev = NONE;
+        while i != NONE {
+            if !self.meta[i].in_free_list {
+                return Err(format!("block {i} linked but not marked free"));
+            }
+            if self.meta[i].ref_count != 0 {
+                return Err(format!("free block {i} has refs"));
+            }
+            if self.meta[i].prev != prev {
+                return Err(format!("bad prev link at {i}"));
+            }
+            prev = i;
+            i = self.meta[i].next;
+            seen += 1;
+            if seen > self.meta.len() {
+                return Err("free list cycle".into());
+            }
+        }
+        if seen != self.free_count {
+            return Err(format!("free_count {} != walked {seen}", self.free_count));
+        }
+        for (h, b) in &self.by_hash {
+            if self.meta[b.0 as usize].hash != Some(*h) {
+                return Err(format!("hash map points at block {b:?} w/o that hash"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_until_exhausted() {
+        let mut p = BlockPool::new(4);
+        let mut got = vec![];
+        for _ in 0..4 {
+            got.push(p.alloc().unwrap());
+        }
+        assert!(p.alloc().is_none());
+        assert_eq!(p.num_free(), 0);
+        for b in got {
+            p.free(b);
+        }
+        assert_eq!(p.num_free(), 4);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn freed_hashed_block_is_reusable() {
+        let mut p = BlockPool::new(2);
+        let b = p.alloc().unwrap();
+        p.commit_hash(b, BlockHash(42));
+        p.free(b);
+        // Hit from free list resurrects with refcount 1.
+        let hit = p.lookup(BlockHash(42)).unwrap();
+        assert_eq!(hit, b);
+        assert_eq!(p.ref_count(b), 1);
+        assert_eq!(p.stats().hits, 1);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_is_lru() {
+        let mut p = BlockPool::new(2);
+        let b0 = p.alloc().unwrap();
+        p.commit_hash(b0, BlockHash(1));
+        let b1 = p.alloc().unwrap();
+        p.commit_hash(b1, BlockHash(2));
+        p.free(b0); // freed first -> LRU
+        p.free(b1);
+        let fresh = p.alloc().unwrap();
+        assert_eq!(fresh, b0, "oldest freed block evicted first");
+        assert!(!p.contains(BlockHash(1)), "evicted hash gone");
+        assert!(p.contains(BlockHash(2)), "newer hash survives");
+        assert_eq!(p.stats().evictions, 1);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lookup_refreshes_nothing_but_lookup_order_matters() {
+        // Resurrecting then re-freeing moves a block to the LRU tail.
+        let mut p = BlockPool::new(3);
+        let b0 = p.alloc().unwrap();
+        p.commit_hash(b0, BlockHash(10));
+        let b1 = p.alloc().unwrap();
+        p.commit_hash(b1, BlockHash(11));
+        p.free(b0);
+        p.free(b1);
+        // touch b0 -> now b1 is LRU among hashed
+        let r = p.lookup(BlockHash(10)).unwrap();
+        p.free(r);
+        // pool still has 1 never-used free block (oldest in list initially)
+        // drain the untouched one, then the next eviction must hit b1.
+        let _fresh = p.alloc().unwrap(); // the never-hashed block
+        let evicted = p.alloc().unwrap();
+        assert_eq!(evicted, b1);
+        assert!(p.contains(BlockHash(10)));
+        assert!(!p.contains(BlockHash(11)));
+    }
+
+    #[test]
+    fn shared_block_not_freed_until_last_ref() {
+        let mut p = BlockPool::new(2);
+        let b = p.alloc().unwrap();
+        p.commit_hash(b, BlockHash(7));
+        let again = p.lookup(BlockHash(7)).unwrap();
+        assert_eq!(again, b);
+        assert_eq!(p.ref_count(b), 2);
+        p.free(b);
+        assert_eq!(p.num_free(), 1); // still held
+        p.free(b);
+        assert_eq!(p.num_free(), 2);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut p = BlockPool::new(1);
+        let b = p.alloc().unwrap();
+        p.free(b);
+        p.free(b);
+    }
+
+    #[test]
+    fn commit_dedups_to_first() {
+        let mut p = BlockPool::new(2);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        p.commit_hash(a, BlockHash(5));
+        p.commit_hash(b, BlockHash(5));
+        let hit = p.lookup(BlockHash(5)).unwrap();
+        assert_eq!(hit, a);
+    }
+
+    #[test]
+    fn property_random_ops_keep_invariants() {
+        use crate::util::prop;
+        prop::check("pool-random-ops", 50, |rng, _| {
+            let n = rng.range(1, 16) as u32;
+            let mut p = BlockPool::new(n);
+            let mut held: Vec<BlockId> = vec![];
+            for step in 0..200 {
+                match rng.next_below(4) {
+                    0 => {
+                        if let Some(b) = p.alloc() {
+                            if rng.next_below(2) == 0 {
+                                p.commit_hash(b, BlockHash(rng.next_below(8)));
+                            }
+                            held.push(b);
+                        }
+                    }
+                    1 => {
+                        if !held.is_empty() {
+                            let i = rng.next_below(held.len() as u64) as usize;
+                            let b = held.swap_remove(i);
+                            p.free(b);
+                        }
+                    }
+                    2 => {
+                        if let Some(b) = p.lookup(BlockHash(rng.next_below(8))) {
+                            held.push(b);
+                        }
+                    }
+                    _ => {
+                        if let Err(e) = p.check_invariants() {
+                            return Err(format!("step {step}: {e}"));
+                        }
+                    }
+                }
+            }
+            p.check_invariants()
+        });
+    }
+}

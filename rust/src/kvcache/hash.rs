@@ -1,0 +1,147 @@
+//! Chained block hashing with base-aligned adapter semantics — the paper's
+//! core mechanism (Figure 3).
+//!
+//! vLLM hashes each full KV block over (parent hash, tokens in block, extra
+//! keys). The extra keys normally include the adapter ID, isolating every
+//! adapter's cache. Our modification: for aLoRA requests, blocks consisting
+//! entirely of *pre-activation* tokens omit the adapter ID — because their
+//! K/V are bit-identical to the base model's, base and aLoRA blocks become
+//! interchangeable in both directions. Blocks containing any post-activation
+//! token, and all blocks of standard-LoRA requests, keep the salt.
+
+use super::block::BlockHash;
+
+/// FxHash-style multiply-xor mix: fast, deterministic, good avalanche for
+/// token streams. Not cryptographic — same trust model as vLLM's default
+/// builtin-hash mode (cache keys, not signatures).
+const K: u64 = 0x517c_c1b7_2722_0a95;
+
+#[inline]
+fn mix(h: u64, x: u64) -> u64 {
+    (h.rotate_left(5) ^ x).wrapping_mul(K)
+}
+
+/// Seed distinguishing the hash chain root so that block hashes can never
+/// collide with raw token values.
+const ROOT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Extra keys folded into a block's hash (vLLM: lora id + cache salt).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ExtraKeys {
+    /// Internal adapter ID; None = hash as the base model. The base-aligned
+    /// policy (prefix::HashContext) decides when this is None for aLoRA.
+    pub adapter_salt: Option<u32>,
+    /// vLLM-style cache salt for multi-tenant isolation (0 = none).
+    pub cache_salt: u64,
+}
+
+/// Hash one full block given its parent's hash (None for the first block),
+/// the tokens inside the block, and the extra keys.
+pub fn block_hash(parent: Option<BlockHash>, tokens: &[u32], extra: ExtraKeys) -> BlockHash {
+    let mut h = match parent {
+        Some(BlockHash(p)) => mix(ROOT, p),
+        None => ROOT,
+    };
+    for &t in tokens {
+        h = mix(h, t as u64 + 1); // +1 so token 0 != "no token"
+    }
+    match extra.adapter_salt {
+        // Distinct tags keep (no adapter) and (adapter 0) apart.
+        Some(id) => {
+            h = mix(h, 0xAD11);
+            h = mix(h, id as u64 + 1);
+        }
+        None => h = mix(h, 0xBA5E),
+    }
+    if extra.cache_salt != 0 {
+        h = mix(h, extra.cache_salt);
+    }
+    BlockHash(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bh(parent: Option<BlockHash>, toks: &[u32], salt: Option<u32>) -> BlockHash {
+        block_hash(parent, toks, ExtraKeys { adapter_salt: salt, cache_salt: 0 })
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(bh(None, &[1, 2, 3], None), bh(None, &[1, 2, 3], None));
+    }
+
+    #[test]
+    fn tokens_change_hash() {
+        assert_ne!(bh(None, &[1, 2, 3], None), bh(None, &[1, 2, 4], None));
+        assert_ne!(bh(None, &[1, 2], None), bh(None, &[1, 2, 0], None));
+    }
+
+    #[test]
+    fn chaining_captures_history() {
+        let p1 = bh(None, &[1, 2], None);
+        let p2 = bh(None, &[9, 9], None);
+        assert_ne!(bh(Some(p1), &[5, 6], None), bh(Some(p2), &[5, 6], None));
+    }
+
+    #[test]
+    fn adapter_salt_isolates() {
+        let base = bh(None, &[1, 2, 3], None);
+        let a0 = bh(None, &[1, 2, 3], Some(0));
+        let a1 = bh(None, &[1, 2, 3], Some(1));
+        assert_ne!(base, a0);
+        assert_ne!(base, a1);
+        assert_ne!(a0, a1);
+    }
+
+    #[test]
+    fn cache_salt_isolates() {
+        let a = block_hash(None, &[1], ExtraKeys { adapter_salt: None, cache_salt: 0 });
+        let b = block_hash(None, &[1], ExtraKeys { adapter_salt: None, cache_salt: 7 });
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn base_aligned_blocks_collide_on_purpose() {
+        // The whole point: an aLoRA pre-activation block hashed with salt
+        // None equals the base model's block hash for the same tokens.
+        let base = bh(None, &[10, 11, 12], None);
+        let alora_pre = bh(None, &[10, 11, 12], None);
+        assert_eq!(base, alora_pre);
+    }
+
+    #[test]
+    fn avalanche_smoke() {
+        // Flipping one token bit should flip ~half the hash bits on average.
+        let h1 = bh(None, &[100, 200, 300, 400], None).0;
+        let h2 = bh(None, &[100, 200, 301, 400], None).0;
+        let flipped = (h1 ^ h2).count_ones();
+        assert!((16..=48).contains(&flipped), "weak avalanche: {flipped} bits");
+    }
+
+    #[test]
+    fn property_no_collisions_across_random_chains() {
+        use crate::util::prop;
+        use std::collections::HashSet;
+        prop::check("hash-collisions", 20, |rng, _| {
+            let mut seen = HashSet::new();
+            let mut parent = None;
+            for _ in 0..500 {
+                let n = rng.range(1, 17) as usize;
+                let toks: Vec<u32> = (0..n).map(|_| rng.next_below(50_000) as u32).collect();
+                let salt = if rng.next_below(3) == 0 {
+                    Some(rng.next_below(8) as u32)
+                } else {
+                    None
+                };
+                let h = bh(parent, &toks, salt);
+                if !seen.insert(h.0) {
+                    return Err(format!("collision at {h:?}"));
+                }
+                parent = Some(h);
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,480 @@
+//! KV-cache manager: per-request block tables over the shared [`BlockPool`].
+//!
+//! The vLLM pattern (Figure 2): the scheduler consults this manager to
+//! (a) find how much of an incoming request's prompt is already cached
+//! (automatic prefix caching), (b) allocate physical blocks as the request
+//! prefills/decodes, and (c) commit content hashes when blocks fill so
+//! later requests can reuse them. Whether *cross-model* hits occur is
+//! decided entirely by the hash chain the request presents
+//! (prefix::HashContext) — this module is policy-free.
+
+use crate::util::fxmap::FxHashMap;
+
+use super::block::{BlockHash, BlockId, BlockPool, PoolStats};
+
+/// Opaque request key (the engine's RequestId.0).
+pub type ReqKey = u64;
+
+#[derive(Debug)]
+struct RequestBlocks {
+    blocks: Vec<BlockId>,
+    /// How many leading blocks carry committed (shareable) hashes.
+    committed: usize,
+    /// Tokens covered by cache hits at admission (for hit-rate metrics).
+    cached_tokens: usize,
+}
+
+/// Outcome of admitting a request: how much prefix was already cached.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CachedPrefix {
+    pub blocks: usize,
+    pub tokens: usize,
+}
+
+/// Aggregate counters for Table-2's "Cache Hit Rate" row.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub pool: PoolStats,
+    /// Tokens requested for prefill across all admitted requests.
+    pub prefix_tokens_queried: u64,
+    /// Tokens served from cache at admission.
+    pub prefix_tokens_hit: u64,
+    pub preemptions: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.prefix_tokens_queried == 0 {
+            0.0
+        } else {
+            self.prefix_tokens_hit as f64 / self.prefix_tokens_queried as f64
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct KvCacheManager {
+    pool: BlockPool,
+    block_size: usize,
+    enable_prefix_caching: bool,
+    tables: FxHashMap<ReqKey, RequestBlocks>,
+    stats: CacheStats,
+}
+
+impl KvCacheManager {
+    pub fn new(num_blocks: u32, block_size: u32, enable_prefix_caching: bool) -> Self {
+        KvCacheManager {
+            pool: BlockPool::new(num_blocks),
+            block_size: block_size as usize,
+            enable_prefix_caching,
+            tables: FxHashMap::default(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn num_free_blocks(&self) -> u32 {
+        self.pool.num_free()
+    }
+
+    pub fn num_total_blocks(&self) -> u32 {
+        self.pool.num_blocks()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let mut s = self.stats;
+        s.pool = self.pool.stats();
+        s
+    }
+
+    /// Peek: how many leading blocks of this hash chain are cached right
+    /// now? (No refcounts taken; the scheduler uses this to budget tokens.)
+    pub fn peek_cached_prefix(&self, hashes: &[BlockHash]) -> CachedPrefix {
+        if !self.enable_prefix_caching {
+            return CachedPrefix { blocks: 0, tokens: 0 };
+        }
+        let mut n = 0;
+        for h in hashes {
+            if self.pool.contains(*h) {
+                n += 1;
+            } else {
+                break;
+            }
+        }
+        CachedPrefix { blocks: n, tokens: n * self.block_size }
+    }
+
+    /// Admit a request: take references on every cached prefix block (the
+    /// chain prefix that hits), create its block table, and report the
+    /// cached span. `prompt_tokens` is used for hit-rate accounting.
+    ///
+    /// The caller must cap usable cached tokens at prompt_len - 1 (at least
+    /// one token must be computed to produce logits); that cap is scheduler
+    /// policy, not cache semantics, so it lives there.
+    pub fn start_request(
+        &mut self,
+        key: ReqKey,
+        hashes: &[BlockHash],
+        prompt_tokens: usize,
+    ) -> CachedPrefix {
+        assert!(
+            !self.tables.contains_key(&key),
+            "request {key} already has a block table"
+        );
+        let mut blocks = Vec::new();
+        if self.enable_prefix_caching {
+            for h in hashes {
+                match self.pool.lookup(*h) {
+                    Some(b) => blocks.push(b),
+                    None => break,
+                }
+            }
+        }
+        let cached = CachedPrefix {
+            blocks: blocks.len(),
+            tokens: blocks.len() * self.block_size,
+        };
+        self.stats.prefix_tokens_queried += prompt_tokens as u64;
+        self.stats.prefix_tokens_hit += cached.tokens.min(prompt_tokens) as u64;
+        let committed = blocks.len(); // hit blocks are committed by definition
+        self.tables.insert(
+            key,
+            RequestBlocks { blocks, committed, cached_tokens: cached.tokens },
+        );
+        cached
+    }
+
+    /// Grow the request's table to cover `total_tokens`. Atomic: either all
+    /// needed blocks are allocated or none (returns false -> caller must
+    /// preempt or wait).
+    pub fn ensure_capacity(&mut self, key: ReqKey, total_tokens: usize) -> bool {
+        let needed_blocks = total_tokens.div_ceil(self.block_size);
+        let table = self.tables.get_mut(&key).expect("unknown request");
+        if needed_blocks <= table.blocks.len() {
+            return true;
+        }
+        let missing = needed_blocks - table.blocks.len();
+        if (self.pool.num_free() as usize) < missing {
+            return false;
+        }
+        for _ in 0..missing {
+            let b = self.pool.alloc().expect("free count said yes");
+            table.blocks.push(b);
+        }
+        true
+    }
+
+    /// Number of *new* blocks `ensure_capacity(total_tokens)` would need.
+    pub fn blocks_needed(&self, key: ReqKey, total_tokens: usize) -> usize {
+        let needed = total_tokens.div_ceil(self.block_size);
+        let have = self.tables.get(&key).map(|t| t.blocks.len()).unwrap_or(0);
+        needed.saturating_sub(have)
+    }
+
+    /// Commit hashes for blocks that have become full. `hashes` is the full
+    /// chain for the request's current token stream; only yet-uncommitted
+    /// positions covered by the table are committed.
+    pub fn commit_full_blocks(&mut self, key: ReqKey, hashes: &[BlockHash]) {
+        if !self.enable_prefix_caching {
+            return;
+        }
+        let table = self.tables.get_mut(&key).expect("unknown request");
+        let upto = hashes.len().min(table.blocks.len());
+        for i in table.committed..upto {
+            self.pool.commit_hash(table.blocks[i], hashes[i]);
+        }
+        table.committed = table.committed.max(upto);
+    }
+
+    /// The request's current physical block table (for executors).
+    pub fn blocks_of(&self, key: ReqKey) -> &[BlockId] {
+        &self.tables.get(&key).expect("unknown request").blocks
+    }
+
+    pub fn cached_tokens_of(&self, key: ReqKey) -> usize {
+        self.tables.get(&key).map(|t| t.cached_tokens).unwrap_or(0)
+    }
+
+    pub fn has_request(&self, key: ReqKey) -> bool {
+        self.tables.contains_key(&key)
+    }
+
+    /// Release all blocks. Tail blocks are freed FIRST so that, in the LRU
+    /// free list, deep suffix blocks get evicted before the shared prefix —
+    /// matching vLLM's reversed-free policy that keeps common prefixes hot.
+    pub fn free_request(&mut self, key: ReqKey) {
+        let table = self.tables.remove(&key).expect("unknown request");
+        for b in table.blocks.into_iter().rev() {
+            self.pool.free(b);
+        }
+    }
+
+    /// Preemption: same as free, but counted (the request will re-prefill
+    /// later — possibly hitting whatever of its blocks survive).
+    pub fn preempt_request(&mut self, key: ReqKey) {
+        self.stats.preemptions += 1;
+        self.free_request(key);
+    }
+
+    /// Test hook: full invariant sweep.
+    #[doc(hidden)]
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.pool.check_invariants()?;
+        for (k, t) in &self.tables {
+            if t.committed > t.blocks.len() {
+                return Err(format!("req {k}: committed > blocks"));
+            }
+            for b in &t.blocks {
+                if self.pool.ref_count(*b) == 0 {
+                    return Err(format!("req {k}: table holds freed block {b:?}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::prefix::{block_hashes, HashContext};
+
+    fn toks(n: usize) -> Vec<u32> {
+        (0..n as u32).map(|i| i * 3 + 1).collect()
+    }
+
+    fn mgr(blocks: u32) -> KvCacheManager {
+        KvCacheManager::new(blocks, 16, true)
+    }
+
+    #[test]
+    fn cold_start_no_hits_then_warm_hits() {
+        let mut m = mgr(16);
+        let t = toks(64);
+        let hs = block_hashes(&t, 16, &HashContext::base());
+
+        let c = m.start_request(1, &hs, 64);
+        assert_eq!(c.blocks, 0);
+        assert!(m.ensure_capacity(1, 64));
+        m.commit_full_blocks(1, &hs);
+        m.free_request(1);
+
+        // Second identical request: full prefix hit from the free pool.
+        let c2 = m.start_request(2, &hs, 64);
+        assert_eq!(c2, CachedPrefix { blocks: 4, tokens: 64 });
+        assert!((m.stats().hit_rate() - 0.5).abs() < 1e-9); // 64 of 128
+        m.free_request(2);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn concurrent_sharing_refcounts() {
+        let mut m = mgr(16);
+        let t = toks(32);
+        let hs = block_hashes(&t, 16, &HashContext::base());
+        m.start_request(1, &hs, 32);
+        assert!(m.ensure_capacity(1, 32));
+        m.commit_full_blocks(1, &hs);
+        // Request 2 shares the blocks while 1 is still running.
+        let c = m.start_request(2, &hs, 32);
+        assert_eq!(c.blocks, 2);
+        let b0 = m.blocks_of(1)[0];
+        assert_eq!(m.blocks_of(2)[0], b0, "same physical block shared");
+        m.free_request(1);
+        // Still referenced by request 2; must not be reallocatable.
+        assert_eq!(m.blocks_of(2).len(), 2);
+        m.free_request(2);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn capacity_is_atomic() {
+        let mut m = mgr(4);
+        let t = toks(64);
+        let hs = block_hashes(&t, 16, &HashContext::base());
+        m.start_request(1, &hs, 64);
+        assert!(m.ensure_capacity(1, 64)); // exactly 4 blocks
+        m.start_request(2, &hs[..0], 64);
+        assert!(!m.ensure_capacity(2, 32), "no free blocks left");
+        assert_eq!(m.blocks_of(2).len(), 0, "failed alloc leaves no residue");
+        m.free_request(1);
+        assert!(m.ensure_capacity(2, 32));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn partial_tail_never_committed() {
+        let mut m = mgr(8);
+        let t = toks(40); // 2 full + partial
+        let hs = block_hashes(&t, 16, &HashContext::base());
+        assert_eq!(hs.len(), 2);
+        m.start_request(1, &hs, 40);
+        assert!(m.ensure_capacity(1, 40)); // 3 blocks
+        m.commit_full_blocks(1, &hs);
+        m.free_request(1);
+        let c = m.start_request(2, &hs, 40);
+        assert_eq!(c.blocks, 2, "only full blocks reusable");
+        m.free_request(2);
+    }
+
+    #[test]
+    fn cross_model_reuse_via_hash_equality() {
+        // The contribution, end-to-end at the manager level: base prefills,
+        // aLoRA's pre-activation chain produces THE SAME hashes, so
+        // admission hits. LoRA's salted chain misses.
+        let mut m = mgr(16);
+        let prompt = toks(64);
+        let base_hs = block_hashes(&prompt, 16, &HashContext::base());
+        m.start_request(1, &base_hs, 64);
+        assert!(m.ensure_capacity(1, 64));
+        m.commit_full_blocks(1, &base_hs);
+        m.free_request(1);
+
+        // aLoRA over prompt + invocation (activation at 64): pre-activation
+        // hashes equal base → 4 hits.
+        let mut ev = prompt.clone();
+        ev.extend_from_slice(&[500, 501, 502, 503]);
+        let alora_ctx = HashContext {
+            adapter_id: Some(1),
+            is_alora: true,
+            inv_start: 64,
+            base_aligned: true,
+            cache_salt: 0,
+        };
+        let alora_hs = block_hashes(&ev, 16, &alora_ctx);
+        let c = m.start_request(2, &alora_hs, ev.len());
+        assert_eq!(c.blocks, 4, "aLoRA reuses base blocks");
+        m.free_request(2);
+
+        // Standard LoRA (always salted): zero hits.
+        let lora_ctx = HashContext {
+            adapter_id: Some(1),
+            is_alora: false,
+            inv_start: 0,
+            base_aligned: true,
+            cache_salt: 0,
+        };
+        let lora_hs = block_hashes(&ev, 16, &lora_ctx);
+        let c = m.start_request(3, &lora_hs, ev.len());
+        assert_eq!(c.blocks, 0, "LoRA cannot reuse base blocks");
+        m.free_request(3);
+    }
+
+    #[test]
+    fn reverse_direction_reuse_alora_to_base() {
+        let mut m = mgr(16);
+        let prompt = toks(48);
+        let alora_ctx = HashContext {
+            adapter_id: Some(0),
+            is_alora: true,
+            inv_start: 48,
+            base_aligned: true,
+            cache_salt: 0,
+        };
+        // aLoRA prefills the conversation (all blocks pre-activation).
+        let a_hs = block_hashes(&prompt, 16, &alora_ctx);
+        m.start_request(1, &a_hs, 48);
+        assert!(m.ensure_capacity(1, 48));
+        m.commit_full_blocks(1, &a_hs);
+        m.free_request(1);
+        // Base model hits everything.
+        let b_hs = block_hashes(&prompt, 16, &HashContext::base());
+        let c = m.start_request(2, &b_hs, 48);
+        assert_eq!(c.blocks, 3);
+        m.free_request(2);
+    }
+
+    #[test]
+    fn disabled_prefix_caching_never_hits() {
+        let mut m = KvCacheManager::new(8, 16, false);
+        let t = toks(32);
+        let hs = block_hashes(&t, 16, &HashContext::base());
+        m.start_request(1, &hs, 32);
+        assert!(m.ensure_capacity(1, 32));
+        m.commit_full_blocks(1, &hs);
+        m.free_request(1);
+        let c = m.start_request(2, &hs, 32);
+        assert_eq!(c.blocks, 0);
+    }
+
+    #[test]
+    fn eviction_under_pressure_loses_oldest_prefix() {
+        let mut m = mgr(4);
+        let t1 = toks(32);
+        let hs1 = block_hashes(&t1, 16, &HashContext::base());
+        m.start_request(1, &hs1, 32);
+        assert!(m.ensure_capacity(1, 32));
+        m.commit_full_blocks(1, &hs1);
+        m.free_request(1);
+        // A different 64-token request needs all 4 blocks → evicts t1's.
+        let t2: Vec<u32> = (0..64).map(|i| 1000 + i).collect();
+        let hs2 = block_hashes(&t2, 16, &HashContext::base());
+        m.start_request(2, &hs2, 64);
+        assert!(m.ensure_capacity(2, 64));
+        m.commit_full_blocks(2, &hs2);
+        m.free_request(2);
+        let c = m.start_request(3, &hs1, 32);
+        assert_eq!(c.blocks, 0, "t1's blocks were evicted");
+        m.free_request(3);
+    }
+
+    #[test]
+    fn preemption_counted_and_blocks_released() {
+        let mut m = mgr(4);
+        let t = toks(64);
+        let hs = block_hashes(&t, 16, &HashContext::base());
+        m.start_request(1, &hs, 64);
+        assert!(m.ensure_capacity(1, 64));
+        m.preempt_request(1);
+        assert_eq!(m.stats().preemptions, 1);
+        assert_eq!(m.num_free_blocks(), 4);
+    }
+
+    #[test]
+    fn property_random_workload_invariants() {
+        use crate::util::prop;
+        prop::check("manager-random", 25, |rng, _| {
+            let mut m = KvCacheManager::new(rng.range(4, 32) as u32, 16, true);
+            let mut live: Vec<(u64, Vec<BlockHash>, usize)> = vec![];
+            let mut next_key = 0u64;
+            for _ in 0..120 {
+                match rng.next_below(3) {
+                    0 => {
+                        let n = rng.range(1, 6) as usize * 16;
+                        let t: Vec<u32> =
+                            (0..n).map(|_| rng.next_below(64) as u32).collect();
+                        let hs = block_hashes(&t, 16, &HashContext::base());
+                        let key = next_key;
+                        next_key += 1;
+                        m.start_request(key, &hs, n);
+                        if m.ensure_capacity(key, n) {
+                            m.commit_full_blocks(key, &hs);
+                            live.push((key, hs, n));
+                        } else {
+                            m.free_request(key);
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let i = rng.next_below(live.len() as u64) as usize;
+                            let (key, _, _) = live.swap_remove(i);
+                            m.free_request(key);
+                        }
+                    }
+                    _ => m.check_invariants()?,
+                }
+            }
+            for (key, _, _) in live {
+                m.free_request(key);
+            }
+            m.check_invariants()?;
+            if m.num_free_blocks() != m.num_total_blocks() {
+                return Err("blocks leaked".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,16 @@
+//! PagedAttention-style KV-cache with base-aligned cross-model prefix reuse.
+//!
+//! - [`block`]: physical block pool, refcounts, LRU free-list reuse.
+//! - [`hash`]: chained block hashing primitive with adapter/cache salts.
+//! - [`prefix`]: per-request salting policy — where the paper's
+//!   base-aligned hashing lives (Figure 3).
+//! - [`manager`]: per-request block tables, admission, commit, preemption.
+
+pub mod block;
+pub mod hash;
+pub mod manager;
+pub mod prefix;
+
+pub use block::{BlockHash, BlockId, BlockPool, PoolStats};
+pub use manager::{CacheStats, CachedPrefix, KvCacheManager, ReqKey};
+pub use prefix::{block_hashes, HashContext};

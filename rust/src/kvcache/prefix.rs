@@ -1,0 +1,240 @@
+//! Per-request hash chains with the base-aligned salting policy.
+//!
+//! [`HashContext`] captures how one request's blocks must be salted:
+//!
+//! | request kind              | vanilla vLLM      | base-aligned (ours)            |
+//! |---------------------------|-------------------|--------------------------------|
+//! | base model                | no salt           | no salt                        |
+//! | standard LoRA             | salt on all blocks| salt on all blocks             |
+//! | aLoRA, block < inv_start  | salt on all blocks| **no salt** (interchangeable)  |
+//! | aLoRA, block ≥ inv_start  | salt on all blocks| salt                           |
+//!
+//! A block is "pre-activation" only if it ends at or before the activation
+//! point — a block straddling the invocation start contains adapted tokens
+//! and must be salted (Figure 3: the activation tokens are only cached once
+//! they fill a block, and then under the adapter's salt).
+
+use super::block::BlockHash;
+use super::hash::{block_hash, ExtraKeys};
+
+/// Salting policy inputs for one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HashContext {
+    /// Internal adapter ID (None = base model request).
+    pub adapter_id: Option<u32>,
+    /// True if the adapter is an Activated LoRA.
+    pub is_alora: bool,
+    /// Absolute token index where the activation sequence begins (aLoRA
+    /// only; ignored otherwise).
+    pub inv_start: usize,
+    /// Engine feature flag (cache.base_aligned_hashing).
+    pub base_aligned: bool,
+    /// Multi-tenant cache salt (0 = none).
+    pub cache_salt: u64,
+}
+
+impl HashContext {
+    pub fn base() -> Self {
+        HashContext {
+            adapter_id: None,
+            is_alora: false,
+            inv_start: 0,
+            base_aligned: true,
+            cache_salt: 0,
+        }
+    }
+
+    /// Which salt applies to a block spanning token indices
+    /// [block_start, block_end)?
+    #[inline]
+    pub fn salt_for_block(&self, _block_start: usize, block_end: usize) -> Option<u32> {
+        match self.adapter_id {
+            None => None,
+            Some(id) => {
+                if self.is_alora && self.base_aligned && block_end <= self.inv_start {
+                    // Entirely pre-activation: hash as the base model.
+                    None
+                } else {
+                    Some(id)
+                }
+            }
+        }
+    }
+
+    fn extra_for_block(&self, block_start: usize, block_end: usize) -> ExtraKeys {
+        ExtraKeys {
+            adapter_salt: self.salt_for_block(block_start, block_end),
+            cache_salt: self.cache_salt,
+        }
+    }
+}
+
+/// Hash chain over all *full* blocks of `tokens`. The trailing partial
+/// block (if any) is unhashed — it is never shareable.
+pub fn block_hashes(tokens: &[u32], block_size: usize, ctx: &HashContext) -> Vec<BlockHash> {
+    assert!(block_size > 0);
+    let n_full = tokens.len() / block_size;
+    let mut out = Vec::with_capacity(n_full);
+    let mut parent: Option<BlockHash> = None;
+    for b in 0..n_full {
+        let start = b * block_size;
+        let end = start + block_size;
+        let h = block_hash(parent, &tokens[start..end], ctx.extra_for_block(start, end));
+        out.push(h);
+        parent = Some(h);
+    }
+    out
+}
+
+/// Incremental form used on the decode path: hash only block `idx` given
+/// its parent (avoids rehashing the whole prefix each step).
+pub fn next_block_hash(
+    parent: Option<BlockHash>,
+    tokens: &[u32],
+    block_idx: usize,
+    block_size: usize,
+    ctx: &HashContext,
+) -> BlockHash {
+    let start = block_idx * block_size;
+    let end = start + block_size;
+    block_hash(parent, &tokens[start..end], ctx.extra_for_block(start, end))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(n: usize) -> Vec<u32> {
+        (0..n as u32).map(|i| i * 7 + 3).collect()
+    }
+
+    fn alora_ctx(inv_start: usize, base_aligned: bool) -> HashContext {
+        HashContext {
+            adapter_id: Some(2),
+            is_alora: true,
+            inv_start,
+            base_aligned,
+            cache_salt: 0,
+        }
+    }
+
+    #[test]
+    fn partial_tail_block_not_hashed() {
+        let t = toks(40); // 2.5 blocks of 16
+        let hs = block_hashes(&t, 16, &HashContext::base());
+        assert_eq!(hs.len(), 2);
+    }
+
+    #[test]
+    fn base_aligned_prefix_matches_base_model() {
+        // aLoRA activated at token 40: blocks 0,1 (ending at 16,32) are
+        // pre-activation -> identical hashes to a base request; block 2
+        // (ending 48 > 40) is salted -> differs.
+        let t = toks(48);
+        let base = block_hashes(&t, 16, &HashContext::base());
+        let alora = block_hashes(&t, 16, &alora_ctx(40, true));
+        assert_eq!(base[0], alora[0]);
+        assert_eq!(base[1], alora[1]);
+        assert_ne!(base[2], alora[2]);
+    }
+
+    #[test]
+    fn vanilla_vllm_isolates_every_block() {
+        let t = toks(48);
+        let base = block_hashes(&t, 16, &HashContext::base());
+        let alora = block_hashes(&t, 16, &alora_ctx(40, false));
+        for i in 0..3 {
+            assert_ne!(base[i], alora[i], "block {i} must be salted w/o feature");
+        }
+    }
+
+    #[test]
+    fn standard_lora_always_salted_even_with_feature() {
+        let t = toks(32);
+        let base = block_hashes(&t, 16, &HashContext::base());
+        let lora = block_hashes(
+            &t,
+            16,
+            &HashContext {
+                adapter_id: Some(1),
+                is_alora: false,
+                inv_start: 0,
+                base_aligned: true,
+                cache_salt: 0,
+            },
+        );
+        assert_ne!(base[0], lora[0]);
+        assert_ne!(base[1], lora[1]);
+    }
+
+    #[test]
+    fn straddling_block_is_salted() {
+        // activation at 20, block [16, 32) contains post-activation tokens.
+        let t = toks(32);
+        let base = block_hashes(&t, 16, &HashContext::base());
+        let alora = block_hashes(&t, 16, &alora_ctx(20, true));
+        assert_eq!(base[0], alora[0]);
+        assert_ne!(base[1], alora[1]);
+    }
+
+    #[test]
+    fn activation_on_block_boundary() {
+        let t = toks(32);
+        let alora = block_hashes(&t, 16, &alora_ctx(32, true));
+        let base = block_hashes(&t, 16, &HashContext::base());
+        // boundary: block ending exactly AT inv_start is pre-activation
+        assert_eq!(base[1], alora[1]);
+    }
+
+    #[test]
+    fn two_aloras_share_pre_activation_blocks() {
+        let t = toks(48);
+        let a = block_hashes(
+            &t,
+            16,
+            &HashContext { adapter_id: Some(0), ..alora_ctx(40, true) },
+        );
+        let b = block_hashes(
+            &t,
+            16,
+            &HashContext { adapter_id: Some(1), ..alora_ctx(40, true) },
+        );
+        assert_eq!(a[0], b[0]);
+        assert_eq!(a[1], b[1]);
+        assert_ne!(a[2], b[2], "post-activation blocks stay adapter-private");
+    }
+
+    #[test]
+    fn incremental_matches_batch() {
+        let t = toks(64);
+        let ctx = alora_ctx(33, true);
+        let batch = block_hashes(&t, 16, &ctx);
+        let mut parent = None;
+        for (i, expected) in batch.iter().enumerate() {
+            let h = next_block_hash(parent, &t, i, 16, &ctx);
+            assert_eq!(h, *expected, "block {i}");
+            parent = Some(h);
+        }
+    }
+
+    #[test]
+    fn property_prefix_stability() {
+        // Appending tokens never changes earlier block hashes.
+        use crate::util::prop;
+        prop::check("prefix-stability", 30, |rng, _| {
+            let n1 = rng.range(16, 128) as usize & !15;
+            let n2 = n1 + (rng.range(16, 64) as usize & !15);
+            let mut t = toks(n2);
+            for x in t.iter_mut() {
+                *x = rng.next_below(1000) as u32;
+            }
+            let ctx = HashContext::base();
+            let short = block_hashes(&t[..n1], 16, &ctx);
+            let long = block_hashes(&t, 16, &ctx);
+            if long[..short.len()] != short[..] {
+                return Err("prefix hashes changed after append".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,49 @@
+//! # alora-serve
+//!
+//! Multi-adapter LLM serving with **cross-model KV-cache reuse via
+//! Activated LoRA (aLoRA)** — a reproduction of Li et al. (CS.DC 2025)
+//! as a three-layer rust + JAX/Pallas stack:
+//!
+//! - **L3 (this crate)**: the serving coordinator — continuous-batching
+//!   scheduler with chunked prefill, PagedAttention-style block manager
+//!   with *base-aligned prefix caching* (the paper's contribution),
+//!   adapter registry, activation-aware mask metadata, metrics, pipeline
+//!   drivers, the H100 discrete-event simulator, and a PJRT runtime that
+//!   executes the AOT-compiled model.
+//! - **L2**: `python/compile/model.py` — the JAX transformer `step`
+//!   function, lowered once to `artifacts/tiny_step.hlo.txt`.
+//! - **L1**: `python/compile/kernels/` — Pallas kernels for the fused
+//!   activation-aware QKV projection and blocked attention.
+//!
+//! Python never runs at serving time; the rust binary is self-contained
+//! once `make artifacts` has produced the HLO text.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use alora_serve::config::presets;
+//! use alora_serve::engine::Engine;
+//! use alora_serve::simulator::SimExecutor;
+//!
+//! let cfg = presets::granite_8b();
+//! let exec = SimExecutor::new(&cfg);
+//! let mut engine = Engine::new(cfg, exec);
+//! // submit requests, then drive: engine.step() until done
+//! ```
+//!
+//! See `examples/` for runnable pipelines and `rust/benches/` for the
+//! paper's table/figure reproductions.
+
+pub mod adapter;
+pub mod config;
+pub mod engine;
+pub mod figures;
+pub mod kvcache;
+pub mod metrics;
+pub mod pipeline;
+pub mod request;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod simulator;
+pub mod util;

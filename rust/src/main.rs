@@ -1,0 +1,235 @@
+//! alora-serve CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   figure   --id <table1|fig6..fig15|all> [--quick]       reproduce paper tables/figures
+//!   pipeline --kind <base-adapter|adapter-base|base-adapter-base|multi-adapter>
+//!            [--model granite-8b] [--prompt-len 1024] [--base-gen 256]
+//!            [--eval-gen 16] [--batch N] [--lora]           run one pipeline, print metrics
+//!   serve    [--preset granite-8b] [--addr 127.0.0.1:8471] [--real]
+//!            start the HTTP server (--real loads artifacts/ via PJRT)
+//!   info     print presets and build info
+//!
+//! (Arg parsing is hand-rolled — no clap in the offline build.)
+
+use std::collections::HashMap;
+
+use alora_serve::adapter::AdapterId;
+use alora_serve::config::presets;
+use alora_serve::engine::Engine;
+use alora_serve::figures;
+use alora_serve::pipeline::{self, workload, PipelineKind, PipelineSpec};
+use alora_serve::runtime::{RealExecutor, TinyModel};
+use alora_serve::server::Server;
+use alora_serve::simulator::SimExecutor;
+
+fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
+    let mut flags = HashMap::new();
+    let mut positional = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    (flags, positional)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { &args[..] } else { &args[1..] };
+    let (flags, _pos) = parse_flags(rest);
+
+    match cmd {
+        "figure" => {
+            let id = flags.get("id").map(String::as_str).unwrap_or("all");
+            let quick = flags.contains_key("quick");
+            let out_dir = flags.get("out").map(std::path::PathBuf::from);
+            for table in figures::run_by_id(id, quick) {
+                table.print();
+                if let Some(dir) = &out_dir {
+                    table.save(dir)?;
+                    println!("  -> saved {}/{}.{{csv,json}}", dir.display(), table.id);
+                }
+            }
+        }
+        "trace" => {
+            // trace --synthesize N --rate R --out path | trace --replay path [--lora]
+            if let Some(path) = flags.get("replay") {
+                let trace = alora_serve::pipeline::trace::Trace::load(std::path::Path::new(path))?;
+                let alora = !flags.contains_key("lora");
+                let mut engine = {
+                    let mut cfg = presets::granite_8b();
+                    cfg.cache.base_aligned_hashing = alora;
+                    let reg = workload::build_registry(3, cfg.model.vocab_size, alora);
+                    let exec = SimExecutor::new(&cfg);
+                    Engine::with_registry(cfg, reg, exec)
+                };
+                let outs = alora_serve::pipeline::trace::replay(&mut engine, &trace);
+                println!(
+                    "replayed {} requests ({}) in {:.3}s virtual time",
+                    outs.len(),
+                    if alora { "aLoRA" } else { "LoRA baseline" },
+                    engine.clock()
+                );
+                for (k, v) in engine.metrics.summary() {
+                    println!("  {k:>20}: {v:.6}");
+                }
+            } else {
+                let n = flags.get("synthesize").and_then(|v| v.parse().ok()).unwrap_or(50);
+                let rate = flags.get("rate").and_then(|v| v.parse().ok()).unwrap_or(4.0);
+                let out = flags
+                    .get("out")
+                    .cloned()
+                    .unwrap_or_else(|| "trace.json".to_string());
+                let t = alora_serve::pipeline::trace::Trace::synthesize(
+                    n, rate, 512, 64, 16, 49_155, 42,
+                );
+                t.save(std::path::Path::new(&out))?;
+                println!("wrote {} entries to {out}", t.len());
+            }
+        }
+        "pipeline" => {
+            let model = flags.get("model").map(String::as_str).unwrap_or("granite-8b");
+            let kind = match flags.get("kind").map(String::as_str).unwrap_or("base-adapter") {
+                "base-adapter" => PipelineKind::BaseAdapter,
+                "adapter-base" => PipelineKind::AdapterBase,
+                "base-adapter-base" => PipelineKind::BaseAdapterBase,
+                "multi-adapter" => PipelineKind::MultiAdapter,
+                other => anyhow::bail!("unknown pipeline kind `{other}`"),
+            };
+            let get =
+                |k: &str, d: usize| flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(d);
+            let n_adapters: u32 = if kind == PipelineKind::MultiAdapter { 5 } else { 1 };
+            let spec = PipelineSpec {
+                kind,
+                prompt_len: get("prompt-len", 1024),
+                base_gen: get("base-gen", 256) as u32,
+                eval_gen: get("eval-gen", 16) as u32,
+                adapters: (0..n_adapters).map(AdapterId).collect(),
+                base2_gen: get("base2-gen", 16) as u32,
+                priority_continuations: false,
+            };
+            let alora = !flags.contains_key("lora");
+            let mut cfg = presets::by_name(model)
+                .ok_or_else(|| anyhow::anyhow!("unknown preset `{model}`"))?;
+            cfg.cache.base_aligned_hashing = alora;
+            let batch = get(
+                "batch",
+                workload::batch_size_for(&cfg, spec.max_total_len()).min(16),
+            );
+            let reg = workload::build_registry(n_adapters, cfg.model.vocab_size, alora);
+            let exec = SimExecutor::new(&cfg);
+            let mut engine = Engine::with_registry(cfg, reg, exec);
+            println!(
+                "running {kind:?} on {model} ({}): prompt {} gen {} eval {} batch {batch}",
+                if alora { "aLoRA" } else { "LoRA baseline" },
+                spec.prompt_len,
+                spec.base_gen,
+                spec.eval_gen,
+            );
+            let result = pipeline::run_sync(&mut engine, &spec, batch, 42);
+            let ev = result.eval_latencies();
+            println!("\neval step over {} requests:", ev.count());
+            for stage in ["e2e", "queue", "prefill", "decode", "ttft", "itl"] {
+                println!("  {stage:>8}: {:>10.4}s", ev.mean(stage));
+            }
+            println!("  hit rate: {:>9.2}%", result.eval_hit_rate() * 100.0);
+            println!("  makespan: {:>10.4}s", result.makespan);
+            println!("\nengine metrics summary:");
+            for (k, v) in engine.metrics.summary() {
+                println!("  {k:>20}: {v:.6}");
+            }
+        }
+        "serve" => {
+            let addr = flags
+                .get("addr")
+                .cloned()
+                .unwrap_or_else(|| "127.0.0.1:8471".to_string());
+            if flags.contains_key("real") {
+                let dir = TinyModel::default_dir();
+                anyhow::ensure!(
+                    TinyModel::artifacts_present(&dir),
+                    "artifacts missing at {} — run `make artifacts`",
+                    dir.display()
+                );
+                let exec = RealExecutor::load(&dir, 0)?;
+                let m = exec.manifest().clone();
+                let cfg = presets::tiny();
+                let reg = alora_serve::adapter::AdapterRegistry::tiny_default(
+                    m.n_adapters as u32,
+                    m.vocab_size as u32,
+                    m.invocation_tokens[0].len() as u32,
+                );
+                let engine = Engine::with_registry(cfg, reg, exec);
+                let srv = Server::start(engine, &addr)?;
+                println!("serving REAL tiny model on http://{}", srv.addr());
+                park_forever(srv)?;
+            } else {
+                let preset = flags.get("preset").map(String::as_str).unwrap_or("granite-8b");
+                let cfg = presets::by_name(preset)
+                    .ok_or_else(|| anyhow::anyhow!("unknown preset `{preset}`"))?;
+                let reg = workload::build_registry(3, cfg.model.vocab_size, true);
+                let exec = SimExecutor::new(&cfg);
+                let engine = Engine::with_registry(cfg, reg, exec);
+                let srv = Server::start(engine, &addr)?;
+                println!("serving SIMULATED {preset} on http://{}", srv.addr());
+                park_forever(srv)?;
+            }
+        }
+        "info" => {
+            println!(
+                "alora-serve {} — cross-model KV-cache reuse via Activated LoRA",
+                env!("CARGO_PKG_VERSION")
+            );
+            println!("presets:");
+            for name in presets::PRESET_NAMES {
+                let c = presets::by_name(name).unwrap();
+                println!(
+                    "  {name:>16}: {:>6.2}B params, {} GPU(s), {} KV tokens, block {}",
+                    c.model.n_params / 1e9,
+                    c.gpu.n_gpus,
+                    c.cache.max_kv_tokens,
+                    c.cache.block_size
+                );
+            }
+            let dir = TinyModel::default_dir();
+            println!(
+                "artifacts: {} ({})",
+                dir.display(),
+                if TinyModel::artifacts_present(&dir) {
+                    "present"
+                } else {
+                    "MISSING — run `make artifacts`"
+                }
+            );
+        }
+        _ => {
+            println!("usage: alora-serve <figure|pipeline|serve|info> [flags]");
+            println!("  figure   --id <table1|fig6|...|fig15|all> [--quick]");
+            println!("  pipeline --kind <base-adapter|adapter-base|base-adapter-base|multi-adapter> [--model M] [--prompt-len N] [--lora]");
+            println!("  serve    [--preset granite-8b] [--addr host:port] [--real]");
+            println!("  info");
+        }
+    }
+    Ok(())
+}
+
+fn park_forever<E: alora_serve::engine::Executor + Send + 'static>(
+    srv: Server<E>,
+) -> anyhow::Result<()> {
+    let _srv = srv;
+    loop {
+        std::thread::park();
+    }
+}

@@ -1,0 +1,276 @@
+//! Engine metrics: Table-2 definitions + Prometheus text exposition.
+//!
+//! The paper collects its numbers from vLLM's Prometheus endpoint; we keep
+//! the same shape: counters/gauges plus per-stage latency series, and a
+//! `render_prometheus()` used by the HTTP server's `/metrics`. Everything
+//! is also queryable in-process (the figure harness reads the aggregates
+//! directly).
+
+use std::collections::BTreeMap;
+
+use crate::request::RequestOutput;
+use crate::util::stats::{LatencyHistogram, Samples};
+
+/// Aggregated latency series for one request population.
+#[derive(Debug, Default, Clone)]
+pub struct StageLatencies {
+    pub e2e: Samples,
+    pub queue: Samples,
+    pub prefill: Samples,
+    pub decode: Samples,
+    pub ttft: Samples,
+    pub itl: Samples,
+    /// prefill + decode (paper Appendix D "inference time").
+    pub inference: Samples,
+}
+
+impl StageLatencies {
+    pub fn observe(&mut self, out: &RequestOutput) {
+        let t = &out.timeline;
+        self.e2e.push(t.e2e());
+        self.queue.push(t.queue_time());
+        self.prefill.push(t.prefill_time());
+        self.decode.push(t.decode_time());
+        self.ttft.push(t.ttft());
+        self.itl.push(out.itl());
+        self.inference.push(t.prefill_time() + t.decode_time());
+    }
+
+    pub fn count(&self) -> usize {
+        self.e2e.len()
+    }
+
+    /// Mean of one named stage — the figure harness's accessor.
+    pub fn mean(&self, stage: &str) -> f64 {
+        match stage {
+            "e2e" => self.e2e.mean(),
+            "queue" => self.queue.mean(),
+            "prefill" => self.prefill.mean(),
+            "decode" => self.decode.mean(),
+            "ttft" => self.ttft.mean(),
+            "itl" => self.itl.mean(),
+            "inference" => self.inference.mean(),
+            other => panic!("unknown stage `{other}`"),
+        }
+    }
+}
+
+pub const STAGES: &[&str] = &["e2e", "queue", "prefill", "decode", "ttft", "itl", "inference"];
+
+/// Engine-wide metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    // counters
+    pub requests_received: u64,
+    pub requests_finished: u64,
+    pub requests_preempted: u64,
+    pub prompt_tokens: u64,
+    pub generated_tokens: u64,
+    pub engine_steps: u64,
+    /// Prefill tokens actually computed (i.e. not served from cache).
+    pub prefill_tokens_computed: u64,
+    /// Prefill tokens served by prefix-cache hits.
+    pub prefill_tokens_cached: u64,
+    /// New KV blocks allocated / cache hit blocks (from the manager).
+    pub blocks_allocated: u64,
+    pub cache_hit_blocks: u64,
+    pub cache_evictions: u64,
+
+    // gauges (last observed)
+    pub running_requests: u64,
+    pub waiting_requests: u64,
+    pub free_blocks: u64,
+    pub clock: f64,
+
+    // latency series
+    pub all: StageLatencies,
+    /// Split by model target class for the paper's per-step analysis.
+    pub base: StageLatencies,
+    pub adapter: StageLatencies,
+
+    // histograms (Prometheus exposition)
+    pub e2e_hist: LatencyHistogram,
+    pub ttft_hist: LatencyHistogram,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe_finished(&mut self, out: &RequestOutput) {
+        self.requests_finished += 1;
+        self.generated_tokens += out.output_tokens.len() as u64;
+        self.all.observe(out);
+        match out.target {
+            crate::request::ModelTarget::Base => self.base.observe(out),
+            crate::request::ModelTarget::Adapter(_) => self.adapter.observe(out),
+        }
+        self.e2e_hist.observe(out.timeline.e2e());
+        self.ttft_hist.observe(out.timeline.ttft());
+    }
+
+    /// Prefix-cache hit rate over all admitted prefill tokens.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.prefill_tokens_computed + self.prefill_tokens_cached;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefill_tokens_cached as f64 / total as f64
+        }
+    }
+
+    /// Throughput (Table 2): total tokens processed / total E2E time.
+    pub fn throughput(&self) -> f64 {
+        let tokens = self.prompt_tokens + self.generated_tokens;
+        let t = self.all.e2e.sum();
+        if t == 0.0 {
+            0.0
+        } else {
+            tokens as f64 / t
+        }
+    }
+
+    /// Prometheus text exposition (subset of vLLM's metric names, with the
+    /// `alora_serve_` namespace).
+    pub fn render_prometheus(&self) -> String {
+        let mut s = String::with_capacity(4096);
+        let mut counter = |name: &str, help: &str, v: f64| {
+            s.push_str(&format!(
+                "# HELP alora_serve_{name} {help}\n# TYPE alora_serve_{name} counter\nalora_serve_{name} {v}\n"
+            ));
+        };
+        counter("requests_received_total", "Requests submitted", self.requests_received as f64);
+        counter("requests_finished_total", "Requests completed", self.requests_finished as f64);
+        counter("requests_preempted_total", "Preemptions", self.requests_preempted as f64);
+        counter("prompt_tokens_total", "Prompt tokens", self.prompt_tokens as f64);
+        counter("generation_tokens_total", "Generated tokens", self.generated_tokens as f64);
+        counter("engine_steps_total", "Engine scheduler steps", self.engine_steps as f64);
+        counter(
+            "prefix_cache_hit_tokens_total",
+            "Prefill tokens served from prefix cache",
+            self.prefill_tokens_cached as f64,
+        );
+        counter(
+            "prefix_cache_computed_tokens_total",
+            "Prefill tokens computed",
+            self.prefill_tokens_computed as f64,
+        );
+        counter("kv_blocks_allocated_total", "KV blocks allocated", self.blocks_allocated as f64);
+        counter("kv_cache_evictions_total", "KV block evictions", self.cache_evictions as f64);
+
+        let mut gauge = |name: &str, help: &str, v: f64| {
+            s.push_str(&format!(
+                "# HELP alora_serve_{name} {help}\n# TYPE alora_serve_{name} gauge\nalora_serve_{name} {v}\n"
+            ));
+        };
+        gauge("num_requests_running", "Running requests", self.running_requests as f64);
+        gauge("num_requests_waiting", "Waiting requests", self.waiting_requests as f64);
+        gauge("kv_blocks_free", "Free KV blocks", self.free_blocks as f64);
+        gauge("prefix_cache_hit_rate", "Token hit rate", self.cache_hit_rate());
+
+        for (name, hist) in [("e2e_latency_seconds", &self.e2e_hist), ("ttft_seconds", &self.ttft_hist)]
+        {
+            s.push_str(&format!(
+                "# HELP alora_serve_{name} Latency histogram\n# TYPE alora_serve_{name} histogram\n"
+            ));
+            for (bound, count) in hist.cumulative() {
+                let le = if bound.is_infinite() { "+Inf".to_string() } else { format!("{bound}") };
+                s.push_str(&format!("alora_serve_{name}_bucket{{le=\"{le}\"}} {count}\n"));
+            }
+            s.push_str(&format!("alora_serve_{name}_sum {}\n", hist.sum()));
+            s.push_str(&format!("alora_serve_{name}_count {}\n", hist.count()));
+        }
+        s
+    }
+
+    /// Compact human summary used by examples and the CLI.
+    pub fn summary(&mut self) -> BTreeMap<String, f64> {
+        let mut m = BTreeMap::new();
+        m.insert("requests_finished".into(), self.requests_finished as f64);
+        m.insert("cache_hit_rate".into(), self.cache_hit_rate());
+        m.insert("throughput_tok_s".into(), self.throughput());
+        for stage in STAGES {
+            m.insert(format!("{stage}_mean_s"), self.all.mean(stage));
+        }
+        let med = self.all.e2e.median();
+        m.insert("e2e_median_s".into(), med);
+        m.insert("e2e_p99_s".into(), self.all.e2e.p99());
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::{ModelTarget, RequestId, Timeline};
+
+    fn out(arrival: f64, sched: f64, first: f64, done: f64, n_out: usize) -> RequestOutput {
+        let mut t = Timeline::new(arrival);
+        t.first_scheduled = sched;
+        t.first_token = first;
+        t.finished = done;
+        RequestOutput {
+            id: RequestId(0),
+            target: ModelTarget::Base,
+            prompt_len: 10,
+            output_tokens: vec![0; n_out],
+            timeline: t,
+            num_cached_tokens: 5,
+            preemptions: 0,
+        }
+    }
+
+    #[test]
+    fn observe_populates_all_series() {
+        let mut m = Metrics::new();
+        m.observe_finished(&out(0.0, 1.0, 2.0, 4.0, 3));
+        assert_eq!(m.all.count(), 1);
+        assert_eq!(m.base.count(), 1);
+        assert_eq!(m.adapter.count(), 0);
+        assert_eq!(m.all.mean("queue"), 1.0);
+        assert_eq!(m.all.mean("prefill"), 1.0);
+        assert_eq!(m.all.mean("decode"), 2.0);
+        assert_eq!(m.all.mean("ttft"), 2.0);
+        assert_eq!(m.all.mean("e2e"), 4.0);
+        assert_eq!(m.all.mean("inference"), 3.0);
+        assert_eq!(m.all.mean("itl"), 1.0);
+    }
+
+    #[test]
+    fn hit_rate_and_throughput() {
+        let mut m = Metrics::new();
+        m.prefill_tokens_cached = 30;
+        m.prefill_tokens_computed = 10;
+        assert!((m.cache_hit_rate() - 0.75).abs() < 1e-12);
+        m.prompt_tokens = 100;
+        m.observe_finished(&out(0.0, 0.0, 1.0, 2.0, 4));
+        // tokens = 100 prompt + 4 gen; e2e sum = 2.0
+        assert!((m.throughput() - 52.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prometheus_exposition_wellformed() {
+        let mut m = Metrics::new();
+        m.requests_received = 3;
+        m.observe_finished(&out(0.0, 0.1, 0.3, 0.9, 16));
+        let text = m.render_prometheus();
+        assert!(text.contains("alora_serve_requests_received_total 3"));
+        assert!(text.contains("alora_serve_ttft_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("# TYPE alora_serve_e2e_latency_seconds histogram"));
+        // every non-comment line is "name[{labels}] value"
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.split_whitespace().count() == 2, "bad line: {line}");
+        }
+    }
+
+    #[test]
+    fn summary_contains_all_stages() {
+        let mut m = Metrics::new();
+        m.observe_finished(&out(0.0, 1.0, 2.0, 3.0, 2));
+        let s = m.summary();
+        for stage in STAGES {
+            assert!(s.contains_key(&format!("{stage}_mean_s")), "{stage}");
+        }
+    }
+}

@@ -1,0 +1,594 @@
+//! Multi-turn, multi-adapter pipeline drivers (paper §4.1).
+//!
+//! The atomic pattern: query base model M₁ with prompt x → response y;
+//! query adapter(s) A_i with (x + y + invocation) → evaluation r; then in
+//! some trials feed (x + y + r…) back into M₁. Drivers come in two
+//! flavors:
+//!
+//! - [`run_sync`] — the synchronous trials (§4.2/§4.4): a batch of B
+//!   conversations advances stage-by-stage (all base calls, then all
+//!   adapter evals, then the second base call), matching the paper's
+//!   fixed-batch methodology.
+//! - [`run_poisson`] — the asynchronous trials (§4.3): conversations
+//!   arrive as a Poisson process; each conversation chains its follow-up
+//!   requests the moment the previous stage finishes.
+//!
+//! Both run against any [`Executor`] — simulator for the paper's scale,
+//! RealExecutor for the end-to-end example.
+
+pub mod trace;
+pub mod workload;
+
+use crate::adapter::AdapterId;
+use crate::engine::{Engine, Executor};
+use crate::metrics::StageLatencies;
+use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams};
+use crate::util::rng::Rng;
+
+/// Which pipeline shape to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineKind {
+    /// base → adapter eval (§4.2).
+    BaseAdapter,
+    /// adapter eval → base (Appendix C).
+    AdapterBase,
+    /// base → adapter → base (§4.4).
+    BaseAdapterBase,
+    /// base → N parallel adapters → consolidated base (§4.4.1).
+    MultiAdapter,
+}
+
+/// Stage tags on finished requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Base1,
+    Eval(AdapterId),
+    Base2,
+}
+
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    pub kind: PipelineKind,
+    pub prompt_len: usize,
+    /// Base model generation length (y).
+    pub base_gen: u32,
+    /// Adapter evaluation length (r) — paper uses 16.
+    pub eval_gen: u32,
+    /// Adapters used (one for single-adapter kinds; N for MultiAdapter).
+    pub adapters: Vec<AdapterId>,
+    /// Generation length of the second base call (BaseAdapterBase /
+    /// MultiAdapter); paper uses 16–256.
+    pub base2_gen: u32,
+    /// Submit conversation continuations (adapter evals, base2) with queue
+    /// priority so their cached prefixes are harvested before eviction —
+    /// pairs with SchedulerConfig::admission_watermark (paper §4.3 load
+    /// management; see figures::ablations::watermark_sweep).
+    pub priority_continuations: bool,
+}
+
+impl PipelineSpec {
+    pub fn base_adapter(prompt_len: usize, base_gen: u32, eval_gen: u32) -> Self {
+        PipelineSpec {
+            kind: PipelineKind::BaseAdapter,
+            prompt_len,
+            base_gen,
+            eval_gen,
+            adapters: vec![AdapterId(0)],
+            base2_gen: 16, priority_continuations: false,
+        }
+    }
+
+    /// Worst-case total sequence length of one conversation (for the
+    /// paper's batch-size rule).
+    pub fn max_total_len(&self) -> usize {
+        let inv = workload::INVOCATION_LEN as usize;
+        let evals = match self.kind {
+            PipelineKind::MultiAdapter => self.adapters.len(),
+            _ => 1,
+        };
+        self.prompt_len
+            + self.base_gen as usize
+            + evals * (self.eval_gen as usize + inv)
+            + self.base2_gen as usize
+    }
+}
+
+/// All finished requests of one pipeline run, tagged by stage.
+#[derive(Debug, Default)]
+pub struct PipelineResult {
+    pub outputs: Vec<(Stage, RequestOutput)>,
+    /// Engine virtual time when the run completed.
+    pub makespan: f64,
+}
+
+impl PipelineResult {
+    pub fn stage_latencies(&self, want: impl Fn(Stage) -> bool) -> StageLatencies {
+        let mut s = StageLatencies::default();
+        for (stage, out) in &self.outputs {
+            if want(*stage) {
+                s.observe(out);
+            }
+        }
+        s
+    }
+
+    /// Latencies of the adapter-evaluation stage (what most figures plot).
+    pub fn eval_latencies(&self) -> StageLatencies {
+        self.stage_latencies(|s| matches!(s, Stage::Eval(_)))
+    }
+
+    pub fn base2_latencies(&self) -> StageLatencies {
+        self.stage_latencies(|s| s == Stage::Base2)
+    }
+
+    /// Mean prefix-cache hit rate of the eval stage.
+    pub fn eval_hit_rate(&self) -> f64 {
+        let evals: Vec<_> = self
+            .outputs
+            .iter()
+            .filter(|(s, _)| matches!(s, Stage::Eval(_)))
+            .collect();
+        if evals.is_empty() {
+            return 0.0;
+        }
+        evals.iter().map(|(_, o)| o.cache_hit_rate()).sum::<f64>() / evals.len() as f64
+    }
+}
+
+/// Conversation state for the async driver.
+struct Conversation {
+    prompt: Vec<u32>,
+    /// Filled as stages complete.
+    base_output: Vec<u32>,
+    eval_outputs: Vec<(AdapterId, Vec<u32>)>,
+    pending_evals: usize,
+    in_flight: Vec<(RequestId, Stage)>,
+}
+
+/// Shared logic: build the eval prompt for adapter `aid` given the
+/// conversation so far (x + y + invocation sequence; paper appends the
+/// activation tokens in LoRA trials too, for fairness).
+fn eval_prompt(vocab: u32, prompt: &[u32], base_out: &[u32], aid: AdapterId) -> Vec<u32> {
+    let mut p = Vec::with_capacity(prompt.len() + base_out.len() + 4);
+    p.extend_from_slice(prompt);
+    p.extend_from_slice(base_out);
+    p.extend(workload::invocation_for(vocab, aid.0));
+    p
+}
+
+/// Consolidated second-base prompt: x + y + all evaluations.
+fn base2_prompt(prompt: &[u32], base_out: &[u32], evals: &[(AdapterId, Vec<u32>)]) -> Vec<u32> {
+    let mut p = Vec::with_capacity(prompt.len() + base_out.len() + 64);
+    p.extend_from_slice(prompt);
+    p.extend_from_slice(base_out);
+    for (_, r) in evals {
+        p.extend_from_slice(r);
+    }
+    p
+}
+
+/// Synchronous stage-locked driver (paper §4.2 methodology): `batch`
+/// conversations advance one stage at a time.
+pub fn run_sync<E: Executor>(
+    engine: &mut Engine<E>,
+    spec: &PipelineSpec,
+    batch: usize,
+    seed: u64,
+) -> PipelineResult {
+    let vocab = engine.cfg.model.vocab_size;
+    let mut rng = Rng::new(seed);
+    let mut result = PipelineResult::default();
+    let prompts: Vec<Vec<u32>> =
+        (0..batch).map(|_| workload::prompt(&mut rng, spec.prompt_len, vocab)).collect();
+
+    // Helper: submit a wave, run to completion, return outputs in order.
+    let wave = |engine: &mut Engine<E>,
+                    reqs: Vec<(Stage, ModelTarget, Vec<u32>, u32)>|
+     -> Vec<(Stage, RequestOutput)> {
+        let ids: Vec<(RequestId, Stage)> = reqs
+            .into_iter()
+            .map(|(stage, target, prompt, gen)| {
+                let id = engine
+                    .submit(
+                        target,
+                        prompt,
+                        SamplingParams { max_new_tokens: gen, ..Default::default() },
+                    )
+                    .expect("submit failed");
+                (id, stage)
+            })
+            .collect();
+        engine.run_until_idle();
+        let mut outs = engine.take_finished();
+        ids.iter()
+            .map(|(id, stage)| {
+                let pos = outs.iter().position(|o| o.id == *id).expect("missing output");
+                (*stage, outs.remove(pos))
+            })
+            .collect()
+    };
+
+    // -- stage 1: first base call (AdapterBase skips it) -------------------
+    let base_outs: Vec<Vec<u32>> = if spec.kind == PipelineKind::AdapterBase {
+        vec![Vec::new(); batch]
+    } else {
+        let outs = wave(
+            engine,
+            prompts
+                .iter()
+                .map(|p| (Stage::Base1, ModelTarget::Base, p.clone(), spec.base_gen))
+                .collect(),
+        );
+        let tokens = outs.iter().map(|(_, o)| o.output_tokens.clone()).collect();
+        result.outputs.extend(outs);
+        tokens
+    };
+
+    // -- stage 2: adapter evaluation(s) ------------------------------------
+    let eval_adapters: &[AdapterId] = match spec.kind {
+        PipelineKind::MultiAdapter => &spec.adapters,
+        _ => &spec.adapters[..1],
+    };
+    let mut eval_reqs = Vec::new();
+    for p_idx in 0..batch {
+        for &aid in eval_adapters {
+            eval_reqs.push((
+                Stage::Eval(aid),
+                ModelTarget::Adapter(aid),
+                eval_prompt(vocab, &prompts[p_idx], &base_outs[p_idx], aid),
+                spec.eval_gen,
+            ));
+        }
+    }
+    let eval_outs = wave(engine, eval_reqs);
+    // Group eval outputs back per conversation (in submit order).
+    let evals_per_conv = eval_adapters.len();
+    let eval_tokens: Vec<Vec<(AdapterId, Vec<u32>)>> = (0..batch)
+        .map(|c| {
+            (0..evals_per_conv)
+                .map(|e| {
+                    let (stage, out) = &eval_outs[c * evals_per_conv + e];
+                    let Stage::Eval(aid) = stage else { unreachable!() };
+                    (*aid, out.output_tokens.clone())
+                })
+                .collect()
+        })
+        .collect();
+    result.outputs.extend(eval_outs);
+
+    // -- stage 3: second base call ------------------------------------------
+    match spec.kind {
+        PipelineKind::AdapterBase => {
+            // base consumes (x + eval) — reuse direction adapter→base.
+            let reqs = (0..batch)
+                .map(|c| {
+                    let mut p = prompts[c].clone();
+                    p.extend(eval_tokens[c][0].1.iter());
+                    (Stage::Base2, ModelTarget::Base, p, spec.base2_gen)
+                })
+                .collect();
+            result.outputs.extend(wave(engine, reqs));
+        }
+        PipelineKind::BaseAdapterBase | PipelineKind::MultiAdapter => {
+            let reqs = (0..batch)
+                .map(|c| {
+                    (
+                        Stage::Base2,
+                        ModelTarget::Base,
+                        base2_prompt(&prompts[c], &base_outs[c], &eval_tokens[c]),
+                        spec.base2_gen,
+                    )
+                })
+                .collect();
+            result.outputs.extend(wave(engine, reqs));
+        }
+        PipelineKind::BaseAdapter => {}
+    }
+
+    result.makespan = engine.clock();
+    result
+}
+
+/// Asynchronous Poisson driver (paper §4.3): `n` conversations arrive at
+/// rate `lambda` (conversations/s); each chains base → eval(s) [→ base2]
+/// as stages complete.
+pub fn run_poisson<E: Executor>(
+    engine: &mut Engine<E>,
+    spec: &PipelineSpec,
+    n: usize,
+    lambda: f64,
+    seed: u64,
+) -> PipelineResult {
+    let vocab = engine.cfg.model.vocab_size;
+    let mut rng = Rng::new(seed);
+    let arrivals = workload::poisson_arrivals(&mut rng, n, lambda);
+    let mut convs: Vec<Conversation> = (0..n)
+        .map(|_| Conversation {
+            prompt: workload::prompt(&mut rng, spec.prompt_len, vocab),
+            base_output: Vec::new(),
+            eval_outputs: Vec::new(),
+            pending_evals: 0,
+            in_flight: Vec::new(),
+        })
+        .collect();
+
+    let mut result = PipelineResult::default();
+    let mut next_arrival = 0usize;
+    let with_base1 = spec.kind != PipelineKind::AdapterBase;
+    let eval_adapters: Vec<AdapterId> = match spec.kind {
+        PipelineKind::MultiAdapter => spec.adapters.clone(),
+        _ => spec.adapters[..1].to_vec(),
+    };
+    let with_base2 = spec.kind != PipelineKind::BaseAdapter;
+    let mut done = 0usize;
+
+    // index: request -> conversation
+    let mut owner: std::collections::HashMap<RequestId, usize> = Default::default();
+
+    let submit_evals =
+        |engine: &mut Engine<E>,
+         convs: &mut [Conversation],
+         owner: &mut std::collections::HashMap<RequestId, usize>,
+         eval_adapters: &[AdapterId],
+         spec: &PipelineSpec,
+         c_idx: usize| {
+            for &aid in eval_adapters {
+                let p = eval_prompt(
+                    engine.cfg.model.vocab_size,
+                    &convs[c_idx].prompt,
+                    &convs[c_idx].base_output,
+                    aid,
+                );
+                let id = engine
+                    .submit_with_priority(
+                        ModelTarget::Adapter(aid),
+                        p,
+                        SamplingParams { max_new_tokens: spec.eval_gen, ..Default::default() },
+                        spec.priority_continuations,
+                    )
+                    .expect("submit eval");
+                convs[c_idx].in_flight.push((id, Stage::Eval(aid)));
+                convs[c_idx].pending_evals += 1;
+                owner.insert(id, c_idx);
+            }
+        };
+
+    while done < n {
+        // Feed arrivals that are due.
+        while next_arrival < n && arrivals[next_arrival] <= engine.clock() {
+            let c_idx = next_arrival;
+            next_arrival += 1;
+            if with_base1 {
+                let id = engine
+                    .submit(
+                        ModelTarget::Base,
+                        convs[c_idx].prompt.clone(),
+                        SamplingParams { max_new_tokens: spec.base_gen, ..Default::default() },
+                    )
+                    .expect("submit base");
+                convs[c_idx].in_flight.push((id, Stage::Base1));
+                owner.insert(id, c_idx);
+            } else {
+                submit_evals(engine, &mut convs, &mut owner, &eval_adapters, spec, c_idx);
+            }
+        }
+
+        let progressed = engine.step();
+
+        // Process completions → chain next stages.
+        for out in engine.take_finished() {
+            let c_idx = owner[&out.id];
+            let stage = convs[c_idx]
+                .in_flight
+                .iter()
+                .find(|(id, _)| *id == out.id)
+                .map(|(_, s)| *s)
+                .expect("untracked request");
+            convs[c_idx].in_flight.retain(|(id, _)| *id != out.id);
+            match stage {
+                Stage::Base1 => {
+                    convs[c_idx].base_output = out.output_tokens.clone();
+                    submit_evals(engine, &mut convs, &mut owner, &eval_adapters, spec, c_idx);
+                }
+                Stage::Eval(aid) => {
+                    convs[c_idx].eval_outputs.push((aid, out.output_tokens.clone()));
+                    convs[c_idx].pending_evals -= 1;
+                    if convs[c_idx].pending_evals == 0 {
+                        if with_base2 {
+                            let p = if spec.kind == PipelineKind::AdapterBase {
+                                let mut p = convs[c_idx].prompt.clone();
+                                p.extend(convs[c_idx].eval_outputs[0].1.iter());
+                                p
+                            } else {
+                                base2_prompt(
+                                    &convs[c_idx].prompt,
+                                    &convs[c_idx].base_output,
+                                    &convs[c_idx].eval_outputs,
+                                )
+                            };
+                            let id = engine
+                                .submit_with_priority(
+                                    ModelTarget::Base,
+                                    p,
+                                    SamplingParams {
+                                        max_new_tokens: spec.base2_gen,
+                                        ..Default::default()
+                                    },
+                                    spec.priority_continuations,
+                                )
+                                .expect("submit base2");
+                            convs[c_idx].in_flight.push((id, Stage::Base2));
+                            owner.insert(id, c_idx);
+                        } else {
+                            done += 1;
+                        }
+                    }
+                }
+                Stage::Base2 => {
+                    done += 1;
+                }
+            }
+            result.outputs.push((stage, out));
+        }
+
+        if !progressed {
+            if next_arrival < n {
+                // Idle until the next arrival.
+                let t = arrivals[next_arrival].max(engine.clock());
+                engine.advance_clock_to(t);
+            } else if done < n && !engine.has_work() {
+                panic!("async pipeline deadlock: {done}/{n} done, engine idle");
+            }
+        }
+    }
+
+    result.makespan = engine.clock();
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::engine::Engine;
+    use crate::simulator::SimExecutor;
+
+    fn engine(alora: bool, n_adapters: u32) -> Engine<SimExecutor> {
+        let mut cfg = presets::granite_8b();
+        cfg.cache.base_aligned_hashing = alora;
+        let reg = workload::build_registry(n_adapters, cfg.model.vocab_size, alora);
+        let exec = SimExecutor::new(&cfg);
+        Engine::with_registry(cfg, reg, exec)
+    }
+
+    #[test]
+    fn sync_base_adapter_counts_and_hits() {
+        let mut e = engine(true, 1);
+        let spec = PipelineSpec::base_adapter(512, 64, 16);
+        let r = run_sync(&mut e, &spec, 4, 7);
+        assert_eq!(r.outputs.len(), 8); // 4 base + 4 eval
+        let evals = r.eval_latencies();
+        assert_eq!(evals.count(), 4);
+        assert!(r.eval_hit_rate() > 0.8, "hit rate {}", r.eval_hit_rate());
+        assert!(r.makespan > 0.0);
+    }
+
+    #[test]
+    fn sync_lora_baseline_no_hits() {
+        let mut e = engine(false, 1);
+        let spec = PipelineSpec::base_adapter(512, 64, 16);
+        let r = run_sync(&mut e, &spec, 4, 7);
+        assert_eq!(r.eval_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn sync_alora_eval_faster_than_lora() {
+        let spec = PipelineSpec::base_adapter(4096, 256, 16);
+        let mut ea = engine(true, 1);
+        let ra = run_sync(&mut ea, &spec, 4, 7);
+        let mut el = engine(false, 1);
+        let rl = run_sync(&mut el, &spec, 4, 7);
+        let sa = ra.eval_latencies().mean("e2e");
+        let sl = rl.eval_latencies().mean("e2e");
+        assert!(sl / sa > 2.0, "speedup {:.2}", sl / sa);
+    }
+
+    #[test]
+    fn sync_base_adapter_base_runs_all_stages() {
+        let mut e = engine(true, 1);
+        let spec = PipelineSpec {
+            kind: PipelineKind::BaseAdapterBase,
+            prompt_len: 256,
+            base_gen: 64,
+            eval_gen: 16,
+            adapters: vec![AdapterId(0)],
+            base2_gen: 32, priority_continuations: false,
+        };
+        let r = run_sync(&mut e, &spec, 2, 3);
+        assert_eq!(r.outputs.iter().filter(|(s, _)| *s == Stage::Base1).count(), 2);
+        assert_eq!(r.eval_latencies().count(), 2);
+        assert_eq!(r.base2_latencies().count(), 2);
+        // base2 reuses the conversation prefix
+        let base2_hits: Vec<f64> = r
+            .outputs
+            .iter()
+            .filter(|(s, _)| *s == Stage::Base2)
+            .map(|(_, o)| o.cache_hit_rate())
+            .collect();
+        assert!(base2_hits.iter().all(|&h| h > 0.5), "{base2_hits:?}");
+    }
+
+    #[test]
+    fn sync_multi_adapter_five_parallel() {
+        let mut e = engine(true, 5);
+        let spec = PipelineSpec {
+            kind: PipelineKind::MultiAdapter,
+            prompt_len: 256,
+            base_gen: 64,
+            eval_gen: 16,
+            adapters: (0..5).map(AdapterId).collect(),
+            base2_gen: 16, priority_continuations: false,
+        };
+        let r = run_sync(&mut e, &spec, 2, 3);
+        assert_eq!(r.eval_latencies().count(), 10); // 2 conv × 5 adapters
+        assert!(r.eval_hit_rate() > 0.8);
+    }
+
+    #[test]
+    fn adapter_base_reuse_direction() {
+        let mut e = engine(true, 1);
+        let spec = PipelineSpec {
+            kind: PipelineKind::AdapterBase,
+            prompt_len: 512,
+            base_gen: 0, // unused
+            eval_gen: 256,
+            adapters: vec![AdapterId(0)],
+            base2_gen: 16, priority_continuations: false,
+        };
+        let r = run_sync(&mut e, &spec, 3, 11);
+        // base2 reuses the adapter's pre-activation prefill
+        let hits: Vec<f64> = r
+            .outputs
+            .iter()
+            .filter(|(s, _)| *s == Stage::Base2)
+            .map(|(_, o)| o.cache_hit_rate())
+            .collect();
+        assert!(hits.iter().all(|&h| h > 0.5), "{hits:?}");
+    }
+
+    #[test]
+    fn poisson_driver_completes_all_conversations() {
+        let mut e = engine(true, 1);
+        let spec = PipelineSpec::base_adapter(256, 32, 8);
+        let r = run_poisson(&mut e, &spec, 20, 5.0, 13);
+        assert_eq!(
+            r.outputs.iter().filter(|(s, _)| matches!(s, Stage::Eval(_))).count(),
+            20
+        );
+        assert_eq!(r.outputs.len(), 40);
+        assert!(r.makespan >= 0.0);
+    }
+
+    #[test]
+    fn poisson_higher_rate_more_queueing() {
+        let spec = PipelineSpec::base_adapter(2048, 128, 16);
+        let mut slow = engine(true, 1);
+        let r_slow = run_poisson(&mut slow, &spec, 30, 0.5, 21);
+        let mut fast = engine(true, 1);
+        let r_fast = run_poisson(&mut fast, &spec, 30, 50.0, 21);
+        let q_slow = r_slow.eval_latencies().mean("queue");
+        let q_fast = r_fast.eval_latencies().mean("queue");
+        assert!(q_fast >= q_slow, "queueing should not shrink with load");
+    }
+
+    #[test]
+    fn poisson_deterministic() {
+        let spec = PipelineSpec::base_adapter(128, 16, 8);
+        let run = || {
+            let mut e = engine(true, 1);
+            let r = run_poisson(&mut e, &spec, 10, 2.0, 5);
+            r.makespan
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,264 @@
+//! Workload traces: record, save, load and replay request streams.
+//!
+//! The paper evaluates on synthetic workloads; production serving teams
+//! replay captured traces. This module gives the engine that capability:
+//! a trace is a JSON array of timed requests (arrival, target, prompt,
+//! generation length), replayable against any executor with the same
+//! virtual-time semantics as the Poisson driver. `synthesize` builds
+//! paper-shaped traces so the two paths share tooling.
+
+use std::path::Path;
+
+use crate::adapter::AdapterId;
+use crate::engine::{Engine, Executor};
+use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::workload;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEntry {
+    /// Arrival time in seconds from trace start.
+    pub at: f64,
+    /// None = base model, Some(i) = adapter i.
+    pub adapter: Option<u32>,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: u32,
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub entries: Vec<TraceEntry>,
+}
+
+impl Trace {
+    /// Entries must be sorted by arrival; enforced on load/build.
+    pub fn new(mut entries: Vec<TraceEntry>) -> Self {
+        entries.sort_by(|a, b| a.at.partial_cmp(&b.at).expect("NaN arrival"));
+        Trace { entries }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Paper-shaped synthetic trace: Poisson arrivals of base requests,
+    /// each followed (after `gap` seconds) by an adapter evaluation over
+    /// the same prompt + invocation tokens. A stand-in for the production
+    /// multi-turn traces we don't have (DESIGN.md §7).
+    pub fn synthesize(
+        n: usize,
+        lambda: f64,
+        prompt_len: usize,
+        base_gen: u32,
+        eval_gen: u32,
+        vocab: u32,
+        seed: u64,
+    ) -> Trace {
+        let mut rng = Rng::new(seed);
+        let arrivals = workload::poisson_arrivals(&mut rng, n, lambda);
+        let mut entries = Vec::with_capacity(n * 2);
+        for (i, &at) in arrivals.iter().enumerate() {
+            let prompt = workload::prompt(&mut rng, prompt_len, vocab);
+            entries.push(TraceEntry {
+                at,
+                adapter: None,
+                prompt: prompt.clone(),
+                max_new_tokens: base_gen,
+            });
+            // Adapter evaluation scheduled shortly after (replay drives it
+            // by arrival time, not by completion — a recorded trace has
+            // concrete timestamps).
+            let adapter = (i % 3) as u32;
+            let mut ev = prompt;
+            ev.extend(workload::invocation_for(vocab, adapter));
+            entries.push(TraceEntry {
+                at: at + 0.5,
+                adapter: Some(adapter),
+                prompt: ev,
+                max_new_tokens: eval_gen,
+            });
+        }
+        Trace::new(entries)
+    }
+
+    // -- JSON round-trip -----------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.entries
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("at", Json::num(e.at)),
+                        (
+                            "adapter",
+                            match e.adapter {
+                                None => Json::Null,
+                                Some(a) => Json::num(a as f64),
+                            },
+                        ),
+                        (
+                            "prompt",
+                            Json::Arr(e.prompt.iter().map(|&t| Json::num(t as f64)).collect()),
+                        ),
+                        ("max_new_tokens", Json::num(e.max_new_tokens as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Trace> {
+        let arr = j.as_arr().ok_or_else(|| anyhow::anyhow!("trace must be an array"))?;
+        let entries = arr
+            .iter()
+            .map(|e| {
+                Ok(TraceEntry {
+                    at: e
+                        .get("at")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow::anyhow!("entry missing `at`"))?,
+                    adapter: match e.get("adapter") {
+                        None | Some(Json::Null) => None,
+                        Some(v) => Some(
+                            v.as_u64()
+                                .ok_or_else(|| anyhow::anyhow!("bad `adapter`"))?
+                                as u32,
+                        ),
+                    },
+                    prompt: e
+                        .get("prompt")
+                        .and_then(Json::u32_vec)
+                        .ok_or_else(|| anyhow::anyhow!("entry missing `prompt`"))?,
+                    max_new_tokens: e
+                        .get("max_new_tokens")
+                        .and_then(Json::as_u64)
+                        .unwrap_or(16) as u32,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Trace::new(entries))
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Trace> {
+        Trace::from_json(&Json::parse_file(path)?)
+    }
+}
+
+/// Replay a trace against an engine in virtual time. Returns outputs in
+/// completion order.
+pub fn replay<E: Executor>(engine: &mut Engine<E>, trace: &Trace) -> Vec<RequestOutput> {
+    let mut outputs = Vec::with_capacity(trace.len());
+    let mut next = 0usize;
+    let mut submitted: Vec<RequestId> = Vec::new();
+    while outputs.len() < trace.len() {
+        while next < trace.entries.len() && trace.entries[next].at <= engine.clock() {
+            let e = &trace.entries[next];
+            next += 1;
+            let target = match e.adapter {
+                None => ModelTarget::Base,
+                Some(a) => ModelTarget::Adapter(AdapterId(a)),
+            };
+            let id = engine
+                .submit(
+                    target,
+                    e.prompt.clone(),
+                    SamplingParams { max_new_tokens: e.max_new_tokens, ..Default::default() },
+                )
+                .expect("trace submit");
+            submitted.push(id);
+        }
+        let progressed = engine.step();
+        outputs.extend(engine.take_finished());
+        if !progressed {
+            if next < trace.entries.len() {
+                let t = trace.entries[next].at.max(engine.clock());
+                engine.advance_clock_to(t);
+            } else if outputs.len() < trace.len() {
+                panic!("trace replay stalled at {}/{}", outputs.len(), trace.len());
+            }
+        }
+    }
+    outputs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::make_engine;
+
+    #[test]
+    fn json_roundtrip() {
+        let t = Trace::synthesize(5, 2.0, 64, 16, 8, 49_155, 7);
+        let j = t.to_json();
+        let back = Trace::from_json(&j).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let t = Trace::synthesize(3, 1.0, 32, 8, 4, 49_155, 9);
+        let path = std::env::temp_dir().join("alora_trace_test.json");
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(t, back);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn entries_sorted_on_construction() {
+        let t = Trace::new(vec![
+            TraceEntry { at: 5.0, adapter: None, prompt: vec![1], max_new_tokens: 1 },
+            TraceEntry { at: 1.0, adapter: None, prompt: vec![2], max_new_tokens: 1 },
+        ]);
+        assert!(t.entries[0].at < t.entries[1].at);
+    }
+
+    #[test]
+    fn replay_completes_all_and_reuses_cache() {
+        let trace = Trace::synthesize(10, 4.0, 512, 32, 8, 49_155, 11);
+        let mut e = make_engine("granite-8b", true, 3);
+        let outs = replay(&mut e, &trace);
+        assert_eq!(outs.len(), 20);
+        // adapter evals over base prompts should mostly hit
+        let eval_hits: Vec<f64> = outs
+            .iter()
+            .filter(|o| matches!(o.target, ModelTarget::Adapter(_)))
+            .map(|o| o.cache_hit_rate())
+            .collect();
+        assert_eq!(eval_hits.len(), 10);
+        let mean = eval_hits.iter().sum::<f64>() / eval_hits.len() as f64;
+        assert!(mean > 0.5, "mean eval hit rate {mean}");
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn replay_deterministic() {
+        let trace = Trace::synthesize(6, 2.0, 128, 16, 8, 49_155, 13);
+        let run = || {
+            let mut e = make_engine("granite-8b", true, 3);
+            let outs = replay(&mut e, &trace);
+            (outs.len(), e.clock())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn malformed_trace_rejected() {
+        let j = Json::parse(r#"[{"prompt": [1,2]}]"#).unwrap();
+        assert!(Trace::from_json(&j).is_err());
+        let j = Json::parse(r#"{"not": "an array"}"#).unwrap();
+        assert!(Trace::from_json(&j).is_err());
+    }
+}

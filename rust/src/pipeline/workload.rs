@@ -1,0 +1,117 @@
+//! Workload synthesis: prompts, invocation sequences, arrival processes,
+//! and registry construction for aLoRA-vs-LoRA comparisons.
+//!
+//! Paper §4.1: "Prompts were generated randomly to fulfill the desired
+//! number of tokens"; "adapter ranks were 8 and 32 for LoRAs and aLoRAs";
+//! activation sequences are appended "in both aLoRA and LoRA trials for
+//! fairness".
+
+use crate::adapter::{AdapterKind, AdapterRegistry};
+#[cfg(test)]
+use crate::adapter::AdapterId;
+use crate::config::EngineConfig;
+use crate::util::rng::Rng;
+
+/// Vocab positions reserved at the top for invocation sequences.
+pub const RESERVED_TOP: u32 = 64;
+pub const INVOCATION_LEN: u32 = 4;
+
+/// Deterministic invocation sequence for adapter index `idx` — identical
+/// scheme to python/compile/configs.py (`vocab - (idx+1)·len .. `).
+pub fn invocation_for(vocab: u32, idx: u32) -> Vec<u32> {
+    let base = vocab - (idx + 1) * INVOCATION_LEN;
+    (base..base + INVOCATION_LEN).collect()
+}
+
+/// Build a registry of `n` adapters, all aLoRA (ours) or all standard LoRA
+/// (the paper's baseline). Both variants use the same invocation-token
+/// ranges so prompts are identical across trials.
+pub fn build_registry(n: u32, vocab: u32, alora: bool) -> AdapterRegistry {
+    let mut reg = AdapterRegistry::new();
+    for idx in 0..n {
+        if alora {
+            reg.register(
+                format!("alora-{idx}"),
+                AdapterKind::ALora { invocation_tokens: invocation_for(vocab, idx) },
+                32,
+            );
+        } else {
+            reg.register(format!("lora-{idx}"), AdapterKind::Lora, 8);
+        }
+    }
+    reg
+}
+
+/// Random prompt of `len` tokens, avoiding the reserved invocation range.
+pub fn prompt(rng: &mut Rng, len: usize, vocab: u32) -> Vec<u32> {
+    rng.tokens(len, vocab, RESERVED_TOP)
+}
+
+/// Paper §4.2 batch-size rule: fill the KV cache given the maximum total
+/// sequence length across the trial set (prompt + generation + eval +
+/// separators), but never exceed the scheduler's max_num_seqs.
+pub fn batch_size_for(cfg: &EngineConfig, max_total_len: usize) -> usize {
+    let by_kv = (cfg.cache.max_kv_tokens as usize / max_total_len.max(1)).max(1);
+    by_kv.min(cfg.scheduler.max_num_seqs as usize)
+}
+
+/// Poisson arrival times: cumulative exponential inter-arrivals at rate
+/// `lambda` (req/s), `n` arrivals.
+pub fn poisson_arrivals(rng: &mut Rng, n: usize, lambda: f64) -> Vec<f64> {
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(lambda);
+            t
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn invocation_matches_python_scheme() {
+        assert_eq!(invocation_for(512, 0), vec![508, 509, 510, 511]);
+        assert_eq!(invocation_for(512, 2), vec![500, 501, 502, 503]);
+    }
+
+    #[test]
+    fn registry_variants() {
+        let a = build_registry(3, 512, true);
+        assert!(a.get(AdapterId(1)).unwrap().is_alora());
+        assert_eq!(a.get(AdapterId(1)).unwrap().rank, 32);
+        let l = build_registry(3, 512, false);
+        assert!(!l.get(AdapterId(1)).unwrap().is_alora());
+        assert_eq!(l.get(AdapterId(1)).unwrap().rank, 8);
+    }
+
+    #[test]
+    fn prompts_avoid_reserved_range() {
+        let mut rng = Rng::new(5);
+        let p = prompt(&mut rng, 1000, 512);
+        assert!(p.iter().all(|&t| t < 512 - RESERVED_TOP));
+    }
+
+    #[test]
+    fn batch_size_rule() {
+        let cfg = presets::granite_8b();
+        // 351104 KV tokens / 65536+276 max len ≈ 5
+        let b = batch_size_for(&cfg, 65536 + 276);
+        assert_eq!(b, 5);
+        // short sequences capped by max_num_seqs
+        let b = batch_size_for(&cfg, 512);
+        assert_eq!(b, cfg.scheduler.max_num_seqs as usize);
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone_with_mean_spacing() {
+        let mut rng = Rng::new(9);
+        let xs = poisson_arrivals(&mut rng, 2000, 4.0);
+        assert!(xs.windows(2).all(|w| w[1] >= w[0]));
+        let mean_gap = xs.last().unwrap() / 2000.0;
+        assert!((mean_gap - 0.25).abs() < 0.02, "gap={mean_gap}");
+    }
+}

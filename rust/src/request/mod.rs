@@ -1,0 +1,323 @@
+//! Request lifecycle: queue → prefill → decode → finished (paper §2.4).
+//!
+//! Timestamps are virtual seconds supplied by the engine clock (identical
+//! pipeline for the simulator and the real PJRT path), and the Table-2
+//! metrics (E2E, queue, prefill, decode, TTFT, ITL) are derived exactly as
+//! the paper defines them.
+
+use crate::adapter::AdapterId;
+use crate::kvcache::block::BlockHash;
+use crate::kvcache::prefix::HashContext;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+/// What the request runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelTarget {
+    Base,
+    Adapter(AdapterId),
+}
+
+impl ModelTarget {
+    pub fn adapter(&self) -> Option<AdapterId> {
+        match self {
+            ModelTarget::Base => None,
+            ModelTarget::Adapter(a) => Some(*a),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum State {
+    /// In the scheduler's waiting queue.
+    Waiting,
+    /// Scheduled on the executor (prefilling or decoding).
+    Running,
+    /// Evicted under memory pressure; will restart prefill.
+    Preempted,
+    Finished,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    /// Number of tokens to generate (paper evaluates fixed lengths,
+    /// e.g. 16 for adapter evaluation, 256 for base generation).
+    pub max_new_tokens: u32,
+    /// Greedy when false (the only mode the tiny artifact needs; the
+    /// simulator ignores sampled values entirely).
+    pub sample: bool,
+    pub temperature: f32,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { max_new_tokens: 16, sample: false, temperature: 1.0 }
+    }
+}
+
+/// Lifecycle timestamps (virtual seconds). f64::NAN = not yet reached.
+#[derive(Debug, Clone, Copy)]
+pub struct Timeline {
+    /// Request handed to the engine.
+    pub arrival: f64,
+    /// First scheduled onto the executor (start of model execution).
+    pub first_scheduled: f64,
+    /// First output token produced (start of generation).
+    pub first_token: f64,
+    /// Completed.
+    pub finished: f64,
+}
+
+impl Timeline {
+    pub fn new(arrival: f64) -> Self {
+        Timeline {
+            arrival,
+            first_scheduled: f64::NAN,
+            first_token: f64::NAN,
+            finished: f64::NAN,
+        }
+    }
+
+    /// Queue time: input → start of model execution.
+    pub fn queue_time(&self) -> f64 {
+        self.first_scheduled - self.arrival
+    }
+
+    /// Prefill time: start of model execution → start of generation.
+    pub fn prefill_time(&self) -> f64 {
+        self.first_token - self.first_scheduled
+    }
+
+    /// Decode time: start of generation → completion.
+    pub fn decode_time(&self) -> f64 {
+        self.finished - self.first_token
+    }
+
+    /// TTFT = queue + prefill.
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    /// E2E = queue + prefill + decode.
+    pub fn e2e(&self) -> f64 {
+        self.finished - self.arrival
+    }
+
+    /// ITL = decode time / (output tokens - 1).
+    pub fn itl(&self, n_output_tokens: u32) -> f64 {
+        if n_output_tokens <= 1 {
+            0.0
+        } else {
+            self.decode_time() / (n_output_tokens - 1) as f64
+        }
+    }
+}
+
+/// One inference request moving through the engine.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub target: ModelTarget,
+    pub prompt: Vec<u32>,
+    pub params: SamplingParams,
+    pub state: State,
+    pub timeline: Timeline,
+
+    // -- engine-maintained progress --------------------------------------
+    /// Generated tokens so far.
+    pub output_tokens: Vec<u32>,
+    /// Tokens whose KV is computed (cached prefix + prefilled + decoded).
+    pub num_computed_tokens: usize,
+    /// Tokens served from prefix cache at admission (engine sets this).
+    pub num_cached_tokens: usize,
+    /// aLoRA activation point (absolute token index); prompt length for
+    /// base/LoRA (i.e. "no pre-activation masking").
+    pub activation_start: usize,
+    /// Number of preemptions suffered (re-prefills).
+    pub preemptions: u32,
+    /// Block-hash salting policy (set by the engine at submit time from
+    /// the adapter registry + feature flag).
+    pub hash_ctx: HashContext,
+    /// Incrementally-maintained chain of full-block hashes over
+    /// `all_tokens()` (engine-maintained; avoids O(n²) rehashing).
+    pub hash_chain: Vec<BlockHash>,
+}
+
+impl Request {
+    pub fn new(
+        id: RequestId,
+        target: ModelTarget,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        arrival: f64,
+    ) -> Self {
+        let prompt_len = prompt.len();
+        assert!(prompt_len > 0, "empty prompt");
+        assert!(params.max_new_tokens > 0, "must generate at least one token");
+        Request {
+            id,
+            target,
+            prompt,
+            params,
+            state: State::Waiting,
+            timeline: Timeline::new(arrival),
+            output_tokens: Vec::new(),
+            num_computed_tokens: 0,
+            num_cached_tokens: 0,
+            activation_start: prompt_len,
+            preemptions: 0,
+            hash_ctx: HashContext::base(),
+            hash_chain: Vec::new(),
+        }
+    }
+
+    /// Full token stream (prompt + generated so far).
+    pub fn all_tokens(&self) -> Vec<u32> {
+        let mut v = Vec::with_capacity(self.prompt.len() + self.output_tokens.len());
+        v.extend_from_slice(&self.prompt);
+        v.extend_from_slice(&self.output_tokens);
+        v
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.prompt.len() + self.output_tokens.len()
+    }
+
+    /// Target total length when generation completes.
+    pub fn final_len(&self) -> usize {
+        self.prompt.len() + self.params.max_new_tokens as usize
+    }
+
+    /// Still in the prefill phase (hasn't produced its first token)?
+    pub fn is_prefilling(&self) -> bool {
+        self.output_tokens.is_empty()
+    }
+
+    /// Tokens that still need their KV computed before the next output
+    /// token can be produced.
+    pub fn remaining_prefill(&self) -> usize {
+        self.total_len().saturating_sub(self.num_computed_tokens)
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.state == State::Finished
+    }
+
+    /// Reset progress after preemption (vLLM recompute-style preemption:
+    /// blocks were dropped, prefill restarts — possibly re-hitting cache).
+    pub fn reset_for_recompute(&mut self) {
+        self.state = State::Preempted;
+        self.num_computed_tokens = 0;
+        self.num_cached_tokens = 0;
+        self.preemptions += 1;
+    }
+}
+
+/// Final per-request record handed to metrics/pipelines.
+#[derive(Debug, Clone)]
+pub struct RequestOutput {
+    pub id: RequestId,
+    pub target: ModelTarget,
+    pub prompt_len: usize,
+    pub output_tokens: Vec<u32>,
+    pub timeline: Timeline,
+    pub num_cached_tokens: usize,
+    pub preemptions: u32,
+}
+
+impl RequestOutput {
+    pub fn from_request(r: &Request) -> Self {
+        RequestOutput {
+            id: r.id,
+            target: r.target,
+            prompt_len: r.prompt.len(),
+            output_tokens: r.output_tokens.clone(),
+            timeline: r.timeline,
+            num_cached_tokens: r.num_cached_tokens,
+            preemptions: r.preemptions,
+        }
+    }
+
+    pub fn itl(&self) -> f64 {
+        self.timeline.itl(self.output_tokens.len() as u32)
+    }
+
+    /// Prefix-cache hit rate for this request's prompt.
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.prompt_len == 0 {
+            0.0
+        } else {
+            self.num_cached_tokens.min(self.prompt_len) as f64 / self.prompt_len as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        Request::new(
+            RequestId(1),
+            ModelTarget::Base,
+            vec![1, 2, 3, 4],
+            SamplingParams { max_new_tokens: 8, ..Default::default() },
+            10.0,
+        )
+    }
+
+    #[test]
+    fn timeline_metrics_match_definitions() {
+        let mut t = Timeline::new(10.0);
+        t.first_scheduled = 12.0;
+        t.first_token = 15.0;
+        t.finished = 20.0;
+        assert_eq!(t.queue_time(), 2.0);
+        assert_eq!(t.prefill_time(), 3.0);
+        assert_eq!(t.decode_time(), 5.0);
+        assert_eq!(t.ttft(), 5.0);
+        assert_eq!(t.e2e(), 10.0);
+        assert!((t.itl(6) - 1.0).abs() < 1e-12);
+        assert_eq!(t.itl(1), 0.0);
+    }
+
+    #[test]
+    fn progress_accounting() {
+        let mut r = req();
+        assert!(r.is_prefilling());
+        assert_eq!(r.remaining_prefill(), 4);
+        r.num_computed_tokens = 4;
+        assert_eq!(r.remaining_prefill(), 0);
+        r.output_tokens.push(42);
+        assert!(!r.is_prefilling());
+        assert_eq!(r.total_len(), 5);
+        assert_eq!(r.final_len(), 12);
+        assert_eq!(r.all_tokens(), vec![1, 2, 3, 4, 42]);
+    }
+
+    #[test]
+    fn preemption_resets_progress() {
+        let mut r = req();
+        r.num_computed_tokens = 4;
+        r.num_cached_tokens = 2;
+        r.reset_for_recompute();
+        assert_eq!(r.state, State::Preempted);
+        assert_eq!(r.num_computed_tokens, 0);
+        assert_eq!(r.preemptions, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prompt")]
+    fn rejects_empty_prompt() {
+        Request::new(RequestId(0), ModelTarget::Base, vec![], Default::default(), 0.0);
+    }
+
+    #[test]
+    fn output_record_hit_rate() {
+        let mut r = req();
+        r.num_cached_tokens = 2;
+        let out = RequestOutput::from_request(&r);
+        assert!((out.cache_hit_rate() - 0.5).abs() < 1e-12);
+    }
+}

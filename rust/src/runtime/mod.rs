@@ -1,0 +1,208 @@
+//! PJRT runtime: load + execute the AOT-compiled model from rust (L3→L2
+//! bridge). Python never runs here — the artifact directory produced by
+//! `make artifacts` is the only interface:
+//!
+//! - `tiny_step.hlo.txt` — HLO *text* of the jitted `step` function
+//!   (weights baked in). Text, not serialized proto: jax ≥ 0.5 emits
+//!   64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//!   parser reassigns ids (see aot_recipe / xla-example README).
+//! - `manifest.json` — shapes + argument order + invocation sequences.
+//! - `golden.json` — scripted scenario for the integration tests.
+//!
+//! [`TinyModel::step`] is the functional KV-in/KV-out contract described
+//! in DESIGN.md §9: one executable serves fresh prefill, cache-extension
+//! prefill (cross-model reuse) and decode.
+
+pub mod executor;
+pub mod sampler;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+pub use executor::RealExecutor;
+
+/// Parsed `manifest.json` — the contract between aot.py and this runtime.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_seq_len: usize,
+    pub block_size: usize,
+    pub n_adapters: usize,
+    pub invocation_tokens: Vec<Vec<u32>>,
+}
+
+impl Manifest {
+    pub fn parse(j: &Json) -> Result<Manifest> {
+        let get = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .map(|x| x as usize)
+                .ok_or_else(|| anyhow::anyhow!("manifest key `{k}` missing or not an int"))
+        };
+        let invocation_tokens = j
+            .get("invocation_tokens")
+            .and_then(Json::as_arr)
+            .context("invocation_tokens")?
+            .iter()
+            .map(|a| a.u32_vec().context("invocation token row"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            vocab_size: get("vocab_size")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            head_dim: get("head_dim")?,
+            max_seq_len: get("max_seq_len")?,
+            block_size: get("block_size")?,
+            n_adapters: get("n_adapters")?,
+            invocation_tokens,
+        })
+    }
+
+    /// Flat element count of one KV tensor [L, S, H, Dh].
+    pub fn kv_elems(&self) -> usize {
+        self.n_layers * self.max_seq_len * self.n_heads * self.head_dim
+    }
+
+    /// Elements per (layer, token) slice — the granularity block copies
+    /// move at: H × Dh.
+    pub fn token_elems(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+}
+
+/// A KV tensor pair ([L, S, H, Dh] row-major f32). Owned by the executor
+/// per in-flight request; block contents are copied in/out of the shared
+/// block store around each step.
+#[derive(Debug, Clone)]
+pub struct KvBuf {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl KvBuf {
+    pub fn zeros(m: &Manifest) -> Self {
+        KvBuf { k: vec![0.0; m.kv_elems()], v: vec![0.0; m.kv_elems()] }
+    }
+}
+
+/// The loaded PJRT executable + metadata.
+pub struct TinyModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+    kv_dims: [i64; 4],
+}
+
+impl TinyModel {
+    /// Load artifacts from a directory.
+    pub fn load(dir: &Path) -> Result<TinyModel> {
+        let manifest = Manifest::parse(
+            &Json::parse_file(&dir.join("manifest.json")).context("manifest.json")?,
+        )?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let hlo_path = dir.join("tiny_step.hlo.txt");
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .with_context(|| format!("parsing {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        let kv_dims = [
+            manifest.n_layers as i64,
+            manifest.max_seq_len as i64,
+            manifest.n_heads as i64,
+            manifest.head_dim as i64,
+        ];
+        Ok(TinyModel { exe, manifest, kv_dims })
+    }
+
+    /// Default artifact directory: `$ALORA_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("ALORA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn artifacts_present(dir: &Path) -> bool {
+        dir.join("tiny_step.hlo.txt").exists() && dir.join("manifest.json").exists()
+    }
+
+    /// One forward step. See python/compile/model.py for the contract:
+    /// computes K/V for positions [start, length), passes everything else
+    /// through, returns logits at `length - 1`.
+    ///
+    /// `mask_pre[t] = true` ⇒ token t uses frozen base weights (pre-
+    /// activation). `adapter_onehot` selects a baked adapter (all-zero =
+    /// base model).
+    pub fn step(
+        &self,
+        tokens: &[u32],
+        kv: &KvBuf,
+        start: usize,
+        length: usize,
+        mask_pre: &[bool],
+        adapter_onehot: &[f32],
+    ) -> Result<(Vec<f32>, KvBuf)> {
+        let m = &self.manifest;
+        anyhow::ensure!(tokens.len() <= m.max_seq_len, "token stream too long");
+        anyhow::ensure!(length <= m.max_seq_len && start < length.max(1));
+        anyhow::ensure!(mask_pre.len() == m.max_seq_len, "mask must be padded");
+        anyhow::ensure!(adapter_onehot.len() == m.n_adapters);
+
+        let mut tok_i32 = vec![0i32; m.max_seq_len];
+        for (i, &t) in tokens.iter().enumerate() {
+            tok_i32[i] = t as i32;
+        }
+        let mask_f32: Vec<f32> =
+            mask_pre.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect();
+
+        let args = [
+            xla::Literal::vec1(&tok_i32),
+            xla::Literal::vec1(&kv.k).reshape(&self.kv_dims)?,
+            xla::Literal::vec1(&kv.v).reshape(&self.kv_dims)?,
+            xla::Literal::scalar(start as i32),
+            xla::Literal::scalar(length as i32),
+            xla::Literal::vec1(&mask_f32),
+            xla::Literal::vec1(adapter_onehot),
+        ];
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (logits_l, k_l, v_l) = result.to_tuple3()?;
+        let logits = logits_l.to_vec::<f32>()?;
+        anyhow::ensure!(logits.len() == m.vocab_size, "bad logits shape");
+        let k = k_l.to_vec::<f32>()?;
+        let v = v_l.to_vec::<f32>()?;
+        Ok((logits, KvBuf { k, v }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let j = Json::parse(
+            r#"{"vocab_size":512,"d_model":128,"n_layers":4,"n_heads":4,
+                "head_dim":32,"max_seq_len":160,"block_size":16,
+                "n_adapters":3,"rank":32,"invocation_len":4,
+                "invocation_tokens":[[508,509,510,511],[504,505,506,507],[500,501,502,503]]}"#,
+        )
+        .unwrap();
+        let m = Manifest::parse(&j).unwrap();
+        assert_eq!(m.max_seq_len, 160);
+        assert_eq!(m.kv_elems(), 4 * 160 * 4 * 32);
+        assert_eq!(m.token_elems(), 128);
+        assert_eq!(m.invocation_tokens[2], vec![500, 501, 502, 503]);
+    }
+
+    #[test]
+    fn manifest_missing_key_errors() {
+        let j = Json::parse(r#"{"vocab_size": 512}"#).unwrap();
+        assert!(Manifest::parse(&j).is_err());
+    }
+}

@@ -1,0 +1,81 @@
+//! Token sampling over logits (greedy + temperature).
+
+use crate::util::rng::Rng;
+
+/// Greedy argmax (ties broken toward the lower token id).
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Temperature sampling via softmax + inverse-CDF draw.
+pub fn sample(logits: &[f32], temperature: f32, rng: &mut Rng) -> u32 {
+    if temperature <= 0.0 {
+        return argmax(logits);
+    }
+    let inv_t = 1.0 / temperature;
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut probs: Vec<f64> = logits
+        .iter()
+        .map(|&l| (((l - m) * inv_t) as f64).exp())
+        .collect();
+    let z: f64 = probs.iter().sum();
+    for p in probs.iter_mut() {
+        *p /= z;
+    }
+    let u = rng.next_f64();
+    let mut acc = 0.0;
+    for (i, p) in probs.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            return i as u32;
+        }
+    }
+    (probs.len() - 1) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max_and_breaks_ties_low() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0, 5.0, 1.0]), 0);
+    }
+
+    #[test]
+    fn zero_temperature_is_greedy() {
+        let mut rng = Rng::new(1);
+        assert_eq!(sample(&[0.0, 9.0, 1.0], 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn sampling_respects_distribution() {
+        // One dominant logit: sampled overwhelmingly often.
+        let mut rng = Rng::new(2);
+        let logits = [0.0f32, 8.0, 0.0, 0.0];
+        let hits = (0..500)
+            .filter(|_| sample(&logits, 1.0, &mut rng) == 1)
+            .count();
+        assert!(hits > 480, "hits={hits}");
+    }
+
+    #[test]
+    fn sampling_covers_uniform_support() {
+        let mut rng = Rng::new(3);
+        let logits = [1.0f32; 4];
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[sample(&logits, 1.0, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

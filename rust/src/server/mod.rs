@@ -1,0 +1,329 @@
+//! HTTP entrypoint (vLLM-style): `/generate`, `/metrics`, `/health`.
+//!
+//! Hand-rolled HTTP/1.1 over std TCP (no tokio in the offline build — see
+//! DESIGN.md §7). A dedicated driver thread owns engine stepping; handler
+//! threads submit requests and block on a condvar until their request
+//! completes. Request lifecycle timestamps still come from the engine's
+//! virtual clock, so `/metrics` exposes the same Table-2 series the
+//! figure harness reads.
+//!
+//! API:
+//!   POST /generate  {"prompt": [1,2,3], "adapter": "alora-0"|null,
+//!                    "max_new_tokens": 16}
+//!     -> {"id": 0, "tokens": [...], "e2e_s": ..., "ttft_s": ...,
+//!         "cache_hit_rate": ...}
+//!   GET /metrics    Prometheus text exposition
+//!   GET /health     {"status": "ok"}
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::engine::{Engine, Executor};
+use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams};
+use crate::util::json::Json;
+
+struct Shared<E: Executor> {
+    engine: Mutex<EngineState<E>>,
+    cv: Condvar,
+    stop: AtomicBool,
+}
+
+struct EngineState<E: Executor> {
+    engine: Engine<E>,
+    done: HashMap<RequestId, RequestOutput>,
+}
+
+/// A running server; `shutdown()` or drop stops the driver thread.
+pub struct Server<E: Executor + Send + 'static> {
+    shared: Arc<Shared<E>>,
+    addr: std::net::SocketAddr,
+    listener_handle: Option<std::thread::JoinHandle<()>>,
+    driver_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl<E: Executor + Send + 'static> Server<E> {
+    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and start
+    /// the driver + listener threads.
+    pub fn start(engine: Engine<E>, addr: &str) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            engine: Mutex::new(EngineState { engine, done: HashMap::new() }),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+        });
+
+        // Driver thread: steps the engine whenever there is work.
+        let driver = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || loop {
+                if shared.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let mut st = shared.engine.lock().unwrap();
+                if st.engine.has_work() {
+                    st.engine.step();
+                    for out in st.engine.take_finished() {
+                        st.done.insert(out.id, out);
+                    }
+                    shared.cv.notify_all();
+                    drop(st);
+                } else {
+                    // Idle: wait for submissions.
+                    let _ = shared
+                        .cv
+                        .wait_timeout(st, Duration::from_millis(10))
+                        .unwrap();
+                }
+            })
+        };
+
+        // Listener thread: accept + handle connections (one thread each).
+        let listener_handle = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || loop {
+                if shared.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let shared = Arc::clone(&shared);
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream, &shared);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            })
+        };
+
+        Ok(Server {
+            shared,
+            addr: local,
+            listener_handle: Some(listener_handle),
+            driver_handle: Some(driver),
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        self.shared.cv.notify_all();
+        if let Some(h) = self.listener_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.driver_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<E: Executor + Send + 'static> Drop for Server<E> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_conn<E: Executor>(mut stream: TcpStream, shared: &Shared<E>) -> anyhow::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_len = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    if content_len > 0 {
+        reader.read_exact(&mut body)?;
+    }
+
+    let (status, content) = route(&method, &path, &body, shared);
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {len}\r\nConnection: close\r\n\r\n",
+        ctype = if path == "/metrics" { "text/plain; version=0.0.4" } else { "application/json" },
+        len = content.len(),
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.write_all(content.as_bytes())?;
+    Ok(())
+}
+
+fn route<E: Executor>(
+    method: &str,
+    path: &str,
+    body: &[u8],
+    shared: &Shared<E>,
+) -> (&'static str, String) {
+    match (method, path) {
+        ("GET", "/health") => ("200 OK", r#"{"status":"ok"}"#.into()),
+        ("GET", "/metrics") => {
+            let st = shared.engine.lock().unwrap();
+            ("200 OK", st.engine.metrics.render_prometheus())
+        }
+        ("POST", "/generate") => match generate(body, shared) {
+            Ok(j) => ("200 OK", j.to_string()),
+            Err(e) => (
+                "400 Bad Request",
+                Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
+            ),
+        },
+        _ => ("404 Not Found", r#"{"error":"not found"}"#.into()),
+    }
+}
+
+fn generate<E: Executor>(body: &[u8], shared: &Shared<E>) -> anyhow::Result<Json> {
+    let req = Json::parse(std::str::from_utf8(body)?)?;
+    let prompt = req
+        .get("prompt")
+        .and_then(Json::u32_vec)
+        .ok_or_else(|| anyhow::anyhow!("`prompt` must be an array of token ids"))?;
+    let max_new = req
+        .get("max_new_tokens")
+        .and_then(Json::as_u64)
+        .unwrap_or(16) as u32;
+    let adapter_name = req.get("adapter").and_then(Json::as_str).map(str::to_string);
+
+    let id = {
+        let mut st = shared.engine.lock().unwrap();
+        let target = match &adapter_name {
+            None => ModelTarget::Base,
+            Some(name) => {
+                let a = st
+                    .engine
+                    .registry
+                    .by_name(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown adapter `{name}`"))?;
+                ModelTarget::Adapter(a.id)
+            }
+        };
+        let id = st.engine.submit(
+            target,
+            prompt,
+            SamplingParams { max_new_tokens: max_new, ..Default::default() },
+        )?;
+        shared.cv.notify_all();
+        id
+    };
+
+    // Block until the driver finishes our request.
+    let mut st = shared.engine.lock().unwrap();
+    loop {
+        if let Some(out) = st.done.remove(&id) {
+            return Ok(Json::obj(vec![
+                ("id", Json::num(out.id.0 as f64)),
+                (
+                    "tokens",
+                    Json::Arr(out.output_tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+                ),
+                ("e2e_s", Json::num(out.timeline.e2e())),
+                ("ttft_s", Json::num(out.timeline.ttft())),
+                ("itl_s", Json::num(out.itl())),
+                ("cache_hit_rate", Json::num(out.cache_hit_rate())),
+                ("preemptions", Json::num(out.preemptions as f64)),
+            ]));
+        }
+        let (guard, timeout) = shared
+            .cv
+            .wait_timeout(st, Duration::from_secs(60))
+            .unwrap();
+        st = guard;
+        if timeout.timed_out() {
+            anyhow::bail!("request {id:?} timed out");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::pipeline::workload;
+    use crate::simulator::SimExecutor;
+
+    fn start_sim_server() -> Server<SimExecutor> {
+        let cfg = presets::granite_8b();
+        let reg = workload::build_registry(2, cfg.model.vocab_size, true);
+        let exec = SimExecutor::new(&cfg);
+        let engine = Engine::with_registry(cfg, reg, exec);
+        Server::start(engine, "127.0.0.1:0").unwrap()
+    }
+
+    fn http(addr: std::net::SocketAddr, req: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(req.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn health_and_metrics_endpoints() {
+        let mut srv = start_sim_server();
+        let r = http(srv.addr(), "GET /health HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(r.contains("200 OK") && r.contains("\"ok\""));
+        let r = http(srv.addr(), "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(r.contains("alora_serve_requests_received_total"));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn generate_roundtrip_base_and_adapter() {
+        let mut srv = start_sim_server();
+        let body = r#"{"prompt": [1,2,3,4,5,6,7,8], "max_new_tokens": 4}"#;
+        let req = format!(
+            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let r = http(srv.addr(), &req);
+        assert!(r.contains("200 OK"), "{r}");
+        assert!(r.contains("\"tokens\""));
+
+        let body = r#"{"prompt": [1,2,3,4], "adapter": "alora-1", "max_new_tokens": 2}"#;
+        let req = format!(
+            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let r = http(srv.addr(), &req);
+        assert!(r.contains("200 OK"), "{r}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn bad_requests_rejected() {
+        let mut srv = start_sim_server();
+        let body = r#"{"prompt": "nope"}"#;
+        let req = format!(
+            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let r = http(srv.addr(), &req);
+        assert!(r.contains("400"), "{r}");
+        let r = http(srv.addr(), "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(r.contains("404"), "{r}");
+        srv.shutdown();
+    }
+}

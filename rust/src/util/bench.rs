@@ -1,0 +1,168 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Warmup + timed iterations with mean/median/p99 reporting, plus a
+//! `black_box` to defeat const-propagation. Used by `rust/benches/*` —
+//! both the per-figure reproduction harnesses and the hot-path
+//! microbenches that drive the §Perf iteration loop.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::Samples;
+
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.mean_ns == 0.0 { 0.0 } else { 1e9 / self.mean_ns }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:8.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:8.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:8.2} ms", ns / 1e6)
+    } else {
+        format!("{:8.3} s ", ns / 1e9)
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {} /iter  (median {}, p99 {}, min {}, n={})",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p99_ns),
+            fmt_ns(self.min_ns),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark a closure: warm up for `warmup`, then sample batches until
+/// `measure` elapses (at least 10 samples). The closure's return value is
+/// black-boxed.
+pub fn bench<T>(name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+    bench_cfg(name, Duration::from_millis(100), Duration::from_millis(400), &mut f)
+}
+
+pub fn bench_cfg<T>(
+    name: &str,
+    warmup: Duration,
+    measure: Duration,
+    f: &mut impl FnMut() -> T,
+) -> BenchResult {
+    // Warmup, and estimate per-iter cost to size batches.
+    let wstart = Instant::now();
+    let mut wi = 0u64;
+    while wstart.elapsed() < warmup || wi < 3 {
+        std_black_box(f());
+        wi += 1;
+    }
+    let per_iter = wstart.elapsed().as_nanos() as f64 / wi as f64;
+    // Batch so each sample is ~200µs (amortizes timer overhead) but at
+    // least 1 iter.
+    let batch = ((200_000.0 / per_iter.max(1.0)).ceil() as u64).max(1);
+
+    let mut samples = Samples::new();
+    let mut iters = 0u64;
+    let mstart = Instant::now();
+    while mstart.elapsed() < measure || samples.len() < 10 {
+        let t = Instant::now();
+        for _ in 0..batch {
+            std_black_box(f());
+        }
+        let elapsed = t.elapsed().as_nanos() as f64 / batch as f64;
+        samples.push(elapsed);
+        iters += batch;
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: samples.mean(),
+        median_ns: samples.median(),
+        p99_ns: samples.p99(),
+        min_ns: samples.min(),
+    }
+}
+
+/// Print a section header for bench binaries.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Render a results table with an aligned `| col | ... |` layout — the
+/// format every `bench_fig*` target uses so paper rows are side-by-side
+/// comparable.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!(" {:>w$} |", c, w = widths[i]));
+        }
+        s
+    };
+    println!("{}", line(headers.iter().map(|s| s.to_string()).collect()));
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    println!("{}", line(sep));
+    for row in rows {
+        println!("{}", line(row.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench_cfg(
+            "noop-add",
+            Duration::from_millis(5),
+            Duration::from_millis(20),
+            &mut || black_box(1u64) + black_box(2u64),
+        );
+        assert!(r.iters > 100);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.median_ns <= r.p99_ns * 1.001);
+        assert!(r.min_ns <= r.mean_ns * 1.001);
+    }
+
+    #[test]
+    fn table_renders_without_panic() {
+        print_table(
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+    }
+}

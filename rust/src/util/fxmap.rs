@@ -1,0 +1,92 @@
+//! FxHash-style HashMap/HashSet for hot-path integer keys.
+//!
+//! std's default SipHash is DoS-resistant but ~5× slower than a
+//! multiply-rotate mix for the u64 keys on the engine's critical path
+//! (request IDs, block hashes — the latter are *already* uniformly mixed
+//! by kvcache::hash). Perf-pass change; see EXPERIMENTS.md §Perf.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+const K: u64 = 0x517c_c1b7_2722_0a95;
+
+/// Multiply-rotate hasher (FxHash algorithm, as used by rustc).
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, w: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ w).wrapping_mul(K);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add(v);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add(v as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+pub type FxHashSet<T> = std::collections::HashSet<T, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_works_like_std() {
+        let mut m: FxHashMap<u64, u32> = FxHashMap::default();
+        for i in 0..1000u64 {
+            m.insert(i, (i * 3) as u32);
+        }
+        assert_eq!(m.len(), 1000);
+        for i in 0..1000u64 {
+            assert_eq!(m[&i], (i * 3) as u32);
+        }
+        m.remove(&500);
+        assert!(!m.contains_key(&500));
+    }
+
+    #[test]
+    fn hash_distribution_reasonable() {
+        // low collision rate over sequential keys in a 1024-bucket space
+        use std::hash::{BuildHasher, Hash};
+        let bh = FxBuildHasher::default();
+        let mut buckets = vec![0u32; 1024];
+        for i in 0..4096u64 {
+            let mut h = bh.build_hasher();
+            i.hash(&mut h);
+            buckets[(h.finish() % 1024) as usize] += 1;
+        }
+        let max = *buckets.iter().max().unwrap();
+        assert!(max < 24, "bucket skew: {max}");
+    }
+}

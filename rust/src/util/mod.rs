@@ -1,0 +1,11 @@
+//! Dependency-light infrastructure: PRNG, stats, JSON, property testing,
+//! bench harness. See DESIGN.md §7 — the offline build environment lacks
+//! rand/serde/criterion/proptest, so these are first-class modules with
+//! their own test suites rather than vendored shims.
+
+pub mod bench;
+pub mod fxmap;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,107 @@
+//! Seeded property-testing mini-framework (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs `cases` generated inputs; on failure
+//! it reports the case seed so the exact input is reproducible with
+//! `replay(seed, ...)`. No shrinking — generators are encouraged to start
+//! small and scale with the case index, which keeps early counterexamples
+//! readable.
+
+use super::rng::Rng;
+
+/// Outcome of one property case.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` seeded property cases. Panics (test failure) with the
+/// offending seed embedded in the message.
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng, u64) -> PropResult,
+{
+    for i in 0..cases {
+        let seed = 0xA10A_5EED ^ (i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng, i) {
+            panic!(
+                "property `{name}` failed on case {i} (seed {seed:#x}): {msg}\n\
+                 replay with util::prop::replay({seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F>(seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng, u64) -> PropResult,
+{
+    let mut rng = Rng::new(seed);
+    f(&mut rng, 0).expect("replayed case still failing");
+}
+
+/// Assert helper producing PropResult.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 25, |rng, _| {
+            n += 1;
+            let x = rng.next_below(100);
+            prop_assert!(x < 100, "x={x}");
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |rng, _| {
+            let x = rng.next_below(10);
+            prop_assert!(x < 5, "x={x} >= 5");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check("collect", 5, |rng, _| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check("collect", 5, |rng, _| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

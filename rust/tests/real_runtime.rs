@@ -1,0 +1,293 @@
+//! Integration: the REAL PJRT path against the goldens exported by aot.py.
+//!
+//! Validates the full L3→L2→L1 composition numerically: the rust-loaded
+//! artifact reproduces the python model's logits, cross-model KV reuse is
+//! exact at both the raw-model and engine level, and the engine's block
+//! store physically carries base blocks into aLoRA requests.
+//!
+//! All tests skip (cleanly) when `artifacts/` has not been built.
+
+use std::path::PathBuf;
+
+use alora_serve::adapter::{AdapterId, AdapterRegistry};
+use alora_serve::config::presets;
+use alora_serve::engine::Engine;
+use alora_serve::request::{ModelTarget, SamplingParams};
+use alora_serve::runtime::{KvBuf, RealExecutor, TinyModel};
+use alora_serve::util::json::Json;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = TinyModel::default_dir();
+    if TinyModel::artifacts_present(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn load_golden(dir: &std::path::Path) -> Json {
+    Json::parse_file(&dir.join("golden.json")).expect("golden.json")
+}
+
+fn allclose(a: &[f32], b: &[f64], atol: f64) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| ((*x as f64) - y).abs() <= atol)
+}
+
+struct Ctx {
+    model: TinyModel,
+    golden: Json,
+}
+
+fn ctx() -> Option<Ctx> {
+    let dir = artifacts()?;
+    Some(Ctx { model: TinyModel::load(&dir).expect("load model"), golden: load_golden(&dir) })
+}
+
+fn mask_for(m: &alora_serve::runtime::Manifest, inv_start: usize) -> Vec<bool> {
+    (0..m.max_seq_len).map(|p| p < inv_start).collect()
+}
+
+fn onehot(m: &alora_serve::runtime::Manifest, id: Option<usize>) -> Vec<f32> {
+    let mut v = vec![0.0; m.n_adapters];
+    if let Some(i) = id {
+        v[i] = 1.0;
+    }
+    v
+}
+
+#[test]
+fn base_prefill_matches_golden_logits() {
+    let Some(c) = ctx() else { return };
+    let m = c.model.manifest.clone();
+    let prompt = c.golden.req("prompt").u32_vec().unwrap();
+    let plen = prompt.len();
+    let kv = KvBuf::zeros(&m);
+    let (logits, _) = c
+        .model
+        .step(&prompt, &kv, 0, plen, &mask_for(&m, m.max_seq_len), &onehot(&m, None))
+        .unwrap();
+    let head = c.golden.req("base_logits_head").f64_vec().unwrap();
+    let atol = c.golden.req("atol").as_f64().unwrap();
+    assert!(
+        allclose(&logits[..head.len()], &head, atol),
+        "base logits diverge from python golden"
+    );
+    let argmax = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0 as u64;
+    assert_eq!(argmax, c.golden.req("base_next_token").as_u64().unwrap());
+}
+
+#[test]
+fn cross_model_reuse_exact_at_model_level() {
+    let Some(c) = ctx() else { return };
+    let m = c.model.manifest.clone();
+    let g = &c.golden;
+    let prompt = g.req("prompt").u32_vec().unwrap();
+    let plen = prompt.len();
+    let eval_tokens = g.req("eval_tokens").u32_vec().unwrap();
+    let inv_start = g.req("inv_start").as_u64().unwrap() as usize;
+    let adapter = g.req("adapter_id").as_u64().unwrap() as usize;
+    let atol = g.req("atol").as_f64().unwrap();
+
+    // base prefill
+    let kv0 = KvBuf::zeros(&m);
+    let (_, kv_base) = c
+        .model
+        .step(&prompt, &kv0, 0, plen, &mask_for(&m, m.max_seq_len), &onehot(&m, None))
+        .unwrap();
+
+    // (a) full recompute with the adapter
+    let (full, _) = c
+        .model
+        .step(
+            &eval_tokens,
+            &kv0,
+            0,
+            eval_tokens.len(),
+            &mask_for(&m, inv_start),
+            &onehot(&m, Some(adapter)),
+        )
+        .unwrap();
+    // (b) REUSE the base KV, computing only [plen, len)
+    let (reuse, _) = c
+        .model
+        .step(
+            &eval_tokens,
+            &kv_base,
+            plen,
+            eval_tokens.len(),
+            &mask_for(&m, inv_start),
+            &onehot(&m, Some(adapter)),
+        )
+        .unwrap();
+
+    let max_diff = full
+        .iter()
+        .zip(&reuse)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-4, "cross-model reuse not exact: {max_diff}");
+
+    // against golden heads too
+    let head = g.req("alora_reuse_logits_head").f64_vec().unwrap();
+    assert!(allclose(&reuse[..head.len()], &head, atol));
+
+    // and the LoRA (mask-0) logits must differ
+    let (lora, _) = c
+        .model
+        .step(
+            &eval_tokens,
+            &kv0,
+            0,
+            eval_tokens.len(),
+            &mask_for(&m, 0),
+            &onehot(&m, Some(adapter)),
+        )
+        .unwrap();
+    let lora_diff = full
+        .iter()
+        .zip(&lora)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(lora_diff > 1e-3, "LoRA and aLoRA must differ");
+}
+
+#[test]
+fn decode_chain_matches_golden() {
+    let Some(c) = ctx() else { return };
+    let m = c.model.manifest.clone();
+    let g = &c.golden;
+    let prompt = g.req("prompt").u32_vec().unwrap();
+    let y = g.req("base_next_token").as_u64().unwrap() as u32;
+    let expected = g.req("base_decode_tokens").u32_vec().unwrap();
+
+    let kv0 = KvBuf::zeros(&m);
+    let (_, mut kv) = c
+        .model
+        .step(&prompt, &kv0, 0, prompt.len(), &mask_for(&m, m.max_seq_len), &onehot(&m, None))
+        .unwrap();
+    let mut toks = prompt.clone();
+    toks.push(y);
+    let mut got = Vec::new();
+    for _ in 0..expected.len() {
+        let (logits, kv2) = c
+            .model
+            .step(
+                &toks,
+                &kv,
+                toks.len() - 1,
+                toks.len(),
+                &mask_for(&m, m.max_seq_len),
+                &onehot(&m, None),
+            )
+            .unwrap();
+        kv = kv2;
+        let next = alora_serve::runtime::sampler::argmax(&logits);
+        got.push(next);
+        toks.push(next);
+    }
+    assert_eq!(got, expected, "greedy decode chain diverged from python");
+}
+
+#[test]
+fn engine_level_real_reuse_and_correct_sampling() {
+    let Some(dir) = artifacts() else { return };
+    let exec = RealExecutor::load(&dir, 0).unwrap();
+    let manifest = exec.manifest().clone();
+    let golden = load_golden(&dir);
+
+    let cfg = presets::tiny();
+    let reg = AdapterRegistry::tiny_default(
+        manifest.n_adapters as u32,
+        manifest.vocab_size as u32,
+        manifest.invocation_tokens[0].len() as u32,
+    );
+    let mut e = Engine::with_registry(cfg, reg, exec);
+
+    let prompt = golden.req("prompt").u32_vec().unwrap();
+    let base = e
+        .submit(
+            ModelTarget::Base,
+            prompt.clone(),
+            SamplingParams { max_new_tokens: 1, ..Default::default() },
+        )
+        .unwrap();
+    let base_out = e.run_to_completion(base);
+    assert_eq!(
+        base_out.output_tokens[0] as u64,
+        golden.req("base_next_token").as_u64().unwrap()
+    );
+
+    // aLoRA eval through the engine: hits base blocks AND matches the
+    // golden argmax (i.e. reused physical blocks carry exact tensors).
+    let ev = golden.req("eval_tokens").u32_vec().unwrap();
+    let aid = golden.req("adapter_id").as_u64().unwrap() as u32;
+    let al = e
+        .submit(
+            ModelTarget::Adapter(AdapterId(aid)),
+            ev,
+            SamplingParams { max_new_tokens: 1, ..Default::default() },
+        )
+        .unwrap();
+    let al_out = e.run_to_completion(al);
+    assert!(al_out.num_cached_tokens > 0, "no cross-model hit");
+    assert_eq!(
+        al_out.output_tokens[0] as u64,
+        golden.req("alora_argmax").as_u64().unwrap(),
+        "engine-level reuse produced wrong logits"
+    );
+    e.check_invariants().unwrap();
+}
+
+#[test]
+fn engine_real_multiturn_decode_matches_incremental() {
+    // The engine's chunked prefill + decode over the real model must agree
+    // with the raw incremental path for the same token stream.
+    let Some(dir) = artifacts() else { return };
+    let exec = RealExecutor::load(&dir, 0).unwrap();
+    let manifest = exec.manifest().clone();
+    let cfg = presets::tiny();
+    let reg = AdapterRegistry::tiny_default(
+        manifest.n_adapters as u32,
+        manifest.vocab_size as u32,
+        manifest.invocation_tokens[0].len() as u32,
+    );
+    let mut e = Engine::with_registry(cfg, reg, exec);
+
+    let prompt: Vec<u32> = (40..72).collect();
+    let id = e
+        .submit(
+            ModelTarget::Base,
+            prompt.clone(),
+            SamplingParams { max_new_tokens: 4, ..Default::default() },
+        )
+        .unwrap();
+    let out = e.run_to_completion(id);
+
+    // raw reference
+    let model = TinyModel::load(&dir).unwrap();
+    let m = model.manifest.clone();
+    let kv0 = KvBuf::zeros(&m);
+    let mask: Vec<bool> = vec![true; m.max_seq_len];
+    let oh = vec![0.0f32; m.n_adapters];
+    let (mut logits, mut kv) = model.step(&prompt, &kv0, 0, prompt.len(), &mask, &oh).unwrap();
+    let mut toks = prompt.clone();
+    let mut expect = Vec::new();
+    for _ in 0..4 {
+        let next = alora_serve::runtime::sampler::argmax(&logits);
+        expect.push(next);
+        toks.push(next);
+        let r = model
+            .step(&toks, &kv, toks.len() - 1, toks.len(), &mask, &oh)
+            .unwrap();
+        logits = r.0;
+        kv = r.1;
+    }
+    assert_eq!(out.output_tokens, expect);
+}

@@ -1,0 +1,90 @@
+//! Integration: the HTTP entrypoint under concurrent clients.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use alora_serve::engine::Engine;
+use alora_serve::pipeline::workload;
+use alora_serve::server::Server;
+use alora_serve::simulator::SimExecutor;
+
+fn start() -> Server<SimExecutor> {
+    let cfg = alora_serve::config::presets::granite_8b();
+    let reg = workload::build_registry(2, cfg.model.vocab_size, true);
+    let exec = SimExecutor::new(&cfg);
+    Server::start(Engine::with_registry(cfg, reg, exec), "127.0.0.1:0").unwrap()
+}
+
+fn post(addr: std::net::SocketAddr, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(
+        format!(
+            "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+#[test]
+fn concurrent_clients_all_served() {
+    let mut srv = start();
+    let addr = srv.addr();
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let body = format!(
+                    r#"{{"prompt": [{}], "max_new_tokens": 4}}"#,
+                    (1..32).map(|t| (t + i).to_string()).collect::<Vec<_>>().join(",")
+                );
+                post(addr, &body)
+            })
+        })
+        .collect();
+    for h in handles {
+        let resp = h.join().unwrap();
+        assert!(resp.contains("200 OK"), "{resp}");
+        assert!(resp.contains("\"tokens\""));
+    }
+    // metrics reflect the workload
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let mut m = String::new();
+    s.read_to_string(&mut m).unwrap();
+    assert!(m.contains("alora_serve_requests_finished_total 8"), "{m}");
+    srv.shutdown();
+}
+
+#[test]
+fn adapter_requests_share_cache_across_http_calls() {
+    let mut srv = start();
+    let addr = srv.addr();
+    // long base request
+    let prompt: Vec<String> = (100..612).map(|t| (t % 4000).to_string()).collect();
+    let body = format!(r#"{{"prompt": [{}], "max_new_tokens": 8}}"#, prompt.join(","));
+    let r1 = post(addr, &body);
+    assert!(r1.contains("200 OK"));
+    // adapter over the same prefix
+    let inv = workload::invocation_for(49_155, 0);
+    let mut p2: Vec<String> = (100..612).map(|t| (t % 4000).to_string()).collect();
+    p2.extend(inv.iter().map(|t| t.to_string()));
+    let body = format!(
+        r#"{{"prompt": [{}], "adapter": "alora-0", "max_new_tokens": 4}}"#,
+        p2.join(",")
+    );
+    let r2 = post(addr, &body);
+    assert!(r2.contains("200 OK"), "{r2}");
+    // hit rate > 0 reported in the response json
+    let hit = r2
+        .lines()
+        .last()
+        .and_then(|l| alora_serve::util::json::Json::parse(l).ok())
+        .and_then(|j| j.get("cache_hit_rate").and_then(|v| v.as_f64()))
+        .unwrap_or(0.0);
+    assert!(hit > 0.5, "expected cross-model hit over HTTP, got {hit}");
+    srv.shutdown();
+}
