@@ -1,0 +1,28 @@
+# Tier-1 gate (mirrors .github/workflows/ci.yml): make check
+# fmt is advisory in both (leading `-`) until a toolchain-run `make fmt`
+# lands — the repo was authored offline without rustfmt; see CHANGES.md.
+.PHONY: check build test fmt fmt-check bench artifacts
+
+check: build test
+	-cargo fmt --check
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+fmt:
+	cargo fmt
+
+fmt-check:
+	cargo fmt --check
+
+# Hot-path microbenches (coordinator dispatch, hashing, scheduler, ...)
+bench:
+	cargo bench --bench bench_hotpath
+
+# AOT-compile the tiny model + goldens for the real-runtime path
+# (requires JAX; see DESIGN.md §9).
+artifacts:
+	python3 python/compile/aot.py

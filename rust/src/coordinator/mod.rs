@@ -1,1 +1,910 @@
-// paper's L3 coordination contribution
+//! L3 orchestration: declarative stage graphs driven over any engine.
+//!
+//! The paper's headline wins come from *chained* requests — multi-turn,
+//! multi-adapter pipelines whose follow-ups reuse prior-stage KV via
+//! base-aligned hashing (§4.1, §4.4.1). This module generalizes the four
+//! hard-coded `PipelineKind` shapes into an arbitrary DAG of stages:
+//!
+//! - [`StageGraph`] — nodes are {target (base or adapter), generation
+//!   length, prompt-composition rule}; edges are dependencies. Prompts
+//!   compose declaratively from [`Part`]s: literal tokens, a parent's
+//!   composed prompt, or a parent's generated output — enough to express
+//!   chains (base → eval), fan-out (one draft, N adapter "intrinsics" in
+//!   the Activated-LoRA sense) and fan-in consolidation (one base call
+//!   over every evaluation), at S-LoRA-style many-adapter scale.
+//! - [`Coordinator`] — drives any [`Engine`] *event-style*: a stage is
+//!   submitted the moment its last parent finishes, so the follow-up
+//!   lands while the parent's prefix blocks are still cache-hot. It
+//!   tracks per-conversation frontier state and emits per-stage-name
+//!   latency series into [`crate::metrics::Metrics::stage`].
+//!
+//! Two drive modes mirror the paper's methodologies: [`Coordinator::run_event`]
+//! (§4.3 async — arrivals chain through the DAG as completions land) and
+//! [`Coordinator::run_lockstep`] (§4.2 sync — every conversation advances
+//! one topological level per wave). `pipeline::run_sync`/`run_poisson`
+//! are now thin wrappers over these (DESIGN.md §6).
+
+pub mod spec;
+
+use crate::engine::{Engine, Executor};
+use crate::metrics::StageLatencies;
+use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams};
+use crate::util::fxmap::FxHashMap;
+
+/// Index of a stage within one [`StageGraph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StageId(pub usize);
+
+/// One piece of a stage's composed prompt.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Part {
+    /// Literal tokens (root prompts, invocation sequences, separators).
+    Tokens(Vec<u32>),
+    /// The referenced stage's *composed prompt* (its full input stream).
+    PromptOf(StageId),
+    /// The referenced stage's generated output tokens.
+    OutputOf(StageId),
+}
+
+impl Part {
+    fn stage_ref(&self) -> Option<StageId> {
+        match self {
+            Part::Tokens(_) => None,
+            Part::PromptOf(s) | Part::OutputOf(s) => Some(*s),
+        }
+    }
+}
+
+/// One node of a stage graph.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    /// Label for metrics/traces (`metrics.stage` series key). Not required
+    /// to be unique within a graph, but JSON specs and trace parent links
+    /// resolve stages by name, so builders that feed those keep it unique.
+    pub name: String,
+    pub target: ModelTarget,
+    /// Tokens to generate at this stage.
+    pub gen_len: u32,
+    /// Prompt composition, concatenated in order.
+    pub parts: Vec<Part>,
+    /// Extra ordering-only dependencies (no token flow).
+    pub after: Vec<StageId>,
+    /// Submit with queue priority (conversation continuations harvest
+    /// their cached prefixes before eviction — paper §4.3 load
+    /// management). Honored by the event drive; the lockstep drive
+    /// ignores it, matching the fixed-batch methodology.
+    pub priority: bool,
+}
+
+/// A DAG of stages for one conversation. Stages may only reference
+/// earlier-added stages, so the graph is acyclic by construction.
+#[derive(Debug, Clone, Default)]
+pub struct StageGraph {
+    stages: Vec<StageSpec>,
+    /// Distinct parents per stage, in first-reference order.
+    parents: Vec<Vec<StageId>>,
+    /// Topological level per stage (roots = 0).
+    levels: Vec<usize>,
+}
+
+impl StageGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    pub fn stage(&self, id: StageId) -> &StageSpec {
+        &self.stages[id.0]
+    }
+
+    pub fn stages(&self) -> &[StageSpec] {
+        &self.stages
+    }
+
+    pub fn parents(&self, id: StageId) -> &[StageId] {
+        &self.parents[id.0]
+    }
+
+    pub fn level(&self, id: StageId) -> usize {
+        self.levels[id.0]
+    }
+
+    pub fn max_level(&self) -> usize {
+        self.levels.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn roots(&self) -> Vec<StageId> {
+        (0..self.len())
+            .map(StageId)
+            .filter(|s| self.parents[s.0].is_empty())
+            .collect()
+    }
+
+    /// Add a stage. Validates that every referenced stage exists (i.e. was
+    /// added earlier — forward references are how cycles would sneak in),
+    /// that it generates at least one token, and that roots carry a
+    /// non-empty literal prompt.
+    pub fn add(&mut self, spec: StageSpec) -> anyhow::Result<StageId> {
+        let id = StageId(self.stages.len());
+        anyhow::ensure!(spec.gen_len > 0, "stage `{}`: gen_len must be > 0", spec.name);
+        let mut parents: Vec<StageId> = Vec::new();
+        for r in spec
+            .parts
+            .iter()
+            .filter_map(Part::stage_ref)
+            .chain(spec.after.iter().copied())
+        {
+            anyhow::ensure!(
+                r.0 < id.0,
+                "stage `{}`: references stage #{} which is not defined yet \
+                 (stages may only depend on earlier stages)",
+                spec.name,
+                r.0
+            );
+            if !parents.contains(&r) {
+                parents.push(r);
+            }
+        }
+        // Every stage must compose a non-empty prompt. PromptOf/OutputOf
+        // parts are non-empty by induction (this same invariant on the
+        // parent, and gen_len > 0), so at least one such part — or one
+        // non-empty literal — suffices. This also covers non-root stages
+        // with only `after` edges, whose composed prompt would otherwise
+        // be empty and trip `Request::new`'s assertion at submit time.
+        let can_be_nonempty = spec.parts.iter().any(|p| match p {
+            Part::Tokens(t) => !t.is_empty(),
+            Part::PromptOf(_) | Part::OutputOf(_) => true,
+        });
+        anyhow::ensure!(
+            can_be_nonempty,
+            "stage `{}` composes an empty prompt (needs a non-empty literal \
+             or a parent part)",
+            spec.name
+        );
+        let level = parents
+            .iter()
+            .map(|p| self.levels[p.0] + 1)
+            .max()
+            .unwrap_or(0);
+        self.stages.push(spec);
+        self.parents.push(parents);
+        self.levels.push(level);
+        Ok(id)
+    }
+
+    // -- builder conveniences (panic on invalid input: these construct
+    //    well-formed shapes by design) ------------------------------------
+
+    /// A root stage with a literal prompt.
+    pub fn root(
+        &mut self,
+        name: &str,
+        target: ModelTarget,
+        prompt: Vec<u32>,
+        gen_len: u32,
+    ) -> StageId {
+        self.add(StageSpec {
+            name: name.to_string(),
+            target,
+            gen_len,
+            parts: vec![Part::Tokens(prompt)],
+            after: Vec::new(),
+            priority: false,
+        })
+        .expect("invalid root stage")
+    }
+
+    /// Extend `parent`'s conversation: parent's prompt + parent's output +
+    /// `suffix` (e.g. an adapter's invocation tokens).
+    pub fn chain(
+        &mut self,
+        name: &str,
+        target: ModelTarget,
+        parent: StageId,
+        suffix: Vec<u32>,
+        gen_len: u32,
+    ) -> StageId {
+        let mut parts = vec![Part::PromptOf(parent), Part::OutputOf(parent)];
+        if !suffix.is_empty() {
+            parts.push(Part::Tokens(suffix));
+        }
+        self.add(StageSpec {
+            name: name.to_string(),
+            target,
+            gen_len,
+            parts,
+            after: Vec::new(),
+            priority: false,
+        })
+        .expect("invalid chain stage")
+    }
+
+    /// Fan-in: extend `primary`'s conversation with the outputs of every
+    /// stage in `others` (paper §4.4.1's consolidated base call), plus an
+    /// optional literal suffix.
+    pub fn consolidate(
+        &mut self,
+        name: &str,
+        target: ModelTarget,
+        primary: StageId,
+        others: &[StageId],
+        suffix: Vec<u32>,
+        gen_len: u32,
+    ) -> StageId {
+        let mut parts = vec![Part::PromptOf(primary), Part::OutputOf(primary)];
+        parts.extend(others.iter().map(|&s| Part::OutputOf(s)));
+        if !suffix.is_empty() {
+            parts.push(Part::Tokens(suffix));
+        }
+        self.add(StageSpec {
+            name: name.to_string(),
+            target,
+            gen_len,
+            parts,
+            after: Vec::new(),
+            priority: false,
+        })
+        .expect("invalid consolidate stage")
+    }
+
+    /// Flip the priority flag of a stage (builder convenience).
+    pub fn set_priority(&mut self, id: StageId, priority: bool) {
+        self.stages[id.0].priority = priority;
+    }
+}
+
+/// Per-conversation runtime state: the frontier the coordinator tracks.
+#[derive(Debug)]
+struct Conv {
+    graph: StageGraph,
+    /// Composed prompt per stage, retained at submission only for stages
+    /// some child references via `Part::PromptOf` (long multi-conversation
+    /// runs would otherwise hold every stage's full token stream twice).
+    prompts: Vec<Option<Vec<u32>>>,
+    /// Whether any child needs this stage's composed prompt retained.
+    prompt_needed: Vec<bool>,
+    /// Finished output per stage, retained only for stages some child
+    /// references via `Part::OutputOf` (the completion stream in
+    /// `Coordinator::finished` keeps the canonical copy).
+    outputs: Vec<Option<RequestOutput>>,
+    /// Whether any child needs this stage's output retained.
+    output_needed: Vec<bool>,
+    submitted: Vec<bool>,
+    /// Finished flag per stage (outputs[] alone can't tell: un-referenced
+    /// stages don't retain their output).
+    done: Vec<bool>,
+    /// Countdown of unfinished distinct parents per stage.
+    pending_parents: Vec<usize>,
+    /// Reverse edges, in stage-add order.
+    children: Vec<Vec<StageId>>,
+    remaining: usize,
+}
+
+/// One finished stage, in completion order.
+#[derive(Debug, Clone)]
+pub struct StageOutput {
+    pub conversation: usize,
+    pub stage: StageId,
+    pub name: String,
+    pub target: ModelTarget,
+    pub output: RequestOutput,
+}
+
+/// All finished stages of a coordinator run.
+#[derive(Debug, Clone, Default)]
+pub struct CoordinatorResult {
+    /// Completion-ordered stage outputs.
+    pub outputs: Vec<StageOutput>,
+    /// Engine virtual time when the run completed.
+    pub makespan: f64,
+}
+
+impl CoordinatorResult {
+    pub fn len(&self) -> usize {
+        self.outputs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.outputs.is_empty()
+    }
+
+    /// Latency series over the stages `want` selects.
+    pub fn latencies(&self, want: impl Fn(&StageOutput) -> bool) -> StageLatencies {
+        let mut s = StageLatencies::default();
+        for o in &self.outputs {
+            if want(o) {
+                s.observe(&o.output);
+            }
+        }
+        s
+    }
+
+    /// Latency series of every stage with this name (across conversations).
+    pub fn latencies_of(&self, name: &str) -> StageLatencies {
+        self.latencies(|o| o.name == name)
+    }
+
+    /// Mean prefix-cache hit rate over the stages `want` selects.
+    pub fn hit_rate(&self, want: impl Fn(&StageOutput) -> bool) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for o in &self.outputs {
+            if want(o) {
+                sum += o.output.cache_hit_rate();
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    pub fn hit_rate_of(&self, name: &str) -> f64 {
+        self.hit_rate(|o| o.name == name)
+    }
+
+    /// Distinct stage names in first-completion order.
+    pub fn stage_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = Vec::new();
+        for o in &self.outputs {
+            if !names.contains(&o.name) {
+                names.push(o.name.clone());
+            }
+        }
+        names
+    }
+}
+
+/// Drives stage graphs over an engine. See the module docs for the two
+/// drive modes; the low-level API ([`Coordinator::submit_ready`],
+/// [`Coordinator::on_finished`], [`Coordinator::pump`]) lets external
+/// drivers — e.g. the HTTP server's handler threads — share an engine with
+/// other traffic while the coordinator chains their conversations.
+pub struct Coordinator {
+    convs: Vec<Conv>,
+    /// In-flight request -> (conversation, stage).
+    owner: FxHashMap<RequestId, (usize, StageId)>,
+    /// Completion-ordered finished stages.
+    finished: Vec<StageOutput>,
+    remaining_total: usize,
+    /// Whether submissions honor per-stage priority (event mode: yes;
+    /// lockstep mode: no, matching the paper's fixed-batch §4.2 runs).
+    honor_priority: bool,
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Coordinator {
+    pub fn new() -> Self {
+        Coordinator {
+            convs: Vec::new(),
+            owner: FxHashMap::default(),
+            finished: Vec::new(),
+            remaining_total: 0,
+            honor_priority: true,
+        }
+    }
+
+    /// Register a conversation; returns its index. Nothing is submitted
+    /// until [`Coordinator::submit_ready`] is called for it.
+    pub fn add_conversation(&mut self, graph: StageGraph) -> anyhow::Result<usize> {
+        anyhow::ensure!(!graph.is_empty(), "empty stage graph");
+        let n = graph.len();
+        let mut children: Vec<Vec<StageId>> = vec![Vec::new(); n];
+        let mut pending = vec![0usize; n];
+        let mut prompt_needed = vec![false; n];
+        let mut output_needed = vec![false; n];
+        for i in 0..n {
+            let ps = graph.parents(StageId(i)).to_vec();
+            pending[i] = ps.len();
+            for p in ps {
+                children[p.0].push(StageId(i));
+            }
+            for part in &graph.stages[i].parts {
+                match part {
+                    Part::PromptOf(r) => prompt_needed[r.0] = true,
+                    Part::OutputOf(r) => output_needed[r.0] = true,
+                    Part::Tokens(_) => {}
+                }
+            }
+        }
+        self.convs.push(Conv {
+            prompts: vec![None; n],
+            prompt_needed,
+            outputs: vec![None; n],
+            output_needed,
+            submitted: vec![false; n],
+            done: vec![false; n],
+            pending_parents: pending,
+            children,
+            remaining: n,
+            graph,
+        });
+        self.remaining_total += n;
+        Ok(self.convs.len() - 1)
+    }
+
+    pub fn conversation_count(&self) -> usize {
+        self.convs.len()
+    }
+
+    pub fn graph(&self, conversation: usize) -> &StageGraph {
+        &self.convs[conversation].graph
+    }
+
+    /// All stages retired so far across conversations.
+    pub fn finished_stages(&self) -> &[StageOutput] {
+        &self.finished
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.remaining_total == 0
+    }
+
+    /// Stages currently submitted but not finished.
+    pub fn in_flight(&self) -> usize {
+        self.owner.len()
+    }
+
+    /// Does the coordinator own this in-flight request?
+    pub fn owns(&self, id: RequestId) -> bool {
+        self.owner.contains_key(&id)
+    }
+
+    /// The request ids of every submitted-but-unfinished stage (for
+    /// external drivers that must hand leftovers back on abort).
+    pub fn in_flight_ids(&self) -> Vec<RequestId> {
+        self.owner.keys().copied().collect()
+    }
+
+    /// The frontier of one conversation: submitted-but-unfinished stages.
+    pub fn frontier(&self, conversation: usize) -> Vec<StageId> {
+        let conv = &self.convs[conversation];
+        (0..conv.graph.len())
+            .map(StageId)
+            .filter(|s| conv.submitted[s.0] && !conv.done[s.0])
+            .collect()
+    }
+
+    /// Compose a stage's prompt from its parts. Parents must have been
+    /// submitted (`PromptOf`) / finished (`OutputOf`) already.
+    fn compose(conv: &Conv, id: StageId) -> Vec<u32> {
+        let spec = &conv.graph.stages[id.0];
+        let mut p = Vec::new();
+        for part in &spec.parts {
+            match part {
+                Part::Tokens(t) => p.extend_from_slice(t),
+                Part::PromptOf(s) => p.extend_from_slice(
+                    conv.prompts[s.0].as_ref().expect("parent prompt not composed"),
+                ),
+                Part::OutputOf(s) => p.extend_from_slice(
+                    &conv.outputs[s.0].as_ref().expect("parent not finished").output_tokens,
+                ),
+            }
+        }
+        p
+    }
+
+    /// Submit one stage (parents must be done). The composed prompt is
+    /// retained for children's `PromptOf` parts.
+    fn submit_stage<E: Executor>(
+        &mut self,
+        engine: &mut Engine<E>,
+        ci: usize,
+        sid: StageId,
+    ) -> anyhow::Result<RequestId> {
+        let prompt = Self::compose(&self.convs[ci], sid);
+        let (target, gen_len, priority) = {
+            let s = &self.convs[ci].graph.stages[sid.0];
+            // Backstop for the graph-level invariant: an Err here reaches
+            // callers (e.g. a 400 from POST /pipeline), a panic inside
+            // `Engine::submit` would poison the server's engine mutex.
+            anyhow::ensure!(
+                !prompt.is_empty(),
+                "stage `{}` composed an empty prompt",
+                s.name
+            );
+            (s.target, s.gen_len, s.priority)
+        };
+        if self.convs[ci].prompt_needed[sid.0] {
+            self.convs[ci].prompts[sid.0] = Some(prompt.clone());
+        }
+        let id = engine.submit_with_priority(
+            target,
+            prompt,
+            SamplingParams { max_new_tokens: gen_len, ..Default::default() },
+            self.honor_priority && priority,
+        )?;
+        self.convs[ci].submitted[sid.0] = true;
+        self.owner.insert(id, (ci, sid));
+        Ok(id)
+    }
+
+    /// Submit every ready stage of a conversation (all parents finished,
+    /// not yet submitted). For a fresh conversation this starts its roots.
+    /// Returns the number of stages submitted.
+    pub fn submit_ready<E: Executor>(
+        &mut self,
+        engine: &mut Engine<E>,
+        conversation: usize,
+    ) -> anyhow::Result<usize> {
+        let ready: Vec<StageId> = {
+            let conv = &self.convs[conversation];
+            (0..conv.graph.len())
+                .map(StageId)
+                .filter(|s| !conv.submitted[s.0] && conv.pending_parents[s.0] == 0)
+                .collect()
+        };
+        for &s in &ready {
+            self.submit_stage(engine, conversation, s)?;
+        }
+        Ok(ready.len())
+    }
+
+    /// Record a finished stage: store its output, update the frontier and
+    /// the per-stage-name metrics series.
+    fn retire<E: Executor>(
+        &mut self,
+        engine: &mut Engine<E>,
+        out: RequestOutput,
+    ) -> anyhow::Result<(usize, StageId)> {
+        let (ci, sid) = self
+            .owner
+            .remove(&out.id)
+            .ok_or_else(|| anyhow::anyhow!("request {:?} is not coordinator-owned", out.id))?;
+        let (name, target) = {
+            let s = &self.convs[ci].graph.stages[sid.0];
+            (s.name.clone(), s.target)
+        };
+        engine.metrics.observe_stage(&name, &out);
+        let children = self.convs[ci].children[sid.0].clone();
+        for c in children {
+            self.convs[ci].pending_parents[c.0] -= 1;
+        }
+        if self.convs[ci].output_needed[sid.0] {
+            self.convs[ci].outputs[sid.0] = Some(out.clone());
+        }
+        self.convs[ci].done[sid.0] = true;
+        self.convs[ci].remaining -= 1;
+        self.remaining_total -= 1;
+        self.finished.push(StageOutput {
+            conversation: ci,
+            stage: sid,
+            name,
+            target,
+            output: out,
+        });
+        Ok((ci, sid))
+    }
+
+    /// Event-style completion intake: retire the stage and immediately
+    /// submit any children it unblocked — the chained request lands while
+    /// the parent's prefix blocks are still cache-hot.
+    pub fn on_finished<E: Executor>(
+        &mut self,
+        engine: &mut Engine<E>,
+        out: RequestOutput,
+    ) -> anyhow::Result<()> {
+        let (ci, sid) = self.retire(engine, out)?;
+        let ready: Vec<StageId> = {
+            let conv = &self.convs[ci];
+            conv.children[sid.0]
+                .iter()
+                .copied()
+                .filter(|c| conv.pending_parents[c.0] == 0 && !conv.submitted[c.0])
+                .collect()
+        };
+        for c in ready {
+            self.submit_stage(engine, ci, c)?;
+        }
+        Ok(())
+    }
+
+    /// Drain the engine's finished queue for coordinator-owned requests
+    /// (leaving other traffic's outputs in place) and chain follow-ups.
+    /// Returns the number of stages retired.
+    pub fn pump<E: Executor>(&mut self, engine: &mut Engine<E>) -> anyhow::Result<usize> {
+        let outs = {
+            let owner = &self.owner;
+            engine.take_finished_where(|o| owner.contains_key(&o.id))
+        };
+        let n = outs.len();
+        for out in outs {
+            self.on_finished(engine, out)?;
+        }
+        Ok(n)
+    }
+
+    /// Consume the coordinator into its result.
+    pub fn into_result(self, makespan: f64) -> CoordinatorResult {
+        CoordinatorResult { outputs: self.finished, makespan }
+    }
+
+    /// Event drive (paper §4.3 methodology): conversation `i` arrives at
+    /// virtual time `arrivals[i]`; stages chain the moment their parents
+    /// finish, honoring per-stage queue priority.
+    pub fn run_event<E: Executor>(
+        engine: &mut Engine<E>,
+        graphs: Vec<StageGraph>,
+        arrivals: &[f64],
+    ) -> anyhow::Result<CoordinatorResult> {
+        anyhow::ensure!(
+            graphs.len() == arrivals.len(),
+            "{} graphs but {} arrivals",
+            graphs.len(),
+            arrivals.len()
+        );
+        let mut co = Coordinator::new();
+        co.honor_priority = true;
+        for g in graphs {
+            co.add_conversation(g)?;
+        }
+        let mut order: Vec<usize> = (0..arrivals.len()).collect();
+        order.sort_by(|&a, &b| arrivals[a].partial_cmp(&arrivals[b]).expect("NaN arrival"));
+        let mut next = 0usize;
+        while !co.is_done() {
+            while next < order.len() && arrivals[order[next]] <= engine.clock() {
+                co.submit_ready(engine, order[next])?;
+                next += 1;
+            }
+            let progressed = engine.step();
+            co.pump(engine)?;
+            if !progressed {
+                if next < order.len() {
+                    let t = arrivals[order[next]].max(engine.clock());
+                    engine.advance_clock_to(t);
+                } else if !co.is_done() && !engine.has_work() {
+                    anyhow::bail!(
+                        "coordinator stalled: {} stages unfinished, engine idle",
+                        co.remaining_total
+                    );
+                }
+            }
+        }
+        Ok(co.into_result(engine.clock()))
+    }
+
+    /// Lockstep drive (paper §4.2 methodology): every conversation
+    /// advances one topological level per wave — all of level 0 submitted
+    /// and run to completion, then all of level 1, and so on. Priority
+    /// flags are ignored (the whole wave is one fixed batch).
+    pub fn run_lockstep<E: Executor>(
+        engine: &mut Engine<E>,
+        graphs: Vec<StageGraph>,
+    ) -> anyhow::Result<CoordinatorResult> {
+        let mut co = Coordinator::new();
+        co.honor_priority = false;
+        for g in graphs {
+            co.add_conversation(g)?;
+        }
+        let max_level = co.convs.iter().map(|c| c.graph.max_level()).max().unwrap_or(0);
+        for level in 0..=max_level {
+            let mut submitted_any = false;
+            for ci in 0..co.convs.len() {
+                let wave: Vec<StageId> = {
+                    let conv = &co.convs[ci];
+                    (0..conv.graph.len())
+                        .map(StageId)
+                        .filter(|s| conv.graph.level(*s) == level && !conv.submitted[s.0])
+                        .collect()
+                };
+                for s in wave {
+                    co.submit_stage(engine, ci, s)?;
+                    submitted_any = true;
+                }
+            }
+            if !submitted_any {
+                continue;
+            }
+            engine.run_until_idle();
+            let mut outs = {
+                let owner = &co.owner;
+                engine.take_finished_where(|o| owner.contains_key(&o.id))
+            };
+            // Record the wave in submission order (RequestIds are issued
+            // monotonically), matching the legacy stage-locked drivers.
+            outs.sort_by_key(|o| o.id);
+            for out in outs {
+                co.retire(engine, out)?;
+            }
+        }
+        anyhow::ensure!(
+            co.is_done(),
+            "lockstep run left {} stages unfinished",
+            co.remaining_total
+        );
+        Ok(co.into_result(engine.clock()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::AdapterId;
+    use crate::config::presets;
+    use crate::pipeline::workload;
+    use crate::simulator::SimExecutor;
+
+    fn engine(n_adapters: u32) -> Engine<SimExecutor> {
+        let cfg = presets::granite_8b();
+        let reg = workload::build_registry(n_adapters, cfg.model.vocab_size, true);
+        let exec = SimExecutor::new(&cfg);
+        Engine::with_registry(cfg, reg, exec)
+    }
+
+    fn fan_graph(prompt: Vec<u32>, vocab: u32, n_adapters: u32) -> StageGraph {
+        let mut g = StageGraph::new();
+        let draft = g.root("draft", ModelTarget::Base, prompt, 64);
+        let evals: Vec<StageId> = (0..n_adapters)
+            .map(|a| {
+                g.chain(
+                    &format!("eval-{a}"),
+                    ModelTarget::Adapter(AdapterId(a)),
+                    draft,
+                    workload::invocation_for(vocab, a),
+                    16,
+                )
+            })
+            .collect();
+        g.consolidate("consolidate", ModelTarget::Base, draft, &evals, Vec::new(), 16);
+        g
+    }
+
+    #[test]
+    fn graph_construction_and_levels() {
+        let mut g = StageGraph::new();
+        let a = g.root("a", ModelTarget::Base, vec![1, 2, 3], 4);
+        let b = g.chain("b", ModelTarget::Adapter(AdapterId(0)), a, vec![9], 4);
+        let c = g.chain("c", ModelTarget::Adapter(AdapterId(1)), a, vec![8], 4);
+        let d = g.consolidate("d", ModelTarget::Base, a, &[b, c], Vec::new(), 4);
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.level(a), 0);
+        assert_eq!(g.level(b), 1);
+        assert_eq!(g.level(c), 1);
+        assert_eq!(g.level(d), 2);
+        assert_eq!(g.max_level(), 2);
+        assert_eq!(g.roots(), vec![a]);
+        // `d` references `a` twice (PromptOf + OutputOf) but parents are
+        // deduplicated.
+        assert_eq!(g.parents(d), &[a, b, c]);
+    }
+
+    #[test]
+    fn graph_rejects_invalid_stages() {
+        let mut g = StageGraph::new();
+        // forward reference
+        assert!(g
+            .add(StageSpec {
+                name: "bad".into(),
+                target: ModelTarget::Base,
+                gen_len: 4,
+                parts: vec![Part::OutputOf(StageId(3))],
+                after: Vec::new(),
+                priority: false,
+            })
+            .is_err());
+        // empty root prompt
+        assert!(g
+            .add(StageSpec {
+                name: "empty".into(),
+                target: ModelTarget::Base,
+                gen_len: 4,
+                parts: vec![Part::Tokens(Vec::new())],
+                after: Vec::new(),
+                priority: false,
+            })
+            .is_err());
+        // zero generation
+        assert!(g
+            .add(StageSpec {
+                name: "zerogen".into(),
+                target: ModelTarget::Base,
+                gen_len: 0,
+                parts: vec![Part::Tokens(vec![1])],
+                after: Vec::new(),
+                priority: false,
+            })
+            .is_err());
+        assert!(g.is_empty());
+    }
+
+    #[test]
+    fn event_drive_runs_fan_out_fan_in() {
+        let mut e = engine(2);
+        let vocab = e.cfg.model.vocab_size;
+        let mut rng = crate::util::rng::Rng::new(3);
+        let graphs: Vec<StageGraph> = (0..3)
+            .map(|_| fan_graph(workload::prompt(&mut rng, 256, vocab), vocab, 2))
+            .collect();
+        let r = Coordinator::run_event(&mut e, graphs, &[0.0, 0.1, 0.2]).unwrap();
+        assert_eq!(r.outputs.len(), 12); // 3 conversations × 4 stages
+        assert_eq!(r.latencies_of("draft").count(), 3);
+        assert_eq!(r.latencies_of("consolidate").count(), 3);
+        // children never start before their parents finish
+        for o in &r.outputs {
+            if o.name == "consolidate" {
+                let draft = r
+                    .outputs
+                    .iter()
+                    .find(|p| p.conversation == o.conversation && p.name == "draft")
+                    .unwrap();
+                assert!(o.output.timeline.arrival >= draft.output.timeline.finished);
+            }
+        }
+        // non-root stages reuse parent KV
+        for name in ["eval-0", "eval-1", "consolidate"] {
+            assert!(r.hit_rate_of(name) > 0.0, "{name} got no cache hits");
+        }
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lockstep_and_event_complete_same_stages() {
+        let vocab = presets::granite_8b().model.vocab_size;
+        let build = || {
+            let mut rng = crate::util::rng::Rng::new(9);
+            (0..2)
+                .map(|_| fan_graph(workload::prompt(&mut rng, 128, vocab), vocab, 2))
+                .collect::<Vec<_>>()
+        };
+        let mut e1 = engine(2);
+        let lock = Coordinator::run_lockstep(&mut e1, build()).unwrap();
+        let mut e2 = engine(2);
+        let event = Coordinator::run_event(&mut e2, build(), &[0.0, 0.0]).unwrap();
+        assert_eq!(lock.outputs.len(), event.outputs.len());
+        let mut a = lock.stage_names();
+        let mut b = event.stage_names();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn per_stage_metrics_series_recorded() {
+        let mut e = engine(1);
+        let vocab = e.cfg.model.vocab_size;
+        let mut g = StageGraph::new();
+        let root = g.root("draft", ModelTarget::Base, vec![5; 128], 16);
+        g.chain(
+            "check",
+            ModelTarget::Adapter(AdapterId(0)),
+            root,
+            workload::invocation_for(vocab, 0),
+            8,
+        );
+        let r = Coordinator::run_event(&mut e, vec![g], &[0.0]).unwrap();
+        assert_eq!(r.outputs.len(), 2);
+        assert_eq!(e.metrics.stage.get("draft").map(|s| s.count()), Some(1));
+        assert_eq!(e.metrics.stage.get("check").map(|s| s.count()), Some(1));
+        let prom = e.metrics.render_prometheus();
+        assert!(prom.contains("stage=\"draft\""), "{prom}");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            let mut e = engine(2);
+            let vocab = e.cfg.model.vocab_size;
+            let mut rng = crate::util::rng::Rng::new(21);
+            let graphs: Vec<StageGraph> = (0..4)
+                .map(|_| fan_graph(workload::prompt(&mut rng, 200, vocab), vocab, 2))
+                .collect();
+            let r = Coordinator::run_event(&mut e, graphs, &[0.0, 0.5, 1.0, 1.5]).unwrap();
+            (r.outputs.len(), r.makespan)
+        };
+        assert_eq!(run(), run());
+    }
+}

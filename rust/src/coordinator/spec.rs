@@ -1,0 +1,265 @@
+//! Declarative JSON stage-graph specs — the wire format of the server's
+//! `POST /pipeline` endpoint (DESIGN.md §6.3).
+//!
+//! A spec is an object with a `stages` array; stages reference earlier
+//! stages *by name*:
+//!
+//! ```json
+//! {"stages": [
+//!   {"name": "draft", "gen": 64, "prompt": [[1,2,3,4]]},
+//!   {"name": "check", "adapter": "alora-0", "gen": 16, "invoke": true,
+//!    "prompt": [{"prompt_of": "draft"}, {"output_of": "draft"}]},
+//!   {"name": "final", "gen": 32,
+//!    "prompt": [{"prompt_of": "draft"}, {"output_of": "draft"},
+//!               {"output_of": "check"}]}
+//! ]}
+//! ```
+//!
+//! Prompt parts: a bare array of token ids (literal), `{"tokens": [...]}`
+//! (same), `{"prompt_of": name}`, `{"output_of": name}`. Optional stage
+//! fields: `adapter` (registry name or index; absent/null = base model),
+//! `gen`/`max_new_tokens` (default 16), `invoke` (append the adapter's
+//! registered invocation tokens), `after` (ordering-only deps by name),
+//! `priority` (queue-priority continuation).
+
+use crate::adapter::{AdapterId, AdapterRegistry};
+use crate::request::ModelTarget;
+use crate::util::json::Json;
+
+use super::{CoordinatorResult, Part, StageGraph, StageId, StageSpec};
+
+fn lookup(ids: &[(String, StageId)], name: &str) -> anyhow::Result<StageId> {
+    ids.iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, id)| *id)
+        .ok_or_else(|| anyhow::anyhow!("stage `{name}` referenced before definition"))
+}
+
+/// Parse a JSON stage-graph spec against an adapter registry.
+pub fn graph_from_json(j: &Json, registry: &AdapterRegistry) -> anyhow::Result<StageGraph> {
+    let stages = j
+        .get("stages")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("spec must have a `stages` array"))?;
+    anyhow::ensure!(!stages.is_empty(), "`stages` is empty");
+    let mut graph = StageGraph::new();
+    let mut ids: Vec<(String, StageId)> = Vec::new();
+    for (idx, sj) in stages.iter().enumerate() {
+        let name = sj
+            .get("name")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("stage{idx}"));
+        anyhow::ensure!(
+            ids.iter().all(|(n, _)| n != &name),
+            "duplicate stage name `{name}`"
+        );
+        let target = match sj.get("adapter") {
+            None | Some(Json::Null) => ModelTarget::Base,
+            Some(v) => {
+                let adapter = if let Some(s) = v.as_str() {
+                    registry
+                        .by_name(s)
+                        .ok_or_else(|| anyhow::anyhow!("unknown adapter `{s}`"))?
+                } else if let Some(i) = v.as_u64() {
+                    registry
+                        .get(AdapterId(i as u32))
+                        .ok_or_else(|| anyhow::anyhow!("unknown adapter index {i}"))?
+                } else {
+                    anyhow::bail!("stage `{name}`: `adapter` must be a name or index")
+                };
+                ModelTarget::Adapter(adapter.id)
+            }
+        };
+        let gen_len = sj
+            .get("gen")
+            .or_else(|| sj.get("max_new_tokens"))
+            .and_then(Json::as_u64)
+            .unwrap_or(16) as u32;
+        let mut parts = Vec::new();
+        if let Some(pj) = sj.get("prompt") {
+            let arr = pj
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("stage `{name}`: `prompt` must be an array of parts"))?;
+            for p in arr {
+                if let Some(tokens) = p.u32_vec() {
+                    parts.push(Part::Tokens(tokens));
+                } else if let Some(r) = p.get("prompt_of").and_then(Json::as_str) {
+                    parts.push(Part::PromptOf(lookup(&ids, r)?));
+                } else if let Some(r) = p.get("output_of").and_then(Json::as_str) {
+                    parts.push(Part::OutputOf(lookup(&ids, r)?));
+                } else if let Some(tokens) = p.get("tokens").and_then(Json::u32_vec) {
+                    parts.push(Part::Tokens(tokens));
+                } else {
+                    anyhow::bail!("stage `{name}`: unrecognized prompt part {p}");
+                }
+            }
+        }
+        if sj.get("invoke").and_then(Json::as_bool).unwrap_or(false) {
+            let ModelTarget::Adapter(aid) = target else {
+                anyhow::bail!("stage `{name}`: `invoke` requires an adapter target");
+            };
+            let inv = registry
+                .get(aid)
+                .and_then(|a| a.invocation_tokens())
+                .ok_or_else(|| {
+                    anyhow::anyhow!("stage `{name}`: adapter has no invocation tokens")
+                })?;
+            parts.push(Part::Tokens(inv.to_vec()));
+        }
+        let mut after = Vec::new();
+        if let Some(aj) = sj.get("after") {
+            let arr = aj
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("stage `{name}`: `after` must be an array"))?;
+            for a in arr {
+                let pname = a
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("stage `{name}`: `after` entries must be stage names"))?;
+                after.push(lookup(&ids, pname)?);
+            }
+        }
+        let priority = sj.get("priority").and_then(Json::as_bool).unwrap_or(false);
+        let id = graph
+            .add(StageSpec { name: name.clone(), target, gen_len, parts, after, priority })
+            .map_err(|e| anyhow::anyhow!("stage `{name}`: {e}"))?;
+        ids.push((name, id));
+    }
+    Ok(graph)
+}
+
+/// Render a coordinator run as the `POST /pipeline` response body.
+pub fn result_to_json(r: &CoordinatorResult) -> Json {
+    Json::obj(vec![
+        ("makespan_s", Json::num(r.makespan)),
+        (
+            "stages",
+            Json::Arr(
+                r.outputs
+                    .iter()
+                    .map(|o| {
+                        let out = &o.output;
+                        Json::obj(vec![
+                            ("name", Json::str(o.name.clone())),
+                            ("conversation", Json::num(o.conversation as f64)),
+                            (
+                                "tokens",
+                                Json::Arr(
+                                    out.output_tokens
+                                        .iter()
+                                        .map(|&t| Json::num(t as f64))
+                                        .collect(),
+                                ),
+                            ),
+                            ("prompt_len", Json::num(out.prompt_len as f64)),
+                            ("e2e_s", Json::num(out.timeline.e2e())),
+                            ("ttft_s", Json::num(out.timeline.ttft())),
+                            ("queue_s", Json::num(out.timeline.queue_time())),
+                            ("prefill_s", Json::num(out.timeline.prefill_time())),
+                            ("decode_s", Json::num(out.timeline.decode_time())),
+                            ("cache_hit_rate", Json::num(out.cache_hit_rate())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::workload;
+
+    fn registry() -> AdapterRegistry {
+        workload::build_registry(2, 512, true)
+    }
+
+    #[test]
+    fn parses_chain_with_invocation() {
+        let j = Json::parse(
+            r#"{"stages": [
+                {"name": "draft", "gen": 8, "prompt": [[1,2,3,4]]},
+                {"name": "check", "adapter": "alora-0", "gen": 4, "invoke": true,
+                 "prompt": [{"prompt_of": "draft"}, {"output_of": "draft"}],
+                 "priority": true}
+            ]}"#,
+        )
+        .unwrap();
+        let g = graph_from_json(&j, &registry()).unwrap();
+        assert_eq!(g.len(), 2);
+        assert_eq!(g.stage(StageId(0)).name, "draft");
+        assert_eq!(g.level(StageId(1)), 1);
+        assert!(g.stage(StageId(1)).priority);
+        // invoke appended the adapter-0 invocation tokens as a literal part
+        let last = g.stage(StageId(1)).parts.last().unwrap();
+        assert_eq!(last, &Part::Tokens(workload::invocation_for(512, 0)));
+    }
+
+    #[test]
+    fn adapter_by_index_and_after_edges() {
+        let j = Json::parse(
+            r#"{"stages": [
+                {"name": "a", "gen": 4, "prompt": [[7,8,9]]},
+                {"name": "b", "adapter": 1, "gen": 4,
+                 "prompt": [[1]], "after": ["a"]}
+            ]}"#,
+        )
+        .unwrap();
+        let g = graph_from_json(&j, &registry()).unwrap();
+        assert_eq!(g.parents(StageId(1)), &[StageId(0)]);
+        match g.stage(StageId(1)).target {
+            ModelTarget::Adapter(id) => assert_eq!(id.0, 1),
+            t => panic!("wrong target {t:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        let reg = registry();
+        for bad in [
+            r#"{"no_stages": true}"#,
+            r#"{"stages": []}"#,
+            r#"{"stages": [{"name": "x", "prompt": [[1]]},
+                           {"name": "x", "prompt": [[2]]}]}"#,
+            r#"{"stages": [{"name": "a", "prompt": [{"output_of": "ghost"}]}]}"#,
+            r#"{"stages": [{"name": "a", "adapter": "nope", "prompt": [[1]]}]}"#,
+            r#"{"stages": [{"name": "a", "prompt": [[1]], "invoke": true}]}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(graph_from_json(&j, &reg).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn result_renders_per_stage_fields() {
+        use crate::request::{RequestId, RequestOutput, Timeline};
+        let mut t = Timeline::new(0.0);
+        t.first_scheduled = 0.1;
+        t.first_token = 0.2;
+        t.finished = 0.5;
+        let r = CoordinatorResult {
+            outputs: vec![super::super::StageOutput {
+                conversation: 0,
+                stage: StageId(0),
+                name: "draft".into(),
+                target: ModelTarget::Base,
+                output: RequestOutput {
+                    id: RequestId(0),
+                    target: ModelTarget::Base,
+                    prompt_len: 4,
+                    output_tokens: vec![1, 2],
+                    timeline: t,
+                    num_cached_tokens: 2,
+                    preemptions: 0,
+                },
+            }],
+            makespan: 0.5,
+        };
+        let j = result_to_json(&r);
+        let stages = j.get("stages").and_then(Json::as_arr).unwrap();
+        assert_eq!(stages.len(), 1);
+        assert_eq!(stages[0].get("name").and_then(Json::as_str), Some("draft"));
+        assert_eq!(stages[0].get("cache_hit_rate").and_then(Json::as_f64), Some(0.5));
+    }
+}

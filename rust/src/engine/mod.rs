@@ -89,7 +89,7 @@ impl<E: Executor> Engine<E> {
             next_id: 0,
             metrics: Metrics::new(),
             finished: Vec::new(),
-        cfg,
+            cfg,
         }
     }
 
@@ -312,6 +312,32 @@ impl<E: Executor> Engine<E> {
     /// Drain finished request records (ownership transferred).
     pub fn take_finished(&mut self) -> Vec<RequestOutput> {
         std::mem::take(&mut self.finished)
+    }
+
+    /// Finished-but-undrained request count (completion-drain polling).
+    pub fn finished_pending(&self) -> usize {
+        self.finished.len()
+    }
+
+    /// Drain only the finished outputs `pred` selects, leaving the rest
+    /// queued for whoever owns them. This is the coordinator's completion
+    /// intake: it consumes its conversations' outputs without re-scanning
+    /// (or stealing) other traffic sharing the engine.
+    pub fn take_finished_where(
+        &mut self,
+        mut pred: impl FnMut(&RequestOutput) -> bool,
+    ) -> Vec<RequestOutput> {
+        let mut taken = Vec::new();
+        let mut kept = Vec::with_capacity(self.finished.len());
+        for out in std::mem::take(&mut self.finished) {
+            if pred(&out) {
+                taken.push(out);
+            } else {
+                kept.push(out);
+            }
+        }
+        self.finished = kept;
+        taken
     }
 
     /// Test hook: sweep KV-manager invariants; when idle, additionally

@@ -27,7 +27,8 @@ fn spec(gen: u32, n_adapters: usize) -> PipelineSpec {
         base_gen: gen,
         eval_gen: 16,
         adapters: (0..n_adapters as u32).map(AdapterId).collect(),
-        base2_gen: 16, priority_continuations: false,
+        base2_gen: 16,
+        priority_continuations: false,
     }
 }
 

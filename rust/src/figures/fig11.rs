@@ -20,7 +20,8 @@ pub fn run(quick: bool) -> Table {
         base_gen: 0,
         eval_gen: 256,
         adapters: vec![AdapterId(0)],
-        base2_gen: 16, priority_continuations: false,
+        base2_gen: 16,
+        priority_continuations: false,
     };
     let cfg = crate::config::presets::granite_8b();
     let batch = crate::pipeline::workload::batch_size_for(&cfg, spec_max.max_total_len());

@@ -24,6 +24,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 pub mod table1;
+pub mod table2;
 
 use crate::adapter::AdapterId;
 use crate::config::{presets, EngineConfig};
@@ -211,7 +212,7 @@ pub fn a0() -> AdapterId {
 
 /// Run every figure (CLI `figure --id all`); quick mode shrinks sweeps.
 pub fn run_all(quick: bool) -> Vec<Table> {
-    let mut out = vec![table1::run()];
+    let mut out = vec![table1::run(), table2::run()];
     out.extend(fig6::run(quick));
     out.push(fig7::run());
     out.push(fig8::run(quick));
@@ -229,6 +230,7 @@ pub fn run_by_id(id: &str, quick: bool) -> Vec<Table> {
     match id {
         "all" => run_all(quick),
         "table1" => vec![table1::run()],
+        "table2" => vec![table2::run()],
         "fig6" => fig6::run(quick),
         "fig7" => vec![fig7::run()],
         "fig8" => vec![fig8::run(quick)],

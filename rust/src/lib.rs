@@ -4,12 +4,13 @@
 //! Activated LoRA (aLoRA)** — a reproduction of Li et al. (CS.DC 2025)
 //! as a three-layer rust + JAX/Pallas stack:
 //!
-//! - **L3 (this crate)**: the serving coordinator — continuous-batching
+//! - **L3 (this crate)**: the serving layer — continuous-batching
 //!   scheduler with chunked prefill, PagedAttention-style block manager
 //!   with *base-aligned prefix caching* (the paper's contribution),
-//!   adapter registry, activation-aware mask metadata, metrics, pipeline
-//!   drivers, the H100 discrete-event simulator, and a PJRT runtime that
-//!   executes the AOT-compiled model.
+//!   adapter registry, activation-aware mask metadata, metrics, the
+//!   stage-graph [`coordinator`] orchestrating multi-adapter DAG
+//!   pipelines, the H100 discrete-event simulator, and a PJRT runtime
+//!   that executes the AOT-compiled model.
 //! - **L2**: `python/compile/model.py` — the JAX transformer `step`
 //!   function, lowered once to `artifacts/tiny_step.hlo.txt`.
 //! - **L1**: `python/compile/kernels/` — Pallas kernels for the fused
@@ -36,6 +37,7 @@
 
 pub mod adapter;
 pub mod config;
+pub mod coordinator;
 pub mod engine;
 pub mod figures;
 pub mod kvcache;

@@ -57,6 +57,9 @@ impl StageLatencies {
 
 pub const STAGES: &[&str] = &["e2e", "queue", "prefill", "decode", "ttft", "itl", "inference"];
 
+/// Cap on distinct per-stage-name series (see [`Metrics::observe_stage`]).
+pub const MAX_STAGE_SERIES: usize = 256;
+
 /// Engine-wide metrics registry.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -87,6 +90,9 @@ pub struct Metrics {
     /// Split by model target class for the paper's per-step analysis.
     pub base: StageLatencies,
     pub adapter: StageLatencies,
+    /// Per-stage-name series, fed by the coordinator as pipeline stages
+    /// retire — Table-2-style breakdowns fall out of any graph shape.
+    pub stage: BTreeMap<String, StageLatencies>,
 
     // histograms (Prometheus exposition)
     pub e2e_hist: LatencyHistogram,
@@ -108,6 +114,25 @@ impl Metrics {
         }
         self.e2e_hist.observe(out.timeline.e2e());
         self.ttft_hist.observe(out.timeline.ttft());
+    }
+
+    /// Record a finished request under a pipeline stage name (coordinator
+    /// completion intake; independent of `observe_finished`, which the
+    /// engine already applied). Stage names arrive from clients via
+    /// `POST /pipeline`, so cardinality is bounded: past
+    /// [`MAX_STAGE_SERIES`] distinct names, new ones fold into the
+    /// `__other` series instead of growing memory and /metrics forever.
+    pub fn observe_stage(&mut self, name: &str, out: &RequestOutput) {
+        if self.stage.len() >= MAX_STAGE_SERIES && !self.stage.contains_key(name) {
+            self.stage.entry("__other".to_string()).or_default().observe(out);
+            return;
+        }
+        self.stage.entry(name.to_string()).or_default().observe(out);
+    }
+
+    /// Latency series of one stage name, if any requests retired under it.
+    pub fn stage_latencies(&self, name: &str) -> Option<&StageLatencies> {
+        self.stage.get(name)
     }
 
     /// Prefix-cache hit rate over all admitted prefill tokens.
@@ -168,6 +193,49 @@ impl Metrics {
         gauge("num_requests_waiting", "Waiting requests", self.waiting_requests as f64);
         gauge("kv_blocks_free", "Free KV blocks", self.free_blocks as f64);
         gauge("prefix_cache_hit_rate", "Token hit rate", self.cache_hit_rate());
+
+        // Per-stage-name series (coordinator pipelines). Label values are
+        // sanitized so the exposition stays `name{labels} value`, and
+        // de-duplicated after sanitization — two raw names collapsing to
+        // one label would emit duplicate samples, which makes Prometheus
+        // reject the whole scrape.
+        if !self.stage.is_empty() {
+            let sanitize = |s: &str| -> String {
+                s.chars()
+                    .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+                    .collect()
+            };
+            let mut labeled: Vec<(String, &StageLatencies)> = Vec::new();
+            for (name, lat) in &self.stage {
+                let base = sanitize(name);
+                let mut label = base.clone();
+                let mut n = 2;
+                while labeled.iter().any(|(l, _)| *l == label) {
+                    label = format!("{base}_{n}");
+                    n += 1;
+                }
+                labeled.push((label, lat));
+            }
+            for (metric, pick, ty) in [
+                ("stage_requests_total", None, "counter"),
+                ("stage_e2e_seconds_mean", Some("e2e"), "gauge"),
+                ("stage_ttft_seconds_mean", Some("ttft"), "gauge"),
+                ("stage_queue_seconds_mean", Some("queue"), "gauge"),
+            ] {
+                s.push_str(&format!(
+                    "# HELP alora_serve_{metric} Per-pipeline-stage series\n# TYPE alora_serve_{metric} {ty}\n"
+                ));
+                for (label, lat) in &labeled {
+                    let v = match pick {
+                        None => lat.count() as f64,
+                        Some(which) => lat.mean(which),
+                    };
+                    s.push_str(&format!(
+                        "alora_serve_{metric}{{stage=\"{label}\"}} {v}\n"
+                    ));
+                }
+            }
+        }
 
         for (name, hist) in [("e2e_latency_seconds", &self.e2e_hist), ("ttft_seconds", &self.ttft_hist)]
         {
@@ -259,6 +327,27 @@ mod tests {
         assert!(text.contains("alora_serve_ttft_seconds_bucket{le=\"+Inf\"} 1"));
         assert!(text.contains("# TYPE alora_serve_e2e_latency_seconds histogram"));
         // every non-comment line is "name[{labels}] value"
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.split_whitespace().count() == 2, "bad line: {line}");
+        }
+    }
+
+    #[test]
+    fn per_stage_series_and_exposition() {
+        let mut m = Metrics::new();
+        m.observe_stage("draft", &out(0.0, 1.0, 2.0, 4.0, 3));
+        m.observe_stage("draft", &out(0.0, 1.0, 2.0, 6.0, 3));
+        m.observe_stage("eval 0?", &out(0.0, 0.5, 1.0, 2.0, 2));
+        m.observe_stage("eval_0_", &out(0.0, 0.5, 1.0, 2.0, 2));
+        assert_eq!(m.stage_latencies("draft").unwrap().count(), 2);
+        assert_eq!(m.stage_latencies("draft").unwrap().mean("e2e"), 5.0);
+        assert!(m.stage_latencies("missing").is_none());
+        let text = m.render_prometheus();
+        assert!(text.contains("alora_serve_stage_requests_total{stage=\"draft\"} 2"));
+        // label values are sanitized to keep the exposition well-formed,
+        // and post-sanitization collisions get a uniquifying suffix
+        assert!(text.contains("{stage=\"eval_0_\"}"), "{text}");
+        assert!(text.contains("{stage=\"eval_0__2\"}"), "{text}");
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             assert!(line.split_whitespace().count() == 2, "bad line: {line}");
         }

@@ -1,28 +1,36 @@
-//! Multi-turn, multi-adapter pipeline drivers (paper §4.1).
+//! Multi-turn, multi-adapter pipeline drivers (paper §4.1), now thin
+//! constructors over the stage-graph [`crate::coordinator`].
 //!
 //! The atomic pattern: query base model M₁ with prompt x → response y;
 //! query adapter(s) A_i with (x + y + invocation) → evaluation r; then in
-//! some trials feed (x + y + r…) back into M₁. Drivers come in two
-//! flavors:
+//! some trials feed (x + y + r…) back into M₁. The four paper shapes are
+//! kept as a closed [`PipelineKind`] enum for the figure harness, but each
+//! is now just a [`StageGraph`] built by [`PipelineSpec::stage_graph`] and
+//! driven by the coordinator:
 //!
-//! - [`run_sync`] — the synchronous trials (§4.2/§4.4): a batch of B
-//!   conversations advances stage-by-stage (all base calls, then all
-//!   adapter evals, then the second base call), matching the paper's
-//!   fixed-batch methodology.
-//! - [`run_poisson`] — the asynchronous trials (§4.3): conversations
-//!   arrive as a Poisson process; each conversation chains its follow-up
-//!   requests the moment the previous stage finishes.
+//! - [`run_sync`] — the synchronous trials (§4.2/§4.4) via
+//!   [`Coordinator::run_lockstep`]: a batch of B conversations advances
+//!   one topological level at a time (all base calls, then all adapter
+//!   evals, then the consolidation), matching the paper's fixed-batch
+//!   methodology.
+//! - [`run_poisson`] — the asynchronous trials (§4.3) via
+//!   [`Coordinator::run_event`]: conversations arrive as a Poisson
+//!   process; each follow-up stage is submitted the moment its parents
+//!   finish, while the parents' prefix blocks are still cache-hot.
 //!
 //! Both run against any [`Executor`] — simulator for the paper's scale,
-//! RealExecutor for the end-to-end example.
+//! RealExecutor for the end-to-end example. Arbitrary DAGs beyond the four
+//! shapes go straight to the coordinator (see
+//! `examples/multi_adapter_pipeline.rs` and `POST /pipeline`).
 
 pub mod trace;
 pub mod workload;
 
 use crate::adapter::AdapterId;
+use crate::coordinator::{Coordinator, CoordinatorResult, Part, StageGraph, StageSpec};
 use crate::engine::{Engine, Executor};
 use crate::metrics::StageLatencies;
-use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams};
+use crate::request::{ModelTarget, RequestOutput};
 use crate::util::rng::Rng;
 
 /// Which pipeline shape to run.
@@ -62,7 +70,8 @@ pub struct PipelineSpec {
     /// Submit conversation continuations (adapter evals, base2) with queue
     /// priority so their cached prefixes are harvested before eviction —
     /// pairs with SchedulerConfig::admission_watermark (paper §4.3 load
-    /// management; see figures::ablations::watermark_sweep).
+    /// management; see figures::ablations::watermark_sweep). Honored by
+    /// the event drive only (the sync trials are fixed batches).
     pub priority_continuations: bool,
 }
 
@@ -74,7 +83,8 @@ impl PipelineSpec {
             base_gen,
             eval_gen,
             adapters: vec![AdapterId(0)],
-            base2_gen: 16, priority_continuations: false,
+            base2_gen: 16,
+            priority_continuations: false,
         }
     }
 
@@ -90,6 +100,99 @@ impl PipelineSpec {
             + self.base_gen as usize
             + evals * (self.eval_gen as usize + inv)
             + self.base2_gen as usize
+    }
+
+    /// Build the stage graph for ONE conversation with literal prompt `x`
+    /// (paper §4.1 composition rules), plus the legacy [`Stage`] tag of
+    /// each node — `tags[stage_id.0]` labels the coordinator's outputs.
+    pub fn stage_graph(&self, prompt: Vec<u32>, vocab: u32) -> (StageGraph, Vec<Stage>) {
+        let inv = |aid: AdapterId| workload::invocation_for(vocab, aid.0);
+        let pc = self.priority_continuations;
+        let mut g = StageGraph::new();
+        let mut tags = Vec::new();
+        match self.kind {
+            PipelineKind::BaseAdapter | PipelineKind::BaseAdapterBase | PipelineKind::MultiAdapter => {
+                let b1 = g
+                    .add(StageSpec {
+                        name: "base1".into(),
+                        target: ModelTarget::Base,
+                        gen_len: self.base_gen,
+                        parts: vec![Part::Tokens(prompt)],
+                        after: Vec::new(),
+                        priority: false,
+                    })
+                    .expect("base1 stage");
+                tags.push(Stage::Base1);
+                let eval_adapters: &[AdapterId] = match self.kind {
+                    PipelineKind::MultiAdapter => &self.adapters,
+                    _ => &self.adapters[..1],
+                };
+                let mut evals = Vec::new();
+                for &aid in eval_adapters {
+                    let e = g
+                        .add(StageSpec {
+                            name: format!("eval-{}", aid.0),
+                            target: ModelTarget::Adapter(aid),
+                            gen_len: self.eval_gen,
+                            parts: vec![
+                                Part::PromptOf(b1),
+                                Part::OutputOf(b1),
+                                Part::Tokens(inv(aid)),
+                            ],
+                            after: Vec::new(),
+                            priority: pc,
+                        })
+                        .expect("eval stage");
+                    tags.push(Stage::Eval(aid));
+                    evals.push(e);
+                }
+                if self.kind != PipelineKind::BaseAdapter {
+                    // Consolidated second base call: x + y + all evaluations.
+                    let mut parts = vec![Part::PromptOf(b1), Part::OutputOf(b1)];
+                    parts.extend(evals.iter().map(|&e| Part::OutputOf(e)));
+                    g.add(StageSpec {
+                        name: "base2".into(),
+                        target: ModelTarget::Base,
+                        gen_len: self.base2_gen,
+                        parts,
+                        after: Vec::new(),
+                        priority: pc,
+                    })
+                    .expect("base2 stage");
+                    tags.push(Stage::Base2);
+                }
+            }
+            PipelineKind::AdapterBase => {
+                // Eval first over (x + invocation); base then consumes
+                // (x + r) — reuse direction adapter→base: the base call
+                // harvests the adapter's pre-activation prefill of x.
+                let aid = self.adapters[0];
+                let mut eval_prompt = prompt.clone();
+                eval_prompt.extend(inv(aid));
+                let e = g
+                    .add(StageSpec {
+                        name: format!("eval-{}", aid.0),
+                        target: ModelTarget::Adapter(aid),
+                        gen_len: self.eval_gen,
+                        parts: vec![Part::Tokens(eval_prompt)],
+                        after: Vec::new(),
+                        priority: pc,
+                    })
+                    .expect("eval stage");
+                tags.push(Stage::Eval(aid));
+                g.add(StageSpec {
+                    name: "base2".into(),
+                    target: ModelTarget::Base,
+                    gen_len: self.base2_gen,
+                    parts: vec![Part::Tokens(prompt), Part::OutputOf(e)],
+                    after: Vec::new(),
+                    priority: pc,
+                })
+                .expect("base2 stage");
+                tags.push(Stage::Base2);
+            }
+        }
+        (g, tags)
     }
 }
 
@@ -135,40 +238,41 @@ impl PipelineResult {
     }
 }
 
-/// Conversation state for the async driver.
-struct Conversation {
-    prompt: Vec<u32>,
-    /// Filled as stages complete.
-    base_output: Vec<u32>,
-    eval_outputs: Vec<(AdapterId, Vec<u32>)>,
-    pending_evals: usize,
-    in_flight: Vec<(RequestId, Stage)>,
-}
-
-/// Shared logic: build the eval prompt for adapter `aid` given the
-/// conversation so far (x + y + invocation sequence; paper appends the
-/// activation tokens in LoRA trials too, for fairness).
-fn eval_prompt(vocab: u32, prompt: &[u32], base_out: &[u32], aid: AdapterId) -> Vec<u32> {
-    let mut p = Vec::with_capacity(prompt.len() + base_out.len() + 4);
-    p.extend_from_slice(prompt);
-    p.extend_from_slice(base_out);
-    p.extend(workload::invocation_for(vocab, aid.0));
-    p
-}
-
-/// Consolidated second-base prompt: x + y + all evaluations.
-fn base2_prompt(prompt: &[u32], base_out: &[u32], evals: &[(AdapterId, Vec<u32>)]) -> Vec<u32> {
-    let mut p = Vec::with_capacity(prompt.len() + base_out.len() + 64);
-    p.extend_from_slice(prompt);
-    p.extend_from_slice(base_out);
-    for (_, r) in evals {
-        p.extend_from_slice(r);
+/// Build one graph per conversation, generating prompts from `rng` in
+/// submission order (prompt streams are bit-identical to the legacy
+/// drivers', keeping every figure reproducible).
+fn build_graphs(
+    spec: &PipelineSpec,
+    n: usize,
+    vocab: u32,
+    rng: &mut Rng,
+) -> (Vec<StageGraph>, Vec<Vec<Stage>>) {
+    let mut graphs = Vec::with_capacity(n);
+    let mut tags = Vec::with_capacity(n);
+    for _ in 0..n {
+        let prompt = workload::prompt(rng, spec.prompt_len, vocab);
+        let (g, t) = spec.stage_graph(prompt, vocab);
+        graphs.push(g);
+        tags.push(t);
     }
-    p
+    (graphs, tags)
+}
+
+/// Convert a coordinator run back into the legacy tagged result.
+fn to_pipeline_result(cr: CoordinatorResult, tags: &[Vec<Stage>]) -> PipelineResult {
+    PipelineResult {
+        outputs: cr
+            .outputs
+            .into_iter()
+            .map(|o| (tags[o.conversation][o.stage.0], o.output))
+            .collect(),
+        makespan: cr.makespan,
+    }
 }
 
 /// Synchronous stage-locked driver (paper §4.2 methodology): `batch`
-/// conversations advance one stage at a time.
+/// conversations advance one stage at a time through the coordinator's
+/// lockstep drive.
 pub fn run_sync<E: Executor>(
     engine: &mut Engine<E>,
     spec: &PipelineSpec,
@@ -177,121 +281,14 @@ pub fn run_sync<E: Executor>(
 ) -> PipelineResult {
     let vocab = engine.cfg.model.vocab_size;
     let mut rng = Rng::new(seed);
-    let mut result = PipelineResult::default();
-    let prompts: Vec<Vec<u32>> =
-        (0..batch).map(|_| workload::prompt(&mut rng, spec.prompt_len, vocab)).collect();
-
-    // Helper: submit a wave, run to completion, return outputs in order.
-    let wave = |engine: &mut Engine<E>,
-                    reqs: Vec<(Stage, ModelTarget, Vec<u32>, u32)>|
-     -> Vec<(Stage, RequestOutput)> {
-        let ids: Vec<(RequestId, Stage)> = reqs
-            .into_iter()
-            .map(|(stage, target, prompt, gen)| {
-                let id = engine
-                    .submit(
-                        target,
-                        prompt,
-                        SamplingParams { max_new_tokens: gen, ..Default::default() },
-                    )
-                    .expect("submit failed");
-                (id, stage)
-            })
-            .collect();
-        engine.run_until_idle();
-        let mut outs = engine.take_finished();
-        ids.iter()
-            .map(|(id, stage)| {
-                let pos = outs.iter().position(|o| o.id == *id).expect("missing output");
-                (*stage, outs.remove(pos))
-            })
-            .collect()
-    };
-
-    // -- stage 1: first base call (AdapterBase skips it) -------------------
-    let base_outs: Vec<Vec<u32>> = if spec.kind == PipelineKind::AdapterBase {
-        vec![Vec::new(); batch]
-    } else {
-        let outs = wave(
-            engine,
-            prompts
-                .iter()
-                .map(|p| (Stage::Base1, ModelTarget::Base, p.clone(), spec.base_gen))
-                .collect(),
-        );
-        let tokens = outs.iter().map(|(_, o)| o.output_tokens.clone()).collect();
-        result.outputs.extend(outs);
-        tokens
-    };
-
-    // -- stage 2: adapter evaluation(s) ------------------------------------
-    let eval_adapters: &[AdapterId] = match spec.kind {
-        PipelineKind::MultiAdapter => &spec.adapters,
-        _ => &spec.adapters[..1],
-    };
-    let mut eval_reqs = Vec::new();
-    for p_idx in 0..batch {
-        for &aid in eval_adapters {
-            eval_reqs.push((
-                Stage::Eval(aid),
-                ModelTarget::Adapter(aid),
-                eval_prompt(vocab, &prompts[p_idx], &base_outs[p_idx], aid),
-                spec.eval_gen,
-            ));
-        }
-    }
-    let eval_outs = wave(engine, eval_reqs);
-    // Group eval outputs back per conversation (in submit order).
-    let evals_per_conv = eval_adapters.len();
-    let eval_tokens: Vec<Vec<(AdapterId, Vec<u32>)>> = (0..batch)
-        .map(|c| {
-            (0..evals_per_conv)
-                .map(|e| {
-                    let (stage, out) = &eval_outs[c * evals_per_conv + e];
-                    let Stage::Eval(aid) = stage else { unreachable!() };
-                    (*aid, out.output_tokens.clone())
-                })
-                .collect()
-        })
-        .collect();
-    result.outputs.extend(eval_outs);
-
-    // -- stage 3: second base call ------------------------------------------
-    match spec.kind {
-        PipelineKind::AdapterBase => {
-            // base consumes (x + eval) — reuse direction adapter→base.
-            let reqs = (0..batch)
-                .map(|c| {
-                    let mut p = prompts[c].clone();
-                    p.extend(eval_tokens[c][0].1.iter());
-                    (Stage::Base2, ModelTarget::Base, p, spec.base2_gen)
-                })
-                .collect();
-            result.outputs.extend(wave(engine, reqs));
-        }
-        PipelineKind::BaseAdapterBase | PipelineKind::MultiAdapter => {
-            let reqs = (0..batch)
-                .map(|c| {
-                    (
-                        Stage::Base2,
-                        ModelTarget::Base,
-                        base2_prompt(&prompts[c], &base_outs[c], &eval_tokens[c]),
-                        spec.base2_gen,
-                    )
-                })
-                .collect();
-            result.outputs.extend(wave(engine, reqs));
-        }
-        PipelineKind::BaseAdapter => {}
-    }
-
-    result.makespan = engine.clock();
-    result
+    let (graphs, tags) = build_graphs(spec, batch, vocab, &mut rng);
+    let cr = Coordinator::run_lockstep(engine, graphs).expect("sync pipeline run");
+    to_pipeline_result(cr, &tags)
 }
 
 /// Asynchronous Poisson driver (paper §4.3): `n` conversations arrive at
-/// rate `lambda` (conversations/s); each chains base → eval(s) [→ base2]
-/// as stages complete.
+/// rate `lambda` (conversations/s); the coordinator chains each follow-up
+/// stage as its parents complete.
 pub fn run_poisson<E: Executor>(
     engine: &mut Engine<E>,
     spec: &PipelineSpec,
@@ -302,154 +299,16 @@ pub fn run_poisson<E: Executor>(
     let vocab = engine.cfg.model.vocab_size;
     let mut rng = Rng::new(seed);
     let arrivals = workload::poisson_arrivals(&mut rng, n, lambda);
-    let mut convs: Vec<Conversation> = (0..n)
-        .map(|_| Conversation {
-            prompt: workload::prompt(&mut rng, spec.prompt_len, vocab),
-            base_output: Vec::new(),
-            eval_outputs: Vec::new(),
-            pending_evals: 0,
-            in_flight: Vec::new(),
-        })
-        .collect();
-
-    let mut result = PipelineResult::default();
-    let mut next_arrival = 0usize;
-    let with_base1 = spec.kind != PipelineKind::AdapterBase;
-    let eval_adapters: Vec<AdapterId> = match spec.kind {
-        PipelineKind::MultiAdapter => spec.adapters.clone(),
-        _ => spec.adapters[..1].to_vec(),
-    };
-    let with_base2 = spec.kind != PipelineKind::BaseAdapter;
-    let mut done = 0usize;
-
-    // index: request -> conversation
-    let mut owner: std::collections::HashMap<RequestId, usize> = Default::default();
-
-    let submit_evals =
-        |engine: &mut Engine<E>,
-         convs: &mut [Conversation],
-         owner: &mut std::collections::HashMap<RequestId, usize>,
-         eval_adapters: &[AdapterId],
-         spec: &PipelineSpec,
-         c_idx: usize| {
-            for &aid in eval_adapters {
-                let p = eval_prompt(
-                    engine.cfg.model.vocab_size,
-                    &convs[c_idx].prompt,
-                    &convs[c_idx].base_output,
-                    aid,
-                );
-                let id = engine
-                    .submit_with_priority(
-                        ModelTarget::Adapter(aid),
-                        p,
-                        SamplingParams { max_new_tokens: spec.eval_gen, ..Default::default() },
-                        spec.priority_continuations,
-                    )
-                    .expect("submit eval");
-                convs[c_idx].in_flight.push((id, Stage::Eval(aid)));
-                convs[c_idx].pending_evals += 1;
-                owner.insert(id, c_idx);
-            }
-        };
-
-    while done < n {
-        // Feed arrivals that are due.
-        while next_arrival < n && arrivals[next_arrival] <= engine.clock() {
-            let c_idx = next_arrival;
-            next_arrival += 1;
-            if with_base1 {
-                let id = engine
-                    .submit(
-                        ModelTarget::Base,
-                        convs[c_idx].prompt.clone(),
-                        SamplingParams { max_new_tokens: spec.base_gen, ..Default::default() },
-                    )
-                    .expect("submit base");
-                convs[c_idx].in_flight.push((id, Stage::Base1));
-                owner.insert(id, c_idx);
-            } else {
-                submit_evals(engine, &mut convs, &mut owner, &eval_adapters, spec, c_idx);
-            }
-        }
-
-        let progressed = engine.step();
-
-        // Process completions → chain next stages.
-        for out in engine.take_finished() {
-            let c_idx = owner[&out.id];
-            let stage = convs[c_idx]
-                .in_flight
-                .iter()
-                .find(|(id, _)| *id == out.id)
-                .map(|(_, s)| *s)
-                .expect("untracked request");
-            convs[c_idx].in_flight.retain(|(id, _)| *id != out.id);
-            match stage {
-                Stage::Base1 => {
-                    convs[c_idx].base_output = out.output_tokens.clone();
-                    submit_evals(engine, &mut convs, &mut owner, &eval_adapters, spec, c_idx);
-                }
-                Stage::Eval(aid) => {
-                    convs[c_idx].eval_outputs.push((aid, out.output_tokens.clone()));
-                    convs[c_idx].pending_evals -= 1;
-                    if convs[c_idx].pending_evals == 0 {
-                        if with_base2 {
-                            let p = if spec.kind == PipelineKind::AdapterBase {
-                                let mut p = convs[c_idx].prompt.clone();
-                                p.extend(convs[c_idx].eval_outputs[0].1.iter());
-                                p
-                            } else {
-                                base2_prompt(
-                                    &convs[c_idx].prompt,
-                                    &convs[c_idx].base_output,
-                                    &convs[c_idx].eval_outputs,
-                                )
-                            };
-                            let id = engine
-                                .submit_with_priority(
-                                    ModelTarget::Base,
-                                    p,
-                                    SamplingParams {
-                                        max_new_tokens: spec.base2_gen,
-                                        ..Default::default()
-                                    },
-                                    spec.priority_continuations,
-                                )
-                                .expect("submit base2");
-                            convs[c_idx].in_flight.push((id, Stage::Base2));
-                            owner.insert(id, c_idx);
-                        } else {
-                            done += 1;
-                        }
-                    }
-                }
-                Stage::Base2 => {
-                    done += 1;
-                }
-            }
-            result.outputs.push((stage, out));
-        }
-
-        if !progressed {
-            if next_arrival < n {
-                // Idle until the next arrival.
-                let t = arrivals[next_arrival].max(engine.clock());
-                engine.advance_clock_to(t);
-            } else if done < n && !engine.has_work() {
-                panic!("async pipeline deadlock: {done}/{n} done, engine idle");
-            }
-        }
-    }
-
-    result.makespan = engine.clock();
-    result
+    let (graphs, tags) = build_graphs(spec, n, vocab, &mut rng);
+    let cr = Coordinator::run_event(engine, graphs, &arrivals).expect("async pipeline run");
+    to_pipeline_result(cr, &tags)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::presets;
+    use crate::coordinator::StageId;
     use crate::engine::Engine;
     use crate::simulator::SimExecutor;
 
@@ -502,7 +361,8 @@ mod tests {
             base_gen: 64,
             eval_gen: 16,
             adapters: vec![AdapterId(0)],
-            base2_gen: 32, priority_continuations: false,
+            base2_gen: 32,
+            priority_continuations: false,
         };
         let r = run_sync(&mut e, &spec, 2, 3);
         assert_eq!(r.outputs.iter().filter(|(s, _)| *s == Stage::Base1).count(), 2);
@@ -527,7 +387,8 @@ mod tests {
             base_gen: 64,
             eval_gen: 16,
             adapters: (0..5).map(AdapterId).collect(),
-            base2_gen: 16, priority_continuations: false,
+            base2_gen: 16,
+            priority_continuations: false,
         };
         let r = run_sync(&mut e, &spec, 2, 3);
         assert_eq!(r.eval_latencies().count(), 10); // 2 conv × 5 adapters
@@ -540,10 +401,11 @@ mod tests {
         let spec = PipelineSpec {
             kind: PipelineKind::AdapterBase,
             prompt_len: 512,
-            base_gen: 0, // unused
+            base_gen: 0, // unused: AdapterBase has no first base call
             eval_gen: 256,
             adapters: vec![AdapterId(0)],
-            base2_gen: 16, priority_continuations: false,
+            base2_gen: 16,
+            priority_continuations: false,
         };
         let r = run_sync(&mut e, &spec, 3, 11);
         // base2 reuses the adapter's pre-activation prefill
@@ -590,5 +452,92 @@ mod tests {
             r.makespan
         };
         assert_eq!(run(), run());
+    }
+
+    /// All four legacy kinds must produce the same stage structure as the
+    /// bespoke drivers did, now expressed as graphs: same node names,
+    /// targets and topological order.
+    #[test]
+    fn legacy_kinds_map_to_expected_graph_structure() {
+        let vocab = 49_155;
+        let mk = |kind, n_adapters: u32| PipelineSpec {
+            kind,
+            prompt_len: 64,
+            base_gen: 8,
+            eval_gen: 4,
+            adapters: (0..n_adapters).map(AdapterId).collect(),
+            base2_gen: 8,
+            priority_continuations: false,
+        };
+        let shape = |spec: &PipelineSpec| {
+            let (g, tags) = spec.stage_graph(vec![1; 64], vocab);
+            assert_eq!(g.len(), tags.len());
+            (0..g.len())
+                .map(|i| {
+                    let s = g.stage(StageId(i));
+                    (s.name.clone(), g.level(StageId(i)))
+                })
+                .collect::<Vec<_>>()
+        };
+
+        assert_eq!(
+            shape(&mk(PipelineKind::BaseAdapter, 1)),
+            vec![("base1".to_string(), 0), ("eval-0".to_string(), 1)]
+        );
+        assert_eq!(
+            shape(&mk(PipelineKind::AdapterBase, 1)),
+            vec![("eval-0".to_string(), 0), ("base2".to_string(), 1)]
+        );
+        assert_eq!(
+            shape(&mk(PipelineKind::BaseAdapterBase, 1)),
+            vec![
+                ("base1".to_string(), 0),
+                ("eval-0".to_string(), 1),
+                ("base2".to_string(), 2)
+            ]
+        );
+        assert_eq!(
+            shape(&mk(PipelineKind::MultiAdapter, 3)),
+            vec![
+                ("base1".to_string(), 0),
+                ("eval-0".to_string(), 1),
+                ("eval-1".to_string(), 1),
+                ("eval-2".to_string(), 1),
+                ("base2".to_string(), 2)
+            ]
+        );
+    }
+
+    /// The graphs compose exactly the prompts the legacy drivers built:
+    /// eval = x + y + invocation; consolidation = x + y + r₀..r_N.
+    #[test]
+    fn composed_prompts_match_legacy_composition() {
+        let mut e = engine(true, 2);
+        let vocab = e.cfg.model.vocab_size;
+        let spec = PipelineSpec {
+            kind: PipelineKind::MultiAdapter,
+            prompt_len: 128,
+            base_gen: 16,
+            eval_gen: 8,
+            adapters: vec![AdapterId(0), AdapterId(1)],
+            base2_gen: 8,
+            priority_continuations: false,
+        };
+        let r = run_sync(&mut e, &spec, 1, 5);
+        let base1 = &r.outputs.iter().find(|(s, _)| *s == Stage::Base1).unwrap().1;
+        let conv_len = base1.prompt_len + base1.output_tokens.len();
+        for (stage, out) in &r.outputs {
+            match stage {
+                Stage::Eval(_) => assert_eq!(
+                    out.prompt_len,
+                    conv_len + workload::INVOCATION_LEN as usize
+                ),
+                Stage::Base2 => assert_eq!(
+                    out.prompt_len,
+                    conv_len + 2 * spec.eval_gen as usize
+                ),
+                Stage::Base1 => {}
+            }
+        }
     }
 }

@@ -2,16 +2,27 @@
 //!
 //! The paper evaluates on synthetic workloads; production serving teams
 //! replay captured traces. This module gives the engine that capability:
-//! a trace is a JSON array of timed requests (arrival, target, prompt,
-//! generation length), replayable against any executor with the same
-//! virtual-time semantics as the Poisson driver. `synthesize` builds
-//! paper-shaped traces so the two paths share tooling.
+//! a trace is a JSON array of timed requests, replayable against any
+//! executor with the same virtual-time semantics as the Poisson driver.
+//!
+//! Traces are coordinator-aware (DESIGN.md §6.4): an entry may carry a
+//! `conversation` id, a `stage` name and `parents` links. Entries sharing
+//! a conversation id form one multi-stage [`StageGraph`] — a linked
+//! entry's `prompt` holds only its literal *suffix* (e.g. invocation
+//! tokens); replay composes the full prompt from its parents' streams and
+//! submits the stage when they finish, exactly like the live coordinator.
+//! Flat entries (no conversation id) replay as single-stage conversations
+//! at their recorded arrival times, so pre-existing traces are unchanged.
+//! `synthesize` builds paper-shaped flat traces; `synthesize_conversations`
+//! builds parent-linked multi-stage ones.
 
 use std::path::Path;
 
 use crate::adapter::AdapterId;
+use crate::coordinator::{Coordinator, CoordinatorResult, Part, StageGraph, StageId, StageSpec};
 use crate::engine::{Engine, Executor};
-use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams};
+use crate::request::{ModelTarget, RequestOutput};
+use crate::util::fxmap::FxHashMap;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -19,12 +30,39 @@ use super::workload;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceEntry {
-    /// Arrival time in seconds from trace start.
+    /// Arrival time in seconds from trace start. For parent-linked entries
+    /// this orders the entry within its conversation (replay drives it by
+    /// parent completion, not by the clock).
     pub at: f64,
     /// None = base model, Some(i) = adapter i.
     pub adapter: Option<u32>,
+    /// Literal prompt (flat entries / roots) or literal suffix appended
+    /// after the composed parent streams (linked entries).
     pub prompt: Vec<u32>,
     pub max_new_tokens: u32,
+    /// Entries sharing a conversation id form one stage graph.
+    pub conversation: Option<u64>,
+    /// Stage name within the conversation (parents reference it).
+    pub stage: Option<String>,
+    /// Parent stage names within the same conversation. The first parent
+    /// is primary: the stage's prompt = primary's prompt + primary's
+    /// output + other parents' outputs + `prompt` (suffix).
+    pub parents: Vec<String>,
+}
+
+impl TraceEntry {
+    /// A flat (single-stage) entry — the pre-coordinator trace shape.
+    pub fn flat(at: f64, adapter: Option<u32>, prompt: Vec<u32>, max_new_tokens: u32) -> Self {
+        TraceEntry {
+            at,
+            adapter,
+            prompt,
+            max_new_tokens,
+            conversation: None,
+            stage: None,
+            parents: Vec::new(),
+        }
+    }
 }
 
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -33,7 +71,9 @@ pub struct Trace {
 }
 
 impl Trace {
-    /// Entries must be sorted by arrival; enforced on load/build.
+    /// Entries must be sorted by arrival; enforced on load/build. The sort
+    /// is stable, so same-time entries keep their order — parent-linked
+    /// stages stay after their parents.
     pub fn new(mut entries: Vec<TraceEntry>) -> Self {
         entries.sort_by(|a, b| a.at.partial_cmp(&b.at).expect("NaN arrival"));
         Trace { entries }
@@ -65,23 +105,68 @@ impl Trace {
         let mut entries = Vec::with_capacity(n * 2);
         for (i, &at) in arrivals.iter().enumerate() {
             let prompt = workload::prompt(&mut rng, prompt_len, vocab);
-            entries.push(TraceEntry {
-                at,
-                adapter: None,
-                prompt: prompt.clone(),
-                max_new_tokens: base_gen,
-            });
+            entries.push(TraceEntry::flat(at, None, prompt.clone(), base_gen));
             // Adapter evaluation scheduled shortly after (replay drives it
             // by arrival time, not by completion — a recorded trace has
             // concrete timestamps).
             let adapter = (i % 3) as u32;
             let mut ev = prompt;
             ev.extend(workload::invocation_for(vocab, adapter));
+            entries.push(TraceEntry::flat(at + 0.5, Some(adapter), ev, eval_gen));
+        }
+        Trace::new(entries)
+    }
+
+    /// Parent-linked synthetic trace: `n` conversations arriving Poisson,
+    /// each a base1 → N adapter evals → consolidated base2 graph (the
+    /// §4.4.1 shape). Replay chains stages by completion.
+    #[allow(clippy::too_many_arguments)]
+    pub fn synthesize_conversations(
+        n: usize,
+        lambda: f64,
+        prompt_len: usize,
+        base_gen: u32,
+        eval_gen: u32,
+        base2_gen: u32,
+        n_adapters: u32,
+        vocab: u32,
+        seed: u64,
+    ) -> Trace {
+        let mut rng = Rng::new(seed);
+        let arrivals = workload::poisson_arrivals(&mut rng, n, lambda);
+        let mut entries = Vec::new();
+        for (i, &at) in arrivals.iter().enumerate() {
+            let cid = i as u64;
             entries.push(TraceEntry {
-                at: at + 0.5,
-                adapter: Some(adapter),
-                prompt: ev,
-                max_new_tokens: eval_gen,
+                at,
+                adapter: None,
+                prompt: workload::prompt(&mut rng, prompt_len, vocab),
+                max_new_tokens: base_gen,
+                conversation: Some(cid),
+                stage: Some("base1".into()),
+                parents: Vec::new(),
+            });
+            let mut base2_parents = vec!["base1".to_string()];
+            for a in 0..n_adapters {
+                entries.push(TraceEntry {
+                    at,
+                    adapter: Some(a),
+                    prompt: workload::invocation_for(vocab, a),
+                    max_new_tokens: eval_gen,
+                    conversation: Some(cid),
+                    stage: Some(format!("eval-{a}")),
+                    parents: vec!["base1".into()],
+                });
+                base2_parents.push(format!("eval-{a}"));
+            }
+            entries.push(TraceEntry {
+                at,
+                adapter: None,
+                prompt: Vec::new(),
+                max_new_tokens: base2_gen,
+                conversation: Some(cid),
+                stage: Some("base2".into()),
+                parents: base2_parents,
             });
         }
         Trace::new(entries)
@@ -94,7 +179,7 @@ impl Trace {
             self.entries
                 .iter()
                 .map(|e| {
-                    Json::obj(vec![
+                    let mut pairs = vec![
                         ("at", Json::num(e.at)),
                         (
                             "adapter",
@@ -108,7 +193,20 @@ impl Trace {
                             Json::Arr(e.prompt.iter().map(|&t| Json::num(t as f64)).collect()),
                         ),
                         ("max_new_tokens", Json::num(e.max_new_tokens as f64)),
-                    ])
+                    ];
+                    if let Some(cid) = e.conversation {
+                        pairs.push(("conversation", Json::num(cid as f64)));
+                    }
+                    if let Some(stage) = &e.stage {
+                        pairs.push(("stage", Json::str(stage.clone())));
+                    }
+                    if !e.parents.is_empty() {
+                        pairs.push((
+                            "parents",
+                            Json::Arr(e.parents.iter().map(|p| Json::str(p.clone())).collect()),
+                        ));
+                    }
+                    Json::obj(pairs)
                 })
                 .collect(),
         )
@@ -119,6 +217,19 @@ impl Trace {
         let entries = arr
             .iter()
             .map(|e| {
+                let parents = match e.get("parents") {
+                    None | Some(Json::Null) => Vec::new(),
+                    Some(v) => v
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("`parents` must be an array"))?
+                        .iter()
+                        .map(|p| {
+                            p.as_str()
+                                .map(str::to_string)
+                                .ok_or_else(|| anyhow::anyhow!("`parents` entries must be names"))
+                        })
+                        .collect::<anyhow::Result<Vec<_>>>()?,
+                };
                 Ok(TraceEntry {
                     at: e
                         .get("at")
@@ -140,6 +251,9 @@ impl Trace {
                         .get("max_new_tokens")
                         .and_then(Json::as_u64)
                         .unwrap_or(16) as u32,
+                    conversation: e.get("conversation").and_then(Json::as_u64),
+                    stage: e.get("stage").and_then(Json::as_str).map(str::to_string),
+                    parents,
                 })
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
@@ -156,41 +270,120 @@ impl Trace {
     }
 }
 
-/// Replay a trace against an engine in virtual time. Returns outputs in
-/// completion order.
-pub fn replay<E: Executor>(engine: &mut Engine<E>, trace: &Trace) -> Vec<RequestOutput> {
-    let mut outputs = Vec::with_capacity(trace.len());
-    let mut next = 0usize;
-    let mut submitted: Vec<RequestId> = Vec::new();
-    while outputs.len() < trace.len() {
-        while next < trace.entries.len() && trace.entries[next].at <= engine.clock() {
-            let e = &trace.entries[next];
-            next += 1;
-            let target = match e.adapter {
-                None => ModelTarget::Base,
-                Some(a) => ModelTarget::Adapter(AdapterId(a)),
-            };
-            let id = engine
-                .submit(
+/// Lower a trace to per-conversation stage graphs + arrival times (the
+/// coordinator's input). Flat entries become single-stage conversations;
+/// a linked conversation arrives at its first entry's timestamp.
+fn conversation_graphs(trace: &Trace) -> anyhow::Result<(Vec<StageGraph>, Vec<f64>)> {
+    let mut graphs: Vec<StageGraph> = Vec::new();
+    let mut arrivals: Vec<f64> = Vec::new();
+    // conversation id -> graph index (hashed: production traces can carry
+    // 100k+ conversations, a Vec scan here would be quadratic)
+    let mut conv_index: FxHashMap<u64, usize> = FxHashMap::default();
+    // per-graph resolved stage names (stages per conversation stay small)
+    let mut names: Vec<Vec<(String, StageId)>> = Vec::new();
+    for (idx, e) in trace.entries.iter().enumerate() {
+        let target = match e.adapter {
+            None => ModelTarget::Base,
+            Some(a) => ModelTarget::Adapter(AdapterId(a)),
+        };
+        match e.conversation {
+            None => {
+                anyhow::ensure!(
+                    e.parents.is_empty(),
+                    "entry {idx}: parent links require a conversation id"
+                );
+                let mut g = StageGraph::new();
+                g.add(StageSpec {
+                    name: e.stage.clone().unwrap_or_else(|| "request".to_string()),
                     target,
-                    e.prompt.clone(),
-                    SamplingParams { max_new_tokens: e.max_new_tokens, ..Default::default() },
-                )
-                .expect("trace submit");
-            submitted.push(id);
-        }
-        let progressed = engine.step();
-        outputs.extend(engine.take_finished());
-        if !progressed {
-            if next < trace.entries.len() {
-                let t = trace.entries[next].at.max(engine.clock());
-                engine.advance_clock_to(t);
-            } else if outputs.len() < trace.len() {
-                panic!("trace replay stalled at {}/{}", outputs.len(), trace.len());
+                    gen_len: e.max_new_tokens,
+                    parts: vec![Part::Tokens(e.prompt.clone())],
+                    after: Vec::new(),
+                    priority: false,
+                })
+                .map_err(|err| anyhow::anyhow!("entry {idx}: {err}"))?;
+                graphs.push(g);
+                arrivals.push(e.at);
+                names.push(Vec::new());
+            }
+            Some(cid) => {
+                let gi = match conv_index.get(&cid) {
+                    Some(gi) => *gi,
+                    None => {
+                        graphs.push(StageGraph::new());
+                        arrivals.push(e.at);
+                        names.push(Vec::new());
+                        let gi = graphs.len() - 1;
+                        conv_index.insert(cid, gi);
+                        gi
+                    }
+                };
+                let stage_name = e
+                    .stage
+                    .clone()
+                    .unwrap_or_else(|| format!("s{}", graphs[gi].len()));
+                // Parent links resolve by name; a silent first-match on a
+                // duplicate would wire the wrong DAG edge (the JSON spec
+                // path rejects duplicates the same way).
+                anyhow::ensure!(
+                    names[gi].iter().all(|(n, _)| n != &stage_name),
+                    "entry {idx}: duplicate stage name `{stage_name}` in conversation {cid}"
+                );
+                let mut parts: Vec<Part> = Vec::new();
+                for (k, pname) in e.parents.iter().enumerate() {
+                    let pid = names[gi]
+                        .iter()
+                        .find(|(n, _)| n == pname)
+                        .map(|(_, id)| *id)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "entry {idx}: parent `{pname}` not defined earlier in \
+                                 conversation {cid}"
+                            )
+                        })?;
+                    if k == 0 {
+                        parts.push(Part::PromptOf(pid));
+                    }
+                    parts.push(Part::OutputOf(pid));
+                }
+                if !e.prompt.is_empty() || parts.is_empty() {
+                    parts.push(Part::Tokens(e.prompt.clone()));
+                }
+                let id = graphs[gi]
+                    .add(StageSpec {
+                        name: stage_name.clone(),
+                        target,
+                        gen_len: e.max_new_tokens,
+                        parts,
+                        after: Vec::new(),
+                        priority: false,
+                    })
+                    .map_err(|err| anyhow::anyhow!("entry {idx}: {err}"))?;
+                names[gi].push((stage_name, id));
             }
         }
     }
-    outputs
+    Ok((graphs, arrivals))
+}
+
+/// Replay a trace against an engine in virtual time via the coordinator.
+/// Returns outputs in completion order (the legacy flat API).
+pub fn replay<E: Executor>(engine: &mut Engine<E>, trace: &Trace) -> Vec<RequestOutput> {
+    replay_stages(engine, trace)
+        .expect("trace replay")
+        .outputs
+        .into_iter()
+        .map(|s| s.output)
+        .collect()
+}
+
+/// Coordinator-aware replay: per-stage outputs and latencies.
+pub fn replay_stages<E: Executor>(
+    engine: &mut Engine<E>,
+    trace: &Trace,
+) -> anyhow::Result<CoordinatorResult> {
+    let (graphs, arrivals) = conversation_graphs(trace)?;
+    Coordinator::run_event(engine, graphs, &arrivals)
 }
 
 #[cfg(test)]
@@ -207,6 +400,17 @@ mod tests {
     }
 
     #[test]
+    fn json_roundtrip_with_parent_links() {
+        let t = Trace::synthesize_conversations(3, 2.0, 64, 16, 8, 16, 2, 49_155, 7);
+        let j = t.to_json();
+        let back = Trace::from_json(&j).unwrap();
+        assert_eq!(t, back);
+        // 3 conversations × (base1 + 2 evals + base2)
+        assert_eq!(t.len(), 12);
+        assert!(t.entries.iter().any(|e| !e.parents.is_empty()));
+    }
+
+    #[test]
     fn save_load_roundtrip() {
         let t = Trace::synthesize(3, 1.0, 32, 8, 4, 49_155, 9);
         let path = std::env::temp_dir().join("alora_trace_test.json");
@@ -219,8 +423,8 @@ mod tests {
     #[test]
     fn entries_sorted_on_construction() {
         let t = Trace::new(vec![
-            TraceEntry { at: 5.0, adapter: None, prompt: vec![1], max_new_tokens: 1 },
-            TraceEntry { at: 1.0, adapter: None, prompt: vec![2], max_new_tokens: 1 },
+            TraceEntry::flat(5.0, None, vec![1], 1),
+            TraceEntry::flat(1.0, None, vec![2], 1),
         ]);
         assert!(t.entries[0].at < t.entries[1].at);
     }
@@ -255,10 +459,60 @@ mod tests {
     }
 
     #[test]
+    fn linked_replay_chains_stages_by_completion() {
+        let trace = Trace::synthesize_conversations(4, 2.0, 256, 32, 8, 16, 2, 49_155, 17);
+        let mut e = make_engine("granite-8b", true, 2);
+        let r = replay_stages(&mut e, &trace).unwrap();
+        assert_eq!(r.outputs.len(), 16);
+        assert_eq!(r.latencies_of("base1").count(), 4);
+        assert_eq!(r.latencies_of("base2").count(), 4);
+        // chained stages reuse the conversation's KV
+        for name in ["eval-0", "eval-1", "base2"] {
+            assert!(r.hit_rate_of(name) > 0.5, "{name}: {}", r.hit_rate_of(name));
+        }
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
     fn malformed_trace_rejected() {
         let j = Json::parse(r#"[{"prompt": [1,2]}]"#).unwrap();
         assert!(Trace::from_json(&j).is_err());
         let j = Json::parse(r#"{"not": "an array"}"#).unwrap();
         assert!(Trace::from_json(&j).is_err());
+        // parent link without a conversation id
+        let t = Trace::new(vec![TraceEntry {
+            at: 0.0,
+            adapter: None,
+            prompt: vec![1],
+            max_new_tokens: 1,
+            conversation: None,
+            stage: None,
+            parents: vec!["ghost".into()],
+        }]);
+        let mut e = make_engine("granite-8b", true, 1);
+        assert!(replay_stages(&mut e, &t).is_err());
+        // unknown parent within a conversation
+        let t = Trace::new(vec![TraceEntry {
+            at: 0.0,
+            adapter: None,
+            prompt: vec![1],
+            max_new_tokens: 1,
+            conversation: Some(0),
+            stage: Some("x".into()),
+            parents: vec!["ghost".into()],
+        }]);
+        assert!(replay_stages(&mut e, &t).is_err());
+        // duplicate stage name within a conversation
+        let dup = |at| TraceEntry {
+            at,
+            adapter: None,
+            prompt: vec![1],
+            max_new_tokens: 1,
+            conversation: Some(0),
+            stage: Some("x".into()),
+            parents: Vec::new(),
+        };
+        let t = Trace::new(vec![dup(0.0), dup(0.1)]);
+        assert!(replay_stages(&mut e, &t).is_err());
     }
 }

@@ -94,12 +94,64 @@ impl KvBuf {
 }
 
 /// The loaded PJRT executable + metadata.
+///
+/// Compiled in two variants: with the `real-runtime` feature this wraps a
+/// real `xla` PJRT executable; without it (the offline default — the xla
+/// bindings are not on the offline mirror, DESIGN.md §7/§9) an
+/// API-compatible stub is built whose `load`/`step` return errors, so
+/// every caller (CLI `serve --real`, examples, integration tests) still
+/// compiles and skips/fails cleanly at runtime.
+#[cfg(feature = "real-runtime")]
 pub struct TinyModel {
     exe: xla::PjRtLoadedExecutable,
     pub manifest: Manifest,
     kv_dims: [i64; 4],
 }
 
+/// Offline stub (see the `real-runtime` variant above).
+#[cfg(not(feature = "real-runtime"))]
+pub struct TinyModel {
+    pub manifest: Manifest,
+}
+
+impl TinyModel {
+    /// Default artifact directory: `$ALORA_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("ALORA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn artifacts_present(dir: &Path) -> bool {
+        dir.join("tiny_step.hlo.txt").exists() && dir.join("manifest.json").exists()
+    }
+}
+
+#[cfg(not(feature = "real-runtime"))]
+impl TinyModel {
+    pub fn load(dir: &Path) -> Result<TinyModel> {
+        anyhow::bail!(
+            "real PJRT runtime unavailable: built without the `real-runtime` \
+             feature (requires the external `xla` crate; see DESIGN.md §9). \
+             Artifacts dir: {}",
+            dir.display()
+        )
+    }
+
+    pub fn step(
+        &self,
+        _tokens: &[u32],
+        _kv: &KvBuf,
+        _start: usize,
+        _length: usize,
+        _mask_pre: &[bool],
+        _adapter_onehot: &[f32],
+    ) -> Result<(Vec<f32>, KvBuf)> {
+        anyhow::bail!("real PJRT runtime unavailable (built without `real-runtime`)")
+    }
+}
+
+#[cfg(feature = "real-runtime")]
 impl TinyModel {
     /// Load artifacts from a directory.
     pub fn load(dir: &Path) -> Result<TinyModel> {
@@ -119,17 +171,6 @@ impl TinyModel {
             manifest.head_dim as i64,
         ];
         Ok(TinyModel { exe, manifest, kv_dims })
-    }
-
-    /// Default artifact directory: `$ALORA_ARTIFACTS` or `./artifacts`.
-    pub fn default_dir() -> PathBuf {
-        std::env::var_os("ALORA_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
-    }
-
-    pub fn artifacts_present(dir: &Path) -> bool {
-        dir.join("tiny_step.hlo.txt").exists() && dir.join("manifest.json").exists()
     }
 
     /// One forward step. See python/compile/model.py for the contract:

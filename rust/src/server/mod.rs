@@ -12,16 +12,29 @@
 //!                    "max_new_tokens": 16}
 //!     -> {"id": 0, "tokens": [...], "e2e_s": ..., "ttft_s": ...,
 //!         "cache_hit_rate": ...}
+//!   POST /pipeline  JSON stage-graph spec (coordinator::spec format:
+//!                   {"stages": [{"name", "adapter", "gen", "prompt",
+//!                   "invoke", "after", "priority"}, ...]})
+//!     -> {"makespan_s": ..., "stages": [{"name", "tokens", "e2e_s",
+//!         "ttft_s", "queue_s", "prefill_s", "decode_s",
+//!         "cache_hit_rate", ...}, ...]}
 //!   GET /metrics    Prometheus text exposition
 //!   GET /health     {"status": "ok"}
+//!
+//! /pipeline runs a whole multi-stage conversation DAG server-side: the
+//! handler submits root stages, and as the driver thread retires each
+//! stage the coordinator chains its children immediately — follow-ups hit
+//! the engine while their parents' prefix blocks are still cache-hot,
+//! concurrently with any /generate traffic sharing the engine.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
+use crate::coordinator::{spec, Coordinator};
 use crate::engine::{Engine, Executor};
 use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams};
 use crate::util::json::Json;
@@ -35,6 +48,10 @@ struct Shared<E: Executor> {
 struct EngineState<E: Executor> {
     engine: Engine<E>,
     done: HashMap<RequestId, RequestOutput>,
+    /// Requests abandoned by their handler (e.g. a timed-out /pipeline):
+    /// the driver drops their outputs instead of parking them in `done`
+    /// forever.
+    orphaned: HashSet<RequestId>,
 }
 
 /// A running server; `shutdown()` or drop stops the driver thread.
@@ -53,7 +70,11 @@ impl<E: Executor + Send + 'static> Server<E> {
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let shared = Arc::new(Shared {
-            engine: Mutex::new(EngineState { engine, done: HashMap::new() }),
+            engine: Mutex::new(EngineState {
+                engine,
+                done: HashMap::new(),
+                orphaned: HashSet::new(),
+            }),
             cv: Condvar::new(),
             stop: AtomicBool::new(false),
         });
@@ -69,7 +90,9 @@ impl<E: Executor + Send + 'static> Server<E> {
                 if st.engine.has_work() {
                     st.engine.step();
                     for out in st.engine.take_finished() {
-                        st.done.insert(out.id, out);
+                        if !st.orphaned.remove(&out.id) {
+                            st.done.insert(out.id, out);
+                        }
                     }
                     shared.cv.notify_all();
                     drop(st);
@@ -191,6 +214,13 @@ fn route<E: Executor>(
                 Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
             ),
         },
+        ("POST", "/pipeline") => match run_pipeline(body, shared) {
+            Ok(j) => ("200 OK", j.to_string()),
+            Err(e) => (
+                "400 Bad Request",
+                Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
+            ),
+        },
         _ => ("404 Not Found", r#"{"error":"not found"}"#.into()),
     }
 }
@@ -229,7 +259,10 @@ fn generate<E: Executor>(body: &[u8], shared: &Shared<E>) -> anyhow::Result<Json
         id
     };
 
-    // Block until the driver finishes our request.
+    // Block until the driver finishes our request. Absolute deadline: the
+    // condvar is woken on every driver step, so a per-wait timeout would
+    // reset forever under concurrent traffic.
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
     let mut st = shared.engine.lock().unwrap();
     loop {
         if let Some(out) = st.done.remove(&id) {
@@ -246,13 +279,81 @@ fn generate<E: Executor>(body: &[u8], shared: &Shared<E>) -> anyhow::Result<Json
                 ("preemptions", Json::num(out.preemptions as f64)),
             ]));
         }
-        let (guard, timeout) = shared
-            .cv
-            .wait_timeout(st, Duration::from_secs(60))
-            .unwrap();
-        st = guard;
-        if timeout.timed_out() {
+        let now = std::time::Instant::now();
+        if now >= deadline {
+            // Abandoning the request: let the driver drop its output
+            // instead of parking it in `done` forever.
+            st.orphaned.insert(id);
             anyhow::bail!("request {id:?} timed out");
+        }
+        let (guard, _) = shared.cv.wait_timeout(st, deadline - now).unwrap();
+        st = guard;
+    }
+}
+
+/// Drive one stage-graph conversation to completion over the shared
+/// engine. The driver thread does the stepping; this handler consumes its
+/// conversation's completions from `done` and lets the coordinator chain
+/// children the moment their parents retire.
+fn run_pipeline<E: Executor>(body: &[u8], shared: &Shared<E>) -> anyhow::Result<Json> {
+    let spec_json = Json::parse(std::str::from_utf8(body)?)?;
+    let mut st = shared.engine.lock().unwrap();
+    let graph = spec::graph_from_json(&spec_json, &st.engine.registry)?;
+    let n_stages = graph.len();
+    let mut co = Coordinator::new();
+    co.add_conversation(graph)?;
+    let t0 = st.engine.clock();
+    // Every failure past this point must fall through to the cleanup arm
+    // below (partially-submitted roots are already in flight), so no `?`.
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    let mut outcome = co.submit_ready(&mut st.engine, 0).map(|_| ());
+    shared.cv.notify_all();
+
+    while outcome.is_ok() && !co.is_done() {
+        let ready: Vec<RequestId> =
+            st.done.keys().copied().filter(|id| co.owns(*id)).collect();
+        if ready.is_empty() {
+            // Absolute deadline: the condvar is woken on every driver
+            // step, so a per-wait timeout would reset forever under
+            // concurrent traffic.
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                outcome = Err(anyhow::anyhow!(
+                    "pipeline timed out with {} of {n_stages} stages unfinished",
+                    co.in_flight()
+                ));
+                break;
+            }
+            let (guard, _) = shared.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+            continue;
+        }
+        for id in ready {
+            let out = st.done.remove(&id).expect("checked above");
+            if let Err(e) = co.on_finished(&mut st.engine, out) {
+                outcome = Err(e);
+                break;
+            }
+        }
+        // Children were just submitted — wake the driver.
+        shared.cv.notify_all();
+    }
+
+    match outcome {
+        Ok(()) => {
+            let makespan = st.engine.clock() - t0;
+            Ok(spec::result_to_json(&co.into_result(makespan)))
+        }
+        Err(e) => {
+            // Abandoning the conversation: drop anything of ours already
+            // in `done` and mark the still-running stages orphaned so the
+            // driver discards their outputs instead of leaking them.
+            for id in co.in_flight_ids() {
+                if st.done.remove(&id).is_none() {
+                    st.orphaned.insert(id);
+                }
+            }
+            Err(e)
         }
     }
 }
@@ -309,6 +410,60 @@ mod tests {
         );
         let r = http(srv.addr(), &req);
         assert!(r.contains("200 OK"), "{r}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn pipeline_endpoint_runs_stage_graph() {
+        let mut srv = start_sim_server();
+        let prompt: Vec<String> = (0..256).map(|t| (t % 4000).to_string()).collect();
+        let body = format!(
+            r#"{{"stages": [
+                {{"name": "draft", "gen": 32, "prompt": [[{p}]]}},
+                {{"name": "check", "adapter": "alora-0", "gen": 8, "invoke": true,
+                  "prompt": [{{"prompt_of": "draft"}}, {{"output_of": "draft"}}],
+                  "priority": true}},
+                {{"name": "final", "gen": 8,
+                  "prompt": [{{"prompt_of": "draft"}}, {{"output_of": "draft"}},
+                             {{"output_of": "check"}}]}}
+            ]}}"#,
+            p = prompt.join(",")
+        );
+        let req = format!(
+            "POST /pipeline HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let r = http(srv.addr(), &req);
+        assert!(r.contains("200 OK"), "{r}");
+        let j = Json::parse(r.lines().last().unwrap()).unwrap();
+        let stages = j.get("stages").and_then(Json::as_arr).unwrap();
+        assert_eq!(stages.len(), 3);
+        // downstream stages reuse upstream KV over HTTP too
+        for s in stages {
+            let name = s.get("name").and_then(Json::as_str).unwrap();
+            let hit = s.get("cache_hit_rate").and_then(Json::as_f64).unwrap();
+            if name != "draft" {
+                assert!(hit > 0.5, "{name}: hit {hit}");
+            }
+        }
+        assert!(j.get("makespan_s").and_then(Json::as_f64).unwrap() > 0.0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn pipeline_endpoint_rejects_bad_spec() {
+        let mut srv = start_sim_server();
+        for body in [
+            r#"{"stages": []}"#,
+            r#"{"stages": [{"name": "a", "prompt": [{"output_of": "ghost"}]}]}"#,
+        ] {
+            let req = format!(
+                "POST /pipeline HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            let r = http(srv.addr(), &req);
+            assert!(r.contains("400"), "{r}");
+        }
         srv.shutdown();
     }
 

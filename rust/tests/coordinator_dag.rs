@@ -1,0 +1,182 @@
+//! Integration: the stage-graph coordinator end to end — dependency
+//! ordering, cross-stage KV reuse over a fan-out/fan-in DAG, and
+//! coordinator-aware trace round-trips.
+
+use alora_serve::adapter::AdapterId;
+use alora_serve::coordinator::{Coordinator, StageGraph, StageId};
+use alora_serve::figures::make_engine;
+use alora_serve::pipeline::trace::{replay_stages, Trace};
+use alora_serve::pipeline::workload;
+use alora_serve::request::ModelTarget;
+use alora_serve::util::rng::Rng;
+
+/// draft (base) → {eval-0, eval-1} (adapters, fan-out) → consolidate
+/// (base, fan-in).
+fn fan_graph(prompt: Vec<u32>, vocab: u32) -> StageGraph {
+    let mut g = StageGraph::new();
+    let draft = g.root("draft", ModelTarget::Base, prompt, 64);
+    let e0 = g.chain(
+        "eval-0",
+        ModelTarget::Adapter(AdapterId(0)),
+        draft,
+        workload::invocation_for(vocab, 0),
+        16,
+    );
+    let e1 = g.chain(
+        "eval-1",
+        ModelTarget::Adapter(AdapterId(1)),
+        draft,
+        workload::invocation_for(vocab, 1),
+        16,
+    );
+    g.consolidate("consolidate", ModelTarget::Base, draft, &[e0, e1], Vec::new(), 32);
+    g
+}
+
+fn find<'a>(
+    r: &'a alora_serve::coordinator::CoordinatorResult,
+    conv: usize,
+    name: &str,
+) -> &'a alora_serve::coordinator::StageOutput {
+    r.outputs
+        .iter()
+        .find(|o| o.conversation == conv && o.name == name)
+        .unwrap_or_else(|| panic!("missing stage {name} of conversation {conv}"))
+}
+
+#[test]
+fn dag_respects_dependency_order() {
+    let mut e = make_engine("granite-8b", true, 2);
+    let vocab = e.cfg.model.vocab_size;
+    let mut rng = Rng::new(7);
+    let graphs: Vec<StageGraph> = (0..4)
+        .map(|_| fan_graph(workload::prompt(&mut rng, 512, vocab), vocab))
+        .collect();
+    let r = Coordinator::run_event(&mut e, graphs, &[0.0, 0.2, 0.4, 0.6]).unwrap();
+    assert_eq!(r.outputs.len(), 16); // 4 conversations × 4 stages
+
+    for conv in 0..4 {
+        let draft = find(&r, conv, "draft");
+        let consolidate = find(&r, conv, "consolidate");
+        for eval in ["eval-0", "eval-1"] {
+            let ev = find(&r, conv, eval);
+            // evals are submitted only once the draft finished...
+            assert!(
+                ev.output.timeline.arrival >= draft.output.timeline.finished,
+                "conv {conv}: {eval} started before draft finished"
+            );
+            // ...and the consolidation only once both evals finished.
+            assert!(
+                consolidate.output.timeline.arrival >= ev.output.timeline.finished,
+                "conv {conv}: consolidate started before {eval} finished"
+            );
+        }
+        // timelines are internally monotone
+        for o in r.outputs.iter().filter(|o| o.conversation == conv) {
+            let t = &o.output.timeline;
+            assert!(
+                t.arrival <= t.first_scheduled
+                    && t.first_scheduled <= t.first_token
+                    && t.first_token <= t.finished,
+                "conv {conv} {}: non-monotone timeline {t:?}",
+                o.name
+            );
+        }
+    }
+    e.check_invariants().unwrap();
+}
+
+#[test]
+fn downstream_stages_hit_parent_kv() {
+    let mut e = make_engine("granite-8b", true, 2);
+    let vocab = e.cfg.model.vocab_size;
+    let mut rng = Rng::new(13);
+    let graphs: Vec<StageGraph> = (0..4)
+        .map(|_| fan_graph(workload::prompt(&mut rng, 1024, vocab), vocab))
+        .collect();
+    let r = Coordinator::run_event(&mut e, graphs, &[0.0; 4]).unwrap();
+    // every non-root stage of every conversation reuses its parents' KV
+    for o in &r.outputs {
+        if o.name != "draft" {
+            assert!(
+                o.output.cache_hit_rate() > 0.0,
+                "conv {} stage {}: no prefix-cache hits",
+                o.conversation,
+                o.name
+            );
+        }
+    }
+    // and substantially so, on average
+    for name in ["eval-0", "eval-1", "consolidate"] {
+        assert!(r.hit_rate_of(name) > 0.5, "{name}: {}", r.hit_rate_of(name));
+    }
+    // per-stage-name series landed in the engine metrics
+    for name in ["draft", "eval-0", "eval-1", "consolidate"] {
+        assert_eq!(e.metrics.stage_latencies(name).map(|s| s.count()), Some(4), "{name}");
+    }
+    // the LoRA baseline gets no cross-model reuse at the eval stages
+    let mut el = make_engine("granite-8b", false, 2);
+    let mut rng = Rng::new(13);
+    let graphs: Vec<StageGraph> = (0..4)
+        .map(|_| fan_graph(workload::prompt(&mut rng, 1024, vocab), vocab))
+        .collect();
+    let rl = Coordinator::run_event(&mut el, graphs, &[0.0; 4]).unwrap();
+    assert_eq!(rl.hit_rate_of("eval-0"), 0.0);
+    assert_eq!(rl.hit_rate_of("eval-1"), 0.0);
+}
+
+#[test]
+fn trace_roundtrip_reproduces_per_stage_latencies() {
+    let vocab = 49_155;
+    let trace = Trace::synthesize_conversations(6, 4.0, 256, 32, 8, 16, 2, vocab, 11);
+
+    // Run the original trace.
+    let run = |t: &Trace| {
+        let mut e = make_engine("granite-8b", true, 2);
+        let r = replay_stages(&mut e, t).unwrap();
+        let mut stats: Vec<(String, usize, f64, f64)> = r
+            .stage_names()
+            .into_iter()
+            .map(|n| {
+                let lat = r.latencies_of(&n);
+                (n.clone(), lat.count(), lat.mean("e2e"), r.hit_rate_of(&n))
+            })
+            .collect();
+        stats.sort_by(|a, b| a.0.cmp(&b.0));
+        (stats, r.makespan)
+    };
+    let (orig_stats, orig_makespan) = run(&trace);
+    assert_eq!(orig_stats.len(), 4); // base1, base2, eval-0, eval-1
+    for (name, count, _, _) in &orig_stats {
+        assert_eq!(*count, 6, "{name}");
+    }
+
+    // save → load: identical trace...
+    let path = std::env::temp_dir().join("alora_coordinator_trace_test.json");
+    trace.save(&path).unwrap();
+    let loaded = Trace::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(trace, loaded);
+
+    // ...and replaying it reproduces the per-stage latencies exactly
+    // (virtual time is deterministic).
+    let (replayed_stats, replayed_makespan) = run(&loaded);
+    assert_eq!(orig_stats, replayed_stats);
+    assert_eq!(orig_makespan, replayed_makespan);
+
+    // chained stages rehydrate their parents' KV after the round trip too
+    for (name, _, _, hit) in &replayed_stats {
+        if name != "base1" {
+            assert!(*hit > 0.0, "{name}: no hits after round trip");
+        }
+    }
+}
+
+#[test]
+fn four_stage_ids_and_levels_are_exposed() {
+    let g = fan_graph(vec![1; 64], 49_155);
+    assert_eq!(g.len(), 4);
+    assert_eq!(g.max_level(), 2);
+    assert_eq!(g.roots(), vec![StageId(0)]);
+    assert_eq!(g.parents(StageId(3)), &[StageId(0), StageId(1), StageId(2)]);
+}

@@ -20,7 +20,8 @@ fn all_pipeline_kinds_complete_and_conserve_blocks() {
             base_gen: 64,
             eval_gen: 16,
             adapters: (0..n_adapters).map(AdapterId).collect(),
-            base2_gen: 16, priority_continuations: false,
+            base2_gen: 16,
+            priority_continuations: false,
         };
         let mut e = make_engine("granite-8b", true, n_adapters);
         let r = run_sync(&mut e, &spec, 3, 9);
@@ -82,7 +83,8 @@ fn alora_advantage_holds_in_every_pipeline_kind() {
             base_gen: 128,
             eval_gen: 16,
             adapters: (0..n_adapters).map(AdapterId).collect(),
-            base2_gen: 16, priority_continuations: false,
+            base2_gen: 16,
+            priority_continuations: false,
         };
         let mut ea = make_engine("granite-8b", true, n_adapters);
         let ra = run_sync(&mut ea, &spec, 4, 7);
