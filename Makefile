@@ -1,10 +1,12 @@
 # Tier-1 gate (mirrors .github/workflows/ci.yml): make check
-# fmt is advisory in both (leading `-`) until a toolchain-run `make fmt`
-# lands — the repo was authored offline without rustfmt; see CHANGES.md.
-.PHONY: check build test fmt fmt-check bench artifacts
+# fmt + clippy are advisory in both (leading `-`) until a toolchain-run
+# `make fmt` / clippy pass lands — the repo was authored offline without
+# rustfmt/clippy; see ROADMAP.md "Lint debt".
+.PHONY: check build test fmt fmt-check clippy bench artifacts
 
 check: build test
 	-cargo fmt --check
+	-cargo clippy --all-targets -- -D warnings
 
 build:
 	cargo build --release
@@ -17,6 +19,9 @@ fmt:
 
 fmt-check:
 	cargo fmt --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
 
 # Hot-path microbenches (coordinator dispatch, hashing, scheduler, ...)
 bench:

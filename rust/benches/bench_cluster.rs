@@ -1,0 +1,41 @@
+//! Cluster scaling bench: the fleet-level Figure-9 table at full size,
+//! plus routing-decision microbenches (the per-request cost the router
+//! adds to the submit path).
+
+use alora_serve::cluster::router::{ReplicaView, RoutePolicy, Router, RouterConfig};
+use alora_serve::figures;
+use alora_serve::kvcache::prefix::{block_hashes, HashContext};
+use alora_serve::kvcache::summary::HashSummary;
+use alora_serve::util::bench::{bench, black_box, section};
+use alora_serve::util::rng::Rng;
+
+fn main() {
+    section("cluster scaling (full grid)");
+    let t = figures::cluster_scaling::run(false);
+    t.print();
+
+    section("routing decision microbenches");
+    let mut rng = Rng::new(11);
+    let tokens = rng.tokens(4096, 49_155, 64);
+    let chain = block_hashes(&tokens, 16, &HashContext::base());
+    let mut summary = HashSummary::new();
+    for h in &chain {
+        summary.insert(*h);
+    }
+    println!("{}", bench("hash chain for routing, 4k tokens", || {
+        black_box(block_hashes(&tokens, 16, &HashContext::base()))
+    }));
+    println!("{}", bench("summary matching_prefix, 256-block hit", || {
+        black_box(summary.matching_prefix(&chain))
+    }));
+    let views: Vec<ReplicaView> = (0..8)
+        .map(|i| ReplicaView { load: i, affinity_blocks: 256 - i })
+        .collect();
+    let mut router = Router::new(
+        RouterConfig { policy: RoutePolicy::PrefixAffinity, ..Default::default() },
+        views.len(),
+    );
+    println!("{}", bench("router choose, 8 replicas, warm", || {
+        black_box(router.choose(&views).replica)
+    }));
+}

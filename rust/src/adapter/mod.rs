@@ -137,6 +137,39 @@ impl AdapterRegistry {
         Some(Activation::EndOfPrompt)
     }
 
+    /// Derive a request's activation start and salting context exactly as
+    /// submission does (activation scan + salting policy): base requests
+    /// carry only the tenant salt, adapter requests locate their
+    /// activation point first. Returns None for an unknown adapter. The
+    /// single source of truth shared by `Engine::submit_salted` and the
+    /// cluster router — the router's affinity chain must be byte-identical
+    /// to the chain admission will present.
+    pub fn request_hash_context(
+        &self,
+        adapter: Option<AdapterId>,
+        prompt: &[u32],
+        base_aligned: bool,
+        cache_salt: u64,
+    ) -> Option<(usize, HashContext)> {
+        match adapter {
+            None => Some((prompt.len(), HashContext { cache_salt, ..HashContext::base() })),
+            Some(aid) => {
+                let a = self.get(aid)?;
+                // aLoRA identification (paper Figure 5): locate the
+                // activation point; LoRA adapts everything (activation at
+                // 0); base adapts nothing (activation at prompt end).
+                let start = match self.find_activation(aid, prompt) {
+                    Some(act) => act.start(prompt.len()),
+                    None => {
+                        debug_assert!(!a.is_alora());
+                        0 // standard LoRA: adapted from the first token
+                    }
+                };
+                Some((start, self.hash_context(Some(aid), start, base_aligned, cache_salt)))
+            }
+        }
+    }
+
     /// Build the hash-chain salting context for a request (None adapter =
     /// base model). `base_aligned` is the engine feature flag.
     pub fn hash_context(
@@ -236,6 +269,32 @@ mod tests {
             r.get(AdapterId(2)).unwrap().invocation_tokens().unwrap(),
             &[500, 501, 502, 503]
         );
+    }
+
+    #[test]
+    fn request_hash_context_mirrors_submission() {
+        let r = reg();
+        // Base: activation at prompt end, salt carried through.
+        let (start, ctx) = r.request_hash_context(None, &[1, 2, 3], true, 9).unwrap();
+        assert_eq!(start, 3);
+        assert_eq!(ctx.adapter_id, None);
+        assert_eq!(ctx.cache_salt, 9);
+        // aLoRA: activation located in the prompt.
+        let prompt = [1, 2, 100, 101, 102, 7];
+        let (start, ctx) = r
+            .request_hash_context(Some(AdapterId(1)), &prompt, true, 0)
+            .unwrap();
+        assert_eq!(start, 2);
+        assert!(ctx.is_alora);
+        assert_eq!(ctx.inv_start, 2);
+        // LoRA: adapted from the first token.
+        let (start, ctx) = r
+            .request_hash_context(Some(AdapterId(0)), &prompt, true, 0)
+            .unwrap();
+        assert_eq!(start, 0);
+        assert!(!ctx.is_alora);
+        // Unknown adapter: None, not a panic.
+        assert!(r.request_hash_context(Some(AdapterId(7)), &prompt, true, 0).is_none());
     }
 
     #[test]

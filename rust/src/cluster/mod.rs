@@ -1,0 +1,583 @@
+//! Horizontal scale-out: N engine replicas behind a cache-affinity router.
+//!
+//! A [`Cluster`] owns N independent [`Engine`] replicas and implements the
+//! same [`EngineDriver`] interface a single engine does, so the
+//! coordinator, the pipeline drivers and the HTTP server drive a fleet
+//! without knowing it. Placement is the [`Router`]'s job; the interesting
+//! policy is [`RoutePolicy::PrefixAffinity`]: it computes the request's
+//! base-aligned block-hash chain once (the identical replica-independent
+//! hashes admission uses, `kvcache::prefix`), scores each replica's
+//! committed-hash summary ([`crate::kvcache::summary::HashSummary`], fed
+//! by commit/eviction events) against that chain, and places the request
+//! where its prefix is already resident — so the paper's cross-model KV
+//! reuse survives scale-out. Conversation follow-ups submitted by the
+//! coordinator inherit their parent's replica automatically: the child's
+//! chain extends the parent's, and only the parent's replica scores > 0.
+//!
+//! Virtual time: replicas run in parallel, so the cluster clock is the max
+//! over replica clocks (fleet makespan). Stepping advances every replica
+//! with work by one batch; an idle replica's clock is synced forward when
+//! a request is routed to it (it genuinely sat idle that long).
+//!
+//! Request ids are fleet-unique by construction: replica i issues ids
+//! `i, i+n, i+2n, ...` (see [`Engine::set_id_namespace`]), so finished
+//! outputs flow back through the uniform interface untranslated.
+
+pub mod router;
+
+pub use router::{Placement, PlacementKind, ReplicaView, RoutePolicy, Router, RouterConfig};
+
+use crate::adapter::AdapterRegistry;
+use crate::config::EngineConfig;
+use crate::engine::{Engine, EngineDriver, Executor};
+use crate::kvcache::block::BlockHash;
+use crate::kvcache::prefix::{block_hashes, HashContext};
+use crate::metrics::{Metrics, RoutingMetrics};
+use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams};
+use crate::util::json::Json;
+
+pub struct Cluster<E: Executor> {
+    replicas: Vec<Engine<E>>,
+    router: Router,
+    /// Fleet-level registry: the coordinator's per-stage series land here;
+    /// `/metrics` renders this merged with every replica's counters.
+    metrics: Metrics,
+}
+
+/// One replica's headline numbers for `GET /cluster`.
+#[derive(Debug, Clone)]
+pub struct ReplicaStats {
+    pub replica: usize,
+    pub clock: f64,
+    pub running: usize,
+    pub waiting: usize,
+    pub finished: u64,
+    pub free_blocks: u32,
+    pub total_blocks: u32,
+    /// Committed (routable) blocks in this replica's summary.
+    pub committed_blocks: u64,
+    pub hit_rate: f64,
+    pub routed: u64,
+}
+
+/// Fleet snapshot for `GET /cluster` and tests.
+#[derive(Debug, Clone)]
+pub struct ClusterStats {
+    pub policy: &'static str,
+    pub replicas: Vec<ReplicaStats>,
+    pub routing: RoutingMetrics,
+    /// Token-weighted prefix hit rate across the fleet.
+    pub aggregate_hit_rate: f64,
+}
+
+impl ClusterStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::str(self.policy)),
+            ("aggregate_hit_rate", Json::num(self.aggregate_hit_rate)),
+            (
+                "routing",
+                Json::obj(vec![
+                    (
+                        "routed",
+                        Json::Arr(
+                            self.routing.routed.iter().map(|&n| Json::num(n as f64)).collect(),
+                        ),
+                    ),
+                    ("affinity_hits", Json::num(self.routing.affinity_hits as f64)),
+                    ("affinity_fallbacks", Json::num(self.routing.affinity_fallbacks as f64)),
+                    ("imbalance", Json::num(self.routing.imbalance())),
+                ]),
+            ),
+            (
+                "replicas",
+                Json::Arr(
+                    self.replicas
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("replica", Json::num(r.replica as f64)),
+                                ("clock_s", Json::num(r.clock)),
+                                ("running", Json::num(r.running as f64)),
+                                ("waiting", Json::num(r.waiting as f64)),
+                                ("finished", Json::num(r.finished as f64)),
+                                ("free_blocks", Json::num(r.free_blocks as f64)),
+                                ("total_blocks", Json::num(r.total_blocks as f64)),
+                                ("committed_blocks", Json::num(r.committed_blocks as f64)),
+                                ("cache_hit_rate", Json::num(r.hit_rate)),
+                                ("routed", Json::num(r.routed as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+impl<E: Executor> Cluster<E> {
+    /// Wrap pre-built replicas. They must share cache geometry (the
+    /// affinity chain is hashed once with one block size) and must not
+    /// have served traffic yet (id namespacing).
+    pub fn new(replicas: Vec<Engine<E>>, policy: RoutePolicy) -> anyhow::Result<Self> {
+        Self::with_config(replicas, RouterConfig { policy, ..Default::default() })
+    }
+
+    pub fn with_config(
+        mut replicas: Vec<Engine<E>>,
+        rcfg: RouterConfig,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!replicas.is_empty(), "cluster needs at least one replica");
+        let n = replicas.len();
+        // Routing hashes the chain once with replica 0's config/registry
+        // and config()/registry() report replica 0's — so replicas must
+        // genuinely be identical, not merely block-size-compatible
+        // (a base_aligned_hashing or adapter mismatch would silently
+        // zero the affinity scores on the divergent replicas).
+        for (i, r) in replicas.iter().enumerate() {
+            anyhow::ensure!(
+                r.is_fresh(),
+                "replica {i} has already served traffic (clusters wrap fresh engines)"
+            );
+            anyhow::ensure!(
+                r.cfg == replicas[0].cfg,
+                "replica {i} config differs from replica 0"
+            );
+            anyhow::ensure!(
+                r.registry.iter().eq(replicas[0].registry.iter()),
+                "replica {i} adapter registry differs from replica 0"
+            );
+        }
+        for (i, r) in replicas.iter_mut().enumerate() {
+            r.set_id_namespace(i as u64, n as u64);
+        }
+        let router = Router::new(rcfg, n);
+        Ok(Cluster { replicas, router, metrics: Metrics::new() })
+    }
+
+    /// Build `n` identical replicas from a factory.
+    pub fn from_factory(
+        n: usize,
+        policy: RoutePolicy,
+        mut f: impl FnMut(usize) -> Engine<E>,
+    ) -> anyhow::Result<Self> {
+        Self::new((0..n).map(&mut f).collect(), policy)
+    }
+
+    pub fn num_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn replica(&self, i: usize) -> &Engine<E> {
+        &self.replicas[i]
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Token-weighted prefix hit rate across the fleet (sums the per-
+    /// replica admission counters, so replicas with more traffic weigh
+    /// more — the scaling figure's y-axis).
+    pub fn aggregate_hit_rate(&self) -> f64 {
+        let (mut hit, mut asked) = (0u64, 0u64);
+        for r in &self.replicas {
+            let s = r.kv_stats();
+            hit += s.prefix_tokens_hit;
+            asked += s.prefix_tokens_queried;
+        }
+        if asked == 0 {
+            0.0
+        } else {
+            hit as f64 / asked as f64
+        }
+    }
+
+    /// Full fleet metrics aggregation — counters summed, latency series
+    /// and histograms sample-merged, clock = makespan — for offline
+    /// analysis (the scaling figure's fleet latency column). The
+    /// `/metrics` scrape path deliberately does NOT use this: merging the
+    /// sample vectors is O(requests served).
+    pub fn aggregate_metrics(&self) -> Metrics {
+        let mut agg = Metrics::new();
+        agg.absorb(&self.metrics);
+        for r in &self.replicas {
+            agg.absorb(&r.metrics);
+        }
+        agg
+    }
+
+    /// Total tokens processed (prompt + generated) across the fleet —
+    /// numerator of aggregate throughput over the makespan clock.
+    pub fn total_tokens_processed(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.metrics.prompt_tokens + r.metrics.generated_tokens)
+            .sum()
+    }
+
+    pub fn stats(&self) -> ClusterStats {
+        ClusterStats {
+            policy: self.router.policy().name(),
+            replicas: self
+                .replicas
+                .iter()
+                .enumerate()
+                .map(|(i, r)| ReplicaStats {
+                    replica: i,
+                    clock: r.clock(),
+                    running: r.num_running(),
+                    waiting: r.num_waiting(),
+                    finished: r.metrics.requests_finished,
+                    free_blocks: r.num_free_blocks(),
+                    total_blocks: r.num_total_blocks(),
+                    committed_blocks: r.routing_summary().committed_blocks(),
+                    hit_rate: r.kv_stats().hit_rate(),
+                    routed: self.router.stats.routed[i],
+                })
+                .collect(),
+            routing: self.router.stats.clone(),
+            aggregate_hit_rate: self.aggregate_hit_rate(),
+        }
+    }
+
+    /// The salting context a request will hash under — the SAME derivation
+    /// `Engine::submit_salted` uses (`AdapterRegistry::request_hash_context`),
+    /// so the routing chain is byte-identical to the chain admission will
+    /// present. Unknown adapters fall back to the base context; submission
+    /// rejects them right after (and the placement goes unrecorded).
+    fn routing_context(
+        &self,
+        target: ModelTarget,
+        prompt: &[u32],
+        cache_salt: u64,
+    ) -> HashContext {
+        self.replicas[0]
+            .registry
+            .request_hash_context(
+                target.adapter(),
+                prompt,
+                self.replicas[0].cfg.cache.base_aligned_hashing,
+                cache_salt,
+            )
+            .map(|(_, ctx)| ctx)
+            .unwrap_or_else(|| HashContext { cache_salt, ..HashContext::base() })
+    }
+
+    /// Score every replica for one request. The chain is hashed ONCE —
+    /// each replica contributes only a summary probe (no pool walks) —
+    /// and returned so submission can pre-seed the request with it
+    /// (admission then skips rehashing the same prompt).
+    fn views_for(
+        &self,
+        target: ModelTarget,
+        prompt: &[u32],
+        cache_salt: u64,
+    ) -> (Vec<ReplicaView>, Vec<BlockHash>) {
+        let chain = if self.router.needs_chain() {
+            let ctx = self.routing_context(target, prompt, cache_salt);
+            let bs = self.replicas[0].cfg.cache.block_size as usize;
+            block_hashes(prompt, bs, &ctx)
+        } else {
+            Vec::new()
+        };
+        let views = self
+            .replicas
+            .iter()
+            .map(|r| ReplicaView {
+                load: r.num_running() + r.num_waiting(),
+                affinity_blocks: if chain.is_empty() {
+                    0
+                } else {
+                    r.routing_summary().matching_prefix(&chain)
+                },
+            })
+            .collect();
+        (views, chain)
+    }
+}
+
+impl<E: Executor> EngineDriver for Cluster<E> {
+    fn submit_salted(
+        &mut self,
+        target: ModelTarget,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        priority: bool,
+        cache_salt: u64,
+    ) -> anyhow::Result<RequestId> {
+        let (views, chain) = self.views_for(target, &prompt, cache_salt);
+        let placement = self.router.choose(&views);
+        let now = self.clock();
+        let r = &mut self.replicas[placement.replica];
+        // An idle replica's clock lags only because nothing advanced it;
+        // the request really arrives at fleet time, so sync forward. Busy
+        // replicas keep their own timeline (jumping it would stretch
+        // in-flight work). Under the event drive this approximation is
+        // tight — arrivals are gated on the fleet clock every step, so the
+        // sync target is at most one scheduling quantum past the nominal
+        // arrival. (Advancing before a rejected submission is harmless:
+        // the clock only moves forward and no request is created.)
+        if !r.has_work() && r.clock() < now {
+            r.advance_clock_to(now);
+        }
+        let id = r.submit_prehashed(target, prompt, params, priority, cache_salt, chain)?;
+        // Count the placement only now: rejected submissions must not
+        // skew the routing stats.
+        self.router.record(placement);
+        Ok(id)
+    }
+
+    /// One fleet step: every replica with work advances by one batch (they
+    /// are parallel machines). False only when no replica progressed.
+    fn step(&mut self) -> bool {
+        let mut progressed = false;
+        for r in &mut self.replicas {
+            if r.has_work() {
+                progressed |= r.step();
+            }
+        }
+        progressed
+    }
+
+    fn clock(&self) -> f64 {
+        self.replicas.iter().map(|r| r.clock()).fold(0.0, f64::max)
+    }
+
+    fn advance_clock_to(&mut self, t: f64) {
+        for r in &mut self.replicas {
+            if r.clock() < t {
+                r.advance_clock_to(t);
+            }
+        }
+    }
+
+    fn has_work(&self) -> bool {
+        self.replicas.iter().any(|r| r.has_work())
+    }
+
+    fn num_waiting(&self) -> usize {
+        self.replicas.iter().map(|r| r.num_waiting()).sum()
+    }
+
+    fn num_running(&self) -> usize {
+        self.replicas.iter().map(|r| r.num_running()).sum()
+    }
+
+    fn take_finished(&mut self) -> Vec<RequestOutput> {
+        let mut out = Vec::new();
+        for r in &mut self.replicas {
+            out.append(&mut r.take_finished());
+        }
+        out
+    }
+
+    fn finished_pending(&self) -> usize {
+        self.replicas.iter().map(|r| r.finished_pending()).sum()
+    }
+
+    fn take_finished_where<F: FnMut(&RequestOutput) -> bool>(
+        &mut self,
+        mut pred: F,
+    ) -> Vec<RequestOutput> {
+        let mut out = Vec::new();
+        for r in &mut self.replicas {
+            out.extend(r.take_finished_where(&mut pred));
+        }
+        out
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.metrics
+    }
+
+    fn config(&self) -> &EngineConfig {
+        &self.replicas[0].cfg
+    }
+
+    fn registry(&self) -> &AdapterRegistry {
+        &self.replicas[0].registry
+    }
+
+    /// Fleet exposition: aggregated single-engine families (counters and
+    /// histograms summed, clock = makespan) + the fleet-level per-stage
+    /// series + routing counters + per-replica labeled families. Every
+    /// family appears exactly once, and — scrape path — nothing O(total
+    /// requests served) is copied: only scalars and fixed-bucket
+    /// histograms aggregate, and the stage series render by reference.
+    fn render_prometheus(&self) -> String {
+        let mut agg = Metrics::new();
+        agg.absorb_scalars(&self.metrics);
+        for r in &self.replicas {
+            agg.absorb_scalars(&r.metrics);
+        }
+        let mut s = agg.render_prometheus();
+        // The coordinator records stage series through metrics_mut(), i.e.
+        // on the fleet registry — replicas never carry any.
+        s.push_str(&Metrics::render_stage_series(&self.metrics.stage));
+        s.push_str(&self.router.stats.render_prometheus());
+        let per: Vec<&Metrics> = self.replicas.iter().map(|r| &r.metrics).collect();
+        s.push_str(&Metrics::render_replica_families(&per));
+        s
+    }
+
+    fn cluster_stats(&self) -> Option<ClusterStats> {
+        Some(self.stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::AdapterId;
+    use crate::config::presets;
+    use crate::pipeline::workload;
+    use crate::simulator::SimExecutor;
+
+    fn cluster(n: usize, policy: RoutePolicy) -> Cluster<SimExecutor> {
+        Cluster::from_factory(n, policy, |_| {
+            let cfg = presets::granite_8b();
+            let reg = workload::build_registry(2, cfg.model.vocab_size, true);
+            let exec = SimExecutor::new(&cfg);
+            Engine::with_registry(cfg, reg, exec)
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn ids_are_fleet_unique_and_interleaved() {
+        let mut c = cluster(3, RoutePolicy::RoundRobin);
+        let mut ids = Vec::new();
+        for i in 0..6 {
+            ids.push(
+                c.submit(
+                    ModelTarget::Base,
+                    vec![1 + i; 32],
+                    SamplingParams { max_new_tokens: 2, ..Default::default() },
+                )
+                .unwrap(),
+            );
+        }
+        let mut sorted = ids.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 6, "duplicate ids across replicas: {ids:?}");
+        // RR: request k lands on replica k%3, which issues k%3 + 3*floor(k/3).
+        assert_eq!(ids, (0..6).map(RequestId).collect::<Vec<_>>());
+        c.run_until_idle();
+        assert_eq!(c.take_finished().len(), 6);
+        assert!(!c.has_work());
+    }
+
+    #[test]
+    fn single_replica_cluster_matches_plain_engine() {
+        let run = |clustered: bool| {
+            let prompt: Vec<u32> = (0..256).collect();
+            let p = SamplingParams { max_new_tokens: 16, ..Default::default() };
+            if clustered {
+                let mut c = cluster(1, RoutePolicy::RoundRobin);
+                c.submit(ModelTarget::Base, prompt.clone(), p).unwrap();
+                c.run_until_idle();
+                (c.clock(), c.take_finished().len())
+            } else {
+                let cfg = presets::granite_8b();
+                let reg = workload::build_registry(2, cfg.model.vocab_size, true);
+                let mut e = Engine::with_registry(cfg.clone(), reg, SimExecutor::new(&cfg));
+                e.submit(ModelTarget::Base, prompt.clone(), p).unwrap();
+                e.run_until_idle();
+                (e.clock(), e.take_finished().len())
+            }
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn affinity_routes_follow_up_to_warm_replica() {
+        let mut c = cluster(2, RoutePolicy::PrefixAffinity);
+        let prompt: Vec<u32> = (0..256).collect();
+        let p = SamplingParams { max_new_tokens: 16, ..Default::default() };
+        // Cold conversation: least-loaded fallback → replica 0.
+        c.submit(ModelTarget::Base, prompt.clone(), p).unwrap();
+        c.run_until_idle();
+        let first = c.take_finished().pop().unwrap();
+        assert_eq!(c.router().stats.affinity_fallbacks, 1);
+        // Follow-up extends the conversation: must land on replica 0 and
+        // hit its cached prefix, not re-prefill on replica 1.
+        let mut follow = prompt.clone();
+        follow.extend(&first.output_tokens);
+        follow.push(7);
+        c.submit(ModelTarget::Base, follow, p).unwrap();
+        c.run_until_idle();
+        let second = c.take_finished().pop().unwrap();
+        assert_eq!(c.router().stats.affinity_hits, 1);
+        assert_eq!(c.router().stats.routed, vec![2, 0]);
+        assert_eq!(second.num_cached_tokens, 256, "warm-replica prefix hit");
+        // And the adapter direction: an aLoRA eval over the conversation
+        // shares the base prefix, so it must land warm too.
+        let mut ev = prompt.clone();
+        ev.extend(&first.output_tokens);
+        ev.extend(workload::invocation_for(c.config().model.vocab_size, 0));
+        c.submit(ModelTarget::Adapter(AdapterId(0)), ev, p).unwrap();
+        c.run_until_idle();
+        let eval = c.take_finished().pop().unwrap();
+        assert!(eval.num_cached_tokens >= 256, "cross-model affinity hit");
+        assert_eq!(c.router().stats.routed, vec![3, 0]);
+    }
+
+    #[test]
+    fn cluster_stats_and_prometheus_render() {
+        let mut c = cluster(2, RoutePolicy::PrefixAffinity);
+        c.submit(
+            ModelTarget::Base,
+            (0..64).collect(),
+            SamplingParams { max_new_tokens: 4, ..Default::default() },
+        )
+        .unwrap();
+        c.run_until_idle();
+        let st = c.stats();
+        assert_eq!(st.policy, "prefix-affinity");
+        assert_eq!(st.replicas.len(), 2);
+        assert_eq!(st.routing.total_routed(), 1);
+        assert!(st.replicas.iter().any(|r| r.committed_blocks > 0));
+        let j = st.to_json().to_string();
+        assert!(j.contains("\"policy\":\"prefix-affinity\""), "{j}");
+        let prom = c.render_prometheus();
+        assert!(prom.contains("alora_serve_requests_finished_total 1"), "{prom}");
+        assert!(prom.contains("alora_serve_router_requests_routed_total{replica=\"0\"}"));
+        assert!(prom.contains("alora_serve_replica_clock_seconds{replica=\"1\"}"));
+    }
+
+    #[test]
+    fn rejected_submission_leaves_routing_stats_untouched() {
+        let mut c = cluster(2, RoutePolicy::PrefixAffinity);
+        let max = c.config().scheduler.max_seq_len as usize;
+        let err = c.submit(
+            ModelTarget::Base,
+            vec![1; max + 1],
+            SamplingParams { max_new_tokens: 1, ..Default::default() },
+        );
+        assert!(err.is_err());
+        assert_eq!(c.router().stats.total_routed(), 0);
+        assert_eq!(c.router().stats.affinity_fallbacks, 0);
+    }
+
+    #[test]
+    fn least_loaded_balances_cold_traffic() {
+        let mut c = cluster(2, RoutePolicy::LeastLoaded);
+        for i in 0..8 {
+            c.submit(
+                ModelTarget::Base,
+                vec![100 + i; 64],
+                SamplingParams { max_new_tokens: 4, ..Default::default() },
+            )
+            .unwrap();
+        }
+        let routed = c.router().stats.routed.clone();
+        assert_eq!(routed, vec![4, 4], "cold uniform load must split evenly");
+        c.run_until_idle();
+    }
+}

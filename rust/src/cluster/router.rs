@@ -1,0 +1,284 @@
+//! Request → replica routing policies.
+//!
+//! The paper's speedup is prefix locality: a follow-up only reuses KV if it
+//! lands where the shared base prefix is cached. Across N replicas a naive
+//! router destroys exactly that locality — "Serving Heterogeneous LoRA
+//! Adapters in Distributed LLM Inference Systems" makes instance-aware
+//! routing the scaling lever, and S-LoRA shows multi-adapter serving lives
+//! or dies on placement. [`RoutePolicy::PrefixAffinity`] keeps the reuse:
+//! the cluster hashes the request's base-aligned chain once (the same
+//! replica-independent hashes `kvcache::prefix` computes at admission),
+//! scores every replica's committed-hash summary against it, and picks the
+//! best match penalized by load; cold prefixes fall back to least-loaded.
+
+use crate::metrics::RoutingMetrics;
+
+/// Pluggable placement policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through replicas regardless of state (the locality-blind
+    /// baseline the scaling figure compares against).
+    RoundRobin,
+    /// Fewest in-flight requests (waiting + running); ties → lowest index.
+    LeastLoaded,
+    /// Longest cached base-aligned prefix, load-penalized; falls back to
+    /// least-loaded when no replica holds any of the chain.
+    PrefixAffinity,
+}
+
+impl RoutePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastLoaded => "least-loaded",
+            RoutePolicy::PrefixAffinity => "prefix-affinity",
+        }
+    }
+
+    /// Parse a CLI/HTTP policy name.
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        match s {
+            "round-robin" | "rr" => Some(RoutePolicy::RoundRobin),
+            "least-loaded" | "ll" => Some(RoutePolicy::LeastLoaded),
+            "prefix-affinity" | "affinity" => Some(RoutePolicy::PrefixAffinity),
+            _ => None,
+        }
+    }
+}
+
+/// What the router sees of one replica when placing one request.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaView {
+    /// In-flight requests (waiting + running).
+    pub load: usize,
+    /// Leading blocks of the request's hash chain this replica's committed
+    /// summary covers (0 when the policy doesn't score affinity).
+    pub affinity_blocks: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    pub policy: RoutePolicy,
+    /// How many cached blocks one queued request is "worth" when trading
+    /// affinity against imbalance: effective score = affinity_blocks -
+    /// penalty × load. Low values chase cache hits harder; high values
+    /// behave closer to least-loaded.
+    pub load_penalty_blocks: f64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { policy: RoutePolicy::PrefixAffinity, load_penalty_blocks: 2.0 }
+    }
+}
+
+/// How one placement was decided (PrefixAffinity tags warm vs cold).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// Policy doesn't score affinity (RoundRobin / LeastLoaded).
+    Plain,
+    /// PrefixAffinity found a warm replica holding `blocks` of the chain.
+    Warm { blocks: usize },
+    /// PrefixAffinity found no warm replica; least-loaded fallback.
+    Cold,
+}
+
+/// One placement decision. Counted into the stats only via
+/// [`Router::record`], once the submission actually succeeded — rejected
+/// requests must not skew the routing counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    pub replica: usize,
+    pub kind: PlacementKind,
+}
+
+#[derive(Debug)]
+pub struct Router {
+    cfg: RouterConfig,
+    rr_next: usize,
+    pub stats: RoutingMetrics,
+}
+
+fn least_loaded(views: &[ReplicaView]) -> usize {
+    views
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, v)| v.load)
+        .map(|(i, _)| i)
+        .expect("no replicas")
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig, n_replicas: usize) -> Self {
+        Router { cfg, rr_next: 0, stats: RoutingMetrics::new(n_replicas) }
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.cfg.policy
+    }
+
+    /// Does this policy need the request's hash chain scored per replica?
+    /// (Lets the cluster skip hashing entirely for RR / least-loaded.)
+    pub fn needs_chain(&self) -> bool {
+        self.cfg.policy == RoutePolicy::PrefixAffinity
+    }
+
+    /// Pick a replica for one request. Deterministic: ties always resolve
+    /// to the lowest index, so runs are reproducible. Does not touch the
+    /// exported stats (the round-robin cursor does advance); call
+    /// [`Router::record`] after the submission succeeds.
+    pub fn choose(&mut self, views: &[ReplicaView]) -> Placement {
+        assert!(!views.is_empty(), "routing over zero replicas");
+        match self.cfg.policy {
+            RoutePolicy::RoundRobin => {
+                let i = self.rr_next % views.len();
+                self.rr_next += 1;
+                Placement { replica: i, kind: PlacementKind::Plain }
+            }
+            RoutePolicy::LeastLoaded => {
+                Placement { replica: least_loaded(views), kind: PlacementKind::Plain }
+            }
+            RoutePolicy::PrefixAffinity => {
+                let best = views.iter().map(|v| v.affinity_blocks).max().unwrap_or(0);
+                if best == 0 {
+                    // Cold prefix: nothing to gain anywhere, balance load.
+                    Placement { replica: least_loaded(views), kind: PlacementKind::Cold }
+                } else {
+                    let score = |v: &ReplicaView| {
+                        v.affinity_blocks as f64
+                            - self.cfg.load_penalty_blocks * v.load as f64
+                    };
+                    let mut pick = 0;
+                    for (j, v) in views.iter().enumerate() {
+                        if score(v) > score(&views[pick]) {
+                            pick = j;
+                        }
+                    }
+                    let blocks = views[pick].affinity_blocks;
+                    if blocks == 0 {
+                        // The load penalty steered the request off every
+                        // warm replica: it lands cold and must be counted
+                        // as a fallback, not a hit.
+                        Placement { replica: pick, kind: PlacementKind::Cold }
+                    } else {
+                        Placement { replica: pick, kind: PlacementKind::Warm { blocks } }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Count a successfully-submitted placement into the routing stats.
+    pub fn record(&mut self, p: Placement) {
+        self.stats.routed[p.replica] += 1;
+        match p.kind {
+            PlacementKind::Plain => {}
+            PlacementKind::Warm { blocks } => {
+                self.stats.affinity_hits += 1;
+                self.stats.affinity_blocks_matched += blocks as u64;
+            }
+            PlacementKind::Cold => self.stats.affinity_fallbacks += 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn views(specs: &[(usize, usize)]) -> Vec<ReplicaView> {
+        specs
+            .iter()
+            .map(|&(load, aff)| ReplicaView { load, affinity_blocks: aff })
+            .collect()
+    }
+
+    fn router(policy: RoutePolicy, n: usize) -> Router {
+        Router::new(RouterConfig { policy, ..Default::default() }, n)
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = router(RoutePolicy::RoundRobin, 3);
+        let v = views(&[(0, 0), (9, 0), (0, 0)]);
+        for want in [0, 1, 2, 0] {
+            let p = r.choose(&v);
+            assert_eq!(p.replica, want);
+            assert_eq!(p.kind, PlacementKind::Plain);
+            r.record(p);
+        }
+        assert_eq!(r.stats.routed, vec![2, 1, 1]);
+    }
+
+    #[test]
+    fn least_loaded_picks_min_ties_lowest() {
+        let mut r = router(RoutePolicy::LeastLoaded, 3);
+        assert_eq!(r.choose(&views(&[(4, 0), (1, 0), (2, 0)])).replica, 1);
+        assert_eq!(r.choose(&views(&[(3, 0), (3, 0), (3, 0)])).replica, 0);
+    }
+
+    #[test]
+    fn affinity_prefers_cached_prefix() {
+        let mut r = router(RoutePolicy::PrefixAffinity, 3);
+        let p = r.choose(&views(&[(0, 0), (0, 6), (0, 2)]));
+        assert_eq!(p.replica, 1);
+        assert_eq!(p.kind, PlacementKind::Warm { blocks: 6 });
+        r.record(p);
+        assert_eq!(r.stats.affinity_hits, 1);
+        assert_eq!(r.stats.affinity_blocks_matched, 6);
+    }
+
+    #[test]
+    fn affinity_cold_falls_back_to_least_loaded() {
+        let mut r = router(RoutePolicy::PrefixAffinity, 3);
+        let p = r.choose(&views(&[(4, 0), (1, 0), (2, 0)]));
+        assert_eq!(p.replica, 1);
+        assert_eq!(p.kind, PlacementKind::Cold);
+        r.record(p);
+        assert_eq!(r.stats.affinity_fallbacks, 1);
+        assert_eq!(r.stats.affinity_hits, 0);
+    }
+
+    #[test]
+    fn affinity_trades_against_load() {
+        // 4 cached blocks on a replica with 4 queued requests (score
+        // 4 - 2.0×4 = -4) loses to an idle replica holding just 1 block
+        // (score 1): the load penalty stops convoying onto one replica.
+        let mut r = router(RoutePolicy::PrefixAffinity, 2);
+        assert_eq!(r.choose(&views(&[(4, 4), (0, 1)])).replica, 1);
+    }
+
+    #[test]
+    fn overloaded_warm_replica_yields_a_cold_placement() {
+        // Warm replica exists (best > 0) but its load penalty loses to an
+        // idle zero-affinity replica (3 - 2.0×4 = -5 vs 0): the request
+        // lands cold and must be classified — and counted — as such.
+        let mut r = router(RoutePolicy::PrefixAffinity, 2);
+        let p = r.choose(&views(&[(4, 3), (0, 0)]));
+        assert_eq!(p.replica, 1);
+        assert_eq!(p.kind, PlacementKind::Cold);
+        r.record(p);
+        assert_eq!(r.stats.affinity_hits, 0);
+        assert_eq!(r.stats.affinity_fallbacks, 1);
+    }
+
+    #[test]
+    fn unrecorded_placements_leave_stats_untouched() {
+        // The cluster only records after a successful submission; a
+        // rejected request must not skew the counters.
+        let mut r = router(RoutePolicy::PrefixAffinity, 2);
+        let _ = r.choose(&views(&[(0, 3), (0, 0)]));
+        assert_eq!(r.stats.total_routed(), 0);
+        assert_eq!(r.stats.affinity_hits, 0);
+        assert_eq!(r.stats.affinity_fallbacks, 0);
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::PrefixAffinity] {
+            assert_eq!(RoutePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("nope"), None);
+    }
+}

@@ -12,10 +12,13 @@
 //!   chains (base → eval), fan-out (one draft, N adapter "intrinsics" in
 //!   the Activated-LoRA sense) and fan-in consolidation (one base call
 //!   over every evaluation), at S-LoRA-style many-adapter scale.
-//! - [`Coordinator`] — drives any [`Engine`] *event-style*: a stage is
+//! - [`Coordinator`] — drives any [`EngineDriver`] (a single engine or a
+//!   [`crate::cluster::Cluster`] of replicas) *event-style*: a stage is
 //!   submitted the moment its last parent finishes, so the follow-up
-//!   lands while the parent's prefix blocks are still cache-hot. It
-//!   tracks per-conversation frontier state and emits per-stage-name
+//!   lands while the parent's prefix blocks are still cache-hot — and,
+//!   over a cluster with prefix-affinity routing, lands on the replica
+//!   that holds them, so child stages inherit their parent's placement.
+//!   It tracks per-conversation frontier state and emits per-stage-name
 //!   latency series into [`crate::metrics::Metrics::stage`].
 //!
 //! Two drive modes mirror the paper's methodologies: [`Coordinator::run_event`]
@@ -26,7 +29,7 @@
 
 pub mod spec;
 
-use crate::engine::{Engine, Executor};
+use crate::engine::EngineDriver;
 use crate::metrics::StageLatencies;
 use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams};
 use crate::util::fxmap::FxHashMap;
@@ -464,6 +467,13 @@ impl Coordinator {
         self.owner.contains_key(&id)
     }
 
+    /// The conversation owning an in-flight request (None once retired or
+    /// never owned) — lets callers attribute a completion-time failure to
+    /// its conversation before [`Coordinator::on_finished`] consumes it.
+    pub fn conversation_of(&self, id: RequestId) -> Option<usize> {
+        self.owner.get(&id).map(|(ci, _)| *ci)
+    }
+
     /// The request ids of every submitted-but-unfinished stage (for
     /// external drivers that must hand leftovers back on abort).
     pub fn in_flight_ids(&self) -> Vec<RequestId> {
@@ -500,9 +510,9 @@ impl Coordinator {
 
     /// Submit one stage (parents must be done). The composed prompt is
     /// retained for children's `PromptOf` parts.
-    fn submit_stage<E: Executor>(
+    fn submit_stage<D: EngineDriver>(
         &mut self,
-        engine: &mut Engine<E>,
+        engine: &mut D,
         ci: usize,
         sid: StageId,
     ) -> anyhow::Result<RequestId> {
@@ -536,9 +546,9 @@ impl Coordinator {
     /// Submit every ready stage of a conversation (all parents finished,
     /// not yet submitted). For a fresh conversation this starts its roots.
     /// Returns the number of stages submitted.
-    pub fn submit_ready<E: Executor>(
+    pub fn submit_ready<D: EngineDriver>(
         &mut self,
-        engine: &mut Engine<E>,
+        engine: &mut D,
         conversation: usize,
     ) -> anyhow::Result<usize> {
         let ready: Vec<StageId> = {
@@ -556,9 +566,9 @@ impl Coordinator {
 
     /// Record a finished stage: store its output, update the frontier and
     /// the per-stage-name metrics series.
-    fn retire<E: Executor>(
+    fn retire<D: EngineDriver>(
         &mut self,
-        engine: &mut Engine<E>,
+        engine: &mut D,
         out: RequestOutput,
     ) -> anyhow::Result<(usize, StageId)> {
         let (ci, sid) = self
@@ -569,7 +579,7 @@ impl Coordinator {
             let s = &self.convs[ci].graph.stages[sid.0];
             (s.name.clone(), s.target)
         };
-        engine.metrics.observe_stage(&name, &out);
+        engine.metrics_mut().observe_stage(&name, &out);
         let children = self.convs[ci].children[sid.0].clone();
         for c in children {
             self.convs[ci].pending_parents[c.0] -= 1;
@@ -593,9 +603,9 @@ impl Coordinator {
     /// Event-style completion intake: retire the stage and immediately
     /// submit any children it unblocked — the chained request lands while
     /// the parent's prefix blocks are still cache-hot.
-    pub fn on_finished<E: Executor>(
+    pub fn on_finished<D: EngineDriver>(
         &mut self,
-        engine: &mut Engine<E>,
+        engine: &mut D,
         out: RequestOutput,
     ) -> anyhow::Result<()> {
         let (ci, sid) = self.retire(engine, out)?;
@@ -613,10 +623,39 @@ impl Coordinator {
         Ok(())
     }
 
+    /// Abandon a conversation: its unfinished stages stop blocking
+    /// [`Coordinator::is_done`], nothing further is submitted for it, and
+    /// the request ids of its in-flight stages are returned so the caller
+    /// can discard their eventual outputs (the engine keeps running them;
+    /// the coordinator just stops listening). Used by the server's batch
+    /// `POST /pipeline` to isolate one graph's runtime submission failure
+    /// from the rest of the batch.
+    pub fn abandon_conversation(&mut self, conversation: usize) -> Vec<RequestId> {
+        let in_flight: Vec<RequestId> = self
+            .owner
+            .iter()
+            .filter(|(_, (ci, _))| *ci == conversation)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in &in_flight {
+            self.owner.remove(id);
+        }
+        let conv = &mut self.convs[conversation];
+        self.remaining_total -= conv.remaining;
+        conv.remaining = 0;
+        // Mark everything submitted+done so no frontier scan or
+        // submit_ready call can resurrect the conversation.
+        for i in 0..conv.graph.len() {
+            conv.submitted[i] = true;
+            conv.done[i] = true;
+        }
+        in_flight
+    }
+
     /// Drain the engine's finished queue for coordinator-owned requests
     /// (leaving other traffic's outputs in place) and chain follow-ups.
     /// Returns the number of stages retired.
-    pub fn pump<E: Executor>(&mut self, engine: &mut Engine<E>) -> anyhow::Result<usize> {
+    pub fn pump<D: EngineDriver>(&mut self, engine: &mut D) -> anyhow::Result<usize> {
         let outs = {
             let owner = &self.owner;
             engine.take_finished_where(|o| owner.contains_key(&o.id))
@@ -636,8 +675,8 @@ impl Coordinator {
     /// Event drive (paper §4.3 methodology): conversation `i` arrives at
     /// virtual time `arrivals[i]`; stages chain the moment their parents
     /// finish, honoring per-stage queue priority.
-    pub fn run_event<E: Executor>(
-        engine: &mut Engine<E>,
+    pub fn run_event<D: EngineDriver>(
+        engine: &mut D,
         graphs: Vec<StageGraph>,
         arrivals: &[f64],
     ) -> anyhow::Result<CoordinatorResult> {
@@ -681,8 +720,8 @@ impl Coordinator {
     /// advances one topological level per wave — all of level 0 submitted
     /// and run to completion, then all of level 1, and so on. Priority
     /// flags are ignored (the whole wave is one fixed batch).
-    pub fn run_lockstep<E: Executor>(
-        engine: &mut Engine<E>,
+    pub fn run_lockstep<D: EngineDriver>(
+        engine: &mut D,
         graphs: Vec<StageGraph>,
     ) -> anyhow::Result<CoordinatorResult> {
         let mut co = Coordinator::new();
@@ -735,6 +774,7 @@ mod tests {
     use super::*;
     use crate::adapter::AdapterId;
     use crate::config::presets;
+    use crate::engine::Engine;
     use crate::pipeline::workload;
     use crate::simulator::SimExecutor;
 
@@ -891,6 +931,40 @@ mod tests {
         assert_eq!(e.metrics.stage.get("check").map(|s| s.count()), Some(1));
         let prom = e.metrics.render_prometheus();
         assert!(prom.contains("stage=\"draft\""), "{prom}");
+    }
+
+    #[test]
+    fn abandoned_conversation_stops_blocking_is_done() {
+        let mut e = engine(2);
+        let vocab = e.cfg.model.vocab_size;
+        let mut rng = crate::util::rng::Rng::new(4);
+        let mut co = Coordinator::new();
+        let keep = co
+            .add_conversation(fan_graph(workload::prompt(&mut rng, 128, vocab), vocab, 2))
+            .unwrap();
+        let drop_ = co
+            .add_conversation(fan_graph(workload::prompt(&mut rng, 128, vocab), vocab, 2))
+            .unwrap();
+        co.submit_ready(&mut e, keep).unwrap();
+        co.submit_ready(&mut e, drop_).unwrap();
+        let orphans = co.abandon_conversation(drop_);
+        assert_eq!(orphans.len(), 1, "one in-flight root handed back");
+        assert!(!co.owns(orphans[0]));
+        assert!(co.frontier(drop_).is_empty());
+        // Driving to completion now only waits on the kept conversation,
+        // while the abandoned root's output stays in the engine queue for
+        // the caller to discard.
+        while !co.is_done() {
+            assert!(e.step(), "stalled");
+            co.pump(&mut e).unwrap();
+        }
+        let kept: Vec<_> = co.finished_stages().iter().map(|o| o.conversation).collect();
+        assert!(kept.iter().all(|&c| c == keep));
+        assert_eq!(kept.len(), 4);
+        e.run_until_idle();
+        let leftovers = e.take_finished();
+        assert_eq!(leftovers.len(), 1, "abandoned root finished unclaimed");
+        assert_eq!(leftovers[0].id, orphans[0]);
     }
 
     #[test]

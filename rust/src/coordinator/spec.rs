@@ -26,7 +26,7 @@ use crate::adapter::{AdapterId, AdapterRegistry};
 use crate::request::ModelTarget;
 use crate::util::json::Json;
 
-use super::{CoordinatorResult, Part, StageGraph, StageId, StageSpec};
+use super::{CoordinatorResult, Part, StageGraph, StageId, StageOutput, StageSpec};
 
 fn lookup(ids: &[(String, StageId)], name: &str) -> anyhow::Result<StageId> {
     ids.iter()
@@ -128,41 +128,67 @@ pub fn graph_from_json(j: &Json, registry: &AdapterRegistry) -> anyhow::Result<S
     Ok(graph)
 }
 
+/// Render one finished stage as a `POST /pipeline` response entry.
+pub fn stage_output_to_json(o: &StageOutput) -> Json {
+    let out = &o.output;
+    Json::obj(vec![
+        ("name", Json::str(o.name.clone())),
+        ("conversation", Json::num(o.conversation as f64)),
+        (
+            "tokens",
+            Json::Arr(
+                out.output_tokens
+                    .iter()
+                    .map(|&t| Json::num(t as f64))
+                    .collect(),
+            ),
+        ),
+        ("prompt_len", Json::num(out.prompt_len as f64)),
+        ("e2e_s", Json::num(out.timeline.e2e())),
+        ("ttft_s", Json::num(out.timeline.ttft())),
+        ("queue_s", Json::num(out.timeline.queue_time())),
+        ("prefill_s", Json::num(out.timeline.prefill_time())),
+        ("decode_s", Json::num(out.timeline.decode_time())),
+        ("cache_hit_rate", Json::num(out.cache_hit_rate())),
+    ])
+}
+
 /// Render a coordinator run as the `POST /pipeline` response body.
 pub fn result_to_json(r: &CoordinatorResult) -> Json {
     Json::obj(vec![
         ("makespan_s", Json::num(r.makespan)),
         (
             "stages",
-            Json::Arr(
-                r.outputs
-                    .iter()
-                    .map(|o| {
-                        let out = &o.output;
-                        Json::obj(vec![
-                            ("name", Json::str(o.name.clone())),
-                            ("conversation", Json::num(o.conversation as f64)),
-                            (
-                                "tokens",
-                                Json::Arr(
-                                    out.output_tokens
-                                        .iter()
-                                        .map(|&t| Json::num(t as f64))
-                                        .collect(),
-                                ),
-                            ),
-                            ("prompt_len", Json::num(out.prompt_len as f64)),
-                            ("e2e_s", Json::num(out.timeline.e2e())),
-                            ("ttft_s", Json::num(out.timeline.ttft())),
-                            ("queue_s", Json::num(out.timeline.queue_time())),
-                            ("prefill_s", Json::num(out.timeline.prefill_time())),
-                            ("decode_s", Json::num(out.timeline.decode_time())),
-                            ("cache_hit_rate", Json::num(out.cache_hit_rate())),
-                        ])
-                    })
-                    .collect(),
-            ),
+            Json::Arr(r.outputs.iter().map(stage_output_to_json).collect()),
         ),
+    ])
+}
+
+/// Render a batched run: one entry per input spec, in input order — its
+/// completion-ordered stages, or the error that kept it out of (or threw
+/// it out of) the run. `convs[i]` maps input `i` to its conversation
+/// index. One pass over the outputs: stages group by conversation first,
+/// so rendering stays O(stages + pipelines) rather than rescanning the
+/// outputs per entry.
+pub fn batch_result_to_json(r: &CoordinatorResult, convs: &[Result<usize, String>]) -> Json {
+    let mut by_conv: std::collections::BTreeMap<usize, Vec<Json>> =
+        std::collections::BTreeMap::new();
+    for o in &r.outputs {
+        by_conv.entry(o.conversation).or_default().push(stage_output_to_json(o));
+    }
+    let pipelines: Vec<Json> = convs
+        .iter()
+        .map(|c| match c {
+            Err(e) => Json::obj(vec![("error", Json::str(e.clone()))]),
+            Ok(ci) => Json::obj(vec![(
+                "stages",
+                Json::Arr(by_conv.remove(ci).unwrap_or_default()),
+            )]),
+        })
+        .collect();
+    Json::obj(vec![
+        ("makespan_s", Json::num(r.makespan)),
+        ("pipelines", Json::Arr(pipelines)),
     ])
 }
 
@@ -231,35 +257,55 @@ mod tests {
         }
     }
 
-    #[test]
-    fn result_renders_per_stage_fields() {
+    fn one_stage_result(conversation: usize) -> StageOutput {
         use crate::request::{RequestId, RequestOutput, Timeline};
         let mut t = Timeline::new(0.0);
         t.first_scheduled = 0.1;
         t.first_token = 0.2;
         t.finished = 0.5;
-        let r = CoordinatorResult {
-            outputs: vec![super::super::StageOutput {
-                conversation: 0,
-                stage: StageId(0),
-                name: "draft".into(),
+        StageOutput {
+            conversation,
+            stage: StageId(0),
+            name: "draft".into(),
+            target: ModelTarget::Base,
+            output: RequestOutput {
+                id: RequestId(conversation as u64),
                 target: ModelTarget::Base,
-                output: RequestOutput {
-                    id: RequestId(0),
-                    target: ModelTarget::Base,
-                    prompt_len: 4,
-                    output_tokens: vec![1, 2],
-                    timeline: t,
-                    num_cached_tokens: 2,
-                    preemptions: 0,
-                },
-            }],
-            makespan: 0.5,
-        };
+                prompt_len: 4,
+                output_tokens: vec![1, 2],
+                timeline: t,
+                num_cached_tokens: 2,
+                preemptions: 0,
+            },
+        }
+    }
+
+    #[test]
+    fn result_renders_per_stage_fields() {
+        let r = CoordinatorResult { outputs: vec![one_stage_result(0)], makespan: 0.5 };
         let j = result_to_json(&r);
         let stages = j.get("stages").and_then(Json::as_arr).unwrap();
         assert_eq!(stages.len(), 1);
         assert_eq!(stages[0].get("name").and_then(Json::as_str), Some("draft"));
         assert_eq!(stages[0].get("cache_hit_rate").and_then(Json::as_f64), Some(0.5));
+    }
+
+    #[test]
+    fn batch_result_groups_by_input_and_keeps_errors_in_place() {
+        // Inputs 0 and 2 parsed (conversations 0 and 1); input 1 failed.
+        let r = CoordinatorResult {
+            outputs: vec![one_stage_result(1), one_stage_result(0)],
+            makespan: 0.5,
+        };
+        let convs = vec![Ok(0), Err("bad spec".to_string()), Ok(1)];
+        let j = batch_result_to_json(&r, &convs);
+        let ps = j.get("pipelines").and_then(Json::as_arr).unwrap();
+        assert_eq!(ps.len(), 3);
+        let s0 = ps[0].get("stages").and_then(Json::as_arr).unwrap();
+        assert_eq!(s0.len(), 1);
+        assert_eq!(s0[0].get("conversation").and_then(Json::as_u64), Some(0));
+        assert_eq!(ps[1].get("error").and_then(Json::as_str), Some("bad spec"));
+        let s2 = ps[2].get("stages").and_then(Json::as_arr).unwrap();
+        assert_eq!(s2[0].get("conversation").and_then(Json::as_u64), Some(1));
     }
 }

@@ -1,0 +1,249 @@
+//! The uniform driving interface over "something that serves requests".
+//!
+//! Before the cluster existed, the coordinator, the pipeline drivers and
+//! the HTTP server all called `Engine<E>`'s concrete methods, so every
+//! higher layer was hard-wired to exactly one replica. [`EngineDriver`]
+//! extracts that surface — submit / step / clock / completion-drain /
+//! metrics — so the same coordinator code drives a single [`Engine`] or a
+//! [`crate::cluster::Cluster`] of N replicas behind a router. Child stages
+//! of a conversation then inherit their parent's replica affinity for
+//! free: the cluster's `PrefixAffinity` policy routes each follow-up to
+//! whichever replica already committed the parent's base-aligned blocks.
+//!
+//! Semantics every implementor must honor:
+//! - `clock` is virtual seconds and monotonic; for a fleet it is the
+//!   *makespan* clock (max over replicas — replicas run in parallel).
+//! - `step` returns false only when nothing was schedulable anywhere.
+//! - `take_finished*` transfers ownership of finished outputs exactly once.
+
+use crate::adapter::AdapterRegistry;
+use crate::config::EngineConfig;
+use crate::engine::{Engine, Executor};
+use crate::metrics::Metrics;
+use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams};
+
+pub trait EngineDriver {
+    /// Submit with queue priority and a multi-tenant cache salt — the one
+    /// required submission entrypoint; the convenience forms default to it.
+    fn submit_salted(
+        &mut self,
+        target: ModelTarget,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        priority: bool,
+        cache_salt: u64,
+    ) -> anyhow::Result<RequestId>;
+
+    fn submit_with_priority(
+        &mut self,
+        target: ModelTarget,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        priority: bool,
+    ) -> anyhow::Result<RequestId> {
+        self.submit_salted(target, prompt, params, priority, 0)
+    }
+
+    fn submit(
+        &mut self,
+        target: ModelTarget,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+    ) -> anyhow::Result<RequestId> {
+        self.submit_salted(target, prompt, params, false, 0)
+    }
+
+    /// Drive one step; false = nothing schedulable (caller advances the
+    /// clock to the next arrival or stops).
+    fn step(&mut self) -> bool;
+
+    fn clock(&self) -> f64;
+
+    /// Advance the virtual clock (never backwards).
+    fn advance_clock_to(&mut self, t: f64);
+
+    fn has_work(&self) -> bool;
+
+    fn num_waiting(&self) -> usize;
+
+    fn num_running(&self) -> usize;
+
+    /// Drain all finished request records (ownership transferred).
+    fn take_finished(&mut self) -> Vec<RequestOutput>;
+
+    /// Finished-but-undrained count (completion-drain polling).
+    fn finished_pending(&self) -> usize;
+
+    /// Drain only the finished outputs `pred` selects, leaving the rest
+    /// for whoever owns them (the coordinator's completion intake).
+    fn take_finished_where<F: FnMut(&RequestOutput) -> bool>(
+        &mut self,
+        pred: F,
+    ) -> Vec<RequestOutput>;
+
+    /// Driver-level metrics: where the coordinator records per-stage
+    /// series. For a cluster this is the fleet registry, not a replica's.
+    fn metrics(&self) -> &Metrics;
+
+    fn metrics_mut(&mut self) -> &mut Metrics;
+
+    /// The engine configuration (identical across a cluster's replicas).
+    fn config(&self) -> &EngineConfig;
+
+    /// The adapter registry (identical across a cluster's replicas).
+    fn registry(&self) -> &AdapterRegistry;
+
+    /// Prometheus exposition for `/metrics`. Clusters override to add
+    /// per-replica labeled families and routing counters.
+    fn render_prometheus(&self) -> String {
+        self.metrics().render_prometheus()
+    }
+
+    /// Fleet stats for `GET /cluster`; None for a single engine.
+    fn cluster_stats(&self) -> Option<crate::cluster::ClusterStats> {
+        None
+    }
+
+    /// Run until every submitted request has finished; panics on stall
+    /// (request too large for capacity) rather than spinning.
+    fn run_until_idle(&mut self) {
+        while self.has_work() {
+            if !self.step() {
+                panic!(
+                    "driver stalled: {} waiting / {} running but nothing schedulable",
+                    self.num_waiting(),
+                    self.num_running()
+                );
+            }
+        }
+    }
+}
+
+impl<E: Executor> EngineDriver for Engine<E> {
+    fn submit_salted(
+        &mut self,
+        target: ModelTarget,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        priority: bool,
+        cache_salt: u64,
+    ) -> anyhow::Result<RequestId> {
+        Engine::submit_salted(self, target, prompt, params, priority, cache_salt)
+    }
+
+    fn step(&mut self) -> bool {
+        Engine::step(self)
+    }
+
+    fn clock(&self) -> f64 {
+        Engine::clock(self)
+    }
+
+    fn advance_clock_to(&mut self, t: f64) {
+        Engine::advance_clock_to(self, t)
+    }
+
+    fn has_work(&self) -> bool {
+        Engine::has_work(self)
+    }
+
+    fn num_waiting(&self) -> usize {
+        Engine::num_waiting(self)
+    }
+
+    fn num_running(&self) -> usize {
+        Engine::num_running(self)
+    }
+
+    fn take_finished(&mut self) -> Vec<RequestOutput> {
+        Engine::take_finished(self)
+    }
+
+    fn finished_pending(&self) -> usize {
+        Engine::finished_pending(self)
+    }
+
+    fn take_finished_where<F: FnMut(&RequestOutput) -> bool>(
+        &mut self,
+        pred: F,
+    ) -> Vec<RequestOutput> {
+        Engine::take_finished_where(self, pred)
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.metrics
+    }
+
+    fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    fn registry(&self) -> &AdapterRegistry {
+        &self.registry
+    }
+
+    fn run_until_idle(&mut self) {
+        Engine::run_until_idle(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::AdapterRegistry;
+    use crate::config::presets;
+    use crate::simulator::SimExecutor;
+
+    /// Generic driver code must behave identically to direct engine calls.
+    fn drive<D: EngineDriver>(d: &mut D) -> Vec<RequestOutput> {
+        let id = d
+            .submit(ModelTarget::Base, (0..40).collect(), SamplingParams::default())
+            .unwrap();
+        d.run_until_idle();
+        let outs = d.take_finished();
+        assert!(outs.iter().any(|o| o.id == id));
+        outs
+    }
+
+    #[test]
+    fn engine_drives_through_the_trait() {
+        let cfg = presets::tiny();
+        let reg = AdapterRegistry::tiny_default(3, 512, 4);
+        let mut e = Engine::with_registry(cfg.clone(), reg, SimExecutor::new(&cfg));
+        let outs = drive(&mut e);
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].output_tokens.len(), 16);
+        assert_eq!(EngineDriver::metrics(&e).requests_finished, 1);
+        assert_eq!(e.config().model.name, "tiny");
+        assert_eq!(EngineDriver::registry(&e).len(), 3);
+        assert!(e.cluster_stats().is_none());
+    }
+
+    #[test]
+    fn tenant_salts_partition_the_prefix_cache() {
+        let cfg = presets::tiny();
+        let reg = AdapterRegistry::tiny_default(3, 512, 4);
+        let mut e = Engine::with_registry(cfg.clone(), reg, SimExecutor::new(&cfg));
+        let prompt: Vec<u32> = (0..64).collect();
+        let p = SamplingParams { max_new_tokens: 4, ..Default::default() };
+        let a = e
+            .submit_salted(ModelTarget::Base, prompt.clone(), p, false, 111)
+            .unwrap();
+        let a_out = e.run_to_completion(a);
+        assert_eq!(a_out.num_cached_tokens, 0);
+        // Different tenant, identical prompt: must NOT hit tenant A's blocks.
+        let b = e
+            .submit_salted(ModelTarget::Base, prompt.clone(), p, false, 222)
+            .unwrap();
+        assert_eq!(e.run_to_completion(b).num_cached_tokens, 0, "cross-tenant hit");
+        // Same tenant again: full reuse of its own prefix.
+        let a2 = e
+            .submit_salted(ModelTarget::Base, prompt, p, false, 111)
+            .unwrap();
+        assert_eq!(e.run_to_completion(a2).num_cached_tokens, 48);
+    }
+}

@@ -15,18 +15,21 @@
 //! the real executor by measured wall time, so Table-2 metrics come out of
 //! the same pipeline either way.
 
+pub mod driver;
 pub mod mask;
 
 use crate::util::fxmap::FxHashMap;
 
 use crate::adapter::AdapterRegistry;
 use crate::config::EngineConfig;
+use crate::kvcache::block::BlockHash;
 use crate::kvcache::manager::KvCacheManager;
 use crate::kvcache::prefix::next_block_hash;
 use crate::metrics::Metrics;
 use crate::request::{ModelTarget, Request, RequestId, RequestOutput, SamplingParams, State};
 use crate::scheduler::{ScheduledStep, Scheduler};
 
+pub use driver::EngineDriver;
 pub use mask::{build_batch_mask, BatchMask};
 
 /// Result of executing one scheduled step.
@@ -63,6 +66,10 @@ pub struct Engine<E: Executor> {
     reqs: FxHashMap<RequestId, Request>,
     clock: f64,
     next_id: u64,
+    /// Request-id increment. 1 standalone; a cluster partitions the id
+    /// space across replicas (replica i issues i, i+n, i+2n, ...) so
+    /// outputs carry fleet-unique ids without translation.
+    id_stride: u64,
     finished: Vec<RequestOutput>,
 }
 
@@ -87,6 +94,7 @@ impl<E: Executor> Engine<E> {
             reqs: FxHashMap::default(),
             clock: 0.0,
             next_id: 0,
+            id_stride: 1,
             metrics: Metrics::new(),
             finished: Vec::new(),
             cfg,
@@ -120,6 +128,38 @@ impl<E: Executor> Engine<E> {
         self.kv.stats()
     }
 
+    pub fn num_free_blocks(&self) -> u32 {
+        self.kv.num_free_blocks()
+    }
+
+    pub fn num_total_blocks(&self) -> u32 {
+        self.kv.num_total_blocks()
+    }
+
+    /// Routable view of this engine's committed KV hashes (what a cluster
+    /// router scores prefix affinity against).
+    pub fn routing_summary(&self) -> &crate::kvcache::summary::HashSummary {
+        self.kv.routing_summary()
+    }
+
+    /// True while no request has ever been submitted and no id namespace
+    /// applied — the state [`crate::cluster::Cluster`] requires of the
+    /// replicas it wraps (fallible constructors check this instead of
+    /// tripping [`Engine::set_id_namespace`]'s assert).
+    pub fn is_fresh(&self) -> bool {
+        self.next_id == 0 && self.id_stride == 1 && self.reqs.is_empty()
+    }
+
+    /// Partition the request-id space for cluster membership: this engine
+    /// will issue ids `start, start + stride, ...`. Must be called before
+    /// any submission — replica ids are a construction-time property.
+    pub fn set_id_namespace(&mut self, start: u64, stride: u64) {
+        assert!(stride > 0, "zero id stride");
+        assert!(self.is_fresh(), "id namespace must be set before any submission");
+        self.next_id = start;
+        self.id_stride = stride;
+    }
+
     pub fn executor(&self) -> &E {
         &self.exec
     }
@@ -151,6 +191,46 @@ impl<E: Executor> Engine<E> {
         params: SamplingParams,
         priority: bool,
     ) -> anyhow::Result<RequestId> {
+        self.submit_salted(target, prompt, params, priority, 0)
+    }
+
+    /// Full submission form: adds the multi-tenant `cache_salt` (vLLM
+    /// semantics: nonzero salts partition the prefix cache so tenants can
+    /// never hit each other's blocks; 0 = unsalted shared cache).
+    pub fn submit_salted(
+        &mut self,
+        target: ModelTarget,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        priority: bool,
+        cache_salt: u64,
+    ) -> anyhow::Result<RequestId> {
+        self.submit_prehashed(target, prompt, params, priority, cache_salt, Vec::new())
+    }
+
+    /// Like [`submit_salted`](Self::submit_salted), pre-seeding the
+    /// request's block-hash chain. The cluster router already hashed the
+    /// prompt's chain to score replica affinity; admission reuses it
+    /// instead of rehashing (chain entries are deterministic in
+    /// (tokens, salting context), so the scheduler rebuilds only when the
+    /// token stream has outgrown the chain). Pass an empty chain to hash
+    /// lazily at admission.
+    ///
+    /// Crate-private on purpose: the chain's *content* is trusted (only
+    /// its length is checked, and only in debug builds), so a caller
+    /// passing a chain hashed under a different salt or prompt could
+    /// alias another tenant's blocks. The cluster router derives its
+    /// chain from the same `request_hash_context` as this method, which
+    /// is what makes the trust sound.
+    pub(crate) fn submit_prehashed(
+        &mut self,
+        target: ModelTarget,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        priority: bool,
+        cache_salt: u64,
+        chain: Vec<BlockHash>,
+    ) -> anyhow::Result<RequestId> {
         let final_len = prompt.len() + params.max_new_tokens as usize;
         anyhow::ensure!(
             final_len <= self.cfg.scheduler.max_seq_len as usize,
@@ -162,31 +242,33 @@ impl<E: Executor> Engine<E> {
             "request length {final_len} exceeds KV capacity"
         );
         let id = RequestId(self.next_id);
-        self.next_id += 1;
+        self.next_id += self.id_stride;
         let mut req = Request::new(id, target, prompt, params, self.clock);
 
-        // aLoRA identification (paper Figure 5): locate the activation
-        // point; LoRA adapts everything (activation at 0); base adapts
-        // nothing (activation at prompt end, i.e. "never" for the prompt).
-        if let ModelTarget::Adapter(aid) = target {
-            let adapter = self
-                .registry
-                .get(aid)
-                .ok_or_else(|| anyhow::anyhow!("unknown adapter {aid:?}"))?;
-            req.activation_start = match self.registry.find_activation(aid, &req.prompt) {
-                Some(act) => act.start(req.prompt.len()),
-                None => {
-                    debug_assert!(!adapter.is_alora());
-                    0 // standard LoRA: adapted from the first token
-                }
-            };
-            req.hash_ctx = self.registry.hash_context(
-                Some(aid),
-                req.activation_start,
+        // Activation scan + salting policy, shared with the cluster router
+        // (AdapterRegistry::request_hash_context is the single source of
+        // truth so routing chains stay byte-identical to admission's).
+        let (activation_start, hash_ctx) = self
+            .registry
+            .request_hash_context(
+                target.adapter(),
+                &req.prompt,
                 self.cfg.cache.base_aligned_hashing,
-                0,
-            );
-        }
+                cache_salt,
+            )
+            .ok_or_else(|| {
+                // None is only reachable for an adapter target.
+                let aid = target.adapter().expect("base target cannot be unknown");
+                anyhow::anyhow!("unknown adapter {aid:?}")
+            })?;
+        req.activation_start = activation_start;
+        req.hash_ctx = hash_ctx;
+        debug_assert!(
+            chain.is_empty()
+                || chain.len() == req.prompt.len() / self.cfg.cache.block_size as usize,
+            "pre-seeded chain must cover exactly the prompt's full blocks"
+        );
+        req.hash_chain = chain;
 
         self.metrics.requests_received += 1;
         self.metrics.prompt_tokens += req.prompt.len() as u64;
@@ -521,6 +603,31 @@ mod tests {
             .unwrap();
         let out = e.run_to_completion(al);
         assert_eq!(out.num_cached_tokens, 0, "feature off: adapter isolated");
+    }
+
+    #[test]
+    fn prehashed_chain_behaves_like_lazy_hashing() {
+        use crate::kvcache::prefix::{block_hashes, HashContext};
+        let mut e = tiny_engine();
+        let p = SamplingParams { max_new_tokens: 4, ..Default::default() };
+        let prompt: Vec<u32> = (0..64).collect();
+        let warm = e.submit(ModelTarget::Base, prompt.clone(), p).unwrap();
+        e.run_to_completion(warm);
+        // A router-style pre-seeded chain must hit exactly what a lazily
+        // hashed submission of the same prompt hits.
+        let chain = block_hashes(
+            &prompt,
+            e.cfg.cache.block_size as usize,
+            &HashContext::base(),
+        );
+        let pre = e
+            .submit_prehashed(ModelTarget::Base, prompt.clone(), p, false, 0, chain)
+            .unwrap();
+        let pre_out = e.run_to_completion(pre);
+        let lazy = e.submit(ModelTarget::Base, prompt, p).unwrap();
+        let lazy_out = e.run_to_completion(lazy);
+        assert_eq!(pre_out.num_cached_tokens, 48);
+        assert_eq!(pre_out.num_cached_tokens, lazy_out.num_cached_tokens);
     }
 
     #[test]

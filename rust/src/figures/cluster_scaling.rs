@@ -1,0 +1,143 @@
+//! Cluster scaling: the paper's Figure-9 story lifted to the fleet level.
+//!
+//! Inside one engine, base-aligned hashing makes adapter follow-ups reuse
+//! the base model's KV (Figure 9). Across N replicas that reuse only
+//! survives if the router sends each follow-up where its prefix lives.
+//! This figure runs the same multi-turn multi-adapter Poisson workload —
+//! per-replica arrival rate held constant while the fleet grows — under
+//! `PrefixAffinity` and `RoundRobin` routing, and reports aggregate
+//! throughput (total tokens / fleet makespan) and fleet-wide prefix
+//! hit-rate per (replicas, policy) point. The headline shape: affinity
+//! holds the single-engine hit-rate roughly flat as replicas grow, while
+//! round-robin's collapses toward `1/N` of it — and the lost reuse shows
+//! up as lost aggregate throughput.
+
+use crate::adapter::AdapterId;
+use crate::cluster::{Cluster, RoutePolicy};
+use crate::pipeline::{self, PipelineKind, PipelineSpec};
+use crate::simulator::SimExecutor;
+
+use super::Table;
+
+fn replica_counts(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![1, 2, 4]
+    } else {
+        vec![1, 2, 4, 8]
+    }
+}
+
+const N_ADAPTERS: u32 = 3;
+
+fn mk_cluster(n: usize, policy: RoutePolicy) -> Cluster<SimExecutor> {
+    Cluster::from_factory(n, policy, |_| super::make_engine("granite-8b", true, N_ADAPTERS))
+        .expect("cluster construction")
+}
+
+fn spec() -> PipelineSpec {
+    // Multi-turn multi-adapter conversation: base draft → 3 adapter evals
+    // → consolidated base call (paper §4.4.1 shape).
+    PipelineSpec {
+        kind: PipelineKind::MultiAdapter,
+        prompt_len: 1024,
+        base_gen: 64,
+        eval_gen: 16,
+        adapters: (0..N_ADAPTERS).map(AdapterId).collect(),
+        base2_gen: 16,
+        priority_continuations: false,
+    }
+}
+
+/// One (replicas, policy) measurement.
+pub fn run_point(
+    replicas: usize,
+    policy: RoutePolicy,
+    conversations_per_replica: usize,
+    rate_per_replica: f64,
+) -> (f64, f64, Cluster<SimExecutor>) {
+    let mut c = mk_cluster(replicas, policy);
+    let n = conversations_per_replica * replicas;
+    let rate = rate_per_replica * replicas as f64;
+    let r = pipeline::run_poisson(&mut c, &spec(), n, rate, 42);
+    let throughput = if r.makespan > 0.0 {
+        c.total_tokens_processed() as f64 / r.makespan
+    } else {
+        0.0
+    };
+    (throughput, c.aggregate_hit_rate(), c)
+}
+
+pub fn run(quick: bool) -> Table {
+    let per_replica = if quick { 10 } else { 40 };
+    let rate = 4.0;
+    let mut t = Table::new(
+        "cluster_scaling",
+        &format!(
+            "aggregate throughput & prefix hit-rate vs replicas, \
+             affinity vs round-robin ({per_replica} conv/replica @ {rate}/s/replica)"
+        ),
+        &[
+            "replicas",
+            "policy",
+            "agg_tok_s",
+            "prefix_hit_rate",
+            "e2e_mean_s",
+            "affinity_hits",
+            "fallbacks",
+            "imbalance",
+        ],
+    );
+    for &k in &replica_counts(quick) {
+        for policy in [RoutePolicy::PrefixAffinity, RoutePolicy::RoundRobin] {
+            let (tput, hit, c) = run_point(k, policy, per_replica, rate);
+            let e2e_mean = c.aggregate_metrics().all.mean("e2e");
+            let stats = &c.router().stats;
+            t.push(
+                &[k.to_string(), policy.name().to_string()],
+                &[
+                    tput,
+                    hit,
+                    e2e_mean,
+                    stats.affinity_hits as f64,
+                    stats.affinity_fallbacks as f64,
+                    stats.imbalance(),
+                ],
+            );
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineDriver;
+
+    #[test]
+    fn affinity_preserves_hit_rate_across_scale_out() {
+        let (_, hit_aff, c) = run_point(2, RoutePolicy::PrefixAffinity, 8, 4.0);
+        let (_, hit_rr, _) = run_point(2, RoutePolicy::RoundRobin, 8, 4.0);
+        assert!(
+            hit_aff > hit_rr,
+            "affinity {hit_aff:.3} must beat round-robin {hit_rr:.3}"
+        );
+        // Follow-up stages (4 per conversation) found a warm replica.
+        assert!(c.router().stats.affinity_hits > 0);
+        assert!(!c.has_work(), "workload drained");
+    }
+
+    #[test]
+    fn table_shape() {
+        let t = run(true);
+        assert_eq!(t.rows.len(), 6); // 3 replica counts × 2 policies
+        for v in t.col("agg_tok_s") {
+            assert!(v > 0.0);
+        }
+        for v in t.col("prefix_hit_rate") {
+            assert!((0.0..=1.0).contains(&v));
+        }
+        for v in t.col("e2e_mean_s") {
+            assert!(v > 0.0);
+        }
+    }
+}

@@ -11,9 +11,12 @@
 //! Figure index (DESIGN.md §4): T1 configs · F6 prompt-length sweep ·
 //! F7 throughput@65k · F8 async rates · F9 rate×length grid · F10
 //! gen-length + multi-adapter · F11 adapter-base · F12 TTFT/inference ·
-//! F13/14 async full-step breakdowns · F15 KV-filling batch sizes.
+//! F13/14 async full-step breakdowns · F15 KV-filling batch sizes ·
+//! cluster_scaling (ours, beyond the paper): fleet-level hit-rate and
+//! throughput vs replica count under affinity vs round-robin routing.
 
 pub mod ablations;
+pub mod cluster_scaling;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12;
@@ -222,6 +225,7 @@ pub fn run_all(quick: bool) -> Vec<Table> {
     out.push(fig12::run(quick));
     out.extend(fig13_14::run(quick));
     out.push(fig15::run(quick));
+    out.push(cluster_scaling::run(quick));
     out
 }
 
@@ -240,8 +244,11 @@ pub fn run_by_id(id: &str, quick: bool) -> Vec<Table> {
         "fig12" => vec![fig12::run(quick)],
         "fig13_14" => fig13_14::run(quick),
         "fig15" => vec![fig15::run(quick)],
+        "cluster" | "cluster_scaling" => vec![cluster_scaling::run(quick)],
         "ablations" => ablations::run_all(),
-        other => panic!("unknown figure id `{other}` (try table1, fig6..fig15, ablations, all)"),
+        other => panic!(
+            "unknown figure id `{other}` (try table1, fig6..fig15, cluster, ablations, all)"
+        ),
     }
 }
 

@@ -8,6 +8,8 @@
 
 use crate::util::fxmap::FxHashMap;
 
+use super::summary::HashSummary;
+
 /// Physical block index into the (simulated or real) KV arena.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct BlockId(pub u32);
@@ -49,6 +51,10 @@ pub struct BlockPool {
     free_tail: usize,
     free_count: usize,
     stats: PoolStats,
+    /// Routable sketch of the committed hashes, maintained on the same
+    /// commit/evict events that update `by_hash` (cluster routing reads it
+    /// through `KvCacheManager::routing_summary`).
+    summary: HashSummary,
 }
 
 const NONE: usize = usize::MAX;
@@ -71,6 +77,7 @@ impl BlockPool {
             free_tail: NONE,
             free_count: 0,
             stats: PoolStats::default(),
+            summary: HashSummary::new(),
         };
         // All blocks start free (and hashless).
         for i in 0..num_blocks {
@@ -97,6 +104,11 @@ impl BlockPool {
 
     pub fn hash_of(&self, b: BlockId) -> Option<BlockHash> {
         self.meta[b.0 as usize].hash
+    }
+
+    /// The routable committed-hash summary (see [`HashSummary`]).
+    pub fn routing_summary(&self) -> &HashSummary {
+        &self.summary
     }
 
     // -- free-list plumbing --------------------------------------------------
@@ -177,6 +189,7 @@ impl BlockPool {
         let i = b.0 as usize;
         if let Some(h) = self.meta[i].hash.take() {
             self.by_hash.remove(&h);
+            self.summary.remove(h);
             self.stats.evictions += 1;
         }
         self.meta[i].ref_count = 1;
@@ -195,6 +208,7 @@ impl BlockPool {
         }
         self.meta[i].hash = Some(hash);
         self.by_hash.entry(hash).or_insert(b);
+        self.summary.insert(hash);
     }
 
     /// Add a reference to an already-referenced block (shared prefix).
@@ -248,6 +262,13 @@ impl BlockPool {
             if self.meta[b.0 as usize].hash != Some(*h) {
                 return Err(format!("hash map points at block {b:?} w/o that hash"));
             }
+        }
+        let hashed = self.meta.iter().filter(|m| m.hash.is_some()).count() as u64;
+        if self.summary.committed_blocks() != hashed {
+            return Err(format!(
+                "routing summary tracks {} committed blocks, pool holds {hashed}",
+                self.summary.committed_blocks()
+            ));
         }
         Ok(())
     }
@@ -348,6 +369,24 @@ mod tests {
         let b = p.alloc().unwrap();
         p.free(b);
         p.free(b);
+    }
+
+    #[test]
+    fn routing_summary_follows_commit_and_evict() {
+        let mut p = BlockPool::new(2);
+        let b0 = p.alloc().unwrap();
+        p.commit_hash(b0, BlockHash(11));
+        assert!(p.routing_summary().maybe_contains(BlockHash(11)));
+        assert_eq!(p.routing_summary().committed_blocks(), 1);
+        p.free(b0);
+        // Freed-but-cached blocks stay routable until evicted.
+        assert!(p.routing_summary().maybe_contains(BlockHash(11)));
+        let b1 = p.alloc().unwrap(); // never-hashed block allocated first
+        assert_ne!(b1, b0);
+        let _evictor = p.alloc().unwrap(); // evicts b0's hash
+        assert!(!p.routing_summary().maybe_contains(BlockHash(11)));
+        assert_eq!(p.routing_summary().committed_blocks(), 0);
+        p.check_invariants().unwrap();
     }
 
     #[test]

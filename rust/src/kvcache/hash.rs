@@ -35,6 +35,22 @@ pub struct ExtraKeys {
     pub cache_salt: u64,
 }
 
+/// Derive a multi-tenant cache salt from a tenant identifier string.
+/// Guaranteed nonzero (0 means "no salt" throughout the cache layer), and
+/// stable across runs so tenants keep hitting their own cached prefixes.
+pub fn tenant_salt(tenant: &str) -> u64 {
+    let mut h = ROOT;
+    for b in tenant.bytes() {
+        h = mix(h, b as u64 + 1);
+    }
+    h = mix(h, 0x7E4A);
+    if h == 0 {
+        1
+    } else {
+        h
+    }
+}
+
 /// Hash one full block given its parent's hash (None for the first block),
 /// the tokens inside the block, and the extra keys.
 pub fn block_hash(parent: Option<BlockHash>, tokens: &[u32], extra: ExtraKeys) -> BlockHash {
@@ -100,6 +116,14 @@ mod tests {
         let a = block_hash(None, &[1], ExtraKeys { adapter_salt: None, cache_salt: 0 });
         let b = block_hash(None, &[1], ExtraKeys { adapter_salt: None, cache_salt: 7 });
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn tenant_salt_stable_nonzero_distinct() {
+        assert_eq!(tenant_salt("acme"), tenant_salt("acme"));
+        assert_ne!(tenant_salt("acme"), tenant_salt("acme2"));
+        assert_ne!(tenant_salt(""), 0);
+        assert_ne!(tenant_salt("acme"), 0);
     }
 
     #[test]

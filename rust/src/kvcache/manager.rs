@@ -11,6 +11,7 @@
 use crate::util::fxmap::FxHashMap;
 
 use super::block::{BlockHash, BlockId, BlockPool, PoolStats};
+use super::summary::HashSummary;
 
 /// Opaque request key (the engine's RequestId.0).
 pub type ReqKey = u64;
@@ -88,6 +89,13 @@ impl KvCacheManager {
         let mut s = self.stats;
         s.pool = self.pool.stats();
         s
+    }
+
+    /// Routable view of the committed hashes: what this cache could serve a
+    /// hash chain from, as a compact summary a cluster router can score
+    /// against (fed by the pool's commit/eviction events — no pool walk).
+    pub fn routing_summary(&self) -> &HashSummary {
+        self.pool.routing_summary()
     }
 
     /// Peek: how many leading blocks of this hash chain are cached right

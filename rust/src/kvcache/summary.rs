@@ -1,0 +1,171 @@
+//! Routable summary of a cache's committed block hashes.
+//!
+//! The cluster router needs to ask "how much of this request's hash chain
+//! does replica R already hold?" without walking R's whole block pool (in a
+//! real deployment the router is a separate process and replicas publish
+//! summaries, not pools). [`HashSummary`] is a counting sketch over the
+//! committed hashes: one u32 counter per slot, indexed by `hash % slots`.
+//! [`super::block::BlockPool`] feeds it incrementally — +1 when a block's
+//! hash is committed, -1 when an eviction drops it — so the summary tracks
+//! exactly the set of resurrectable blocks, at O(1) per event.
+//!
+//! Like any sketch it can report false positives (two hashes sharing a
+//! slot), never false negatives; for routing that only means an occasional
+//! overestimated affinity score, which the least-loaded tie-break absorbs.
+
+use super::block::BlockHash;
+
+/// Default slot count: 4096 × 4 bytes = 16 KiB per replica, collision
+/// probability ~n/4096 for n committed blocks — plenty for routing.
+pub const DEFAULT_SLOTS: usize = 4096;
+
+#[derive(Debug, Clone)]
+pub struct HashSummary {
+    counts: Vec<u32>,
+    /// Live committed hashes (inserts minus removes).
+    committed: u64,
+}
+
+impl Default for HashSummary {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HashSummary {
+    pub fn new() -> Self {
+        Self::with_slots(DEFAULT_SLOTS)
+    }
+
+    pub fn with_slots(slots: usize) -> Self {
+        assert!(slots > 0, "empty summary");
+        HashSummary { counts: vec![0; slots], committed: 0 }
+    }
+
+    #[inline]
+    fn slot(&self, h: BlockHash) -> usize {
+        // Block hashes are already well-mixed (kvcache::hash), so plain
+        // modulo distributes evenly.
+        (h.0 % self.counts.len() as u64) as usize
+    }
+
+    /// A block with this hash was committed (shareable from now on).
+    #[inline]
+    pub fn insert(&mut self, h: BlockHash) {
+        let s = self.slot(h);
+        self.counts[s] += 1;
+        self.committed += 1;
+    }
+
+    /// A block with this hash was evicted.
+    #[inline]
+    pub fn remove(&mut self, h: BlockHash) {
+        let s = self.slot(h);
+        debug_assert!(self.counts[s] > 0, "summary remove without insert");
+        self.counts[s] = self.counts[s].saturating_sub(1);
+        self.committed = self.committed.saturating_sub(1);
+    }
+
+    /// May the cache hold a committed block with this hash? (No false
+    /// negatives.)
+    #[inline]
+    pub fn maybe_contains(&self, h: BlockHash) -> bool {
+        self.counts[self.slot(h)] > 0
+    }
+
+    /// Live committed-hash count (exact, not sketched).
+    pub fn committed_blocks(&self) -> u64 {
+        self.committed
+    }
+
+    /// Length of the leading run of `chain` this summary may contain — the
+    /// affinity score a router assigns this cache for a request whose full
+    /// block-hash chain is `chain`. Prefix semantics mirror admission
+    /// (`KvCacheManager::start_request` stops at the first miss).
+    pub fn matching_prefix(&self, chain: &[BlockHash]) -> usize {
+        let mut n = 0;
+        for &h in chain {
+            if self.maybe_contains(h) {
+                n += 1;
+            } else {
+                break;
+            }
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h(x: u64) -> BlockHash {
+        // Spread values so tests don't collide in the default sketch.
+        BlockHash(x.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[test]
+    fn insert_remove_roundtrip() {
+        let mut s = HashSummary::new();
+        assert!(!s.maybe_contains(h(1)));
+        s.insert(h(1));
+        assert!(s.maybe_contains(h(1)));
+        assert_eq!(s.committed_blocks(), 1);
+        s.remove(h(1));
+        assert!(!s.maybe_contains(h(1)));
+        assert_eq!(s.committed_blocks(), 0);
+    }
+
+    #[test]
+    fn duplicate_hashes_counted() {
+        // Two physical blocks may commit the same content hash; the slot
+        // must survive one of them being evicted.
+        let mut s = HashSummary::new();
+        s.insert(h(7));
+        s.insert(h(7));
+        s.remove(h(7));
+        assert!(s.maybe_contains(h(7)));
+        s.remove(h(7));
+        assert!(!s.maybe_contains(h(7)));
+    }
+
+    #[test]
+    fn matching_prefix_stops_at_first_miss() {
+        let mut s = HashSummary::new();
+        let chain: Vec<BlockHash> = (0..6).map(h).collect();
+        for &x in &chain[..3] {
+            s.insert(x);
+        }
+        s.insert(chain[4]); // present but unreachable past the gap at [3]
+        assert_eq!(s.matching_prefix(&chain), 3);
+        assert_eq!(s.matching_prefix(&chain[..2]), 2);
+        assert_eq!(s.matching_prefix(&[]), 0);
+    }
+
+    #[test]
+    fn no_false_negatives_under_churn() {
+        use crate::util::prop;
+        prop::check("summary-churn", 20, |rng, _| {
+            let mut s = HashSummary::with_slots(64); // force collisions
+            let mut live: Vec<BlockHash> = Vec::new();
+            for _ in 0..300 {
+                if rng.next_below(2) == 0 {
+                    let x = h(rng.next_below(1 << 20));
+                    s.insert(x);
+                    live.push(x);
+                } else if let Some(x) = live.pop() {
+                    s.remove(x);
+                }
+                for x in &live {
+                    if !s.maybe_contains(*x) {
+                        return Err(format!("false negative for {x:?}"));
+                    }
+                }
+            }
+            if s.committed_blocks() != live.len() as u64 {
+                return Err("committed count drifted".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -9,8 +9,10 @@
 //!   with *base-aligned prefix caching* (the paper's contribution),
 //!   adapter registry, activation-aware mask metadata, metrics, the
 //!   stage-graph [`coordinator`] orchestrating multi-adapter DAG
-//!   pipelines, the H100 discrete-event simulator, and a PJRT runtime
-//!   that executes the AOT-compiled model.
+//!   pipelines over any [`engine::EngineDriver`] — a single engine or a
+//!   [`cluster`] of replicas behind a prefix-affinity router — the H100
+//!   discrete-event simulator, and a PJRT runtime that executes the
+//!   AOT-compiled model.
 //! - **L2**: `python/compile/model.py` — the JAX transformer `step`
 //!   function, lowered once to `artifacts/tiny_step.hlo.txt`.
 //! - **L1**: `python/compile/kernels/` — Pallas kernels for the fused
@@ -36,6 +38,7 @@
 //! paper's table/figure reproductions.
 
 pub mod adapter;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod engine;

@@ -6,7 +6,9 @@
 //!            [--model granite-8b] [--prompt-len 1024] [--base-gen 256]
 //!            [--eval-gen 16] [--batch N] [--lora]           run one pipeline, print metrics
 //!   serve    [--preset granite-8b] [--addr 127.0.0.1:8471] [--real]
-//!            start the HTTP server (--real loads artifacts/ via PJRT)
+//!            [--replicas N] [--route affinity|rr|least-loaded]
+//!            start the HTTP server (--real loads artifacts/ via PJRT;
+//!            --replicas > 1 serves a routed simulator cluster)
 //!   info     print presets and build info
 //!
 //! (Arg parsing is hand-rolled — no clap in the offline build.)
@@ -14,6 +16,7 @@
 use std::collections::HashMap;
 
 use alora_serve::adapter::AdapterId;
+use alora_serve::cluster::{Cluster, RoutePolicy};
 use alora_serve::config::presets;
 use alora_serve::engine::Engine;
 use alora_serve::figures;
@@ -157,6 +160,13 @@ fn main() -> anyhow::Result<()> {
                 .cloned()
                 .unwrap_or_else(|| "127.0.0.1:8471".to_string());
             if flags.contains_key("real") {
+                // Fail fast rather than silently serving a single engine
+                // when fleet flags are given: the real runtime has no
+                // cluster mode yet (one PJRT artifact, one executor).
+                anyhow::ensure!(
+                    !flags.contains_key("replicas") && !flags.contains_key("route"),
+                    "--real serves a single engine; --replicas/--route apply to simulated serving only"
+                );
                 let dir = TinyModel::default_dir();
                 anyhow::ensure!(
                     TinyModel::artifacts_present(&dir),
@@ -177,14 +187,44 @@ fn main() -> anyhow::Result<()> {
                 park_forever(srv)?;
             } else {
                 let preset = flags.get("preset").map(String::as_str).unwrap_or("granite-8b");
-                let cfg = presets::by_name(preset)
-                    .ok_or_else(|| anyhow::anyhow!("unknown preset `{preset}`"))?;
-                let reg = workload::build_registry(3, cfg.model.vocab_size, true);
-                let exec = SimExecutor::new(&cfg);
-                let engine = Engine::with_registry(cfg, reg, exec);
-                let srv = Server::start(engine, &addr)?;
-                println!("serving SIMULATED {preset} on http://{}", srv.addr());
-                park_forever(srv)?;
+                let replicas: usize = match flags.get("replicas") {
+                    None => 1,
+                    Some(v) => v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--replicas must be an integer, got `{v}`"))?,
+                };
+                anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
+                let mk_engine = || -> anyhow::Result<Engine<SimExecutor>> {
+                    let cfg = presets::by_name(preset)
+                        .ok_or_else(|| anyhow::anyhow!("unknown preset `{preset}`"))?;
+                    let reg = workload::build_registry(3, cfg.model.vocab_size, true);
+                    let exec = SimExecutor::new(&cfg);
+                    Ok(Engine::with_registry(cfg, reg, exec))
+                };
+                // An explicit --route with one replica still gets the
+                // cluster wrapper (routing a fleet of 1 is valid and keeps
+                // GET /cluster available) instead of silently dropping it.
+                if replicas > 1 || flags.contains_key("route") {
+                    let route = flags.get("route").map(String::as_str).unwrap_or("affinity");
+                    let policy = RoutePolicy::parse(route)
+                        .ok_or_else(|| anyhow::anyhow!("unknown route policy `{route}`"))?;
+                    let mut engines = Vec::with_capacity(replicas);
+                    for _ in 0..replicas {
+                        engines.push(mk_engine()?);
+                    }
+                    let cluster = Cluster::new(engines, policy)?;
+                    let srv = Server::start(cluster, &addr)?;
+                    println!(
+                        "serving SIMULATED {preset} ×{replicas} ({} routing) on http://{}",
+                        policy.name(),
+                        srv.addr()
+                    );
+                    park_forever(srv)?;
+                } else {
+                    let srv = Server::start(mk_engine()?, &addr)?;
+                    println!("serving SIMULATED {preset} on http://{}", srv.addr());
+                    park_forever(srv)?;
+                }
             }
         }
         "info" => {
@@ -218,15 +258,15 @@ fn main() -> anyhow::Result<()> {
             println!("usage: alora-serve <figure|pipeline|serve|info> [flags]");
             println!("  figure   --id <table1|fig6|...|fig15|all> [--quick]");
             println!("  pipeline --kind <base-adapter|adapter-base|base-adapter-base|multi-adapter> [--model M] [--prompt-len N] [--lora]");
-            println!("  serve    [--preset granite-8b] [--addr host:port] [--real]");
+            println!("  serve    [--preset granite-8b] [--addr host:port] [--real] [--replicas N] [--route affinity|rr|least-loaded]");
             println!("  info");
         }
     }
     Ok(())
 }
 
-fn park_forever<E: alora_serve::engine::Executor + Send + 'static>(
-    srv: Server<E>,
+fn park_forever<D: alora_serve::engine::EngineDriver + Send + 'static>(
+    srv: Server<D>,
 ) -> anyhow::Result<()> {
     let _srv = srv;
     loop {

@@ -40,6 +40,17 @@ impl StageLatencies {
         self.e2e.len()
     }
 
+    /// Merge another series (cluster aggregation across replicas).
+    pub fn merge(&mut self, other: &StageLatencies) {
+        self.e2e.extend_from(&other.e2e);
+        self.queue.extend_from(&other.queue);
+        self.prefill.extend_from(&other.prefill);
+        self.decode.extend_from(&other.decode);
+        self.ttft.extend_from(&other.ttft);
+        self.itl.extend_from(&other.itl);
+        self.inference.extend_from(&other.inference);
+    }
+
     /// Mean of one named stage — the figure harness's accessor.
     pub fn mean(&self, stage: &str) -> f64 {
         match stage {
@@ -56,6 +67,71 @@ impl StageLatencies {
 }
 
 pub const STAGES: &[&str] = &["e2e", "queue", "prefill", "decode", "ttft", "itl", "inference"];
+
+/// Cluster routing counters: how placement decisions went. Lives here so
+/// the router and the Prometheus exposition agree on one definition.
+#[derive(Debug, Clone, Default)]
+pub struct RoutingMetrics {
+    /// Requests routed per replica (index = replica).
+    pub routed: Vec<u64>,
+    /// PrefixAffinity placements that found a warm replica.
+    pub affinity_hits: u64,
+    /// PrefixAffinity placements that fell back to least-loaded (cold).
+    pub affinity_fallbacks: u64,
+    /// Cached blocks the chosen replicas held at placement time (an upper
+    /// bound on admission hits: eviction can still race the request).
+    pub affinity_blocks_matched: u64,
+}
+
+impl RoutingMetrics {
+    pub fn new(n_replicas: usize) -> Self {
+        RoutingMetrics { routed: vec![0; n_replicas], ..Default::default() }
+    }
+
+    pub fn total_routed(&self) -> u64 {
+        self.routed.iter().sum()
+    }
+
+    /// Placement imbalance: max over mean per-replica routed count.
+    /// 1.0 = perfectly balanced; ~N = everything on one of N replicas.
+    pub fn imbalance(&self) -> f64 {
+        let total = self.total_routed();
+        if self.routed.is_empty() || total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / self.routed.len() as f64;
+        let max = *self.routed.iter().max().unwrap() as f64;
+        max / mean
+    }
+
+    /// Prometheus families for the routing layer (`alora_serve_router_*`).
+    pub fn render_prometheus(&self) -> String {
+        let mut s = String::new();
+        s.push_str(
+            "# HELP alora_serve_router_requests_routed_total Requests routed per replica\n\
+             # TYPE alora_serve_router_requests_routed_total counter\n",
+        );
+        for (i, n) in self.routed.iter().enumerate() {
+            s.push_str(&format!(
+                "alora_serve_router_requests_routed_total{{replica=\"{i}\"}} {n}\n"
+            ));
+        }
+        for (name, help, v) in [
+            ("affinity_hits_total", "Warm prefix placements", self.affinity_hits),
+            ("affinity_fallbacks_total", "Cold-prefix least-loaded fallbacks", self.affinity_fallbacks),
+            ("affinity_blocks_matched_total", "Cached blocks held by chosen replicas", self.affinity_blocks_matched),
+        ] {
+            s.push_str(&format!(
+                "# HELP alora_serve_router_{name} {help}\n# TYPE alora_serve_router_{name} counter\nalora_serve_router_{name} {v}\n"
+            ));
+        }
+        s.push_str(&format!(
+            "# HELP alora_serve_router_imbalance Max/mean routed per replica\n# TYPE alora_serve_router_imbalance gauge\nalora_serve_router_imbalance {}\n",
+            self.imbalance()
+        ));
+        s
+    }
+}
 
 /// Cap on distinct per-stage-name series (see [`Metrics::observe_stage`]).
 pub const MAX_STAGE_SERIES: usize = 256;
@@ -156,6 +232,76 @@ impl Metrics {
         }
     }
 
+    /// Fold another registry into this one (cluster `/metrics`
+    /// aggregation): counters and gauges sum, the clock takes the max
+    /// (replicas run in parallel — fleet time is the slowest replica's),
+    /// latency series and histograms merge sample-exactly.
+    pub fn absorb(&mut self, o: &Metrics) {
+        self.absorb_scalars(o);
+        self.all.merge(&o.all);
+        self.base.merge(&o.base);
+        self.adapter.merge(&o.adapter);
+        for (name, lat) in &o.stage {
+            self.stage.entry(name.clone()).or_default().merge(lat);
+        }
+    }
+
+    /// The O(1) part of [`Metrics::absorb`]: counters, gauges, clock and
+    /// the fixed-bucket histograms — everything `render_prometheus`
+    /// actually exposes. The cluster's `/metrics` path uses this so a
+    /// scrape never copies the raw latency sample vectors, which grow
+    /// with every request served and are not rendered anyway.
+    pub fn absorb_scalars(&mut self, o: &Metrics) {
+        self.requests_received += o.requests_received;
+        self.requests_finished += o.requests_finished;
+        self.requests_preempted += o.requests_preempted;
+        self.prompt_tokens += o.prompt_tokens;
+        self.generated_tokens += o.generated_tokens;
+        self.engine_steps += o.engine_steps;
+        self.prefill_tokens_computed += o.prefill_tokens_computed;
+        self.prefill_tokens_cached += o.prefill_tokens_cached;
+        self.blocks_allocated += o.blocks_allocated;
+        self.cache_hit_blocks += o.cache_hit_blocks;
+        self.cache_evictions += o.cache_evictions;
+        self.running_requests += o.running_requests;
+        self.waiting_requests += o.waiting_requests;
+        self.free_blocks += o.free_blocks;
+        self.clock = self.clock.max(o.clock);
+        self.e2e_hist.merge(&o.e2e_hist);
+        self.ttft_hist.merge(&o.ttft_hist);
+    }
+
+    /// Per-replica labeled families for a cluster's `/metrics`: each
+    /// replica's headline numbers under `alora_serve_replica_*{replica=i}`.
+    /// Distinct family names (rather than re-emitting the single-engine
+    /// families per replica) keep the exposition valid — every HELP/TYPE
+    /// appears once, with one sample per label value.
+    pub fn render_replica_families(replicas: &[&Metrics]) -> String {
+        let mut s = String::new();
+        let families: &[(&str, &str, &str, fn(&Metrics) -> f64)] = &[
+            ("requests_finished_total", "counter", "Requests completed", |m| m.requests_finished as f64),
+            ("generation_tokens_total", "counter", "Generated tokens", |m| m.generated_tokens as f64),
+            ("engine_steps_total", "counter", "Scheduler steps", |m| m.engine_steps as f64),
+            ("num_requests_running", "gauge", "Running requests", |m| m.running_requests as f64),
+            ("num_requests_waiting", "gauge", "Waiting requests", |m| m.waiting_requests as f64),
+            ("kv_blocks_free", "gauge", "Free KV blocks", |m| m.free_blocks as f64),
+            ("prefix_cache_hit_rate", "gauge", "Token hit rate", |m| m.cache_hit_rate()),
+            ("clock_seconds", "gauge", "Virtual clock", |m| m.clock),
+        ];
+        for &(name, ty, help, get) in families {
+            s.push_str(&format!(
+                "# HELP alora_serve_replica_{name} {help}\n# TYPE alora_serve_replica_{name} {ty}\n"
+            ));
+            for (i, &m) in replicas.iter().enumerate() {
+                s.push_str(&format!(
+                    "alora_serve_replica_{name}{{replica=\"{i}\"}} {}\n",
+                    get(m)
+                ));
+            }
+        }
+        s
+    }
+
     /// Prometheus text exposition (subset of vLLM's metric names, with the
     /// `alora_serve_` namespace).
     pub fn render_prometheus(&self) -> String {
@@ -194,48 +340,7 @@ impl Metrics {
         gauge("kv_blocks_free", "Free KV blocks", self.free_blocks as f64);
         gauge("prefix_cache_hit_rate", "Token hit rate", self.cache_hit_rate());
 
-        // Per-stage-name series (coordinator pipelines). Label values are
-        // sanitized so the exposition stays `name{labels} value`, and
-        // de-duplicated after sanitization — two raw names collapsing to
-        // one label would emit duplicate samples, which makes Prometheus
-        // reject the whole scrape.
-        if !self.stage.is_empty() {
-            let sanitize = |s: &str| -> String {
-                s.chars()
-                    .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
-                    .collect()
-            };
-            let mut labeled: Vec<(String, &StageLatencies)> = Vec::new();
-            for (name, lat) in &self.stage {
-                let base = sanitize(name);
-                let mut label = base.clone();
-                let mut n = 2;
-                while labeled.iter().any(|(l, _)| *l == label) {
-                    label = format!("{base}_{n}");
-                    n += 1;
-                }
-                labeled.push((label, lat));
-            }
-            for (metric, pick, ty) in [
-                ("stage_requests_total", None, "counter"),
-                ("stage_e2e_seconds_mean", Some("e2e"), "gauge"),
-                ("stage_ttft_seconds_mean", Some("ttft"), "gauge"),
-                ("stage_queue_seconds_mean", Some("queue"), "gauge"),
-            ] {
-                s.push_str(&format!(
-                    "# HELP alora_serve_{metric} Per-pipeline-stage series\n# TYPE alora_serve_{metric} {ty}\n"
-                ));
-                for (label, lat) in &labeled {
-                    let v = match pick {
-                        None => lat.count() as f64,
-                        Some(which) => lat.mean(which),
-                    };
-                    s.push_str(&format!(
-                        "alora_serve_{metric}{{stage=\"{label}\"}} {v}\n"
-                    ));
-                }
-            }
-        }
+        s.push_str(&Self::render_stage_series(&self.stage));
 
         for (name, hist) in [("e2e_latency_seconds", &self.e2e_hist), ("ttft_seconds", &self.ttft_hist)]
         {
@@ -248,6 +353,56 @@ impl Metrics {
             }
             s.push_str(&format!("alora_serve_{name}_sum {}\n", hist.sum()));
             s.push_str(&format!("alora_serve_{name}_count {}\n", hist.count()));
+        }
+        s
+    }
+
+    /// Render the per-stage-name families (coordinator pipelines) from a
+    /// stage map, by reference — the cluster `/metrics` path renders its
+    /// fleet-level series through this without cloning them. Label values
+    /// are sanitized so the exposition stays `name{labels} value`, and
+    /// de-duplicated after sanitization — two raw names collapsing to one
+    /// label would emit duplicate samples, which makes Prometheus reject
+    /// the whole scrape.
+    pub fn render_stage_series(stage: &BTreeMap<String, StageLatencies>) -> String {
+        let mut s = String::new();
+        if stage.is_empty() {
+            return s;
+        }
+        let sanitize = |s: &str| -> String {
+            s.chars()
+                .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+                .collect()
+        };
+        let mut labeled: Vec<(String, &StageLatencies)> = Vec::new();
+        for (name, lat) in stage {
+            let base = sanitize(name);
+            let mut label = base.clone();
+            let mut n = 2;
+            while labeled.iter().any(|(l, _)| *l == label) {
+                label = format!("{base}_{n}");
+                n += 1;
+            }
+            labeled.push((label, lat));
+        }
+        for (metric, pick, ty) in [
+            ("stage_requests_total", None, "counter"),
+            ("stage_e2e_seconds_mean", Some("e2e"), "gauge"),
+            ("stage_ttft_seconds_mean", Some("ttft"), "gauge"),
+            ("stage_queue_seconds_mean", Some("queue"), "gauge"),
+        ] {
+            s.push_str(&format!(
+                "# HELP alora_serve_{metric} Per-pipeline-stage series\n# TYPE alora_serve_{metric} {ty}\n"
+            ));
+            for (label, lat) in &labeled {
+                let v = match pick {
+                    None => lat.count() as f64,
+                    Some(which) => lat.mean(which),
+                };
+                s.push_str(&format!(
+                    "alora_serve_{metric}{{stage=\"{label}\"}} {v}\n"
+                ));
+            }
         }
         s
     }
@@ -348,6 +503,61 @@ mod tests {
         // and post-sanitization collisions get a uniquifying suffix
         assert!(text.contains("{stage=\"eval_0_\"}"), "{text}");
         assert!(text.contains("{stage=\"eval_0__2\"}"), "{text}");
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.split_whitespace().count() == 2, "bad line: {line}");
+        }
+    }
+
+    #[test]
+    fn absorb_sums_counters_and_merges_series() {
+        let mut a = Metrics::new();
+        a.requests_received = 2;
+        a.clock = 3.0;
+        a.observe_finished(&out(0.0, 1.0, 2.0, 4.0, 3));
+        a.observe_stage("draft", &out(0.0, 1.0, 2.0, 4.0, 3));
+        let mut b = Metrics::new();
+        b.requests_received = 5;
+        b.clock = 2.0;
+        b.observe_finished(&out(0.0, 1.0, 2.0, 6.0, 3));
+        b.observe_stage("draft", &out(0.0, 1.0, 2.0, 6.0, 3));
+        a.absorb(&b);
+        assert_eq!(a.requests_received, 7);
+        assert_eq!(a.requests_finished, 2);
+        assert_eq!(a.clock, 3.0, "fleet clock is the max");
+        assert_eq!(a.all.count(), 2);
+        assert_eq!(a.stage["draft"].count(), 2);
+        assert_eq!(a.e2e_hist.count(), 2);
+    }
+
+    #[test]
+    fn routing_metrics_imbalance_and_exposition() {
+        let mut r = RoutingMetrics::new(2);
+        assert_eq!(r.imbalance(), 1.0, "no traffic = balanced");
+        r.routed = vec![9, 3];
+        r.affinity_hits = 7;
+        r.affinity_fallbacks = 5;
+        assert!((r.imbalance() - 1.5).abs() < 1e-12);
+        let text = r.render_prometheus();
+        assert!(text.contains("router_requests_routed_total{replica=\"0\"} 9"));
+        assert!(text.contains("router_affinity_hits_total 7"));
+        assert!(text.contains("router_imbalance 1.5"));
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.split_whitespace().count() == 2, "bad line: {line}");
+        }
+    }
+
+    #[test]
+    fn replica_families_one_sample_per_replica() {
+        let mut m0 = Metrics::new();
+        m0.requests_finished = 4;
+        let m1 = Metrics::new();
+        m0.clock = 1.5;
+        let text = Metrics::render_replica_families(&[&m0, &m1]);
+        assert!(text.contains("replica_requests_finished_total{replica=\"0\"} 4"));
+        assert!(text.contains("replica_requests_finished_total{replica=\"1\"} 0"));
+        assert!(text.contains("replica_clock_seconds{replica=\"0\"} 1.5"));
+        // exactly one HELP per family despite two replicas
+        assert_eq!(text.matches("# HELP alora_serve_replica_clock_seconds").count(), 1);
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             assert!(line.split_whitespace().count() == 2, "bad line: {line}");
         }

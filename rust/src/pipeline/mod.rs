@@ -18,17 +18,18 @@
 //!   process; each follow-up stage is submitted the moment its parents
 //!   finish, while the parents' prefix blocks are still cache-hot.
 //!
-//! Both run against any [`Executor`] — simulator for the paper's scale,
-//! RealExecutor for the end-to-end example. Arbitrary DAGs beyond the four
-//! shapes go straight to the coordinator (see
-//! `examples/multi_adapter_pipeline.rs` and `POST /pipeline`).
+//! Both run against any [`EngineDriver`] — a simulator or real engine, or
+//! a whole [`crate::cluster::Cluster`] of replicas for the fleet-scaling
+//! figure. Arbitrary DAGs beyond the four shapes go straight to the
+//! coordinator (see `examples/multi_adapter_pipeline.rs` and
+//! `POST /pipeline`).
 
 pub mod trace;
 pub mod workload;
 
 use crate::adapter::AdapterId;
 use crate::coordinator::{Coordinator, CoordinatorResult, Part, StageGraph, StageSpec};
-use crate::engine::{Engine, Executor};
+use crate::engine::EngineDriver;
 use crate::metrics::StageLatencies;
 use crate::request::{ModelTarget, RequestOutput};
 use crate::util::rng::Rng;
@@ -273,13 +274,13 @@ fn to_pipeline_result(cr: CoordinatorResult, tags: &[Vec<Stage>]) -> PipelineRes
 /// Synchronous stage-locked driver (paper §4.2 methodology): `batch`
 /// conversations advance one stage at a time through the coordinator's
 /// lockstep drive.
-pub fn run_sync<E: Executor>(
-    engine: &mut Engine<E>,
+pub fn run_sync<D: EngineDriver>(
+    engine: &mut D,
     spec: &PipelineSpec,
     batch: usize,
     seed: u64,
 ) -> PipelineResult {
-    let vocab = engine.cfg.model.vocab_size;
+    let vocab = engine.config().model.vocab_size;
     let mut rng = Rng::new(seed);
     let (graphs, tags) = build_graphs(spec, batch, vocab, &mut rng);
     let cr = Coordinator::run_lockstep(engine, graphs).expect("sync pipeline run");
@@ -289,14 +290,14 @@ pub fn run_sync<E: Executor>(
 /// Asynchronous Poisson driver (paper §4.3): `n` conversations arrive at
 /// rate `lambda` (conversations/s); the coordinator chains each follow-up
 /// stage as its parents complete.
-pub fn run_poisson<E: Executor>(
-    engine: &mut Engine<E>,
+pub fn run_poisson<D: EngineDriver>(
+    engine: &mut D,
     spec: &PipelineSpec,
     n: usize,
     lambda: f64,
     seed: u64,
 ) -> PipelineResult {
-    let vocab = engine.cfg.model.vocab_size;
+    let vocab = engine.config().model.vocab_size;
     let mut rng = Rng::new(seed);
     let arrivals = workload::poisson_arrivals(&mut rng, n, lambda);
     let (graphs, tags) = build_graphs(spec, n, vocab, &mut rng);

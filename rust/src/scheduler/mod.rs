@@ -173,9 +173,16 @@ impl Scheduler {
             let admitted_ok = {
                 let r = reqs.get_mut(&id).expect("unknown waiting request");
                 debug_assert!(matches!(r.state, State::Waiting | State::Preempted));
-                // (Re)build the hash chain over the full token stream.
+                // (Re)build the hash chain over the full token stream —
+                // unless an existing chain (cluster-router pre-seed, or
+                // progress kept across preemption) already covers every
+                // full block: entries are deterministic in (tokens,
+                // salting context), so a full-length chain is identical
+                // to what a rebuild would produce.
                 let tokens = r.all_tokens();
-                r.hash_chain = block_hashes(&tokens, kv.block_size(), &r.hash_ctx);
+                if r.hash_chain.len() < tokens.len() / kv.block_size() {
+                    r.hash_chain = block_hashes(&tokens, kv.block_size(), &r.hash_ctx);
+                }
                 // At least one token must be computed to produce logits:
                 // cap usable cached blocks below the full stream length.
                 let max_usable_blocks = (r.total_len() - 1) / kv.block_size();
@@ -463,6 +470,119 @@ mod tests {
         assert!(f.reqs.values().any(|r| r.preemptions > 0));
         f.kv.check_invariants().unwrap();
         assert_eq!(f.kv.num_free_blocks(), 8, "all blocks returned");
+    }
+
+    #[test]
+    fn self_preemption_when_lone_request_outgrows_pool() {
+        // 4 blocks = 64 tokens of KV; a single request targeting 80 total
+        // tokens hits `victim == id` in phase 1: growing its own table
+        // fails, the preemption scan reaches itself, and the `continue
+        // 'running` path must drop its packed chunk instead of scheduling
+        // a request whose blocks were just released. (Engine::submit's
+        // capacity check rejects such requests up front; the scheduler
+        // still has to stay sane if one slips in.)
+        let mut f = fixture(1024, 8, 4);
+        f.submit(mk_req(1, 40, 40));
+        let s = f.step();
+        assert_eq!(s.seqs[0].chunk_len, 40, "prefill fits (3 blocks)");
+        f.apply(&s);
+        let mut preempt_step = None;
+        for _ in 0..40 {
+            let s = f.step();
+            if !s.preempted.is_empty() {
+                preempt_step = Some(s);
+                break;
+            }
+            assert!(!s.is_empty(), "stalled before self-preemption");
+            f.apply(&s);
+        }
+        let s = preempt_step.expect("never hit block pressure");
+        assert_eq!(s.preempted, vec![RequestId(1)]);
+        // The victim's own chunk was dropped, and phase-2 re-admission
+        // rolled back (its cached prefix + remainder still needs 5 blocks):
+        // the step must be empty rather than half-scheduled.
+        assert!(s.seqs.is_empty(), "{:?}", s.seqs);
+        assert!(s.admitted.is_empty());
+        assert_eq!(s.total_tokens, 0);
+        let r = &f.reqs[&RequestId(1)];
+        assert_eq!(r.preemptions, 1);
+        assert_eq!(r.state, State::Preempted);
+        assert_eq!(f.sched.num_waiting(), 1);
+        assert_eq!(f.sched.num_running(), 0);
+        // All blocks returned (admission rollback freed its cache refs).
+        assert_eq!(f.kv.num_free_blocks(), 4);
+        f.kv.check_invariants().unwrap();
+        // Every subsequent step is empty — the engine surfaces this as a
+        // stall instead of spinning on preempt/re-admit forever.
+        assert!(f.step().is_empty());
+    }
+
+    #[test]
+    fn admission_watermark_boundary_and_drain() {
+        // 8-block pool, watermark 0.75 → projected-use limit = 6 blocks.
+        let watermark_fixture = || Fixture {
+            sched: Scheduler::new(SchedulerConfig {
+                max_batch_tokens: 1024,
+                max_num_seqs: 8,
+                max_seq_len: 4096,
+                admission_watermark: 0.75,
+            }),
+            reqs: FxHashMap::default(),
+            kv: KvCacheManager::new(8, 16, true),
+        };
+
+        // Empty running set: even an OVER-limit request is admitted (the
+        // `!running.is_empty()` escape — deferring with nothing running
+        // would deadlock the queue forever).
+        let mut f = watermark_fixture();
+        f.submit(mk_req(1, 90, 10)); // final 100 → demand 7 blocks > limit 6
+        let s = f.step();
+        assert_eq!(s.admitted, vec![RequestId(1)], "empty-running escape");
+        f.apply(&s);
+        for _ in 0..20 {
+            let s = f.step();
+            if s.is_empty() {
+                break;
+            }
+            f.apply(&s);
+        }
+        assert!(f.reqs[&RequestId(1)].is_finished());
+
+        // Boundary arithmetic on a fresh scheduler.
+        let mut f = watermark_fixture();
+        f.submit(mk_req(2, 30, 2)); // final 32 → demand 2 blocks
+        let s1 = f.step();
+        assert_eq!(s1.admitted, vec![RequestId(2)]);
+        f.apply(&s1); // holds 2 blocks, decoding
+        // Boundary case: in_use (2) + demand (4) == limit (6) → admitted
+        // (the control defers only strictly-above-limit projections).
+        f.submit(mk_req(3, 60, 4)); // final 64 → demand 4 blocks
+        // One block over: in_use (6 after req3) + demand (1) > 6 → deferred
+        // this time, because the running set is non-empty.
+        f.submit(mk_req(4, 10, 2)); // final 12 → demand 1 block
+        let s2 = f.step();
+        assert_eq!(s2.admitted, vec![RequestId(3)], "boundary == limit admits");
+        assert_eq!(f.sched.num_waiting(), 1, "over-limit request deferred");
+        f.apply(&s2);
+        // The deferral lifts once running work drains.
+        for _ in 0..20 {
+            let s = f.step();
+            if s.is_empty() {
+                break;
+            }
+            f.apply(&s);
+            if f.reqs[&RequestId(4)].state == State::Running
+                || f.reqs[&RequestId(4)].is_finished()
+            {
+                break;
+            }
+        }
+        assert!(
+            f.reqs[&RequestId(4)].state == State::Running
+                || f.reqs[&RequestId(4)].is_finished(),
+            "deferred request admitted after drain"
+        );
+        f.kv.check_invariants().unwrap();
     }
 
     #[test]

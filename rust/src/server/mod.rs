@@ -1,15 +1,19 @@
-//! HTTP entrypoint (vLLM-style): `/generate`, `/metrics`, `/health`.
+//! HTTP entrypoint (vLLM-style): `/generate`, `/pipeline`, `/metrics`,
+//! `/cluster`, `/health`.
 //!
 //! Hand-rolled HTTP/1.1 over std TCP (no tokio in the offline build — see
-//! DESIGN.md §7). A dedicated driver thread owns engine stepping; handler
-//! threads submit requests and block on a condvar until their request
-//! completes. Request lifecycle timestamps still come from the engine's
-//! virtual clock, so `/metrics` exposes the same Table-2 series the
-//! figure harness reads.
+//! DESIGN.md §7). The server drives any [`EngineDriver`] — one engine or a
+//! replica [`crate::cluster::Cluster`] (cluster mode: every submission is
+//! routed, `GET /cluster` reports fleet stats). A dedicated driver thread
+//! owns stepping; handler threads submit requests and block on a condvar
+//! until their request completes. Request lifecycle timestamps still come
+//! from the virtual clock, so `/metrics` exposes the same Table-2 series
+//! the figure harness reads.
 //!
 //! API:
 //!   POST /generate  {"prompt": [1,2,3], "adapter": "alora-0"|null,
-//!                    "max_new_tokens": 16}
+//!                    "max_new_tokens": 16,
+//!                    "cache_salt": 7 | "tenant-name" (optional)}
 //!     -> {"id": 0, "tokens": [...], "e2e_s": ..., "ttft_s": ...,
 //!         "cache_hit_rate": ...}
 //!   POST /pipeline  JSON stage-graph spec (coordinator::spec format:
@@ -18,14 +22,21 @@
 //!     -> {"makespan_s": ..., "stages": [{"name", "tokens", "e2e_s",
 //!         "ttft_s", "queue_s", "prefill_s", "decode_s",
 //!         "cache_hit_rate", ...}, ...]}
-//!   GET /metrics    Prometheus text exposition
+//!                   or a BATCH of graphs: {"pipelines": [spec, ...]}
+//!     -> {"makespan_s": ..., "pipelines": [{"stages": [...]} |
+//!         {"error": "..."}, ...]}  (per-graph results and errors)
+//!   GET /metrics    Prometheus text exposition (cluster mode: aggregated
+//!                   + per-replica labeled families + routing counters)
+//!   GET /cluster    fleet stats JSON (404 on a single engine)
 //!   GET /health     {"status": "ok"}
 //!
-//! /pipeline runs a whole multi-stage conversation DAG server-side: the
+//! /pipeline runs whole multi-stage conversation DAGs server-side: the
 //! handler submits root stages, and as the driver thread retires each
 //! stage the coordinator chains its children immediately — follow-ups hit
 //! the engine while their parents' prefix blocks are still cache-hot,
-//! concurrently with any /generate traffic sharing the engine.
+//! concurrently with any /generate traffic sharing the engine. A batch
+//! request runs all its graphs through ONE coordinator over the shared
+//! driver, so conversations interleave exactly as live traffic would.
 
 use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Read, Write};
@@ -35,18 +46,19 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::coordinator::{spec, Coordinator};
-use crate::engine::{Engine, Executor};
+use crate::engine::EngineDriver;
+use crate::kvcache::hash::tenant_salt;
 use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams};
 use crate::util::json::Json;
 
-struct Shared<E: Executor> {
-    engine: Mutex<EngineState<E>>,
+struct Shared<D: EngineDriver> {
+    engine: Mutex<EngineState<D>>,
     cv: Condvar,
     stop: AtomicBool,
 }
 
-struct EngineState<E: Executor> {
-    engine: Engine<E>,
+struct EngineState<D: EngineDriver> {
+    engine: D,
     done: HashMap<RequestId, RequestOutput>,
     /// Requests abandoned by their handler (e.g. a timed-out /pipeline):
     /// the driver drops their outputs instead of parking them in `done`
@@ -55,17 +67,19 @@ struct EngineState<E: Executor> {
 }
 
 /// A running server; `shutdown()` or drop stops the driver thread.
-pub struct Server<E: Executor + Send + 'static> {
-    shared: Arc<Shared<E>>,
+pub struct Server<D: EngineDriver + Send + 'static> {
+    shared: Arc<Shared<D>>,
     addr: std::net::SocketAddr,
     listener_handle: Option<std::thread::JoinHandle<()>>,
     driver_handle: Option<std::thread::JoinHandle<()>>,
 }
 
-impl<E: Executor + Send + 'static> Server<E> {
+impl<D: EngineDriver + Send + 'static> Server<D> {
     /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and start
-    /// the driver + listener threads.
-    pub fn start(engine: Engine<E>, addr: &str) -> anyhow::Result<Self> {
+    /// the driver + listener threads. `engine` is any [`EngineDriver`]:
+    /// pass an [`crate::engine::Engine`] for single-replica serving or a
+    /// [`crate::cluster::Cluster`] for routed fleet serving.
+    pub fn start(engine: D, addr: &str) -> anyhow::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -152,13 +166,13 @@ impl<E: Executor + Send + 'static> Server<E> {
     }
 }
 
-impl<E: Executor + Send + 'static> Drop for Server<E> {
+impl<D: EngineDriver + Send + 'static> Drop for Server<D> {
     fn drop(&mut self) {
         self.shutdown();
     }
 }
 
-fn handle_conn<E: Executor>(mut stream: TcpStream, shared: &Shared<E>) -> anyhow::Result<()> {
+fn handle_conn<D: EngineDriver>(mut stream: TcpStream, shared: &Shared<D>) -> anyhow::Result<()> {
     stream.set_read_timeout(Some(Duration::from_secs(30)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut line = String::new();
@@ -195,17 +209,27 @@ fn handle_conn<E: Executor>(mut stream: TcpStream, shared: &Shared<E>) -> anyhow
     Ok(())
 }
 
-fn route<E: Executor>(
+fn route<D: EngineDriver>(
     method: &str,
     path: &str,
     body: &[u8],
-    shared: &Shared<E>,
+    shared: &Shared<D>,
 ) -> (&'static str, String) {
     match (method, path) {
         ("GET", "/health") => ("200 OK", r#"{"status":"ok"}"#.into()),
         ("GET", "/metrics") => {
             let st = shared.engine.lock().unwrap();
-            ("200 OK", st.engine.metrics.render_prometheus())
+            ("200 OK", st.engine.render_prometheus())
+        }
+        ("GET", "/cluster") => {
+            let st = shared.engine.lock().unwrap();
+            match st.engine.cluster_stats() {
+                Some(cs) => ("200 OK", cs.to_json().to_string()),
+                None => (
+                    "404 Not Found",
+                    r#"{"error":"not a cluster (started with a single engine)"}"#.into(),
+                ),
+            }
         }
         ("POST", "/generate") => match generate(body, shared) {
             Ok(j) => ("200 OK", j.to_string()),
@@ -225,7 +249,46 @@ fn route<E: Executor>(
     }
 }
 
-fn generate<E: Executor>(body: &[u8], shared: &Shared<E>) -> anyhow::Result<Json> {
+/// Parse the optional multi-tenant `cache_salt` field: a raw u64, or a
+/// tenant-name string hashed to a stable nonzero salt.
+fn parse_cache_salt(req: &Json) -> anyhow::Result<u64> {
+    match req.get("cache_salt") {
+        None | Some(Json::Null) => Ok(0),
+        Some(v) => {
+            if let Some(n) = v.as_u64() {
+                Ok(n)
+            } else if let Some(s) = v.as_str() {
+                Ok(tenant_salt(s))
+            } else {
+                anyhow::bail!("`cache_salt` must be an integer or a tenant string")
+            }
+        }
+    }
+}
+
+/// Abandon one batch-`/pipeline` conversation after a submission failure:
+/// hand its in-flight outputs to the orphan list (the driver discards
+/// them) and record the per-entry error in input order. Shared by the
+/// root-submission and chain-time failure paths so their bookkeeping
+/// cannot diverge.
+fn abandon_batch_entry<D: EngineDriver>(
+    co: &mut Coordinator,
+    st: &mut EngineState<D>,
+    convs: &mut [Result<usize, String>],
+    ci: usize,
+    err: String,
+) {
+    for id in co.abandon_conversation(ci) {
+        if st.done.remove(&id).is_none() {
+            st.orphaned.insert(id);
+        }
+    }
+    if let Some(idx) = convs.iter().position(|c| c.as_ref().ok() == Some(&ci)) {
+        convs[idx] = Err(err);
+    }
+}
+
+fn generate<D: EngineDriver>(body: &[u8], shared: &Shared<D>) -> anyhow::Result<Json> {
     let req = Json::parse(std::str::from_utf8(body)?)?;
     let prompt = req
         .get("prompt")
@@ -236,6 +299,7 @@ fn generate<E: Executor>(body: &[u8], shared: &Shared<E>) -> anyhow::Result<Json
         .and_then(Json::as_u64)
         .unwrap_or(16) as u32;
     let adapter_name = req.get("adapter").and_then(Json::as_str).map(str::to_string);
+    let cache_salt = parse_cache_salt(&req)?;
 
     let id = {
         let mut st = shared.engine.lock().unwrap();
@@ -244,16 +308,18 @@ fn generate<E: Executor>(body: &[u8], shared: &Shared<E>) -> anyhow::Result<Json
             Some(name) => {
                 let a = st
                     .engine
-                    .registry
+                    .registry()
                     .by_name(name)
                     .ok_or_else(|| anyhow::anyhow!("unknown adapter `{name}`"))?;
                 ModelTarget::Adapter(a.id)
             }
         };
-        let id = st.engine.submit(
+        let id = st.engine.submit_salted(
             target,
             prompt,
             SamplingParams { max_new_tokens: max_new, ..Default::default() },
+            false,
+            cache_salt,
         )?;
         shared.cv.notify_all();
         id
@@ -291,22 +357,69 @@ fn generate<E: Executor>(body: &[u8], shared: &Shared<E>) -> anyhow::Result<Json
     }
 }
 
-/// Drive one stage-graph conversation to completion over the shared
-/// engine. The driver thread does the stepping; this handler consumes its
-/// conversation's completions from `done` and lets the coordinator chain
-/// children the moment their parents retire.
-fn run_pipeline<E: Executor>(body: &[u8], shared: &Shared<E>) -> anyhow::Result<Json> {
+/// Drive one or many stage-graph conversations to completion over the
+/// shared engine. The driver thread does the stepping; this handler
+/// consumes its conversations' completions from `done` and lets the
+/// coordinator chain children the moment their parents retire.
+///
+/// Batch form (`{"pipelines": [spec, ...]}`): every parseable graph runs;
+/// graphs that fail validation — or whose submission the engine rejects
+/// at runtime (e.g. a stage exceeding max_seq_len) — get a per-entry
+/// `error` in the response instead of failing the whole request (a 400
+/// is reserved for structural problems — non-array `pipelines`, empty
+/// batch, unparseable body).
+fn run_pipeline<D: EngineDriver>(body: &[u8], shared: &Shared<D>) -> anyhow::Result<Json> {
     let spec_json = Json::parse(std::str::from_utf8(body)?)?;
     let mut st = shared.engine.lock().unwrap();
-    let graph = spec::graph_from_json(&spec_json, &st.engine.registry)?;
-    let n_stages = graph.len();
+    let (specs, batched): (Vec<&Json>, bool) = match spec_json.get("pipelines") {
+        Some(pj) => {
+            let arr = pj
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("`pipelines` must be an array of specs"))?;
+            anyhow::ensure!(!arr.is_empty(), "`pipelines` is empty");
+            (arr.iter().collect(), true)
+        }
+        None => (vec![&spec_json], false),
+    };
     let mut co = Coordinator::new();
-    co.add_conversation(graph)?;
+    // Per input spec: the conversation index it became, or its error.
+    let mut convs: Vec<Result<usize, String>> = Vec::new();
+    for &sj in &specs {
+        let parsed = spec::graph_from_json(sj, st.engine.registry())
+            .and_then(|g| co.add_conversation(g));
+        convs.push(parsed.map_err(|e| e.to_string()));
+    }
+    if !batched {
+        // Single-spec form keeps its contract: invalid spec = 400.
+        if let Err(e) = &convs[0] {
+            anyhow::bail!("{e}");
+        }
+    }
+    let n_stages: usize = convs
+        .iter()
+        .flatten()
+        .map(|&ci| co.graph(ci).len())
+        .sum();
     let t0 = st.engine.clock();
     // Every failure past this point must fall through to the cleanup arm
     // below (partially-submitted roots are already in flight), so no `?`.
     let deadline = std::time::Instant::now() + Duration::from_secs(60);
-    let mut outcome = co.submit_ready(&mut st.engine, 0).map(|_| ());
+    let mut outcome = Ok(());
+    for idx in 0..convs.len() {
+        let Ok(&ci) = convs[idx].as_ref() else { continue };
+        if let Err(e) = co.submit_ready(&mut st.engine, ci) {
+            if batched {
+                // Isolate the failing graph: abandon it (its partially
+                // submitted roots keep running; their outputs get
+                // discarded) and report it per-entry — a runtime reject
+                // in one graph must not fail the rest of the batch.
+                abandon_batch_entry(&mut co, &mut st, &mut convs, ci, e.to_string());
+            } else {
+                outcome = Err(e);
+                break;
+            }
+        }
+    }
     shared.cv.notify_all();
 
     while outcome.is_ok() && !co.is_done() {
@@ -329,10 +442,24 @@ fn run_pipeline<E: Executor>(body: &[u8], shared: &Shared<E>) -> anyhow::Result<
             continue;
         }
         for id in ready {
-            let out = st.done.remove(&id).expect("checked above");
+            // An abandonment earlier in this drain may have already
+            // discarded a sibling stage's output.
+            let Some(out) = st.done.remove(&id) else { continue };
+            let ci = co.conversation_of(id);
             if let Err(e) = co.on_finished(&mut st.engine, out) {
-                outcome = Err(e);
-                break;
+                // Child-stage submission can fail at chaining time (e.g. a
+                // composed prompt outgrowing max_seq_len). In batch mode
+                // that conversation alone is abandoned and reported
+                // per-entry, same as a root-submission failure.
+                match ci {
+                    Some(ci) if batched => {
+                        abandon_batch_entry(&mut co, &mut st, &mut convs, ci, e.to_string());
+                    }
+                    _ => {
+                        outcome = Err(e);
+                        break;
+                    }
+                }
             }
         }
         // Children were just submitted — wake the driver.
@@ -342,7 +469,12 @@ fn run_pipeline<E: Executor>(body: &[u8], shared: &Shared<E>) -> anyhow::Result<
     match outcome {
         Ok(()) => {
             let makespan = st.engine.clock() - t0;
-            Ok(spec::result_to_json(&co.into_result(makespan)))
+            let result = co.into_result(makespan);
+            if batched {
+                Ok(spec::batch_result_to_json(&result, &convs))
+            } else {
+                Ok(spec::result_to_json(&result))
+            }
         }
         Err(e) => {
             // Abandoning the conversation: drop anything of ours already
@@ -361,16 +493,27 @@ fn run_pipeline<E: Executor>(body: &[u8], shared: &Shared<E>) -> anyhow::Result<
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::{Cluster, RoutePolicy};
     use crate::config::presets;
+    use crate::engine::Engine;
     use crate::pipeline::workload;
     use crate::simulator::SimExecutor;
 
-    fn start_sim_server() -> Server<SimExecutor> {
+    fn sim_engine() -> Engine<SimExecutor> {
         let cfg = presets::granite_8b();
         let reg = workload::build_registry(2, cfg.model.vocab_size, true);
         let exec = SimExecutor::new(&cfg);
-        let engine = Engine::with_registry(cfg, reg, exec);
-        Server::start(engine, "127.0.0.1:0").unwrap()
+        Engine::with_registry(cfg, reg, exec)
+    }
+
+    fn start_sim_server() -> Server<Engine<SimExecutor>> {
+        Server::start(sim_engine(), "127.0.0.1:0").unwrap()
+    }
+
+    fn start_cluster_server(n: usize) -> Server<Cluster<SimExecutor>> {
+        let cluster =
+            Cluster::from_factory(n, RoutePolicy::PrefixAffinity, |_| sim_engine()).unwrap();
+        Server::start(cluster, "127.0.0.1:0").unwrap()
     }
 
     fn http(addr: std::net::SocketAddr, req: &str) -> String {
@@ -465,6 +608,160 @@ mod tests {
             assert!(r.contains("400"), "{r}");
         }
         srv.shutdown();
+    }
+
+    #[test]
+    fn pipeline_endpoint_batches_graphs_with_per_graph_errors() {
+        let mut srv = start_sim_server();
+        let p: Vec<String> = (0..64).map(|t| (t % 4000).to_string()).collect();
+        let good = format!(
+            r#"{{"stages": [
+                {{"name": "draft", "gen": 8, "prompt": [[{p}]]}},
+                {{"name": "check", "adapter": "alora-0", "gen": 4, "invoke": true,
+                  "prompt": [{{"prompt_of": "draft"}}, {{"output_of": "draft"}}]}}
+            ]}}"#,
+            p = p.join(",")
+        );
+        let bad = r#"{"stages": [{"name": "x", "prompt": [{"output_of": "ghost"}]}]}"#;
+        let body = format!(r#"{{"pipelines": [{good}, {bad}, {good}]}}"#);
+        let req = format!(
+            "POST /pipeline HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let r = http(srv.addr(), &req);
+        assert!(r.contains("200 OK"), "{r}");
+        let j = Json::parse(r.lines().last().unwrap()).unwrap();
+        let ps = j.get("pipelines").and_then(Json::as_arr).unwrap();
+        assert_eq!(ps.len(), 3);
+        for idx in [0usize, 2] {
+            let stages = ps[idx].get("stages").and_then(Json::as_arr).unwrap();
+            assert_eq!(stages.len(), 2, "pipeline {idx}");
+            assert!(ps[idx].get("error").is_none());
+        }
+        assert!(ps[1].get("error").and_then(Json::as_str).unwrap().contains("ghost"));
+        // A graph that passes validation but is rejected by the engine at
+        // submission (gen beyond max_seq_len) is isolated the same way.
+        let runtime_bad =
+            r#"{"stages": [{"name": "x", "gen": 200000, "prompt": [[1,2,3]]}]}"#;
+        let body = format!(r#"{{"pipelines": [{good}, {runtime_bad}]}}"#);
+        let req = format!(
+            "POST /pipeline HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let r = http(srv.addr(), &req);
+        assert!(r.contains("200 OK"), "{r}");
+        let j = Json::parse(r.lines().last().unwrap()).unwrap();
+        let ps = j.get("pipelines").and_then(Json::as_arr).unwrap();
+        assert_eq!(ps[0].get("stages").and_then(Json::as_arr).unwrap().len(), 2);
+        assert!(ps[1]
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("max_seq_len"));
+        // structural problems still 400
+        for body in [r#"{"pipelines": []}"#, r#"{"pipelines": 5}"#] {
+            let req = format!(
+                "POST /pipeline HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            assert!(http(srv.addr(), &req).contains("400"));
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn pipeline_batch_isolates_child_stage_submit_failure() {
+        // tiny preset: max_seq_len 160 — a child whose composed prompt
+        // outgrows it is rejected only at CHAINING time, after its root
+        // already ran. The batch must still return the good graph's
+        // results with a per-entry error for the bad one.
+        let cfg = presets::tiny();
+        let reg = crate::adapter::AdapterRegistry::tiny_default(2, 512, 4);
+        let exec = SimExecutor::new(&cfg);
+        let mut srv =
+            Server::start(Engine::with_registry(cfg, reg, exec), "127.0.0.1:0").unwrap();
+        let good = r#"{"stages": [{"name": "a", "gen": 8, "prompt": [[1,2,3,4,5,6,7,8]]}]}"#;
+        let p64: Vec<String> = (0..64).map(|t| (t % 400).to_string()).collect();
+        let bad = format!(
+            r#"{{"stages": [
+                {{"name": "draft", "gen": 32, "prompt": [[{p}]]}},
+                {{"name": "kid", "gen": 80,
+                  "prompt": [{{"prompt_of": "draft"}}, {{"output_of": "draft"}}]}}
+            ]}}"#,
+            p = p64.join(",")
+        );
+        let body = format!(r#"{{"pipelines": [{good}, {bad}]}}"#);
+        let req = format!(
+            "POST /pipeline HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let r = http(srv.addr(), &req);
+        assert!(r.contains("200 OK"), "{r}");
+        let j = Json::parse(r.lines().last().unwrap()).unwrap();
+        let ps = j.get("pipelines").and_then(Json::as_arr).unwrap();
+        assert_eq!(ps[0].get("stages").and_then(Json::as_arr).unwrap().len(), 1);
+        assert!(ps[1]
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("max_seq_len"));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn generate_cache_salt_isolates_tenants_over_http() {
+        let mut srv = start_sim_server();
+        let prompt: Vec<String> = (0..64).map(|t| t.to_string()).collect();
+        let gen = |salt: &str| {
+            let body = format!(
+                r#"{{"prompt": [{}], "max_new_tokens": 2, "cache_salt": {salt}}}"#,
+                prompt.join(",")
+            );
+            let req = format!(
+                "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            let r = http(srv.addr(), &req);
+            assert!(r.contains("200 OK"), "{r}");
+            let j = Json::parse(r.lines().last().unwrap()).unwrap();
+            j.get("cache_hit_rate").and_then(Json::as_f64).unwrap()
+        };
+        assert_eq!(gen("\"tenant-a\""), 0.0, "cold");
+        assert!(gen("\"tenant-a\"") > 0.5, "same tenant rehits its prefix");
+        assert_eq!(gen("\"tenant-b\""), 0.0, "tenants never share hits");
+        assert_eq!(gen("7"), 0.0, "numeric salt is its own tenant");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn cluster_mode_serves_and_reports_fleet_stats() {
+        let mut srv = start_cluster_server(2);
+        let prompt: Vec<String> = (0..64).map(|t| t.to_string()).collect();
+        for _ in 0..2 {
+            let body = format!(
+                r#"{{"prompt": [{}], "max_new_tokens": 2}}"#,
+                prompt.join(",")
+            );
+            let req = format!(
+                "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            assert!(http(srv.addr(), &req).contains("200 OK"));
+        }
+        let r = http(srv.addr(), "GET /cluster HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(r.contains("200 OK"), "{r}");
+        let j = Json::parse(r.lines().last().unwrap()).unwrap();
+        assert_eq!(j.get("policy").and_then(Json::as_str), Some("prefix-affinity"));
+        assert_eq!(j.get("replicas").and_then(Json::as_arr).unwrap().len(), 2);
+        let m = http(srv.addr(), "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(m.contains("alora_serve_router_requests_routed_total"), "{m}");
+        assert!(m.contains("alora_serve_replica_clock_seconds{replica=\"1\"}"));
+        srv.shutdown();
+        // Single-engine servers 404 the cluster endpoint.
+        let mut single = start_sim_server();
+        let r = http(single.addr(), "GET /cluster HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(r.contains("404"), "{r}");
+        single.shutdown();
     }
 
     #[test]

@@ -193,6 +193,16 @@ impl LatencyHistogram {
         self.sum
     }
 
+    /// Merge another histogram (identical bucket layout by construction).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        assert_eq!(self.bounds, other.bounds, "histogram layouts differ");
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.sum += other.sum;
+        self.total += other.total;
+    }
+
     /// (upper_bound, cumulative_count) pairs, ending with (+Inf, total).
     pub fn cumulative(&self) -> Vec<(f64, u64)> {
         let mut out = Vec::with_capacity(self.bounds.len() + 1);

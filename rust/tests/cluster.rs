@@ -1,0 +1,137 @@
+//! Integration: replica cluster with base-aligned cache-affinity routing.
+//!
+//! The acceptance bar: on one multi-turn multi-adapter request stream over
+//! ≥2 replicas, `PrefixAffinity` routing must achieve a strictly higher
+//! aggregate prefix hit-rate than `RoundRobin` — i.e. the paper's
+//! cross-model KV reuse survives horizontal scale-out only with
+//! cache-affinity placement.
+
+use alora_serve::adapter::AdapterId;
+use alora_serve::cluster::{Cluster, RoutePolicy};
+use alora_serve::config::presets;
+use alora_serve::engine::{Engine, EngineDriver};
+use alora_serve::pipeline::{self, workload, PipelineKind, PipelineSpec};
+use alora_serve::simulator::SimExecutor;
+
+const N_ADAPTERS: u32 = 3;
+
+fn sim_engine() -> Engine<SimExecutor> {
+    let cfg = presets::granite_8b();
+    let reg = workload::build_registry(N_ADAPTERS, cfg.model.vocab_size, true);
+    let exec = SimExecutor::new(&cfg);
+    Engine::with_registry(cfg, reg, exec)
+}
+
+fn cluster(n: usize, policy: RoutePolicy) -> Cluster<SimExecutor> {
+    Cluster::from_factory(n, policy, |_| sim_engine()).unwrap()
+}
+
+/// Multi-turn multi-adapter conversation: base draft → 3 adapter evals →
+/// consolidated base call. Every non-root stage extends the draft's token
+/// stream, so its prefix hits iff it lands on the draft's replica.
+fn multi_turn_spec() -> PipelineSpec {
+    PipelineSpec {
+        kind: PipelineKind::MultiAdapter,
+        prompt_len: 1024,
+        base_gen: 64,
+        eval_gen: 16,
+        adapters: (0..N_ADAPTERS).map(AdapterId).collect(),
+        base2_gen: 16,
+        priority_continuations: false,
+    }
+}
+
+fn run_policy(policy: RoutePolicy, replicas: usize) -> (f64, Cluster<SimExecutor>) {
+    let mut c = cluster(replicas, policy);
+    // Same seed → bit-identical prompt stream and arrival times across
+    // policies; only placement differs.
+    let r = pipeline::run_poisson(&mut c, &multi_turn_spec(), 24, 8.0, 42);
+    assert_eq!(r.outputs.len(), 24 * 5, "all stages completed");
+    let hit = c.aggregate_hit_rate();
+    (hit, c)
+}
+
+#[test]
+fn prefix_affinity_beats_round_robin_on_same_stream() {
+    let (hit_affinity, ca) = run_policy(RoutePolicy::PrefixAffinity, 2);
+    let (hit_rr, _) = run_policy(RoutePolicy::RoundRobin, 2);
+    assert!(
+        hit_affinity > hit_rr,
+        "affinity hit-rate {hit_affinity:.3} must strictly beat round-robin {hit_rr:.3}"
+    );
+    // And not vacuously: the warm stream really reuses prefixes.
+    assert!(hit_affinity > 0.3, "affinity hit-rate collapsed: {hit_affinity:.3}");
+    // 4 follow-up stages per conversation had a warm replica to find.
+    let stats = &ca.router().stats;
+    assert!(stats.affinity_hits > 0, "no warm placements recorded");
+    assert_eq!(
+        stats.total_routed(),
+        24 * 5,
+        "every stage went through the router"
+    );
+}
+
+#[test]
+fn affinity_gap_widens_with_more_replicas() {
+    // Round-robin spreads a conversation's follow-ups over N replicas, so
+    // its hit-rate decays with N while affinity's holds roughly flat.
+    let (aff2, _) = run_policy(RoutePolicy::PrefixAffinity, 2);
+    let (aff4, _) = run_policy(RoutePolicy::PrefixAffinity, 4);
+    let (rr4, _) = run_policy(RoutePolicy::RoundRobin, 4);
+    assert!(aff4 > rr4, "affinity {aff4:.3} vs rr {rr4:.3} at 4 replicas");
+    assert!(
+        aff4 > 0.5 * aff2,
+        "affinity should not collapse with scale: {aff2:.3} -> {aff4:.3}"
+    );
+}
+
+#[test]
+fn coordinator_children_inherit_parent_replica() {
+    // Drive conversations over a 3-replica cluster and check placement by
+    // its observable consequence: every follow-up stage hits at least its
+    // conversation's full 1024-token prompt from cache. Prompts are unique
+    // per conversation, so that is only possible on the replica that
+    // served the draft — the child inherited its parent's placement.
+    let mut c = cluster(3, RoutePolicy::PrefixAffinity);
+    let r = pipeline::run_poisson(&mut c, &multi_turn_spec(), 9, 6.0, 7);
+    let follow_ups: Vec<_> = r
+        .outputs
+        .iter()
+        .filter(|(s, _)| !matches!(s, pipeline::Stage::Base1))
+        .collect();
+    assert_eq!(follow_ups.len(), 9 * 4);
+    for (stage, out) in &follow_ups {
+        assert!(
+            out.num_cached_tokens >= 1024,
+            "{stage:?} ({:?}) re-prefilled on a cold replica: {} cached",
+            out.id,
+            out.num_cached_tokens
+        );
+    }
+    assert!(!c.has_work());
+}
+
+#[test]
+fn cluster_deterministic_across_runs() {
+    let run = || {
+        let mut c = cluster(2, RoutePolicy::PrefixAffinity);
+        let r = pipeline::run_poisson(&mut c, &multi_turn_spec(), 8, 4.0, 21);
+        (r.makespan, c.aggregate_hit_rate(), c.router().stats.routed.clone())
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn single_engine_tests_equivalence_through_cluster_of_one() {
+    // A 1-replica cluster must reproduce the plain engine's behaviour on
+    // the same pipeline (same makespan, same hit rate) — the refactored
+    // interface adds nothing but routing.
+    let spec = PipelineSpec::base_adapter(512, 64, 16);
+    let mut c = cluster(1, RoutePolicy::PrefixAffinity);
+    let rc = pipeline::run_poisson(&mut c, &spec, 10, 4.0, 5);
+    let mut e = sim_engine();
+    let re = pipeline::run_poisson(&mut e, &spec, 10, 4.0, 5);
+    assert_eq!(rc.makespan, re.makespan);
+    assert_eq!(rc.eval_hit_rate(), re.eval_hit_rate());
+    assert_eq!(rc.outputs.len(), re.outputs.len());
+}

@@ -8,7 +8,7 @@ use alora_serve::pipeline::workload;
 use alora_serve::server::Server;
 use alora_serve::simulator::SimExecutor;
 
-fn start() -> Server<SimExecutor> {
+fn start() -> Server<Engine<SimExecutor>> {
     let cfg = alora_serve::config::presets::granite_8b();
     let reg = workload::build_registry(2, cfg.model.vocab_size, true);
     let exec = SimExecutor::new(&cfg);
