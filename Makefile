@@ -1,12 +1,20 @@
 # Tier-1 gate (mirrors .github/workflows/ci.yml): make check
 # fmt + clippy are advisory in both (leading `-`) until a toolchain-run
 # `make fmt` / clippy pass lands — the repo was authored offline without
-# rustfmt/clippy; see ROADMAP.md "Lint debt".
-.PHONY: check build test fmt fmt-check clippy bench artifacts
+# rustfmt/clippy (still true as of 2026-07-30, PR 3); see ROADMAP.md
+# "Lint debt".
+.PHONY: check build build-matrix test fmt fmt-check clippy bench bench-smoke artifacts
 
 check: build test
 	-cargo fmt --check
 	-cargo clippy --all-targets -- -D warnings
+
+# Feature matrix (mirrors CI): the offline default, explicitly
+# no-default-features, and a check-only pass of the real-runtime feature
+# (advisory: it needs the external `xla` crate, absent offline).
+build-matrix: build
+	cargo build --release --no-default-features
+	-cargo check --features real-runtime
 
 build:
 	cargo build --release
@@ -26,6 +34,12 @@ clippy:
 # Hot-path microbenches (coordinator dispatch, hashing, scheduler, ...)
 bench:
 	cargo bench --bench bench_hotpath
+
+# Fast end-to-end smoke over the fleet + memory-budget paths: the cluster
+# bench on its quick grid and the adapter-memory figure in quick mode.
+bench-smoke:
+	cargo bench --bench bench_cluster -- --quick
+	cargo run --release -- figure --id adapter_memory --quick
 
 # AOT-compile the tiny model + goldens for the real-runtime path
 # (requires JAX; see DESIGN.md §9).

@@ -1,6 +1,7 @@
 //! Cluster scaling bench: the fleet-level Figure-9 table at full size,
 //! plus routing-decision microbenches (the per-request cost the router
-//! adds to the submit path).
+//! adds to the submit path). Pass `--quick` (e.g. via `make bench-smoke`:
+//! `cargo bench --bench bench_cluster -- --quick`) for the shrunk grid.
 
 use alora_serve::cluster::router::{ReplicaView, RoutePolicy, Router, RouterConfig};
 use alora_serve::figures;
@@ -10,8 +11,13 @@ use alora_serve::util::bench::{bench, black_box, section};
 use alora_serve::util::rng::Rng;
 
 fn main() {
-    section("cluster scaling (full grid)");
-    let t = figures::cluster_scaling::run(false);
+    let quick = std::env::args().any(|a| a == "--quick");
+    section(if quick {
+        "cluster scaling (quick grid)"
+    } else {
+        "cluster scaling (full grid)"
+    });
+    let t = figures::cluster_scaling::run(quick);
     t.print();
 
     section("routing decision microbenches");
@@ -29,7 +35,7 @@ fn main() {
         black_box(summary.matching_prefix(&chain))
     }));
     let views: Vec<ReplicaView> = (0..8)
-        .map(|i| ReplicaView { load: i, affinity_blocks: 256 - i })
+        .map(|i| ReplicaView { load: i, affinity_blocks: 256 - i, adapter_blocks: 0 })
         .collect();
     let mut router = Router::new(
         RouterConfig { policy: RoutePolicy::PrefixAffinity, ..Default::default() },

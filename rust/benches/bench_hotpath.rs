@@ -90,9 +90,10 @@ fn main() {
             reqs.insert(r.id, r);
             sched.enqueue(RequestId(i), false);
         }
+        let mut residency = alora_serve::adapter::AdapterResidency::disabled();
         // Drain prefill so everything decodes.
         for _ in 0..64 {
-            let s = sched.schedule(&mut reqs, &mut kv);
+            let s = sched.schedule(&mut reqs, &mut kv, &mut residency);
             for sq in &s.seqs {
                 let r = reqs.get_mut(&sq.id).unwrap();
                 r.num_computed_tokens = sq.chunk_start + sq.chunk_len;
@@ -102,7 +103,7 @@ fn main() {
             }
         }
         println!("{}", bench("schedule() 64-seq decode steady state", || {
-            let s = sched.schedule(&mut reqs, &mut kv);
+            let s = sched.schedule(&mut reqs, &mut kv, &mut residency);
             for sq in &s.seqs {
                 let r = reqs.get_mut(&sq.id).unwrap();
                 r.num_computed_tokens = sq.chunk_start + sq.chunk_len;

@@ -6,7 +6,12 @@
 //! everything before it keeps base-model attention weights and is therefore
 //! cache-interchangeable with the base model.
 
+pub mod residency;
+
+use crate::config::ModelConfig;
 use crate::kvcache::prefix::HashContext;
+
+pub use residency::{AdapterResidency, ResidencyStats};
 
 /// Internal adapter ID (index into the registry).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -35,6 +40,27 @@ pub struct Adapter {
 impl Adapter {
     pub fn is_alora(&self) -> bool {
         matches!(self.kind, AdapterKind::ALora { .. })
+    }
+
+    /// Device bytes this adapter's weights occupy when resident: per layer,
+    /// the four adapted attention projections (q, k, v, o) each carry an
+    /// A (d_model × rank) and a B (rank × d_model) matrix.
+    pub fn weight_bytes(&self, model: &ModelConfig) -> u64 {
+        model.n_layers as u64
+            * 4 // q, k, v, o projections
+            * 2 // A and B low-rank factors
+            * model.d_model as u64
+            * self.rank as u64
+            * model.dtype_bytes as u64
+    }
+
+    /// Weight footprint quantized to KV-block-equivalents — the unit the
+    /// unified [`crate::memory::MemoryBudget`] is denominated in. Always at
+    /// least 1: a resident adapter occupies a page even if its weights are
+    /// smaller than one KV block.
+    pub fn weight_blocks(&self, model: &ModelConfig, block_size: u32) -> usize {
+        let block_bytes = model.kv_bytes_per_token() * block_size as f64;
+        ((self.weight_bytes(model) as f64 / block_bytes).ceil() as usize).max(1)
     }
 
     pub fn invocation_tokens(&self) -> Option<&[u32]> {
@@ -295,6 +321,25 @@ mod tests {
         assert!(!ctx.is_alora);
         // Unknown adapter: None, not a panic.
         assert!(r.request_hash_context(Some(AdapterId(7)), &prompt, true, 0).is_none());
+    }
+
+    #[test]
+    fn weight_cost_model_scales_with_rank_and_quantizes_up() {
+        let r = reg();
+        let model = crate::config::presets::granite_8b().model;
+        let lora = r.get(AdapterId(0)).unwrap(); // rank 8
+        let alora = r.get(AdapterId(1)).unwrap(); // rank 32
+        // 40 layers × 4 proj × 2 factors × 4096 × rank × 2 bytes.
+        assert_eq!(lora.weight_bytes(&model), 20_971_520);
+        assert_eq!(alora.weight_bytes(&model), 83_886_080);
+        // KV block = 16 tokens × 163840 B/token = 2,621,440 B.
+        assert_eq!(lora.weight_blocks(&model, 16), 8);
+        assert_eq!(alora.weight_blocks(&model, 16), 32);
+        // Tiny model: weights smaller than pool geometry still round up
+        // and never quantize to zero blocks.
+        let tiny = crate::config::presets::tiny().model;
+        assert_eq!(alora.weight_blocks(&tiny, 16), 8); // 524288 B / 65536 B
+        assert!(lora.weight_blocks(&tiny, 16) >= 1);
     }
 
     #[test]

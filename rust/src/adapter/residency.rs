@@ -1,0 +1,409 @@
+//! Adapter-weight residency: ref-counted loads with LRU eviction, paged
+//! against the unified KV memory budget.
+//!
+//! Before this module the engine pretended every registered adapter's
+//! weights were permanently GPU-resident — free capacity the KV cache
+//! never saw. S-LoRA (arXiv 2311.03285) serves thousands of adapters by
+//! paging weights in the same unified pool as KV cache; this manager is
+//! that policy layer over [`crate::memory::MemoryBudget`]:
+//!
+//! - **Load** claims `weight_blocks` pages from the shared
+//!   [`crate::kvcache::KvCacheManager`] pool (evicting cold cached KV
+//!   content if needed, never referenced blocks).
+//! - **Refs** count running requests using the adapter. Admission acquires,
+//!   preemption and completion release; at zero refs the adapter stays
+//!   resident (warm) but becomes evictable.
+//! - **Eviction** is LRU over idle (ref == 0) residents, triggered when a
+//!   load or a KV allocation needs room — the two sides reclaim from each
+//!   other under one policy (FASTLIBRA-style co-management).
+//!
+//! Loads are modeled as instantaneous (accounting, not transfer time);
+//! what the engine observes is the *admission stall* when memory is not
+//! reclaimable yet, surfaced via [`ResidencyStats::load_stall_steps`].
+
+use crate::config::ModelConfig;
+use crate::kvcache::block::BlockId;
+use crate::kvcache::manager::KvCacheManager;
+use crate::util::fxmap::FxHashMap;
+
+use super::{AdapterId, AdapterRegistry};
+
+/// Counters exported through the metrics registry
+/// (`alora_serve_adapter_*`) and `GET /cluster`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResidencyStats {
+    /// Weight loads performed (adapter became resident).
+    pub loads: u64,
+    /// Idle adapters evicted to reclaim memory.
+    pub evictions: u64,
+    /// Scheduler steps where admission stalled on a failed weight load.
+    pub load_stall_steps: u64,
+    /// Adapter-targeted admissions.
+    pub adapter_admissions: u64,
+    /// ...whose adapter was already resident (no load on the critical path).
+    pub adapter_admission_hits: u64,
+}
+
+impl ResidencyStats {
+    /// Fraction of adapter admissions that found their weights resident —
+    /// the residency analogue of the prefix-cache hit rate.
+    pub fn hit_rate(&self) -> f64 {
+        if self.adapter_admissions == 0 {
+            0.0
+        } else {
+            self.adapter_admission_hits as f64 / self.adapter_admissions as f64
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Resident {
+    /// Pages claimed from the shared pool (hashless, budget-charged).
+    blocks: Vec<BlockId>,
+    /// Running requests currently using this adapter.
+    refs: u32,
+    /// Monotonic LRU stamp (load / acquire / release all touch it).
+    last_used: u64,
+}
+
+/// Ref-counted adapter-weight residency with LRU eviction of idle
+/// adapters, charging against the same block budget as KV allocation.
+#[derive(Debug)]
+pub struct AdapterResidency {
+    enabled: bool,
+    /// Per-adapter weight cost in KV-block-equivalents (registry order).
+    weight_blocks: Vec<usize>,
+    resident: FxHashMap<u32, Resident>,
+    tick: u64,
+    stats: ResidencyStats,
+}
+
+impl AdapterResidency {
+    /// Derive per-adapter weight costs from the registry and model dims.
+    /// With `enabled = false` this is the pre-paging always-resident model:
+    /// every query reports resident, nothing is charged, no stats move.
+    pub fn new(
+        registry: &AdapterRegistry,
+        model: &ModelConfig,
+        block_size: u32,
+        enabled: bool,
+    ) -> Self {
+        AdapterResidency {
+            enabled,
+            weight_blocks: registry
+                .iter()
+                .map(|a| a.weight_blocks(model, block_size))
+                .collect(),
+            resident: FxHashMap::default(),
+            tick: 0,
+            stats: ResidencyStats::default(),
+        }
+    }
+
+    /// Always-resident stub for tests and adapter-free fixtures.
+    pub fn disabled() -> Self {
+        AdapterResidency {
+            enabled: false,
+            weight_blocks: Vec::new(),
+            resident: FxHashMap::default(),
+            tick: 0,
+            stats: ResidencyStats::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn stats(&self) -> ResidencyStats {
+        self.stats
+    }
+
+    /// Weight cost of one adapter in blocks; 0 when paging is disabled
+    /// (weights are free under always-resident semantics).
+    pub fn weight_blocks_of(&self, aid: AdapterId) -> usize {
+        if !self.enabled {
+            return 0;
+        }
+        self.weight_blocks.get(aid.0 as usize).copied().unwrap_or(1)
+    }
+
+    pub fn is_resident(&self, aid: AdapterId) -> bool {
+        !self.enabled || self.resident.contains_key(&aid.0)
+    }
+
+    /// Blocks an admission of `adapter` would add for weights on top of its
+    /// KV demand — the admission watermark's adapter-load term.
+    pub fn pending_load_blocks(&self, adapter: Option<AdapterId>) -> usize {
+        match adapter {
+            Some(aid) if self.enabled && !self.resident.contains_key(&aid.0) => {
+                self.weight_blocks_of(aid)
+            }
+            _ => 0,
+        }
+    }
+
+    /// Resident adapter ids, ascending (stable for stats/JSON).
+    pub fn resident_ids(&self) -> Vec<u32> {
+        let mut ids: Vec<u32> = self.resident.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    pub fn num_resident(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Total pages currently charged to adapter weights.
+    pub fn resident_blocks(&self) -> usize {
+        self.resident.values().map(|e| e.blocks.len()).sum()
+    }
+
+    fn touch(&mut self) -> u64 {
+        let t = self.tick;
+        self.tick += 1;
+        t
+    }
+
+    /// Make `aid` resident, loading its weights if needed. A load claims
+    /// pages from the shared pool; under pressure it evicts idle adapters
+    /// (LRU first, never `aid` itself, never one with running users) until
+    /// the claim fits. False = memory not reclaimable right now — the
+    /// caller defers admission and counts a stall.
+    pub fn ensure_resident(&mut self, aid: AdapterId, kv: &mut KvCacheManager) -> bool {
+        if !self.enabled || self.resident.contains_key(&aid.0) {
+            return true;
+        }
+        let need = self.weight_blocks_of(aid);
+        loop {
+            if let Some(blocks) = kv.claim_adapter_blocks(need) {
+                let t = self.touch();
+                self.resident.insert(aid.0, Resident { blocks, refs: 0, last_used: t });
+                self.stats.loads += 1;
+                return true;
+            }
+            if !self.evict_one_idle_except(kv, Some(aid)) {
+                return false;
+            }
+        }
+    }
+
+    /// Count an adapter admission: bump the adapter's ref (it must be
+    /// resident — the scheduler calls [`Self::ensure_resident`] first) and
+    /// record whether the weights were already warm when admission began.
+    pub fn acquire(&mut self, aid: AdapterId, was_resident: bool) {
+        if !self.enabled {
+            return;
+        }
+        self.stats.adapter_admissions += 1;
+        if was_resident {
+            self.stats.adapter_admission_hits += 1;
+        }
+        let t = self.touch();
+        let e = self
+            .resident
+            .get_mut(&aid.0)
+            .expect("acquire of a non-resident adapter");
+        e.refs += 1;
+        e.last_used = t;
+    }
+
+    /// A running request using `aid` left the running set (finished or
+    /// preempted). At zero refs the adapter stays warm but evictable.
+    pub fn release(&mut self, aid: AdapterId) {
+        if !self.enabled {
+            return;
+        }
+        let t = self.touch();
+        let e = self
+            .resident
+            .get_mut(&aid.0)
+            .expect("release of a non-resident adapter");
+        assert!(e.refs > 0, "release without acquire for adapter {}", aid.0);
+        e.refs -= 1;
+        e.last_used = t;
+    }
+
+    /// Evict the least-recently-used idle adapter (ref == 0), returning its
+    /// pages to the shared pool. False when no adapter is evictable.
+    pub fn evict_one_idle(&mut self, kv: &mut KvCacheManager) -> bool {
+        self.evict_one_idle_except(kv, None)
+    }
+
+    /// [`Self::evict_one_idle`] excluding one id — a load in progress must
+    /// not evict the adapter it is loading.
+    pub fn evict_one_idle_except(
+        &mut self,
+        kv: &mut KvCacheManager,
+        except: Option<AdapterId>,
+    ) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        // Deterministic LRU: `last_used` stamps are unique (monotonic
+        // tick), so the min is unambiguous regardless of map order.
+        let victim = self
+            .resident
+            .iter()
+            .filter(|(id, e)| e.refs == 0 && Some(AdapterId(**id)) != except)
+            .min_by_key(|(id, e)| (e.last_used, **id))
+            .map(|(id, _)| *id);
+        match victim {
+            Some(id) => {
+                let e = self.resident.remove(&id).expect("victim vanished");
+                kv.release_adapter_blocks(&e.blocks);
+                self.stats.evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Count one scheduler step that stalled admission on a failed load.
+    pub fn note_stall(&mut self) {
+        if self.enabled {
+            self.stats.load_stall_steps += 1;
+        }
+    }
+
+    /// Test hook: per-entry consistency (page counts match the cost model).
+    #[doc(hidden)]
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (id, e) in &self.resident {
+            let want = self.weight_blocks.get(*id as usize).copied().unwrap_or(1);
+            if e.blocks.len() != want {
+                return Err(format!(
+                    "adapter {id}: holds {} pages, cost model says {want}",
+                    e.blocks.len()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    /// 3 rank-32 aLoRAs on the tiny model: 8 pages each (see
+    /// `adapter::tests::weight_cost_model_scales_with_rank_and_quantizes_up`).
+    fn fixture(pool_blocks: u32) -> (AdapterResidency, KvCacheManager) {
+        let reg = AdapterRegistry::tiny_default(3, 512, 4);
+        let model = presets::tiny().model;
+        let res = AdapterResidency::new(&reg, &model, 16, true);
+        let kv = KvCacheManager::new(pool_blocks, 16, true);
+        (res, kv)
+    }
+
+    fn a(i: u32) -> AdapterId {
+        AdapterId(i)
+    }
+
+    #[test]
+    fn load_charges_budget_and_lru_evicts_idle() {
+        let (mut res, mut kv) = fixture(20);
+        assert!(res.ensure_resident(a(0), &mut kv));
+        assert!(res.ensure_resident(a(1), &mut kv));
+        assert_eq!(res.resident_blocks(), 16);
+        assert_eq!(kv.budget().adapter_blocks(), 16);
+        assert_eq!(kv.num_free_blocks(), 4);
+        // Third adapter needs 8 pages, only 4 free: the LRU idle adapter
+        // (0, loaded first, untouched since) is evicted to make room.
+        assert!(res.ensure_resident(a(2), &mut kv));
+        assert_eq!(res.resident_ids(), vec![1, 2]);
+        assert_eq!(res.stats().loads, 3);
+        assert_eq!(res.stats().evictions, 1);
+        assert_eq!(kv.budget().adapter_blocks(), 16);
+        res.check_invariants().unwrap();
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn refs_pin_adapters_and_release_unpins() {
+        let (mut res, mut kv) = fixture(20);
+        assert!(res.ensure_resident(a(0), &mut kv));
+        res.acquire(a(0), true);
+        assert!(res.ensure_resident(a(1), &mut kv));
+        // Adapter 0 is in use: loading 2 must evict 1 (idle), never 0.
+        assert!(res.ensure_resident(a(2), &mut kv));
+        assert_eq!(res.resident_ids(), vec![0, 2]);
+        // Release makes 0 evictable but also touches its LRU stamp, so the
+        // next eviction takes 2 (stamped at load, before 0's release).
+        res.release(a(0));
+        assert!(res.ensure_resident(a(1), &mut kv));
+        assert_eq!(res.resident_ids(), vec![0, 1]);
+        assert_eq!(res.stats().evictions, 2);
+        res.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn kv_pressure_reclaims_idle_adapters() {
+        let (mut res, mut kv) = fixture(16);
+        assert!(res.ensure_resident(a(0), &mut kv));
+        assert!(res.ensure_resident(a(1), &mut kv));
+        assert_eq!(kv.num_free_blocks(), 0);
+        // A KV caller under pressure evicts one idle adapter and retries —
+        // the other direction of the shared budget.
+        assert!(res.evict_one_idle(&mut kv));
+        assert_eq!(kv.num_free_blocks(), 8);
+        kv.start_request(1, &[], 64);
+        assert!(kv.ensure_capacity(1, 64));
+        kv.free_request(1);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn load_fails_only_when_nothing_is_reclaimable() {
+        let (mut res, mut kv) = fixture(16);
+        assert!(res.ensure_resident(a(0), &mut kv));
+        res.acquire(a(0), true);
+        assert!(res.ensure_resident(a(1), &mut kv));
+        res.acquire(a(1), false);
+        // Both residents pinned, zero free: adapter 2 cannot load.
+        assert!(!res.ensure_resident(a(2), &mut kv));
+        res.note_stall();
+        assert_eq!(res.stats().load_stall_steps, 1);
+        // A release unpins 1 → the load now succeeds by evicting it.
+        res.release(a(1));
+        assert!(res.ensure_resident(a(2), &mut kv));
+        assert_eq!(res.resident_ids(), vec![0, 2]);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_hit_accounting() {
+        let (mut res, mut kv) = fixture(20);
+        let was = res.is_resident(a(0));
+        assert!(!was);
+        assert!(res.ensure_resident(a(0), &mut kv));
+        res.acquire(a(0), was);
+        res.release(a(0));
+        let was = res.is_resident(a(0));
+        assert!(was, "idle resident stays warm");
+        assert!(res.ensure_resident(a(0), &mut kv));
+        res.acquire(a(0), was);
+        let s = res.stats();
+        assert_eq!(s.adapter_admissions, 2);
+        assert_eq!(s.adapter_admission_hits, 1);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(s.loads, 1, "second admission reused the resident weights");
+    }
+
+    #[test]
+    fn disabled_is_always_resident_and_free() {
+        let mut res = AdapterResidency::disabled();
+        let mut kv = KvCacheManager::new(4, 16, true);
+        assert!(res.is_resident(a(7)));
+        assert_eq!(res.weight_blocks_of(a(7)), 0);
+        assert_eq!(res.pending_load_blocks(Some(a(7))), 0);
+        assert!(res.ensure_resident(a(7), &mut kv));
+        res.acquire(a(7), true);
+        res.release(a(7));
+        assert!(!res.evict_one_idle(&mut kv));
+        res.note_stall();
+        assert_eq!(res.stats(), ResidencyStats::default());
+        assert_eq!(kv.num_free_blocks(), 4, "nothing charged");
+    }
+}

@@ -58,23 +58,73 @@ pub struct ReplicaStats {
     pub committed_blocks: u64,
     pub hit_rate: f64,
     pub routed: u64,
+    /// Adapter ids resident on this replica (ascending; empty with
+    /// adapter paging off — everything is implicitly resident then).
+    pub resident_adapters: Vec<u32>,
+    /// Blocks charged to those adapters' weights.
+    pub adapter_resident_blocks: usize,
+    pub adapter_loads: u64,
+    pub adapter_evictions: u64,
+}
+
+/// The per-replica engine configuration summary `GET /cluster` reports so
+/// fleet dashboards don't need out-of-band config (replicas are identical
+/// by construction, so one summary describes them all).
+#[derive(Debug, Clone)]
+pub struct ReplicaConfigSummary {
+    pub model: String,
+    pub block_size: u32,
+    /// Device budget per replica in blocks (KV + adapter weights).
+    pub total_blocks: u64,
+    pub max_batch_tokens: u32,
+    pub max_num_seqs: u32,
+    pub admission_watermark: f64,
+    pub base_aligned_hashing: bool,
+    pub adapter_paging: bool,
 }
 
 /// Fleet snapshot for `GET /cluster` and tests.
 #[derive(Debug, Clone)]
 pub struct ClusterStats {
+    /// Active router policy name.
     pub policy: &'static str,
+    pub config: ReplicaConfigSummary,
     pub replicas: Vec<ReplicaStats>,
     pub routing: RoutingMetrics,
     /// Token-weighted prefix hit rate across the fleet.
     pub aggregate_hit_rate: f64,
+    /// Fleet fraction of adapter admissions that found weights resident.
+    pub aggregate_adapter_hit_rate: f64,
 }
 
 impl ClusterStats {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("policy", Json::str(self.policy)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("model", Json::str(self.config.model.clone())),
+                    ("block_size", Json::num(self.config.block_size as f64)),
+                    ("total_blocks", Json::num(self.config.total_blocks as f64)),
+                    ("max_batch_tokens", Json::num(self.config.max_batch_tokens as f64)),
+                    ("max_num_seqs", Json::num(self.config.max_num_seqs as f64)),
+                    (
+                        "admission_watermark",
+                        Json::num(self.config.admission_watermark),
+                    ),
+                    (
+                        "base_aligned_hashing",
+                        Json::Bool(self.config.base_aligned_hashing),
+                    ),
+                    ("adapter_paging", Json::Bool(self.config.adapter_paging)),
+                ]),
+            ),
             ("aggregate_hit_rate", Json::num(self.aggregate_hit_rate)),
+            (
+                "aggregate_adapter_hit_rate",
+                Json::num(self.aggregate_adapter_hit_rate),
+            ),
             (
                 "routing",
                 Json::obj(vec![
@@ -106,6 +156,24 @@ impl ClusterStats {
                                 ("committed_blocks", Json::num(r.committed_blocks as f64)),
                                 ("cache_hit_rate", Json::num(r.hit_rate)),
                                 ("routed", Json::num(r.routed as f64)),
+                                (
+                                    "resident_adapters",
+                                    Json::Arr(
+                                        r.resident_adapters
+                                            .iter()
+                                            .map(|&a| Json::num(a as f64))
+                                            .collect(),
+                                    ),
+                                ),
+                                (
+                                    "adapter_resident_blocks",
+                                    Json::num(r.adapter_resident_blocks as f64),
+                                ),
+                                ("adapter_loads", Json::num(r.adapter_loads as f64)),
+                                (
+                                    "adapter_evictions",
+                                    Json::num(r.adapter_evictions as f64),
+                                ),
                             ])
                         })
                         .collect(),
@@ -216,9 +284,36 @@ impl<E: Executor> Cluster<E> {
             .sum()
     }
 
+    /// Fleet fraction of adapter admissions whose weights were already
+    /// resident — what adapter-aware placement optimizes for.
+    pub fn aggregate_adapter_hit_rate(&self) -> f64 {
+        let (mut hits, mut total) = (0u64, 0u64);
+        for r in &self.replicas {
+            let s = r.residency().stats();
+            hits += s.adapter_admission_hits;
+            total += s.adapter_admissions;
+        }
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
     pub fn stats(&self) -> ClusterStats {
+        let cfg = &self.replicas[0].cfg;
         ClusterStats {
             policy: self.router.policy().name(),
+            config: ReplicaConfigSummary {
+                model: cfg.model.name.clone(),
+                block_size: cfg.cache.block_size,
+                total_blocks: cfg.cache.num_blocks(),
+                max_batch_tokens: cfg.scheduler.max_batch_tokens,
+                max_num_seqs: cfg.scheduler.max_num_seqs,
+                admission_watermark: cfg.scheduler.admission_watermark,
+                base_aligned_hashing: cfg.cache.base_aligned_hashing,
+                adapter_paging: cfg.cache.adapter_paging,
+            },
             replicas: self
                 .replicas
                 .iter()
@@ -234,10 +329,15 @@ impl<E: Executor> Cluster<E> {
                     committed_blocks: r.routing_summary().committed_blocks(),
                     hit_rate: r.kv_stats().hit_rate(),
                     routed: self.router.stats.routed[i],
+                    resident_adapters: r.residency().resident_ids(),
+                    adapter_resident_blocks: r.residency().resident_blocks(),
+                    adapter_loads: r.residency().stats().loads,
+                    adapter_evictions: r.residency().stats().evictions,
                 })
                 .collect(),
             routing: self.router.stats.clone(),
             aggregate_hit_rate: self.aggregate_hit_rate(),
+            aggregate_adapter_hit_rate: self.aggregate_adapter_hit_rate(),
         }
     }
 
@@ -265,9 +365,10 @@ impl<E: Executor> Cluster<E> {
     }
 
     /// Score every replica for one request. The chain is hashed ONCE —
-    /// each replica contributes only a summary probe (no pool walks) —
-    /// and returned so submission can pre-seed the request with it
-    /// (admission then skips rehashing the same prompt).
+    /// each replica contributes only a summary probe plus an O(1)
+    /// residency lookup (no pool walks) — and returned so submission can
+    /// pre-seed the request with it (admission then skips rehashing the
+    /// same prompt).
     fn views_for(
         &self,
         target: ModelTarget,
@@ -291,6 +392,13 @@ impl<E: Executor> Cluster<E> {
                 } else {
                     r.routing_summary().matching_prefix(&chain)
                 },
+                // Adapter-residency term: weight pages this replica would
+                // NOT have to load for the request (0 with paging off —
+                // then weights are free everywhere and the term vanishes).
+                adapter_blocks: target
+                    .adapter()
+                    .map(|aid| r.adapter_affinity_blocks(aid))
+                    .unwrap_or(0),
             })
             .collect();
         (views, chain)
@@ -543,8 +651,18 @@ mod tests {
         assert_eq!(st.replicas.len(), 2);
         assert_eq!(st.routing.total_routed(), 1);
         assert!(st.replicas.iter().any(|r| r.committed_blocks > 0));
+        // Config summary rides along so dashboards don't need out-of-band
+        // config (satellite: per-replica block budget + paging flag).
+        assert_eq!(st.config.model, "granite-8b");
+        assert_eq!(st.config.total_blocks, 21_944);
+        assert!(!st.config.adapter_paging);
+        assert!(st.replicas.iter().all(|r| r.resident_adapters.is_empty()));
         let j = st.to_json().to_string();
         assert!(j.contains("\"policy\":\"prefix-affinity\""), "{j}");
+        assert!(j.contains("\"config\":{"), "{j}");
+        assert!(j.contains("\"total_blocks\":21944"), "{j}");
+        assert!(j.contains("\"adapter_paging\":false"), "{j}");
+        assert!(j.contains("\"resident_adapters\":[]"), "{j}");
         let prom = c.render_prometheus();
         assert!(prom.contains("alora_serve_requests_finished_total 1"), "{prom}");
         assert!(prom.contains("alora_serve_router_requests_routed_total{replica=\"0\"}"));
@@ -563,6 +681,56 @@ mod tests {
         assert!(err.is_err());
         assert_eq!(c.router().stats.total_routed(), 0);
         assert_eq!(c.router().stats.affinity_fallbacks, 0);
+    }
+
+    #[test]
+    fn adapter_affinity_converges_replicas_on_hot_subsets() {
+        // Paged fleet: 128-block budget per replica, 3 aLoRAs × 32 weight
+        // blocks. Round 1 spreads cold adapters by load; from round 2 on,
+        // each adapter's requests go home to the replica holding its
+        // weights — replicas converge on disjoint hot subsets instead of
+        // all replicas paging all adapters (S-LoRA-style placement).
+        let mut c = Cluster::from_factory(2, RoutePolicy::AdapterAffinity, |_| {
+            let mut cfg = presets::granite_8b();
+            cfg.scheduler.max_seq_len = 2048;
+            cfg.cache.max_kv_tokens = 2048; // 128 blocks
+            cfg.cache.adapter_paging = true;
+            let reg = workload::build_registry(3, cfg.model.vocab_size, true);
+            let exec = SimExecutor::new(&cfg);
+            Engine::with_registry(cfg, reg, exec)
+        })
+        .unwrap();
+        let p = SamplingParams { max_new_tokens: 8, ..Default::default() };
+        let mut rng = crate::util::rng::Rng::new(3);
+        let vocab = c.config().model.vocab_size;
+        for _round in 0..3 {
+            for a in 0..3u32 {
+                let prompt = workload::prompt(&mut rng, 256, vocab);
+                c.submit(ModelTarget::Adapter(AdapterId(a)), prompt, p).unwrap();
+            }
+            c.run_until_idle();
+        }
+        let st = c.stats();
+        assert_eq!(st.config.total_blocks, 128);
+        assert!(st.config.adapter_paging);
+        // Every adapter found a home; the fleet holds each exactly once.
+        let mut all: Vec<u32> = st
+            .replicas
+            .iter()
+            .flat_map(|r| r.resident_adapters.clone())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2], "disjoint hot subsets: {st:?}");
+        // Rounds 2 and 3 were all residency hits: 6 of 9 admissions warm,
+        // and no adapter was ever evicted (stable placement, no thrash).
+        assert!((c.aggregate_adapter_hit_rate() - 6.0 / 9.0).abs() < 1e-12);
+        let loads: u64 = st.replicas.iter().map(|r| r.adapter_loads).sum();
+        let evictions: u64 = st.replicas.iter().map(|r| r.adapter_evictions).sum();
+        assert_eq!(loads, 3, "one load per adapter, ever");
+        assert_eq!(evictions, 0);
+        assert_eq!(c.router().stats.affinity_hits, 6);
+        let j = st.to_json().to_string();
+        assert!(j.contains("\"aggregate_adapter_hit_rate\""), "{j}");
     }
 
     #[test]

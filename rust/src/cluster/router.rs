@@ -21,9 +21,16 @@ pub enum RoutePolicy {
     RoundRobin,
     /// Fewest in-flight requests (waiting + running); ties → lowest index.
     LeastLoaded,
-    /// Longest cached base-aligned prefix, load-penalized; falls back to
-    /// least-loaded when no replica holds any of the chain.
+    /// Longest cached base-aligned prefix PLUS resident adapter weights
+    /// (both in blocks — one currency, the unified memory budget's),
+    /// load-penalized; falls back to least-loaded when no replica holds
+    /// anything of value for the request.
     PrefixAffinity,
+    /// Adapter-residency-first placement (S-LoRA-style): send a request
+    /// where its adapter's weights already live, so each replica converges
+    /// on a stable subset of hot adapters instead of every replica paging
+    /// every adapter. Cold adapters (and base requests) → least-loaded.
+    AdapterAffinity,
 }
 
 impl RoutePolicy {
@@ -32,6 +39,7 @@ impl RoutePolicy {
             RoutePolicy::RoundRobin => "round-robin",
             RoutePolicy::LeastLoaded => "least-loaded",
             RoutePolicy::PrefixAffinity => "prefix-affinity",
+            RoutePolicy::AdapterAffinity => "adapter-affinity",
         }
     }
 
@@ -41,6 +49,7 @@ impl RoutePolicy {
             "round-robin" | "rr" => Some(RoutePolicy::RoundRobin),
             "least-loaded" | "ll" => Some(RoutePolicy::LeastLoaded),
             "prefix-affinity" | "affinity" => Some(RoutePolicy::PrefixAffinity),
+            "adapter-affinity" | "adapter" => Some(RoutePolicy::AdapterAffinity),
             _ => None,
         }
     }
@@ -54,6 +63,10 @@ pub struct ReplicaView {
     /// Leading blocks of the request's hash chain this replica's committed
     /// summary covers (0 when the policy doesn't score affinity).
     pub affinity_blocks: usize,
+    /// Weight pages of the request's adapter already resident on this
+    /// replica (0 for base requests, non-resident adapters, or when
+    /// adapter paging is off — then every replica is equally "resident").
+    pub adapter_blocks: usize,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -118,7 +131,8 @@ impl Router {
     }
 
     /// Does this policy need the request's hash chain scored per replica?
-    /// (Lets the cluster skip hashing entirely for RR / least-loaded.)
+    /// (Lets the cluster skip hashing entirely for RR / least-loaded /
+    /// adapter-affinity, which never look at the chain.)
     pub fn needs_chain(&self) -> bool {
         self.cfg.policy == RoutePolicy::PrefixAffinity
     }
@@ -139,32 +153,46 @@ impl Router {
                 Placement { replica: least_loaded(views), kind: PlacementKind::Plain }
             }
             RoutePolicy::PrefixAffinity => {
-                let best = views.iter().map(|v| v.affinity_blocks).max().unwrap_or(0);
-                if best == 0 {
-                    // Cold prefix: nothing to gain anywhere, balance load.
-                    Placement { replica: least_loaded(views), kind: PlacementKind::Cold }
-                } else {
-                    let score = |v: &ReplicaView| {
-                        v.affinity_blocks as f64
-                            - self.cfg.load_penalty_blocks * v.load as f64
-                    };
-                    let mut pick = 0;
-                    for (j, v) in views.iter().enumerate() {
-                        if score(v) > score(&views[pick]) {
-                            pick = j;
-                        }
-                    }
-                    let blocks = views[pick].affinity_blocks;
-                    if blocks == 0 {
-                        // The load penalty steered the request off every
-                        // warm replica: it lands cold and must be counted
-                        // as a fallback, not a hit.
-                        Placement { replica: pick, kind: PlacementKind::Cold }
-                    } else {
-                        Placement { replica: pick, kind: PlacementKind::Warm { blocks } }
-                    }
-                }
+                // KV prefix and resident weights trade in one currency —
+                // blocks the placement would not have to re-fill/re-load.
+                self.affine_choose(views, |v| v.affinity_blocks + v.adapter_blocks)
             }
+            RoutePolicy::AdapterAffinity => {
+                self.affine_choose(views, |v| v.adapter_blocks)
+            }
+        }
+    }
+
+    /// Shared affinity scaffold: maximize `value(view) - penalty × load`;
+    /// when no replica holds any value for the request (or the load
+    /// penalty steers it off every warm replica), fall back cold to
+    /// least-loaded. `Warm.blocks` reports the value actually landed on.
+    fn affine_choose(
+        &self,
+        views: &[ReplicaView],
+        value: impl Fn(&ReplicaView) -> usize,
+    ) -> Placement {
+        let best = views.iter().map(&value).max().unwrap_or(0);
+        if best == 0 {
+            // Cold: nothing to gain anywhere, balance load.
+            return Placement { replica: least_loaded(views), kind: PlacementKind::Cold };
+        }
+        let score =
+            |v: &ReplicaView| value(v) as f64 - self.cfg.load_penalty_blocks * v.load as f64;
+        let mut pick = 0;
+        for (j, v) in views.iter().enumerate() {
+            if score(v) > score(&views[pick]) {
+                pick = j;
+            }
+        }
+        let blocks = value(&views[pick]);
+        if blocks == 0 {
+            // The load penalty steered the request off every warm
+            // replica: it lands cold and must be counted as a fallback,
+            // not a hit.
+            Placement { replica: pick, kind: PlacementKind::Cold }
+        } else {
+            Placement { replica: pick, kind: PlacementKind::Warm { blocks } }
         }
     }
 
@@ -189,7 +217,19 @@ mod tests {
     fn views(specs: &[(usize, usize)]) -> Vec<ReplicaView> {
         specs
             .iter()
-            .map(|&(load, aff)| ReplicaView { load, affinity_blocks: aff })
+            .map(|&(load, aff)| ReplicaView { load, affinity_blocks: aff, adapter_blocks: 0 })
+            .collect()
+    }
+
+    /// (load, prefix blocks, resident adapter-weight blocks) triples.
+    fn views3(specs: &[(usize, usize, usize)]) -> Vec<ReplicaView> {
+        specs
+            .iter()
+            .map(|&(load, aff, ad)| ReplicaView {
+                load,
+                affinity_blocks: aff,
+                adapter_blocks: ad,
+            })
             .collect()
     }
 
@@ -263,6 +303,41 @@ mod tests {
     }
 
     #[test]
+    fn prefix_affinity_counts_resident_adapters_as_value() {
+        // Replica 1 has no cached prefix but holds the request's adapter
+        // weights (32 pages) — that beats replica 0's short 4-block prefix:
+        // not reloading weights saves more memory traffic than 4 blocks
+        // of KV.
+        let mut r = router(RoutePolicy::PrefixAffinity, 2);
+        let p = r.choose(&views3(&[(0, 4, 0), (0, 0, 32)]));
+        assert_eq!(p.replica, 1);
+        assert_eq!(p.kind, PlacementKind::Warm { blocks: 32 });
+        // Both terms on one replica add up.
+        let p = r.choose(&views3(&[(0, 4, 32), (0, 6, 0)]));
+        assert_eq!(p.replica, 0);
+        assert_eq!(p.kind, PlacementKind::Warm { blocks: 36 });
+    }
+
+    #[test]
+    fn adapter_affinity_follows_residency_and_ignores_prefixes() {
+        let mut r = router(RoutePolicy::AdapterAffinity, 3);
+        // Prefix blocks don't matter; the resident adapter does.
+        let p = r.choose(&views3(&[(0, 100, 0), (1, 0, 32), (0, 0, 0)]));
+        assert_eq!(p.replica, 1);
+        assert_eq!(p.kind, PlacementKind::Warm { blocks: 32 });
+        r.record(p);
+        assert_eq!(r.stats.affinity_hits, 1);
+        // Nothing resident anywhere → least-loaded cold fallback.
+        let p = r.choose(&views3(&[(2, 50, 0), (1, 0, 0), (3, 0, 0)]));
+        assert_eq!(p.replica, 1);
+        assert_eq!(p.kind, PlacementKind::Cold);
+        // An overloaded warm replica loses to an idle cold one.
+        let p = r.choose(&views3(&[(20, 0, 8), (0, 0, 0)]));
+        assert_eq!(p.replica, 1);
+        assert_eq!(p.kind, PlacementKind::Cold);
+    }
+
+    #[test]
     fn unrecorded_placements_leave_stats_untouched() {
         // The cluster only records after a successful submission; a
         // rejected request must not skew the counters.
@@ -275,10 +350,16 @@ mod tests {
 
     #[test]
     fn policy_names_roundtrip() {
-        for p in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::PrefixAffinity] {
+        for p in [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::LeastLoaded,
+            RoutePolicy::PrefixAffinity,
+            RoutePolicy::AdapterAffinity,
+        ] {
             assert_eq!(RoutePolicy::parse(p.name()), Some(p));
         }
         assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("adapter"), Some(RoutePolicy::AdapterAffinity));
         assert_eq!(RoutePolicy::parse("nope"), None);
     }
 }

@@ -98,6 +98,13 @@ pub struct CacheConfig {
     /// blocks interchangeable (Figure 3). When false, behave like vanilla
     /// vLLM (every adapter block salted) — the LoRA baseline.
     pub base_aligned_hashing: bool,
+    /// Unified memory budget (S-LoRA-style): when true, adapter weights
+    /// are paged against the SAME block budget as the KV cache — loads
+    /// claim pages from the pool, idle adapters are LRU-evicted under
+    /// pressure, and admission gates on residency. When false (default),
+    /// pre-paging semantics: every adapter is permanently resident and
+    /// weight memory is unaccounted (DESIGN.md §13).
+    pub adapter_paging: bool,
 }
 
 impl CacheConfig {
@@ -194,6 +201,10 @@ impl EngineConfig {
                     "base_aligned_hashing" => {
                         cfg.cache.base_aligned_hashing =
                             v.as_bool().unwrap_or(cfg.cache.base_aligned_hashing)
+                    }
+                    "adapter_paging" => {
+                        cfg.cache.adapter_paging =
+                            v.as_bool().unwrap_or(cfg.cache.adapter_paging)
                     }
                     "max_batch_tokens" => {
                         cfg.scheduler.max_batch_tokens =

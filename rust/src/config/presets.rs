@@ -48,6 +48,7 @@ pub fn tiny() -> EngineConfig {
             max_kv_tokens: 2048,
             enable_prefix_caching: true,
             base_aligned_hashing: true,
+            adapter_paging: false,
         },
         scheduler: SchedulerConfig {
             max_batch_tokens: 256,
@@ -80,6 +81,7 @@ pub fn granite_8b() -> EngineConfig {
             max_kv_tokens: 351_104,
             enable_prefix_caching: true,
             base_aligned_hashing: true,
+            adapter_paging: false,
         },
         scheduler: SchedulerConfig {
             max_batch_tokens: 8192,
@@ -112,6 +114,7 @@ pub fn llama_70b() -> EngineConfig {
             max_kv_tokens: 407_984,
             enable_prefix_caching: true,
             base_aligned_hashing: true,
+            adapter_paging: false,
         },
         scheduler: SchedulerConfig {
             max_batch_tokens: 8192,
@@ -144,6 +147,7 @@ pub fn mistral_large_2() -> EngineConfig {
             max_kv_tokens: 912_688,
             enable_prefix_caching: true,
             base_aligned_hashing: true,
+            adapter_paging: false,
         },
         scheduler: SchedulerConfig {
             max_batch_tokens: 8192,

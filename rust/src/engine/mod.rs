@@ -20,7 +20,7 @@ pub mod mask;
 
 use crate::util::fxmap::FxHashMap;
 
-use crate::adapter::AdapterRegistry;
+use crate::adapter::{AdapterId, AdapterRegistry, AdapterResidency};
 use crate::config::EngineConfig;
 use crate::kvcache::block::BlockHash;
 use crate::kvcache::manager::KvCacheManager;
@@ -63,6 +63,9 @@ pub struct Engine<E: Executor> {
     exec: E,
     sched: Scheduler,
     kv: KvCacheManager,
+    /// Adapter-weight residency, paged against the KV block budget when
+    /// `cfg.cache.adapter_paging` is on (always-resident stub otherwise).
+    residency: AdapterResidency,
     reqs: FxHashMap<RequestId, Request>,
     clock: f64,
     next_id: u64,
@@ -86,9 +89,16 @@ impl<E: Executor> Engine<E> {
             cfg.cache.enable_prefix_caching,
         );
         let sched = Scheduler::new(cfg.scheduler.clone());
+        let residency = AdapterResidency::new(
+            &registry,
+            &cfg.model,
+            cfg.cache.block_size,
+            cfg.cache.adapter_paging,
+        );
         Engine {
             kv,
             sched,
+            residency,
             registry,
             exec,
             reqs: FxHashMap::default(),
@@ -140,6 +150,27 @@ impl<E: Executor> Engine<E> {
     /// router scores prefix affinity against).
     pub fn routing_summary(&self) -> &crate::kvcache::summary::HashSummary {
         self.kv.routing_summary()
+    }
+
+    /// Adapter-weight residency state (loads, evictions, resident set).
+    pub fn residency(&self) -> &AdapterResidency {
+        &self.residency
+    }
+
+    /// The unified memory ledger (KV pages vs resident adapter weights).
+    pub fn memory_budget(&self) -> &crate::memory::MemoryBudget {
+        self.kv.budget()
+    }
+
+    /// Weight pages of `aid` already resident here — the router's
+    /// adapter-affinity term (0 when non-resident or paging is off: with
+    /// always-resident weights every replica scores alike).
+    pub fn adapter_affinity_blocks(&self, aid: AdapterId) -> usize {
+        if self.residency.enabled() && self.residency.is_resident(aid) {
+            self.residency.weight_blocks_of(aid)
+        } else {
+            0
+        }
     }
 
     /// True while no request has ever been submitted and no id namespace
@@ -241,6 +272,19 @@ impl<E: Executor> Engine<E> {
             final_len as u64 <= self.cfg.cache.max_kv_tokens,
             "request length {final_len} exceeds KV capacity"
         );
+        // Unified budget: an adapter request additionally needs its weight
+        // pages co-resident with its KV for the whole run. Reject up front
+        // what could never be admitted, instead of stalling forever.
+        if let (true, Some(aid)) = (self.residency.enabled(), target.adapter()) {
+            let weight = self.residency.weight_blocks_of(aid);
+            let kv_demand = final_len.div_ceil(self.cfg.cache.block_size as usize);
+            anyhow::ensure!(
+                weight + kv_demand <= self.kv.num_total_blocks() as usize,
+                "request needs {kv_demand} KV blocks + {weight} adapter-weight \
+                 blocks, exceeding the {}-block device budget",
+                self.kv.num_total_blocks()
+            );
+        }
         let id = RequestId(self.next_id);
         self.next_id += self.id_stride;
         let mut req = Request::new(id, target, prompt, params, self.clock);
@@ -280,7 +324,7 @@ impl<E: Executor> Engine<E> {
     /// Drive one engine step. Returns false when nothing was schedulable
     /// (idle: caller advances the clock to the next arrival or stops).
     pub fn step(&mut self) -> bool {
-        let step = self.sched.schedule(&mut self.reqs, &mut self.kv);
+        let step = self.sched.schedule(&mut self.reqs, &mut self.kv, &mut self.residency);
         self.metrics.engine_steps += 1;
         if step.is_empty() {
             self.refresh_gauges();
@@ -352,11 +396,17 @@ impl<E: Executor> Engine<E> {
             if r.output_tokens.len() as u32 >= r.params.max_new_tokens {
                 r.state = State::Finished;
                 r.timeline.finished = self.clock;
+                let target = r.target;
                 let out = RequestOutput::from_request(r);
                 self.metrics.observe_finished(&out);
                 self.finished.push(out);
                 self.sched.finish(s.id);
                 self.kv.free_request(s.id.0);
+                // The last finisher's ref-drop turns its adapter idle
+                // (warm but evictable) — residency mirrors the running set.
+                if let ModelTarget::Adapter(aid) = target {
+                    self.residency.release(aid);
+                }
                 self.reqs.remove(&s.id);
             }
         }
@@ -374,6 +424,11 @@ impl<E: Executor> Engine<E> {
         self.metrics.blocks_allocated = ks.pool.allocations;
         self.metrics.cache_hit_blocks = ks.pool.hits;
         self.metrics.cache_evictions = ks.pool.evictions;
+        let rs = self.residency.stats();
+        self.metrics.adapter_loads = rs.loads;
+        self.metrics.adapter_evictions = rs.evictions;
+        self.metrics.adapter_load_stall_steps = rs.load_stall_steps;
+        self.metrics.adapter_resident_blocks = self.residency.resident_blocks() as u64;
     }
 
     /// Run until every submitted request has finished.
@@ -422,15 +477,20 @@ impl<E: Executor> Engine<E> {
         taken
     }
 
-    /// Test hook: sweep KV-manager invariants; when idle, additionally
-    /// check that no blocks leaked.
+    /// Test hook: sweep KV-manager + residency invariants; when idle,
+    /// additionally check that no blocks leaked — every non-free block of
+    /// an idle engine must be a resident adapter's weight page.
     #[doc(hidden)]
     pub fn check_invariants(&self) -> Result<(), String> {
         self.kv.check_invariants()?;
-        if !self.has_work() && self.kv.num_free_blocks() != self.kv.num_total_blocks() {
+        self.residency.check_invariants()?;
+        let accounted =
+            self.kv.num_free_blocks() as usize + self.residency.resident_blocks();
+        if !self.has_work() && accounted != self.kv.num_total_blocks() as usize {
             return Err(format!(
-                "idle engine leaked blocks: {} free of {}",
+                "idle engine leaked blocks: {} free + {} adapter-resident of {}",
                 self.kv.num_free_blocks(),
+                self.residency.resident_blocks(),
                 self.kv.num_total_blocks()
             ));
         }
@@ -575,6 +635,97 @@ mod tests {
             .unwrap();
         let out = e.run_to_completion(lora);
         assert_eq!(out.num_cached_tokens, 0, "LoRA must re-prefill");
+    }
+
+    #[test]
+    fn adapter_paging_lifecycle_and_submit_guard() {
+        let mut cfg = presets::tiny();
+        cfg.cache.adapter_paging = true;
+        cfg.cache.max_kv_tokens = 256; // 16-block device budget
+        let reg = AdapterRegistry::tiny_default(3, 512, 4);
+        let mut e = Engine::with_registry(cfg, reg, FixedExecutor);
+        // tiny aLoRA (rank 32) weights = 8 blocks. A small request loads
+        // them, runs, and leaves the adapter warm-but-idle at finish.
+        let id = e
+            .submit(
+                ModelTarget::Adapter(crate::adapter::AdapterId(0)),
+                (0..32).collect(),
+                SamplingParams { max_new_tokens: 4, ..Default::default() },
+            )
+            .unwrap();
+        e.run_to_completion(id);
+        let rs = e.residency().stats();
+        assert_eq!(rs.loads, 1);
+        assert_eq!(rs.adapter_admissions, 1);
+        assert_eq!(rs.adapter_admission_hits, 0, "cold first admission");
+        assert_eq!(e.residency().resident_ids(), vec![0]);
+        assert_eq!(e.memory_budget().adapter_blocks(), 8);
+        e.check_invariants().unwrap();
+        assert!(e
+            .metrics
+            .render_prometheus()
+            .contains("alora_serve_adapter_resident_blocks 8"));
+        // A second admission of the same adapter is a residency hit.
+        let id = e
+            .submit(
+                ModelTarget::Adapter(crate::adapter::AdapterId(0)),
+                (100..132).collect(),
+                SamplingParams { max_new_tokens: 4, ..Default::default() },
+            )
+            .unwrap();
+        e.run_to_completion(id);
+        let rs = e.residency().stats();
+        assert_eq!(rs.loads, 1, "no reload for a warm adapter");
+        assert_eq!(rs.adapter_admission_hits, 1);
+        // Submit guard: 150-token request = 10 KV blocks + 8 weight blocks
+        // > 16-block budget — rejected up front, not stalled forever.
+        let err = e.submit(
+            ModelTarget::Adapter(crate::adapter::AdapterId(1)),
+            (0..140).collect(),
+            SamplingParams { max_new_tokens: 10, ..Default::default() },
+        );
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("device budget"));
+    }
+
+    #[test]
+    fn rolled_back_admission_still_counts_as_cold_load() {
+        // 16-block budget. A base request pins 7 KV blocks; the adapter
+        // request's gate then loads its 8 weight pages (free: 9 → 1) but
+        // the 2-block KV capacity check fails → admission rolls back with
+        // the adapter left resident. The retry after the base drains must
+        // count a COLD admission (this request paid for the load), not a
+        // warm hit from re-observing its own adapter.
+        let mut cfg = presets::tiny();
+        cfg.cache.adapter_paging = true;
+        cfg.cache.max_kv_tokens = 256;
+        let reg = AdapterRegistry::tiny_default(3, 512, 4);
+        let mut e = Engine::with_registry(cfg, reg, FixedExecutor);
+        let base = e
+            .submit(
+                ModelTarget::Base,
+                (0..110).collect(),
+                SamplingParams { max_new_tokens: 2, ..Default::default() },
+            )
+            .unwrap();
+        assert!(e.step(), "base admitted and prefilled");
+        let al = e
+            .submit(
+                ModelTarget::Adapter(crate::adapter::AdapterId(0)),
+                (0..32).collect(),
+                SamplingParams { max_new_tokens: 4, ..Default::default() },
+            )
+            .unwrap();
+        assert!(e.step(), "base decodes; adapter admission rolls back");
+        let rs = e.residency().stats();
+        assert_eq!(rs.loads, 1, "gate loaded the weights");
+        assert_eq!(rs.adapter_admissions, 0, "admission rolled back");
+        e.run_to_completion(base);
+        e.run_to_completion(al);
+        let rs = e.residency().stats();
+        assert_eq!(rs.adapter_admissions, 1);
+        assert_eq!(rs.adapter_admission_hits, 0, "rollback retry is cold");
+        assert_eq!(rs.loads, 1, "no double load");
     }
 
     #[test]

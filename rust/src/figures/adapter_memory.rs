@@ -1,0 +1,192 @@
+//! Adapter-memory figure (ours, beyond the paper): what unified
+//! KV + adapter-weight accounting costs and buys.
+//!
+//! Sweeps adapter count × device-memory budget on the same multi-adapter
+//! Poisson workload, in two modes per point:
+//!
+//! - **paged** — the tentpole: adapter weights page against the KV block
+//!   budget (S-LoRA-style), loads evict idle adapters / cold cache, and
+//!   admission gates on residency.
+//! - **resident** — the pre-refactor baseline: weights are free and every
+//!   adapter is permanently resident (`adapter_paging = false`), i.e. the
+//!   engine pretends the GPU has unbounded room for weights.
+//!
+//! The headline shape: with a budget that holds every adapter, paged mode
+//! is behaviorally identical to the baseline (the acceptance test pins
+//! this bit-exactly); as the budget shrinks below `adapters × weight`,
+//! residency hit-rate falls and reload churn + admission stalls surface as
+//! TTFT — the real cost the always-resident model was hiding.
+
+use crate::adapter::AdapterId;
+use crate::config::{presets, EngineConfig};
+use crate::engine::Engine;
+use crate::pipeline::{self, workload, PipelineKind, PipelineSpec};
+use crate::simulator::SimExecutor;
+
+use super::Table;
+
+/// One (adapters, budget, mode) measurement.
+#[derive(Debug, Clone)]
+pub struct PointResult {
+    pub makespan: f64,
+    pub ttft_mean: f64,
+    pub e2e_mean: f64,
+    pub prefix_hit_rate: f64,
+    /// Residency hit-rate over adapter admissions (0 in resident mode:
+    /// the always-resident baseline doesn't count, it never loads).
+    pub adapter_hit_rate: f64,
+    pub loads: u64,
+    pub evictions: u64,
+    pub stall_steps: u64,
+    /// Per-request behavioral fingerprint (id, cached tokens, finish time)
+    /// — what "bit-identical to always-resident" is asserted over.
+    pub output_fingerprint: Vec<(u64, usize, f64)>,
+}
+
+/// Engine config for one point: granite-8b cost model, shrunk to a
+/// `budget_blocks`-page device so adapter weights (32 pages per rank-32
+/// aLoRA) genuinely compete with KV.
+pub fn cfg_for(budget_blocks: u64, paged: bool) -> EngineConfig {
+    let mut cfg = presets::granite_8b();
+    cfg.scheduler.max_seq_len = 2048;
+    cfg.scheduler.max_batch_tokens = 2048;
+    cfg.scheduler.max_num_seqs = 32;
+    cfg.cache.max_kv_tokens = budget_blocks * cfg.cache.block_size as u64;
+    cfg.cache.adapter_paging = paged;
+    cfg
+}
+
+fn spec(n_adapters: u32) -> PipelineSpec {
+    // One conversation = base draft → one eval per adapter → consolidated
+    // base call: every conversation touches EVERY adapter, the worst case
+    // for residency churn.
+    PipelineSpec {
+        kind: PipelineKind::MultiAdapter,
+        prompt_len: 256,
+        base_gen: 32,
+        eval_gen: 8,
+        adapters: (0..n_adapters).map(AdapterId).collect(),
+        base2_gen: 16,
+        priority_continuations: false,
+    }
+}
+
+pub fn run_point(n_adapters: u32, budget_blocks: u64, paged: bool, n_conv: usize) -> PointResult {
+    let cfg = cfg_for(budget_blocks, paged);
+    let reg = workload::build_registry(n_adapters, cfg.model.vocab_size, true);
+    let exec = SimExecutor::new(&cfg);
+    let mut e = Engine::with_registry(cfg, reg, exec);
+    let r = pipeline::run_poisson(&mut e, &spec(n_adapters), n_conv, 2.0, 42);
+    let rs = e.residency().stats();
+    PointResult {
+        makespan: r.makespan,
+        ttft_mean: e.metrics.all.mean("ttft"),
+        e2e_mean: e.metrics.all.mean("e2e"),
+        prefix_hit_rate: e.metrics.cache_hit_rate(),
+        adapter_hit_rate: rs.hit_rate(),
+        loads: rs.loads,
+        evictions: rs.evictions,
+        stall_steps: rs.load_stall_steps,
+        output_fingerprint: r
+            .outputs
+            .iter()
+            .map(|(_, o)| (o.id.0, o.num_cached_tokens, o.timeline.finished))
+            .collect(),
+    }
+}
+
+fn grid(quick: bool) -> (Vec<u32>, Vec<u64>, usize) {
+    if quick {
+        (vec![4, 8], vec![256, 512], 8)
+    } else {
+        (vec![4, 8, 16], vec![256, 512, 1024], 24)
+    }
+}
+
+pub fn run(quick: bool) -> Table {
+    let (adapter_counts, budgets, n_conv) = grid(quick);
+    let mut t = Table::new(
+        "adapter_memory",
+        &format!(
+            "unified adapter+KV memory budget: residency hit-rate and TTFT \
+             vs always-resident baseline ({n_conv} conversations @ 2/s, \
+             32 weight blocks per adapter)"
+        ),
+        &[
+            "adapters",
+            "budget_blocks",
+            "mode",
+            "adapter_hit_rate",
+            "loads",
+            "evictions",
+            "stall_steps",
+            "prefix_hit_rate",
+            "ttft_mean_s",
+            "e2e_mean_s",
+            "makespan_s",
+        ],
+    );
+    for &n in &adapter_counts {
+        for &b in &budgets {
+            for paged in [true, false] {
+                let p = run_point(n, b, paged, n_conv);
+                t.push(
+                    &[
+                        n.to_string(),
+                        b.to_string(),
+                        if paged { "paged" } else { "resident" }.to_string(),
+                    ],
+                    &[
+                        p.adapter_hit_rate,
+                        p.loads as f64,
+                        p.evictions as f64,
+                        p.stall_steps as f64,
+                        p.prefix_hit_rate,
+                        p.ttft_mean,
+                        p.e2e_mean,
+                        p.makespan,
+                    ],
+                );
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_shape_and_paging_pressure_direction() {
+        let t = run(true);
+        assert_eq!(t.rows.len(), 8); // 2 adapter counts × 2 budgets × 2 modes
+        for v in t.col("makespan_s") {
+            assert!(v > 0.0);
+        }
+        // Paged rows load at least once per adapter; resident rows never.
+        let loads = t.col("loads");
+        let evictions = t.col("evictions");
+        for (i, row) in t.rows.iter().enumerate() {
+            if row[2] == "paged" {
+                assert!(loads[i] > 0.0, "row {i} paged but never loaded");
+            } else {
+                assert_eq!(loads[i], 0.0, "resident baseline must not page");
+                assert_eq!(evictions[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn shrinking_budget_increases_churn() {
+        // 8 adapters × 32 = 256 weight blocks: a 256-block budget cannot
+        // hold them beside KV, a 1024-block budget holds them all.
+        let tight = run_point(8, 256, true, 6);
+        let roomy = run_point(8, 1024, true, 6);
+        assert!(tight.evictions > 0, "tight budget must evict: {tight:?}");
+        assert!(tight.loads > 8, "tight budget must reload: {tight:?}");
+        assert_eq!(roomy.loads, 8, "roomy budget loads each adapter once");
+        assert_eq!(roomy.evictions, 0);
+        assert!(roomy.adapter_hit_rate > tight.adapter_hit_rate);
+    }
+}

@@ -13,9 +13,12 @@
 //! gen-length + multi-adapter · F11 adapter-base · F12 TTFT/inference ·
 //! F13/14 async full-step breakdowns · F15 KV-filling batch sizes ·
 //! cluster_scaling (ours, beyond the paper): fleet-level hit-rate and
-//! throughput vs replica count under affinity vs round-robin routing.
+//! throughput vs replica count under affinity vs round-robin routing ·
+//! adapter_memory (ours): adapter-count × memory-budget sweep of the
+//! unified KV + adapter-weight budget vs the always-resident baseline.
 
 pub mod ablations;
+pub mod adapter_memory;
 pub mod cluster_scaling;
 pub mod fig10;
 pub mod fig11;
@@ -226,6 +229,7 @@ pub fn run_all(quick: bool) -> Vec<Table> {
     out.extend(fig13_14::run(quick));
     out.push(fig15::run(quick));
     out.push(cluster_scaling::run(quick));
+    out.push(adapter_memory::run(quick));
     out
 }
 
@@ -245,9 +249,11 @@ pub fn run_by_id(id: &str, quick: bool) -> Vec<Table> {
         "fig13_14" => fig13_14::run(quick),
         "fig15" => vec![fig15::run(quick)],
         "cluster" | "cluster_scaling" => vec![cluster_scaling::run(quick)],
+        "adapter_memory" => vec![adapter_memory::run(quick)],
         "ablations" => ablations::run_all(),
         other => panic!(
-            "unknown figure id `{other}` (try table1, fig6..fig15, cluster, ablations, all)"
+            "unknown figure id `{other}` (try table1, fig6..fig15, cluster, \
+             adapter_memory, ablations, all)"
         ),
     }
 }

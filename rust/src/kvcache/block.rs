@@ -6,6 +6,7 @@
 //! automatic prefix caching, paper §3). Eviction happens lazily when a
 //! fresh allocation pops the LRU end.
 
+use crate::memory::MemoryBudget;
 use crate::util::fxmap::FxHashMap;
 
 use super::summary::HashSummary;
@@ -55,6 +56,9 @@ pub struct BlockPool {
     /// commit/evict events that update `by_hash` (cluster routing reads it
     /// through `KvCacheManager::routing_summary`).
     summary: HashSummary,
+    /// Unified device-memory ledger: KV pages and resident adapter weights
+    /// draw from the same free list; the budget records the adapter share.
+    budget: MemoryBudget,
 }
 
 const NONE: usize = usize::MAX;
@@ -78,6 +82,7 @@ impl BlockPool {
             free_count: 0,
             stats: PoolStats::default(),
             summary: HashSummary::new(),
+            budget: MemoryBudget::new(num_blocks as usize),
         };
         // All blocks start free (and hashless).
         for i in 0..num_blocks {
@@ -109,6 +114,11 @@ impl BlockPool {
     /// The routable committed-hash summary (see [`HashSummary`]).
     pub fn routing_summary(&self) -> &HashSummary {
         &self.summary
+    }
+
+    /// The unified memory ledger (KV vs adapter-weight split).
+    pub fn budget(&self) -> &MemoryBudget {
+        &self.budget
     }
 
     // -- free-list plumbing --------------------------------------------------
@@ -197,6 +207,50 @@ impl BlockPool {
         Some(b)
     }
 
+    /// Claim `n` pages for adapter weights from the SAME free list KV
+    /// allocations use (S-LoRA unified paging). Atomic: all `n` or none.
+    /// Cold cached contents at the LRU end are evicted to make room —
+    /// blocks referenced by running requests are never touched, because
+    /// only free-list blocks are claimable. Claimed pages carry no hash
+    /// (weights are not prefix-cacheable) and are charged to the budget's
+    /// adapter side rather than counted as KV allocations.
+    pub fn claim_blocks(&mut self, n: usize) -> Option<Vec<BlockId>> {
+        if self.free_count < n {
+            return None;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b = BlockId(self.free_head as u32);
+            self.unlink_free(b);
+            let i = b.0 as usize;
+            if let Some(h) = self.meta[i].hash.take() {
+                // Cached KV content overwritten by weights: a real
+                // eviction, counted as such.
+                self.by_hash.remove(&h);
+                self.summary.remove(h);
+                self.stats.evictions += 1;
+            }
+            self.meta[i].ref_count = 1;
+            out.push(b);
+        }
+        self.budget.charge_adapter(n);
+        Some(out)
+    }
+
+    /// Return adapter-weight pages claimed via [`BlockPool::claim_blocks`]
+    /// to the free list (an adapter eviction). The pages come back
+    /// hashless — plain free space for either side of the budget.
+    pub fn release_claimed(&mut self, blocks: &[BlockId]) {
+        for &b in blocks {
+            debug_assert!(
+                self.meta[b.0 as usize].hash.is_none(),
+                "claimed block {b:?} grew a hash"
+            );
+            self.free(b);
+        }
+        self.budget.release_adapter(blocks.len());
+    }
+
     /// Commit a full block's content hash, making it shareable. If another
     /// block already holds this hash, keeps the existing mapping (dedup:
     /// concurrent identical prefills converge on first-committed).
@@ -269,6 +323,17 @@ impl BlockPool {
                 "routing summary tracks {} committed blocks, pool holds {hashed}",
                 self.summary.committed_blocks()
             ));
+        }
+        // Unified-budget ledger: adapter pages + in-use KV + free == total.
+        let in_use = self.meta.len() - self.free_count;
+        if self.budget.adapter_blocks() > in_use {
+            return Err(format!(
+                "budget charges {} adapter blocks but only {in_use} blocks are in use",
+                self.budget.adapter_blocks()
+            ));
+        }
+        if self.budget.total_blocks() != self.meta.len() {
+            return Err("budget total drifted from pool size".into());
         }
         Ok(())
     }
@@ -386,6 +451,51 @@ mod tests {
         let _evictor = p.alloc().unwrap(); // evicts b0's hash
         assert!(!p.routing_summary().maybe_contains(BlockHash(11)));
         assert_eq!(p.routing_summary().committed_blocks(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn claims_draw_from_the_shared_budget() {
+        let mut p = BlockPool::new(4);
+        // Warm one cached block, free it (LRU end = oldest free).
+        let b = p.alloc().unwrap();
+        p.commit_hash(b, BlockHash(9));
+        p.free(b);
+        assert_eq!(p.budget().adapter_blocks(), 0);
+        // Claiming 4 pages must evict the cached content of the freed
+        // block (weights overwrite it) and charge the adapter side.
+        let claimed = p.claim_blocks(4).unwrap();
+        assert_eq!(claimed.len(), 4);
+        assert_eq!(p.num_free(), 0);
+        assert_eq!(p.budget().adapter_blocks(), 4);
+        assert_eq!(p.budget().kv_capacity_blocks(), 0);
+        assert!(!p.contains(BlockHash(9)), "weights evicted the cached block");
+        assert!(!p.routing_summary().maybe_contains(BlockHash(9)));
+        assert_eq!(p.stats().evictions, 1);
+        // Exhausted: neither KV nor another adapter can allocate.
+        assert!(p.alloc().is_none());
+        assert!(p.claim_blocks(1).is_none());
+        p.check_invariants().unwrap();
+        // Releasing the claim frees KV headroom again.
+        p.release_claimed(&claimed);
+        assert_eq!(p.num_free(), 4);
+        assert_eq!(p.budget().adapter_blocks(), 0);
+        assert!(p.alloc().is_some());
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn claims_are_atomic_and_never_touch_referenced_blocks() {
+        let mut p = BlockPool::new(4);
+        let held = p.alloc().unwrap(); // referenced by a "running request"
+        assert!(p.claim_blocks(4).is_none(), "claim must not steal held blocks");
+        assert_eq!(p.num_free(), 3, "failed claim leaves the pool untouched");
+        assert_eq!(p.budget().adapter_blocks(), 0);
+        let claimed = p.claim_blocks(3).unwrap();
+        assert!(!claimed.contains(&held));
+        assert_eq!(p.ref_count(held), 1);
+        p.release_claimed(&claimed);
+        p.free(held);
         p.check_invariants().unwrap();
     }
 

@@ -98,6 +98,23 @@ impl KvCacheManager {
         self.pool.routing_summary()
     }
 
+    /// The unified memory ledger (KV pages vs resident adapter weights).
+    pub fn budget(&self) -> &crate::memory::MemoryBudget {
+        self.pool.budget()
+    }
+
+    /// Claim `n` pages for adapter weights from the shared pool (see
+    /// [`BlockPool::claim_blocks`]). Atomic; None under pressure — the
+    /// residency manager then evicts idle adapters and retries.
+    pub fn claim_adapter_blocks(&mut self, n: usize) -> Option<Vec<BlockId>> {
+        self.pool.claim_blocks(n)
+    }
+
+    /// Return an evicted adapter's weight pages to the shared pool.
+    pub fn release_adapter_blocks(&mut self, blocks: &[BlockId]) {
+        self.pool.release_claimed(blocks);
+    }
+
     /// Peek: how many leading blocks of this hash chain are cached right
     /// now? (No refcounts taken; the scheduler uses this to budget tokens.)
     pub fn peek_cached_prefix(&self, hashes: &[BlockHash]) -> CachedPrefix {

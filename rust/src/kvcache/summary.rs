@@ -143,6 +143,96 @@ mod tests {
     }
 
     #[test]
+    fn pool_commit_evict_symmetry_returns_to_zero() {
+        // Driven through the real BlockPool feed (+1 on commit, −1 on
+        // eviction): after every cached block is evicted, the summary is
+        // exactly empty again — counts AND the committed total.
+        use super::super::block::BlockPool;
+        let mut p = BlockPool::new(8);
+        let hashes: Vec<BlockHash> = (1..=8).map(h).collect();
+        let mut held = Vec::new();
+        for &hash in &hashes {
+            let b = p.alloc().unwrap();
+            p.commit_hash(b, hash);
+            held.push(b);
+        }
+        assert_eq!(p.routing_summary().committed_blocks(), 8);
+        for b in held {
+            p.free(b);
+        }
+        // Full eviction: 8 fresh allocations overwrite every cached block.
+        for _ in 0..8 {
+            p.alloc().unwrap();
+        }
+        assert_eq!(p.routing_summary().committed_blocks(), 0);
+        for &hash in &hashes {
+            assert!(!p.routing_summary().maybe_contains(hash), "{hash:?} lingers");
+        }
+        assert_eq!(p.routing_summary().matching_prefix(&hashes), 0);
+    }
+
+    #[test]
+    fn single_slot_saturation_counts_exactly() {
+        // Every hash lands in the one slot: the counter must track the
+        // multiset size exactly — present until the LAST remove, absent
+        // after — rather than flipping on the first.
+        let mut s = HashSummary::with_slots(1);
+        let k = 100;
+        for i in 0..k {
+            s.insert(h(i));
+        }
+        assert_eq!(s.committed_blocks(), k);
+        assert!(s.maybe_contains(h(7777)), "one slot: everything aliases");
+        for i in 0..k - 1 {
+            s.remove(h(i));
+            assert!(s.maybe_contains(h(k - 1)), "removed {i}, slot must survive");
+        }
+        s.remove(h(k - 1));
+        assert!(!s.maybe_contains(h(0)));
+        assert_eq!(s.committed_blocks(), 0);
+    }
+
+    #[test]
+    fn routing_scores_deterministic_across_replicas() {
+        // Two replicas fed the identical commit/evict sequence must score
+        // any probe chain identically — PrefixAffinity depends on it (a
+        // divergent sketch would route the same request differently on
+        // re-runs). Exercised through two independent pools.
+        use super::super::block::BlockPool;
+        let drive = || {
+            let mut p = BlockPool::new(16);
+            let mut held = Vec::new();
+            for x in 0..12u64 {
+                let b = p.alloc().unwrap();
+                p.commit_hash(b, h(x));
+                held.push(b);
+            }
+            for b in held.drain(..6) {
+                p.free(b);
+            }
+            // 8 fresh allocations: the 4 never-hashed spares first, then
+            // 4 of the 6 freed blocks — evicting h(0)..h(3).
+            for _ in 0..8 {
+                p.alloc().unwrap();
+            }
+            p
+        };
+        let (a, b) = (drive(), drive());
+        let chain: Vec<BlockHash> = (0..12).map(h).collect();
+        for len in 0..=chain.len() {
+            assert_eq!(
+                a.routing_summary().matching_prefix(&chain[..len]),
+                b.routing_summary().matching_prefix(&chain[..len]),
+                "replicas disagree at chain length {len}"
+            );
+        }
+        assert_eq!(
+            a.routing_summary().committed_blocks(),
+            b.routing_summary().committed_blocks()
+        );
+    }
+
+    #[test]
     fn no_false_negatives_under_churn() {
         use crate::util::prop;
         prop::check("summary-churn", 20, |rng, _| {

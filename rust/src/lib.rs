@@ -44,6 +44,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod figures;
 pub mod kvcache;
+pub mod memory;
 pub mod metrics;
 pub mod pipeline;
 pub mod request;

@@ -6,9 +6,12 @@
 //!            [--model granite-8b] [--prompt-len 1024] [--base-gen 256]
 //!            [--eval-gen 16] [--batch N] [--lora]           run one pipeline, print metrics
 //!   serve    [--preset granite-8b] [--addr 127.0.0.1:8471] [--real]
-//!            [--replicas N] [--route affinity|rr|least-loaded]
+//!            [--replicas N] [--route affinity|rr|least-loaded|adapter]
+//!            [--adapter-paging]
 //!            start the HTTP server (--real loads artifacts/ via PJRT;
-//!            --replicas > 1 serves a routed simulator cluster)
+//!            --replicas > 1 serves a routed simulator cluster;
+//!            --adapter-paging pages adapter weights against the KV
+//!            block budget, DESIGN.md §13)
 //!   info     print presets and build info
 //!
 //! (Arg parsing is hand-rolled — no clap in the offline build.)
@@ -164,8 +167,10 @@ fn main() -> anyhow::Result<()> {
                 // when fleet flags are given: the real runtime has no
                 // cluster mode yet (one PJRT artifact, one executor).
                 anyhow::ensure!(
-                    !flags.contains_key("replicas") && !flags.contains_key("route"),
-                    "--real serves a single engine; --replicas/--route apply to simulated serving only"
+                    !flags.contains_key("replicas")
+                        && !flags.contains_key("route")
+                        && !flags.contains_key("adapter-paging"),
+                    "--real serves a single always-resident engine; --replicas/--route/--adapter-paging apply to simulated serving only"
                 );
                 let dir = TinyModel::default_dir();
                 anyhow::ensure!(
@@ -194,9 +199,11 @@ fn main() -> anyhow::Result<()> {
                         .map_err(|_| anyhow::anyhow!("--replicas must be an integer, got `{v}`"))?,
                 };
                 anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
+                let adapter_paging = flags.contains_key("adapter-paging");
                 let mk_engine = || -> anyhow::Result<Engine<SimExecutor>> {
-                    let cfg = presets::by_name(preset)
+                    let mut cfg = presets::by_name(preset)
                         .ok_or_else(|| anyhow::anyhow!("unknown preset `{preset}`"))?;
+                    cfg.cache.adapter_paging = adapter_paging;
                     let reg = workload::build_registry(3, cfg.model.vocab_size, true);
                     let exec = SimExecutor::new(&cfg);
                     Ok(Engine::with_registry(cfg, reg, exec))
@@ -258,7 +265,7 @@ fn main() -> anyhow::Result<()> {
             println!("usage: alora-serve <figure|pipeline|serve|info> [flags]");
             println!("  figure   --id <table1|fig6|...|fig15|all> [--quick]");
             println!("  pipeline --kind <base-adapter|adapter-base|base-adapter-base|multi-adapter> [--model M] [--prompt-len N] [--lora]");
-            println!("  serve    [--preset granite-8b] [--addr host:port] [--real] [--replicas N] [--route affinity|rr|least-loaded]");
+            println!("  serve    [--preset granite-8b] [--addr host:port] [--real] [--replicas N] [--route affinity|rr|least-loaded|adapter] [--adapter-paging]");
             println!("  info");
         }
     }

@@ -1,0 +1,115 @@
+//! Unified GPU-memory accounting: one ledger for KV pages AND adapter
+//! weights.
+//!
+//! The paper's speedups come from never recomputing KV across adapter
+//! switches, but a multi-adapter server's device memory is not spent on KV
+//! alone: every resident adapter's LoRA weights live in the same HBM the
+//! block pool carves up. S-LoRA (arXiv 2311.03285) makes this explicit —
+//! adapter weights are paged in a *unified memory pool* alongside KV cache,
+//! which is what lets thousands of adapters share one GPU — and
+//! FASTLIBRA-style co-management (arXiv 2505.03756) shows the two must be
+//! evicted under one policy, not two independent ones.
+//!
+//! [`MemoryBudget`] is that single ledger, denominated in KV blocks (the
+//! pool's native page size). It is owned by [`crate::kvcache::BlockPool`]
+//! and split two ways:
+//!
+//! - **KV side**: implicit — pool blocks not claimed by adapters. The pool's
+//!   free list remains the one physical allocator; nothing is counted twice.
+//! - **Adapter side**: [`MemoryBudget::adapter_blocks`] pages claimed by
+//!   resident adapter weights via `BlockPool::claim_blocks` (which pulls
+//!   from the SAME LRU free list a KV allocation would, evicting cold
+//!   cached content but never a referenced block).
+//!
+//! Because both sides draw from one free list, the co-management property
+//! falls out structurally: evicting a cold adapter returns its pages to the
+//! free list and immediately raises KV headroom, and freeing KV raises the
+//! headroom an adapter load sees. Policy (which adapter to evict, when to
+//! stall admission) lives in [`crate::adapter::residency::AdapterResidency`]
+//! and the scheduler; this module is the accounting substrate.
+
+/// The device-memory ledger, denominated in KV-block-equivalents.
+///
+/// Invariant: `adapter_blocks <= total_blocks`, and physically the pool
+/// guarantees `adapter_blocks + kv_referenced + free == total_blocks`
+/// (checked by `BlockPool::check_invariants`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemoryBudget {
+    total_blocks: usize,
+    adapter_blocks: usize,
+}
+
+impl MemoryBudget {
+    pub fn new(total_blocks: usize) -> Self {
+        MemoryBudget { total_blocks, adapter_blocks: 0 }
+    }
+
+    /// Whole-device capacity in blocks (KV arena size at construction).
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    /// Blocks currently charged to resident adapter weights.
+    pub fn adapter_blocks(&self) -> usize {
+        self.adapter_blocks
+    }
+
+    /// Blocks the KV side may grow into once adapters are accounted —
+    /// the *capacity* split, not instantaneous free space (the pool's
+    /// free list reports that).
+    pub fn kv_capacity_blocks(&self) -> usize {
+        self.total_blocks - self.adapter_blocks
+    }
+
+    /// Charge `n` blocks to the adapter side (a weight load).
+    pub(crate) fn charge_adapter(&mut self, n: usize) {
+        assert!(
+            self.adapter_blocks + n <= self.total_blocks,
+            "adapter charge {n} over budget ({} of {} already charged)",
+            self.adapter_blocks,
+            self.total_blocks
+        );
+        self.adapter_blocks += n;
+    }
+
+    /// Return `n` blocks from the adapter side (a weight eviction).
+    pub(crate) fn release_adapter(&mut self, n: usize) {
+        assert!(n <= self.adapter_blocks, "adapter release {n} without charge");
+        self.adapter_blocks -= n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_release_roundtrip() {
+        let mut b = MemoryBudget::new(10);
+        assert_eq!(b.total_blocks(), 10);
+        assert_eq!(b.adapter_blocks(), 0);
+        assert_eq!(b.kv_capacity_blocks(), 10);
+        b.charge_adapter(3);
+        assert_eq!(b.adapter_blocks(), 3);
+        assert_eq!(b.kv_capacity_blocks(), 7);
+        b.charge_adapter(7);
+        assert_eq!(b.kv_capacity_blocks(), 0);
+        b.release_adapter(10);
+        assert_eq!(b.adapter_blocks(), 0);
+        assert_eq!(b.kv_capacity_blocks(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "over budget")]
+    fn overcharge_panics() {
+        let mut b = MemoryBudget::new(4);
+        b.charge_adapter(5);
+    }
+
+    #[test]
+    #[should_panic(expected = "without charge")]
+    fn release_without_charge_panics() {
+        let mut b = MemoryBudget::new(4);
+        b.release_adapter(1);
+    }
+}

@@ -78,8 +78,9 @@ pub struct RoutingMetrics {
     pub affinity_hits: u64,
     /// PrefixAffinity placements that fell back to least-loaded (cold).
     pub affinity_fallbacks: u64,
-    /// Cached blocks the chosen replicas held at placement time (an upper
-    /// bound on admission hits: eviction can still race the request).
+    /// Blocks of value (cached prefix + resident adapter weights) the
+    /// chosen replicas held at placement time (an upper bound on admission
+    /// hits: eviction can still race the request).
     pub affinity_blocks_matched: u64,
 }
 
@@ -154,11 +155,18 @@ pub struct Metrics {
     pub blocks_allocated: u64,
     pub cache_hit_blocks: u64,
     pub cache_evictions: u64,
+    /// Adapter-weight paging against the unified memory budget
+    /// (`alora_serve_adapter_*`; zero when adapter_paging is off).
+    pub adapter_loads: u64,
+    pub adapter_evictions: u64,
+    pub adapter_load_stall_steps: u64,
 
     // gauges (last observed)
     pub running_requests: u64,
     pub waiting_requests: u64,
     pub free_blocks: u64,
+    /// Blocks currently charged to resident adapter weights.
+    pub adapter_resident_blocks: u64,
     pub clock: f64,
 
     // latency series
@@ -263,9 +271,13 @@ impl Metrics {
         self.blocks_allocated += o.blocks_allocated;
         self.cache_hit_blocks += o.cache_hit_blocks;
         self.cache_evictions += o.cache_evictions;
+        self.adapter_loads += o.adapter_loads;
+        self.adapter_evictions += o.adapter_evictions;
+        self.adapter_load_stall_steps += o.adapter_load_stall_steps;
         self.running_requests += o.running_requests;
         self.waiting_requests += o.waiting_requests;
         self.free_blocks += o.free_blocks;
+        self.adapter_resident_blocks += o.adapter_resident_blocks;
         self.clock = self.clock.max(o.clock);
         self.e2e_hist.merge(&o.e2e_hist);
         self.ttft_hist.merge(&o.ttft_hist);
@@ -285,6 +297,8 @@ impl Metrics {
             ("num_requests_running", "gauge", "Running requests", |m| m.running_requests as f64),
             ("num_requests_waiting", "gauge", "Waiting requests", |m| m.waiting_requests as f64),
             ("kv_blocks_free", "gauge", "Free KV blocks", |m| m.free_blocks as f64),
+            ("adapter_resident_blocks", "gauge", "Resident adapter-weight blocks", |m| m.adapter_resident_blocks as f64),
+            ("adapter_loads_total", "counter", "Adapter weight loads", |m| m.adapter_loads as f64),
             ("prefix_cache_hit_rate", "gauge", "Token hit rate", |m| m.cache_hit_rate()),
             ("clock_seconds", "gauge", "Virtual clock", |m| m.clock),
         ];
@@ -329,6 +343,17 @@ impl Metrics {
         );
         counter("kv_blocks_allocated_total", "KV blocks allocated", self.blocks_allocated as f64);
         counter("kv_cache_evictions_total", "KV block evictions", self.cache_evictions as f64);
+        counter("adapter_loads_total", "Adapter weight loads", self.adapter_loads as f64);
+        counter(
+            "adapter_evictions_total",
+            "Idle adapters evicted from the unified memory budget",
+            self.adapter_evictions as f64,
+        );
+        counter(
+            "adapter_load_stall_steps_total",
+            "Scheduler steps where admission stalled on an adapter load",
+            self.adapter_load_stall_steps as f64,
+        );
 
         let mut gauge = |name: &str, help: &str, v: f64| {
             s.push_str(&format!(
@@ -338,6 +363,11 @@ impl Metrics {
         gauge("num_requests_running", "Running requests", self.running_requests as f64);
         gauge("num_requests_waiting", "Waiting requests", self.waiting_requests as f64);
         gauge("kv_blocks_free", "Free KV blocks", self.free_blocks as f64);
+        gauge(
+            "adapter_resident_blocks",
+            "Blocks charged to resident adapter weights",
+            self.adapter_resident_blocks as f64,
+        );
         gauge("prefix_cache_hit_rate", "Token hit rate", self.cache_hit_rate());
 
         s.push_str(&Self::render_stage_series(&self.stage));
@@ -476,9 +506,16 @@ mod tests {
     fn prometheus_exposition_wellformed() {
         let mut m = Metrics::new();
         m.requests_received = 3;
+        m.adapter_loads = 2;
+        m.adapter_evictions = 1;
+        m.adapter_resident_blocks = 64;
         m.observe_finished(&out(0.0, 0.1, 0.3, 0.9, 16));
         let text = m.render_prometheus();
         assert!(text.contains("alora_serve_requests_received_total 3"));
+        assert!(text.contains("alora_serve_adapter_loads_total 2"));
+        assert!(text.contains("alora_serve_adapter_evictions_total 1"));
+        assert!(text.contains("alora_serve_adapter_load_stall_steps_total 0"));
+        assert!(text.contains("alora_serve_adapter_resident_blocks 64"));
         assert!(text.contains("alora_serve_ttft_seconds_bucket{le=\"+Inf\"} 1"));
         assert!(text.contains("# TYPE alora_serve_e2e_latency_seconds histogram"));
         // every non-comment line is "name[{labels}] value"

@@ -136,6 +136,12 @@ pub struct Request {
     pub activation_start: usize,
     /// Number of preemptions suffered (re-prefills).
     pub preemptions: u32,
+    /// The admission gate cold-loaded this request's adapter weights (set
+    /// when the load happens, cleared once the admission lands). Keeps the
+    /// residency hit-rate honest across a same-step capacity rollback: the
+    /// retry must not count the adapter this request just paged in as
+    /// "already warm".
+    pub admission_cold_load: bool,
     /// Block-hash salting policy (set by the engine at submit time from
     /// the adapter registry + feature flag).
     pub hash_ctx: HashContext,
@@ -167,6 +173,7 @@ impl Request {
             num_cached_tokens: 0,
             activation_start: prompt_len,
             preemptions: 0,
+            admission_cold_load: false,
             hash_ctx: HashContext::base(),
             hash_chain: Vec::new(),
         }

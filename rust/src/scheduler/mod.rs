@@ -15,6 +15,7 @@ use std::collections::VecDeque;
 
 use crate::util::fxmap::FxHashMap;
 
+use crate::adapter::AdapterResidency;
 use crate::config::SchedulerConfig;
 use crate::kvcache::manager::KvCacheManager;
 use crate::kvcache::prefix::block_hashes;
@@ -102,16 +103,26 @@ impl Scheduler {
     }
 
     /// Pack one step. Mutates request progress fields (`num_computed_tokens`
-    /// is NOT advanced here — the engine advances it after execution) and
-    /// the KV manager's block tables.
+    /// is NOT advanced here — the engine advances it after execution), the
+    /// KV manager's block tables, and adapter residency (loads at
+    /// admission, ref releases on preemption).
     pub fn schedule(
         &mut self,
         reqs: &mut FxHashMap<RequestId, Request>,
         kv: &mut KvCacheManager,
+        residency: &mut AdapterResidency,
     ) -> ScheduledStep {
         let mut step = ScheduledStep::default();
         let mut budget = self.cfg.max_batch_tokens as usize;
         let free_before = kv.num_free_blocks();
+        let adapter_before = kv.budget().adapter_blocks();
+        // FCFS re-queue bookkeeping for same-step victims (see `preempt`):
+        // the running order as of the FIRST preemption (still the
+        // step-start order — only preemption removes entries) gives each
+        // victim a stable admission rank, immune to index shifts as the
+        // list shrinks; `victim_ranks` mirrors the waiting-queue front.
+        let mut start_order: Option<Vec<RequestId>> = None;
+        let mut victim_ranks: Vec<usize> = Vec::new();
 
         // ---- phase 1: running requests (decode priority = FCFS order) ----
         let mut idx = 0;
@@ -128,10 +139,22 @@ impl Scheduler {
             debug_assert!(want >= 1, "running request with nothing to compute");
             let chunk = want.min(budget);
 
-            // Grow the block table; preempt from the back on pressure.
+            // Grow the block table. Under pressure, reclaim from the
+            // unified budget cheapest-first: an idle adapter's weight
+            // pages cost nothing to drop (no recompute), so they go
+            // before any request is preempted from the back.
             while !kv.ensure_capacity(id.0, chunk_start + chunk) {
+                if residency.evict_one_idle(kv) {
+                    continue;
+                }
                 let victim = *self.running.last().expect("running nonempty");
-                self.preempt(victim, reqs, kv, &mut step);
+                let order =
+                    start_order.get_or_insert_with(|| self.running.clone());
+                let rank = order
+                    .iter()
+                    .position(|r| *r == victim)
+                    .expect("victim unknown at step start");
+                self.preempt(victim, rank, reqs, kv, residency, &mut step, &mut victim_ranks);
                 if victim == id {
                     // Preempted ourselves: nothing schedulable here.
                     continue 'running; // idx now points at next (list shrank)
@@ -156,13 +179,18 @@ impl Scheduler {
             && !self.waiting.is_empty()
         {
             let id = *self.waiting.front().unwrap();
+            let target = reqs[&id].target;
             // KV-pressure admission control (paper §4.3): defer admission if
             // this request's *final* length would push projected block usage
             // past the watermark — admitting it anyway would evict reusable
             // cache blocks and destroy the aLoRA speedup (Figure 9 droop).
+            // The projection runs on the UNIFIED budget: in-use blocks
+            // already include resident adapter weights, and the demand adds
+            // the candidate's pending weight-load cost on top of its KV.
             if self.cfg.admission_watermark < 1.0 {
                 let r = &reqs[&id];
-                let demand = r.final_len().div_ceil(kv.block_size());
+                let demand = r.final_len().div_ceil(kv.block_size())
+                    + residency.pending_load_blocks(target.adapter());
                 let in_use = (kv.num_total_blocks() - kv.num_free_blocks()) as usize;
                 let limit =
                     (self.cfg.admission_watermark * kv.num_total_blocks() as f64) as usize;
@@ -170,6 +198,29 @@ impl Scheduler {
                     break; // wait for running work to drain
                 }
             }
+            // Adapter-residency gate: admission needs the adapter's weights
+            // on-device. A load may evict idle adapters and cold cached
+            // blocks — never a running request's blocks. Failure = memory
+            // not reclaimable yet: stall admission (FCFS) until running
+            // work drains or a preemption drops the last ref somewhere.
+            let was_resident = match target.adapter() {
+                None => true,
+                Some(aid) => {
+                    if !residency.is_resident(aid) {
+                        if !residency.ensure_resident(aid, kv) {
+                            residency.note_stall();
+                            break;
+                        }
+                        // Remember the cold load on the request itself: if
+                        // the capacity check below rolls this admission
+                        // back, the retry next step finds the adapter
+                        // resident but must still count as a cold
+                        // admission — this request paid for the load.
+                        reqs.get_mut(&id).unwrap().admission_cold_load = true;
+                    }
+                    !reqs[&id].admission_cold_load
+                }
+            };
             let admitted_ok = {
                 let r = reqs.get_mut(&id).expect("unknown waiting request");
                 debug_assert!(matches!(r.state, State::Waiting | State::Preempted));
@@ -192,7 +243,18 @@ impl Scheduler {
                 r.num_computed_tokens = cached.tokens;
                 let want = r.total_len() - r.num_computed_tokens;
                 let chunk = want.min(budget);
-                if kv.ensure_capacity(id.0, r.num_computed_tokens + chunk) {
+                // Same unified-reclaim order as phase 1: idle adapter
+                // pages (excluding the one just loaded for this request)
+                // are dropped before giving up on the allocation.
+                let fits = loop {
+                    if kv.ensure_capacity(id.0, r.num_computed_tokens + chunk) {
+                        break true;
+                    }
+                    if !residency.evict_one_idle_except(kv, target.adapter()) {
+                        break false;
+                    }
+                };
+                if fits {
                     let seq = ScheduledSeq {
                         id,
                         chunk_start: r.num_computed_tokens,
@@ -217,21 +279,42 @@ impl Scheduler {
                 self.waiting.pop_front();
                 self.running.push(id);
                 step.admitted.push(id);
+                // The admission holds its adapter from now until finish or
+                // preemption; count the admission against the residency
+                // hit-rate (warm iff this request never triggered the
+                // load — a later re-admission after preemption may then
+                // legitimately find the weights warm).
+                if let Some(aid) = target.adapter() {
+                    residency.acquire(aid, was_resident);
+                    reqs.get_mut(&id).unwrap().admission_cold_load = false;
+                }
             } else {
                 break;
             }
         }
 
-        step.new_blocks = free_before.saturating_sub(kv.num_free_blocks()) as usize;
+        // KV blocks newly allocated this step — adapter weight pages
+        // claimed/released while packing are excluded: loads are modeled
+        // as instantaneous accounting (DESIGN.md §13.2), so they must not
+        // feed the simulator's per-block allocation cost.
+        let total = kv.num_total_blocks() as usize;
+        let kv_in_use_before =
+            total - free_before as usize - adapter_before;
+        let kv_in_use_after =
+            total - kv.num_free_blocks() as usize - kv.budget().adapter_blocks();
+        step.new_blocks = kv_in_use_after.saturating_sub(kv_in_use_before);
         step
     }
 
     fn preempt(
         &mut self,
         victim: RequestId,
+        admit_rank: usize,
         reqs: &mut FxHashMap<RequestId, Request>,
         kv: &mut KvCacheManager,
+        residency: &mut AdapterResidency,
         step: &mut ScheduledStep,
+        victim_ranks: &mut Vec<usize>,
     ) {
         let pos = self
             .running
@@ -246,8 +329,23 @@ impl Scheduler {
         }
         kv.preempt_request(victim.0);
         let r = reqs.get_mut(&victim).unwrap();
+        // Preempting the last request using an adapter drops its ref, so
+        // the adapter becomes LRU-evictable — reclaimable memory for
+        // whatever triggered the preemption.
+        if let crate::request::ModelTarget::Adapter(aid) = r.target {
+            residency.release(aid);
+        }
         r.reset_for_recompute();
-        self.waiting.push_front(victim);
+        // Re-queue the step's victims ahead of the pre-existing queue but
+        // in their original FCFS (admission) order, not preemption order:
+        // victims are picked newest-first, so a bare push_front happens to
+        // work today, but the ordering contract is FCFS, and keying on the
+        // step-start rank (not a shrinking-list index) makes it hold for
+        // any victim-selection policy. `victim_ranks` mirrors the queue
+        // front: same-step victims sorted ascending by admission rank.
+        let insert_at = victim_ranks.iter().filter(|&&p| p < admit_rank).count();
+        self.waiting.insert(insert_at, victim);
+        victim_ranks.insert(insert_at, admit_rank);
         step.preempted.push(victim);
     }
 }
@@ -282,6 +380,7 @@ mod tests {
         sched: Scheduler,
         reqs: FxHashMap<RequestId, Request>,
         kv: KvCacheManager,
+        residency: AdapterResidency,
     }
 
     fn fixture(budget: u32, max_seqs: u32, blocks: u32) -> Fixture {
@@ -289,6 +388,7 @@ mod tests {
             sched: Scheduler::new(cfg(budget, max_seqs)),
             reqs: FxHashMap::default(),
             kv: KvCacheManager::new(blocks, 16, true),
+            residency: AdapterResidency::disabled(),
         }
     }
 
@@ -300,7 +400,7 @@ mod tests {
         }
 
         fn step(&mut self) -> ScheduledStep {
-            self.sched.schedule(&mut self.reqs, &mut self.kv)
+            self.sched.schedule(&mut self.reqs, &mut self.kv, &mut self.residency)
         }
 
         /// Simulate the engine applying execution results: advance
@@ -582,6 +682,50 @@ mod tests {
                 || f.reqs[&RequestId(4)].is_finished(),
             "deferred request admitted after drain"
         );
+        f.kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn same_step_preempted_batch_requeues_fcfs() {
+        // Pool of 8 blocks. A and B (46-token prompts) each hold 3 blocks;
+        // C and D (8-token prompts) hold 1 each — 8/8 used, 0 free. At
+        // total 49 both A and B need their 4th block in the SAME step, so
+        // two victims fall in one step: A preempts D (the newest), then B
+        // preempts C. Preemption order is therefore [D, C] — reverse of
+        // admission — but the waiting queue must come out in original
+        // FCFS order [C, D], and later admission must follow it.
+        let mut f = fixture(1024, 8, 8);
+        f.submit(mk_req(1, 46, 4)); // A
+        f.submit(mk_req(2, 46, 4)); // B
+        f.submit(mk_req(3, 8, 40)); // C
+        f.submit(mk_req(4, 8, 40)); // D
+        let s = f.step();
+        assert_eq!(s.admitted.len(), 4);
+        f.apply(&s);
+        // Two quiet decode steps (totals 47, 48 stay within 3 blocks).
+        for _ in 0..2 {
+            let s = f.step();
+            assert!(s.preempted.is_empty());
+            f.apply(&s);
+        }
+        // The pressure step: both A and B grow a block.
+        let s = f.step();
+        assert_eq!(
+            s.preempted,
+            vec![RequestId(4), RequestId(3)],
+            "victims picked newest-first"
+        );
+        assert_eq!(
+            f.sched.waiting.iter().copied().collect::<Vec<_>>(),
+            vec![RequestId(3), RequestId(4)],
+            "same-step victims re-queued in original FCFS order"
+        );
+        f.apply(&s); // A and B produce token 4 and finish, freeing blocks
+        assert!(f.reqs[&RequestId(1)].is_finished());
+        assert!(f.reqs[&RequestId(2)].is_finished());
+        // Recovery admits the victims in FCFS order.
+        let s = f.step();
+        assert_eq!(s.admitted, vec![RequestId(3), RequestId(4)]);
         f.kv.check_invariants().unwrap();
     }
 

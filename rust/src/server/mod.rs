@@ -753,6 +753,15 @@ mod tests {
         let j = Json::parse(r.lines().last().unwrap()).unwrap();
         assert_eq!(j.get("policy").and_then(Json::as_str), Some("prefix-affinity"));
         assert_eq!(j.get("replicas").and_then(Json::as_arr).unwrap().len(), 2);
+        // Fleet dashboards get the per-replica config summary + adapter
+        // residency without out-of-band config.
+        let cfg = j.get("config").expect("config summary");
+        assert_eq!(cfg.get("model").and_then(Json::as_str), Some("granite-8b"));
+        assert!(cfg.get("total_blocks").and_then(Json::as_u64).unwrap() > 0);
+        assert_eq!(cfg.get("adapter_paging").and_then(Json::as_bool), Some(false));
+        let rep0 = &j.get("replicas").and_then(Json::as_arr).unwrap()[0];
+        assert!(rep0.get("resident_adapters").and_then(Json::as_arr).is_some());
+        assert!(rep0.get("adapter_loads").and_then(Json::as_u64).is_some());
         let m = http(srv.addr(), "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
         assert!(m.contains("alora_serve_router_requests_routed_total"), "{m}");
         assert!(m.contains("alora_serve_replica_clock_seconds{replica=\"1\"}"));
