@@ -3,7 +3,7 @@
 # `make fmt` / clippy pass lands — the repo was authored offline without
 # rustfmt/clippy (still true as of 2026-07-30, PR 3); see ROADMAP.md
 # "Lint debt".
-.PHONY: check build build-matrix test fmt fmt-check clippy bench bench-smoke artifacts
+.PHONY: check build build-matrix test fmt fmt-check clippy bench bench-smoke server-smoke artifacts
 
 check: build test
 	-cargo fmt --check
@@ -40,6 +40,13 @@ bench:
 bench-smoke:
 	cargo bench --bench bench_cluster -- --quick
 	cargo run --release -- figure --id adapter_memory --quick
+
+# HTTP surface smoke (mirrors the CI step): the HTTP integration suite
+# plus the v1 sessions suite, which includes the streaming smoke
+# (session create → 3 streaming delta turns → delete).
+server-smoke:
+	cargo test -q --test server_http
+	cargo test -q --test sessions_api
 
 # AOT-compile the tiny model + goldens for the real-runtime path
 # (requires JAX; see DESIGN.md §9).

@@ -33,7 +33,7 @@ use crate::engine::{Engine, EngineDriver, Executor};
 use crate::kvcache::block::BlockHash;
 use crate::kvcache::prefix::{block_hashes, HashContext};
 use crate::metrics::{Metrics, RoutingMetrics};
-use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams};
+use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams, TurnEvent};
 use crate::util::json::Json;
 
 pub struct Cluster<E: Executor> {
@@ -136,6 +136,7 @@ impl ClusterStats {
                     ),
                     ("affinity_hits", Json::num(self.routing.affinity_hits as f64)),
                     ("affinity_fallbacks", Json::num(self.routing.affinity_fallbacks as f64)),
+                    ("sticky_routed", Json::num(self.routing.sticky_routed as f64)),
                     ("imbalance", Json::num(self.routing.imbalance())),
                 ]),
             ),
@@ -301,39 +302,14 @@ impl<E: Executor> Cluster<E> {
     }
 
     pub fn stats(&self) -> ClusterStats {
-        let cfg = &self.replicas[0].cfg;
         ClusterStats {
             policy: self.router.policy().name(),
-            config: ReplicaConfigSummary {
-                model: cfg.model.name.clone(),
-                block_size: cfg.cache.block_size,
-                total_blocks: cfg.cache.num_blocks(),
-                max_batch_tokens: cfg.scheduler.max_batch_tokens,
-                max_num_seqs: cfg.scheduler.max_num_seqs,
-                admission_watermark: cfg.scheduler.admission_watermark,
-                base_aligned_hashing: cfg.cache.base_aligned_hashing,
-                adapter_paging: cfg.cache.adapter_paging,
-            },
+            config: config_summary(&self.replicas[0].cfg),
             replicas: self
                 .replicas
                 .iter()
                 .enumerate()
-                .map(|(i, r)| ReplicaStats {
-                    replica: i,
-                    clock: r.clock(),
-                    running: r.num_running(),
-                    waiting: r.num_waiting(),
-                    finished: r.metrics.requests_finished,
-                    free_blocks: r.num_free_blocks(),
-                    total_blocks: r.num_total_blocks(),
-                    committed_blocks: r.routing_summary().committed_blocks(),
-                    hit_rate: r.kv_stats().hit_rate(),
-                    routed: self.router.stats.routed[i],
-                    resident_adapters: r.residency().resident_ids(),
-                    adapter_resident_blocks: r.residency().resident_blocks(),
-                    adapter_loads: r.residency().stats().loads,
-                    adapter_evictions: r.residency().stats().evictions,
-                })
+                .map(|(i, r)| replica_stats(i, r, self.router.stats.routed[i]))
                 .collect(),
             routing: self.router.stats.clone(),
             aggregate_hit_rate: self.aggregate_hit_rate(),
@@ -405,6 +381,59 @@ impl<E: Executor> Cluster<E> {
     }
 }
 
+/// The shared per-replica config summary (replicas are identical by
+/// construction; a single engine is a fleet of one).
+fn config_summary(cfg: &EngineConfig) -> ReplicaConfigSummary {
+    ReplicaConfigSummary {
+        model: cfg.model.name.clone(),
+        block_size: cfg.cache.block_size,
+        total_blocks: cfg.cache.num_blocks(),
+        max_batch_tokens: cfg.scheduler.max_batch_tokens,
+        max_num_seqs: cfg.scheduler.max_num_seqs,
+        admission_watermark: cfg.scheduler.admission_watermark,
+        base_aligned_hashing: cfg.cache.base_aligned_hashing,
+        adapter_paging: cfg.cache.adapter_paging,
+    }
+}
+
+/// One engine's stats row, shared by the fleet snapshot and the
+/// single-engine `GET /cluster` document.
+fn replica_stats<E: Executor>(i: usize, r: &Engine<E>, routed: u64) -> ReplicaStats {
+    ReplicaStats {
+        replica: i,
+        clock: r.clock(),
+        running: r.num_running(),
+        waiting: r.num_waiting(),
+        finished: r.metrics.requests_finished,
+        free_blocks: r.num_free_blocks(),
+        total_blocks: r.num_total_blocks(),
+        committed_blocks: r.routing_summary().committed_blocks(),
+        hit_rate: r.kv_stats().hit_rate(),
+        routed,
+        resident_adapters: r.residency().resident_ids(),
+        adapter_resident_blocks: r.residency().resident_blocks(),
+        adapter_loads: r.residency().stats().loads,
+        adapter_evictions: r.residency().stats().evictions,
+    }
+}
+
+/// A one-replica `ClusterStats` for a single engine: `GET /cluster` on a
+/// single-engine server returns this instead of 404 (API consistency —
+/// dashboards built against the fleet shape work unchanged). Every
+/// submission trivially "routed" to replica 0; policy reports "single".
+pub fn single_engine_stats<E: Executor>(e: &Engine<E>) -> ClusterStats {
+    let mut routing = RoutingMetrics::new(1);
+    routing.routed[0] = e.metrics.requests_received;
+    ClusterStats {
+        policy: "single",
+        config: config_summary(&e.cfg),
+        replicas: vec![replica_stats(0, e, e.metrics.requests_received)],
+        routing,
+        aggregate_hit_rate: e.kv_stats().hit_rate(),
+        aggregate_adapter_hit_rate: e.residency().stats().hit_rate(),
+    }
+}
+
 impl<E: Executor> EngineDriver for Cluster<E> {
     fn submit_salted(
         &mut self,
@@ -434,6 +463,83 @@ impl<E: Executor> EngineDriver for Cluster<E> {
         // skew the routing stats.
         self.router.record(placement);
         Ok(id)
+    }
+
+    /// Session stickiness: a conversation turn lands on the replica that
+    /// ran its previous turn — `peer`'s replica is a construction-time
+    /// fact (ids are partitioned `replica = id % n`), so no summary
+    /// scoring is needed and the warm prefix is guaranteed co-located.
+    /// First turns (no peer) fall through to the routing policy.
+    fn submit_sticky(
+        &mut self,
+        target: ModelTarget,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        priority: bool,
+        cache_salt: u64,
+        peer: Option<RequestId>,
+    ) -> anyhow::Result<RequestId> {
+        let Some(peer) = peer else {
+            return self.submit_salted(target, prompt, params, priority, cache_salt);
+        };
+        let ri = (peer.0 % self.replicas.len() as u64) as usize;
+        let now = self.clock();
+        let r = &mut self.replicas[ri];
+        // Same idle-clock sync as routed submission: the turn arrives at
+        // fleet time even if its replica sat idle between turns.
+        if !r.has_work() && r.clock() < now {
+            r.advance_clock_to(now);
+        }
+        let id = r.submit_salted(target, prompt, params, priority, cache_salt)?;
+        self.router.record_sticky(ri);
+        Ok(id)
+    }
+
+    fn watch(&mut self, id: RequestId) {
+        let ri = (id.0 % self.replicas.len() as u64) as usize;
+        self.replicas[ri].watch(id);
+    }
+
+    fn unwatch(&mut self, id: RequestId) {
+        let ri = (id.0 % self.replicas.len() as u64) as usize;
+        self.replicas[ri].unwatch(id);
+    }
+
+    fn take_events(&mut self) -> Vec<TurnEvent> {
+        let mut out = Vec::new();
+        for r in &mut self.replicas {
+            out.append(&mut r.take_events());
+        }
+        out
+    }
+
+    /// The lease lives where the blocks live: on `peer`'s replica (the
+    /// turn that just committed the chain there). Any stale copy of the
+    /// lease on other replicas — a conversation can in principle migrate
+    /// if its replica was reassigned — is released first, so exactly one
+    /// replica ever pins a session's chain. No peer = no turn has run =
+    /// nothing to pin.
+    fn acquire_lease(
+        &mut self,
+        lease: u64,
+        tokens: &[u32],
+        cache_salt: u64,
+        peer: Option<RequestId>,
+    ) -> usize {
+        let Some(peer) = peer else { return 0 };
+        let ri = (peer.0 % self.replicas.len() as u64) as usize;
+        for (i, r) in self.replicas.iter_mut().enumerate() {
+            if i != ri {
+                r.release_prefix_lease(lease);
+            }
+        }
+        self.replicas[ri].lease_prefix(lease, tokens, cache_salt)
+    }
+
+    fn release_lease(&mut self, lease: u64) {
+        for r in &mut self.replicas {
+            r.release_prefix_lease(lease);
+        }
     }
 
     /// One fleet step: every replica with work advances by one batch (they
@@ -524,8 +630,12 @@ impl<E: Executor> EngineDriver for Cluster<E> {
             agg.absorb_scalars(&r.metrics);
         }
         let mut s = agg.render_prometheus();
-        // The coordinator records stage series through metrics_mut(), i.e.
-        // on the fleet registry — replicas never carry any.
+        // The coordinator's stage series and the session layer's per-turn
+        // series are recorded through metrics_mut(), i.e. on the fleet
+        // registry — replicas never carry any (and the aggregated scalars
+        // above rendered an empty turn series, so each family appears
+        // exactly once).
+        s.push_str(&Metrics::render_turn_series(&self.metrics.turn));
         s.push_str(&Metrics::render_stage_series(&self.metrics.stage));
         s.push_str(&self.router.stats.render_prometheus());
         let per: Vec<&Metrics> = self.replicas.iter().map(|r| &r.metrics).collect();
@@ -731,6 +841,50 @@ mod tests {
         assert_eq!(c.router().stats.affinity_hits, 6);
         let j = st.to_json().to_string();
         assert!(j.contains("\"aggregate_adapter_hit_rate\""), "{j}");
+    }
+
+    #[test]
+    fn session_turns_stick_to_their_replica_and_stream_events() {
+        let mut c = cluster(2, RoutePolicy::PrefixAffinity);
+        let mut mgr = crate::session::SessionManager::new();
+        let sid = mgr.create(0);
+        let t1 = mgr
+            .run_turn(&mut c, sid, ModelTarget::Base, (0..256).collect(), 16, true)
+            .unwrap();
+        assert_eq!(t1.cached_tokens, 0, "cold first turn");
+        assert_eq!(c.router().stats.affinity_fallbacks, 1);
+        // Follow-up turn: pinned to the conversation's replica without
+        // scoring, and warm by construction. Watched: events flow back
+        // through the fleet-uniform surface.
+        let (_tid, rid) = mgr
+            .begin_turn(&mut c, sid, ModelTarget::Base, (900..964).collect(), 16, true)
+            .unwrap();
+        c.watch(rid);
+        let out = loop {
+            if let Some(o) = c.take_finished_where(|o| o.id == rid).pop() {
+                break o;
+            }
+            assert!(c.step(), "cluster stalled");
+        };
+        let evs = c.take_events();
+        assert!(evs.iter().all(|e| e.id() == rid));
+        assert!(matches!(
+            evs.last(),
+            Some(crate::request::TurnEvent::Finished { .. })
+        ));
+        let t2 = mgr.complete_turn(&mut c, sid, &out).unwrap();
+        assert_eq!(c.router().stats.sticky_routed, 1);
+        assert_eq!(c.router().stats.routed, vec![2, 0]);
+        assert!(t2.cached_tokens >= 256, "sticky turn warm: {}", t2.cached_tokens);
+        // The lease pins the chain on the conversation's replica only.
+        assert!(c.replica(0).leased_blocks() > 0);
+        assert_eq!(c.replica(1).leased_blocks(), 0);
+        let j = c.stats().to_json().to_string();
+        assert!(j.contains("\"sticky_routed\":1"), "{j}");
+        // Deleting the session releases the lease fleet-wide.
+        mgr.delete(&mut c, sid).unwrap();
+        assert_eq!(c.replica(0).leased_blocks(), 0);
+        c.replica(0).check_invariants().unwrap();
     }
 
     #[test]

@@ -208,6 +208,13 @@ impl Router {
             PlacementKind::Cold => self.stats.affinity_fallbacks += 1,
         }
     }
+
+    /// Count a sticky (session-pinned) placement: the policy was bypassed
+    /// because the conversation's replica is a construction-time fact.
+    pub fn record_sticky(&mut self, replica: usize) {
+        self.stats.routed[replica] += 1;
+        self.stats.sticky_routed += 1;
+    }
 }
 
 #[cfg(test)]

@@ -453,6 +453,13 @@ impl Coordinator {
         &self.finished
     }
 
+    /// Stages retired since a cursor (completion-ordered) — the streaming
+    /// server's per-stage emission intake: it remembers how many stages
+    /// it has emitted and drains only the new ones each wake-up.
+    pub fn finished_since(&self, cursor: usize) -> &[StageOutput] {
+        &self.finished[cursor.min(self.finished.len())..]
+    }
+
     pub fn is_done(&self) -> bool {
         self.remaining_total == 0
     }

@@ -20,7 +20,7 @@ use crate::adapter::AdapterRegistry;
 use crate::config::EngineConfig;
 use crate::engine::{Engine, Executor};
 use crate::metrics::Metrics;
-use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams};
+use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams, TurnEvent};
 
 pub trait EngineDriver {
     /// Submit with queue priority and a multi-tenant cache salt — the one
@@ -33,6 +33,64 @@ pub trait EngineDriver {
         priority: bool,
         cache_salt: u64,
     ) -> anyhow::Result<RequestId>;
+
+    /// Submit a conversation follow-up that should land wherever `peer`
+    /// (the conversation's previous request) ran — session stickiness. A
+    /// single engine has nowhere else to go, so the default ignores the
+    /// peer; a cluster overrides to pin the turn to the replica holding
+    /// the session's prefix (falling back to its routing policy when
+    /// `peer` is None, i.e. a first turn).
+    fn submit_sticky(
+        &mut self,
+        target: ModelTarget,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        priority: bool,
+        cache_salt: u64,
+        peer: Option<RequestId>,
+    ) -> anyhow::Result<RequestId> {
+        let _ = peer;
+        self.submit_salted(target, prompt, params, priority, cache_salt)
+    }
+
+    /// Subscribe to per-request [`TurnEvent`]s (streaming turns). The
+    /// default is a no-op: drivers without an event surface simply never
+    /// deliver events (and [`EngineDriver::take_events`] stays empty).
+    fn watch(&mut self, id: RequestId) {
+        let _ = id;
+    }
+
+    /// Cancel a subscription (streaming client went away).
+    fn unwatch(&mut self, id: RequestId) {
+        let _ = id;
+    }
+
+    /// Drain events emitted for watched requests since the last drain —
+    /// the incremental per-step intake a streaming server consumes.
+    fn take_events(&mut self) -> Vec<TurnEvent> {
+        Vec::new()
+    }
+
+    /// Pin the cached prefix of a conversation's token stream under
+    /// `lease` so it survives between turns. `peer` names the replica
+    /// that holds the blocks (the turn that just ran there); clusters
+    /// route on it, single engines ignore it. Returns blocks pinned
+    /// (default: 0 — no retention surface).
+    fn acquire_lease(
+        &mut self,
+        lease: u64,
+        tokens: &[u32],
+        cache_salt: u64,
+        peer: Option<RequestId>,
+    ) -> usize {
+        let _ = (lease, tokens, cache_salt, peer);
+        0
+    }
+
+    /// Release a prefix lease everywhere it might live (session deleted).
+    fn release_lease(&mut self, lease: u64) {
+        let _ = lease;
+    }
 
     fn submit_with_priority(
         &mut self,
@@ -99,7 +157,10 @@ pub trait EngineDriver {
         self.metrics().render_prometheus()
     }
 
-    /// Fleet stats for `GET /cluster`; None for a single engine.
+    /// Fleet stats for `GET /cluster`. The default is None; `Engine`
+    /// overrides with a one-replica document (API consistency: a
+    /// single-engine server reports a fleet of one instead of 404) and
+    /// `Cluster` with the real fleet snapshot.
     fn cluster_stats(&self) -> Option<crate::cluster::ClusterStats> {
         None
     }
@@ -170,6 +231,36 @@ impl<E: Executor> EngineDriver for Engine<E> {
         Engine::take_finished_where(self, pred)
     }
 
+    fn watch(&mut self, id: RequestId) {
+        Engine::watch(self, id)
+    }
+
+    fn unwatch(&mut self, id: RequestId) {
+        Engine::unwatch(self, id)
+    }
+
+    fn take_events(&mut self) -> Vec<TurnEvent> {
+        Engine::take_events(self)
+    }
+
+    fn acquire_lease(
+        &mut self,
+        lease: u64,
+        tokens: &[u32],
+        cache_salt: u64,
+        _peer: Option<RequestId>,
+    ) -> usize {
+        Engine::lease_prefix(self, lease, tokens, cache_salt)
+    }
+
+    fn release_lease(&mut self, lease: u64) {
+        Engine::release_prefix_lease(self, lease)
+    }
+
+    fn cluster_stats(&self) -> Option<crate::cluster::ClusterStats> {
+        Some(crate::cluster::single_engine_stats(self))
+    }
+
     fn metrics(&self) -> &Metrics {
         &self.metrics
     }
@@ -220,7 +311,13 @@ mod tests {
         assert_eq!(EngineDriver::metrics(&e).requests_finished, 1);
         assert_eq!(e.config().model.name, "tiny");
         assert_eq!(EngineDriver::registry(&e).len(), 3);
-        assert!(e.cluster_stats().is_none());
+        // A single engine reports a one-replica fleet document (the
+        // `GET /cluster` consistency satellite), not None.
+        let cs = e.cluster_stats().expect("single-engine stats");
+        assert_eq!(cs.policy, "single");
+        assert_eq!(cs.replicas.len(), 1);
+        assert_eq!(cs.replicas[0].finished, 1);
+        assert_eq!(cs.routing.routed, vec![1]);
     }
 
     #[test]

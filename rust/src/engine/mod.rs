@@ -18,15 +18,17 @@
 pub mod driver;
 pub mod mask;
 
-use crate::util::fxmap::FxHashMap;
+use crate::util::fxmap::{FxHashMap, FxHashSet};
 
 use crate::adapter::{AdapterId, AdapterRegistry, AdapterResidency};
 use crate::config::EngineConfig;
 use crate::kvcache::block::BlockHash;
 use crate::kvcache::manager::KvCacheManager;
-use crate::kvcache::prefix::next_block_hash;
+use crate::kvcache::prefix::{block_hashes, next_block_hash};
 use crate::metrics::Metrics;
-use crate::request::{ModelTarget, Request, RequestId, RequestOutput, SamplingParams, State};
+use crate::request::{
+    ModelTarget, Request, RequestId, RequestOutput, SamplingParams, State, TurnEvent,
+};
 use crate::scheduler::{ScheduledStep, Scheduler};
 
 pub use driver::EngineDriver;
@@ -74,6 +76,13 @@ pub struct Engine<E: Executor> {
     /// outputs carry fleet-unique ids without translation.
     id_stride: u64,
     finished: Vec<RequestOutput>,
+    /// Requests subscribed to [`TurnEvent`] emission (streaming turns).
+    /// Unwatched requests pay nothing: no events are buffered for them.
+    watched: FxHashSet<RequestId>,
+    /// Events emitted since the last [`Engine::take_events`] drain. The
+    /// finish bookkeeping runs through [`Engine::emit_finish`], so the
+    /// `finished` ledger and the event stream are fed by one path.
+    events: Vec<TurnEvent>,
 }
 
 impl<E: Executor> Engine<E> {
@@ -107,6 +116,8 @@ impl<E: Executor> Engine<E> {
             id_stride: 1,
             metrics: Metrics::new(),
             finished: Vec::new(),
+            watched: FxHashSet::default(),
+            events: Vec::new(),
             cfg,
         }
     }
@@ -160,6 +171,16 @@ impl<E: Executor> Engine<E> {
     /// The unified memory ledger (KV pages vs resident adapter weights).
     pub fn memory_budget(&self) -> &crate::memory::MemoryBudget {
         self.kv.budget()
+    }
+
+    /// Blocks currently pinned by session prefix leases.
+    pub fn leased_blocks(&self) -> usize {
+        self.kv.leased_blocks()
+    }
+
+    /// Active session prefix leases.
+    pub fn num_leases(&self) -> usize {
+        self.kv.num_leases()
     }
 
     /// Weight pages of `aid` already resident here — the router's
@@ -337,6 +358,14 @@ impl<E: Executor> Engine<E> {
             let r = self.reqs.get_mut(id).unwrap();
             if r.timeline.first_scheduled.is_nan() {
                 r.timeline.first_scheduled = self.clock;
+                if self.watched.contains(id) {
+                    self.events.push(TurnEvent::Started {
+                        id: *id,
+                        clock: self.clock,
+                        arrival: r.timeline.arrival,
+                    });
+                    self.metrics.stream_events += 1;
+                }
             }
         }
         self.metrics.requests_preempted += step.preempted.len() as u64;
@@ -369,6 +398,16 @@ impl<E: Executor> Engine<E> {
                 if r.timeline.first_token.is_nan() {
                     r.timeline.first_token = self.clock;
                 }
+                if self.watched.contains(&s.id) {
+                    self.events.push(TurnEvent::Token {
+                        id: s.id,
+                        index: (r.output_tokens.len() - 1) as u32,
+                        token: tok,
+                        clock: self.clock,
+                    });
+                    self.metrics.stream_events += 1;
+                    self.metrics.stream_token_events += 1;
+                }
             }
 
             // Extend the hash chain over any newly completed blocks and
@@ -399,7 +438,7 @@ impl<E: Executor> Engine<E> {
                 let target = r.target;
                 let out = RequestOutput::from_request(r);
                 self.metrics.observe_finished(&out);
-                self.finished.push(out);
+                self.emit_finish(s.id, out);
                 self.sched.finish(s.id);
                 self.kv.free_request(s.id.0);
                 // The last finisher's ref-drop turns its adapter idle
@@ -429,6 +468,8 @@ impl<E: Executor> Engine<E> {
         self.metrics.adapter_evictions = rs.evictions;
         self.metrics.adapter_load_stall_steps = rs.load_stall_steps;
         self.metrics.adapter_resident_blocks = self.residency.resident_blocks() as u64;
+        self.metrics.leased_blocks = self.kv.leased_blocks() as u64;
+        self.metrics.lease_reclaims = ks.leases_reclaimed;
     }
 
     /// Run until every submitted request has finished.
@@ -444,6 +485,75 @@ impl<E: Executor> Engine<E> {
                 );
             }
         }
+    }
+
+    /// The single finish-emission path: every completed request flows
+    /// through here. Watched requests additionally get a
+    /// [`TurnEvent::Finished`] carrying a copy of the record (and their
+    /// subscription ends); the ledger behind `take_finished*` always
+    /// receives the canonical record, so the legacy drains are a view
+    /// over the same emission, not a second bookkeeping scheme.
+    fn emit_finish(&mut self, id: RequestId, out: RequestOutput) {
+        if self.watched.remove(&id) {
+            self.events.push(TurnEvent::Finished { id, output: out.clone() });
+            self.metrics.stream_events += 1;
+        }
+        self.finished.push(out);
+    }
+
+    /// Subscribe to [`TurnEvent`]s for `id` (streaming turns). Call
+    /// before the request is first scheduled to observe its whole
+    /// lifecycle; the subscription ends at `Finished`. Unwatched requests
+    /// buffer nothing.
+    pub fn watch(&mut self, id: RequestId) {
+        if self.watched.insert(id) {
+            self.metrics.stream_subscriptions += 1;
+        }
+    }
+
+    /// Cancel a subscription (streaming client went away mid-turn).
+    pub fn unwatch(&mut self, id: RequestId) {
+        self.watched.remove(&id);
+    }
+
+    /// Drain all events emitted for watched requests since the last
+    /// drain (ownership transferred — the incremental per-step intake of
+    /// a streaming server's driver loop).
+    pub fn take_events(&mut self) -> Vec<TurnEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Pin the cached prefix of a conversation's token stream under
+    /// `lease` (the session API's between-turn retention). The chain is
+    /// hashed under the base context + `cache_salt` — exactly the chain a
+    /// base follow-up turn presents, and (base-aligned hashing) the
+    /// pre-activation chain an aLoRA turn presents. Returns blocks
+    /// pinned. Best-effort: leases break oldest-first under allocation
+    /// pressure, so a parked session can never wedge running work.
+    pub fn lease_prefix(&mut self, lease: u64, tokens: &[u32], cache_salt: u64) -> usize {
+        let ctx = self
+            .registry
+            .request_hash_context(
+                None,
+                tokens,
+                self.cfg.cache.base_aligned_hashing,
+                cache_salt,
+            )
+            .map(|(_, ctx)| ctx)
+            .expect("base target always has a hash context");
+        let chain = block_hashes(tokens, self.cfg.cache.block_size as usize, &ctx);
+        let pinned = self.kv.acquire_lease(lease, &chain);
+        // Refresh the gauge here, not just per step: leases change while
+        // the engine is idle (between turns), and /metrics must not lag.
+        self.metrics.leased_blocks = self.kv.leased_blocks() as u64;
+        pinned
+    }
+
+    /// Release a prefix lease's pins (session deleted). Unknown keys are
+    /// a no-op.
+    pub fn release_prefix_lease(&mut self, lease: u64) {
+        self.kv.release_lease(lease);
+        self.metrics.leased_blocks = self.kv.leased_blocks() as u64;
     }
 
     /// Drain finished request records (ownership transferred).
@@ -479,18 +589,21 @@ impl<E: Executor> Engine<E> {
 
     /// Test hook: sweep KV-manager + residency invariants; when idle,
     /// additionally check that no blocks leaked — every non-free block of
-    /// an idle engine must be a resident adapter's weight page.
+    /// an idle engine must be a resident adapter's weight page or a
+    /// session-leased prefix block.
     #[doc(hidden)]
     pub fn check_invariants(&self) -> Result<(), String> {
         self.kv.check_invariants()?;
         self.residency.check_invariants()?;
-        let accounted =
-            self.kv.num_free_blocks() as usize + self.residency.resident_blocks();
+        let accounted = self.kv.num_free_blocks() as usize
+            + self.residency.resident_blocks()
+            + self.kv.leased_distinct_blocks();
         if !self.has_work() && accounted != self.kv.num_total_blocks() as usize {
             return Err(format!(
-                "idle engine leaked blocks: {} free + {} adapter-resident of {}",
+                "idle engine leaked blocks: {} free + {} adapter-resident + {} leased of {}",
                 self.kv.num_free_blocks(),
                 self.residency.resident_blocks(),
+                self.kv.leased_distinct_blocks(),
                 self.kv.num_total_blocks()
             ));
         }
@@ -827,6 +940,92 @@ mod tests {
         let mut e = tiny_engine();
         e.advance_clock_to(5.0);
         e.advance_clock_to(4.0);
+    }
+
+    #[test]
+    fn watched_request_emits_turn_events() {
+        let mut e = tiny_engine();
+        let p = SamplingParams { max_new_tokens: 4, ..Default::default() };
+        let id = e.submit(ModelTarget::Base, (0..40).collect(), p).unwrap();
+        e.watch(id);
+        // An unwatched request sharing the engine buffers nothing.
+        let other = e.submit(ModelTarget::Base, (100..140).collect(), p).unwrap();
+        e.run_until_idle();
+        let evs = e.take_events();
+        assert!(evs.iter().all(|ev| ev.id() == id), "{evs:?}");
+        assert!(matches!(evs.first(), Some(crate::request::TurnEvent::Started { .. })));
+        let streamed: Vec<u32> = evs
+            .iter()
+            .filter_map(|ev| match ev {
+                crate::request::TurnEvent::Token { token, .. } => Some(*token),
+                _ => None,
+            })
+            .collect();
+        let outs = e.take_finished();
+        assert_eq!(outs.len(), 2);
+        let ledger = outs.iter().find(|o| o.id == id).unwrap();
+        // The streamed token sequence is byte-identical to the ledger's.
+        assert_eq!(streamed, ledger.output_tokens);
+        match evs.last().unwrap() {
+            crate::request::TurnEvent::Finished { output, .. } => {
+                assert_eq!(output.output_tokens, ledger.output_tokens);
+                assert_eq!(output.timeline.finished, ledger.timeline.finished);
+            }
+            ev => panic!("last event must be Finished, got {ev:?}"),
+        }
+        // Started carries the TTFT clock inputs; Token clocks are
+        // monotone and the first one equals the recorded first_token.
+        match &evs[0] {
+            crate::request::TurnEvent::Started { clock, arrival, .. } => {
+                assert!(*clock >= *arrival);
+                assert_eq!(*clock, ledger.timeline.first_scheduled);
+            }
+            _ => unreachable!(),
+        }
+        let token_clocks: Vec<f64> = evs
+            .iter()
+            .filter_map(|ev| match ev {
+                crate::request::TurnEvent::Token { clock, .. } => Some(*clock),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(token_clocks[0], ledger.timeline.first_token);
+        assert!(token_clocks.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(e.metrics.stream_subscriptions, 1);
+        assert_eq!(e.metrics.stream_token_events, 4);
+        assert_eq!(e.metrics.stream_events, 6, "started + 4 tokens + finished");
+        assert!(e.take_events().is_empty(), "drain transfers ownership once");
+        let _ = other;
+    }
+
+    #[test]
+    fn prefix_lease_pins_and_releases_with_leak_accounting() {
+        let mut e = tiny_engine();
+        let id = e
+            .submit(
+                ModelTarget::Base,
+                (0..64).collect(),
+                SamplingParams { max_new_tokens: 8, ..Default::default() },
+            )
+            .unwrap();
+        let out = e.run_to_completion(id);
+        let mut history: Vec<u32> = (0..64).collect();
+        history.extend(&out.output_tokens);
+        // 72 tokens = 4 full blocks, all committed (71 computed).
+        assert_eq!(e.lease_prefix(1, &history, 0), 4);
+        assert_eq!(e.leased_blocks(), 4);
+        assert_eq!(e.num_leases(), 1);
+        e.check_invariants().unwrap();
+        // Gauges surface through Prometheus after the next step cycle.
+        e.advance_clock_to(e.clock());
+        let _ = e.step();
+        assert!(e
+            .metrics
+            .render_prometheus()
+            .contains("alora_serve_leased_blocks 4"));
+        e.release_prefix_lease(1);
+        assert_eq!(e.leased_blocks(), 0);
+        e.check_invariants().unwrap();
     }
 
     #[test]

@@ -187,6 +187,21 @@ impl BlockPool {
         self.by_hash.contains_key(&hash)
     }
 
+    /// Take a reference on the cached block holding `hash` without
+    /// counting a hit or miss — the session prefix-lease path. A lease is
+    /// *retention* between turns, not an admission, so it must not skew
+    /// the hit-rate counters the figures read. Resurrects free-list
+    /// blocks exactly like [`BlockPool::lookup`].
+    pub fn pin(&mut self, hash: BlockHash) -> Option<BlockId> {
+        let b = self.by_hash.get(&hash).copied()?;
+        let i = b.0 as usize;
+        if self.meta[i].in_free_list {
+            self.unlink_free(b);
+        }
+        self.meta[i].ref_count += 1;
+        Some(b)
+    }
+
     /// Allocate a fresh block: pops the LRU free block, evicting whatever
     /// hashed contents it still carried. Returns None when the pool is
     /// exhausted (all blocks referenced) — the scheduler then preempts.

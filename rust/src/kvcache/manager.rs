@@ -41,6 +41,13 @@ pub struct CacheStats {
     /// Tokens served from cache at admission.
     pub prefix_tokens_hit: u64,
     pub preemptions: u64,
+    /// Session prefix leases taken (each `acquire_lease` call).
+    pub leases_acquired: u64,
+    /// Blocks pinned across all lease acquisitions.
+    pub lease_blocks_pinned: u64,
+    /// Leases broken under memory pressure (running work always beats a
+    /// parked session's retention).
+    pub leases_reclaimed: u64,
 }
 
 impl CacheStats {
@@ -60,6 +67,12 @@ pub struct KvCacheManager {
     enable_prefix_caching: bool,
     tables: FxHashMap<ReqKey, RequestBlocks>,
     stats: CacheStats,
+    /// Session prefix leases: pinned blocks per lease key, so a parked
+    /// conversation's chain survives between turns (the v1 sessions API).
+    leases: FxHashMap<u64, Vec<BlockId>>,
+    /// Lease keys in acquisition order (front = oldest = first broken
+    /// under memory pressure).
+    lease_order: Vec<u64>,
 }
 
 impl KvCacheManager {
@@ -70,6 +83,8 @@ impl KvCacheManager {
             enable_prefix_caching,
             tables: FxHashMap::default(),
             stats: CacheStats::default(),
+            leases: FxHashMap::default(),
+            lease_order: Vec::new(),
         }
     }
 
@@ -105,9 +120,108 @@ impl KvCacheManager {
 
     /// Claim `n` pages for adapter weights from the shared pool (see
     /// [`BlockPool::claim_blocks`]). Atomic; None under pressure — the
-    /// residency manager then evicts idle adapters and retries.
+    /// residency manager then evicts idle adapters and retries. Session
+    /// leases are broken first: pinned-but-parked KV is cheaper to drop
+    /// than stalling a weight load (a broken lease costs a re-prefill
+    /// later; a stalled load costs admission now).
     pub fn claim_adapter_blocks(&mut self, n: usize) -> Option<Vec<BlockId>> {
+        if (self.pool.num_free() as usize) < n {
+            self.reclaim_leases(n);
+        }
         self.pool.claim_blocks(n)
+    }
+
+    // -- session prefix leases ---------------------------------------------
+
+    /// Pin the cached prefix of `chain` under `lease` so the blocks
+    /// survive between conversation turns (the v1 sessions API's
+    /// retention). Re-acquiring an existing lease replaces it (the chain
+    /// grew by one turn). Pinning stops at the first uncached hash —
+    /// leases retain what exists, they never allocate. Returns the number
+    /// of blocks pinned.
+    ///
+    /// Leases are best-effort: under allocation pressure they are broken
+    /// oldest-first (see [`KvCacheManager::ensure_capacity`]) so a parked
+    /// session can never wedge running work.
+    pub fn acquire_lease(&mut self, lease: u64, chain: &[BlockHash]) -> usize {
+        self.release_lease(lease);
+        if !self.enable_prefix_caching {
+            return 0;
+        }
+        let mut blocks = Vec::new();
+        for h in chain {
+            match self.pool.pin(*h) {
+                Some(b) => blocks.push(b),
+                None => break,
+            }
+        }
+        let n = blocks.len();
+        self.stats.leases_acquired += 1;
+        if n == 0 {
+            // Nothing pinned (chain evicted or sub-block): registering a
+            // phantom lease would let pressure reclaim "break" it — a
+            // counted reclaim that frees nothing.
+            return 0;
+        }
+        self.stats.lease_blocks_pinned += n as u64;
+        self.leases.insert(lease, blocks);
+        self.lease_order.push(lease);
+        n
+    }
+
+    /// Release a lease's pins (session deleted, or re-acquire). Unknown
+    /// lease keys are a no-op (a cluster broadcasts releases).
+    pub fn release_lease(&mut self, lease: u64) {
+        if let Some(blocks) = self.leases.remove(&lease) {
+            self.lease_order.retain(|l| *l != lease);
+            // Tail-first, matching free_request: deep suffix blocks become
+            // LRU-evictable before the shared prefix.
+            for b in blocks.into_iter().rev() {
+                self.pool.free(b);
+            }
+        }
+    }
+
+    /// Total blocks currently pinned by leases (shared pins counted per
+    /// lease — a gauge, not an ownership ledger).
+    pub fn leased_blocks(&self) -> usize {
+        self.leases.values().map(Vec::len).sum()
+    }
+
+    /// Blocks pinned by this one lease (0 for unknown keys).
+    pub fn lease_size(&self, lease: u64) -> usize {
+        self.leases.get(&lease).map(Vec::len).unwrap_or(0)
+    }
+
+    pub fn num_leases(&self) -> usize {
+        self.leases.len()
+    }
+
+    /// Distinct physical blocks held by leases (for idle-leak accounting:
+    /// two sessions sharing a tenant prefix pin the same block twice but
+    /// occupy it once).
+    pub fn leased_distinct_blocks(&self) -> usize {
+        let mut seen = crate::util::fxmap::FxHashSet::default();
+        for b in self.leases.values().flatten() {
+            seen.insert(*b);
+        }
+        seen.len()
+    }
+
+    /// Break leases oldest-first until `need_free` blocks are free or no
+    /// leases remain. Freeing a lease's pin only liberates blocks no
+    /// running request shares, so the loop keeps going until the target
+    /// is met or the lease table is empty.
+    fn reclaim_leases(&mut self, need_free: usize) {
+        while (self.pool.num_free() as usize) < need_free && !self.lease_order.is_empty() {
+            let l = self.lease_order.remove(0);
+            if let Some(blocks) = self.leases.remove(&l) {
+                for b in blocks.into_iter().rev() {
+                    self.pool.free(b);
+                }
+            }
+            self.stats.leases_reclaimed += 1;
+        }
     }
 
     /// Return an evicted adapter's weight pages to the shared pool.
@@ -183,8 +297,15 @@ impl KvCacheManager {
         }
         let missing = needed_blocks - table.blocks.len();
         if (self.pool.num_free() as usize) < missing {
-            return false;
+            // Running work beats parked sessions: break prefix leases
+            // (oldest first) before reporting pressure to the scheduler,
+            // whose next escalation (preemption) costs a full re-prefill.
+            self.reclaim_leases(missing);
+            if (self.pool.num_free() as usize) < missing {
+                return false;
+            }
         }
+        let table = self.tables.get_mut(&key).expect("unknown request");
         for _ in 0..missing {
             let b = self.pool.alloc().expect("free count said yes");
             table.blocks.push(b);
@@ -255,6 +376,23 @@ impl KvCacheManager {
             for b in &t.blocks {
                 if self.pool.ref_count(*b) == 0 {
                     return Err(format!("req {k}: table holds freed block {b:?}"));
+                }
+            }
+        }
+        if self.leases.len() != self.lease_order.len() {
+            return Err(format!(
+                "lease table holds {} leases but order tracks {}",
+                self.leases.len(),
+                self.lease_order.len()
+            ));
+        }
+        for (l, blocks) in &self.leases {
+            if !self.lease_order.contains(l) {
+                return Err(format!("lease {l} missing from reclaim order"));
+            }
+            for b in blocks {
+                if self.pool.ref_count(*b) == 0 {
+                    return Err(format!("lease {l} pins freed block {b:?}"));
                 }
             }
         }
@@ -456,6 +594,100 @@ mod tests {
         m.preempt_request(1);
         assert_eq!(m.stats().preemptions, 1);
         assert_eq!(m.num_free_blocks(), 4);
+    }
+
+    #[test]
+    fn lease_pins_prefix_across_eviction_pressure() {
+        // 8-block pool. A conversation's 4 committed blocks, freed, would
+        // normally be evicted by 4 blocks of fresh traffic + reuse demand;
+        // a lease pins them so an identical follow-up still hits.
+        let mut m = mgr(8);
+        let t = toks(64);
+        let hs = block_hashes(&t, 16, &HashContext::base());
+        m.start_request(1, &hs, 64);
+        assert!(m.ensure_capacity(1, 64));
+        m.commit_full_blocks(1, &hs);
+        m.free_request(1);
+        assert_eq!(m.acquire_lease(7, &hs), 4);
+        assert_eq!(m.leased_blocks(), 4);
+        assert_eq!(m.lease_size(7), 4);
+        // Fresh traffic churns the remaining 4 blocks twice over: every
+        // unpinned cached block is gone, the leased 4 survive.
+        for round in 0..2u32 {
+            let t2: Vec<u32> = (0..64).map(|i| 10_000 + round * 100 + i).collect();
+            let hs2 = block_hashes(&t2, 16, &HashContext::base());
+            m.start_request(100 + round as u64, &hs2, 64);
+            assert!(m.ensure_capacity(100 + round as u64, 64));
+            m.commit_full_blocks(100 + round as u64, &hs2);
+            m.free_request(100 + round as u64);
+        }
+        let c = m.start_request(2, &hs, 64);
+        assert_eq!(c.blocks, 4, "leased prefix survived the churn");
+        m.free_request(2);
+        m.release_lease(7);
+        assert_eq!(m.leased_blocks(), 0);
+        m.check_invariants().unwrap();
+        // Re-leasing after release and with the hashes evicted pins 0.
+        let t3: Vec<u32> = (0..128).map(|i| 90_000 + i).collect();
+        let hs3 = block_hashes(&t3, 16, &HashContext::base());
+        m.start_request(3, &hs3, 128);
+        assert!(m.ensure_capacity(3, 128));
+        m.commit_full_blocks(3, &hs3);
+        m.free_request(3);
+        assert_eq!(m.acquire_lease(7, &hs), 0, "chain evicted: nothing to pin");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn leases_break_oldest_first_under_allocation_pressure() {
+        // 4-block pool fully leased: an incoming request must reclaim the
+        // leases (oldest first) rather than fail — running work always
+        // beats parked sessions.
+        let mut m = mgr(4);
+        let a = toks(32);
+        let ha = block_hashes(&a, 16, &HashContext::base());
+        m.start_request(1, &ha, 32);
+        assert!(m.ensure_capacity(1, 32));
+        m.commit_full_blocks(1, &ha);
+        m.free_request(1);
+        let b: Vec<u32> = (0..32).map(|i| 5000 + i).collect();
+        let hb = block_hashes(&b, 16, &HashContext::base());
+        m.start_request(2, &hb, 32);
+        assert!(m.ensure_capacity(2, 32));
+        m.commit_full_blocks(2, &hb);
+        m.free_request(2);
+        assert_eq!(m.acquire_lease(1, &ha), 2); // older lease
+        assert_eq!(m.acquire_lease(2, &hb), 2); // newer lease
+        assert_eq!(m.num_free_blocks(), 0);
+        // A 3-block request: breaking lease 1 frees 2, still short, so
+        // lease 2 breaks too.
+        let c: Vec<u32> = (0..48).map(|i| 9000 + i).collect();
+        let hc = block_hashes(&c, 16, &HashContext::base());
+        m.start_request(3, &hc, 48);
+        assert!(m.ensure_capacity(3, 48), "leases reclaimed to make room");
+        assert_eq!(m.stats().leases_reclaimed, 2);
+        assert_eq!(m.num_leases(), 0);
+        m.free_request(3);
+        m.check_invariants().unwrap();
+        assert_eq!(m.num_free_blocks(), 4);
+    }
+
+    #[test]
+    fn shared_lease_pins_count_distinct_blocks_once() {
+        let mut m = mgr(8);
+        let t = toks(32);
+        let hs = block_hashes(&t, 16, &HashContext::base());
+        m.start_request(1, &hs, 32);
+        assert!(m.ensure_capacity(1, 32));
+        m.commit_full_blocks(1, &hs);
+        m.free_request(1);
+        assert_eq!(m.acquire_lease(10, &hs), 2);
+        assert_eq!(m.acquire_lease(11, &hs), 2);
+        assert_eq!(m.leased_blocks(), 4, "per-lease gauge double counts");
+        assert_eq!(m.leased_distinct_blocks(), 2, "physical occupancy doesn't");
+        m.release_lease(10);
+        m.release_lease(11);
+        m.check_invariants().unwrap();
     }
 
     #[test]

@@ -51,5 +51,6 @@ pub mod request;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;
+pub mod session;
 pub mod simulator;
 pub mod util;

@@ -11,7 +11,10 @@
 //!            start the HTTP server (--real loads artifacts/ via PJRT;
 //!            --replicas > 1 serves a routed simulator cluster;
 //!            --adapter-paging pages adapter weights against the KV
-//!            block budget, DESIGN.md §13)
+//!            block budget, DESIGN.md §13). Serves the conversation-first
+//!            v1 API (/v1/sessions, per-turn adapter activation,
+//!            streaming token events — see API.md) plus the legacy
+//!            /generate + /pipeline endpoints.
 //!   info     print presets and build info
 //!
 //! (Arg parsing is hand-rolled — no clap in the offline build.)
@@ -266,6 +269,7 @@ fn main() -> anyhow::Result<()> {
             println!("  figure   --id <table1|fig6|...|fig15|all> [--quick]");
             println!("  pipeline --kind <base-adapter|adapter-base|base-adapter-base|multi-adapter> [--model M] [--prompt-len N] [--lora]");
             println!("  serve    [--preset granite-8b] [--addr host:port] [--real] [--replicas N] [--route affinity|rr|least-loaded|adapter] [--adapter-paging]");
+            println!("           serves /v1/sessions (delta turns, per-turn adapter, SSE streaming; API.md) + legacy /generate, /pipeline");
             println!("  info");
         }
     }

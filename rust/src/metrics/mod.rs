@@ -82,6 +82,9 @@ pub struct RoutingMetrics {
     /// chosen replicas held at placement time (an upper bound on admission
     /// hits: eviction can still race the request).
     pub affinity_blocks_matched: u64,
+    /// Session turns pinned to their conversation's replica (sticky
+    /// placement bypassing the policy — the session API's routing).
+    pub sticky_routed: u64,
 }
 
 impl RoutingMetrics {
@@ -121,6 +124,7 @@ impl RoutingMetrics {
             ("affinity_hits_total", "Warm prefix placements", self.affinity_hits),
             ("affinity_fallbacks_total", "Cold-prefix least-loaded fallbacks", self.affinity_fallbacks),
             ("affinity_blocks_matched_total", "Cached blocks held by chosen replicas", self.affinity_blocks_matched),
+            ("sticky_routed_total", "Session turns pinned to their conversation's replica", self.sticky_routed),
         ] {
             s.push_str(&format!(
                 "# HELP alora_serve_router_{name} {help}\n# TYPE alora_serve_router_{name} counter\nalora_serve_router_{name} {v}\n"
@@ -160,6 +164,16 @@ pub struct Metrics {
     pub adapter_loads: u64,
     pub adapter_evictions: u64,
     pub adapter_load_stall_steps: u64,
+    /// Streaming-turn event surface (`alora_serve_stream_*`): watch
+    /// subscriptions taken, events emitted, of which token events.
+    pub stream_subscriptions: u64,
+    pub stream_events: u64,
+    pub stream_token_events: u64,
+    /// Session lifecycle (`POST /v1/sessions` / `DELETE`).
+    pub sessions_created: u64,
+    pub sessions_closed: u64,
+    /// Session prefix leases broken under memory pressure.
+    pub lease_reclaims: u64,
 
     // gauges (last observed)
     pub running_requests: u64,
@@ -167,6 +181,8 @@ pub struct Metrics {
     pub free_blocks: u64,
     /// Blocks currently charged to resident adapter weights.
     pub adapter_resident_blocks: u64,
+    /// Blocks currently pinned by session prefix leases.
+    pub leased_blocks: u64,
     pub clock: f64,
 
     // latency series
@@ -174,6 +190,10 @@ pub struct Metrics {
     /// Split by model target class for the paper's per-step analysis.
     pub base: StageLatencies,
     pub adapter: StageLatencies,
+    /// Per-turn series at the serving boundary: every completed session
+    /// turn observed here (TTFT / ITL per turn — the numbers the v1 API
+    /// makes visible). On a cluster this lives in the fleet registry.
+    pub turn: StageLatencies,
     /// Per-stage-name series, fed by the coordinator as pipeline stages
     /// retire — Table-2-style breakdowns fall out of any graph shape.
     pub stage: BTreeMap<String, StageLatencies>,
@@ -198,6 +218,13 @@ impl Metrics {
         }
         self.e2e_hist.observe(out.timeline.e2e());
         self.ttft_hist.observe(out.timeline.ttft());
+    }
+
+    /// Record one completed session turn (the v1 API's per-turn TTFT /
+    /// ITL series). Independent of `observe_finished`, which the engine
+    /// already applied when the underlying request retired.
+    pub fn observe_turn(&mut self, out: &RequestOutput) {
+        self.turn.observe(out);
     }
 
     /// Record a finished request under a pipeline stage name (coordinator
@@ -249,6 +276,7 @@ impl Metrics {
         self.all.merge(&o.all);
         self.base.merge(&o.base);
         self.adapter.merge(&o.adapter);
+        self.turn.merge(&o.turn);
         for (name, lat) in &o.stage {
             self.stage.entry(name.clone()).or_default().merge(lat);
         }
@@ -274,10 +302,17 @@ impl Metrics {
         self.adapter_loads += o.adapter_loads;
         self.adapter_evictions += o.adapter_evictions;
         self.adapter_load_stall_steps += o.adapter_load_stall_steps;
+        self.stream_subscriptions += o.stream_subscriptions;
+        self.stream_events += o.stream_events;
+        self.stream_token_events += o.stream_token_events;
+        self.sessions_created += o.sessions_created;
+        self.sessions_closed += o.sessions_closed;
+        self.lease_reclaims += o.lease_reclaims;
         self.running_requests += o.running_requests;
         self.waiting_requests += o.waiting_requests;
         self.free_blocks += o.free_blocks;
         self.adapter_resident_blocks += o.adapter_resident_blocks;
+        self.leased_blocks += o.leased_blocks;
         self.clock = self.clock.max(o.clock);
         self.e2e_hist.merge(&o.e2e_hist);
         self.ttft_hist.merge(&o.ttft_hist);
@@ -354,6 +389,28 @@ impl Metrics {
             "Scheduler steps where admission stalled on an adapter load",
             self.adapter_load_stall_steps as f64,
         );
+        counter(
+            "stream_subscriptions_total",
+            "Streaming turn-event subscriptions taken",
+            self.stream_subscriptions as f64,
+        );
+        counter(
+            "stream_events_total",
+            "Turn events emitted for watched requests",
+            self.stream_events as f64,
+        );
+        counter(
+            "stream_token_events_total",
+            "Token events emitted for watched requests",
+            self.stream_token_events as f64,
+        );
+        counter("sessions_created_total", "Sessions opened", self.sessions_created as f64);
+        counter("sessions_closed_total", "Sessions deleted", self.sessions_closed as f64);
+        counter(
+            "lease_reclaims_total",
+            "Session prefix leases broken under memory pressure",
+            self.lease_reclaims as f64,
+        );
 
         let mut gauge = |name: &str, help: &str, v: f64| {
             s.push_str(&format!(
@@ -368,8 +425,14 @@ impl Metrics {
             "Blocks charged to resident adapter weights",
             self.adapter_resident_blocks as f64,
         );
+        gauge(
+            "leased_blocks",
+            "Blocks pinned by session prefix leases",
+            self.leased_blocks as f64,
+        );
         gauge("prefix_cache_hit_rate", "Token hit rate", self.cache_hit_rate());
 
+        s.push_str(&Self::render_turn_series(&self.turn));
         s.push_str(&Self::render_stage_series(&self.stage));
 
         for (name, hist) in [("e2e_latency_seconds", &self.e2e_hist), ("ttft_seconds", &self.ttft_hist)]
@@ -383,6 +446,32 @@ impl Metrics {
             }
             s.push_str(&format!("alora_serve_{name}_sum {}\n", hist.sum()));
             s.push_str(&format!("alora_serve_{name}_count {}\n", hist.count()));
+        }
+        s
+    }
+
+    /// Render the per-turn serving-boundary series (`alora_serve_turn*`):
+    /// empty when no session turns have completed, so a fleet exposition
+    /// can render its fleet-level series exactly once without colliding
+    /// with the (empty) aggregated registry's.
+    pub fn render_turn_series(turn: &StageLatencies) -> String {
+        if turn.count() == 0 {
+            return String::new();
+        }
+        let mut s = String::new();
+        s.push_str(&format!(
+            "# HELP alora_serve_turns_total Session turns completed\n# TYPE alora_serve_turns_total counter\nalora_serve_turns_total {}\n",
+            turn.count()
+        ));
+        for (name, which, help) in [
+            ("turn_ttft_seconds_mean", "ttft", "Mean per-turn time to first token"),
+            ("turn_itl_seconds_mean", "itl", "Mean per-turn inter-token latency"),
+            ("turn_e2e_seconds_mean", "e2e", "Mean per-turn end-to-end latency"),
+        ] {
+            s.push_str(&format!(
+                "# HELP alora_serve_{name} {help}\n# TYPE alora_serve_{name} gauge\nalora_serve_{name} {}\n",
+                turn.mean(which)
+            ));
         }
         s
     }
@@ -564,6 +653,47 @@ mod tests {
         assert_eq!(a.all.count(), 2);
         assert_eq!(a.stage["draft"].count(), 2);
         assert_eq!(a.e2e_hist.count(), 2);
+    }
+
+    #[test]
+    fn turn_series_and_stream_counters_render_and_absorb() {
+        let mut m = Metrics::new();
+        // No turns: the turn families are absent entirely.
+        assert!(!m.render_prometheus().contains("alora_serve_turns_total"));
+        m.observe_turn(&out(0.0, 1.0, 2.0, 4.0, 3));
+        m.observe_turn(&out(0.0, 1.0, 3.0, 5.0, 3));
+        m.stream_subscriptions = 2;
+        m.stream_events = 10;
+        m.stream_token_events = 6;
+        m.sessions_created = 3;
+        m.sessions_closed = 1;
+        m.lease_reclaims = 4;
+        m.leased_blocks = 17;
+        let text = m.render_prometheus();
+        assert!(text.contains("alora_serve_turns_total 2"), "{text}");
+        assert!(text.contains("alora_serve_turn_ttft_seconds_mean 2.5"), "{text}");
+        assert!(text.contains("alora_serve_stream_subscriptions_total 2"));
+        assert!(text.contains("alora_serve_stream_events_total 10"));
+        assert!(text.contains("alora_serve_stream_token_events_total 6"));
+        assert!(text.contains("alora_serve_sessions_created_total 3"));
+        assert!(text.contains("alora_serve_sessions_closed_total 1"));
+        assert!(text.contains("alora_serve_lease_reclaims_total 4"));
+        assert!(text.contains("alora_serve_leased_blocks 17"));
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.split_whitespace().count() == 2, "bad line: {line}");
+        }
+        // Absorb: counters sum, the turn series sample-merges.
+        let mut agg = Metrics::new();
+        agg.absorb(&m);
+        agg.absorb(&m);
+        assert_eq!(agg.turn.count(), 4);
+        assert_eq!(agg.stream_token_events, 12);
+        assert_eq!(agg.sessions_created, 6);
+        // Scalars-only absorb skips the series (scrape path).
+        let mut fast = Metrics::new();
+        fast.absorb_scalars(&m);
+        assert_eq!(fast.turn.count(), 0);
+        assert_eq!(fast.lease_reclaims, 4);
     }
 
     #[test]

@@ -5,9 +5,13 @@
 //! metrics (E2E, queue, prefill, decode, TTFT, ITL) are derived exactly as
 //! the paper defines them.
 
+pub mod session;
+
 use crate::adapter::AdapterId;
 use crate::kvcache::block::BlockHash;
 use crate::kvcache::prefix::HashContext;
+
+pub use session::{Session, SessionId, TurnId, TurnRecord};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct RequestId(pub u64);
@@ -218,6 +222,45 @@ impl Request {
         self.num_computed_tokens = 0;
         self.num_cached_tokens = 0;
         self.preemptions += 1;
+    }
+}
+
+/// One per-request lifecycle event, emitted by the engine for *watched*
+/// requests (see `EngineDriver::watch`) and drained incrementally each
+/// step. This is the streaming surface behind
+/// `POST /v1/sessions/{id}/turns` with `stream: true`: `Started` opens
+/// the TTFT clock (it carries the arrival so TTFT = first `Token.clock`
+/// − `arrival`), each `Token` carries its emission clock (successive
+/// deltas are the inter-token latencies), and `Finished` transfers the
+/// full output record exactly once.
+#[derive(Debug, Clone)]
+pub enum TurnEvent {
+    /// First scheduled onto the executor — queueing ended at `clock`.
+    Started { id: RequestId, clock: f64, arrival: f64 },
+    /// One generated token (`index` = 0-based position in the output).
+    Token { id: RequestId, index: u32, token: u32, clock: f64 },
+    /// The request completed. `output` is a copy of the full record; the
+    /// engine's finished ledger (`take_finished*`) still holds the
+    /// canonical one, so non-streaming consumers are unaffected — a
+    /// streaming server consumes this copy and discards the ledger's.
+    Finished { id: RequestId, output: RequestOutput },
+}
+
+impl TurnEvent {
+    pub fn id(&self) -> RequestId {
+        match self {
+            TurnEvent::Started { id, .. }
+            | TurnEvent::Token { id, .. }
+            | TurnEvent::Finished { id, .. } => *id,
+        }
+    }
+
+    /// Virtual time the event was emitted at.
+    pub fn clock(&self) -> f64 {
+        match self {
+            TurnEvent::Started { clock, .. } | TurnEvent::Token { clock, .. } => *clock,
+            TurnEvent::Finished { output, .. } => output.timeline.finished,
+        }
     }
 }
 

@@ -1,0 +1,292 @@
+//! Conversation sessions: the request-layer state behind the v1 serving
+//! API (`POST /v1/sessions`, `POST /v1/sessions/{id}/turns`).
+//!
+//! A [`Session`] owns one conversation's accumulated token stream and its
+//! tenant `cache_salt`. A follow-up turn submits only its **token delta**;
+//! the session composes the full chain (history + delta), which is what
+//! makes cross-model prefix reuse a first-class API concept: the engine
+//! sees the same base-aligned chain turn after turn, instead of trusting
+//! every client to resend a byte-identical prompt. Turns are strictly
+//! sequential per session — one in flight at a time — mirroring a real
+//! conversation.
+//!
+//! Turn semantics:
+//! - `append = true` (default): the turn *joins* the conversation — its
+//!   delta and its generated tokens extend the session history.
+//! - `append = false`: a side branch — an Activated-LoRA intrinsic
+//!   evaluated over the conversation (invocation tokens + verdict) whose
+//!   tokens must NOT pollute the base chain. The turn still shares the
+//!   history prefix (base-aligned hashing), but the history is unchanged.
+//!
+//! The driving logic (submission, leases, metrics) lives in
+//! [`crate::session::SessionManager`]; this module is pure state so the
+//! types stay usable from any layer.
+
+use crate::request::{ModelTarget, RequestId, RequestOutput};
+
+/// Server-scoped session identifier (issued by the session manager).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SessionId(pub u64);
+
+/// Index of a turn within its session (0-based, strictly sequential).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TurnId(pub u32);
+
+/// Summary of one finished turn, retained on the session for
+/// `GET /v1/sessions/{id}` and for per-turn latency assertions.
+#[derive(Debug, Clone)]
+pub struct TurnRecord {
+    pub turn: TurnId,
+    pub request: RequestId,
+    pub target: ModelTarget,
+    /// Tokens the client actually sent for this turn (the delta).
+    pub delta_len: usize,
+    /// Full prompt length the engine saw (history + delta).
+    pub prompt_len: usize,
+    pub output_tokens: Vec<u32>,
+    pub append: bool,
+    pub cached_tokens: usize,
+    pub cache_hit_rate: f64,
+    pub ttft_s: f64,
+    pub itl_s: f64,
+    pub e2e_s: f64,
+    pub queue_s: f64,
+    pub preemptions: u32,
+}
+
+/// The one turn a session may have in flight.
+#[derive(Debug, Clone)]
+struct PendingTurn {
+    turn: TurnId,
+    request: RequestId,
+    target: ModelTarget,
+    delta: Vec<u32>,
+    append: bool,
+    prompt_len: usize,
+}
+
+/// One conversation's state: tenant salt, accumulated tokens, finished
+/// turns, and the in-flight turn (if any).
+#[derive(Debug, Clone)]
+pub struct Session {
+    pub id: SessionId,
+    /// Multi-tenant cache salt every turn submits under (vLLM semantics:
+    /// nonzero salts partition the prefix cache per tenant).
+    pub cache_salt: u64,
+    /// Accumulated conversation tokens (every appended turn's delta +
+    /// generated output, in order). This is the chain the server
+    /// reconstructs for each delta submission.
+    tokens: Vec<u32>,
+    turns: Vec<TurnRecord>,
+    pending: Option<PendingTurn>,
+    /// The most recent turn's request id — the stickiness peer a cluster
+    /// routes follow-up turns by (same replica = warm prefix).
+    pub last_request: Option<RequestId>,
+    /// Blocks pinned by the session's prefix lease after the last turn
+    /// (informational; the KV manager owns the actual pins).
+    pub leased_blocks: usize,
+}
+
+impl Session {
+    pub fn new(id: SessionId, cache_salt: u64) -> Self {
+        Session {
+            id,
+            cache_salt,
+            tokens: Vec::new(),
+            turns: Vec::new(),
+            pending: None,
+            last_request: None,
+            leased_blocks: 0,
+        }
+    }
+
+    /// The accumulated conversation token stream.
+    pub fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    pub fn history_len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn turns(&self) -> &[TurnRecord] {
+        &self.turns
+    }
+
+    pub fn num_turns(&self) -> usize {
+        self.turns.len()
+    }
+
+    /// The in-flight turn's request id, if a turn is running.
+    pub fn in_flight(&self) -> Option<RequestId> {
+        self.pending.as_ref().map(|p| p.request)
+    }
+
+    /// Compose the full prompt for a delta turn: history + delta. Errors
+    /// if a turn is already in flight (strictly sequential) or if both
+    /// history and delta are empty (nothing to run).
+    pub fn compose_prompt(&self, delta: &[u32]) -> anyhow::Result<Vec<u32>> {
+        if let Some(p) = &self.pending {
+            anyhow::bail!(
+                "session {}: turn {} is still in flight",
+                self.id.0,
+                p.turn.0
+            );
+        }
+        let mut prompt = Vec::with_capacity(self.tokens.len() + delta.len());
+        prompt.extend_from_slice(&self.tokens);
+        prompt.extend_from_slice(delta);
+        anyhow::ensure!(
+            !prompt.is_empty(),
+            "session {}: empty turn (no history and an empty delta)",
+            self.id.0
+        );
+        Ok(prompt)
+    }
+
+    /// Record a submitted turn as in flight. The caller submits first and
+    /// only then commits, so a rejected submission leaves no state behind.
+    pub fn note_submitted(
+        &mut self,
+        request: RequestId,
+        target: ModelTarget,
+        delta: Vec<u32>,
+        append: bool,
+        prompt_len: usize,
+    ) -> TurnId {
+        debug_assert!(self.pending.is_none(), "turn already in flight");
+        let turn = TurnId(self.turns.len() as u32);
+        self.pending = Some(PendingTurn { turn, request, target, delta, append, prompt_len });
+        turn
+    }
+
+    /// Apply the finished output of the in-flight turn: extend the history
+    /// (append turns only), retire the pending state, and return the
+    /// turn's record.
+    pub fn apply_finished(&mut self, out: &RequestOutput) -> anyhow::Result<TurnRecord> {
+        let pending_req = self
+            .pending
+            .as_ref()
+            .map(|p| p.request)
+            .ok_or_else(|| anyhow::anyhow!("session {}: no turn in flight", self.id.0))?;
+        // Check before consuming: a mismatched output must not destroy
+        // the in-flight turn it doesn't belong to.
+        anyhow::ensure!(
+            pending_req == out.id,
+            "session {}: output {:?} does not match in-flight turn {:?}",
+            self.id.0,
+            out.id,
+            pending_req
+        );
+        let p = self.pending.take().expect("checked above");
+        let record = TurnRecord {
+            turn: p.turn,
+            request: p.request,
+            target: p.target,
+            delta_len: p.delta.len(),
+            prompt_len: p.prompt_len,
+            output_tokens: out.output_tokens.clone(),
+            append: p.append,
+            cached_tokens: out.num_cached_tokens,
+            cache_hit_rate: out.cache_hit_rate(),
+            ttft_s: out.timeline.ttft(),
+            itl_s: out.itl(),
+            e2e_s: out.timeline.e2e(),
+            queue_s: out.timeline.queue_time(),
+            preemptions: out.preemptions,
+        };
+        if p.append {
+            self.tokens.extend_from_slice(&p.delta);
+            self.tokens.extend_from_slice(&out.output_tokens);
+        }
+        self.last_request = Some(p.request);
+        self.turns.push(record.clone());
+        Ok(record)
+    }
+
+    /// Drop the in-flight turn without applying it (client abandoned the
+    /// request). The history stays at the last completed turn; the engine
+    /// keeps running the orphaned request, whose output the caller must
+    /// discard. Returns the abandoned request id.
+    pub fn abort_pending(&mut self) -> Option<RequestId> {
+        self.pending.take().map(|p| p.request)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::{RequestId, Timeline};
+
+    fn out(id: u64, tokens: Vec<u32>, cached: usize) -> RequestOutput {
+        let mut t = Timeline::new(0.0);
+        t.first_scheduled = 0.1;
+        t.first_token = 0.2;
+        t.finished = 0.5;
+        RequestOutput {
+            id: RequestId(id),
+            target: ModelTarget::Base,
+            prompt_len: 4,
+            output_tokens: tokens,
+            timeline: t,
+            num_cached_tokens: cached,
+            preemptions: 0,
+        }
+    }
+
+    #[test]
+    fn delta_turns_accumulate_history() {
+        let mut s = Session::new(SessionId(1), 7);
+        let p1 = s.compose_prompt(&[1, 2, 3]).unwrap();
+        assert_eq!(p1, vec![1, 2, 3]);
+        let t = s.note_submitted(RequestId(10), ModelTarget::Base, vec![1, 2, 3], true, 3);
+        assert_eq!(t, TurnId(0));
+        assert_eq!(s.in_flight(), Some(RequestId(10)));
+        let rec = s.apply_finished(&out(10, vec![4, 5], 0)).unwrap();
+        assert_eq!(rec.output_tokens, vec![4, 5]);
+        assert_eq!(s.tokens(), &[1, 2, 3, 4, 5]);
+        assert_eq!(s.last_request, Some(RequestId(10)));
+        // Second turn composes history + delta.
+        let p2 = s.compose_prompt(&[6]).unwrap();
+        assert_eq!(p2, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn side_branch_turn_leaves_history_untouched() {
+        let mut s = Session::new(SessionId(2), 0);
+        s.note_submitted(RequestId(1), ModelTarget::Base, vec![1, 2], true, 2);
+        s.apply_finished(&out(1, vec![3], 0)).unwrap();
+        // Non-append (intrinsic) branch over the same history.
+        let p = s.compose_prompt(&[9, 9]).unwrap();
+        assert_eq!(p, vec![1, 2, 3, 9, 9]);
+        s.note_submitted(RequestId(2), ModelTarget::Base, vec![9, 9], false, 5);
+        let rec = s.apply_finished(&out(2, vec![7], 2)).unwrap();
+        assert!(!rec.append);
+        assert_eq!(s.tokens(), &[1, 2, 3], "branch must not pollute the chain");
+        assert_eq!(s.num_turns(), 2);
+        assert_eq!(s.last_request, Some(RequestId(2)));
+    }
+
+    #[test]
+    fn one_turn_in_flight_at_a_time() {
+        let mut s = Session::new(SessionId(3), 0);
+        s.note_submitted(RequestId(1), ModelTarget::Base, vec![1], true, 1);
+        let err = s.compose_prompt(&[2]).unwrap_err();
+        assert!(err.to_string().contains("in flight"), "{err}");
+        // Aborting clears the way; history unchanged.
+        assert_eq!(s.abort_pending(), Some(RequestId(1)));
+        assert!(s.compose_prompt(&[2]).is_ok());
+        assert_eq!(s.history_len(), 0);
+    }
+
+    #[test]
+    fn rejects_empty_turn_and_mismatched_output() {
+        let mut s = Session::new(SessionId(4), 0);
+        assert!(s.compose_prompt(&[]).is_err(), "no history, empty delta");
+        s.note_submitted(RequestId(1), ModelTarget::Base, vec![1], true, 1);
+        assert!(s.apply_finished(&out(99, vec![2], 0)).is_err(), "wrong id");
+        // A mismatched output leaves the in-flight turn intact.
+        assert_eq!(s.in_flight(), Some(RequestId(1)));
+        assert!(s.apply_finished(&out(1, vec![2], 0)).is_ok());
+    }
+}

@@ -191,7 +191,16 @@ impl Scheduler {
                 let r = &reqs[&id];
                 let demand = r.final_len().div_ceil(kv.block_size())
                     + residency.pending_load_blocks(target.adapter());
-                let in_use = (kv.num_total_blocks() - kv.num_free_blocks()) as usize;
+                // Session-leased blocks are reclaimable on demand (the
+                // allocation path breaks leases before failing), so the
+                // projection must not let parked sessions defer admission
+                // — a lease breaks BEFORE any admission stall (DESIGN.md
+                // §14.2). Distinct count: a pin shared with a running
+                // request stays in-use either way, so subtracting it errs
+                // toward admission, which ensure_capacity's reclaim
+                // backstops.
+                let in_use = ((kv.num_total_blocks() - kv.num_free_blocks()) as usize)
+                    .saturating_sub(kv.leased_distinct_blocks());
                 let limit =
                     (self.cfg.admission_watermark * kv.num_total_blocks() as f64) as usize;
                 if in_use + demand > limit && !self.running.is_empty() {
@@ -629,6 +638,7 @@ mod tests {
             }),
             reqs: FxHashMap::default(),
             kv: KvCacheManager::new(8, 16, true),
+            residency: AdapterResidency::disabled(),
         };
 
         // Empty running set: even an OVER-limit request is admitted (the

@@ -1,70 +1,174 @@
-//! HTTP entrypoint (vLLM-style): `/generate`, `/pipeline`, `/metrics`,
-//! `/cluster`, `/health`.
+//! HTTP entrypoint (vLLM-style): the conversation-first v1 API plus the
+//! legacy one-shot endpoints.
 //!
 //! Hand-rolled HTTP/1.1 over std TCP (no tokio in the offline build — see
 //! DESIGN.md §7). The server drives any [`EngineDriver`] — one engine or a
-//! replica [`crate::cluster::Cluster`] (cluster mode: every submission is
-//! routed, `GET /cluster` reports fleet stats). A dedicated driver thread
-//! owns stepping; handler threads submit requests and block on a condvar
-//! until their request completes. Request lifecycle timestamps still come
+//! replica [`crate::cluster::Cluster`] (every submission is routed; session
+//! turns are sticky-routed to their conversation's replica). A dedicated
+//! driver thread owns stepping; handler threads submit requests and block
+//! on a condvar until their request completes — or, for streaming turns,
+//! consume the engine's [`TurnEvent`] emission incrementally and forward
+//! it as HTTP/1.1 chunked SSE. Request lifecycle timestamps still come
 //! from the virtual clock, so `/metrics` exposes the same Table-2 series
 //! the figure harness reads.
 //!
-//! API:
-//!   POST /generate  {"prompt": [1,2,3], "adapter": "alora-0"|null,
-//!                    "max_new_tokens": 16,
-//!                    "cache_salt": 7 | "tenant-name" (optional)}
-//!     -> {"id": 0, "tokens": [...], "e2e_s": ..., "ttft_s": ...,
-//!         "cache_hit_rate": ...}
-//!   POST /pipeline  JSON stage-graph spec (coordinator::spec format:
-//!                   {"stages": [{"name", "adapter", "gen", "prompt",
-//!                   "invoke", "after", "priority"}, ...]})
-//!     -> {"makespan_s": ..., "stages": [{"name", "tokens", "e2e_s",
-//!         "ttft_s", "queue_s", "prefill_s", "decode_s",
-//!         "cache_hit_rate", ...}, ...]}
-//!                   or a BATCH of graphs: {"pipelines": [spec, ...]}
-//!     -> {"makespan_s": ..., "pipelines": [{"stages": [...]} |
-//!         {"error": "..."}, ...]}  (per-graph results and errors)
-//!   GET /metrics    Prometheus text exposition (cluster mode: aggregated
-//!                   + per-replica labeled families + routing counters)
-//!   GET /cluster    fleet stats JSON (404 on a single engine)
-//!   GET /health     {"status": "ok"}
+//! API (full reference with curl examples: API.md; semantics: DESIGN.md
+//! §14):
 //!
-//! /pipeline runs whole multi-stage conversation DAGs server-side: the
-//! handler submits root stages, and as the driver thread retires each
-//! stage the coordinator chains its children immediately — follow-ups hit
-//! the engine while their parents' prefix blocks are still cache-hot,
-//! concurrently with any /generate traffic sharing the engine. A batch
-//! request runs all its graphs through ONE coordinator over the shared
-//! driver, so conversations interleave exactly as live traffic would.
+//!   POST   /v1/sessions              {"cache_salt": 7 | "tenant" (opt)}
+//!     -> {"session": 0, "cache_salt": "..."}
+//!   POST   /v1/sessions/{id}/turns   {"tokens": [delta...],
+//!                                     "adapter": "alora-0"|null,
+//!                                     "max_new_tokens": 16,
+//!                                     "append": true, "stream": false}
+//!     -> turn summary JSON; with "stream": true -> chunked SSE events
+//!        (`started`, `token`*, `finished`) whose token sequence is
+//!        byte-identical to the non-streaming `tokens`
+//!   GET    /v1/sessions              {"sessions": [ids], "count": n}
+//!   GET    /v1/sessions/{id}         session document (history, turns)
+//!   DELETE /v1/sessions/{id}         close + release the prefix lease
+//!
+//!   POST /generate   legacy one-shot (bit-identical response shape);
+//!                    thin shim over the same submit/wait internals
+//!   POST /pipeline   stage-graph spec (single or {"pipelines": [...]});
+//!                    "stream": true on a single spec -> SSE `stage`
+//!                    events as stages retire, then `done`
+//!   GET  /metrics    Prometheus text exposition
+//!   GET  /cluster    fleet stats JSON (single engines report a
+//!                    one-replica document — never 404)
+//!   GET  /health     {"status": "ok"}
+//!
+//! Every error is a structured envelope with a meaningful status code:
+//! `{"error": {"code": "...", "message": "..."}}` — `invalid_json`,
+//! `missing_body`, `payload_too_large` (413), `unknown_adapter` (404),
+//! `session_not_found` (404), `turn_in_flight` (409), `timeout` (504),
+//! `invalid_request`, `not_found`.
+
+pub mod v1;
 
 use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use crate::adapter::AdapterRegistry;
 use crate::coordinator::{spec, Coordinator};
 use crate::engine::EngineDriver;
 use crate::kvcache::hash::tenant_salt;
-use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams};
+use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams, TurnEvent};
+use crate::session::SessionManager;
 use crate::util::json::Json;
 
-struct Shared<D: EngineDriver> {
-    engine: Mutex<EngineState<D>>,
-    cv: Condvar,
+/// Bodies past this are refused with 413 before being read.
+pub const MAX_BODY_BYTES: usize = 8 << 20;
+/// Absolute per-request deadline, blocking and streaming paths alike
+/// (virtual work is fast; this guards against stalls, not slow models).
+pub(crate) const REQUEST_TIMEOUT: Duration = Duration::from_secs(60);
+
+pub(crate) struct Shared<D: EngineDriver> {
+    pub(crate) engine: Mutex<EngineState<D>>,
+    pub(crate) cv: Condvar,
     stop: AtomicBool,
 }
 
-struct EngineState<D: EngineDriver> {
-    engine: D,
-    done: HashMap<RequestId, RequestOutput>,
-    /// Requests abandoned by their handler (e.g. a timed-out /pipeline):
+pub(crate) struct EngineState<D: EngineDriver> {
+    pub(crate) engine: D,
+    /// Conversation state behind the v1 endpoints.
+    pub(crate) sessions: SessionManager,
+    pub(crate) done: HashMap<RequestId, RequestOutput>,
+    /// Requests abandoned by their handler (e.g. a timed-out request):
     /// the driver drops their outputs instead of parking them in `done`
     /// forever.
-    orphaned: HashSet<RequestId>,
+    pub(crate) orphaned: HashSet<RequestId>,
+    /// Streaming turns: per-request event sinks the driver thread fills
+    /// from `take_events` and the streaming handler drains. Requests with
+    /// a sink get their finished output through it (as
+    /// [`TurnEvent::Finished`]), not through `done`.
+    pub(crate) streams: HashMap<RequestId, Vec<TurnEvent>>,
 }
+
+// ---------------------------------------------------------------------------
+// Structured error envelope (satellite): {"error": {"code", "message"}}.
+
+#[derive(Debug)]
+pub struct ApiError {
+    pub status: &'static str,
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn new(status: &'static str, code: &'static str, message: impl Into<String>) -> Self {
+        ApiError { status, code, message: message.into() }
+    }
+
+    pub fn bad_request(code: &'static str, message: impl Into<String>) -> Self {
+        Self::new("400 Bad Request", code, message)
+    }
+
+    pub fn not_found(code: &'static str, message: impl Into<String>) -> Self {
+        Self::new("404 Not Found", code, message)
+    }
+
+    pub fn conflict(code: &'static str, message: impl Into<String>) -> Self {
+        Self::new("409 Conflict", code, message)
+    }
+
+    pub fn timeout(message: impl Into<String>) -> Self {
+        Self::new("504 Gateway Timeout", "timeout", message)
+    }
+
+    /// The envelope body.
+    pub fn body(&self) -> String {
+        Json::obj(vec![("error", self.event_json())]).to_string()
+    }
+
+    /// The inner object (also the payload of a streaming `error` event).
+    pub fn event_json(&self) -> Json {
+        Json::obj(vec![
+            ("code", Json::str(self.code)),
+            ("message", Json::str(self.message.clone())),
+        ])
+    }
+}
+
+/// Map engine/session errors onto the envelope. The lower layers speak
+/// `anyhow` with stable message prefixes; this is the single place that
+/// translates them into wire codes, so handlers never hand-classify.
+pub(crate) fn classify(e: anyhow::Error) -> ApiError {
+    let message = e.to_string();
+    if message.contains("unknown adapter") {
+        ApiError::not_found("unknown_adapter", message)
+    } else if message.contains("unknown session") {
+        ApiError::not_found("session_not_found", message)
+    } else if message.contains("in flight") {
+        ApiError::conflict("turn_in_flight", message)
+    } else if message.contains("timed out") {
+        ApiError::timeout(message)
+    } else {
+        ApiError::bad_request("invalid_request", message)
+    }
+}
+
+/// Resolve an optional adapter name against the registry (404 envelope on
+/// unknown names — the satellite's "correct status codes" contract).
+pub(crate) fn resolve_target(
+    registry: &AdapterRegistry,
+    name: Option<&str>,
+) -> Result<ModelTarget, ApiError> {
+    match name {
+        None => Ok(ModelTarget::Base),
+        Some(n) => registry
+            .by_name(n)
+            .map(|a| ModelTarget::Adapter(a.id))
+            .ok_or_else(|| ApiError::not_found("unknown_adapter", format!("unknown adapter `{n}`"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server lifecycle.
 
 /// A running server; `shutdown()` or drop stops the driver thread.
 pub struct Server<D: EngineDriver + Send + 'static> {
@@ -86,14 +190,19 @@ impl<D: EngineDriver + Send + 'static> Server<D> {
         let shared = Arc::new(Shared {
             engine: Mutex::new(EngineState {
                 engine,
+                sessions: SessionManager::new(),
                 done: HashMap::new(),
                 orphaned: HashSet::new(),
+                streams: HashMap::new(),
             }),
             cv: Condvar::new(),
             stop: AtomicBool::new(false),
         });
 
-        // Driver thread: steps the engine whenever there is work.
+        // Driver thread: steps the engine whenever there is work, then
+        // routes the step's emissions — turn events into their streaming
+        // sinks, finished outputs into `done` (streamed requests deliver
+        // through their sink instead; orphans are dropped).
         let driver = {
             let shared = Arc::clone(&shared);
             std::thread::spawn(move || loop {
@@ -103,7 +212,19 @@ impl<D: EngineDriver + Send + 'static> Server<D> {
                 let mut st = shared.engine.lock().unwrap();
                 if st.engine.has_work() {
                     st.engine.step();
-                    for out in st.engine.take_finished() {
+                    let events = st.engine.take_events();
+                    for ev in events {
+                        if let Some(sink) = st.streams.get_mut(&ev.id()) {
+                            sink.push(ev);
+                        }
+                        // No sink: the subscription was abandoned between
+                        // emission and drain — drop the event.
+                    }
+                    let finished = st.engine.take_finished();
+                    for out in finished {
+                        if st.streams.contains_key(&out.id) {
+                            continue; // delivered via the event sink
+                        }
                         if !st.orphaned.remove(&out.id) {
                             st.done.insert(out.id, out);
                         }
@@ -172,6 +293,74 @@ impl<D: EngineDriver + Send + 'static> Drop for Server<D> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Connection handling.
+
+/// What a routed request resolves to: a complete response, or a streaming
+/// handler that owns the socket from here on.
+enum Reply {
+    Full { status: &'static str, ctype: &'static str, body: String },
+    TurnStream { session: u64, turn: v1::TurnBody },
+    PipelineStream { spec: Json },
+}
+
+fn full_ok(body: String) -> Reply {
+    Reply::Full { status: "200 OK", ctype: "application/json", body }
+}
+
+fn full_err(e: ApiError) -> Reply {
+    Reply::Full { status: e.status, ctype: "application/json", body: e.body() }
+}
+
+fn from_result(r: Result<Json, ApiError>) -> Reply {
+    match r {
+        Ok(j) => full_ok(j.to_string()),
+        Err(e) => full_err(e),
+    }
+}
+
+pub(crate) fn write_response(
+    stream: &mut TcpStream,
+    status: &str,
+    ctype: &str,
+    content: &str,
+) -> anyhow::Result<()> {
+    let header = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        content.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(content.as_bytes())?;
+    Ok(())
+}
+
+// -- HTTP/1.1 chunked SSE plumbing (streaming turns & pipelines) ------------
+
+pub(crate) fn start_stream(stream: &mut TcpStream) -> anyhow::Result<()> {
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nTransfer-Encoding: chunked\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    )?;
+    Ok(())
+}
+
+fn write_chunk(stream: &mut TcpStream, payload: &str) -> anyhow::Result<()> {
+    stream.write_all(format!("{:x}\r\n", payload.len()).as_bytes())?;
+    stream.write_all(payload.as_bytes())?;
+    stream.write_all(b"\r\n")?;
+    Ok(())
+}
+
+/// One SSE event as one chunk: `event: <name>\ndata: <json>\n\n`.
+pub(crate) fn write_sse(stream: &mut TcpStream, event: &str, data: &Json) -> anyhow::Result<()> {
+    write_chunk(stream, &format!("event: {event}\ndata: {data}\n\n"))
+}
+
+/// Terminal zero-length chunk.
+pub(crate) fn end_stream(stream: &mut TcpStream) -> anyhow::Result<()> {
+    stream.write_all(b"0\r\n\r\n")?;
+    Ok(())
+}
+
 fn handle_conn<D: EngineDriver>(mut stream: TcpStream, shared: &Shared<D>) -> anyhow::Result<()> {
     stream.set_read_timeout(Some(Duration::from_secs(30)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -193,65 +382,130 @@ fn handle_conn<D: EngineDriver>(mut stream: TcpStream, shared: &Shared<D>) -> an
             content_len = v.trim().parse().unwrap_or(0);
         }
     }
+    if content_len > MAX_BODY_BYTES {
+        // Refuse before reading: an oversized body never enters memory.
+        let e = ApiError::new(
+            "413 Payload Too Large",
+            "payload_too_large",
+            format!("body of {content_len} bytes exceeds the {MAX_BODY_BYTES}-byte limit"),
+        );
+        return write_response(&mut stream, e.status, "application/json", &e.body());
+    }
     let mut body = vec![0u8; content_len];
     if content_len > 0 {
         reader.read_exact(&mut body)?;
     }
 
-    let (status, content) = route(&method, &path, &body, shared);
-    let response = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {len}\r\nConnection: close\r\n\r\n",
-        ctype = if path == "/metrics" { "text/plain; version=0.0.4" } else { "application/json" },
-        len = content.len(),
-    );
-    stream.write_all(response.as_bytes())?;
-    stream.write_all(content.as_bytes())?;
-    Ok(())
+    match route(&method, &path, &body, shared) {
+        Reply::Full { status, ctype, body } => write_response(&mut stream, status, ctype, &body),
+        Reply::TurnStream { session, turn } => v1::stream_turn(&mut stream, shared, session, turn),
+        Reply::PipelineStream { spec } => stream_pipeline(&mut stream, shared, &spec),
+    }
 }
 
-fn route<D: EngineDriver>(
-    method: &str,
-    path: &str,
-    body: &[u8],
-    shared: &Shared<D>,
-) -> (&'static str, String) {
-    match (method, path) {
-        ("GET", "/health") => ("200 OK", r#"{"status":"ok"}"#.into()),
-        ("GET", "/metrics") => {
-            let st = shared.engine.lock().unwrap();
-            ("200 OK", st.engine.render_prometheus())
-        }
-        ("GET", "/cluster") => {
-            let st = shared.engine.lock().unwrap();
-            match st.engine.cluster_stats() {
-                Some(cs) => ("200 OK", cs.to_json().to_string()),
-                None => (
-                    "404 Not Found",
-                    r#"{"error":"not a cluster (started with a single engine)"}"#.into(),
-                ),
+fn route<D: EngineDriver>(method: &str, path: &str, body: &[u8], shared: &Shared<D>) -> Reply {
+    match method {
+        "GET" => match path {
+            "/health" => Reply::Full {
+                status: "200 OK",
+                ctype: "application/json",
+                body: r#"{"status":"ok"}"#.into(),
+            },
+            "/metrics" => {
+                let st = shared.engine.lock().unwrap();
+                Reply::Full {
+                    status: "200 OK",
+                    ctype: "text/plain; version=0.0.4",
+                    body: st.engine.render_prometheus(),
+                }
+            }
+            "/cluster" => {
+                let st = shared.engine.lock().unwrap();
+                match st.engine.cluster_stats() {
+                    Some(cs) => full_ok(cs.to_json().to_string()),
+                    // Unreachable for the in-tree drivers (a single engine
+                    // reports a one-replica document), kept for third-party
+                    // EngineDriver impls without stats.
+                    None => full_err(ApiError::not_found(
+                        "not_found",
+                        "this driver exposes no fleet stats",
+                    )),
+                }
+            }
+            "/v1/sessions" => from_result(v1::list_sessions(shared)),
+            p => match parse_session_path(p) {
+                Some((sid, false)) => from_result(v1::get_session(shared, sid)),
+                _ => full_err(ApiError::not_found("not_found", format!("no route for GET {p}"))),
+            },
+        },
+        "POST" => {
+            if body.is_empty() {
+                return full_err(ApiError::bad_request(
+                    "missing_body",
+                    "POST endpoints require a JSON body",
+                ));
+            }
+            let j = match std::str::from_utf8(body).map_err(|e| e.to_string()).and_then(
+                |text| Json::parse(text).map_err(|e| e.to_string()),
+            ) {
+                Ok(j) => j,
+                Err(e) => return full_err(ApiError::bad_request("invalid_json", e)),
+            };
+            match path {
+                "/generate" => from_result(generate(&j, shared)),
+                "/pipeline" => {
+                    if j.get("stream").and_then(Json::as_bool).unwrap_or(false) {
+                        if j.get("pipelines").is_some() {
+                            return full_err(ApiError::bad_request(
+                                "invalid_request",
+                                "streaming supports a single spec, not a `pipelines` batch",
+                            ));
+                        }
+                        return Reply::PipelineStream { spec: j };
+                    }
+                    from_result(run_pipeline(&j, shared).map_err(classify))
+                }
+                "/v1/sessions" => from_result(v1::create_session(&j, shared)),
+                p => match parse_session_path(p) {
+                    Some((sid, true)) => match v1::parse_turn(&j) {
+                        Err(e) => full_err(e),
+                        Ok(turn) if turn.stream => Reply::TurnStream { session: sid, turn },
+                        Ok(turn) => from_result(v1::run_turn(shared, sid, turn)),
+                    },
+                    _ => full_err(ApiError::not_found(
+                        "not_found",
+                        format!("no route for POST {p}"),
+                    )),
+                },
             }
         }
-        ("POST", "/generate") => match generate(body, shared) {
-            Ok(j) => ("200 OK", j.to_string()),
-            Err(e) => (
-                "400 Bad Request",
-                Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
-            ),
+        "DELETE" => match parse_session_path(path) {
+            Some((sid, false)) => from_result(v1::delete_session(shared, sid)),
+            _ => full_err(ApiError::not_found(
+                "not_found",
+                format!("no route for DELETE {path}"),
+            )),
         },
-        ("POST", "/pipeline") => match run_pipeline(body, shared) {
-            Ok(j) => ("200 OK", j.to_string()),
-            Err(e) => (
-                "400 Bad Request",
-                Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
-            ),
-        },
-        _ => ("404 Not Found", r#"{"error":"not found"}"#.into()),
+        m => full_err(ApiError::not_found("not_found", format!("no route for {m} {path}"))),
+    }
+}
+
+/// Parse `/v1/sessions/{id}` and `/v1/sessions/{id}/turns` paths into
+/// (id, is_turns). None for anything else.
+fn parse_session_path(path: &str) -> Option<(u64, bool)> {
+    let rest = path.strip_prefix("/v1/sessions/")?;
+    let mut parts = rest.split('/');
+    let id: u64 = parts.next()?.parse().ok()?;
+    match parts.next() {
+        None => Some((id, false)),
+        Some("turns") if parts.next().is_none() => Some((id, true)),
+        _ => None,
     }
 }
 
 /// Parse the optional multi-tenant `cache_salt` field: a raw u64, or a
 /// tenant-name string hashed to a stable nonzero salt.
-fn parse_cache_salt(req: &Json) -> anyhow::Result<u64> {
+pub(crate) fn parse_cache_salt(req: &Json) -> anyhow::Result<u64> {
     match req.get("cache_salt") {
         None | Some(Json::Null) => Ok(0),
         Some(v) => {
@@ -262,6 +516,92 @@ fn parse_cache_salt(req: &Json) -> anyhow::Result<u64> {
             } else {
                 anyhow::bail!("`cache_salt` must be an integer or a tenant string")
             }
+        }
+    }
+}
+
+/// Block until the driver thread finishes `id`, with an absolute deadline
+/// (the condvar is woken on every driver step, so a per-wait timeout
+/// would reset forever under concurrent traffic). Shared by `/generate`
+/// and non-streaming turns — the legacy endpoint is a shim over the same
+/// wait the v1 path uses.
+pub(crate) fn wait_done<D: EngineDriver>(
+    shared: &Shared<D>,
+    id: RequestId,
+) -> Result<RequestOutput, ApiError> {
+    let deadline = Instant::now() + REQUEST_TIMEOUT;
+    let mut st = shared.engine.lock().unwrap();
+    loop {
+        if let Some(out) = st.done.remove(&id) {
+            return Ok(out);
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            // Abandoning the request: let the driver drop its output
+            // instead of parking it in `done` forever.
+            st.orphaned.insert(id);
+            return Err(ApiError::timeout(format!("request {id:?} timed out")));
+        }
+        let (guard, _) = shared.cv.wait_timeout(st, deadline - now).unwrap();
+        st = guard;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Legacy endpoints (thin shims over the shared internals; success
+// responses are bit-identical to the pre-v1 server).
+
+/// The legacy `/generate` wire shape — exact field set and ordering
+/// (object keys serialize sorted), pinned by tests.
+fn generate_response(out: &RequestOutput) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(out.id.0 as f64)),
+        (
+            "tokens",
+            Json::Arr(out.output_tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        ("e2e_s", Json::num(out.timeline.e2e())),
+        ("ttft_s", Json::num(out.timeline.ttft())),
+        ("itl_s", Json::num(out.itl())),
+        ("cache_hit_rate", Json::num(out.cache_hit_rate())),
+        ("preemptions", Json::num(out.preemptions as f64)),
+    ])
+}
+
+fn generate<D: EngineDriver>(j: &Json, shared: &Shared<D>) -> Result<Json, ApiError> {
+    let prompt = j.get("prompt").and_then(Json::u32_vec).ok_or_else(|| {
+        ApiError::bad_request("invalid_request", "`prompt` must be an array of token ids")
+    })?;
+    let max_new = j.get("max_new_tokens").and_then(Json::as_u64).unwrap_or(16) as u32;
+    let adapter_name = j.get("adapter").and_then(Json::as_str).map(str::to_string);
+    let cache_salt = parse_cache_salt(j).map_err(classify)?;
+
+    let id = {
+        let mut st = shared.engine.lock().unwrap();
+        let target = resolve_target(st.engine.registry(), adapter_name.as_deref())?;
+        let id = st
+            .engine
+            .submit_salted(
+                target,
+                prompt,
+                SamplingParams { max_new_tokens: max_new, ..Default::default() },
+                false,
+                cache_salt,
+            )
+            .map_err(classify)?;
+        shared.cv.notify_all();
+        id
+    };
+    wait_done(shared, id).map(|out| generate_response(&out))
+}
+
+/// Orphan every in-flight stage of an abandoned coordinator run: drop
+/// outputs already in `done`, mark the rest so the driver discards them
+/// on arrival. The single cleanup used by every /pipeline abort path.
+fn orphan_in_flight<D: EngineDriver>(st: &mut EngineState<D>, co: &Coordinator) {
+    for id in co.in_flight_ids() {
+        if st.done.remove(&id).is_none() {
+            st.orphaned.insert(id);
         }
     }
 }
@@ -288,75 +628,6 @@ fn abandon_batch_entry<D: EngineDriver>(
     }
 }
 
-fn generate<D: EngineDriver>(body: &[u8], shared: &Shared<D>) -> anyhow::Result<Json> {
-    let req = Json::parse(std::str::from_utf8(body)?)?;
-    let prompt = req
-        .get("prompt")
-        .and_then(Json::u32_vec)
-        .ok_or_else(|| anyhow::anyhow!("`prompt` must be an array of token ids"))?;
-    let max_new = req
-        .get("max_new_tokens")
-        .and_then(Json::as_u64)
-        .unwrap_or(16) as u32;
-    let adapter_name = req.get("adapter").and_then(Json::as_str).map(str::to_string);
-    let cache_salt = parse_cache_salt(&req)?;
-
-    let id = {
-        let mut st = shared.engine.lock().unwrap();
-        let target = match &adapter_name {
-            None => ModelTarget::Base,
-            Some(name) => {
-                let a = st
-                    .engine
-                    .registry()
-                    .by_name(name)
-                    .ok_or_else(|| anyhow::anyhow!("unknown adapter `{name}`"))?;
-                ModelTarget::Adapter(a.id)
-            }
-        };
-        let id = st.engine.submit_salted(
-            target,
-            prompt,
-            SamplingParams { max_new_tokens: max_new, ..Default::default() },
-            false,
-            cache_salt,
-        )?;
-        shared.cv.notify_all();
-        id
-    };
-
-    // Block until the driver finishes our request. Absolute deadline: the
-    // condvar is woken on every driver step, so a per-wait timeout would
-    // reset forever under concurrent traffic.
-    let deadline = std::time::Instant::now() + Duration::from_secs(60);
-    let mut st = shared.engine.lock().unwrap();
-    loop {
-        if let Some(out) = st.done.remove(&id) {
-            return Ok(Json::obj(vec![
-                ("id", Json::num(out.id.0 as f64)),
-                (
-                    "tokens",
-                    Json::Arr(out.output_tokens.iter().map(|&t| Json::num(t as f64)).collect()),
-                ),
-                ("e2e_s", Json::num(out.timeline.e2e())),
-                ("ttft_s", Json::num(out.timeline.ttft())),
-                ("itl_s", Json::num(out.itl())),
-                ("cache_hit_rate", Json::num(out.cache_hit_rate())),
-                ("preemptions", Json::num(out.preemptions as f64)),
-            ]));
-        }
-        let now = std::time::Instant::now();
-        if now >= deadline {
-            // Abandoning the request: let the driver drop its output
-            // instead of parking it in `done` forever.
-            st.orphaned.insert(id);
-            anyhow::bail!("request {id:?} timed out");
-        }
-        let (guard, _) = shared.cv.wait_timeout(st, deadline - now).unwrap();
-        st = guard;
-    }
-}
-
 /// Drive one or many stage-graph conversations to completion over the
 /// shared engine. The driver thread does the stepping; this handler
 /// consumes its conversations' completions from `done` and lets the
@@ -368,8 +639,7 @@ fn generate<D: EngineDriver>(body: &[u8], shared: &Shared<D>) -> anyhow::Result<
 /// `error` in the response instead of failing the whole request (a 400
 /// is reserved for structural problems — non-array `pipelines`, empty
 /// batch, unparseable body).
-fn run_pipeline<D: EngineDriver>(body: &[u8], shared: &Shared<D>) -> anyhow::Result<Json> {
-    let spec_json = Json::parse(std::str::from_utf8(body)?)?;
+fn run_pipeline<D: EngineDriver>(spec_json: &Json, shared: &Shared<D>) -> anyhow::Result<Json> {
     let mut st = shared.engine.lock().unwrap();
     let (specs, batched): (Vec<&Json>, bool) = match spec_json.get("pipelines") {
         Some(pj) => {
@@ -379,7 +649,7 @@ fn run_pipeline<D: EngineDriver>(body: &[u8], shared: &Shared<D>) -> anyhow::Res
             anyhow::ensure!(!arr.is_empty(), "`pipelines` is empty");
             (arr.iter().collect(), true)
         }
-        None => (vec![&spec_json], false),
+        None => (vec![spec_json], false),
     };
     let mut co = Coordinator::new();
     // Per input spec: the conversation index it became, or its error.
@@ -403,7 +673,7 @@ fn run_pipeline<D: EngineDriver>(body: &[u8], shared: &Shared<D>) -> anyhow::Res
     let t0 = st.engine.clock();
     // Every failure past this point must fall through to the cleanup arm
     // below (partially-submitted roots are already in flight), so no `?`.
-    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    let deadline = Instant::now() + REQUEST_TIMEOUT;
     let mut outcome = Ok(());
     for idx in 0..convs.len() {
         let Ok(&ci) = convs[idx].as_ref() else { continue };
@@ -429,7 +699,7 @@ fn run_pipeline<D: EngineDriver>(body: &[u8], shared: &Shared<D>) -> anyhow::Res
             // Absolute deadline: the condvar is woken on every driver
             // step, so a per-wait timeout would reset forever under
             // concurrent traffic.
-            let now = std::time::Instant::now();
+            let now = Instant::now();
             if now >= deadline {
                 outcome = Err(anyhow::anyhow!(
                     "pipeline timed out with {} of {n_stages} stages unfinished",
@@ -480,12 +750,134 @@ fn run_pipeline<D: EngineDriver>(body: &[u8], shared: &Shared<D>) -> anyhow::Res
             // Abandoning the conversation: drop anything of ours already
             // in `done` and mark the still-running stages orphaned so the
             // driver discards their outputs instead of leaking them.
-            for id in co.in_flight_ids() {
-                if st.done.remove(&id).is_none() {
-                    st.orphaned.insert(id);
+            orphan_in_flight(&mut st, &co);
+            Err(e)
+        }
+    }
+}
+
+/// What one wake-up of a streaming wait produced.
+enum StreamStep {
+    /// Newly retired stage JSONs, whether the run completed, makespan.
+    Emit(Vec<Json>, bool, f64),
+    Fail(ApiError),
+}
+
+/// Streaming `/pipeline` (single spec): per-stage SSE emission through
+/// the coordinator's completion stream — a `stage` event the moment each
+/// stage retires (ROADMAP "streaming per-stage results over HTTP"), then
+/// `done` with the makespan.
+fn stream_pipeline<D: EngineDriver>(
+    stream: &mut TcpStream,
+    shared: &Shared<D>,
+    spec_json: &Json,
+) -> anyhow::Result<()> {
+    let mut co = Coordinator::new();
+    let t0 = {
+        let mut g = shared.engine.lock().unwrap();
+        let st = &mut *g;
+        let submitted = spec::graph_from_json(spec_json, st.engine.registry())
+            .and_then(|graph| co.add_conversation(graph))
+            .and_then(|ci| co.submit_ready(&mut st.engine, ci));
+        match submitted {
+            Ok(_) => {
+                shared.cv.notify_all();
+                st.engine.clock()
+            }
+            Err(e) => {
+                // Nothing streamed yet: plain error response.
+                let err = classify(e);
+                return write_response(stream, err.status, "application/json", &err.body());
+            }
+        }
+    };
+    let result = stream_pipeline_events(stream, shared, &mut co, t0);
+    if result.is_err() {
+        // A socket write failed mid-stream (client went away): orphan the
+        // coordinator's in-flight stages so the driver discards their
+        // outputs instead of leaking them into the shared `done` map.
+        let mut g = shared.engine.lock().unwrap();
+        orphan_in_flight(&mut g, &co);
+    }
+    result
+}
+
+/// The emission phase of a streaming pipeline. Any `Err` here is a dead
+/// client socket — `stream_pipeline` orphans the leftovers; engine-side
+/// failures are reported in-band as `error` events (with their own
+/// orphan handling under the lock).
+fn stream_pipeline_events<D: EngineDriver>(
+    stream: &mut TcpStream,
+    shared: &Shared<D>,
+    co: &mut Coordinator,
+    t0: f64,
+) -> anyhow::Result<()> {
+    start_stream(stream)?;
+    let deadline = Instant::now() + REQUEST_TIMEOUT;
+    let mut emitted = 0usize;
+    loop {
+        let step = {
+            let mut g = shared.engine.lock().unwrap();
+            loop {
+                let st = &mut *g;
+                let ready: Vec<RequestId> =
+                    st.done.keys().copied().filter(|id| co.owns(*id)).collect();
+                let mut failed: Option<anyhow::Error> = None;
+                let mut chained = false;
+                for id in ready {
+                    let Some(out) = st.done.remove(&id) else { continue };
+                    if let Err(e) = co.on_finished(&mut st.engine, out) {
+                        failed = Some(e);
+                        break;
+                    }
+                    chained = true;
+                }
+                if chained {
+                    shared.cv.notify_all();
+                }
+                if let Some(e) = failed {
+                    orphan_in_flight(st, co);
+                    break StreamStep::Fail(classify(e));
+                }
+                let new: Vec<Json> = co
+                    .finished_since(emitted)
+                    .iter()
+                    .map(spec::stage_output_to_json)
+                    .collect();
+                if !new.is_empty() || co.is_done() {
+                    emitted = co.finished_stages().len();
+                    break StreamStep::Emit(new, co.is_done(), st.engine.clock() - t0);
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    orphan_in_flight(st, co);
+                    break StreamStep::Fail(ApiError::timeout(format!(
+                        "pipeline timed out with {} stages in flight",
+                        co.in_flight()
+                    )));
+                }
+                let (guard, _) = shared.cv.wait_timeout(g, deadline - now).unwrap();
+                g = guard;
+            }
+        };
+        match step {
+            StreamStep::Fail(e) => {
+                write_sse(stream, "error", &e.event_json())?;
+                return end_stream(stream);
+            }
+            StreamStep::Emit(new, done, makespan) => {
+                for j in &new {
+                    write_sse(stream, "stage", j)?;
+                }
+                if done {
+                    write_sse(
+                        stream,
+                        "done",
+                        &Json::obj(vec![("makespan_s", Json::num(makespan))]),
+                    )?;
+                    return end_stream(stream);
                 }
             }
-            Err(e)
         }
     }
 }
@@ -524,6 +916,22 @@ mod tests {
         out
     }
 
+    fn post(addr: std::net::SocketAddr, path: &str, body: &str) -> String {
+        http(
+            addr,
+            &format!(
+                "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            ),
+        )
+    }
+
+    /// Last line of an HTTP response = the JSON body (Content-Length
+    /// framing, single-line JSON).
+    fn body_json(resp: &str) -> Json {
+        Json::parse(resp.lines().last().unwrap()).unwrap()
+    }
+
     #[test]
     fn health_and_metrics_endpoints() {
         let mut srv = start_sim_server();
@@ -537,21 +945,15 @@ mod tests {
     #[test]
     fn generate_roundtrip_base_and_adapter() {
         let mut srv = start_sim_server();
-        let body = r#"{"prompt": [1,2,3,4,5,6,7,8], "max_new_tokens": 4}"#;
-        let req = format!(
-            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-            body.len()
-        );
-        let r = http(srv.addr(), &req);
+        let r = post(srv.addr(), "/generate", r#"{"prompt": [1,2,3,4,5,6,7,8], "max_new_tokens": 4}"#);
         assert!(r.contains("200 OK"), "{r}");
         assert!(r.contains("\"tokens\""));
 
-        let body = r#"{"prompt": [1,2,3,4], "adapter": "alora-1", "max_new_tokens": 2}"#;
-        let req = format!(
-            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-            body.len()
+        let r = post(
+            srv.addr(),
+            "/generate",
+            r#"{"prompt": [1,2,3,4], "adapter": "alora-1", "max_new_tokens": 2}"#,
         );
-        let r = http(srv.addr(), &req);
         assert!(r.contains("200 OK"), "{r}");
         srv.shutdown();
     }
@@ -572,13 +974,9 @@ mod tests {
             ]}}"#,
             p = prompt.join(",")
         );
-        let req = format!(
-            "POST /pipeline HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-            body.len()
-        );
-        let r = http(srv.addr(), &req);
+        let r = post(srv.addr(), "/pipeline", &body);
         assert!(r.contains("200 OK"), "{r}");
-        let j = Json::parse(r.lines().last().unwrap()).unwrap();
+        let j = body_json(&r);
         let stages = j.get("stages").and_then(Json::as_arr).unwrap();
         assert_eq!(stages.len(), 3);
         // downstream stages reuse upstream KV over HTTP too
@@ -600,12 +998,9 @@ mod tests {
             r#"{"stages": []}"#,
             r#"{"stages": [{"name": "a", "prompt": [{"output_of": "ghost"}]}]}"#,
         ] {
-            let req = format!(
-                "POST /pipeline HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-                body.len()
-            );
-            let r = http(srv.addr(), &req);
+            let r = post(srv.addr(), "/pipeline", body);
             assert!(r.contains("400"), "{r}");
+            assert!(r.contains("\"code\":\"invalid_request\""), "{r}");
         }
         srv.shutdown();
     }
@@ -624,13 +1019,9 @@ mod tests {
         );
         let bad = r#"{"stages": [{"name": "x", "prompt": [{"output_of": "ghost"}]}]}"#;
         let body = format!(r#"{{"pipelines": [{good}, {bad}, {good}]}}"#);
-        let req = format!(
-            "POST /pipeline HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-            body.len()
-        );
-        let r = http(srv.addr(), &req);
+        let r = post(srv.addr(), "/pipeline", &body);
         assert!(r.contains("200 OK"), "{r}");
-        let j = Json::parse(r.lines().last().unwrap()).unwrap();
+        let j = body_json(&r);
         let ps = j.get("pipelines").and_then(Json::as_arr).unwrap();
         assert_eq!(ps.len(), 3);
         for idx in [0usize, 2] {
@@ -644,13 +1035,9 @@ mod tests {
         let runtime_bad =
             r#"{"stages": [{"name": "x", "gen": 200000, "prompt": [[1,2,3]]}]}"#;
         let body = format!(r#"{{"pipelines": [{good}, {runtime_bad}]}}"#);
-        let req = format!(
-            "POST /pipeline HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-            body.len()
-        );
-        let r = http(srv.addr(), &req);
+        let r = post(srv.addr(), "/pipeline", &body);
         assert!(r.contains("200 OK"), "{r}");
-        let j = Json::parse(r.lines().last().unwrap()).unwrap();
+        let j = body_json(&r);
         let ps = j.get("pipelines").and_then(Json::as_arr).unwrap();
         assert_eq!(ps[0].get("stages").and_then(Json::as_arr).unwrap().len(), 2);
         assert!(ps[1]
@@ -660,11 +1047,7 @@ mod tests {
             .contains("max_seq_len"));
         // structural problems still 400
         for body in [r#"{"pipelines": []}"#, r#"{"pipelines": 5}"#] {
-            let req = format!(
-                "POST /pipeline HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-                body.len()
-            );
-            assert!(http(srv.addr(), &req).contains("400"));
+            assert!(post(srv.addr(), "/pipeline", body).contains("400"));
         }
         srv.shutdown();
     }
@@ -691,13 +1074,9 @@ mod tests {
             p = p64.join(",")
         );
         let body = format!(r#"{{"pipelines": [{good}, {bad}]}}"#);
-        let req = format!(
-            "POST /pipeline HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-            body.len()
-        );
-        let r = http(srv.addr(), &req);
+        let r = post(srv.addr(), "/pipeline", &body);
         assert!(r.contains("200 OK"), "{r}");
-        let j = Json::parse(r.lines().last().unwrap()).unwrap();
+        let j = body_json(&r);
         let ps = j.get("pipelines").and_then(Json::as_arr).unwrap();
         assert_eq!(ps[0].get("stages").and_then(Json::as_arr).unwrap().len(), 1);
         assert!(ps[1]
@@ -705,6 +1084,47 @@ mod tests {
             .and_then(Json::as_str)
             .unwrap()
             .contains("max_seq_len"));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn pipeline_streams_per_stage_events() {
+        let mut srv = start_sim_server();
+        let prompt: Vec<String> = (0..128).map(|t| (t % 4000).to_string()).collect();
+        let body = format!(
+            r#"{{"stream": true, "stages": [
+                {{"name": "draft", "gen": 8, "prompt": [[{p}]]}},
+                {{"name": "check", "adapter": "alora-0", "gen": 4, "invoke": true,
+                  "prompt": [{{"prompt_of": "draft"}}, {{"output_of": "draft"}}]}}
+            ]}}"#,
+            p = prompt.join(",")
+        );
+        let r = post(srv.addr(), "/pipeline", &body);
+        assert!(r.contains("200 OK"), "{r}");
+        assert!(r.contains("Transfer-Encoding: chunked"), "{r}");
+        assert!(r.contains("text/event-stream"), "{r}");
+        // Two stage events in completion order, then done.
+        let events: Vec<&str> = r
+            .lines()
+            .filter(|l| l.starts_with("event: "))
+            .map(|l| l.trim_start_matches("event: "))
+            .collect();
+        assert_eq!(events, vec!["stage", "stage", "done"], "{r}");
+        let datas: Vec<Json> = r
+            .lines()
+            .filter(|l| l.starts_with("data: "))
+            .map(|l| Json::parse(l.trim_start_matches("data: ")).unwrap())
+            .collect();
+        assert_eq!(datas[0].get("name").and_then(Json::as_str), Some("draft"));
+        assert_eq!(datas[1].get("name").and_then(Json::as_str), Some("check"));
+        assert!(datas[1].get("cache_hit_rate").and_then(Json::as_f64).unwrap() > 0.5);
+        assert!(datas[2].get("makespan_s").and_then(Json::as_f64).unwrap() > 0.0);
+        // A bad streaming spec fails as a plain error response (nothing
+        // was streamed yet), and batches can't stream.
+        let r = post(srv.addr(), "/pipeline", r#"{"stream": true, "stages": []}"#);
+        assert!(r.contains("400"), "{r}");
+        let r = post(srv.addr(), "/pipeline", r#"{"stream": true, "pipelines": []}"#);
+        assert!(r.contains("400"), "{r}");
         srv.shutdown();
     }
 
@@ -717,14 +1137,9 @@ mod tests {
                 r#"{{"prompt": [{}], "max_new_tokens": 2, "cache_salt": {salt}}}"#,
                 prompt.join(",")
             );
-            let req = format!(
-                "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-                body.len()
-            );
-            let r = http(srv.addr(), &req);
+            let r = post(srv.addr(), "/generate", &body);
             assert!(r.contains("200 OK"), "{r}");
-            let j = Json::parse(r.lines().last().unwrap()).unwrap();
-            j.get("cache_hit_rate").and_then(Json::as_f64).unwrap()
+            body_json(&r).get("cache_hit_rate").and_then(Json::as_f64).unwrap()
         };
         assert_eq!(gen("\"tenant-a\""), 0.0, "cold");
         assert!(gen("\"tenant-a\"") > 0.5, "same tenant rehits its prefix");
@@ -742,15 +1157,11 @@ mod tests {
                 r#"{{"prompt": [{}], "max_new_tokens": 2}}"#,
                 prompt.join(",")
             );
-            let req = format!(
-                "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-                body.len()
-            );
-            assert!(http(srv.addr(), &req).contains("200 OK"));
+            assert!(post(srv.addr(), "/generate", &body).contains("200 OK"));
         }
         let r = http(srv.addr(), "GET /cluster HTTP/1.1\r\nHost: x\r\n\r\n");
         assert!(r.contains("200 OK"), "{r}");
-        let j = Json::parse(r.lines().last().unwrap()).unwrap();
+        let j = body_json(&r);
         assert_eq!(j.get("policy").and_then(Json::as_str), Some("prefix-affinity"));
         assert_eq!(j.get("replicas").and_then(Json::as_arr).unwrap().len(), 2);
         // Fleet dashboards get the per-replica config summary + adapter
@@ -766,25 +1177,76 @@ mod tests {
         assert!(m.contains("alora_serve_router_requests_routed_total"), "{m}");
         assert!(m.contains("alora_serve_replica_clock_seconds{replica=\"1\"}"));
         srv.shutdown();
-        // Single-engine servers 404 the cluster endpoint.
+        // Single-engine servers now answer with a one-replica document
+        // instead of 404 (API-consistency satellite).
         let mut single = start_sim_server();
+        let body = format!(r#"{{"prompt": [{}], "max_new_tokens": 2}}"#, prompt.join(","));
+        assert!(post(single.addr(), "/generate", &body).contains("200 OK"));
         let r = http(single.addr(), "GET /cluster HTTP/1.1\r\nHost: x\r\n\r\n");
-        assert!(r.contains("404"), "{r}");
+        assert!(r.contains("200 OK"), "{r}");
+        let j = body_json(&r);
+        assert_eq!(j.get("policy").and_then(Json::as_str), Some("single"));
+        let reps = j.get("replicas").and_then(Json::as_arr).unwrap();
+        assert_eq!(reps.len(), 1);
+        assert_eq!(reps[0].get("finished").and_then(Json::as_u64), Some(1));
+        assert_eq!(j.get("config").unwrap().get("model").and_then(Json::as_str), Some("granite-8b"));
         single.shutdown();
     }
 
     #[test]
-    fn bad_requests_rejected() {
+    fn bad_requests_get_structured_envelopes() {
         let mut srv = start_sim_server();
-        let body = r#"{"prompt": "nope"}"#;
-        let req = format!(
-            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-            body.len()
-        );
-        let r = http(srv.addr(), &req);
+        // Wrong-typed field -> invalid_request.
+        let r = post(srv.addr(), "/generate", r#"{"prompt": "nope"}"#);
         assert!(r.contains("400"), "{r}");
+        let j = body_json(&r);
+        assert_eq!(
+            j.get("error").unwrap().get("code").and_then(Json::as_str),
+            Some("invalid_request")
+        );
+        // Malformed JSON -> invalid_json, on every POST endpoint.
+        for path in ["/generate", "/pipeline", "/v1/sessions"] {
+            let r = post(srv.addr(), path, "{not json");
+            assert!(r.contains("400"), "{path}: {r}");
+            let j = body_json(&r);
+            assert_eq!(
+                j.get("error").unwrap().get("code").and_then(Json::as_str),
+                Some("invalid_json"),
+                "{path}"
+            );
+        }
+        // Empty body -> missing_body.
+        let r = post(srv.addr(), "/generate", "");
+        assert!(r.contains("400"), "{r}");
+        assert!(r.contains("\"code\":\"missing_body\""), "{r}");
+        // Unknown adapter -> 404 unknown_adapter.
+        let r = post(srv.addr(), "/generate", r#"{"prompt": [1,2], "adapter": "ghost-9"}"#);
+        assert!(r.contains("404"), "{r}");
+        assert!(r.contains("\"code\":\"unknown_adapter\""), "{r}");
+        // Unknown route -> 404 envelope.
         let r = http(srv.addr(), "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n");
         assert!(r.contains("404"), "{r}");
+        assert!(r.contains("\"code\":\"not_found\""), "{r}");
+        // Oversized body refused up front with 413.
+        let r = http(
+            srv.addr(),
+            &format!(
+                "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n",
+                MAX_BODY_BYTES + 1
+            ),
+        );
+        assert!(r.contains("413"), "{r}");
+        assert!(r.contains("\"code\":\"payload_too_large\""), "{r}");
         srv.shutdown();
+    }
+
+    #[test]
+    fn session_path_parser() {
+        assert_eq!(parse_session_path("/v1/sessions/3"), Some((3, false)));
+        assert_eq!(parse_session_path("/v1/sessions/3/turns"), Some((3, true)));
+        assert_eq!(parse_session_path("/v1/sessions/x"), None);
+        assert_eq!(parse_session_path("/v1/sessions/3/other"), None);
+        assert_eq!(parse_session_path("/v1/sessions/3/turns/4"), None);
+        assert_eq!(parse_session_path("/v2/sessions/3"), None);
     }
 }

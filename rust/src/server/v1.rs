@@ -1,0 +1,423 @@
+//! The v1 conversation endpoints: session CRUD and delta turns, streaming
+//! and not (DESIGN.md §14; endpoint reference with curl examples: API.md).
+//!
+//! Handlers here are thin over [`crate::session::SessionManager`]: they
+//! parse, resolve adapter names, and wait — all conversation semantics
+//! (delta composition, continuation priority, sticky placement, prefix
+//! leases, per-turn metrics) live in the session layer so the engine-level
+//! tests exercise exactly what HTTP serves.
+
+use std::net::TcpStream;
+use std::time::Instant;
+
+use crate::adapter::AdapterRegistry;
+use crate::engine::EngineDriver;
+use crate::request::session::{SessionId, TurnRecord};
+use crate::request::{ModelTarget, RequestId, RequestOutput, TurnEvent};
+use crate::util::json::Json;
+
+use super::{
+    classify, end_stream, parse_cache_salt, resolve_target, start_stream, wait_done,
+    write_response, write_sse, ApiError, Shared, REQUEST_TIMEOUT,
+};
+
+/// A parsed `POST /v1/sessions/{id}/turns` body.
+#[derive(Debug, Clone)]
+pub(crate) struct TurnBody {
+    pub tokens: Vec<u32>,
+    pub adapter: Option<String>,
+    pub max_new_tokens: u32,
+    pub append: bool,
+    pub stream: bool,
+}
+
+pub(crate) fn parse_turn(j: &Json) -> Result<TurnBody, ApiError> {
+    let tokens = match j.get("tokens") {
+        None | Some(Json::Null) => Vec::new(),
+        Some(v) => v.u32_vec().ok_or_else(|| {
+            ApiError::bad_request("invalid_request", "`tokens` must be an array of token ids")
+        })?,
+    };
+    let adapter = match j.get("adapter") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(
+            v.as_str()
+                .ok_or_else(|| {
+                    ApiError::bad_request(
+                        "invalid_request",
+                        "`adapter` must be a registry name or null",
+                    )
+                })?
+                .to_string(),
+        ),
+    };
+    let max_new_tokens =
+        j.get("max_new_tokens").and_then(Json::as_u64).unwrap_or(16) as u32;
+    let append = j.get("append").and_then(Json::as_bool).unwrap_or(true);
+    let stream = j.get("stream").and_then(Json::as_bool).unwrap_or(false);
+    Ok(TurnBody { tokens, adapter, max_new_tokens, append, stream })
+}
+
+/// Render a finished turn — the non-streaming response body and the
+/// payload of the streaming `finished` event (identical by construction).
+fn turn_json(registry: &AdapterRegistry, sid: SessionId, rec: &TurnRecord) -> Json {
+    let adapter = match rec.target {
+        ModelTarget::Base => Json::Null,
+        ModelTarget::Adapter(aid) => registry
+            .get(aid)
+            .map(|a| Json::str(a.name.clone()))
+            .unwrap_or(Json::Null),
+    };
+    Json::obj(vec![
+        ("session", Json::num(sid.0 as f64)),
+        ("turn", Json::num(rec.turn.0 as f64)),
+        ("id", Json::num(rec.request.0 as f64)),
+        ("adapter", adapter),
+        (
+            "tokens",
+            Json::Arr(rec.output_tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        ("append", Json::Bool(rec.append)),
+        ("delta_len", Json::num(rec.delta_len as f64)),
+        ("prompt_len", Json::num(rec.prompt_len as f64)),
+        ("e2e_s", Json::num(rec.e2e_s)),
+        ("ttft_s", Json::num(rec.ttft_s)),
+        ("itl_s", Json::num(rec.itl_s)),
+        ("queue_s", Json::num(rec.queue_s)),
+        ("cached_tokens", Json::num(rec.cached_tokens as f64)),
+        ("cache_hit_rate", Json::num(rec.cache_hit_rate)),
+        ("preemptions", Json::num(rec.preemptions as f64)),
+    ])
+}
+
+pub(crate) fn create_session<D: EngineDriver>(
+    j: &Json,
+    shared: &Shared<D>,
+) -> Result<Json, ApiError> {
+    let cache_salt = parse_cache_salt(j).map_err(classify)?;
+    let mut st = shared.engine.lock().unwrap();
+    let sid = st.sessions.create(cache_salt);
+    st.engine.metrics_mut().sessions_created += 1;
+    Ok(Json::obj(vec![
+        ("session", Json::num(sid.0 as f64)),
+        // Salts are u64 (tenant hashes exceed f64's exact range): string.
+        ("cache_salt", Json::str(cache_salt.to_string())),
+    ]))
+}
+
+pub(crate) fn list_sessions<D: EngineDriver>(shared: &Shared<D>) -> Result<Json, ApiError> {
+    let st = shared.engine.lock().unwrap();
+    let ids = st.sessions.ids();
+    Ok(Json::obj(vec![
+        ("count", Json::num(ids.len() as f64)),
+        (
+            "sessions",
+            Json::Arr(ids.iter().map(|s| Json::num(s.0 as f64)).collect()),
+        ),
+    ]))
+}
+
+pub(crate) fn get_session<D: EngineDriver>(
+    shared: &Shared<D>,
+    sid: u64,
+) -> Result<Json, ApiError> {
+    let st = shared.engine.lock().unwrap();
+    let s = st.sessions.get(SessionId(sid)).ok_or_else(|| {
+        ApiError::not_found("session_not_found", format!("unknown session {sid}"))
+    })?;
+    let registry = st.engine.registry();
+    Ok(Json::obj(vec![
+        ("session", Json::num(sid as f64)),
+        ("cache_salt", Json::str(s.cache_salt.to_string())),
+        ("history_len", Json::num(s.history_len() as f64)),
+        (
+            "tokens",
+            Json::Arr(s.tokens().iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        ("leased_blocks", Json::num(s.leased_blocks as f64)),
+        ("in_flight", Json::Bool(s.in_flight().is_some())),
+        (
+            "turns",
+            Json::Arr(s.turns().iter().map(|r| turn_json(registry, s.id, r)).collect()),
+        ),
+    ]))
+}
+
+pub(crate) fn delete_session<D: EngineDriver>(
+    shared: &Shared<D>,
+    sid: u64,
+) -> Result<Json, ApiError> {
+    let mut g = shared.engine.lock().unwrap();
+    let st = &mut *g;
+    let s = st
+        .sessions
+        .delete(&mut st.engine, SessionId(sid))
+        .map_err(classify)?;
+    st.engine.metrics_mut().sessions_closed += 1;
+    Ok(Json::obj(vec![
+        ("deleted", Json::num(sid as f64)),
+        ("turns", Json::num(s.num_turns() as f64)),
+        ("history_len", Json::num(s.history_len() as f64)),
+    ]))
+}
+
+/// Non-streaming turn: submit the delta, wait for the driver thread,
+/// apply the completion to the session, and return the turn summary.
+pub(crate) fn run_turn<D: EngineDriver>(
+    shared: &Shared<D>,
+    sid: u64,
+    t: TurnBody,
+) -> Result<Json, ApiError> {
+    let sid = SessionId(sid);
+    let rid = submit_turn(shared, sid, &t, false)?;
+    match wait_done(shared, rid) {
+        Ok(out) => {
+            let mut g = shared.engine.lock().unwrap();
+            let st = &mut *g;
+            let rec = st
+                .sessions
+                .complete_turn(&mut st.engine, sid, &out)
+                .map_err(classify)?;
+            Ok(turn_json(st.engine.registry(), sid, &rec))
+        }
+        Err(e) => {
+            // The request was orphaned by wait_done; detach the session's
+            // pending turn so the conversation stays usable.
+            let mut st = shared.engine.lock().unwrap();
+            st.sessions.abort_turn(sid);
+            Err(e)
+        }
+    }
+}
+
+/// Validate + submit a turn under the lock. `streaming` additionally
+/// subscribes the request to turn events and installs its sink.
+fn submit_turn<D: EngineDriver>(
+    shared: &Shared<D>,
+    sid: SessionId,
+    t: &TurnBody,
+    streaming: bool,
+) -> Result<RequestId, ApiError> {
+    let mut g = shared.engine.lock().unwrap();
+    let st = &mut *g;
+    // Unknown sessions surface from begin_turn, which classify() maps to
+    // the 404 envelope — one translation point, no duplicate pre-check.
+    let target = resolve_target(st.engine.registry(), t.adapter.as_deref())?;
+    let (_turn, rid) = st
+        .sessions
+        .begin_turn(&mut st.engine, sid, target, t.tokens.clone(), t.max_new_tokens, t.append)
+        .map_err(classify)?;
+    if streaming {
+        st.engine.watch(rid);
+        st.streams.insert(rid, Vec::new());
+    }
+    shared.cv.notify_all();
+    Ok(rid)
+}
+
+/// One wake-up's worth of a streaming turn wait.
+enum TurnWait {
+    Events(Vec<TurnEvent>),
+    Fail(ApiError),
+}
+
+/// Streaming turn: chunked SSE — `started` (TTFT clock opens), one
+/// `token` per generated token, then `finished` with the same summary the
+/// non-streaming path returns (token sequences byte-identical by
+/// construction: both come from the engine's single emission path).
+pub(crate) fn stream_turn<D: EngineDriver>(
+    stream: &mut TcpStream,
+    shared: &Shared<D>,
+    sid: u64,
+    t: TurnBody,
+) -> anyhow::Result<()> {
+    let sid = SessionId(sid);
+    let rid = match submit_turn(shared, sid, &t, true) {
+        Ok(rid) => rid,
+        // Nothing streamed yet: plain error response.
+        Err(e) => return write_response(stream, e.status, "application/json", &e.body()),
+    };
+    // The finished output the streaming phase has seen but not yet
+    // applied to the session — carried across a write failure so cleanup
+    // can still commit a turn that genuinely completed server-side.
+    let mut unapplied: Option<RequestOutput> = None;
+    let result = stream_turn_events(stream, shared, sid, rid, &mut unapplied);
+    if result.is_err() {
+        // A socket write failed mid-stream (client went away). The
+        // session must not stay wedged and nothing may leak: drop the
+        // sink and subscription; if the turn actually finished (output in
+        // hand, or still sitting undelivered in the sink), apply it —
+        // only the client missed the final event. Otherwise detach the
+        // turn and orphan the request so the driver discards its output
+        // instead of parking it in `done` forever.
+        let mut g = shared.engine.lock().unwrap();
+        let st = &mut *g;
+        if unapplied.is_none() {
+            if let Some(sink) = st.streams.get(&rid) {
+                unapplied = sink.iter().find_map(|ev| match ev {
+                    TurnEvent::Finished { output, .. } => Some(output.clone()),
+                    _ => None,
+                });
+            }
+        }
+        st.streams.remove(&rid);
+        st.engine.unwatch(rid);
+        let turn_pending =
+            st.sessions.get(sid).map(|s| s.in_flight() == Some(rid)).unwrap_or(false);
+        if turn_pending {
+            match &unapplied {
+                Some(out) => {
+                    // Completed server-side: keep the history truthful.
+                    let _ = st.sessions.complete_turn(&mut st.engine, sid, out);
+                }
+                None => {
+                    // Still running: the driver must discard its output.
+                    st.sessions.abort_turn(sid);
+                    st.orphaned.insert(rid);
+                }
+            }
+        }
+    }
+    result
+}
+
+/// The streaming phase of a turn, from response headers to the terminal
+/// chunk. Any `Err` here is a dead client socket — `stream_turn` cleans
+/// up (using `unapplied`, the finished-but-not-yet-applied output, to
+/// tell a completed turn from a still-running one); engine-side failures
+/// are reported in-band as `error` events.
+fn stream_turn_events<D: EngineDriver>(
+    stream: &mut TcpStream,
+    shared: &Shared<D>,
+    sid: SessionId,
+    rid: RequestId,
+    unapplied: &mut Option<RequestOutput>,
+) -> anyhow::Result<()> {
+    start_stream(stream)?;
+    let deadline = Instant::now() + REQUEST_TIMEOUT;
+    let mut finished: Option<RequestOutput> = None;
+    'stream: while finished.is_none() {
+        let step = {
+            let mut g = shared.engine.lock().unwrap();
+            loop {
+                let Some(sink) = g.streams.get_mut(&rid) else {
+                    break TurnWait::Fail(ApiError::new(
+                        "500 Internal Server Error",
+                        "internal",
+                        "stream sink vanished",
+                    ));
+                };
+                let events = std::mem::take(sink);
+                if !events.is_empty() {
+                    break TurnWait::Events(events);
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    let st = &mut *g;
+                    st.streams.remove(&rid);
+                    st.orphaned.insert(rid);
+                    st.engine.unwatch(rid);
+                    st.sessions.abort_turn(sid);
+                    break TurnWait::Fail(ApiError::timeout(format!(
+                        "turn request {rid:?} timed out"
+                    )));
+                }
+                let (guard, _) = shared.cv.wait_timeout(g, deadline - now).unwrap();
+                g = guard;
+            }
+        };
+        match step {
+            TurnWait::Fail(e) => {
+                write_sse(stream, "error", &e.event_json())?;
+                return end_stream(stream);
+            }
+            TurnWait::Events(events) => {
+                for ev in events {
+                    match ev {
+                        TurnEvent::Started { clock, arrival, .. } => {
+                            write_sse(
+                                stream,
+                                "started",
+                                &Json::obj(vec![
+                                    ("session", Json::num(sid.0 as f64)),
+                                    ("id", Json::num(rid.0 as f64)),
+                                    ("t_s", Json::num(clock)),
+                                    ("arrival_s", Json::num(arrival)),
+                                    ("queue_s", Json::num(clock - arrival)),
+                                ]),
+                            )?;
+                        }
+                        TurnEvent::Token { index, token, clock, .. } => {
+                            write_sse(
+                                stream,
+                                "token",
+                                &Json::obj(vec![
+                                    ("index", Json::num(index as f64)),
+                                    ("token", Json::num(token as f64)),
+                                    ("t_s", Json::num(clock)),
+                                ]),
+                            )?;
+                        }
+                        TurnEvent::Finished { output, .. } => {
+                            *unapplied = Some(output.clone());
+                            finished = Some(output);
+                            continue 'stream; // falls out: finished is Some
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let out = finished.expect("loop exits only with an output");
+    let reply = {
+        let mut g = shared.engine.lock().unwrap();
+        let st = &mut *g;
+        st.streams.remove(&rid);
+        let completed = st.sessions.complete_turn(&mut st.engine, sid, &out);
+        match completed {
+            Ok(rec) => {
+                *unapplied = None; // applied: cleanup must not re-apply
+                Ok(turn_json(st.engine.registry(), sid, &rec))
+            }
+            Err(e) => Err(classify(e)),
+        }
+    };
+    match reply {
+        Ok(j) => write_sse(stream, "finished", &j)?,
+        Err(e) => write_sse(stream, "error", &e.event_json())?,
+    }
+    end_stream(stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn turn_body_parsing_defaults_and_rejections() {
+        let j = Json::parse(r#"{"tokens": [1,2,3]}"#).unwrap();
+        let t = parse_turn(&j).unwrap();
+        assert_eq!(t.tokens, vec![1, 2, 3]);
+        assert_eq!(t.max_new_tokens, 16);
+        assert!(t.append && !t.stream);
+        assert!(t.adapter.is_none());
+
+        let j = Json::parse(
+            r#"{"tokens": [], "adapter": "alora-0", "max_new_tokens": 4,
+                "append": false, "stream": true}"#,
+        )
+        .unwrap();
+        let t = parse_turn(&j).unwrap();
+        assert_eq!(t.adapter.as_deref(), Some("alora-0"));
+        assert_eq!(t.max_new_tokens, 4);
+        assert!(!t.append && t.stream);
+
+        // Null adapter is base; typed garbage is rejected.
+        let j = Json::parse(r#"{"tokens": [1], "adapter": null}"#).unwrap();
+        assert!(parse_turn(&j).unwrap().adapter.is_none());
+        let j = Json::parse(r#"{"tokens": [1], "adapter": 3}"#).unwrap();
+        assert!(parse_turn(&j).is_err());
+        let j = Json::parse(r#"{"tokens": "nope"}"#).unwrap();
+        assert!(parse_turn(&j).is_err());
+    }
+}

@@ -1,0 +1,318 @@
+//! Conversation-first serving: the [`SessionManager`] drives delta turns
+//! over any [`EngineDriver`].
+//!
+//! This is the layer behind the v1 HTTP API (`POST /v1/sessions`,
+//! `POST /v1/sessions/{id}/turns`): sessions hold the conversation state
+//! ([`crate::request::session`]), the manager turns a client's **token
+//! delta** into a full-chain submission and applies the serving-side
+//! conventions that make the paper's reuse structural instead of
+//! accidental:
+//!
+//! - **Delta composition** — the full prompt is history + delta, so the
+//!   engine always sees the byte-identical base-aligned chain, turn after
+//!   turn (and an aLoRA turn's pre-activation chain matches it).
+//! - **Continuation priority** — turns enqueue at the front of the
+//!   waiting queue (paper §4.3: continuations harvest their cached
+//!   prefixes before eviction can claim the blocks).
+//! - **Sticky placement** — turns submit with the previous turn's request
+//!   id as the stickiness peer, so a cluster pins the conversation to the
+//!   replica holding its prefix (first turns fall back to the routing
+//!   policy, typically `PrefixAffinity`).
+//! - **Prefix leases** — after each turn the session's chain is pinned
+//!   (`EngineDriver::acquire_lease`), so the blocks survive between turns
+//!   even under cache churn from unrelated traffic; `DELETE` releases
+//!   them. Leases are best-effort: the KV manager breaks them
+//!   oldest-first under allocation pressure.
+//! - **Per-turn metrics** — every completed turn lands in the driver's
+//!   `Metrics::turn` series (TTFT / ITL at the serving boundary).
+
+use crate::engine::EngineDriver;
+use crate::request::session::{Session, SessionId, TurnId, TurnRecord};
+use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams};
+use crate::util::fxmap::FxHashMap;
+
+/// Owns every live session of one server (or one test harness) and
+/// drives their turns over an [`EngineDriver`].
+#[derive(Debug, Default)]
+pub struct SessionManager {
+    sessions: FxHashMap<SessionId, Session>,
+    next_id: u64,
+}
+
+impl SessionManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Open a session under a tenant cache salt (0 = unsalted shared
+    /// cache, vLLM semantics).
+    pub fn create(&mut self, cache_salt: u64) -> SessionId {
+        let id = SessionId(self.next_id);
+        self.next_id += 1;
+        self.sessions.insert(id, Session::new(id, cache_salt));
+        id
+    }
+
+    pub fn get(&self, id: SessionId) -> Option<&Session> {
+        self.sessions.get(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Live session ids, ascending.
+    pub fn ids(&self) -> Vec<SessionId> {
+        let mut ids: Vec<SessionId> = self.sessions.keys().copied().collect();
+        ids.sort();
+        ids
+    }
+
+    /// Submit the session's next turn: `delta` extends the conversation,
+    /// the engine sees history + delta. Returns the turn and its request
+    /// id; the turn stays in flight until [`SessionManager::complete_turn`]
+    /// (or [`SessionManager::abort_turn`]).
+    pub fn begin_turn<D: EngineDriver>(
+        &mut self,
+        engine: &mut D,
+        sid: SessionId,
+        target: ModelTarget,
+        delta: Vec<u32>,
+        max_new_tokens: u32,
+        append: bool,
+    ) -> anyhow::Result<(TurnId, RequestId)> {
+        let s = self
+            .sessions
+            .get_mut(&sid)
+            .ok_or_else(|| anyhow::anyhow!("unknown session {}", sid.0))?;
+        let prompt = s.compose_prompt(&delta)?;
+        let prompt_len = prompt.len();
+        let id = engine.submit_sticky(
+            target,
+            prompt,
+            SamplingParams { max_new_tokens, ..Default::default() },
+            true, // continuation priority (paper §4.3)
+            s.cache_salt,
+            s.last_request,
+        )?;
+        let turn = s.note_submitted(id, target, delta, append, prompt_len);
+        Ok((turn, id))
+    }
+
+    /// Apply a finished turn: extend the history, record per-turn metrics
+    /// on the driver, and re-acquire the session's prefix lease over the
+    /// grown chain (pinned on the replica that just ran the turn).
+    pub fn complete_turn<D: EngineDriver>(
+        &mut self,
+        engine: &mut D,
+        sid: SessionId,
+        out: &RequestOutput,
+    ) -> anyhow::Result<TurnRecord> {
+        let s = self
+            .sessions
+            .get_mut(&sid)
+            .ok_or_else(|| anyhow::anyhow!("unknown session {}", sid.0))?;
+        let record = s.apply_finished(out)?;
+        engine.metrics_mut().observe_turn(out);
+        s.leased_blocks = engine.acquire_lease(sid.0, s.tokens(), s.cache_salt, Some(out.id));
+        Ok(record)
+    }
+
+    /// Drive one turn to completion synchronously (tests and offline
+    /// drivers; the HTTP server splits begin/complete around its own
+    /// wait). Steps the engine until the turn's output appears, leaving
+    /// other traffic's outputs in place.
+    pub fn run_turn<D: EngineDriver>(
+        &mut self,
+        engine: &mut D,
+        sid: SessionId,
+        target: ModelTarget,
+        delta: Vec<u32>,
+        max_new_tokens: u32,
+        append: bool,
+    ) -> anyhow::Result<TurnRecord> {
+        let (_turn, rid) = self.begin_turn(engine, sid, target, delta, max_new_tokens, append)?;
+        let out = loop {
+            if let Some(out) = engine.take_finished_where(|o| o.id == rid).pop() {
+                break out;
+            }
+            anyhow::ensure!(engine.step(), "engine stalled waiting on turn {rid:?}");
+        };
+        self.complete_turn(engine, sid, &out)
+    }
+
+    /// Abandon the in-flight turn (client went away). The engine keeps
+    /// running the request; the returned id lets the caller discard its
+    /// eventual output. The session history stays at the last completed
+    /// turn.
+    pub fn abort_turn(&mut self, sid: SessionId) -> Option<RequestId> {
+        self.sessions.get_mut(&sid).and_then(Session::abort_pending)
+    }
+
+    /// Close a session: release its prefix lease and drop its state.
+    /// Refuses while a turn is in flight (abort it first).
+    pub fn delete<D: EngineDriver>(
+        &mut self,
+        engine: &mut D,
+        sid: SessionId,
+    ) -> anyhow::Result<Session> {
+        let s = self
+            .sessions
+            .get(&sid)
+            .ok_or_else(|| anyhow::anyhow!("unknown session {}", sid.0))?;
+        if let Some(rid) = s.in_flight() {
+            anyhow::bail!("session {}: turn {rid:?} is still in flight", sid.0);
+        }
+        engine.release_lease(sid.0);
+        Ok(self.sessions.remove(&sid).expect("checked above"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::AdapterId;
+    use crate::config::presets;
+    use crate::engine::Engine;
+    use crate::pipeline::workload;
+    use crate::simulator::SimExecutor;
+
+    fn engine() -> Engine<SimExecutor> {
+        let cfg = presets::granite_8b();
+        let reg = workload::build_registry(2, cfg.model.vocab_size, true);
+        let exec = SimExecutor::new(&cfg);
+        Engine::with_registry(cfg, reg, exec)
+    }
+
+    #[test]
+    fn delta_turns_reuse_prior_turn_kv() {
+        let mut e = engine();
+        let mut mgr = SessionManager::new();
+        let sid = mgr.create(0);
+        let t1 = mgr
+            .run_turn(&mut e, sid, ModelTarget::Base, (0..256).collect(), 32, true)
+            .unwrap();
+        assert_eq!(t1.cached_tokens, 0, "cold first turn");
+        assert_eq!(mgr.get(sid).unwrap().history_len(), 288);
+        assert!(mgr.get(sid).unwrap().leased_blocks > 0, "chain leased");
+        // Turn 2 submits only a 16-token delta; the engine reconstructs
+        // the 288-token chain and hits the committed prefix.
+        let t2 = mgr
+            .run_turn(&mut e, sid, ModelTarget::Base, (900..916).collect(), 16, true)
+            .unwrap();
+        assert_eq!(t2.prompt_len, 304);
+        assert_eq!(t2.delta_len, 16);
+        assert!(t2.cached_tokens >= 272, "follow-up hit: {}", t2.cached_tokens);
+        assert!(t2.ttft_s < t1.ttft_s, "warm turn strictly faster");
+        // aLoRA intrinsic side branch over the conversation (append=false).
+        let vocab = e.cfg.model.vocab_size;
+        let t3 = mgr
+            .run_turn(
+                &mut e,
+                sid,
+                ModelTarget::Adapter(AdapterId(0)),
+                workload::invocation_for(vocab, 0),
+                8,
+                false,
+            )
+            .unwrap();
+        assert!(t3.cached_tokens >= 288, "cross-model hit over the session chain");
+        let hist_after = mgr.get(sid).unwrap().history_len();
+        assert_eq!(hist_after, 304 + 16, "branch did not extend the chain");
+        // Per-turn series landed on the driver's metrics.
+        assert_eq!(e.metrics.turn.count(), 3);
+        // Delete releases the lease; nothing leaks.
+        mgr.delete(&mut e, sid).unwrap();
+        assert_eq!(e.leased_blocks(), 0);
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn tenant_salts_isolate_sessions_sharing_a_prompt() {
+        let mut e = engine();
+        let mut mgr = SessionManager::new();
+        let a = mgr.create(111);
+        let b = mgr.create(222);
+        let c = mgr.create(111); // same tenant as `a`
+        let prompt: Vec<u32> = (0..256).collect();
+        let ta = mgr
+            .run_turn(&mut e, a, ModelTarget::Base, prompt.clone(), 8, true)
+            .unwrap();
+        assert_eq!(ta.cached_tokens, 0);
+        // Different tenant, identical prompt: MUST NOT share blocks.
+        let tb = mgr
+            .run_turn(&mut e, b, ModelTarget::Base, prompt.clone(), 8, true)
+            .unwrap();
+        assert_eq!(tb.cached_tokens, 0, "cross-tenant hit");
+        // Same tenant: sharing is allowed (the salt partitions tenants,
+        // not sessions).
+        let tc = mgr
+            .run_turn(&mut e, c, ModelTarget::Base, prompt, 8, true)
+            .unwrap();
+        assert!(tc.cached_tokens > 0, "same-tenant session shares its prefix");
+        for sid in [a, b, c] {
+            mgr.delete(&mut e, sid).unwrap();
+        }
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sequential_turn_discipline_and_delete_guard() {
+        let mut e = engine();
+        let mut mgr = SessionManager::new();
+        let sid = mgr.create(0);
+        let (_t, rid) = mgr
+            .begin_turn(&mut e, sid, ModelTarget::Base, vec![1, 2, 3, 4], 4, true)
+            .unwrap();
+        // Second turn while one is in flight: refused.
+        let err = mgr
+            .begin_turn(&mut e, sid, ModelTarget::Base, vec![5], 4, true)
+            .unwrap_err();
+        assert!(err.to_string().contains("in flight"), "{err}");
+        // Delete while in flight: refused.
+        assert!(mgr.delete(&mut e, sid).is_err());
+        // Completing clears the way.
+        let out = loop {
+            if let Some(o) = e.take_finished_where(|o| o.id == rid).pop() {
+                break o;
+            }
+            assert!(e.step());
+        };
+        mgr.complete_turn(&mut e, sid, &out).unwrap();
+        assert_eq!(mgr.get(sid).unwrap().num_turns(), 1);
+        mgr.delete(&mut e, sid).unwrap();
+        assert!(mgr.get(sid).is_none());
+        assert!(mgr.delete(&mut e, sid).is_err(), "double delete");
+    }
+
+    #[test]
+    fn aborted_turn_leaves_history_and_engine_consistent() {
+        let mut e = engine();
+        let mut mgr = SessionManager::new();
+        let sid = mgr.create(0);
+        mgr.run_turn(&mut e, sid, ModelTarget::Base, (0..64).collect(), 8, true)
+            .unwrap();
+        let hist = mgr.get(sid).unwrap().history_len();
+        let (_t, rid) = mgr
+            .begin_turn(&mut e, sid, ModelTarget::Base, vec![7; 16], 8, true)
+            .unwrap();
+        assert_eq!(mgr.abort_turn(sid), Some(rid));
+        assert_eq!(mgr.get(sid).unwrap().history_len(), hist, "history unchanged");
+        // The orphaned request still runs to completion; its output is
+        // simply unclaimed by the session.
+        e.run_until_idle();
+        let leftover = e.take_finished();
+        assert!(leftover.iter().any(|o| o.id == rid));
+        // A fresh turn proceeds normally after the abort.
+        let t = mgr
+            .run_turn(&mut e, sid, ModelTarget::Base, vec![8; 16], 8, true)
+            .unwrap();
+        assert!(t.cached_tokens > 0);
+        mgr.delete(&mut e, sid).unwrap();
+        e.check_invariants().unwrap();
+    }
+}

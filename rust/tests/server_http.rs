@@ -56,6 +56,22 @@ fn concurrent_clients_all_served() {
     let mut m = String::new();
     s.read_to_string(&mut m).unwrap();
     assert!(m.contains("alora_serve_requests_finished_total 8"), "{m}");
+    // GET /cluster on a single-engine server returns a one-replica stats
+    // document (API-consistency satellite), not 404.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"GET /cluster HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let mut c = String::new();
+    s.read_to_string(&mut c).unwrap();
+    assert!(c.contains("200 OK"), "{c}");
+    let j = alora_serve::util::json::Json::parse(c.lines().last().unwrap()).unwrap();
+    assert_eq!(
+        j.get("policy").and_then(|p| p.as_str()),
+        Some("single"),
+        "{c}"
+    );
+    let reps = j.get("replicas").and_then(|r| r.as_arr()).unwrap();
+    assert_eq!(reps.len(), 1);
+    assert_eq!(reps[0].get("finished").and_then(|f| f.as_u64()), Some(8));
     srv.shutdown();
 }
 

@@ -1,0 +1,655 @@
+//! Acceptance tests for the conversation-first v1 serving API.
+//!
+//! Pins the ISSUE-4 acceptance criteria:
+//! - a multi-turn multi-adapter session submitting per-turn deltas through
+//!   `/v1/sessions/{id}/turns` achieves a strictly higher aggregate prefix
+//!   hit-rate and strictly lower mean TTFT than the same workload replayed
+//!   as full-prompt `POST /generate` calls (engine-level and over HTTP);
+//! - streamed token sequences are byte-identical to non-streaming output;
+//! - legacy `/generate` and `/pipeline` responses are bit-identical to the
+//!   pre-refactor wire shape;
+//! plus the satellites: session tenant isolation over HTTP, the
+//! structured error envelope, and the streaming smoke the CI
+//! `make server-smoke` target runs.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use alora_serve::adapter::AdapterId;
+use alora_serve::config::presets;
+use alora_serve::config::EngineConfig;
+use alora_serve::coordinator::{spec, Coordinator};
+use alora_serve::engine::Engine;
+use alora_serve::pipeline::workload;
+use alora_serve::request::{ModelTarget, SamplingParams};
+use alora_serve::server::Server;
+use alora_serve::session::SessionManager;
+use alora_serve::simulator::SimExecutor;
+use alora_serve::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Helpers.
+
+/// Small-cache config: 128 KV blocks, so unrelated traffic between a
+/// conversation's turns genuinely evicts unpinned blocks.
+fn small_cache_cfg() -> EngineConfig {
+    let mut cfg = presets::granite_8b();
+    cfg.cache.max_kv_tokens = 2048; // 128 blocks of 16
+    cfg.scheduler.max_seq_len = 2048;
+    cfg
+}
+
+fn engine_with(cfg: &EngineConfig) -> Engine<SimExecutor> {
+    let reg = workload::build_registry(2, cfg.model.vocab_size, true);
+    let exec = SimExecutor::new(cfg);
+    Engine::with_registry(cfg.clone(), reg, exec)
+}
+
+fn http(addr: std::net::SocketAddr, req: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(req.as_bytes()).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn request(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> String {
+    http(
+        addr,
+        &format!(
+            "{method} {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn post(addr: std::net::SocketAddr, path: &str, body: &str) -> String {
+    request(addr, "POST", path, body)
+}
+
+/// Body of a Content-Length response (single-line JSON = last line).
+fn body_json(resp: &str) -> Json {
+    Json::parse(resp.lines().last().unwrap()).unwrap_or_else(|e| {
+        panic!("unparseable body in:\n{resp}\n{e}");
+    })
+}
+
+/// Parse a chunked SSE response into (event, data) pairs.
+fn sse_events(resp: &str) -> Vec<(String, Json)> {
+    let mut out = Vec::new();
+    let mut current: Option<String> = None;
+    for line in resp.lines() {
+        if let Some(e) = line.strip_prefix("event: ") {
+            current = Some(e.to_string());
+        } else if let Some(d) = line.strip_prefix("data: ") {
+            let name = current.take().expect("data without event");
+            out.push((name, Json::parse(d).unwrap()));
+        }
+    }
+    out
+}
+
+fn tokens_json(tokens: &[u32]) -> String {
+    let strs: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
+    format!("[{}]", strs.join(","))
+}
+
+/// The multi-turn multi-adapter conversation the acceptance comparison
+/// replays both ways: (delta, adapter, gen, append).
+fn acceptance_turns(vocab: u32) -> Vec<(Vec<u32>, Option<&'static str>, u32, bool)> {
+    vec![
+        ((0..256).collect(), None, 32, true),
+        ((5000..5064).collect(), None, 32, true),
+        (workload::invocation_for(vocab, 0), Some("alora-0"), 16, false),
+    ]
+}
+
+/// Filler prompts for one inter-turn gap: 4 distinct 640-token requests
+/// = 164 block allocations through the 128-block pool, cycling every
+/// unreferenced cached block out (4 × ceil(648/16) = 4 × 41).
+fn filler_prompts(gap: u32) -> Vec<Vec<u32>> {
+    (0..4)
+        .map(|i| {
+            let base = 20_000 + gap * 10_000 + i * 1_000;
+            (base..base + 640).collect()
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: sessions beat full-prompt replay (engine level).
+
+#[test]
+fn session_delta_turns_beat_full_prompt_replay_engine_level() {
+    let cfg = small_cache_cfg();
+    let vocab = cfg.model.vocab_size;
+    // Both runs submit in the same order => identical request ids =>
+    // identical (deterministic) token streams, so the workloads are the
+    // same byte-for-byte and only the serving mode differs.
+    let run_filler = |e: &mut Engine<SimExecutor>, gap: u32| {
+        for p in filler_prompts(gap) {
+            let id = e
+                .submit(
+                    ModelTarget::Base,
+                    p,
+                    SamplingParams { max_new_tokens: 8, ..Default::default() },
+                )
+                .unwrap();
+            e.run_to_completion(id);
+        }
+    };
+
+    // Session mode: delta turns through the session layer.
+    let mut se = engine_with(&cfg);
+    let mut mgr = SessionManager::new();
+    let sid = mgr.create(0);
+    let mut session_turns = Vec::new();
+    for (gap, (delta, adapter, gen, append)) in acceptance_turns(vocab).into_iter().enumerate() {
+        let target = match adapter {
+            None => ModelTarget::Base,
+            Some(_) => ModelTarget::Adapter(AdapterId(0)),
+        };
+        let rec = mgr.run_turn(&mut se, sid, target, delta, gen, append).unwrap();
+        session_turns.push(rec);
+        if gap + 1 < 3 {
+            run_filler(&mut se, gap as u32);
+        }
+    }
+
+    // Replay mode: the same conversation as one-shot full-prompt
+    // submissions (what /generate clients do), history tracked client-side.
+    let mut re = engine_with(&cfg);
+    let mut history: Vec<u32> = Vec::new();
+    let mut replay = Vec::new();
+    for (gap, (delta, adapter, gen, append)) in acceptance_turns(vocab).into_iter().enumerate() {
+        let target = match adapter {
+            None => ModelTarget::Base,
+            Some(_) => ModelTarget::Adapter(AdapterId(0)),
+        };
+        let mut prompt = history.clone();
+        prompt.extend(&delta);
+        let id = re
+            .submit(
+                target,
+                prompt,
+                SamplingParams { max_new_tokens: gen, ..Default::default() },
+            )
+            .unwrap();
+        let out = re.run_to_completion(id);
+        if append {
+            history.extend(&delta);
+            history.extend(&out.output_tokens);
+        }
+        replay.push(out);
+        if gap + 1 < 3 {
+            run_filler(&mut re, gap as u32);
+        }
+    }
+
+    // Same workload: every turn produced identical tokens.
+    for (s, r) in session_turns.iter().zip(&replay) {
+        assert_eq!(s.output_tokens, r.output_tokens, "turn {:?}", s.turn);
+        assert_eq!(s.prompt_len, r.prompt_len);
+    }
+
+    // Strictly higher aggregate prefix hit-rate over the turns...
+    let s_hit: usize = session_turns.iter().map(|t| t.cached_tokens).sum();
+    let r_hit: usize = replay.iter().map(|o| o.num_cached_tokens).sum();
+    let queried: usize = session_turns.iter().map(|t| t.prompt_len).sum();
+    let s_rate = s_hit as f64 / queried as f64;
+    let r_rate = r_hit as f64 / queried as f64;
+    assert!(
+        s_rate > r_rate,
+        "session hit-rate {s_rate:.3} must strictly beat replay {r_rate:.3}"
+    );
+    // ...the leases make the follow-ups land warm despite the churn:
+    assert_eq!(r_hit, 0, "filler churn wipes the replayed conversation");
+    assert!(s_hit >= 600, "leased chain survives: {s_hit} tokens hit");
+    // ...and at the engine aggregate too (fillers identical in both).
+    assert!(se.kv_stats().hit_rate() > re.kv_stats().hit_rate());
+
+    // Strictly lower mean TTFT.
+    let s_ttft: f64 =
+        session_turns.iter().map(|t| t.ttft_s).sum::<f64>() / session_turns.len() as f64;
+    let r_ttft: f64 =
+        replay.iter().map(|o| o.timeline.ttft()).sum::<f64>() / replay.len() as f64;
+    assert!(
+        s_ttft < r_ttft,
+        "session mean TTFT {s_ttft:.6}s must strictly beat replay {r_ttft:.6}s"
+    );
+    // First turns are identical (both cold) — the win is the follow-ups.
+    assert_eq!(session_turns[0].ttft_s, replay[0].timeline.ttft());
+    assert!(session_turns[1].ttft_s < replay[1].timeline.ttft());
+    assert!(session_turns[2].ttft_s < replay[2].timeline.ttft());
+
+    mgr.delete(&mut se, sid).unwrap();
+    se.check_invariants().unwrap();
+    re.check_invariants().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: the same comparison over HTTP.
+
+#[test]
+fn session_delta_turns_beat_generate_replay_over_http() {
+    let cfg = small_cache_cfg();
+    let vocab = cfg.model.vocab_size;
+    let run_filler_http = |addr: std::net::SocketAddr, gap: u32| {
+        for p in filler_prompts(gap) {
+            let body =
+                format!(r#"{{"prompt": {}, "max_new_tokens": 8}}"#, tokens_json(&p));
+            assert!(post(addr, "/generate", &body).contains("200 OK"));
+        }
+    };
+
+    // Session server: delta turns through the v1 API.
+    let mut srv_s = Server::start(engine_with(&cfg), "127.0.0.1:0").unwrap();
+    let sid = body_json(&post(srv_s.addr(), "/v1/sessions", "{}"))
+        .get("session")
+        .and_then(Json::as_u64)
+        .unwrap();
+    let mut session_turns: Vec<Json> = Vec::new();
+    for (gap, (delta, adapter, gen, append)) in acceptance_turns(vocab).into_iter().enumerate() {
+        let adapter_field = match adapter {
+            None => "null".to_string(),
+            Some(a) => format!("\"{a}\""),
+        };
+        let body = format!(
+            r#"{{"tokens": {}, "adapter": {adapter_field}, "max_new_tokens": {gen}, "append": {append}}}"#,
+            tokens_json(&delta)
+        );
+        let r = post(srv_s.addr(), &format!("/v1/sessions/{sid}/turns"), &body);
+        assert!(r.contains("200 OK"), "{r}");
+        session_turns.push(body_json(&r));
+        if gap + 1 < 3 {
+            run_filler_http(srv_s.addr(), gap as u32);
+        }
+    }
+
+    // Replay server: identical workload as full-prompt /generate calls.
+    let mut srv_r = Server::start(engine_with(&cfg), "127.0.0.1:0").unwrap();
+    let mut history: Vec<u32> = Vec::new();
+    let mut replay: Vec<Json> = Vec::new();
+    for (gap, (delta, adapter, gen, append)) in acceptance_turns(vocab).into_iter().enumerate() {
+        let adapter_field = match adapter {
+            None => "null".to_string(),
+            Some(a) => format!("\"{a}\""),
+        };
+        let mut prompt = history.clone();
+        prompt.extend(&delta);
+        let body = format!(
+            r#"{{"prompt": {}, "adapter": {adapter_field}, "max_new_tokens": {gen}}}"#,
+            tokens_json(&prompt)
+        );
+        let r = post(srv_r.addr(), "/generate", &body);
+        assert!(r.contains("200 OK"), "{r}");
+        let j = body_json(&r);
+        if append {
+            history.extend(&delta);
+            let toks: Vec<u32> = j.get("tokens").and_then(Json::u32_vec).unwrap();
+            history.extend(&toks);
+        }
+        replay.push(j);
+        if gap + 1 < 3 {
+            run_filler_http(srv_r.addr(), gap as u32);
+        }
+    }
+
+    // Identical token streams (same ids, deterministic simulator).
+    for (s, r) in session_turns.iter().zip(&replay) {
+        assert_eq!(
+            s.get("tokens").and_then(Json::u32_vec),
+            r.get("tokens").and_then(Json::u32_vec)
+        );
+    }
+    // Strictly higher aggregate hit-rate through the session API.
+    let s_hit: f64 = session_turns
+        .iter()
+        .map(|t| t.get("cached_tokens").and_then(Json::as_f64).unwrap())
+        .sum();
+    let r_hit: f64 = replay
+        .iter()
+        .map(|o| {
+            // /generate reports the rate; prompt lengths match the
+            // session turns' (same workload).
+            o.get("cache_hit_rate").and_then(Json::as_f64).unwrap()
+        })
+        .sum();
+    assert!(s_hit >= 600.0, "leased chain survives over HTTP: {s_hit}");
+    assert_eq!(r_hit, 0.0, "replayed conversation fully evicted");
+    // Strictly lower mean TTFT.
+    let mean = |v: &[Json], key: &str| -> f64 {
+        v.iter().map(|j| j.get(key).and_then(Json::as_f64).unwrap()).sum::<f64>()
+            / v.len() as f64
+    };
+    let s_ttft = mean(&session_turns, "ttft_s");
+    let r_ttft = mean(&replay, "ttft_s");
+    assert!(
+        s_ttft < r_ttft,
+        "v1 sessions mean TTFT {s_ttft:.6}s must strictly beat /generate replay {r_ttft:.6}s"
+    );
+
+    // /metrics surfaces the per-turn series and lease gauges.
+    let m = http(srv_s.addr(), "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+    assert!(m.contains("alora_serve_turns_total 3"), "{m}");
+    assert!(m.contains("alora_serve_sessions_created_total 1"));
+    srv_s.shutdown();
+    srv_r.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: streamed token sequences are byte-identical.
+
+#[test]
+fn streamed_turns_byte_identical_to_non_streaming() {
+    // Two fresh identical servers run the same 3-turn session — one
+    // streaming, one not. Determinism + identical submission order means
+    // the streamed token events must reproduce the non-streaming arrays
+    // byte-for-byte.
+    let cfg = presets::granite_8b();
+    let vocab = cfg.model.vocab_size;
+    let mut srv_a = Server::start(engine_with(&cfg), "127.0.0.1:0").unwrap();
+    let mut srv_b = Server::start(engine_with(&cfg), "127.0.0.1:0").unwrap();
+    let sid_a = body_json(&post(srv_a.addr(), "/v1/sessions", "{}"))
+        .get("session")
+        .and_then(Json::as_u64)
+        .unwrap();
+    let sid_b = body_json(&post(srv_b.addr(), "/v1/sessions", "{}"))
+        .get("session")
+        .and_then(Json::as_u64)
+        .unwrap();
+
+    for (delta, adapter, gen, append) in acceptance_turns(vocab) {
+        let adapter_field = match adapter {
+            None => "null".to_string(),
+            Some(a) => format!("\"{a}\""),
+        };
+        let mk_body = |stream: bool| {
+            format!(
+                r#"{{"tokens": {}, "adapter": {adapter_field}, "max_new_tokens": {gen}, "append": {append}, "stream": {stream}}}"#,
+                tokens_json(&delta)
+            )
+        };
+        // Streaming on A.
+        let ra = post(srv_a.addr(), &format!("/v1/sessions/{sid_a}/turns"), &mk_body(true));
+        assert!(ra.contains("200 OK"), "{ra}");
+        assert!(ra.contains("Transfer-Encoding: chunked"), "{ra}");
+        let events = sse_events(&ra);
+        assert_eq!(events.first().map(|(e, _)| e.as_str()), Some("started"), "{ra}");
+        assert_eq!(events.last().map(|(e, _)| e.as_str()), Some("finished"));
+        let streamed: Vec<u32> = events
+            .iter()
+            .filter(|(e, _)| e == "token")
+            .map(|(_, d)| d.get("token").and_then(Json::as_u64).unwrap() as u32)
+            .collect();
+        assert_eq!(streamed.len(), gen as usize);
+        // Token event indices are 0..gen in order; clocks monotone.
+        let idxs: Vec<u64> = events
+            .iter()
+            .filter(|(e, _)| e == "token")
+            .map(|(_, d)| d.get("index").and_then(Json::as_u64).unwrap())
+            .collect();
+        assert_eq!(idxs, (0..gen as u64).collect::<Vec<_>>());
+        let finished = &events.last().unwrap().1;
+        assert_eq!(
+            finished.get("tokens").and_then(Json::u32_vec).unwrap(),
+            streamed,
+            "finished summary matches the streamed sequence"
+        );
+        // Non-streaming on B: byte-identical tokens.
+        let rb = post(srv_b.addr(), &format!("/v1/sessions/{sid_b}/turns"), &mk_body(false));
+        assert!(rb.contains("200 OK"), "{rb}");
+        let jb = body_json(&rb);
+        assert_eq!(
+            jb.get("tokens").and_then(Json::u32_vec).unwrap(),
+            streamed,
+            "streamed tokens byte-identical to the non-streaming output"
+        );
+        // The finished-event summary equals the non-streaming body.
+        assert_eq!(finished, &jb);
+    }
+
+    // Both sessions accumulated the same history.
+    let ga = body_json(&request(srv_a.addr(), "GET", &format!("/v1/sessions/{sid_a}"), ""));
+    let gb = body_json(&request(srv_b.addr(), "GET", &format!("/v1/sessions/{sid_b}"), ""));
+    assert_eq!(
+        ga.get("tokens").and_then(Json::u32_vec),
+        gb.get("tokens").and_then(Json::u32_vec)
+    );
+    srv_a.shutdown();
+    srv_b.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: legacy endpoints stay bit-identical.
+
+#[test]
+fn legacy_generate_and_pipeline_bit_identical() {
+    let cfg = presets::granite_8b();
+    // /generate: the HTTP body must equal the legacy wire shape built
+    // from an identical direct-engine run (same ids, same virtual
+    // timeline — the server adds no work before the submission).
+    let mut srv = Server::start(engine_with(&cfg), "127.0.0.1:0").unwrap();
+    let prompt: Vec<u32> = (0..64).collect();
+    let body = format!(r#"{{"prompt": {}, "max_new_tokens": 4}}"#, tokens_json(&prompt));
+    let r = post(srv.addr(), "/generate", &body);
+    assert!(r.contains("200 OK"), "{r}");
+    let served = r.lines().last().unwrap().to_string();
+    srv.shutdown();
+
+    let mut e = engine_with(&cfg);
+    let id = e
+        .submit(
+            ModelTarget::Base,
+            prompt,
+            SamplingParams { max_new_tokens: 4, ..Default::default() },
+        )
+        .unwrap();
+    let out = e.run_to_completion(id);
+    let expected = Json::obj(vec![
+        ("id", Json::num(out.id.0 as f64)),
+        (
+            "tokens",
+            Json::Arr(out.output_tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        ("e2e_s", Json::num(out.timeline.e2e())),
+        ("ttft_s", Json::num(out.timeline.ttft())),
+        ("itl_s", Json::num(out.itl())),
+        ("cache_hit_rate", Json::num(out.cache_hit_rate())),
+        ("preemptions", Json::num(out.preemptions as f64)),
+    ])
+    .to_string();
+    assert_eq!(served, expected, "legacy /generate response drifted");
+
+    // /pipeline: a linear chain (parent completion idles the engine, so
+    // chaining time is deterministic) must serve exactly what a direct
+    // event-drive of the same graph produces.
+    let p128: Vec<u32> = (0..128).collect();
+    let spec_body = format!(
+        r#"{{"stages": [
+            {{"name": "draft", "gen": 8, "prompt": [{}]}},
+            {{"name": "check", "adapter": "alora-0", "gen": 4, "invoke": true,
+              "prompt": [{{"prompt_of": "draft"}}, {{"output_of": "draft"}}]}},
+            {{"name": "final", "gen": 4,
+              "prompt": [{{"prompt_of": "check"}}, {{"output_of": "check"}}]}}
+        ]}}"#,
+        tokens_json(&p128)
+    );
+    let mut srv = Server::start(engine_with(&cfg), "127.0.0.1:0").unwrap();
+    let r = post(srv.addr(), "/pipeline", &spec_body);
+    assert!(r.contains("200 OK"), "{r}");
+    let served = r.lines().last().unwrap().to_string();
+    srv.shutdown();
+
+    let mut e = engine_with(&cfg);
+    let graph = {
+        let j = Json::parse(&spec_body).unwrap();
+        spec::graph_from_json(&j, &e.registry).unwrap()
+    };
+    let result = Coordinator::run_event(&mut e, vec![graph], &[0.0]).unwrap();
+    let expected = spec::result_to_json(&result).to_string();
+    assert_eq!(served, expected, "legacy /pipeline response drifted");
+}
+
+// ---------------------------------------------------------------------------
+// Satellite: session tenant isolation over HTTP.
+
+#[test]
+fn session_tenant_isolation_over_http() {
+    let cfg = presets::granite_8b();
+    let mut srv = Server::start(engine_with(&cfg), "127.0.0.1:0").unwrap();
+    let create = |salt: &str| {
+        body_json(&post(srv.addr(), "/v1/sessions", &format!(r#"{{"cache_salt": {salt}}}"#)))
+            .get("session")
+            .and_then(Json::as_u64)
+            .unwrap()
+    };
+    let a = create("\"tenant-a\"");
+    let b = create("\"tenant-b\"");
+    let a2 = create("\"tenant-a\"");
+    let prompt: Vec<u32> = (0..128).collect();
+    let turn = |sid: u64| {
+        let body = format!(r#"{{"tokens": {}, "max_new_tokens": 4}}"#, tokens_json(&prompt));
+        let r = post(srv.addr(), &format!("/v1/sessions/{sid}/turns"), &body);
+        assert!(r.contains("200 OK"), "{r}");
+        body_json(&r).get("cached_tokens").and_then(Json::as_u64).unwrap()
+    };
+    assert_eq!(turn(a), 0, "cold tenant A");
+    assert_eq!(turn(b), 0, "tenant B must never hit tenant A's blocks");
+    assert!(turn(a2) > 0, "same-tenant session shares the tenant's prefix");
+    srv.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Satellite: session lifecycle + error envelope over the v1 surface.
+
+#[test]
+fn session_lifecycle_document_and_errors() {
+    let cfg = presets::granite_8b();
+    let mut srv = Server::start(engine_with(&cfg), "127.0.0.1:0").unwrap();
+    let addr = srv.addr();
+
+    // Create + one turn.
+    let sid = body_json(&post(addr, "/v1/sessions", "{}"))
+        .get("session")
+        .and_then(Json::as_u64)
+        .unwrap();
+    let delta: Vec<u32> = (0..64).collect();
+    let r = post(
+        addr,
+        &format!("/v1/sessions/{sid}/turns"),
+        &format!(r#"{{"tokens": {}, "max_new_tokens": 8}}"#, tokens_json(&delta)),
+    );
+    assert!(r.contains("200 OK"), "{r}");
+    let turn = body_json(&r);
+    let out_tokens = turn.get("tokens").and_then(Json::u32_vec).unwrap();
+
+    // The session document reconstructs the conversation.
+    let doc = body_json(&request(addr, "GET", &format!("/v1/sessions/{sid}"), ""));
+    assert_eq!(doc.get("history_len").and_then(Json::as_u64), Some(72));
+    let mut expect = delta.clone();
+    expect.extend(&out_tokens);
+    assert_eq!(doc.get("tokens").and_then(Json::u32_vec).unwrap(), expect);
+    assert_eq!(doc.get("turns").and_then(Json::as_arr).unwrap().len(), 1);
+    assert!(doc.get("leased_blocks").and_then(Json::as_u64).unwrap() > 0);
+    assert_eq!(doc.get("in_flight").and_then(Json::as_bool), Some(false));
+    // The listing shows it.
+    let list = body_json(&request(addr, "GET", "/v1/sessions", ""));
+    assert_eq!(list.get("count").and_then(Json::as_u64), Some(1));
+
+    // Error paths: unknown session (GET / POST / DELETE), unknown
+    // adapter, malformed turn body — all structured envelopes.
+    let assert_code = |resp: &str, status: &str, code: &str| {
+        assert!(resp.contains(status), "{resp}");
+        let j = body_json(resp);
+        assert_eq!(
+            j.get("error").unwrap().get("code").and_then(Json::as_str),
+            Some(code),
+            "{resp}"
+        );
+    };
+    assert_code(&request(addr, "GET", "/v1/sessions/999", ""), "404", "session_not_found");
+    assert_code(
+        &post(addr, "/v1/sessions/999/turns", r#"{"tokens": [1]}"#),
+        "404",
+        "session_not_found",
+    );
+    assert_code(&request(addr, "DELETE", "/v1/sessions/999", ""), "404", "session_not_found");
+    assert_code(
+        &post(addr, &format!("/v1/sessions/{sid}/turns"), r#"{"tokens": [1], "adapter": "ghost"}"#),
+        "404",
+        "unknown_adapter",
+    );
+    assert_code(
+        &post(addr, &format!("/v1/sessions/{sid}/turns"), r#"{"tokens": "nope"}"#),
+        "400",
+        "invalid_request",
+    );
+    assert_code(&post(addr, &format!("/v1/sessions/{sid}/turns"), "{not json"), "400", "invalid_json");
+    assert_code(&post(addr, &format!("/v1/sessions/{sid}/turns"), ""), "400", "missing_body");
+    // An empty first... an empty turn on a session WITH history is legal
+    // ("continue generating"); on a fresh session it is not.
+    let fresh = body_json(&post(addr, "/v1/sessions", "{}"))
+        .get("session")
+        .and_then(Json::as_u64)
+        .unwrap();
+    assert_code(
+        &post(addr, &format!("/v1/sessions/{fresh}/turns"), r#"{"max_new_tokens": 4}"#),
+        "400",
+        "invalid_request",
+    );
+
+    // Delete releases the lease and removes the session.
+    let d = body_json(&request(addr, "DELETE", &format!("/v1/sessions/{sid}"), ""));
+    assert_eq!(d.get("deleted").and_then(Json::as_u64), Some(sid));
+    assert_eq!(d.get("turns").and_then(Json::as_u64), Some(1));
+    assert_code(&request(addr, "GET", &format!("/v1/sessions/{sid}"), ""), "404", "session_not_found");
+    let m = http(addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+    assert!(m.contains("alora_serve_leased_blocks 0"), "{m}");
+    assert!(m.contains("alora_serve_sessions_closed_total 1"), "{m}");
+    srv.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Satellite: the streaming smoke `make server-smoke` runs — session
+// create → 3 streaming delta turns → delete.
+
+#[test]
+fn streaming_smoke_session_lifecycle() {
+    let cfg = presets::granite_8b();
+    let mut srv = Server::start(engine_with(&cfg), "127.0.0.1:0").unwrap();
+    let addr = srv.addr();
+    let sid = body_json(&post(addr, "/v1/sessions", r#"{"cache_salt": "smoke"}"#))
+        .get("session")
+        .and_then(Json::as_u64)
+        .unwrap();
+    let mut prev_cached = None;
+    for t in 0..3u32 {
+        let delta: Vec<u32> = (t * 100..t * 100 + 48).collect();
+        let body = format!(
+            r#"{{"tokens": {}, "max_new_tokens": 8, "stream": true}}"#,
+            tokens_json(&delta)
+        );
+        let r = post(addr, &format!("/v1/sessions/{sid}/turns"), &body);
+        assert!(r.contains("200 OK"), "turn {t}: {r}");
+        let events = sse_events(&r);
+        let names: Vec<&str> = events.iter().map(|(e, _)| e.as_str()).collect();
+        assert_eq!(names.first(), Some(&"started"), "turn {t}: {names:?}");
+        assert_eq!(names.last(), Some(&"finished"));
+        assert_eq!(names.iter().filter(|n| **n == "token").count(), 8);
+        let fin = &events.last().unwrap().1;
+        assert_eq!(fin.get("turn").and_then(Json::as_u64), Some(t as u64));
+        let cached = fin.get("cached_tokens").and_then(Json::as_u64).unwrap();
+        if let Some(prev) = prev_cached {
+            assert!(cached > prev, "turn {t} must extend the warm chain");
+        }
+        prev_cached = Some(cached);
+    }
+    let d = request(addr, "DELETE", &format!("/v1/sessions/{sid}"), "");
+    assert!(d.contains("200 OK"), "{d}");
+    let m = http(addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+    assert!(m.contains("alora_serve_turns_total 3"), "{m}");
+    assert!(m.contains("alora_serve_stream_subscriptions_total 3"), "{m}");
+    assert!(m.contains("alora_serve_stream_token_events_total 24"), "{m}");
+    srv.shutdown();
+}
