@@ -35,11 +35,13 @@ clippy:
 bench:
 	cargo bench --bench bench_hotpath
 
-# Fast end-to-end smoke over the fleet + memory-budget paths: the cluster
-# bench on its quick grid and the adapter-memory figure in quick mode.
+# Fast end-to-end smoke over the fleet + memory-budget + failover paths:
+# the cluster bench on its quick grid, the adapter-memory figure, and the
+# failover figure (kill 1 of 4 replicas mid-burst) in quick mode.
 bench-smoke:
 	cargo bench --bench bench_cluster -- --quick
 	cargo run --release -- figure --id adapter_memory --quick
+	cargo run --release -- figure --id failover --quick
 
 # HTTP surface smoke (mirrors the CI step): the HTTP integration suite
 # plus the v1 sessions suite, which includes the streaming smoke

@@ -35,7 +35,12 @@ fn main() {
         black_box(summary.matching_prefix(&chain))
     }));
     let views: Vec<ReplicaView> = (0..8)
-        .map(|i| ReplicaView { load: i, affinity_blocks: 256 - i, adapter_blocks: 0 })
+        .map(|i| ReplicaView {
+            load: i,
+            affinity_blocks: 256 - i,
+            adapter_blocks: 0,
+            healthy: true,
+        })
         .collect();
     let mut router = Router::new(
         RouterConfig { policy: RoutePolicy::PrefixAffinity, ..Default::default() },

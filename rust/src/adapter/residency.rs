@@ -259,6 +259,17 @@ impl AdapterResidency {
         }
     }
 
+    /// Evict every idle resident (replica failover: the device's weight
+    /// pages are gone; the caller has already released all refs). Returns
+    /// adapters evicted.
+    pub fn evict_all_idle(&mut self, kv: &mut KvCacheManager) -> usize {
+        let mut n = 0;
+        while self.evict_one_idle(kv) {
+            n += 1;
+        }
+        n
+    }
+
     /// Count one scheduler step that stalled admission on a failed load.
     pub fn note_stall(&mut self) {
         if self.enabled {

@@ -22,6 +22,15 @@
 //! Request ids are fleet-unique by construction: replica i issues ids
 //! `i, i+n, i+2n, ...` (see [`Engine::set_id_namespace`]), so finished
 //! outputs flow back through the uniform interface untranslated.
+//!
+//! Replicas are not assumed immortal: [`Cluster::fail_replica`] /
+//! [`Cluster::drain_replica`] / [`Cluster::restore_replica`] move them
+//! through [`ReplicaHealth`] states. The router excludes everything but
+//! `Up`; failing a replica evacuates its queued work and requeues it
+//! onto survivors under the SAME ids (continuation priority) while its
+//! leases orphan and its cache is wiped (restore = cold start). The
+//! [`FailoverReport`] hands the serving layer what it needs to repair
+//! affected sessions (DESIGN.md §15).
 
 pub mod router;
 
@@ -29,16 +38,88 @@ pub use router::{Placement, PlacementKind, ReplicaView, RoutePolicy, Router, Rou
 
 use crate::adapter::AdapterRegistry;
 use crate::config::EngineConfig;
-use crate::engine::{Engine, EngineDriver, Executor};
+use crate::engine::{Engine, EngineDriver, EvacuatedRequest, Executor};
 use crate::kvcache::block::BlockHash;
 use crate::kvcache::prefix::{block_hashes, HashContext};
 use crate::metrics::{Metrics, RoutingMetrics};
 use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams, TurnEvent};
+use crate::util::fxmap::FxHashMap;
 use crate::util::json::Json;
+
+/// One replica's serving state. Routing excludes everything but `Up`;
+/// the difference between the other two is what happens to work already
+/// on the replica: `Draining` finishes it (planned maintenance), `Down`
+/// lost it (the failover path evacuated and requeued it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaHealth {
+    Up,
+    Draining,
+    Down,
+}
+
+impl ReplicaHealth {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplicaHealth::Up => "up",
+            ReplicaHealth::Draining => "draining",
+            ReplicaHealth::Down => "down",
+        }
+    }
+}
+
+/// What one `fail_replica` did — the serving layer feeds this to
+/// [`crate::session::SessionManager::repair_after_failover`] so sessions
+/// whose state died with the replica recover transparently.
+#[derive(Debug, Clone)]
+pub struct FailoverReport {
+    pub replica: usize,
+    pub num_replicas: usize,
+    /// Requests requeued onto survivors (same fleet-unique ids).
+    pub requeued: usize,
+    /// Lease keys (session ids) whose pinned prefix died with the replica.
+    pub orphaned_leases: Vec<u64>,
+    /// Evacuated requests no survivor would accept — dropped; they will
+    /// never produce an output, so their sessions' turns must be aborted.
+    pub rejected: Vec<RequestId>,
+    /// Ids that moved to a survivor (subset bookkeeping for `strands`).
+    pub relocated: Vec<RequestId>,
+}
+
+impl FailoverReport {
+    /// Did this request's home — its output, its committed blocks — die
+    /// with the failed replica? True for ids constructed on the victim
+    /// and not relocated by THIS failover. (An id re-homed by an earlier
+    /// failover can answer true conservatively; the only cost is one
+    /// policy-routed — i.e. cold-capable — turn.)
+    pub fn strands(&self, id: RequestId) -> bool {
+        (id.0 % self.num_replicas as u64) as usize == self.replica
+            && !self.relocated.contains(&id)
+    }
+}
+
+/// Cap on remembered failover re-homes. The map cannot be pruned
+/// precisely (a session's stickiness peer may be consulted long after
+/// its output drained), so it is bounded FIFO instead: past the cap the
+/// OLDEST re-home is forgotten and that id resolves back to its `id % n`
+/// partition — for stickiness the health check degrades that to one
+/// policy-routed (possibly cold) turn. Re-relocation refreshes an id's
+/// age, so forgetting a STILL-RUNNING request's re-home would take 4096
+/// newer requeues landing within its lifetime.
+const MAX_RELOCATIONS: usize = 4096;
 
 pub struct Cluster<E: Executor> {
     replicas: Vec<Engine<E>>,
     router: Router,
+    /// Per-replica serving state; routing only sees `Up` replicas.
+    health: Vec<ReplicaHealth>,
+    /// Failover re-homes: request id → replica it was requeued onto.
+    /// Overrides the construction-time `id % n` mapping for stickiness,
+    /// leases, and event routing. Bounded by [`MAX_RELOCATIONS`]
+    /// (FIFO, `relocation_order`).
+    relocated: FxHashMap<RequestId, usize>,
+    /// Insertion order of `relocated` entries (front = oldest = first
+    /// forgotten past the cap).
+    relocation_order: std::collections::VecDeque<RequestId>,
     /// Fleet-level registry: the coordinator's per-stage series land here;
     /// `/metrics` renders this merged with every replica's counters.
     metrics: Metrics,
@@ -48,6 +129,8 @@ pub struct Cluster<E: Executor> {
 #[derive(Debug, Clone)]
 pub struct ReplicaStats {
     pub replica: usize,
+    /// Serving state: "up", "draining", or "down".
+    pub health: &'static str,
     pub clock: f64,
     pub running: usize,
     pub waiting: usize,
@@ -137,6 +220,10 @@ impl ClusterStats {
                     ("affinity_hits", Json::num(self.routing.affinity_hits as f64)),
                     ("affinity_fallbacks", Json::num(self.routing.affinity_fallbacks as f64)),
                     ("sticky_routed", Json::num(self.routing.sticky_routed as f64)),
+                    ("replica_failures", Json::num(self.routing.replica_failures as f64)),
+                    ("requeued_requests", Json::num(self.routing.requeued_requests as f64)),
+                    ("orphaned_leases", Json::num(self.routing.orphaned_leases as f64)),
+                    ("resticks", Json::num(self.routing.resticks as f64)),
                     ("imbalance", Json::num(self.routing.imbalance())),
                 ]),
             ),
@@ -148,6 +235,7 @@ impl ClusterStats {
                         .map(|r| {
                             Json::obj(vec![
                                 ("replica", Json::num(r.replica as f64)),
+                                ("health", Json::str(r.health)),
                                 ("clock_s", Json::num(r.clock)),
                                 ("running", Json::num(r.running as f64)),
                                 ("waiting", Json::num(r.waiting as f64)),
@@ -221,7 +309,14 @@ impl<E: Executor> Cluster<E> {
             r.set_id_namespace(i as u64, n as u64);
         }
         let router = Router::new(rcfg, n);
-        Ok(Cluster { replicas, router, metrics: Metrics::new() })
+        Ok(Cluster {
+            replicas,
+            router,
+            health: vec![ReplicaHealth::Up; n],
+            relocated: FxHashMap::default(),
+            relocation_order: std::collections::VecDeque::new(),
+            metrics: Metrics::new(),
+        })
     }
 
     /// Build `n` identical replicas from a factory.
@@ -243,6 +338,168 @@ impl<E: Executor> Cluster<E> {
 
     pub fn router(&self) -> &Router {
         &self.router
+    }
+
+    pub fn health(&self, i: usize) -> ReplicaHealth {
+        self.health[i]
+    }
+
+    /// Replicas accepting new placements.
+    pub fn num_healthy(&self) -> usize {
+        self.health.iter().filter(|h| **h == ReplicaHealth::Up).count()
+    }
+
+    /// The replica holding `id`'s state: its failover re-home if it was
+    /// requeued, else the construction-time partition (`id % n`).
+    fn replica_of(&self, id: RequestId) -> usize {
+        self.relocated
+            .get(&id)
+            .copied()
+            .unwrap_or((id.0 % self.replicas.len() as u64) as usize)
+    }
+
+    /// Mark replica `i` failed: its queued work is evacuated and requeued
+    /// onto healthy survivors (same fleet-unique ids, continuation
+    /// priority — callers blocked on a `RequestId` still get their
+    /// output), its leases are orphaned, and its cache is wiped (a later
+    /// [`Self::restore_replica`] starts cold). Finished-but-undrained
+    /// outputs survive: the completion ledger is serving-layer state, not
+    /// device memory. Refuses to take down the last healthy replica —
+    /// there would be no survivor to requeue onto.
+    pub fn fail_replica(&mut self, i: usize) -> anyhow::Result<FailoverReport> {
+        anyhow::ensure!(i < self.replicas.len(), "no replica {i}");
+        anyhow::ensure!(
+            self.health[i] != ReplicaHealth::Down,
+            "replica {i} is already down"
+        );
+        let survivors = (0..self.replicas.len())
+            .filter(|&j| j != i && self.health[j] == ReplicaHealth::Up)
+            .count();
+        anyhow::ensure!(
+            survivors > 0,
+            "cannot fail replica {i}: no healthy survivor to requeue onto"
+        );
+        self.health[i] = ReplicaHealth::Down;
+        self.router.stats.replica_failures += 1;
+        let evacuated = self.replicas[i].evacuate_requests();
+        let orphaned_leases = self.replicas[i].fail_storage();
+        self.router.stats.orphaned_leases += orphaned_leases.len() as u64;
+        let mut report = FailoverReport {
+            replica: i,
+            num_replicas: self.replicas.len(),
+            requeued: 0,
+            orphaned_leases,
+            rejected: Vec::new(),
+            relocated: Vec::new(),
+        };
+        // Reverse order: requeued requests enqueue with continuation
+        // priority (push-front), so per survivor the LAST submission ends
+        // up first — reversing the FCFS evacuation order here restores it
+        // on every survivor's queue.
+        for ev in evacuated.into_iter().rev() {
+            let id = ev.id;
+            match self.requeue(ev) {
+                Ok(ri) => {
+                    report.requeued += 1;
+                    report.relocated.push(id);
+                    self.note_relocation(id, ri);
+                }
+                Err(ev) => {
+                    // Nobody took it: the request is lost — but it WAS
+                    // received, so re-credit the victim's rolled-back
+                    // counters (evacuation assumed a survivor would
+                    // re-count them) to keep the fleet aggregate at
+                    // exactly one per request.
+                    let r = &mut self.replicas[i];
+                    r.metrics.requests_received += 1;
+                    r.metrics.prompt_tokens += ev.prompt.len() as u64;
+                    report.rejected.push(id);
+                }
+            }
+        }
+        Ok(report)
+    }
+
+    /// Record a failover re-home, evicting the oldest entry past the cap
+    /// (see [`MAX_RELOCATIONS`] for the degradation semantics). A
+    /// re-relocated id (its survivor failed too) moves to the BACK of the
+    /// order — its freshest re-home is also its freshest fact, and must
+    /// not be the first forgotten.
+    fn note_relocation(&mut self, id: RequestId, ri: usize) {
+        if self.relocated.insert(id, ri).is_some() {
+            self.relocation_order.retain(|x| *x != id);
+        }
+        self.relocation_order.push_back(id);
+        if self.relocation_order.len() > MAX_RELOCATIONS {
+            if let Some(old) = self.relocation_order.pop_front() {
+                self.relocated.remove(&old);
+            }
+        }
+    }
+
+    /// Route one evacuated request onto a healthy survivor, trying the
+    /// router's pick first and every other healthy replica after it (an
+    /// identically-configured survivor re-accepts anything it admitted
+    /// before, so fallbacks only matter for exotic third-party states).
+    /// Err returns the request when nobody took it (the caller reports
+    /// it rejected and re-credits the victim's counters).
+    fn requeue(&mut self, ev: EvacuatedRequest) -> Result<usize, EvacuatedRequest> {
+        let (views, chain) = self.views_for(ev.target, &ev.prompt, ev.cache_salt);
+        let placement = self.router.choose(&views);
+        let now = self.clock();
+        let mut order = vec![placement.replica];
+        order.extend(
+            (0..self.replicas.len())
+                .filter(|&j| j != placement.replica && self.health[j] == ReplicaHealth::Up),
+        );
+        for (attempt, &ri) in order.iter().enumerate() {
+            let r = &mut self.replicas[ri];
+            if !r.has_work() && r.clock() < now {
+                r.advance_clock_to(now);
+            }
+            if r.submit_evacuated(ev.clone(), chain.clone()).is_ok() {
+                if attempt == 0 {
+                    self.router.record(placement);
+                } else {
+                    self.router.stats.routed[ri] += 1;
+                }
+                self.router.stats.requeued_requests += 1;
+                return Ok(ri);
+            }
+        }
+        Err(ev)
+    }
+
+    /// Begin draining replica `i`: the router stops placing new work on
+    /// it (sticky turns re-stick through the policy) while its in-flight
+    /// and waiting work runs to completion — planned maintenance, nothing
+    /// is lost. Refuses to drain the last healthy replica.
+    pub fn drain_replica(&mut self, i: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(i < self.replicas.len(), "no replica {i}");
+        anyhow::ensure!(
+            self.health[i] == ReplicaHealth::Up,
+            "replica {i} is {} (only an up replica can drain)",
+            self.health[i].name()
+        );
+        anyhow::ensure!(
+            self.num_healthy() > 1,
+            "cannot drain replica {i}: it is the last healthy replica"
+        );
+        self.health[i] = ReplicaHealth::Draining;
+        Ok(())
+    }
+
+    /// Bring replica `i` back into rotation. A previously failed replica
+    /// returns cold (its cache was wiped at failure); a drained one
+    /// returns exactly as it was.
+    pub fn restore_replica(&mut self, i: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(i < self.replicas.len(), "no replica {i}");
+        anyhow::ensure!(
+            self.health[i] != ReplicaHealth::Up,
+            "replica {i} is already up"
+        );
+        self.health[i] = ReplicaHealth::Up;
+        Ok(())
     }
 
     /// Token-weighted prefix hit rate across the fleet (sums the per-
@@ -309,7 +566,9 @@ impl<E: Executor> Cluster<E> {
                 .replicas
                 .iter()
                 .enumerate()
-                .map(|(i, r)| replica_stats(i, r, self.router.stats.routed[i]))
+                .map(|(i, r)| {
+                    replica_stats(i, r, self.router.stats.routed[i], self.health[i].name())
+                })
                 .collect(),
             routing: self.router.stats.clone(),
             aggregate_hit_rate: self.aggregate_hit_rate(),
@@ -361,7 +620,8 @@ impl<E: Executor> Cluster<E> {
         let views = self
             .replicas
             .iter()
-            .map(|r| ReplicaView {
+            .enumerate()
+            .map(|(i, r)| ReplicaView {
                 load: r.num_running() + r.num_waiting(),
                 affinity_blocks: if chain.is_empty() {
                     0
@@ -375,6 +635,7 @@ impl<E: Executor> Cluster<E> {
                     .adapter()
                     .map(|aid| r.adapter_affinity_blocks(aid))
                     .unwrap_or(0),
+                healthy: self.health[i] == ReplicaHealth::Up,
             })
             .collect();
         (views, chain)
@@ -398,9 +659,15 @@ fn config_summary(cfg: &EngineConfig) -> ReplicaConfigSummary {
 
 /// One engine's stats row, shared by the fleet snapshot and the
 /// single-engine `GET /cluster` document.
-fn replica_stats<E: Executor>(i: usize, r: &Engine<E>, routed: u64) -> ReplicaStats {
+fn replica_stats<E: Executor>(
+    i: usize,
+    r: &Engine<E>,
+    routed: u64,
+    health: &'static str,
+) -> ReplicaStats {
     ReplicaStats {
         replica: i,
+        health,
         clock: r.clock(),
         running: r.num_running(),
         waiting: r.num_waiting(),
@@ -427,7 +694,7 @@ pub fn single_engine_stats<E: Executor>(e: &Engine<E>) -> ClusterStats {
     ClusterStats {
         policy: "single",
         config: config_summary(&e.cfg),
-        replicas: vec![replica_stats(0, e, e.metrics.requests_received)],
+        replicas: vec![replica_stats(0, e, e.metrics.requests_received, "up")],
         routing,
         aggregate_hit_rate: e.kv_stats().hit_rate(),
         aggregate_adapter_hit_rate: e.residency().stats().hit_rate(),
@@ -443,6 +710,10 @@ impl<E: Executor> EngineDriver for Cluster<E> {
         priority: bool,
         cache_salt: u64,
     ) -> anyhow::Result<RequestId> {
+        anyhow::ensure!(
+            self.num_healthy() > 0,
+            "no healthy replicas: the whole fleet is down or draining"
+        );
         let (views, chain) = self.views_for(target, &prompt, cache_salt);
         let placement = self.router.choose(&views);
         let now = self.clock();
@@ -467,9 +738,13 @@ impl<E: Executor> EngineDriver for Cluster<E> {
 
     /// Session stickiness: a conversation turn lands on the replica that
     /// ran its previous turn — `peer`'s replica is a construction-time
-    /// fact (ids are partitioned `replica = id % n`), so no summary
-    /// scoring is needed and the warm prefix is guaranteed co-located.
-    /// First turns (no peer) fall through to the routing policy.
+    /// fact (ids are partitioned `replica = id % n`, overridden by the
+    /// failover re-home map), so no summary scoring is needed and the
+    /// warm prefix is guaranteed co-located. First turns (no peer) fall
+    /// through to the routing policy; so does a turn whose replica is
+    /// down or draining — the conversation re-sticks wherever its chain
+    /// scores best (PrefixAffinity finds any surviving copy; cold via the
+    /// least-loaded fallback if nothing survives), counted as a re-stick.
     fn submit_sticky(
         &mut self,
         target: ModelTarget,
@@ -482,7 +757,11 @@ impl<E: Executor> EngineDriver for Cluster<E> {
         let Some(peer) = peer else {
             return self.submit_salted(target, prompt, params, priority, cache_salt);
         };
-        let ri = (peer.0 % self.replicas.len() as u64) as usize;
+        let ri = self.replica_of(peer);
+        if self.health[ri] != ReplicaHealth::Up {
+            self.router.stats.resticks += 1;
+            return self.submit_salted(target, prompt, params, priority, cache_salt);
+        }
         let now = self.clock();
         let r = &mut self.replicas[ri];
         // Same idle-clock sync as routed submission: the turn arrives at
@@ -496,12 +775,12 @@ impl<E: Executor> EngineDriver for Cluster<E> {
     }
 
     fn watch(&mut self, id: RequestId) {
-        let ri = (id.0 % self.replicas.len() as u64) as usize;
+        let ri = self.replica_of(id);
         self.replicas[ri].watch(id);
     }
 
     fn unwatch(&mut self, id: RequestId) {
-        let ri = (id.0 % self.replicas.len() as u64) as usize;
+        let ri = self.replica_of(id);
         self.replicas[ri].unwatch(id);
     }
 
@@ -514,11 +793,12 @@ impl<E: Executor> EngineDriver for Cluster<E> {
     }
 
     /// The lease lives where the blocks live: on `peer`'s replica (the
-    /// turn that just committed the chain there). Any stale copy of the
-    /// lease on other replicas — a conversation can in principle migrate
-    /// if its replica was reassigned — is released first, so exactly one
-    /// replica ever pins a session's chain. No peer = no turn has run =
-    /// nothing to pin.
+    /// turn that just committed the chain there, located through the
+    /// failover re-home map). Any stale copy of the lease on other
+    /// replicas — a conversation migrates when its replica fails or
+    /// drains — is released first, so exactly one replica ever pins a
+    /// session's chain. No peer = no turn has run = nothing to pin; a
+    /// down peer replica = the blocks are gone = nothing to pin either.
     fn acquire_lease(
         &mut self,
         lease: u64,
@@ -527,11 +807,14 @@ impl<E: Executor> EngineDriver for Cluster<E> {
         peer: Option<RequestId>,
     ) -> usize {
         let Some(peer) = peer else { return 0 };
-        let ri = (peer.0 % self.replicas.len() as u64) as usize;
+        let ri = self.replica_of(peer);
         for (i, r) in self.replicas.iter_mut().enumerate() {
             if i != ri {
                 r.release_prefix_lease(lease);
             }
+        }
+        if self.health[ri] == ReplicaHealth::Down {
+            return 0;
         }
         self.replicas[ri].lease_prefix(lease, tokens, cache_salt)
     }
@@ -542,11 +825,16 @@ impl<E: Executor> EngineDriver for Cluster<E> {
         }
     }
 
-    /// One fleet step: every replica with work advances by one batch (they
-    /// are parallel machines). False only when no replica progressed.
+    /// One fleet step: every live replica with work advances by one batch
+    /// (they are parallel machines). Down replicas never step — their
+    /// work was evacuated at failure, and a dead machine computes
+    /// nothing. False only when no replica progressed.
     fn step(&mut self) -> bool {
         let mut progressed = false;
-        for r in &mut self.replicas {
+        for (i, r) in self.replicas.iter_mut().enumerate() {
+            if self.health[i] == ReplicaHealth::Down {
+                continue;
+            }
             if r.has_work() {
                 progressed |= r.step();
             }
@@ -645,6 +933,22 @@ impl<E: Executor> EngineDriver for Cluster<E> {
 
     fn cluster_stats(&self) -> Option<ClusterStats> {
         Some(self.stats())
+    }
+
+    fn fail_replica(&mut self, i: usize) -> anyhow::Result<FailoverReport> {
+        Cluster::fail_replica(self, i)
+    }
+
+    fn drain_replica(&mut self, i: usize) -> anyhow::Result<()> {
+        Cluster::drain_replica(self, i)
+    }
+
+    fn restore_replica(&mut self, i: usize) -> anyhow::Result<()> {
+        Cluster::restore_replica(self, i)
+    }
+
+    fn note_resticks(&mut self, n: u64) {
+        self.router.stats.resticks += n;
     }
 }
 
@@ -885,6 +1189,213 @@ mod tests {
         mgr.delete(&mut c, sid).unwrap();
         assert_eq!(c.replica(0).leased_blocks(), 0);
         c.replica(0).check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fail_replica_requeues_in_flight_and_waiting_with_ids_preserved() {
+        let mut c = cluster(2, RoutePolicy::RoundRobin);
+        let p = SamplingParams { max_new_tokens: 8, ..Default::default() };
+        let mut ids = Vec::new();
+        for i in 0..6u32 {
+            ids.push(
+                c.submit(ModelTarget::Base, vec![10 + i; 64], p).unwrap(),
+            );
+        }
+        // Get replica 1's share in flight (prefilling/decoding), then
+        // kill it: ids 1, 3, 5 live there (RR interleave).
+        for _ in 0..2 {
+            c.step();
+        }
+        let report = c.fail_replica(1).unwrap();
+        assert_eq!(c.health(1), ReplicaHealth::Down);
+        assert_eq!(report.requeued, 3);
+        assert!(report.rejected.is_empty());
+        assert_eq!(c.router().stats.requeued_requests, 3);
+        assert_eq!(c.router().stats.replica_failures, 1);
+        assert_eq!(c.replica(1).num_running() + c.replica(1).num_waiting(), 0);
+        // Every caller still gets its output, under its original id.
+        c.run_until_idle();
+        let outs = c.take_finished();
+        let mut got: Vec<RequestId> = outs.iter().map(|o| o.id).collect();
+        got.sort();
+        assert_eq!(got, ids, "zero lost requests, fleet-unique ids preserved");
+        // The victim is cold and empty; the survivor holds all the state.
+        assert_eq!(c.replica(1).routing_summary().committed_blocks(), 0);
+        assert_eq!(c.replica(1).num_free_blocks(), c.replica(1).num_total_blocks());
+        c.replica(0).check_invariants().unwrap();
+        c.replica(1).check_invariants().unwrap();
+        // Fleet-wide received counter is not double-counted by the requeue.
+        assert_eq!(c.aggregate_metrics().requests_received, 6);
+        assert_eq!(c.aggregate_metrics().requests_finished, 6);
+    }
+
+    #[test]
+    fn health_transition_guards() {
+        let mut c = cluster(2, RoutePolicy::RoundRobin);
+        // Restore an up replica: refused.
+        assert!(c.restore_replica(0).unwrap_err().to_string().contains("already up"));
+        // Unknown replica index.
+        assert!(c.fail_replica(9).unwrap_err().to_string().contains("no replica 9"));
+        c.fail_replica(1).unwrap();
+        // Double fail refused; failing the last healthy refused.
+        assert!(c.fail_replica(1).unwrap_err().to_string().contains("already down"));
+        assert!(c
+            .fail_replica(0)
+            .unwrap_err()
+            .to_string()
+            .contains("no healthy survivor"));
+        assert!(c.drain_replica(0).unwrap_err().to_string().contains("last healthy"));
+        // Draining a down replica refused; restore brings it back up.
+        assert!(c.drain_replica(1).is_err());
+        c.restore_replica(1).unwrap();
+        assert_eq!(c.health(1), ReplicaHealth::Up);
+        // Now draining 0 works (1 is healthy again), and submissions
+        // avoid it.
+        c.drain_replica(0).unwrap();
+        let p = SamplingParams { max_new_tokens: 2, ..Default::default() };
+        for i in 0..3 {
+            c.submit(ModelTarget::Base, vec![i + 1; 32], p).unwrap();
+        }
+        assert_eq!(c.router().stats.routed, vec![0, 3], "drained replica excluded");
+        c.run_until_idle();
+    }
+
+    #[test]
+    fn drain_finishes_in_flight_work_before_exclusion() {
+        let mut c = cluster(2, RoutePolicy::RoundRobin);
+        let p = SamplingParams { max_new_tokens: 8, ..Default::default() };
+        let a = c.submit(ModelTarget::Base, vec![1; 64], p).unwrap(); // replica 0
+        let b = c.submit(ModelTarget::Base, vec![2; 64], p).unwrap(); // replica 1
+        c.step();
+        c.drain_replica(1).unwrap();
+        assert_eq!(c.health(1), ReplicaHealth::Draining);
+        // New traffic all lands on replica 0...
+        for i in 0..4 {
+            c.submit(ModelTarget::Base, vec![10 + i; 32], p).unwrap();
+        }
+        assert_eq!(c.router().stats.routed[1], 1, "no new placements while draining");
+        // ...while the draining replica still finishes its own request.
+        c.run_until_idle();
+        let outs = c.take_finished();
+        assert!(outs.iter().any(|o| o.id == a));
+        assert!(outs.iter().any(|o| o.id == b), "draining replica finished its work");
+        assert_eq!(c.replica(1).metrics.requests_finished, 1);
+        c.replica(1).check_invariants().unwrap();
+    }
+
+    #[test]
+    fn failed_replica_session_resticks_and_rebuilds_lease() {
+        let mut c = cluster(2, RoutePolicy::PrefixAffinity);
+        let mut mgr = crate::session::SessionManager::new();
+        let sid = mgr.create(0);
+        let t1 = mgr
+            .run_turn(&mut c, sid, ModelTarget::Base, (0..256).collect(), 16, true)
+            .unwrap();
+        assert_eq!(t1.cached_tokens, 0);
+        let home = (mgr.get(sid).unwrap().last_request.unwrap().0 % 2) as usize;
+        assert!(c.replica(home).leased_blocks() > 0);
+        // Kill the conversation's replica between turns: the lease
+        // orphans, the repair clears stickiness, and the next turn
+        // re-sticks cold on the survivor — recomputed tokens, no error.
+        let report = c.fail_replica(home).unwrap();
+        assert_eq!(report.requeued, 0, "nothing was in flight");
+        assert_eq!(report.orphaned_leases, vec![sid.0]);
+        let (leases, unstuck, aborted) = mgr.repair_after_failover(&mut c, &report);
+        assert_eq!((leases, unstuck, aborted), (1, 1, 0));
+        assert_eq!(mgr.get(sid).unwrap().leased_blocks, 0);
+        assert!(mgr.get(sid).unwrap().last_request.is_none());
+        assert_eq!(c.router().stats.resticks, 1);
+        let t2 = mgr
+            .run_turn(&mut c, sid, ModelTarget::Base, (900..932).collect(), 16, true)
+            .unwrap();
+        assert_eq!(t2.cached_tokens, 0, "chain transparently recomputed");
+        let survivor = 1 - home;
+        assert!(c.replica(survivor).leased_blocks() > 0, "lease rebuilt");
+        assert_eq!(c.router().stats.orphaned_leases, 1);
+        // Turn 3 is warm again on the survivor, sticky this time.
+        let t3 = mgr
+            .run_turn(&mut c, sid, ModelTarget::Base, (950..966).collect(), 16, true)
+            .unwrap();
+        assert!(t3.cached_tokens > 256, "re-warmed: {}", t3.cached_tokens);
+        assert_eq!(c.router().stats.sticky_routed, 1, "only the re-warmed turn stuck");
+        // The fleet document reports the failover activity alongside the
+        // per-replica health — not just Prometheus.
+        let j = c.stats().to_json().to_string();
+        assert!(j.contains("\"replica_failures\":1"), "{j}");
+        assert!(j.contains("\"orphaned_leases\":1"), "{j}");
+        assert!(j.contains("\"resticks\":1"), "{j}");
+        assert!(j.contains("\"health\":\"down\""), "{j}");
+        assert!(j.contains("\"health\":\"up\""), "{j}");
+        mgr.delete(&mut c, sid).unwrap();
+        c.replica(survivor).check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sticky_turn_to_draining_replica_resticks_via_policy() {
+        let mut c = cluster(2, RoutePolicy::PrefixAffinity);
+        let mut mgr = crate::session::SessionManager::new();
+        let sid = mgr.create(0);
+        mgr.run_turn(&mut c, sid, ModelTarget::Base, (0..256).collect(), 16, true)
+            .unwrap();
+        let home = (mgr.get(sid).unwrap().last_request.unwrap().0 % 2) as usize;
+        c.drain_replica(home).unwrap();
+        // The sticky peer is draining: the turn re-sticks via the policy.
+        // PrefixAffinity scores only healthy replicas, and the chain lives
+        // on the draining one — so the turn lands cold on the other.
+        let t2 = mgr
+            .run_turn(&mut c, sid, ModelTarget::Base, (900..932).collect(), 16, true)
+            .unwrap();
+        assert_eq!(c.router().stats.resticks, 1);
+        assert_eq!(c.router().stats.sticky_routed, 0);
+        assert_eq!(t2.cached_tokens, 0, "drained replica's cache unreachable");
+        // The lease moved: exactly one replica pins the chain, and it is
+        // the healthy one.
+        let healthy = 1 - home;
+        assert!(c.replica(healthy).leased_blocks() > 0);
+        assert_eq!(c.replica(home).leased_blocks(), 0, "stale lease released");
+        mgr.delete(&mut c, sid).unwrap();
+    }
+
+    #[test]
+    fn turn_metrics_counted_exactly_once_in_aggregate_and_scrape() {
+        // ISSUE-5 satellite: in cluster mode complete_turn records the
+        // turn series on the fleet registry while aggregate_metrics()
+        // absorbs fleet + every replica — samples must appear exactly
+        // once, and repeated aggregation must be idempotent.
+        let mut c = cluster(2, RoutePolicy::PrefixAffinity);
+        let mut mgr = crate::session::SessionManager::new();
+        let sid = mgr.create(0);
+        for t in 0..3u32 {
+            mgr.run_turn(
+                &mut c,
+                sid,
+                ModelTarget::Base,
+                (t * 100..t * 100 + 64).collect(),
+                8,
+                true,
+            )
+            .unwrap();
+        }
+        // The series lives on the fleet registry only — replicas carry none.
+        assert_eq!(c.metrics.turn.count(), 3);
+        assert!(c.replicas.iter().all(|r| r.metrics.turn.count() == 0));
+        let agg = c.aggregate_metrics();
+        assert_eq!(agg.turn.count(), 3, "each turn sampled exactly once");
+        assert_eq!(agg.requests_finished, 3);
+        // Idempotence: aggregating again yields the same counts (absorb
+        // never mutates the sources).
+        let agg2 = c.aggregate_metrics();
+        assert_eq!(agg2.turn.count(), 3);
+        assert_eq!(agg2.requests_finished, agg.requests_finished);
+        assert_eq!(agg2.all.count(), agg.all.count());
+        // The scrape renders the turn family exactly once, with the fleet
+        // count — not doubled by the aggregated (empty) registry's.
+        let prom = c.render_prometheus();
+        assert_eq!(prom.matches("# HELP alora_serve_turns_total").count(), 1);
+        assert!(prom.contains("alora_serve_turns_total 3"), "{prom}");
+        let prom2 = c.render_prometheus();
+        assert_eq!(prom, prom2, "scrape is idempotent");
+        mgr.delete(&mut c, sid).unwrap();
     }
 
     #[test]

@@ -67,6 +67,10 @@ pub struct ReplicaView {
     /// replica (0 for base requests, non-resident adapters, or when
     /// adapter paging is off — then every replica is equally "resident").
     pub adapter_blocks: usize,
+    /// False for down or draining replicas: every policy must skip them —
+    /// a draining replica still finishes its in-flight work but accepts
+    /// nothing new, a down replica holds nothing at all.
+    pub healthy: bool,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -116,9 +120,10 @@ fn least_loaded(views: &[ReplicaView]) -> usize {
     views
         .iter()
         .enumerate()
+        .filter(|(_, v)| v.healthy)
         .min_by_key(|(_, v)| v.load)
         .map(|(i, _)| i)
-        .expect("no replicas")
+        .expect("no healthy replicas")
 }
 
 impl Router {
@@ -138,15 +143,27 @@ impl Router {
     }
 
     /// Pick a replica for one request. Deterministic: ties always resolve
-    /// to the lowest index, so runs are reproducible. Does not touch the
-    /// exported stats (the round-robin cursor does advance); call
+    /// to the lowest index, so runs are reproducible. Unhealthy (down or
+    /// draining) replicas are excluded by every policy; the caller must
+    /// guarantee at least one healthy view. Does not touch the exported
+    /// stats (the round-robin cursor does advance); call
     /// [`Router::record`] after the submission succeeds.
     pub fn choose(&mut self, views: &[ReplicaView]) -> Placement {
-        assert!(!views.is_empty(), "routing over zero replicas");
+        assert!(
+            views.iter().any(|v| v.healthy),
+            "routing over zero healthy replicas"
+        );
         match self.cfg.policy {
             RoutePolicy::RoundRobin => {
-                let i = self.rr_next % views.len();
-                self.rr_next += 1;
+                // Advance the cursor past unhealthy replicas (at most one
+                // full lap — at least one view is healthy).
+                let i = loop {
+                    let i = self.rr_next % views.len();
+                    self.rr_next += 1;
+                    if views[i].healthy {
+                        break i;
+                    }
+                };
                 Placement { replica: i, kind: PlacementKind::Plain }
             }
             RoutePolicy::LeastLoaded => {
@@ -163,25 +180,31 @@ impl Router {
         }
     }
 
-    /// Shared affinity scaffold: maximize `value(view) - penalty × load`;
-    /// when no replica holds any value for the request (or the load
-    /// penalty steers it off every warm replica), fall back cold to
-    /// least-loaded. `Warm.blocks` reports the value actually landed on.
+    /// Shared affinity scaffold: maximize `value(view) - penalty × load`
+    /// over the healthy replicas; when no healthy replica holds any value
+    /// for the request (or the load penalty steers it off every warm
+    /// replica), fall back cold to least-loaded. `Warm.blocks` reports the
+    /// value actually landed on.
     fn affine_choose(
         &self,
         views: &[ReplicaView],
         value: impl Fn(&ReplicaView) -> usize,
     ) -> Placement {
-        let best = views.iter().map(&value).max().unwrap_or(0);
+        let best = views
+            .iter()
+            .filter(|v| v.healthy)
+            .map(&value)
+            .max()
+            .unwrap_or(0);
         if best == 0 {
             // Cold: nothing to gain anywhere, balance load.
             return Placement { replica: least_loaded(views), kind: PlacementKind::Cold };
         }
         let score =
             |v: &ReplicaView| value(v) as f64 - self.cfg.load_penalty_blocks * v.load as f64;
-        let mut pick = 0;
+        let mut pick = views.iter().position(|v| v.healthy).expect("checked in choose");
         for (j, v) in views.iter().enumerate() {
-            if score(v) > score(&views[pick]) {
+            if v.healthy && score(v) > score(&views[pick]) {
                 pick = j;
             }
         }
@@ -224,7 +247,12 @@ mod tests {
     fn views(specs: &[(usize, usize)]) -> Vec<ReplicaView> {
         specs
             .iter()
-            .map(|&(load, aff)| ReplicaView { load, affinity_blocks: aff, adapter_blocks: 0 })
+            .map(|&(load, aff)| ReplicaView {
+                load,
+                affinity_blocks: aff,
+                adapter_blocks: 0,
+                healthy: true,
+            })
             .collect()
     }
 
@@ -236,6 +264,7 @@ mod tests {
                 load,
                 affinity_blocks: aff,
                 adapter_blocks: ad,
+                healthy: true,
             })
             .collect()
     }
@@ -342,6 +371,56 @@ mod tests {
         let p = r.choose(&views3(&[(20, 0, 8), (0, 0, 0)]));
         assert_eq!(p.replica, 1);
         assert_eq!(p.kind, PlacementKind::Cold);
+    }
+
+    #[test]
+    fn every_policy_skips_unhealthy_replicas() {
+        let mark = |mut v: Vec<ReplicaView>, down: &[usize]| {
+            for &i in down {
+                v[i].healthy = false;
+            }
+            v
+        };
+        // RoundRobin: the cursor skips over the down replica entirely.
+        let mut r = router(RoutePolicy::RoundRobin, 3);
+        let v = mark(views(&[(0, 0), (0, 0), (0, 0)]), &[1]);
+        let picks: Vec<usize> = (0..4).map(|_| r.choose(&v).replica).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+        // LeastLoaded: the idle-but-down replica loses to a loaded-but-up
+        // one.
+        let mut r = router(RoutePolicy::LeastLoaded, 2);
+        let v = mark(views(&[(0, 0), (9, 0)]), &[0]);
+        assert_eq!(r.choose(&v).replica, 1);
+        // PrefixAffinity: a warm-but-down replica yields a cold placement
+        // on a healthy one — its cache is unreachable, not merely
+        // penalized.
+        let mut r = router(RoutePolicy::PrefixAffinity, 2);
+        let v = mark(views(&[(0, 8), (0, 0)]), &[0]);
+        let p = r.choose(&v);
+        assert_eq!(p.replica, 1);
+        assert_eq!(p.kind, PlacementKind::Cold);
+        // A warm healthy replica still wins over a warmer down one.
+        let mut r = router(RoutePolicy::PrefixAffinity, 3);
+        let v = mark(views(&[(0, 8), (0, 3), (0, 0)]), &[0]);
+        let p = r.choose(&v);
+        assert_eq!(p.replica, 1);
+        assert_eq!(p.kind, PlacementKind::Warm { blocks: 3 });
+        // AdapterAffinity: same rule on the residency term.
+        let mut r = router(RoutePolicy::AdapterAffinity, 2);
+        let v = mark(views3(&[(0, 0, 32), (5, 0, 8)]), &[0]);
+        let p = r.choose(&v);
+        assert_eq!(p.replica, 1);
+        assert_eq!(p.kind, PlacementKind::Warm { blocks: 8 });
+    }
+
+    #[test]
+    #[should_panic(expected = "zero healthy")]
+    fn choosing_with_no_healthy_replicas_panics() {
+        let mut r = router(RoutePolicy::LeastLoaded, 2);
+        let mut v = views(&[(0, 0), (0, 0)]);
+        v[0].healthy = false;
+        v[1].healthy = false;
+        let _ = r.choose(&v);
     }
 
     #[test]

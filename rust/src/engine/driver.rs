@@ -165,6 +165,31 @@ pub trait EngineDriver {
         None
     }
 
+    /// Replica administration (`POST /cluster/replicas/{i}/fail`): mark a
+    /// replica failed, requeue its work onto survivors, orphan its
+    /// leases. Only a fleet can do this; the single-engine default
+    /// refuses (there is no survivor to requeue onto).
+    fn fail_replica(&mut self, i: usize) -> anyhow::Result<crate::cluster::FailoverReport> {
+        anyhow::bail!("no fleet: replica {i} administration needs a multi-replica cluster")
+    }
+
+    /// Stop placing new work on a replica while it finishes what it has.
+    fn drain_replica(&mut self, i: usize) -> anyhow::Result<()> {
+        anyhow::bail!("no fleet: replica {i} administration needs a multi-replica cluster")
+    }
+
+    /// Return a failed or draining replica to rotation.
+    fn restore_replica(&mut self, i: usize) -> anyhow::Result<()> {
+        anyhow::bail!("no fleet: replica {i} administration needs a multi-replica cluster")
+    }
+
+    /// Count conversations whose stickiness the serving layer cleared
+    /// during failover repair (the sessions re-stick on their next turn;
+    /// the fleet owns the `resticks_total` counter). No-op off-cluster.
+    fn note_resticks(&mut self, n: u64) {
+        let _ = n;
+    }
+
     /// Run until every submitted request has finished; panics on stall
     /// (request too large for capacity) rather than spinning.
     fn run_until_idle(&mut self) {

@@ -34,6 +34,26 @@ use crate::scheduler::{ScheduledStep, Scheduler};
 pub use driver::EngineDriver;
 pub use mask::{build_batch_mask, BatchMask};
 
+/// A request pulled off a failed (or failing) replica, carrying exactly
+/// what a survivor needs to re-run it under the SAME fleet-unique id:
+/// callers blocked on the [`RequestId`] still get their output, the
+/// arrival timestamp keeps queue-time accounting honest (the failover
+/// delay shows up as queue time, not as a vanished request), and the
+/// watch flag re-subscribes streaming turns on the new replica (which
+/// re-emits `Started`/`Token` events — generation restarts from scratch,
+/// exactly like a recompute preemption).
+#[derive(Debug, Clone)]
+pub struct EvacuatedRequest {
+    pub id: RequestId,
+    pub target: ModelTarget,
+    pub prompt: Vec<u32>,
+    pub params: SamplingParams,
+    pub cache_salt: u64,
+    pub arrival: f64,
+    pub preemptions: u32,
+    pub watched: bool,
+}
+
 /// Result of executing one scheduled step.
 #[derive(Debug, Clone, Default)]
 pub struct StepResult {
@@ -283,6 +303,28 @@ impl<E: Executor> Engine<E> {
         cache_salt: u64,
         chain: Vec<BlockHash>,
     ) -> anyhow::Result<RequestId> {
+        let id = RequestId(self.next_id);
+        let req =
+            self.prepare_request(id, target, prompt, params, self.clock, cache_salt, chain)?;
+        self.next_id += self.id_stride;
+        self.admit_prepared(req, priority);
+        Ok(id)
+    }
+
+    /// Validate a submission and build its [`Request`] without touching
+    /// engine state — the shared front half of [`Self::submit_prehashed`]
+    /// and [`Self::submit_evacuated`] (failover requeue reuses every check
+    /// but supplies its own id and arrival).
+    fn prepare_request(
+        &self,
+        id: RequestId,
+        target: ModelTarget,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        arrival: f64,
+        cache_salt: u64,
+        chain: Vec<BlockHash>,
+    ) -> anyhow::Result<Request> {
         let final_len = prompt.len() + params.max_new_tokens as usize;
         anyhow::ensure!(
             final_len <= self.cfg.scheduler.max_seq_len as usize,
@@ -306,9 +348,7 @@ impl<E: Executor> Engine<E> {
                 self.kv.num_total_blocks()
             );
         }
-        let id = RequestId(self.next_id);
-        self.next_id += self.id_stride;
-        let mut req = Request::new(id, target, prompt, params, self.clock);
+        let mut req = Request::new(id, target, prompt, params, arrival);
 
         // Activation scan + salting policy, shared with the cluster router
         // (AdapterRegistry::request_hash_context is the single source of
@@ -334,12 +374,116 @@ impl<E: Executor> Engine<E> {
             "pre-seeded chain must cover exactly the prompt's full blocks"
         );
         req.hash_chain = chain;
+        Ok(req)
+    }
 
+    /// The back half of submission: counters + ledger + queue.
+    fn admit_prepared(&mut self, req: Request, priority: bool) {
+        let id = req.id;
         self.metrics.requests_received += 1;
         self.metrics.prompt_tokens += req.prompt.len() as u64;
         self.reqs.insert(id, req);
         self.sched.enqueue(id, priority);
-        Ok(id)
+    }
+
+    /// Pull every queued request (running and waiting) off this engine for
+    /// requeue elsewhere — the first half of replica failover. Running
+    /// requests lose their KV and adapter refs (the device died; the
+    /// survivor recomputes, like a preemption), buffered turn events for
+    /// them are dropped (the new replica re-emits), and their
+    /// received/prompt-token counters are rolled back so the fleet
+    /// aggregate counts each request exactly once after the survivor
+    /// re-counts it. Finished-but-undrained outputs are NOT touched: the
+    /// completion ledger lives at the serving layer and survives the
+    /// compute failure. Order: running (admission order) then waiting
+    /// (queue order) — overall FCFS.
+    pub fn evacuate_requests(&mut self) -> Vec<EvacuatedRequest> {
+        let (running, waiting) = self.sched.drain_all();
+        let mut out = Vec::with_capacity(running.len() + waiting.len());
+        for id in running.into_iter().chain(waiting) {
+            let r = self.reqs.remove(&id).expect("scheduler holds unknown request");
+            if self.kv.has_request(id.0) {
+                self.kv.free_request(id.0);
+            }
+            // Only admitted (Running) requests hold an adapter ref;
+            // Waiting never acquired and Preempted already released.
+            if let (State::Running, ModelTarget::Adapter(aid)) = (r.state, r.target) {
+                self.residency.release(aid);
+            }
+            self.metrics.requests_received -= 1;
+            self.metrics.prompt_tokens -= r.prompt.len() as u64;
+            let watched = self.watched.remove(&id);
+            out.push(EvacuatedRequest {
+                id,
+                target: r.target,
+                prompt: r.prompt,
+                params: r.params,
+                cache_salt: r.hash_ctx.cache_salt,
+                arrival: r.timeline.arrival,
+                preemptions: r.preemptions,
+                watched,
+            });
+        }
+        let gone: FxHashSet<RequestId> = out.iter().map(|e| e.id).collect();
+        self.events.retain(|ev| !gone.contains(&ev.id()));
+        self.refresh_gauges();
+        out
+    }
+
+    /// Wipe this engine's device state after a failure — the second half
+    /// of failover, run once [`Self::evacuate_requests`] emptied the
+    /// queues. Releases every session lease (returning the orphaned keys
+    /// so the serving layer repairs the sessions), evicts every resident
+    /// adapter, and purges the cached hashes, so the replica's routable
+    /// cache reads exactly empty (a later restore starts cold, and the
+    /// router stops scoring blocks that no longer exist).
+    pub fn fail_storage(&mut self) -> Vec<u64> {
+        let orphaned = self.kv.release_all_leases();
+        self.residency.evict_all_idle(&mut self.kv);
+        self.kv.purge_cached();
+        self.refresh_gauges();
+        orphaned
+    }
+
+    /// Resubmit an evacuated request on this engine under its ORIGINAL id
+    /// (failover requeue; the id spaces are disjoint by construction, so
+    /// a foreign id can never collide with this replica's own). `chain`
+    /// may pre-seed the router's hash chain like
+    /// [`Self::submit_prehashed`]'s. The request restarts from scratch —
+    /// arrival and preemption count carry over, generation does not.
+    pub(crate) fn submit_evacuated(
+        &mut self,
+        ev: EvacuatedRequest,
+        chain: Vec<BlockHash>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.reqs.contains_key(&ev.id),
+            "request {:?} already lives on this replica",
+            ev.id
+        );
+        // Keep the original arrival so the failover delay reads as queue
+        // time — clamped to this engine's local clock: a busy survivor's
+        // timeline can lag the fleet clock the arrival was stamped on,
+        // and an arrival in the local future would yield negative queue
+        // times (replicas are parallel machines with their own clocks).
+        let arrival = ev.arrival.min(self.clock);
+        let mut req = self.prepare_request(
+            ev.id,
+            ev.target,
+            ev.prompt,
+            ev.params,
+            arrival,
+            ev.cache_salt,
+            chain,
+        )?;
+        req.preemptions = ev.preemptions;
+        // Continuation priority: requeued work was already admitted once;
+        // it goes ahead of traffic that arrived after it.
+        self.admit_prepared(req, true);
+        if ev.watched {
+            self.watch(ev.id);
+        }
+        Ok(())
     }
 
     /// Drive one engine step. Returns false when nothing was schedulable
@@ -1026,6 +1170,86 @@ mod tests {
         e.release_prefix_lease(1);
         assert_eq!(e.leased_blocks(), 0);
         e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn evacuate_and_fail_storage_empty_the_engine() {
+        let mut e = tiny_engine();
+        let p = SamplingParams { max_new_tokens: 8, ..Default::default() };
+        // One finished (its output must survive the failure), one
+        // running, one waiting behind a full batch.
+        let done = e.submit(ModelTarget::Base, (0..64).collect(), p).unwrap();
+        e.run_to_completion(done);
+        let hist: Vec<u32> = (0..64).collect();
+        assert!(e.lease_prefix(7, &hist, 0) > 0);
+        let running = e.submit(ModelTarget::Base, (100..164).collect(), p).unwrap();
+        assert!(e.step(), "prefill the running request");
+        let waiting = e
+            .submit(ModelTarget::Base, (200..264).collect(), p)
+            .unwrap();
+        e.watch(running);
+        let received_before = e.metrics.requests_received;
+
+        let evs = e.evacuate_requests();
+        assert_eq!(
+            evs.iter().map(|x| x.id).collect::<Vec<_>>(),
+            vec![running, waiting],
+            "running (admission order) then waiting"
+        );
+        assert!(evs[0].watched && !evs[1].watched);
+        assert_eq!(evs[0].prompt, (100..164).collect::<Vec<u32>>());
+        assert!(!e.has_work());
+        assert_eq!(e.metrics.requests_received, received_before - 2);
+        let orphaned = e.fail_storage();
+        assert_eq!(orphaned, vec![7]);
+        assert_eq!(e.leased_blocks(), 0);
+        assert_eq!(e.routing_summary().committed_blocks(), 0, "cache wiped");
+        assert_eq!(e.num_free_blocks(), e.num_total_blocks());
+        e.check_invariants().unwrap();
+        // The finished ledger survived: completion state is serving-layer
+        // state, not device memory.
+        assert!(e.take_finished().iter().any(|o| o.id == done));
+
+        // Requeue on a fresh "survivor": same id, carried arrival, fresh
+        // run to completion.
+        let cfg = presets::tiny();
+        let reg = AdapterRegistry::tiny_default(3, 512, 4);
+        let mut survivor = Engine::with_registry(cfg, reg, FixedExecutor);
+        survivor.set_id_namespace(1, 2); // disjoint namespace: issues odd ids
+        let arrival = evs[0].arrival;
+        survivor.advance_clock_to(arrival); // fleet time at failover
+        for ev in evs {
+            survivor.submit_evacuated(ev, Vec::new()).unwrap();
+        }
+        let out = survivor.run_to_completion(running);
+        assert_eq!(out.id, running);
+        assert_eq!(out.timeline.arrival, arrival, "queue-time stays honest");
+        assert_eq!(out.output_tokens.len(), 8);
+        let evs2 = survivor.take_events();
+        assert!(
+            evs2.iter().all(|ev| ev.id() == running),
+            "watch re-subscribed on the survivor"
+        );
+        survivor.run_until_idle();
+        assert!(survivor
+            .take_finished()
+            .iter()
+            .any(|o| o.id == waiting));
+        survivor.check_invariants().unwrap();
+        // A duplicate requeue of a live id is refused.
+        let dup = EvacuatedRequest {
+            id: waiting,
+            target: ModelTarget::Base,
+            prompt: vec![1; 8],
+            params: SamplingParams { max_new_tokens: 1, ..Default::default() },
+            cache_salt: 0,
+            arrival: 0.0,
+            preemptions: 0,
+            watched: false,
+        };
+        let mut busy = tiny_engine();
+        busy.submit_evacuated(dup.clone(), Vec::new()).unwrap();
+        assert!(busy.submit_evacuated(dup, Vec::new()).is_err());
     }
 
     #[test]

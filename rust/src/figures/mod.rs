@@ -15,11 +15,14 @@
 //! cluster_scaling (ours, beyond the paper): fleet-level hit-rate and
 //! throughput vs replica count under affinity vs round-robin routing ·
 //! adapter_memory (ours): adapter-count × memory-budget sweep of the
-//! unified KV + adapter-weight budget vs the always-resident baseline.
+//! unified KV + adapter-weight budget vs the always-resident baseline ·
+//! failover (ours): kill one of four replicas mid-burst — per-round
+//! hit-rate dip and re-warm, zero lost requests.
 
 pub mod ablations;
 pub mod adapter_memory;
 pub mod cluster_scaling;
+pub mod failover;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12;
@@ -230,6 +233,7 @@ pub fn run_all(quick: bool) -> Vec<Table> {
     out.push(fig15::run(quick));
     out.push(cluster_scaling::run(quick));
     out.push(adapter_memory::run(quick));
+    out.push(failover::run(quick));
     out
 }
 
@@ -250,10 +254,11 @@ pub fn run_by_id(id: &str, quick: bool) -> Vec<Table> {
         "fig15" => vec![fig15::run(quick)],
         "cluster" | "cluster_scaling" => vec![cluster_scaling::run(quick)],
         "adapter_memory" => vec![adapter_memory::run(quick)],
+        "failover" => vec![failover::run(quick)],
         "ablations" => ablations::run_all(),
         other => panic!(
             "unknown figure id `{other}` (try table1, fig6..fig15, cluster, \
-             adapter_memory, ablations, all)"
+             adapter_memory, failover, ablations, all)"
         ),
     }
 }

@@ -300,6 +300,32 @@ impl BlockPool {
         }
     }
 
+    /// Drop every cached (committed, unreferenced) hash — the contents of
+    /// a failed replica's device memory are gone, so its routable cache
+    /// must read as empty rather than attract traffic to blocks that no
+    /// longer exist. Each drop emits the same `by_hash`/summary −1 an LRU
+    /// eviction would, so the counting sketch stays symmetric — but it is
+    /// NOT counted into `stats.evictions`: evictions measure memory
+    /// pressure, and a failure wipe is not pressure (same rule as
+    /// lease-orphaning vs `leases_reclaimed`). The caller must have freed
+    /// every request/lease/claim first (no referenced block may carry a
+    /// hash). Returns blocks purged.
+    pub fn purge_cached(&mut self) -> usize {
+        let mut purged = 0;
+        for i in 0..self.meta.len() {
+            if let Some(h) = self.meta[i].hash.take() {
+                debug_assert_eq!(
+                    self.meta[i].ref_count, 0,
+                    "purging block {i} still referenced"
+                );
+                self.by_hash.remove(&h);
+                self.summary.remove(h);
+                purged += 1;
+            }
+        }
+        purged
+    }
+
     /// Invariant check for tests: free list is consistent, hashes map to
     /// the blocks claiming them.
     #[doc(hidden)]

@@ -224,6 +224,33 @@ impl KvCacheManager {
         }
     }
 
+    /// Release every lease (replica failure: the pinned blocks are gone
+    /// with the device). Returns the orphaned lease keys so the serving
+    /// layer can repair the sessions that held them. Not counted as
+    /// pressure reclaims — nothing was traded off, the memory died.
+    pub fn release_all_leases(&mut self) -> Vec<u64> {
+        let keys = std::mem::take(&mut self.lease_order);
+        for l in &keys {
+            if let Some(blocks) = self.leases.remove(l) {
+                for b in blocks.into_iter().rev() {
+                    self.pool.free(b);
+                }
+            }
+        }
+        keys
+    }
+
+    /// Drop every cached hash (see [`super::block::BlockPool::purge_cached`]).
+    /// Only valid once every request table and lease is gone — a failed
+    /// replica is evacuated first, then wiped.
+    pub fn purge_cached(&mut self) -> usize {
+        assert!(
+            self.tables.is_empty() && self.leases.is_empty(),
+            "purge with live tables/leases"
+        );
+        self.pool.purge_cached()
+    }
+
     /// Return an evicted adapter's weight pages to the shared pool.
     pub fn release_adapter_blocks(&mut self, blocks: &[BlockId]) {
         self.pool.release_claimed(blocks);
@@ -670,6 +697,96 @@ mod tests {
         m.free_request(3);
         m.check_invariants().unwrap();
         assert_eq!(m.num_free_blocks(), 4);
+    }
+
+    #[test]
+    fn lease_break_path_keeps_routing_summary_symmetric() {
+        // Audit pin (ISSUE 5 satellite): blocks freed by the lease-break
+        // path (`ensure_capacity` → `reclaim_leases`) must feed the
+        // routing summary exactly like normal frees — the hash stays
+        // routable until a real eviction emits the −1, and a full churn
+        // drives the sketch back to exactly zero. A drifted summary would
+        // silently mis-route PrefixAffinity.
+        let mut m = mgr(4);
+        let t = toks(64);
+        let hs = block_hashes(&t, 16, &HashContext::base());
+        m.start_request(1, &hs, 64);
+        assert!(m.ensure_capacity(1, 64));
+        m.commit_full_blocks(1, &hs);
+        m.free_request(1);
+        assert_eq!(m.routing_summary().committed_blocks(), 4);
+        assert_eq!(m.acquire_lease(9, &hs), 4);
+        m.check_invariants().unwrap();
+        // Pressure: a 4-block request breaks the lease. The chain is still
+        // cached (break ≠ evict — the blocks go back to the free list with
+        // hashes intact), so the summary must NOT lose entries yet...
+        let t2: Vec<u32> = (0..64).map(|i| 70_000 + i).collect();
+        let hs2 = block_hashes(&t2, 16, &HashContext::base());
+        m.start_request(2, &hs2, 64);
+        assert!(m.ensure_capacity(2, 64), "lease reclaimed to make room");
+        assert_eq!(m.stats().leases_reclaimed, 1);
+        assert_eq!(m.num_leases(), 0);
+        // ...and the −1s fire at the allocations that overwrote the broken
+        // lease's blocks: committed count now reflects only what survived.
+        m.check_invariants().unwrap();
+        assert_eq!(m.routing_summary().matching_prefix(&hs), 0, "chain evicted");
+        m.commit_full_blocks(2, &hs2);
+        m.free_request(2);
+        m.check_invariants().unwrap();
+        assert_eq!(m.routing_summary().committed_blocks(), 4);
+        // Full churn back to zero: every +1 has met exactly one −1.
+        let t3: Vec<u32> = (0..64).map(|i| 80_000 + i).collect();
+        let hs3 = block_hashes(&t3, 16, &HashContext::base());
+        m.start_request(3, &hs3, 64);
+        assert!(m.ensure_capacity(3, 64));
+        m.free_request(3); // uncommitted: hashless frees
+        m.check_invariants().unwrap();
+        assert_eq!(m.routing_summary().committed_blocks(), 0);
+        for &h in &hs {
+            assert!(!m.routing_summary().maybe_contains(h), "{h:?} lingers");
+        }
+        for &h in &hs2 {
+            assert!(!m.routing_summary().maybe_contains(h), "{h:?} lingers");
+        }
+    }
+
+    #[test]
+    fn release_all_leases_and_purge_empty_the_replica() {
+        // The failover wipe: every lease dropped (keys reported), every
+        // cached hash purged with symmetric summary −1s, pool all-free.
+        let mut m = mgr(8);
+        let a = toks(32);
+        let ha = block_hashes(&a, 16, &HashContext::base());
+        m.start_request(1, &ha, 32);
+        assert!(m.ensure_capacity(1, 32));
+        m.commit_full_blocks(1, &ha);
+        m.free_request(1);
+        let b: Vec<u32> = (0..32).map(|i| 5_000 + i).collect();
+        let hb = block_hashes(&b, 16, &HashContext::base());
+        m.start_request(2, &hb, 32);
+        assert!(m.ensure_capacity(2, 32));
+        m.commit_full_blocks(2, &hb);
+        m.free_request(2);
+        assert_eq!(m.acquire_lease(11, &ha), 2);
+        assert_eq!(m.acquire_lease(22, &hb), 2);
+        let mut keys = m.release_all_leases();
+        keys.sort_unstable();
+        assert_eq!(keys, vec![11, 22]);
+        assert_eq!(m.num_leases(), 0);
+        assert_eq!(m.leased_blocks(), 0);
+        assert_eq!(m.stats().leases_reclaimed, 0, "failure is not pressure");
+        let evictions_before = m.stats().pool.evictions;
+        assert_eq!(m.purge_cached(), 4);
+        assert_eq!(
+            m.stats().pool.evictions,
+            evictions_before,
+            "a failure wipe is not pressure: evictions untouched"
+        );
+        m.check_invariants().unwrap();
+        assert_eq!(m.routing_summary().committed_blocks(), 0);
+        assert_eq!(m.num_free_blocks(), 8);
+        assert_eq!(m.start_request(3, &ha, 32).blocks, 0, "cache reads empty");
+        m.free_request(3);
     }
 
     #[test]

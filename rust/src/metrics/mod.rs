@@ -85,6 +85,17 @@ pub struct RoutingMetrics {
     /// Session turns pinned to their conversation's replica (sticky
     /// placement bypassing the policy — the session API's routing).
     pub sticky_routed: u64,
+    /// Replicas marked failed (`Cluster::fail_replica`).
+    pub replica_failures: u64,
+    /// In-flight/waiting requests requeued onto survivors at failover
+    /// (fleet-unique ids preserved; callers keep their handles).
+    pub requeued_requests: u64,
+    /// Session prefix leases whose pins died with a failed replica (the
+    /// session transparently re-prefills on its next turn).
+    pub orphaned_leases: u64,
+    /// Sticky turns whose conversation replica was down/draining and were
+    /// re-placed through the routing policy instead (re-stick).
+    pub resticks: u64,
 }
 
 impl RoutingMetrics {
@@ -128,6 +139,19 @@ impl RoutingMetrics {
         ] {
             s.push_str(&format!(
                 "# HELP alora_serve_router_{name} {help}\n# TYPE alora_serve_router_{name} counter\nalora_serve_router_{name} {v}\n"
+            ));
+        }
+        // Failover counters live at the fleet level but are not router
+        // decisions, so they keep the plain `alora_serve_` namespace
+        // (names fixed by the failover surface's contract).
+        for (name, help, v) in [
+            ("replica_failures_total", "Replicas marked failed", self.replica_failures),
+            ("requeued_requests_total", "Requests requeued onto survivors at failover", self.requeued_requests),
+            ("orphaned_leases_total", "Session prefix leases lost to replica failure", self.orphaned_leases),
+            ("resticks_total", "Sticky turns re-placed after their replica died or drained", self.resticks),
+        ] {
+            s.push_str(&format!(
+                "# HELP alora_serve_{name} {help}\n# TYPE alora_serve_{name} counter\nalora_serve_{name} {v}\n"
             ));
         }
         s.push_str(&format!(
@@ -703,11 +727,19 @@ mod tests {
         r.routed = vec![9, 3];
         r.affinity_hits = 7;
         r.affinity_fallbacks = 5;
+        r.replica_failures = 1;
+        r.requeued_requests = 4;
+        r.orphaned_leases = 2;
+        r.resticks = 3;
         assert!((r.imbalance() - 1.5).abs() < 1e-12);
         let text = r.render_prometheus();
         assert!(text.contains("router_requests_routed_total{replica=\"0\"} 9"));
         assert!(text.contains("router_affinity_hits_total 7"));
         assert!(text.contains("router_imbalance 1.5"));
+        assert!(text.contains("alora_serve_replica_failures_total 1"), "{text}");
+        assert!(text.contains("alora_serve_requeued_requests_total 4"), "{text}");
+        assert!(text.contains("alora_serve_orphaned_leases_total 2"), "{text}");
+        assert!(text.contains("alora_serve_resticks_total 3"), "{text}");
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             assert!(line.split_whitespace().count() == 2, "bad line: {line}");
         }

@@ -102,6 +102,18 @@ impl Scheduler {
         self.running.retain(|r| *r != id);
     }
 
+    /// Take every queued request out of the scheduler (replica failover:
+    /// the engine evacuates them for requeue elsewhere). Returns
+    /// (running, waiting), each in its current order — running in
+    /// admission order, waiting front-to-back — so the caller can
+    /// preserve FCFS when resubmitting.
+    pub fn drain_all(&mut self) -> (Vec<RequestId>, Vec<RequestId>) {
+        (
+            std::mem::take(&mut self.running),
+            std::mem::take(&mut self.waiting).into_iter().collect(),
+        )
+    }
+
     /// Pack one step. Mutates request progress fields (`num_computed_tokens`
     /// is NOT advanced here — the engine advances it after execution), the
     /// KV manager's block tables, and adapter residency (loads at

@@ -34,8 +34,14 @@
 //!                    "stream": true on a single spec -> SSE `stage`
 //!                    events as stages retire, then `done`
 //!   GET  /metrics    Prometheus text exposition
-//!   GET  /cluster    fleet stats JSON (single engines report a
-//!                    one-replica document — never 404)
+//!   GET  /cluster    fleet stats JSON incl. per-replica health (single
+//!                    engines report a one-replica document — never 404)
+//!   POST /cluster/replicas/{i}/{fail|drain|restore}
+//!                    replica administration (no body): fail evacuates +
+//!                    requeues the replica's work onto survivors and
+//!                    repairs affected sessions; drain excludes it from
+//!                    new placements while it finishes; restore returns
+//!                    it to rotation (cold after a failure)
 //!   GET  /health     {"status": "ok"}
 //!
 //! Every error is a structured envelope with a meaningful status code:
@@ -87,6 +93,10 @@ pub(crate) struct EngineState<D: EngineDriver> {
     /// a sink get their finished output through it (as
     /// [`TurnEvent::Finished`]), not through `done`.
     pub(crate) streams: HashMap<RequestId, Vec<TurnEvent>>,
+    /// Requests that will NEVER produce an output (failover requeue
+    /// rejected them on every survivor). Waiters resolve against this
+    /// immediately instead of burning the full 60 s deadline.
+    pub(crate) failed: HashSet<RequestId>,
 }
 
 // ---------------------------------------------------------------------------
@@ -147,6 +157,18 @@ pub(crate) fn classify(e: anyhow::Error) -> ApiError {
         ApiError::conflict("turn_in_flight", message)
     } else if message.contains("timed out") {
         ApiError::timeout(message)
+    } else if message.starts_with("no replica ") {
+        ApiError::not_found("replica_not_found", message)
+    } else if message.contains("already down")
+        || message.contains("already up")
+        || message.contains("only an up replica")
+        || message.contains("last healthy")
+        || message.contains("no healthy survivor")
+    {
+        // Replica admin against the wrong current state (fail a dead
+        // replica, drain the last one, ...): a state conflict, not a
+        // malformed request.
+        ApiError::conflict("replica_state", message)
     } else {
         ApiError::bad_request("invalid_request", message)
     }
@@ -194,6 +216,7 @@ impl<D: EngineDriver + Send + 'static> Server<D> {
                 done: HashMap::new(),
                 orphaned: HashSet::new(),
                 streams: HashMap::new(),
+                failed: HashSet::new(),
             }),
             cv: Condvar::new(),
             stop: AtomicBool::new(false),
@@ -439,6 +462,17 @@ fn route<D: EngineDriver>(method: &str, path: &str, body: &[u8], shared: &Shared
             },
         },
         "POST" => {
+            // Replica administration takes no body — route it before the
+            // body requirement.
+            if let Some((i, action)) = parse_replica_action(path) {
+                return from_result(replica_action(shared, i, action));
+            }
+            if path.starts_with("/cluster/replicas/") {
+                return full_err(ApiError::not_found(
+                    "not_found",
+                    format!("no route for POST {path} (actions: fail, drain, restore)"),
+                ));
+            }
             if body.is_empty() {
                 return full_err(ApiError::bad_request(
                     "missing_body",
@@ -490,6 +524,72 @@ fn route<D: EngineDriver>(method: &str, path: &str, body: &[u8], shared: &Shared
     }
 }
 
+/// Parse `/cluster/replicas/{i}/{fail|drain|restore}` admin paths.
+fn parse_replica_action(path: &str) -> Option<(usize, &str)> {
+    let rest = path.strip_prefix("/cluster/replicas/")?;
+    let mut parts = rest.split('/');
+    let i: usize = parts.next()?.parse().ok()?;
+    let action = parts.next()?;
+    if parts.next().is_some() || !matches!(action, "fail" | "drain" | "restore") {
+        return None;
+    }
+    Some((i, action))
+}
+
+/// Replica administration (`POST /cluster/replicas/{i}/{fail|drain|restore}`).
+/// `fail` additionally repairs the session layer — orphaned leases are
+/// forgotten, stranded conversations lose their stickiness peer (they
+/// re-stick on their next turn), and turns whose requeue was rejected are
+/// aborted — and wakes the driver so requeued work starts immediately.
+fn replica_action<D: EngineDriver>(
+    shared: &Shared<D>,
+    i: usize,
+    action: &str,
+) -> Result<Json, ApiError> {
+    let mut g = shared.engine.lock().unwrap();
+    let st = &mut *g;
+    match action {
+        "fail" => {
+            let report = st.engine.fail_replica(i).map_err(classify)?;
+            let (leases_dropped, resticks_pending, turns_aborted) =
+                st.sessions.repair_after_failover(&mut st.engine, &report);
+            // Requests no survivor accepted will never finish: tombstone
+            // them so their blocked waiters fail NOW, not at the 60 s
+            // deadline.
+            st.failed.extend(report.rejected.iter().copied());
+            shared.cv.notify_all();
+            Ok(Json::obj(vec![
+                ("replica", Json::num(i as f64)),
+                ("health", Json::str("down")),
+                ("requeued", Json::num(report.requeued as f64)),
+                ("rejected", Json::num(report.rejected.len() as f64)),
+                (
+                    "orphaned_leases",
+                    Json::num(report.orphaned_leases.len() as f64),
+                ),
+                ("sessions_leases_dropped", Json::num(leases_dropped as f64)),
+                ("sessions_unstuck", Json::num(resticks_pending as f64)),
+                ("turns_aborted", Json::num(turns_aborted as f64)),
+            ]))
+        }
+        "drain" => {
+            st.engine.drain_replica(i).map_err(classify)?;
+            Ok(Json::obj(vec![
+                ("replica", Json::num(i as f64)),
+                ("health", Json::str("draining")),
+            ]))
+        }
+        "restore" => {
+            st.engine.restore_replica(i).map_err(classify)?;
+            Ok(Json::obj(vec![
+                ("replica", Json::num(i as f64)),
+                ("health", Json::str("up")),
+            ]))
+        }
+        _ => unreachable!("parse_replica_action filtered"),
+    }
+}
+
 /// Parse `/v1/sessions/{id}` and `/v1/sessions/{id}/turns` paths into
 /// (id, is_turns). None for anything else.
 fn parse_session_path(path: &str) -> Option<(u64, bool)> {
@@ -534,6 +634,15 @@ pub(crate) fn wait_done<D: EngineDriver>(
     loop {
         if let Some(out) = st.done.remove(&id) {
             return Ok(out);
+        }
+        if st.failed.remove(&id) {
+            // Lost to a replica failure and rejected by every survivor:
+            // no output will ever come.
+            return Err(ApiError::new(
+                "502 Bad Gateway",
+                "request_failed",
+                format!("request {id:?} was lost to a replica failure and could not be requeued"),
+            ));
         }
         let now = Instant::now();
         if now >= deadline {
@@ -696,6 +805,19 @@ fn run_pipeline<D: EngineDriver>(spec_json: &Json, shared: &Shared<D>) -> anyhow
         let ready: Vec<RequestId> =
             st.done.keys().copied().filter(|id| co.owns(*id)).collect();
         if ready.is_empty() {
+            // A stage lost to a replica failure (requeue rejected) will
+            // never retire: fail the conversation now, not at deadline.
+            let lost: Vec<RequestId> =
+                st.failed.iter().copied().filter(|id| co.owns(*id)).collect();
+            if !lost.is_empty() {
+                for id in &lost {
+                    st.failed.remove(id);
+                }
+                outcome = Err(anyhow::anyhow!(
+                    "pipeline stage request {lost:?} was lost to a replica failure"
+                ));
+                break;
+            }
             // Absolute deadline: the condvar is woken on every driver
             // step, so a per-wait timeout would reset forever under
             // concurrent traffic.
@@ -847,6 +969,21 @@ fn stream_pipeline_events<D: EngineDriver>(
                 if !new.is_empty() || co.is_done() {
                     emitted = co.finished_stages().len();
                     break StreamStep::Emit(new, co.is_done(), st.engine.clock() - t0);
+                }
+                // A stage lost to a replica failure never retires: fail
+                // the stream now instead of at the deadline.
+                let lost: Vec<RequestId> =
+                    st.failed.iter().copied().filter(|id| co.owns(*id)).collect();
+                if !lost.is_empty() {
+                    for id in &lost {
+                        st.failed.remove(id);
+                    }
+                    orphan_in_flight(st, co);
+                    break StreamStep::Fail(ApiError::new(
+                        "502 Bad Gateway",
+                        "request_failed",
+                        format!("pipeline stage request {lost:?} was lost to a replica failure"),
+                    ));
                 }
                 let now = Instant::now();
                 if now >= deadline {
@@ -1238,6 +1375,78 @@ mod tests {
         assert!(r.contains("413"), "{r}");
         assert!(r.contains("\"code\":\"payload_too_large\""), "{r}");
         srv.shutdown();
+    }
+
+    #[test]
+    fn replica_admin_endpoints_fail_drain_restore() {
+        let mut srv = start_cluster_server(2);
+        let addr = srv.addr();
+        let prompt: Vec<String> = (0..64).map(|t| t.to_string()).collect();
+        let gen_body = format!(r#"{{"prompt": [{}], "max_new_tokens": 2}}"#, prompt.join(","));
+        assert!(post(addr, "/generate", &gen_body).contains("200 OK"));
+
+        // Drain replica 1, check health surfaces in GET /cluster.
+        let r = post(addr, "/cluster/replicas/1/drain", "");
+        assert!(r.contains("200 OK"), "{r}");
+        assert_eq!(body_json(&r).get("health").and_then(Json::as_str), Some("draining"));
+        let j = body_json(&http(addr, "GET /cluster HTTP/1.1\r\nHost: x\r\n\r\n"));
+        let reps = j.get("replicas").and_then(Json::as_arr).unwrap();
+        assert_eq!(reps[0].get("health").and_then(Json::as_str), Some("up"));
+        assert_eq!(reps[1].get("health").and_then(Json::as_str), Some("draining"));
+
+        // Restore, then fail it; the failure response reports the repair.
+        assert!(post(addr, "/cluster/replicas/1/restore", "").contains("200 OK"));
+        let r = post(addr, "/cluster/replicas/1/fail", "");
+        assert!(r.contains("200 OK"), "{r}");
+        let j = body_json(&r);
+        assert_eq!(j.get("health").and_then(Json::as_str), Some("down"));
+        assert!(j.get("requeued").and_then(Json::as_u64).is_some());
+        assert!(j.get("orphaned_leases").and_then(Json::as_u64).is_some());
+        // Serving continues on the survivor; metrics expose the failover
+        // counters.
+        assert!(post(addr, "/generate", &gen_body).contains("200 OK"));
+        let m = http(addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(m.contains("alora_serve_replica_failures_total 1"), "{m}");
+        assert!(m.contains("alora_serve_requeued_requests_total"), "{m}");
+        assert!(m.contains("alora_serve_resticks_total"), "{m}");
+
+        // State conflicts and unknown replicas get the right envelopes.
+        let r = post(addr, "/cluster/replicas/1/fail", "");
+        assert!(r.contains("409"), "{r}");
+        assert!(r.contains("\"code\":\"replica_state\""), "{r}");
+        let r = post(addr, "/cluster/replicas/0/fail", "");
+        assert!(r.contains("409"), "no survivor: {r}");
+        let r = post(addr, "/cluster/replicas/9/drain", "");
+        assert!(r.contains("404"), "{r}");
+        assert!(r.contains("\"code\":\"replica_not_found\""), "{r}");
+        let r = post(addr, "/cluster/replicas/1/explode", "");
+        assert!(r.contains("404"), "unknown action routes nowhere: {r}");
+        // Restore the failed replica; it serves again (cold).
+        assert!(post(addr, "/cluster/replicas/1/restore", "").contains("200 OK"));
+        assert!(post(addr, "/generate", &gen_body).contains("200 OK"));
+        srv.shutdown();
+
+        // Single-engine servers refuse replica admin with a clear 400.
+        let mut single = start_sim_server();
+        let r = post(single.addr(), "/cluster/replicas/0/fail", "");
+        assert!(r.contains("400"), "{r}");
+        assert!(r.contains("no fleet"), "{r}");
+        single.shutdown();
+    }
+
+    #[test]
+    fn replica_action_path_parser() {
+        assert_eq!(parse_replica_action("/cluster/replicas/0/fail"), Some((0, "fail")));
+        assert_eq!(parse_replica_action("/cluster/replicas/3/drain"), Some((3, "drain")));
+        assert_eq!(
+            parse_replica_action("/cluster/replicas/12/restore"),
+            Some((12, "restore"))
+        );
+        assert_eq!(parse_replica_action("/cluster/replicas/x/fail"), None);
+        assert_eq!(parse_replica_action("/cluster/replicas/0/explode"), None);
+        assert_eq!(parse_replica_action("/cluster/replicas/0/fail/extra"), None);
+        assert_eq!(parse_replica_action("/cluster/replicas/0"), None);
+        assert_eq!(parse_replica_action("/cluster"), None);
     }
 
     #[test]

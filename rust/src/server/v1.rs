@@ -174,17 +174,26 @@ pub(crate) fn run_turn<D: EngineDriver>(
         Ok(out) => {
             let mut g = shared.engine.lock().unwrap();
             let st = &mut *g;
-            let rec = st
-                .sessions
-                .complete_turn(&mut st.engine, sid, &out)
-                .map_err(classify)?;
-            Ok(turn_json(st.engine.registry(), sid, &rec))
+            match st.sessions.complete_turn(&mut st.engine, sid, &out) {
+                Ok(rec) => Ok(turn_json(st.engine.registry(), sid, &rec)),
+                Err(e) => {
+                    // A completion the session cannot apply must still
+                    // clear OUR in-flight turn — every error exit routes
+                    // through an abort or the session 409s forever (the
+                    // stuck-turn bug). Guarded on the id: failover repair
+                    // may have aborted this turn already and a NEWER live
+                    // turn must not be destroyed.
+                    st.sessions.abort_turn_if(sid, rid);
+                    Err(classify(e))
+                }
+            }
         }
         Err(e) => {
             // The request was orphaned by wait_done; detach the session's
-            // pending turn so the conversation stays usable.
+            // pending turn (if it is still ours) so the conversation
+            // stays usable.
             let mut st = shared.engine.lock().unwrap();
-            st.sessions.abort_turn(sid);
+            st.sessions.abort_turn_if(sid, rid);
             Err(e)
         }
     }
@@ -272,7 +281,7 @@ pub(crate) fn stream_turn<D: EngineDriver>(
                 }
                 None => {
                     // Still running: the driver must discard its output.
-                    st.sessions.abort_turn(sid);
+                    st.sessions.abort_turn_if(sid, rid);
                     st.orphaned.insert(rid);
                 }
             }
@@ -300,6 +309,21 @@ fn stream_turn_events<D: EngineDriver>(
         let step = {
             let mut g = shared.engine.lock().unwrap();
             loop {
+                if g.failed.remove(&rid) {
+                    // Failover rejected this request on every survivor:
+                    // no more events will ever arrive (repair already
+                    // aborted the session's turn).
+                    let st = &mut *g;
+                    st.streams.remove(&rid);
+                    st.engine.unwatch(rid);
+                    break TurnWait::Fail(ApiError::new(
+                        "502 Bad Gateway",
+                        "request_failed",
+                        format!(
+                            "turn request {rid:?} was lost to a replica failure and could not be requeued"
+                        ),
+                    ));
+                }
                 let Some(sink) = g.streams.get_mut(&rid) else {
                     break TurnWait::Fail(ApiError::new(
                         "500 Internal Server Error",
@@ -317,7 +341,7 @@ fn stream_turn_events<D: EngineDriver>(
                     st.streams.remove(&rid);
                     st.orphaned.insert(rid);
                     st.engine.unwatch(rid);
-                    st.sessions.abort_turn(sid);
+                    st.sessions.abort_turn_if(sid, rid);
                     break TurnWait::Fail(ApiError::timeout(format!(
                         "turn request {rid:?} timed out"
                     )));
@@ -379,7 +403,15 @@ fn stream_turn_events<D: EngineDriver>(
                 *unapplied = None; // applied: cleanup must not re-apply
                 Ok(turn_json(st.engine.registry(), sid, &rec))
             }
-            Err(e) => Err(classify(e)),
+            Err(e) => {
+                // Unapplicable completion: clear OUR in-flight turn so the
+                // session keeps accepting turns (stuck-409 bugfix; id
+                // guard protects a newer turn), and stop the cleanup path
+                // from retrying the same apply.
+                st.sessions.abort_turn_if(sid, rid);
+                *unapplied = None;
+                Err(classify(e))
+            }
         }
     };
     match reply {

@@ -29,7 +29,7 @@
 use crate::engine::EngineDriver;
 use crate::request::session::{Session, SessionId, TurnId, TurnRecord};
 use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams};
-use crate::util::fxmap::FxHashMap;
+use crate::util::fxmap::{FxHashMap, FxHashSet};
 
 /// Owns every live session of one server (or one test harness) and
 /// drives their turns over an [`EngineDriver`].
@@ -126,6 +126,12 @@ impl SessionManager {
     /// drivers; the HTTP server splits begin/complete around its own
     /// wait). Steps the engine until the turn's output appears, leaving
     /// other traffic's outputs in place.
+    ///
+    /// Every error exit past submission aborts the in-flight turn: a turn
+    /// whose request died without an output (engine stall, requeue
+    /// reject) must not leave the session refusing new turns forever
+    /// (the stuck-409 bug — the pending turn could only be cleared by a
+    /// completion that will never come).
     pub fn run_turn<D: EngineDriver>(
         &mut self,
         engine: &mut D,
@@ -140,9 +146,73 @@ impl SessionManager {
             if let Some(out) = engine.take_finished_where(|o| o.id == rid).pop() {
                 break out;
             }
-            anyhow::ensure!(engine.step(), "engine stalled waiting on turn {rid:?}");
+            if !engine.step() {
+                self.abort_turn_if(sid, rid);
+                anyhow::bail!("engine stalled waiting on turn {rid:?}");
+            }
         };
         self.complete_turn(engine, sid, &out)
+    }
+
+    /// Repair sessions after a replica failure
+    /// ([`crate::cluster::Cluster::fail_replica`]): sessions whose prefix
+    /// lease died with the replica forget it (the next turn transparently
+    /// re-prefills — observable as recomputed tokens, never as an error),
+    /// sessions stuck to the dead replica clear their stickiness peer (the
+    /// next turn re-sticks through the routing policy, wherever its chain
+    /// scores best — cold if nothing survives; counted into the fleet's
+    /// `resticks_total` through the driver), and sessions whose in-flight
+    /// turn was REJECTED at requeue abort it (no output will ever come —
+    /// without the abort every later turn would 409, the stuck-turn bug).
+    /// Returns (leases dropped, stickiness cleared, turns aborted).
+    pub fn repair_after_failover<D: EngineDriver>(
+        &mut self,
+        engine: &mut D,
+        report: &crate::cluster::FailoverReport,
+    ) -> (usize, usize, usize) {
+        // Hash the report's id lists once: this loop runs over every live
+        // session while the serving lock is held, so per-session linear
+        // scans of a loaded victim's lists would go quadratic exactly
+        // when latency matters most.
+        let orphaned: FxHashSet<u64> = report.orphaned_leases.iter().copied().collect();
+        let rejected: FxHashSet<RequestId> = report.rejected.iter().copied().collect();
+        let relocated: FxHashSet<RequestId> = report.relocated.iter().copied().collect();
+        // The set-based form of `FailoverReport::strands`.
+        let stranded = |rid: RequestId| {
+            (rid.0 % report.num_replicas as u64) as usize == report.replica
+                && !relocated.contains(&rid)
+        };
+        let (mut leases, mut unstuck, mut aborted) = (0, 0, 0);
+        for s in self.sessions.values_mut() {
+            if s.leased_blocks > 0 && orphaned.contains(&s.id.0) {
+                s.leased_blocks = 0;
+                leases += 1;
+            }
+            // Clear stickiness only for PARKED sessions (no turn in
+            // flight). A session mid-turn is re-homed by that turn's own
+            // completion — requeued turns finish on a survivor and
+            // overwrite `last_request`, and a turn that finished on the
+            // victim (or was rejected and aborted below) leaves a stale
+            // peer that `submit_sticky`'s health check re-sticks — and
+            // counts — exactly once. Clearing here too would count the
+            // same migration twice.
+            if s.in_flight().is_none() {
+                if let Some(rid) = s.last_request {
+                    if stranded(rid) {
+                        s.last_request = None;
+                        unstuck += 1;
+                    }
+                }
+            }
+            if let Some(rid) = s.in_flight() {
+                if rejected.contains(&rid) {
+                    s.abort_pending();
+                    aborted += 1;
+                }
+            }
+        }
+        engine.note_resticks(unstuck as u64);
+        (leases, unstuck, aborted)
     }
 
     /// Abandon the in-flight turn (client went away). The engine keeps
@@ -151,6 +221,21 @@ impl SessionManager {
     /// turn.
     pub fn abort_turn(&mut self, sid: SessionId) -> Option<RequestId> {
         self.sessions.get_mut(&sid).and_then(Session::abort_pending)
+    }
+
+    /// Abort the in-flight turn only if it is `rid` — the guard every
+    /// *asynchronous* error path needs: by the time a waiter times out or
+    /// its socket dies, failover repair may already have aborted its turn
+    /// and the session may be running a NEWER turn, which an
+    /// unconditional abort would destroy. True if the abort happened.
+    pub fn abort_turn_if(&mut self, sid: SessionId, rid: RequestId) -> bool {
+        match self.sessions.get_mut(&sid) {
+            Some(s) if s.in_flight() == Some(rid) => {
+                s.abort_pending();
+                true
+            }
+            _ => false,
+        }
     }
 
     /// Close a session: release its prefix lease and drop its state.
@@ -175,9 +260,10 @@ impl SessionManager {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::adapter::AdapterId;
-    use crate::config::presets;
+    use crate::adapter::{AdapterId, AdapterRegistry};
+    use crate::config::{presets, EngineConfig};
     use crate::engine::Engine;
+    use crate::metrics::Metrics;
     use crate::pipeline::workload;
     use crate::simulator::SimExecutor;
 
@@ -186,6 +272,191 @@ mod tests {
         let reg = workload::build_registry(2, cfg.model.vocab_size, true);
         let exec = SimExecutor::new(&cfg);
         Engine::with_registry(cfg, reg, exec)
+    }
+
+    /// A driver whose requests die without ever producing an output:
+    /// submission succeeds (ids 0, 2, 4, ... — "replica 0 of 2"), stepping
+    /// stalls forever. Models the failure classes behind the stuck-409
+    /// bug: engine reject at requeue, abort, a request lost by a dead
+    /// replica.
+    struct DeadEndDriver {
+        cfg: EngineConfig,
+        reg: AdapterRegistry,
+        metrics: Metrics,
+        next: u64,
+    }
+
+    impl DeadEndDriver {
+        fn new() -> Self {
+            DeadEndDriver {
+                cfg: presets::tiny(),
+                reg: AdapterRegistry::tiny_default(1, 512, 4),
+                metrics: Metrics::new(),
+                next: 0,
+            }
+        }
+    }
+
+    impl EngineDriver for DeadEndDriver {
+        fn submit_salted(
+            &mut self,
+            _target: ModelTarget,
+            _prompt: Vec<u32>,
+            _params: crate::request::SamplingParams,
+            _priority: bool,
+            _cache_salt: u64,
+        ) -> anyhow::Result<RequestId> {
+            let id = RequestId(self.next);
+            self.next += 2;
+            Ok(id)
+        }
+
+        fn step(&mut self) -> bool {
+            false
+        }
+
+        fn clock(&self) -> f64 {
+            0.0
+        }
+
+        fn advance_clock_to(&mut self, _t: f64) {}
+
+        fn has_work(&self) -> bool {
+            true
+        }
+
+        fn num_waiting(&self) -> usize {
+            1
+        }
+
+        fn num_running(&self) -> usize {
+            0
+        }
+
+        fn take_finished(&mut self) -> Vec<RequestOutput> {
+            Vec::new()
+        }
+
+        fn finished_pending(&self) -> usize {
+            0
+        }
+
+        fn take_finished_where<F: FnMut(&RequestOutput) -> bool>(
+            &mut self,
+            _pred: F,
+        ) -> Vec<RequestOutput> {
+            Vec::new()
+        }
+
+        fn metrics(&self) -> &Metrics {
+            &self.metrics
+        }
+
+        fn metrics_mut(&mut self) -> &mut Metrics {
+            &mut self.metrics
+        }
+
+        fn config(&self) -> &EngineConfig {
+            &self.cfg
+        }
+
+        fn registry(&self) -> &AdapterRegistry {
+            &self.reg
+        }
+    }
+
+    #[test]
+    fn turn_dying_without_output_aborts_instead_of_wedging() {
+        // The stuck-409 regression (ISSUE 5 satellite): a turn whose
+        // request dies without a RequestOutput must not leave the session
+        // rejecting every later turn as `turn_in_flight`.
+        let mut d = DeadEndDriver::new();
+        let mut mgr = SessionManager::new();
+        let sid = mgr.create(0);
+        // While a turn is live the session 409s...
+        let (_t, rid) = mgr
+            .begin_turn(&mut d, sid, ModelTarget::Base, vec![1, 2, 3], 4, true)
+            .unwrap();
+        let err = mgr
+            .begin_turn(&mut d, sid, ModelTarget::Base, vec![9], 4, true)
+            .unwrap_err();
+        assert!(err.to_string().contains("in flight"), "{err}");
+        assert_eq!(mgr.get(sid).unwrap().in_flight(), Some(rid));
+        mgr.abort_turn(sid);
+        // ...and run_turn's own error exit (the request stalls and never
+        // produces output) aborts the pending turn instead of wedging.
+        let err = mgr
+            .run_turn(&mut d, sid, ModelTarget::Base, vec![4, 5], 4, true)
+            .unwrap_err();
+        assert!(err.to_string().contains("stalled"), "{err}");
+        assert!(
+            mgr.get(sid).unwrap().in_flight().is_none(),
+            "error exit must abort the dead turn"
+        );
+        // The session accepts a new turn immediately — no 409, no
+        // history damage.
+        assert!(mgr
+            .begin_turn(&mut d, sid, ModelTarget::Base, vec![6], 4, true)
+            .is_ok());
+        assert_eq!(mgr.get(sid).unwrap().history_len(), 0);
+    }
+
+    #[test]
+    fn failover_repair_aborts_rejected_turns_and_clears_dead_state() {
+        let mut d = DeadEndDriver::new();
+        let mut mgr = SessionManager::new();
+        let sid = mgr.create(0);
+        let (_t, rid) = mgr
+            .begin_turn(&mut d, sid, ModelTarget::Base, vec![1, 2], 4, true)
+            .unwrap();
+        // Fake a session that already completed a turn on "replica 0".
+        {
+            let s = mgr.sessions.get_mut(&sid).unwrap();
+            s.last_request = Some(RequestId(100)); // 100 % 2 == 0: stranded
+            s.leased_blocks = 3;
+        }
+        let report = crate::cluster::FailoverReport {
+            replica: 0,
+            num_replicas: 2,
+            requeued: 0,
+            orphaned_leases: vec![sid.0],
+            rejected: vec![rid],
+            relocated: Vec::new(),
+        };
+        let (leases, unstuck, aborted) = mgr.repair_after_failover(&mut d, &report);
+        // The mid-turn session does NOT count an unstuck: its stale peer
+        // is re-stuck (and counted) lazily by submit_sticky's health
+        // check — clearing here too would double-count the migration.
+        assert_eq!((leases, unstuck, aborted), (1, 0, 1));
+        let s = mgr.get(sid).unwrap();
+        assert_eq!(s.leased_blocks, 0, "orphaned lease forgotten");
+        assert_eq!(
+            s.last_request,
+            Some(RequestId(100)),
+            "mid-turn stickiness left for the lazy health-check re-stick"
+        );
+        assert!(s.in_flight().is_none(), "rejected turn aborted — no 409 wedge");
+        // A PARKED session (no turn in flight) does clear eagerly — the
+        // first session, now aborted, is parked too, so a second repair
+        // clears both.
+        let parked = mgr.create(0);
+        mgr.sessions.get_mut(&parked).unwrap().last_request = Some(RequestId(100));
+        let (_, unstuck, _) = mgr.repair_after_failover(&mut d, &report);
+        assert_eq!(unstuck, 2, "parked sessions' stickiness cleared");
+        assert!(mgr.get(parked).unwrap().last_request.is_none());
+        assert!(mgr.get(sid).unwrap().last_request.is_none());
+        // A relocated id is NOT stranded: stickiness to a survivor holds.
+        let report2 = crate::cluster::FailoverReport {
+            replica: 0,
+            num_replicas: 2,
+            requeued: 1,
+            orphaned_leases: Vec::new(),
+            rejected: Vec::new(),
+            relocated: vec![RequestId(42)],
+        };
+        assert!(!report2.strands(RequestId(42)));
+        assert!(report2.strands(RequestId(44)));
+        assert!(!report2.strands(RequestId(43)), "other replica's id untouched");
     }
 
     #[test]

@@ -6,11 +6,16 @@
 //! cross-model KV reuse survives horizontal scale-out only with
 //! cache-affinity placement.
 
+use std::collections::HashMap;
+
 use alora_serve::adapter::AdapterId;
-use alora_serve::cluster::{Cluster, RoutePolicy};
+use alora_serve::cluster::{Cluster, ReplicaHealth, RoutePolicy};
 use alora_serve::config::presets;
 use alora_serve::engine::{Engine, EngineDriver};
 use alora_serve::pipeline::{self, workload, PipelineKind, PipelineSpec};
+use alora_serve::request::session::SessionId;
+use alora_serve::request::{ModelTarget, RequestId, RequestOutput, SamplingParams};
+use alora_serve::session::SessionManager;
 use alora_serve::simulator::SimExecutor;
 
 const N_ADAPTERS: u32 = 3;
@@ -119,6 +124,177 @@ fn cluster_deterministic_across_runs() {
         (r.makespan, c.aggregate_hit_rate(), c.router().stats.routed.clone())
     };
     assert_eq!(run(), run());
+}
+
+// ---------------------------------------------------------------------------
+// ISSUE-5 failover acceptance: kill a replica mid-conversation.
+
+/// Drain one round of turns to completion and apply them; returns the
+/// per-turn outputs keyed by request id.
+fn drain_round(
+    c: &mut Cluster<SimExecutor>,
+    mgr: &mut SessionManager,
+    pending: &[(SessionId, RequestId)],
+) -> HashMap<RequestId, RequestOutput> {
+    let mut outs: HashMap<RequestId, RequestOutput> = HashMap::new();
+    loop {
+        for o in c.take_finished() {
+            outs.insert(o.id, o);
+        }
+        if pending.iter().all(|(_, rid)| outs.contains_key(rid)) {
+            break;
+        }
+        assert!(c.step(), "cluster stalled with turns outstanding");
+    }
+    for (sid, rid) in pending {
+        let out = outs.get(rid).expect("drained above");
+        mgr.complete_turn(c, *sid, out).expect("turn completion");
+    }
+    outs
+}
+
+#[test]
+fn failover_mid_conversation_loses_nothing_and_resticks_sessions() {
+    // 4 replicas, 12 sticky sessions (3 per replica under least-loaded
+    // first-turn placement). Replica 2 dies while every session's second
+    // turn is in flight.
+    let mut c = cluster(4, RoutePolicy::PrefixAffinity);
+    let mut mgr = SessionManager::new();
+    let sessions: Vec<SessionId> = (0..12).map(|_| mgr.create(0)).collect();
+
+    // Round 0: open every conversation (cold), then round 1 warms it.
+    for round in 0..2u32 {
+        let mut pending = Vec::new();
+        for (si, &sid) in sessions.iter().enumerate() {
+            let base = (si as u32 + 1) * 10_000 + round * 100;
+            let delta: Vec<u32> = if round == 0 {
+                (base..base + 256).collect()
+            } else {
+                (base..base + 32).collect()
+            };
+            let (_t, rid) = mgr
+                .begin_turn(&mut c, sid, ModelTarget::Base, delta, 16, true)
+                .unwrap();
+            pending.push((sid, rid));
+        }
+        drain_round(&mut c, &mut mgr, &pending);
+    }
+    assert_eq!(c.router().stats.sticky_routed, 12, "round 1 all sticky");
+
+    // Round 2: submit everywhere, step mid-prefill, kill replica 2.
+    let victim = 2usize;
+    let mut pending = Vec::new();
+    for (si, &sid) in sessions.iter().enumerate() {
+        let base = (si as u32 + 1) * 10_000 + 200;
+        let (_t, rid) = mgr
+            .begin_turn(&mut c, sid, ModelTarget::Base, (base..base + 32).collect(), 16, true)
+            .unwrap();
+        pending.push((sid, rid));
+    }
+    for _ in 0..3 {
+        c.step();
+    }
+    let victim_sessions: Vec<SessionId> = sessions
+        .iter()
+        .copied()
+        .filter(|sid| {
+            let peer = mgr.get(*sid).unwrap().last_request.unwrap();
+            (peer.0 % 4) as usize == victim
+        })
+        .collect();
+    assert!(!victim_sessions.is_empty(), "victim replica served no sessions");
+    let report = c.fail_replica(victim).unwrap();
+    assert!(report.requeued > 0, "mid-burst work was in flight");
+    assert!(report.rejected.is_empty(), "identical survivors accept everything");
+    mgr.repair_after_failover(&mut c, &report);
+    assert_eq!(c.health(victim), ReplicaHealth::Down);
+
+    // (a) Every submitted request still finishes, under its original id.
+    let outs = drain_round(&mut c, &mut mgr, &pending);
+    assert_eq!(outs.len(), pending.len(), "zero lost requests");
+    // The victim's sessions recomputed their chains on survivors
+    // (observable as recomputed tokens, not an error).
+    for &sid in &victim_sessions {
+        let rec = mgr.get(sid).unwrap().turns().last().unwrap().clone();
+        assert_eq!(rec.cached_tokens, 0, "requeued turn re-prefilled cold");
+    }
+
+    // (b) The next turn succeeds and re-sticks on a survivor: the
+    // requeued turn's completion re-homed the conversation, so turn 3 is
+    // sticky AND warm.
+    let sticky_before = c.router().stats.sticky_routed;
+    let mut pending = Vec::new();
+    for (si, &sid) in sessions.iter().enumerate() {
+        let base = (si as u32 + 1) * 10_000 + 300;
+        let (_t, rid) = mgr
+            .begin_turn(&mut c, sid, ModelTarget::Base, (base..base + 32).collect(), 16, true)
+            .unwrap();
+        pending.push((sid, rid));
+    }
+    drain_round(&mut c, &mut mgr, &pending);
+    assert_eq!(
+        c.router().stats.sticky_routed - sticky_before,
+        12,
+        "every session re-stuck (survivor-homed peers are healthy)"
+    );
+    for &sid in &victim_sessions {
+        let s = mgr.get(sid).unwrap();
+        let home = (s.last_request.unwrap().0 % 4) as usize;
+        assert_ne!(home, victim, "session re-homed off the dead replica");
+        let rec = s.turns().last().unwrap();
+        assert!(rec.cached_tokens > 256, "re-stuck turn warm: {}", rec.cached_tokens);
+    }
+
+    // (c) Invariants hold on every survivor (and the wiped victim).
+    for sid in sessions {
+        mgr.delete(&mut c, sid).unwrap();
+    }
+    for i in 0..4 {
+        c.replica(i).check_invariants().unwrap();
+    }
+    assert_eq!(c.replica(victim).routing_summary().committed_blocks(), 0);
+}
+
+#[test]
+fn drain_finishes_in_flight_conversations_before_exclusion() {
+    // (d) drain: in-flight work on the draining replica completes there;
+    // only NEW placements are excluded.
+    let mut c = cluster(2, RoutePolicy::PrefixAffinity);
+    let mut mgr = SessionManager::new();
+    let sid = mgr.create(0);
+    let (_t, rid) = mgr
+        .begin_turn(&mut c, sid, ModelTarget::Base, (0..256).collect(), 16, true)
+        .unwrap();
+    c.step(); // prefill under way
+    let home = (rid.0 % 2) as usize;
+    c.drain_replica(home).unwrap();
+    assert_eq!(c.health(home), ReplicaHealth::Draining);
+    // The in-flight turn completes ON the draining replica.
+    let outs = drain_round(&mut c, &mut mgr, &[(sid, rid)]);
+    assert!(outs.contains_key(&rid));
+    assert_eq!(c.replica(home).metrics.requests_finished, 1);
+    // New traffic avoids it; the session's next turn re-sticks elsewhere.
+    let one_shot = c
+        .submit(
+            ModelTarget::Base,
+            vec![7; 64],
+            SamplingParams { max_new_tokens: 4, ..Default::default() },
+        )
+        .unwrap();
+    assert_ne!((one_shot.0 % 2) as usize, home, "new work excluded from drain");
+    let t2 = mgr
+        .run_turn(&mut c, sid, ModelTarget::Base, (900..932).collect(), 8, true)
+        .unwrap();
+    assert_eq!(c.router().stats.resticks, 1);
+    assert_eq!(t2.cached_tokens, 0, "re-stuck cold off the draining replica");
+    c.run_until_idle();
+    // Restore returns it to rotation with its cache intact (drain wipes
+    // nothing).
+    c.restore_replica(home).unwrap();
+    assert!(c.replica(home).routing_summary().committed_blocks() > 0);
+    mgr.delete(&mut c, sid).unwrap();
+    c.replica(0).check_invariants().unwrap();
+    c.replica(1).check_invariants().unwrap();
 }
 
 #[test]

@@ -611,6 +611,67 @@ fn session_lifecycle_document_and_errors() {
 }
 
 // ---------------------------------------------------------------------------
+// Satellite (ISSUE 5): stuck-409 regression — a client that disconnects
+// mid-SSE must not leave the session's turn in flight forever.
+
+#[test]
+fn client_disconnect_mid_stream_does_not_wedge_the_session() {
+    let cfg = presets::granite_8b();
+    let mut srv = Server::start(engine_with(&cfg), "127.0.0.1:0").unwrap();
+    let addr = srv.addr();
+    let sid = body_json(&post(addr, "/v1/sessions", "{}"))
+        .get("session")
+        .and_then(Json::as_u64)
+        .unwrap();
+    // Start a long streaming turn and slam the connection shut without
+    // reading a byte: the server's SSE writes hit a dead socket
+    // mid-stream, which is exactly the path that used to leave the
+    // pending turn set forever (every later turn 409'd).
+    {
+        let delta: Vec<u32> = (0..256).collect();
+        let body = format!(
+            r#"{{"tokens": {}, "max_new_tokens": 128, "stream": true}}"#,
+            tokens_json(&delta)
+        );
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(
+            format!(
+                "POST /v1/sessions/{sid}/turns HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        s.shutdown(std::net::Shutdown::Both).ok();
+    }
+    // The cleanup path either applies the finished turn (it completed
+    // server-side; only the client missed the final event) or aborts the
+    // dead one — either way the session accepts a new turn. A transient
+    // 409 while the disconnected turn is still genuinely running is
+    // legal; a permanent one is the regression.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let r = post(
+            addr,
+            &format!("/v1/sessions/{sid}/turns"),
+            r#"{"tokens": [1,2,3], "max_new_tokens": 4}"#,
+        );
+        if r.contains("200 OK") {
+            break;
+        }
+        assert!(r.contains("409"), "unexpected response: {r}");
+        assert!(
+            std::time::Instant::now() < deadline,
+            "session wedged in turn_in_flight after client disconnect: {r}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    let doc = body_json(&request(addr, "GET", &format!("/v1/sessions/{sid}"), ""));
+    assert_eq!(doc.get("in_flight").and_then(Json::as_bool), Some(false));
+    srv.shutdown();
+}
+
+// ---------------------------------------------------------------------------
 // Satellite: the streaming smoke `make server-smoke` runs — session
 // create → 3 streaming delta turns → delete.
 
