@@ -36,12 +36,16 @@ bench:
 	cargo bench --bench bench_hotpath
 
 # Fast end-to-end smoke over the fleet + memory-budget + failover paths:
-# the cluster bench on its quick grid, the adapter-memory figure, and the
-# failover figure (kill 1 of 4 replicas mid-burst) in quick mode.
+# the cluster bench on its quick grid, the adapter-memory figure, the
+# failover figure (kill 1 of 4 replicas mid-burst) in quick mode, and the
+# session-scale harness at its quick tier (10^5 concurrent sessions —
+# writes BENCH_scale.json at the repo root; CI uploads it and diffs the
+# p99 TTFT against the committed baseline, advisory).
 bench-smoke:
 	cargo bench --bench bench_cluster -- --quick
 	cargo run --release -- figure --id adapter_memory --quick
 	cargo run --release -- figure --id failover --quick
+	cargo bench --bench bench_scale -- --quick
 
 # HTTP surface smoke (mirrors the CI step): the HTTP integration suite
 # plus the v1 sessions suite, which includes the streaming smoke

@@ -1,0 +1,97 @@
+//! `bench_scale`: the million-session serving harness (ISSUE 6).
+//!
+//! `--quick` drives 10^5 concurrent sessions through the fleet (the CI
+//! `make bench-smoke` tier); the default tier drives 10^6. Bursty
+//! diurnal-mixture Poisson arrivals, p50/p99 TTFT and ITL at the
+//! serving boundary, per-turn placement cost in concrete ops, and the
+//! peak memory ceilings (KV blocks, session table, bounded metrics
+//! reservoirs). Writes `BENCH_scale.json` at the repo root — CI uploads
+//! it and diffs the p99 TTFT against the committed baseline
+//! (advisory only; virtual-time results are seeded and deterministic,
+//! so a real diff means a real behavior change).
+
+use alora_serve::figures::scale::{run_harness, ScaleConfig};
+use alora_serve::util::bench::section;
+use alora_serve::util::json::Json;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick { ScaleConfig::quick_bench() } else { ScaleConfig::full_bench() };
+    section(&format!(
+        "scale harness: {} concurrent sessions, {} follow-up turns ({})",
+        cfg.sessions,
+        cfg.followups,
+        if quick { "quick tier" } else { "full tier" }
+    ));
+    let t0 = std::time::Instant::now();
+    let mut r = run_harness(&cfg);
+    let wall_s = t0.elapsed().as_secs_f64();
+    assert_eq!(r.final_sessions, 0, "TTL sweep left sessions behind");
+
+    let ttft_p50 = r.ttft.percentile(50.0);
+    let ttft_p99 = r.ttft.p99();
+    let itl_p50 = r.itl.percentile(50.0);
+    let itl_p99 = r.itl.p99();
+    println!(
+        "turns {}  virtual {:.1}s  wall {:.1}s  ({:.0} turns/wall-s)",
+        r.turns,
+        r.virtual_s,
+        wall_s,
+        r.turns as f64 / wall_s.max(1e-9)
+    );
+    println!("TTFT p50 {:.4}s  p99 {:.4}s", ttft_p50, ttft_p99);
+    println!("ITL  p50 {:.5}s  p99 {:.5}s", itl_p50, itl_p99);
+    println!(
+        "placement cost/turn: {:.2} hash ops, {:.2} probe ops",
+        r.hash_ops_per_turn(),
+        r.probe_ops_per_turn()
+    );
+    println!(
+        "ceilings: {} sessions, {} KV blocks, {} retained metric samples; {} expired",
+        r.peak_sessions, r.peak_blocks, r.metrics_retained, r.expired
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("scale")),
+        ("quick", Json::Bool(quick)),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("sessions", Json::num(r.sessions as f64)),
+        ("turns", Json::num(r.turns as f64)),
+        ("replicas", Json::num(cfg.replicas as f64)),
+        ("virtual_s", Json::num(r.virtual_s)),
+        ("wall_s", Json::num(wall_s)),
+        (
+            "ttft_s",
+            Json::obj(vec![("p50", Json::num(ttft_p50)), ("p99", Json::num(ttft_p99))]),
+        ),
+        (
+            "itl_s",
+            Json::obj(vec![("p50", Json::num(itl_p50)), ("p99", Json::num(itl_p99))]),
+        ),
+        (
+            "placement_cost",
+            Json::obj(vec![
+                ("hash_ops_per_turn", Json::num(r.hash_ops_per_turn())),
+                ("probe_ops_per_turn", Json::num(r.probe_ops_per_turn())),
+            ]),
+        ),
+        (
+            "memory_ceiling",
+            Json::obj(vec![
+                ("peak_sessions", Json::num(r.peak_sessions as f64)),
+                ("peak_kv_blocks", Json::num(r.peak_blocks as f64)),
+                ("metrics_retained_samples", Json::num(r.metrics_retained as f64)),
+            ]),
+        ),
+        ("sessions_expired", Json::num(r.expired as f64)),
+        (
+            "note",
+            Json::str(
+                "seeded virtual-time run; regenerate with \
+                 `cargo bench --bench bench_scale -- --quick` (make bench-smoke)",
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_scale.json", format!("{report}\n")).expect("write BENCH_scale.json");
+    println!("wrote BENCH_scale.json");
+}

@@ -617,28 +617,82 @@ impl<E: Executor> Cluster<E> {
         } else {
             Vec::new()
         };
-        let views = self
-            .replicas
-            .iter()
-            .enumerate()
-            .map(|(i, r)| ReplicaView {
-                load: r.num_running() + r.num_waiting(),
-                affinity_blocks: if chain.is_empty() {
-                    0
-                } else {
-                    r.routing_summary().matching_prefix(&chain)
-                },
-                // Adapter-residency term: weight pages this replica would
-                // NOT have to load for the request (0 with paging off —
-                // then weights are free everywhere and the term vanishes).
-                adapter_blocks: target
-                    .adapter()
-                    .map(|aid| r.adapter_affinity_blocks(aid))
-                    .unwrap_or(0),
-                healthy: self.health[i] == ReplicaHealth::Up,
-            })
-            .collect();
+        let views = self.views_for_chain(target, &chain, None);
         (views, chain)
+    }
+
+    /// Score every replica against a pre-hashed chain, cheaply:
+    ///
+    /// - **Lease hint** — if `lease` names a prefix lease a replica pins,
+    ///   that replica's summary maintains the chain's matched run
+    ///   incrementally (see `HashSummary::track`), so its affinity is
+    ///   read in O(1) (plus a probe per delta block past the tracked
+    ///   chain) instead of scanning. The hint is validated in O(1):
+    ///   block hashes chain each block to its parent, so a matching last
+    ///   hash means the tracked chain IS a prefix of the query chain.
+    /// - **Probe watermark** — replicas whose best possible score
+    ///   (`chain.len() + adapter_blocks - penalty × load`) cannot beat
+    ///   the best score already seen are reported with affinity 0 and
+    ///   never probed. The router's decision is provably unchanged: the
+    ///   true argmax replica is always probed (its true score exceeds
+    ///   the watermark that would have skipped it), skipped replicas'
+    ///   reported scores never exceed an earlier probed one (so neither
+    ///   the argmax nor its first-index tie-break can flip), and the
+    ///   all-reported-zero cold corner falls back to least-loaded, which
+    ///   the skip condition guarantees is the same replica the full scan
+    ///   would have picked. Unhealthy replicas are never probed at all —
+    ///   every policy ignores their affinity.
+    fn views_for_chain(
+        &self,
+        target: ModelTarget,
+        chain: &[BlockHash],
+        lease: Option<u64>,
+    ) -> Vec<ReplicaView> {
+        let penalty = self.router.load_penalty();
+        let mut best = f64::NEG_INFINITY;
+        let mut views = Vec::with_capacity(self.replicas.len());
+        for (i, r) in self.replicas.iter().enumerate() {
+            let load = r.num_running() + r.num_waiting();
+            // Adapter-residency term: weight pages this replica would
+            // NOT have to load for the request (0 with paging off —
+            // then weights are free everywhere and the term vanishes).
+            let adapter_blocks = target
+                .adapter()
+                .map(|aid| r.adapter_affinity_blocks(aid))
+                .unwrap_or(0);
+            let healthy = self.health[i] == ReplicaHealth::Up;
+            let affinity_blocks = if chain.is_empty() || !healthy {
+                0
+            } else {
+                let ub = (chain.len() + adapter_blocks) as f64 - penalty * load as f64;
+                if ub <= best {
+                    0 // cannot win: skip the probe, report no affinity
+                } else {
+                    let summary = r.routing_summary();
+                    let tracked = lease.and_then(|key| {
+                        let (matched, len) = summary.tracked_prefix(key)?;
+                        let tc = summary.tracked_chain(key)?;
+                        let valid =
+                            len > 0 && len <= chain.len() && tc[len - 1] == chain[len - 1];
+                        if !valid {
+                            return None;
+                        }
+                        Some(if matched < len {
+                            // First miss inside the tracked prefix: a
+                            // scan would stop exactly there.
+                            matched
+                        } else {
+                            len + summary.matching_prefix(&chain[len..])
+                        })
+                    });
+                    let a = tracked.unwrap_or_else(|| summary.matching_prefix(chain));
+                    best = best.max((a + adapter_blocks) as f64 - penalty * load as f64);
+                    a
+                }
+            };
+            views.push(ReplicaView { load, affinity_blocks, adapter_blocks, healthy });
+        }
+        views
     }
 }
 
@@ -774,6 +828,65 @@ impl<E: Executor> EngineDriver for Cluster<E> {
         Ok(id)
     }
 
+    /// The hot path for conversation turns at scale: the session layer
+    /// already extended its cached chain by the delta turn, so neither
+    /// the sticky fast path (no routing scan at all) nor the re-stick
+    /// fallback (scored via [`Cluster::views_for_chain`] with the lease
+    /// hint) rehashes the conversation history — per-turn placement work
+    /// is O(delta + replicas), independent of how long the session is.
+    fn submit_sticky_prehashed(
+        &mut self,
+        target: ModelTarget,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        priority: bool,
+        cache_salt: u64,
+        peer: Option<RequestId>,
+        lease: Option<u64>,
+        chain: Vec<BlockHash>,
+    ) -> anyhow::Result<RequestId> {
+        let sticky = peer.map(|p| self.replica_of(p));
+        match sticky {
+            Some(ri) if self.health[ri] == ReplicaHealth::Up => {
+                let now = self.clock();
+                let r = &mut self.replicas[ri];
+                if !r.has_work() && r.clock() < now {
+                    r.advance_clock_to(now);
+                }
+                let id =
+                    r.submit_prehashed(target, prompt, params, priority, cache_salt, chain)?;
+                self.router.record_sticky(ri);
+                Ok(id)
+            }
+            unstuck => {
+                anyhow::ensure!(
+                    self.num_healthy() > 0,
+                    "no healthy replicas: the whole fleet is down or draining"
+                );
+                if unstuck.is_some() {
+                    // The conversation's replica is down or draining:
+                    // re-stick through the routing policy.
+                    self.router.stats.resticks += 1;
+                }
+                // Chain-blind policies never look at affinity; don't pay
+                // for probes they'd ignore (mirrors `views_for`).
+                let score_chain: &[BlockHash] =
+                    if self.router.needs_chain() { &chain } else { &[] };
+                let views = self.views_for_chain(target, score_chain, lease);
+                let placement = self.router.choose(&views);
+                let now = self.clock();
+                let r = &mut self.replicas[placement.replica];
+                if !r.has_work() && r.clock() < now {
+                    r.advance_clock_to(now);
+                }
+                let id =
+                    r.submit_prehashed(target, prompt, params, priority, cache_salt, chain)?;
+                self.router.record(placement);
+                Ok(id)
+            }
+        }
+    }
+
     fn watch(&mut self, id: RequestId) {
         let ri = self.replica_of(id);
         self.replicas[ri].watch(id);
@@ -817,6 +930,29 @@ impl<E: Executor> EngineDriver for Cluster<E> {
             return 0;
         }
         self.replicas[ri].lease_prefix(lease, tokens, cache_salt)
+    }
+
+    /// Prehashed form of [`EngineDriver::acquire_lease`]: the session
+    /// layer's cached chain goes straight to the replica's lease table,
+    /// which extends an existing lease in O(delta) — no per-turn rehash
+    /// of the conversation history, no full re-pin.
+    fn acquire_lease_prehashed(
+        &mut self,
+        lease: u64,
+        chain: &[BlockHash],
+        peer: Option<RequestId>,
+    ) -> usize {
+        let Some(peer) = peer else { return 0 };
+        let ri = self.replica_of(peer);
+        for (i, r) in self.replicas.iter_mut().enumerate() {
+            if i != ri {
+                r.release_prefix_lease(lease);
+            }
+        }
+        if self.health[ri] == ReplicaHealth::Down {
+            return 0;
+        }
+        self.replicas[ri].lease_prefix_prehashed(lease, chain)
     }
 
     fn release_lease(&mut self, lease: u64) {

@@ -135,6 +135,13 @@ impl Router {
         self.cfg.policy
     }
 
+    /// The load-penalty coefficient (blocks per queued request) — the
+    /// cluster's probe watermark needs it to upper-bound a replica's
+    /// score before paying for a summary scan.
+    pub fn load_penalty(&self) -> f64 {
+        self.cfg.load_penalty_blocks
+    }
+
     /// Does this policy need the request's hash chain scored per replica?
     /// (Lets the cluster skip hashing entirely for RR / least-loaded /
     /// adapter-affinity, which never look at the chain.)
@@ -203,9 +210,16 @@ impl Router {
         let score =
             |v: &ReplicaView| value(v) as f64 - self.cfg.load_penalty_blocks * v.load as f64;
         let mut pick = views.iter().position(|v| v.healthy).expect("checked in choose");
+        // Hoist the incumbent's score out of the loop: re-scoring
+        // `views[pick]` on every comparison doubled the scan's work.
+        let mut pick_score = score(&views[pick]);
         for (j, v) in views.iter().enumerate() {
-            if v.healthy && score(v) > score(&views[pick]) {
-                pick = j;
+            if v.healthy {
+                let sc = score(v);
+                if sc > pick_score {
+                    pick = j;
+                    pick_score = sc;
+                }
             }
         }
         let blocks = value(&views[pick]);

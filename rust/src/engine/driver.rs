@@ -19,6 +19,7 @@
 use crate::adapter::AdapterRegistry;
 use crate::config::EngineConfig;
 use crate::engine::{Engine, Executor};
+use crate::kvcache::block::BlockHash;
 use crate::metrics::Metrics;
 use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams, TurnEvent};
 
@@ -53,6 +54,32 @@ pub trait EngineDriver {
         self.submit_salted(target, prompt, params, priority, cache_salt)
     }
 
+    /// [`EngineDriver::submit_sticky`] with the prompt's block-hash chain
+    /// already computed. The session layer caches each conversation's
+    /// chain and extends it O(delta tokens) per turn; passing it here
+    /// lets routing and admission skip rehashing the whole history.
+    /// `lease` names the session's prefix lease so a re-routing cluster
+    /// can read the incrementally-maintained affinity of the replica
+    /// pinning it instead of probing. The chain is trusted (it must come
+    /// from the driver's own salting context — see
+    /// `Engine::submit_prehashed`); drivers without a prehashed path
+    /// simply drop both hints.
+    #[allow(clippy::too_many_arguments)]
+    fn submit_sticky_prehashed(
+        &mut self,
+        target: ModelTarget,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        priority: bool,
+        cache_salt: u64,
+        peer: Option<RequestId>,
+        lease: Option<u64>,
+        chain: Vec<BlockHash>,
+    ) -> anyhow::Result<RequestId> {
+        let _ = (lease, chain);
+        self.submit_sticky(target, prompt, params, priority, cache_salt, peer)
+    }
+
     /// Subscribe to per-request [`TurnEvent`]s (streaming turns). The
     /// default is a no-op: drivers without an event surface simply never
     /// deliver events (and [`EngineDriver::take_events`] stays empty).
@@ -84,6 +111,20 @@ pub trait EngineDriver {
         peer: Option<RequestId>,
     ) -> usize {
         let _ = (lease, tokens, cache_salt, peer);
+        0
+    }
+
+    /// [`EngineDriver::acquire_lease`] with the chain already hashed
+    /// (base context + salt — what the session layer's cached chain
+    /// holds). Returns total blocks pinned under the lease (default: 0 —
+    /// no retention surface).
+    fn acquire_lease_prehashed(
+        &mut self,
+        lease: u64,
+        chain: &[BlockHash],
+        peer: Option<RequestId>,
+    ) -> usize {
+        let _ = (lease, chain, peer);
         0
     }
 
@@ -268,6 +309,20 @@ impl<E: Executor> EngineDriver for Engine<E> {
         Engine::take_events(self)
     }
 
+    fn submit_sticky_prehashed(
+        &mut self,
+        target: ModelTarget,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        priority: bool,
+        cache_salt: u64,
+        _peer: Option<RequestId>,
+        _lease: Option<u64>,
+        chain: Vec<BlockHash>,
+    ) -> anyhow::Result<RequestId> {
+        Engine::submit_prehashed(self, target, prompt, params, priority, cache_salt, chain)
+    }
+
     fn acquire_lease(
         &mut self,
         lease: u64,
@@ -276,6 +331,15 @@ impl<E: Executor> EngineDriver for Engine<E> {
         _peer: Option<RequestId>,
     ) -> usize {
         Engine::lease_prefix(self, lease, tokens, cache_salt)
+    }
+
+    fn acquire_lease_prehashed(
+        &mut self,
+        lease: u64,
+        chain: &[BlockHash],
+        _peer: Option<RequestId>,
+    ) -> usize {
+        Engine::lease_prefix_prehashed(self, lease, chain)
     }
 
     fn release_lease(&mut self, lease: u64) {

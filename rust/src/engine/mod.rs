@@ -686,7 +686,16 @@ impl<E: Executor> Engine<E> {
             .map(|(_, ctx)| ctx)
             .expect("base target always has a hash context");
         let chain = block_hashes(tokens, self.cfg.cache.block_size as usize, &ctx);
-        let pinned = self.kv.acquire_lease(lease, &chain);
+        self.lease_prefix_prehashed(lease, &chain)
+    }
+
+    /// [`Self::lease_prefix`] with the chain already hashed — the session
+    /// layer caches each conversation's chain and extends it O(delta) per
+    /// turn, so re-leasing must not rehash the whole history. The same
+    /// trust rule as [`Self::submit_prehashed`] applies: the chain must
+    /// come from the engine's own `request_hash_context` salting.
+    pub(crate) fn lease_prefix_prehashed(&mut self, lease: u64, chain: &[BlockHash]) -> usize {
+        let pinned = self.kv.acquire_lease(lease, chain);
         // Refresh the gauge here, not just per step: leases change while
         // the engine is idle (between turns), and /metrics must not lag.
         self.metrics.leased_blocks = self.kv.leased_blocks() as u64;

@@ -32,6 +32,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod scale;
 pub mod table1;
 pub mod table2;
 
@@ -256,9 +257,12 @@ pub fn run_by_id(id: &str, quick: bool) -> Vec<Table> {
         "adapter_memory" => vec![adapter_memory::run(quick)],
         "failover" => vec![failover::run(quick)],
         "ablations" => ablations::run_all(),
+        // Deliberately not part of `all`: the scale harness is a
+        // long-running bench-tier figure (like `ablations`).
+        "scale" => vec![scale::run(quick)],
         other => panic!(
             "unknown figure id `{other}` (try table1, fig6..fig15, cluster, \
-             adapter_memory, failover, ablations, all)"
+             adapter_memory, failover, ablations, scale, all)"
         ),
     }
 }

@@ -1,0 +1,301 @@
+//! `scale` figure + the million-session bench harness (ISSUE 6).
+//!
+//! Drives N concurrent conversations through a replica fleet under a
+//! bursty diurnal-mixture Poisson arrival process and reports **tail**
+//! latency (p50/p99 TTFT and ITL — means hide exactly the tail the
+//! serving claims are about), per-turn placement cost in concrete ops
+//! (block hashes + sketch probes at submit/complete time), and the peak
+//! memory ceilings: in-use KV blocks, live sessions, and the bounded
+//! metrics reservoirs. The `scale` figure (reachable via
+//! `figure --id scale`, deliberately not part of `all`) runs a shrunk
+//! two-point grid whose money shape is the placement-cost column staying
+//! FLAT as the session table grows; `bench_scale` runs the same harness
+//! at 10^5 (`--quick`) / 10^6 sessions and writes `BENCH_scale.json`.
+
+use super::Table;
+use crate::adapter::AdapterId;
+use crate::cluster::{Cluster, RoutePolicy};
+use crate::config::presets;
+use crate::engine::{Engine, EngineDriver};
+use crate::kvcache::{prefix, summary};
+use crate::pipeline::workload;
+use crate::request::session::SessionId;
+use crate::request::{ModelTarget, RequestId};
+use crate::session::SessionManager;
+use crate::simulator::SimExecutor;
+use crate::util::fxmap::FxHashMap;
+use crate::util::rng::Rng;
+use crate::util::stats::Samples;
+
+/// One harness run's knobs. Token sizes are deliberately small: the
+/// harness measures the *serving control plane* at scale (placement,
+/// hashing, leases, expiry), not model compute.
+#[derive(Debug, Clone)]
+pub struct ScaleConfig {
+    /// Concurrent conversations to ramp the session table up to.
+    pub sessions: usize,
+    /// Follow-up (delta) turns measured after the ramp.
+    pub followups: usize,
+    pub replicas: usize,
+    /// Base arrival rate in turns per virtual second; the diurnal
+    /// mixture multiplies it per day phase.
+    pub arrival_rate: f64,
+    /// Admission throttle: max turns in flight across the fleet.
+    pub max_in_flight: usize,
+    /// First-turn prompt length (tokens).
+    pub first_len: usize,
+    /// Follow-up delta length (tokens).
+    pub delta_len: usize,
+    pub gen_tokens: u32,
+    /// Idle TTL handed to the SessionManager; the end-of-run sweep
+    /// advances past it and must collapse the table to zero.
+    pub idle_ttl: f64,
+    pub seed: u64,
+}
+
+impl ScaleConfig {
+    /// Shared shape; only the session count scales between tiers.
+    pub fn sized(sessions: usize) -> Self {
+        ScaleConfig {
+            sessions,
+            followups: sessions / 4,
+            replicas: 4,
+            arrival_rate: 256.0,
+            max_in_flight: 512,
+            first_len: 64,
+            delta_len: 16,
+            gen_tokens: 4,
+            idle_ttl: 3600.0,
+            seed: 0x5CA1E,
+        }
+    }
+
+    /// `bench_scale --quick`: 10^5 concurrent sessions.
+    pub fn quick_bench() -> Self {
+        Self::sized(100_000)
+    }
+
+    /// `bench_scale` full tier: 10^6 concurrent sessions.
+    pub fn full_bench() -> Self {
+        Self::sized(1_000_000)
+    }
+}
+
+/// What one harness run measured.
+#[derive(Debug)]
+pub struct ScaleReport {
+    pub sessions: usize,
+    pub turns: u64,
+    pub ttft: Samples,
+    pub itl: Samples,
+    /// Block-hash / sketch-probe ops spent at submit + complete time
+    /// (placement, chain extension, lease advance). Decode-side
+    /// generation hashing is excluded — that is compute, not placement.
+    pub hash_ops: u64,
+    pub probe_ops: u64,
+    pub peak_sessions: usize,
+    /// Fleet-wide peak of in-use KV blocks.
+    pub peak_blocks: u64,
+    /// Total retained latency samples across every replica's per-turn
+    /// reservoirs — the bounded-metrics memory ceiling.
+    pub metrics_retained: usize,
+    pub expired: u64,
+    pub final_sessions: usize,
+    /// Virtual seconds the measured workload spanned (pre-expiry).
+    pub virtual_s: f64,
+}
+
+impl ScaleReport {
+    pub fn hash_ops_per_turn(&self) -> f64 {
+        self.hash_ops as f64 / self.turns.max(1) as f64
+    }
+
+    pub fn probe_ops_per_turn(&self) -> f64 {
+        self.probe_ops as f64 / self.turns.max(1) as f64
+    }
+}
+
+/// Diurnal mixture over a 60-virtual-second "day": night lull, daytime
+/// baseline, evening burst. Mean multiplier ≈ 1.33, peak 2.65× — the
+/// bursts are what push queueing into the p99.
+fn diurnal_rate(base: f64, t: f64) -> f64 {
+    const DAY_S: f64 = 60.0;
+    let phase = ((t / (DAY_S / 3.0)) as usize) % 3;
+    base * [0.35, 1.0, 2.65][phase]
+}
+
+/// Run the harness: ramp `sessions` conversations into the table, then
+/// `followups` delta turns against it (every 8th an aLoRA invocation
+/// branch), all under the arrival process and the in-flight throttle;
+/// finish with a TTL sweep that must empty the table.
+pub fn run_harness(cfg: &ScaleConfig) -> ScaleReport {
+    let vocab = presets::granite_8b().model.vocab_size;
+    let mut c = Cluster::from_factory(cfg.replicas, RoutePolicy::PrefixAffinity, |_| {
+        let e_cfg = presets::granite_8b();
+        let reg = workload::build_registry(2, e_cfg.model.vocab_size, true);
+        let exec = SimExecutor::new(&e_cfg);
+        Engine::with_registry(e_cfg, reg, exec)
+    })
+    .expect("cluster construction");
+    let mut mgr = SessionManager::with_limits(Some(cfg.idle_ttl), None);
+    let mut rng = Rng::new(cfg.seed);
+    let total = cfg.sessions + cfg.followups;
+    let mut in_flight: FxHashMap<RequestId, SessionId> = FxHashMap::default();
+    let mut parked: Vec<SessionId> = Vec::with_capacity(cfg.sessions);
+    let (mut ttft, mut itl) = (Samples::new(), Samples::new());
+    let (mut hash_ops, mut probe_ops) = (0u64, 0u64);
+    let (mut begun, mut completed) = (0usize, 0u64);
+    let (mut peak_sessions, mut peak_blocks) = (0usize, 0u64);
+    let mut next_t = rng.exponential(cfg.arrival_rate);
+    // Drain the thread-local counters so earlier work on this thread is
+    // not billed to the harness.
+    let _ = prefix::take_hash_ops();
+    let _ = summary::take_probe_ops();
+    while completed < total as u64 {
+        // Admit every due arrival the throttle allows.
+        while begun < total && in_flight.len() < cfg.max_in_flight && next_t <= c.clock() {
+            let (sid, target, delta, append) = if begun < cfg.sessions {
+                // Ramp: a brand-new conversation's first turn.
+                let sid = mgr.create_at(0, c.clock());
+                let prompt = workload::prompt(&mut rng, cfg.first_len, vocab);
+                (sid, ModelTarget::Base, prompt, true)
+            } else {
+                // Steady state: a delta turn on a random parked
+                // conversation.
+                if parked.is_empty() {
+                    break; // everything is mid-turn; wait for completions
+                }
+                let i = rng.next_below(parked.len() as u64) as usize;
+                let sid = parked.swap_remove(i);
+                if begun % 8 == 7 {
+                    // aLoRA invocation branch over the conversation
+                    // (append=false): the paper's cross-model reuse.
+                    let inv = workload::invocation_for(vocab, 0);
+                    (sid, ModelTarget::Adapter(AdapterId(0)), inv, false)
+                } else {
+                    let delta = workload::prompt(&mut rng, cfg.delta_len, vocab);
+                    (sid, ModelTarget::Base, delta, true)
+                }
+            };
+            let (_turn, rid) = mgr
+                .begin_turn(&mut c, sid, target, delta, cfg.gen_tokens, append)
+                .expect("scale harness submission");
+            hash_ops += prefix::take_hash_ops();
+            probe_ops += summary::take_probe_ops();
+            in_flight.insert(rid, sid);
+            begun += 1;
+            next_t += rng.exponential(diurnal_rate(cfg.arrival_rate, next_t));
+        }
+        peak_sessions = peak_sessions.max(mgr.len());
+        if in_flight.is_empty() {
+            // Idle gap before the next arrival: jump the virtual clock.
+            c.advance_clock_to(next_t);
+            continue;
+        }
+        if !c.step() {
+            panic!("scale harness stalled with {} turns in flight", in_flight.len());
+        }
+        // Decode-side hashing (committed generation blocks) is compute,
+        // not placement: drain it out of the placement counters.
+        let _ = prefix::take_hash_ops();
+        let _ = summary::take_probe_ops();
+        for out in c.take_finished() {
+            if let Some(sid) = in_flight.remove(&out.id) {
+                let rec = mgr.complete_turn(&mut c, sid, &out).expect("turn completion");
+                hash_ops += prefix::take_hash_ops();
+                probe_ops += summary::take_probe_ops();
+                ttft.push(rec.ttft_s);
+                itl.push(rec.itl_s);
+                parked.push(sid);
+                completed += 1;
+                if completed % 1024 == 0 {
+                    let used: u64 = (0..c.num_replicas())
+                        .map(|i| {
+                            let r = c.replica(i);
+                            (r.num_total_blocks() - r.num_free_blocks()) as u64
+                        })
+                        .sum();
+                    peak_blocks = peak_blocks.max(used);
+                }
+            }
+        }
+    }
+    let virtual_s = c.clock();
+    // TTL sweep: everything is parked now; advancing past the TTL must
+    // collapse the table to zero and release every lease.
+    let horizon = c.clock() + cfg.idle_ttl * 2.0;
+    c.advance_clock_to(horizon);
+    let expired = mgr.expire_idle(&mut c).len() as u64;
+    let metrics_retained: usize = (0..c.num_replicas())
+        .map(|i| {
+            let t = &c.replica(i).metrics().turn;
+            t.e2e.retained()
+                + t.queue.retained()
+                + t.prefill.retained()
+                + t.decode.retained()
+                + t.ttft.retained()
+                + t.itl.retained()
+                + t.inference.retained()
+        })
+        .sum();
+    ScaleReport {
+        sessions: cfg.sessions,
+        turns: completed,
+        ttft,
+        itl,
+        hash_ops,
+        probe_ops,
+        peak_sessions,
+        peak_blocks,
+        metrics_retained,
+        expired,
+        final_sessions: mgr.len(),
+        virtual_s,
+    }
+}
+
+/// The `scale` figure: a two-point session-count grid. The acceptance
+/// shape: per-turn placement cost (hash + probe ops) and the metrics
+/// ceiling stay FLAT while the session table grows 4×, and the p99
+/// columns stay finite under the bursty arrivals.
+pub fn run(quick: bool) -> Table {
+    let sizes: &[usize] = if quick { &[1_000, 4_000] } else { &[10_000, 40_000] };
+    let mut t = Table::new(
+        "scale",
+        "session-scale harness: tail latency + placement cost vs table size",
+        &[
+            "sessions",
+            "turns",
+            "ttft_p50_s",
+            "ttft_p99_s",
+            "itl_p50_s",
+            "itl_p99_s",
+            "hash_ops_turn",
+            "probe_ops_turn",
+            "peak_sessions",
+            "peak_kv_blocks",
+            "metrics_retained",
+            "expired",
+        ],
+    );
+    for &n in sizes {
+        let mut r = run_harness(&ScaleConfig::sized(n));
+        assert_eq!(r.final_sessions, 0, "TTL sweep left sessions behind");
+        let row = [
+            n as f64,
+            r.turns as f64,
+            r.ttft.percentile(50.0),
+            r.ttft.p99(),
+            r.itl.percentile(50.0),
+            r.itl.p99(),
+            r.hash_ops_per_turn(),
+            r.probe_ops_per_turn(),
+            r.peak_sessions as f64,
+            r.peak_blocks as f64,
+            r.metrics_retained as f64,
+            r.expired as f64,
+        ];
+        t.push(&[], &row);
+    }
+    t
+}

@@ -116,6 +116,17 @@ impl BlockPool {
         &self.summary
     }
 
+    /// Register a lease's chain with the summary for incremental affinity
+    /// maintenance (fed by the same commit/evict events as the sketch).
+    pub fn track_chain(&mut self, key: u64, chain: &[BlockHash]) {
+        self.summary.track(key, chain);
+    }
+
+    /// Forget a lease's tracked chain (lease released or broken).
+    pub fn untrack_chain(&mut self, key: u64) {
+        self.summary.untrack(key);
+    }
+
     /// The unified memory ledger (KV vs adapter-weight split).
     pub fn budget(&self) -> &MemoryBudget {
         &self.budget
@@ -365,6 +376,7 @@ impl BlockPool {
                 self.summary.committed_blocks()
             ));
         }
+        self.summary.check_tracked()?;
         // Unified-budget ledger: adapter pages + in-use KV + free == total.
         let in_use = self.meta.len() - self.free_count;
         if self.budget.adapter_blocks() > in_use {

@@ -61,6 +61,15 @@ impl CacheStats {
 }
 
 #[derive(Debug)]
+struct Lease {
+    blocks: Vec<BlockId>,
+    /// Hash chain covering exactly the pinned blocks (same length), so a
+    /// re-acquire whose chain extends it keeps the existing pins and only
+    /// pins the delta — O(new turn), not O(conversation).
+    hashes: Vec<BlockHash>,
+}
+
+#[derive(Debug)]
 pub struct KvCacheManager {
     pool: BlockPool,
     block_size: usize,
@@ -69,7 +78,7 @@ pub struct KvCacheManager {
     stats: CacheStats,
     /// Session prefix leases: pinned blocks per lease key, so a parked
     /// conversation's chain survives between turns (the v1 sessions API).
-    leases: FxHashMap<u64, Vec<BlockId>>,
+    leases: FxHashMap<u64, Lease>,
     /// Lease keys in acquisition order (front = oldest = first broken
     /// under memory pressure).
     lease_order: Vec<u64>,
@@ -144,39 +153,66 @@ impl KvCacheManager {
     /// oldest-first (see [`KvCacheManager::ensure_capacity`]) so a parked
     /// session can never wedge running work.
     pub fn acquire_lease(&mut self, lease: u64, chain: &[BlockHash]) -> usize {
-        self.release_lease(lease);
         if !self.enable_prefix_caching {
             return 0;
         }
-        let mut blocks = Vec::new();
-        for h in chain {
+        // Fast path: the chain extends the lease's pinned prefix (the
+        // append-only conversation grew a turn). Keep the pins, continue
+        // from where pinning stopped last time.
+        let start = match self.leases.get(&lease) {
+            Some(l) if chain.len() >= l.hashes.len()
+                && chain[..l.hashes.len()] == l.hashes[..] =>
+            {
+                l.hashes.len()
+            }
+            // Diverged chain (salt change / rewrite): full re-pin.
+            Some(_) => {
+                self.release_lease(lease);
+                0
+            }
+            None => 0,
+        };
+        let mut new_blocks = Vec::new();
+        for h in &chain[start..] {
             match self.pool.pin(*h) {
-                Some(b) => blocks.push(b),
+                Some(b) => new_blocks.push(b),
                 None => break,
             }
         }
-        let n = blocks.len();
+        let delta = new_blocks.len();
         self.stats.leases_acquired += 1;
-        if n == 0 {
+        if start == 0 && delta == 0 {
             // Nothing pinned (chain evicted or sub-block): registering a
             // phantom lease would let pressure reclaim "break" it — a
             // counted reclaim that frees nothing.
             return 0;
         }
-        self.stats.lease_blocks_pinned += n as u64;
-        self.leases.insert(lease, blocks);
+        self.stats.lease_blocks_pinned += delta as u64;
+        let entry = self
+            .leases
+            .entry(lease)
+            .or_insert_with(|| Lease { blocks: Vec::new(), hashes: Vec::new() });
+        entry.hashes.extend_from_slice(&chain[start..start + delta]);
+        entry.blocks.extend(new_blocks);
+        let total = entry.blocks.len();
+        // A re-acquire freshens the lease's reclaim age.
+        self.lease_order.retain(|l| *l != lease);
         self.lease_order.push(lease);
-        n
+        // Register the full chain (pinned prefix plus any uncached tail)
+        // for incremental routing affinity.
+        self.pool.track_chain(lease, chain);
+        total
     }
 
     /// Release a lease's pins (session deleted, or re-acquire). Unknown
     /// lease keys are a no-op (a cluster broadcasts releases).
     pub fn release_lease(&mut self, lease: u64) {
-        if let Some(blocks) = self.leases.remove(&lease) {
-            self.lease_order.retain(|l| *l != lease);
+        if let Some(l) = self.leases.remove(&lease) {
+            self.lease_order.retain(|k| *k != lease);
+            self.pool.untrack_chain(lease);
             // Tail-first, matching free_request: deep suffix blocks become
             // LRU-evictable before the shared prefix.
-            for b in blocks.into_iter().rev() {
+            for b in l.blocks.into_iter().rev() {
                 self.pool.free(b);
             }
         }
@@ -185,12 +221,12 @@ impl KvCacheManager {
     /// Total blocks currently pinned by leases (shared pins counted per
     /// lease — a gauge, not an ownership ledger).
     pub fn leased_blocks(&self) -> usize {
-        self.leases.values().map(Vec::len).sum()
+        self.leases.values().map(|l| l.blocks.len()).sum()
     }
 
     /// Blocks pinned by this one lease (0 for unknown keys).
     pub fn lease_size(&self, lease: u64) -> usize {
-        self.leases.get(&lease).map(Vec::len).unwrap_or(0)
+        self.leases.get(&lease).map(|l| l.blocks.len()).unwrap_or(0)
     }
 
     pub fn num_leases(&self) -> usize {
@@ -202,7 +238,7 @@ impl KvCacheManager {
     /// occupy it once).
     pub fn leased_distinct_blocks(&self) -> usize {
         let mut seen = crate::util::fxmap::FxHashSet::default();
-        for b in self.leases.values().flatten() {
+        for b in self.leases.values().flat_map(|l| l.blocks.iter()) {
             seen.insert(*b);
         }
         seen.len()
@@ -215,8 +251,9 @@ impl KvCacheManager {
     fn reclaim_leases(&mut self, need_free: usize) {
         while (self.pool.num_free() as usize) < need_free && !self.lease_order.is_empty() {
             let l = self.lease_order.remove(0);
-            if let Some(blocks) = self.leases.remove(&l) {
-                for b in blocks.into_iter().rev() {
+            if let Some(lease) = self.leases.remove(&l) {
+                self.pool.untrack_chain(l);
+                for b in lease.blocks.into_iter().rev() {
                     self.pool.free(b);
                 }
             }
@@ -231,8 +268,9 @@ impl KvCacheManager {
     pub fn release_all_leases(&mut self) -> Vec<u64> {
         let keys = std::mem::take(&mut self.lease_order);
         for l in &keys {
-            if let Some(blocks) = self.leases.remove(l) {
-                for b in blocks.into_iter().rev() {
+            if let Some(lease) = self.leases.remove(l) {
+                self.pool.untrack_chain(*l);
+                for b in lease.blocks.into_iter().rev() {
                     self.pool.free(b);
                 }
             }
@@ -413,11 +451,18 @@ impl KvCacheManager {
                 self.lease_order.len()
             ));
         }
-        for (l, blocks) in &self.leases {
+        for (l, lease) in &self.leases {
             if !self.lease_order.contains(l) {
                 return Err(format!("lease {l} missing from reclaim order"));
             }
-            for b in blocks {
+            if lease.hashes.len() != lease.blocks.len() {
+                return Err(format!(
+                    "lease {l}: {} pinned blocks but {} recorded hashes",
+                    lease.blocks.len(),
+                    lease.hashes.len()
+                ));
+            }
+            for b in &lease.blocks {
                 if self.pool.ref_count(*b) == 0 {
                     return Err(format!("lease {l} pins freed block {b:?}"));
                 }
@@ -805,6 +850,148 @@ mod tests {
         m.release_lease(10);
         m.release_lease(11);
         m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reacquire_extends_lease_pins_only_the_delta() {
+        let mut m = mgr(16);
+        let t = toks(64);
+        let hs = block_hashes(&t, 16, &HashContext::base());
+        m.start_request(1, &hs, 64);
+        assert!(m.ensure_capacity(1, 64));
+        m.commit_full_blocks(1, &hs);
+        m.free_request(1);
+        assert_eq!(m.acquire_lease(7, &hs), 4);
+        assert_eq!(m.stats().lease_blocks_pinned, 4);
+
+        // The conversation grows a 2-block turn; commit the new tail.
+        let mut t2 = t.clone();
+        t2.extend((0..32).map(|i| 7_000 + i as u32));
+        let hs2 = block_hashes(&t2, 16, &HashContext::base());
+        assert_eq!(hs2[..4], hs[..], "chain is prefix-stable");
+        m.start_request(2, &hs2, 96);
+        assert!(m.ensure_capacity(2, 96));
+        m.commit_full_blocks(2, &hs2);
+        m.free_request(2);
+
+        // Re-acquire with the grown chain: the 4 existing pins are kept
+        // and only the 2-block delta is newly pinned.
+        assert_eq!(m.acquire_lease(7, &hs2), 6);
+        assert_eq!(m.stats().lease_blocks_pinned, 6, "delta-only accounting");
+        assert_eq!(m.lease_size(7), 6);
+        assert_eq!(m.num_leases(), 1);
+        assert_eq!(m.routing_summary().tracked_prefix(7), Some((6, 6)));
+
+        // Idempotent re-acquire: nothing new to pin.
+        assert_eq!(m.acquire_lease(7, &hs2), 6);
+        assert_eq!(m.stats().lease_blocks_pinned, 6);
+        m.check_invariants().unwrap();
+
+        // A diverged chain (session rewrite) falls back to a full re-pin.
+        let t3: Vec<u32> = (0..64).map(|i| 50_000 + i).collect();
+        let hs3 = block_hashes(&t3, 16, &HashContext::base());
+        m.start_request(3, &hs3, 64);
+        assert!(m.ensure_capacity(3, 64));
+        m.commit_full_blocks(3, &hs3);
+        m.free_request(3);
+        assert_eq!(m.acquire_lease(7, &hs3), 4);
+        assert_eq!(m.lease_size(7), 4);
+        assert_eq!(m.routing_summary().tracked_prefix(7), Some((4, 4)));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn property_incremental_affinity_matches_recompute_under_churn() {
+        // ISSUE 6 property (b): the incrementally-maintained affinity of
+        // every tracked (leased) chain must equal a fresh recompute from
+        // the sketch under arbitrary commit / evict / lease-break churn.
+        // `check_invariants` → `check_tracked` verifies the slot-level
+        // invariant; the explicit comparison below pins the public-API
+        // statement (`tracked_prefix` == `matching_prefix`).
+        use crate::util::prop;
+        use crate::{prop_assert, prop_assert_eq};
+        prop::check("lease-affinity-incremental", 20, |rng, _| {
+            let mut m = KvCacheManager::new(rng.range(8, 40) as u32, 16, true);
+            // lease key -> token stream backing its conversation chain
+            let mut convs: Vec<(u64, Vec<u32>)> = vec![];
+            let mut next_lease = 0u64;
+            let mut next_key = 10_000u64;
+            let mut run_turn = |m: &mut KvCacheManager, t: &[u32], key: u64| {
+                let hs = block_hashes(t, 16, &HashContext::base());
+                m.start_request(key, &hs, t.len());
+                if m.ensure_capacity(key, t.len()) {
+                    m.commit_full_blocks(key, &hs);
+                }
+                m.free_request(key);
+                hs
+            };
+            for _ in 0..120 {
+                match rng.next_below(6) {
+                    0 | 1 => {
+                        // Background traffic: churns the pool, evicting
+                        // unpinned blocks out from under tracked chains.
+                        let n = rng.range(1, 5) as usize * 16;
+                        let t: Vec<u32> =
+                            (0..n).map(|_| rng.next_below(96) as u32).collect();
+                        run_turn(&mut m, &t, next_key);
+                        next_key += 1;
+                    }
+                    2 => {
+                        // New conversation: run its first turn, then lease.
+                        next_lease += 1;
+                        let n = rng.range(1, 4) as usize * 16;
+                        let t: Vec<u32> =
+                            (0..n).map(|_| rng.next_below(96) as u32).collect();
+                        let hs = run_turn(&mut m, &t, next_key);
+                        next_key += 1;
+                        m.acquire_lease(next_lease, &hs);
+                        convs.push((next_lease, t));
+                    }
+                    3 => {
+                        // Delta turn on an existing conversation.
+                        if !convs.is_empty() {
+                            let i = rng.next_below(convs.len() as u64) as usize;
+                            let add = rng.range(1, 3) as usize * 16;
+                            let mut t = convs[i].1.clone();
+                            t.extend((0..add).map(|_| rng.next_below(96) as u32));
+                            let lease = convs[i].0;
+                            let hs = run_turn(&mut m, &t, next_key);
+                            next_key += 1;
+                            m.acquire_lease(lease, &hs);
+                            convs[i].1 = t;
+                        }
+                    }
+                    4 => {
+                        if !convs.is_empty() {
+                            let i = rng.next_below(convs.len() as u64) as usize;
+                            let (lease, _) = convs.swap_remove(i);
+                            m.release_lease(lease);
+                        }
+                    }
+                    _ => {}
+                }
+                m.check_invariants()?;
+                for (lease, t) in &convs {
+                    // Leases broken by pressure reclaim are untracked.
+                    if let Some((matched, len)) =
+                        m.routing_summary().tracked_prefix(*lease)
+                    {
+                        let hs = block_hashes(t, 16, &HashContext::base());
+                        prop_assert_eq!(len, hs.len());
+                        prop_assert_eq!(
+                            matched,
+                            m.routing_summary().matching_prefix(&hs)
+                        );
+                    }
+                }
+            }
+            for (lease, _) in &convs {
+                m.release_lease(*lease);
+            }
+            m.check_invariants()?;
+            prop_assert!(m.num_leases() == 0, "leases linger");
+            Ok(())
+        });
     }
 
     #[test]

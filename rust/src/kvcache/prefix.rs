@@ -14,8 +14,28 @@
 //! and must be salted (Figure 3: the activation tokens are only cached once
 //! they fill a block, and then under the adapter's salt).
 
+use std::cell::Cell;
+
 use super::block::BlockHash;
 use super::hash::{block_hash, ExtraKeys};
+
+thread_local! {
+    /// Blocks hashed on this thread since the last [`take_hash_ops`] —
+    /// the placement-cost probe the scale harness and the O(delta +
+    /// replicas) acceptance test read. Thread-local (not atomic) so
+    /// parallel tests can't race each other's counts.
+    static HASH_OPS: Cell<u64> = const { Cell::new(0) };
+}
+
+#[inline]
+fn count_hash_op() {
+    HASH_OPS.with(|c| c.set(c.get() + 1));
+}
+
+/// Drain this thread's block-hash op counter (reads and resets).
+pub fn take_hash_ops() -> u64 {
+    HASH_OPS.with(|c| c.replace(0))
+}
 
 /// Salting policy inputs for one request.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -79,6 +99,7 @@ pub fn block_hashes(tokens: &[u32], block_size: usize, ctx: &HashContext) -> Vec
     for b in 0..n_full {
         let start = b * block_size;
         let end = start + block_size;
+        count_hash_op();
         let h = block_hash(parent, &tokens[start..end], ctx.extra_for_block(start, end));
         out.push(h);
         parent = Some(h);
@@ -97,6 +118,7 @@ pub fn next_block_hash(
 ) -> BlockHash {
     let start = block_idx * block_size;
     let end = start + block_size;
+    count_hash_op();
     block_hash(parent, &tokens[start..end], ctx.extra_for_block(start, end))
 }
 

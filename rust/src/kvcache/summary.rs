@@ -13,17 +13,58 @@
 //! slot), never false negatives; for routing that only means an occasional
 //! overestimated affinity score, which the least-loaded tie-break absorbs.
 
+use std::cell::Cell;
+
+use crate::util::fxmap::FxHashMap;
+
 use super::block::BlockHash;
 
 /// Default slot count: 4096 × 4 bytes = 16 KiB per replica, collision
 /// probability ~n/4096 for n committed blocks — plenty for routing.
 pub const DEFAULT_SLOTS: usize = 4096;
 
+thread_local! {
+    /// Sketch slot reads on this thread since the last [`take_probe_ops`]
+    /// — the other half of the placement-cost probe (see
+    /// `kvcache::prefix::take_hash_ops`).
+    static PROBE_OPS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Drain this thread's sketch-probe op counter (reads and resets).
+pub fn take_probe_ops() -> u64 {
+    PROBE_OPS.with(|c| c.replace(0))
+}
+
+/// One lease's chain registered for incremental affinity: `matched` is
+/// kept equal — at all times — to what `matching_prefix(&hashes)` would
+/// recompute, by advancing on 0→1 slot transitions at the chain's parked
+/// frontier and shrinking on 1→0 transitions inside the matched run.
+#[derive(Debug, Clone)]
+struct TrackedChain {
+    hashes: Vec<BlockHash>,
+    slots: Vec<usize>,
+    matched: usize,
+    /// The slot this chain waits on (`slots[matched]`) when not fully
+    /// matched; the frontier index's validity check.
+    parked: Option<usize>,
+    /// Incarnation tag: stale frontier/member entries from an earlier
+    /// `track` of the same key are dropped lazily on touch.
+    gen: u64,
+}
+
 #[derive(Debug, Clone)]
 pub struct HashSummary {
     counts: Vec<u32>,
     /// Live committed hashes (inserts minus removes).
     committed: u64,
+    /// Leased/sticky chains maintained incrementally (key = lease key).
+    tracked: FxHashMap<u64, TrackedChain>,
+    /// slot → chains parked at that slot (their first missing position).
+    frontier: FxHashMap<usize, Vec<(u64, u64)>>,
+    /// slot → chains whose matched run crossed that slot. May hold stale
+    /// or duplicate entries; validated lazily when the slot hits zero.
+    members: FxHashMap<usize, Vec<(u64, u64)>>,
+    next_gen: u64,
 }
 
 impl Default for HashSummary {
@@ -39,7 +80,14 @@ impl HashSummary {
 
     pub fn with_slots(slots: usize) -> Self {
         assert!(slots > 0, "empty summary");
-        HashSummary { counts: vec![0; slots], committed: 0 }
+        HashSummary {
+            counts: vec![0; slots],
+            committed: 0,
+            tracked: FxHashMap::default(),
+            frontier: FxHashMap::default(),
+            members: FxHashMap::default(),
+            next_gen: 0,
+        }
     }
 
     #[inline]
@@ -49,12 +97,22 @@ impl HashSummary {
         (h.0 % self.counts.len() as u64) as usize
     }
 
+    /// One counted sketch read.
+    #[inline]
+    fn probe(&self, slot: usize) -> bool {
+        PROBE_OPS.with(|c| c.set(c.get() + 1));
+        self.counts[slot] > 0
+    }
+
     /// A block with this hash was committed (shareable from now on).
     #[inline]
     pub fn insert(&mut self, h: BlockHash) {
         let s = self.slot(h);
         self.counts[s] += 1;
         self.committed += 1;
+        if self.counts[s] == 1 {
+            self.advance_frontier(s);
+        }
     }
 
     /// A block with this hash was evicted.
@@ -64,13 +122,16 @@ impl HashSummary {
         debug_assert!(self.counts[s] > 0, "summary remove without insert");
         self.counts[s] = self.counts[s].saturating_sub(1);
         self.committed = self.committed.saturating_sub(1);
+        if self.counts[s] == 0 {
+            self.shrink_members(s);
+        }
     }
 
     /// May the cache hold a committed block with this hash? (No false
     /// negatives.)
     #[inline]
     pub fn maybe_contains(&self, h: BlockHash) -> bool {
-        self.counts[self.slot(h)] > 0
+        self.probe(self.slot(h))
     }
 
     /// Live committed-hash count (exact, not sketched).
@@ -92,6 +153,151 @@ impl HashSummary {
             }
         }
         n
+    }
+
+    // -- tracked chains (incremental affinity) ------------------------------
+
+    /// Register (or extend) a lease's chain for incremental affinity.
+    /// When the new chain extends the previously tracked one (the common
+    /// delta-turn case) the matched state carries over and only the tail
+    /// is scanned — O(delta). Anything else rebuilds from scratch.
+    pub fn track(&mut self, key: u64, chain: &[BlockHash]) {
+        let extend = self
+            .tracked
+            .get(&key)
+            .is_some_and(|tc| chain.len() >= tc.hashes.len() && chain[..tc.hashes.len()] == tc.hashes[..]);
+        if extend {
+            let tc = self.tracked.get_mut(&key).expect("checked");
+            let old_len = tc.hashes.len();
+            tc.hashes.extend_from_slice(&chain[old_len..]);
+            let new_slots: Vec<usize> = chain[old_len..]
+                .iter()
+                .map(|h| (h.0 % self.counts.len() as u64) as usize)
+                .collect();
+            let tc = self.tracked.get_mut(&key).expect("checked");
+            tc.slots.extend(new_slots);
+            // If the old chain was fully matched the frontier moves into
+            // the new tail; a parked chain stays parked where it was.
+            if tc.parked.is_none() && tc.matched < tc.slots.len() {
+                self.advance_chain(key);
+            }
+        } else {
+            self.next_gen += 1;
+            let gen = self.next_gen;
+            let slots: Vec<usize> =
+                chain.iter().map(|h| (h.0 % self.counts.len() as u64) as usize).collect();
+            self.tracked.insert(
+                key,
+                TrackedChain { hashes: chain.to_vec(), slots, matched: 0, parked: None, gen },
+            );
+            self.advance_chain(key);
+        }
+    }
+
+    /// Forget a lease's chain (lease released/broken). Stale index
+    /// entries are dropped lazily.
+    pub fn untrack(&mut self, key: u64) {
+        self.tracked.remove(&key);
+    }
+
+    /// Incrementally maintained `(matched, chain_len)` for a tracked
+    /// lease — `matched` equals what `matching_prefix` would recompute
+    /// over the tracked chain, at O(1).
+    pub fn tracked_prefix(&self, key: u64) -> Option<(usize, usize)> {
+        self.tracked.get(&key).map(|tc| (tc.matched, tc.hashes.len()))
+    }
+
+    /// The hashes registered under a tracked lease (equivalence checks).
+    pub fn tracked_chain(&self, key: u64) -> Option<&[BlockHash]> {
+        self.tracked.get(&key).map(|tc| tc.hashes.as_slice())
+    }
+
+    /// Advance `key`'s matched run over present slots, then park at the
+    /// first missing one (if any).
+    fn advance_chain(&mut self, key: u64) {
+        let Some(tc) = self.tracked.get(&key) else { return };
+        let (mut matched, len, gen) = (tc.matched, tc.slots.len(), tc.gen);
+        let mut parked = None;
+        while matched < len {
+            let slot = self.tracked[&key].slots[matched];
+            if self.probe(slot) {
+                self.members.entry(slot).or_default().push((key, gen));
+                matched += 1;
+            } else {
+                self.frontier.entry(slot).or_default().push((key, gen));
+                parked = Some(slot);
+                break;
+            }
+        }
+        let tc = self.tracked.get_mut(&key).expect("checked");
+        tc.matched = matched;
+        tc.parked = parked;
+    }
+
+    /// A slot went 0→1: resume every chain validly parked on it.
+    fn advance_frontier(&mut self, s: usize) {
+        let Some(waiters) = self.frontier.remove(&s) else { return };
+        for (key, gen) in waiters {
+            let valid = self
+                .tracked
+                .get(&key)
+                .is_some_and(|tc| tc.gen == gen && tc.parked == Some(s));
+            if valid {
+                self.advance_chain(key);
+            }
+        }
+    }
+
+    /// A slot went 1→0: shrink every chain whose matched run crosses it
+    /// back to the slot's first occurrence (exactly where
+    /// `matching_prefix` would now stop) and re-park there.
+    fn shrink_members(&mut self, s: usize) {
+        let Some(entries) = self.members.remove(&s) else { return };
+        for (key, gen) in entries {
+            let Some(tc) = self.tracked.get_mut(&key) else { continue };
+            if tc.gen != gen {
+                continue;
+            }
+            if let Some(pos) = tc.slots[..tc.matched].iter().position(|&x| x == s) {
+                tc.matched = pos;
+                tc.parked = Some(s);
+                let gen = tc.gen;
+                self.frontier.entry(s).or_default().push((key, gen));
+            }
+        }
+    }
+
+    /// Test hook: every tracked chain's `matched` must equal a fresh
+    /// recompute from the sketch, and parked chains must hold a valid
+    /// frontier entry.
+    #[doc(hidden)]
+    pub fn check_tracked(&self) -> Result<(), String> {
+        for (key, tc) in &self.tracked {
+            let expect =
+                tc.slots.iter().take_while(|&&s| self.counts[s] > 0).count();
+            if tc.matched != expect {
+                return Err(format!(
+                    "tracked chain {key}: matched {} but sketch recompute says {expect}",
+                    tc.matched
+                ));
+            }
+            if tc.matched < tc.slots.len() {
+                let s = tc.slots[tc.matched];
+                if tc.parked != Some(s) {
+                    return Err(format!("tracked chain {key}: not parked at its frontier"));
+                }
+                let has_entry = self
+                    .frontier
+                    .get(&s)
+                    .is_some_and(|v| v.iter().any(|&(k, g)| k == *key && g == tc.gen));
+                if !has_entry {
+                    return Err(format!("tracked chain {key}: missing frontier entry"));
+                }
+            } else if tc.parked.is_some() {
+                return Err(format!("tracked chain {key}: fully matched but parked"));
+            }
+        }
+        Ok(())
     }
 }
 

@@ -196,6 +196,9 @@ pub struct Metrics {
     /// Session lifecycle (`POST /v1/sessions` / `DELETE`).
     pub sessions_created: u64,
     pub sessions_closed: u64,
+    /// Sessions removed by idle-TTL expiry (leases released, table slot
+    /// freed) — distinct from client DELETEs.
+    pub sessions_expired: u64,
     /// Session prefix leases broken under memory pressure.
     pub lease_reclaims: u64,
 
@@ -301,8 +304,15 @@ impl Metrics {
         self.base.merge(&o.base);
         self.adapter.merge(&o.adapter);
         self.turn.merge(&o.turn);
+        // The same cardinality cap as `observe_stage`: merging registries
+        // must not resurrect unbounded growth — names past the cap fold
+        // into `__other` here too.
         for (name, lat) in &o.stage {
-            self.stage.entry(name.clone()).or_default().merge(lat);
+            if self.stage.len() >= MAX_STAGE_SERIES && !self.stage.contains_key(name) {
+                self.stage.entry("__other".to_string()).or_default().merge(lat);
+            } else {
+                self.stage.entry(name.clone()).or_default().merge(lat);
+            }
         }
     }
 
@@ -331,6 +341,7 @@ impl Metrics {
         self.stream_token_events += o.stream_token_events;
         self.sessions_created += o.sessions_created;
         self.sessions_closed += o.sessions_closed;
+        self.sessions_expired += o.sessions_expired;
         self.lease_reclaims += o.lease_reclaims;
         self.running_requests += o.running_requests;
         self.waiting_requests += o.waiting_requests;
@@ -430,6 +441,11 @@ impl Metrics {
         );
         counter("sessions_created_total", "Sessions opened", self.sessions_created as f64);
         counter("sessions_closed_total", "Sessions deleted", self.sessions_closed as f64);
+        counter(
+            "sessions_expired_total",
+            "Sessions removed by idle-TTL expiry",
+            self.sessions_expired as f64,
+        );
         counter(
             "lease_reclaims_total",
             "Session prefix leases broken under memory pressure",
@@ -718,6 +734,76 @@ mod tests {
         fast.absorb_scalars(&m);
         assert_eq!(fast.turn.count(), 0);
         assert_eq!(fast.lease_reclaims, 4);
+    }
+
+    #[test]
+    fn observe_and_absorb_share_the_stage_cardinality_cap() {
+        // Adversarial/generated stage names must not grow the registry
+        // unbounded — on EITHER ingestion path. `observe_stage` has capped
+        // since it existed; `absorb` must apply the same fold.
+        let mut src = Metrics::new();
+        for i in 0..MAX_STAGE_SERIES + 50 {
+            src.observe_stage(&format!("gen-{i}"), &out(0.0, 1.0, 2.0, 4.0, 3));
+        }
+        assert!(src.stage.len() <= MAX_STAGE_SERIES + 1, "observe path capped");
+        assert!(src.stage.contains_key("__other"));
+
+        // A second registry whose names are entirely disjoint: absorbing
+        // it into the (already full) first must fold, not grow.
+        let mut other = Metrics::new();
+        for i in 0..100 {
+            other.observe_stage(&format!("alien-{i}"), &out(0.0, 1.0, 2.0, 4.0, 3));
+        }
+        let total_before: usize = src.stage.values().map(|l| l.count()).sum();
+        let incoming: usize = other.stage.values().map(|l| l.count()).sum();
+        src.absorb(&other);
+        assert!(src.stage.len() <= MAX_STAGE_SERIES + 1, "absorb path capped");
+        let total_after: usize = src.stage.values().map(|l| l.count()).sum();
+        assert_eq!(total_after, total_before + incoming, "no samples dropped");
+        // Rendering stays duplicate-free (one sample per label).
+        let text = src.render_prometheus();
+        let mut seen = std::collections::BTreeSet::new();
+        for line in text.lines().filter(|l| l.starts_with("alora_serve_stage_requests_total{")) {
+            assert!(seen.insert(line.split_whitespace().next().unwrap().to_string()), "dup: {line}");
+        }
+    }
+
+    #[test]
+    fn registry_memory_bounded_under_1e5_turns() {
+        // Acceptance criterion: the registry's retained-sample footprint is
+        // pinned at reservoir capacity x series count no matter how many
+        // turns flow through (10^5 here; a million-session run is the same
+        // bound).
+        use crate::util::stats::RESERVOIR_CAP;
+        let mut m = Metrics::new();
+        for i in 0..100_000 {
+            let t0 = i as f64 * 0.01;
+            m.observe_turn(&out(t0, t0 + 0.1, t0 + 0.3, t0 + 0.9, 8));
+        }
+        assert_eq!(m.turn.count(), 100_000, "counts stay exact");
+        // 7 Samples per StageLatencies, each bounded by the reservoir cap.
+        let retained = m.turn.e2e.retained()
+            + m.turn.queue.retained()
+            + m.turn.prefill.retained()
+            + m.turn.decode.retained()
+            + m.turn.ttft.retained()
+            + m.turn.itl.retained()
+            + m.turn.inference.retained();
+        assert!(retained <= 7 * RESERVOIR_CAP, "retained={retained}");
+        // Means stay exact and percentiles stay available.
+        assert!(m.turn.mean("ttft") > 0.0);
+        assert!(m.turn.ttft.p99() > 0.0);
+    }
+
+    #[test]
+    fn sessions_expired_counter_renders_and_absorbs() {
+        let mut m = Metrics::new();
+        m.sessions_expired = 5;
+        let text = m.render_prometheus();
+        assert!(text.contains("alora_serve_sessions_expired_total 5"), "{text}");
+        let mut agg = Metrics::new();
+        agg.absorb_scalars(&m);
+        assert_eq!(agg.sessions_expired, 5);
     }
 
     #[test]

@@ -22,6 +22,8 @@
 //! [`crate::session::SessionManager`]; this module is pure state so the
 //! types stay usable from any layer.
 
+use crate::kvcache::block::BlockHash;
+use crate::kvcache::prefix::{block_hashes, next_block_hash, HashContext};
 use crate::request::{ModelTarget, RequestId, RequestOutput};
 
 /// Server-scoped session identifier (issued by the session manager).
@@ -77,6 +79,13 @@ pub struct Session {
     /// generated output, in order). This is the chain the server
     /// reconstructs for each delta submission.
     tokens: Vec<u32>,
+    /// Cached block-hash chain over `tokens` under the base context +
+    /// `cache_salt` — the chain every base follow-up turn (and, via
+    /// base-aligned hashing, every pre-activation aLoRA block) presents.
+    /// `tokens` is append-only, so the cache is always a valid prefix and
+    /// each turn extends it by O(delta) instead of rehashing the
+    /// conversation (see DESIGN.md §16).
+    chain: Vec<BlockHash>,
     turns: Vec<TurnRecord>,
     pending: Option<PendingTurn>,
     /// The most recent turn's request id — the stickiness peer a cluster
@@ -85,6 +94,9 @@ pub struct Session {
     /// Blocks pinned by the session's prefix lease after the last turn
     /// (informational; the KV manager owns the actual pins).
     pub leased_blocks: usize,
+    /// Virtual-clock stamp of the last turn submitted or completed (or
+    /// session creation) — what idle-TTL expiry measures against.
+    pub last_activity: f64,
 }
 
 impl Session {
@@ -93,10 +105,12 @@ impl Session {
             id,
             cache_salt,
             tokens: Vec::new(),
+            chain: Vec::new(),
             turns: Vec::new(),
             pending: None,
             last_request: None,
             leased_blocks: 0,
+            last_activity: 0.0,
         }
     }
 
@@ -204,6 +218,69 @@ impl Session {
         Ok(record)
     }
 
+    /// The session's base-context hash chain over its full blocks,
+    /// extended incrementally: only blocks beyond the cached frontier are
+    /// hashed, so the amortized cost per turn is O(delta), independent of
+    /// conversation length.
+    pub fn cached_chain(&mut self, block_size: usize) -> &[BlockHash] {
+        let total = self.tokens.len() / block_size;
+        debug_assert!(
+            self.chain.len() <= total,
+            "chain cache ahead of tokens (block_size changed mid-session?)"
+        );
+        if self.chain.len() < total {
+            let ctx = HashContext { cache_salt: self.cache_salt, ..HashContext::base() };
+            let mut parent = self.chain.last().copied();
+            for idx in self.chain.len()..total {
+                let h = next_block_hash(parent, &self.tokens, idx, block_size, &ctx);
+                self.chain.push(h);
+                parent = Some(h);
+            }
+        }
+        &self.chain
+    }
+
+    /// Full-prompt hash chain for a turn over `prompt` (history + delta)
+    /// under the turn's `ctx`, reusing the cached history chain whenever
+    /// every history block hashes identically under `ctx`: the base
+    /// context itself, or a base-aligned aLoRA whose activation starts at
+    /// or after the history frontier (all history blocks pre-activation).
+    /// Anything else — standard LoRA, base-aligned hashing off, an
+    /// invocation reaching back into history — falls back to a full
+    /// rehash; those chains are salted differently block-for-block.
+    ///
+    /// The result is byte-identical to `block_hashes(prompt, bs, ctx)` by
+    /// construction (pinned by the chain-extension property test).
+    pub fn turn_chain(
+        &mut self,
+        prompt: &[u32],
+        block_size: usize,
+        ctx: &HashContext,
+    ) -> Vec<BlockHash> {
+        debug_assert!(
+            prompt.len() >= self.tokens.len() && prompt[..self.tokens.len()] == self.tokens[..],
+            "turn prompt must extend the session history"
+        );
+        let hist_blocks = self.tokens.len() / block_size;
+        let reusable = ctx.cache_salt == self.cache_salt
+            && (ctx.adapter_id.is_none()
+                || (ctx.is_alora
+                    && ctx.base_aligned
+                    && ctx.inv_start >= hist_blocks * block_size));
+        if !reusable {
+            return block_hashes(prompt, block_size, ctx);
+        }
+        let mut chain = self.cached_chain(block_size).to_vec();
+        let total = prompt.len() / block_size;
+        let mut parent = chain.last().copied();
+        for idx in hist_blocks..total {
+            let h = next_block_hash(parent, prompt, idx, block_size, ctx);
+            chain.push(h);
+            parent = Some(h);
+        }
+        chain
+    }
+
     /// Drop the in-flight turn without applying it (client abandoned the
     /// request). The history stays at the last completed turn; the engine
     /// keeps running the orphaned request, whose output the caller must
@@ -277,6 +354,74 @@ mod tests {
         assert_eq!(s.abort_pending(), Some(RequestId(1)));
         assert!(s.compose_prompt(&[2]).is_ok());
         assert_eq!(s.history_len(), 0);
+    }
+
+    #[test]
+    fn property_incremental_chain_matches_full_rehash() {
+        // Satellite (a): for random delta sequences, the incrementally
+        // extended chain is byte-identical to a full rehash — under the
+        // base context, under a base-aligned aLoRA activating in the
+        // delta, and under contexts that force the fallback path.
+        use crate::kvcache::prefix::block_hashes;
+        use crate::util::prop;
+        prop::check("session-chain-incremental", 20, |rng, _| {
+            let bs = *[4usize, 8, 16].get(rng.next_below(3) as usize).unwrap();
+            let salt = rng.next_below(3);
+            let mut s = Session::new(SessionId(1), salt);
+            for turn in 0..rng.range(2, 8) {
+                let delta: Vec<u32> = (0..rng.range(1, 5 * bs as u64) as usize)
+                    .map(|_| rng.next_below(1000) as u32)
+                    .collect();
+                let prompt = s.compose_prompt(&delta).unwrap();
+                // Base-context turn chain == full rehash.
+                let base_ctx = HashContext { cache_salt: salt, ..HashContext::base() };
+                let inc = s.turn_chain(&prompt, bs, &base_ctx);
+                let full = block_hashes(&prompt, bs, &base_ctx);
+                if inc != full {
+                    return Err(format!("turn {turn}: base chain diverged"));
+                }
+                // Base-aligned aLoRA activating inside the delta: history
+                // blocks reuse the cache, the rest hash under the salt.
+                let a_ctx = HashContext {
+                    adapter_id: Some(3),
+                    is_alora: true,
+                    inv_start: s.history_len()
+                        + rng.next_below(delta.len() as u64 + 1) as usize,
+                    base_aligned: true,
+                    cache_salt: salt,
+                };
+                if s.turn_chain(&prompt, bs, &a_ctx) != block_hashes(&prompt, bs, &a_ctx) {
+                    return Err(format!("turn {turn}: alora chain diverged"));
+                }
+                // Standard LoRA forces the full-rehash fallback; still equal.
+                let l_ctx = HashContext {
+                    adapter_id: Some(3),
+                    is_alora: false,
+                    inv_start: 0,
+                    base_aligned: true,
+                    cache_salt: salt,
+                };
+                if s.turn_chain(&prompt, bs, &l_ctx) != block_hashes(&prompt, bs, &l_ctx) {
+                    return Err(format!("turn {turn}: lora chain diverged"));
+                }
+                // Apply the turn (with some generated tokens) and check the
+                // history cache still matches a from-scratch hash.
+                let gen: Vec<u32> =
+                    (0..rng.range(1, 12) as usize).map(|_| rng.next_below(1000) as u32).collect();
+                let rid = RequestId(100 + turn);
+                s.note_submitted(rid, ModelTarget::Base, delta, true, prompt.len());
+                s.apply_finished(&out(rid.0, gen, 0)).unwrap();
+                let want = block_hashes(
+                    s.tokens(),
+                    bs,
+                    &HashContext { cache_salt: salt, ..HashContext::base() },
+                );
+                if s.cached_chain(bs) != &want[..] {
+                    return Err(format!("turn {turn}: history cache diverged"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -37,6 +37,15 @@ use crate::util::fxmap::{FxHashMap, FxHashSet};
 pub struct SessionManager {
     sessions: FxHashMap<SessionId, Session>,
     next_id: u64,
+    /// Idle TTL in virtual seconds: a PARKED session (no turn in flight)
+    /// idle strictly longer than this expires on the next
+    /// [`SessionManager::expire_idle`] sweep — its lease is released and
+    /// it leaves the table (a later turn or DELETE sees an unknown
+    /// session). None = sessions never age out.
+    idle_ttl: Option<f64>,
+    /// Hard cap on live sessions: expiry sweeps evict oldest-idle parked
+    /// sessions beyond it. None = unbounded.
+    max_sessions: Option<usize>,
 }
 
 impl SessionManager {
@@ -44,13 +53,84 @@ impl SessionManager {
         Self::default()
     }
 
+    /// A manager with retention limits (the million-session harness needs
+    /// both: unbounded tables are exactly what it exists to rule out).
+    pub fn with_limits(idle_ttl: Option<f64>, max_sessions: Option<usize>) -> Self {
+        SessionManager { idle_ttl, max_sessions, ..Self::default() }
+    }
+
+    pub fn set_idle_ttl(&mut self, ttl: Option<f64>) {
+        self.idle_ttl = ttl;
+    }
+
+    pub fn set_max_sessions(&mut self, cap: Option<usize>) {
+        self.max_sessions = cap;
+    }
+
     /// Open a session under a tenant cache salt (0 = unsalted shared
     /// cache, vLLM semantics).
     pub fn create(&mut self, cache_salt: u64) -> SessionId {
+        self.create_at(cache_salt, 0.0)
+    }
+
+    /// [`SessionManager::create`] stamped with the driver's current
+    /// virtual clock, so a session that never runs a turn still ages out
+    /// of the idle TTL from its creation instant (and not from t=0).
+    pub fn create_at(&mut self, cache_salt: u64, now: f64) -> SessionId {
         let id = SessionId(self.next_id);
         self.next_id += 1;
-        self.sessions.insert(id, Session::new(id, cache_salt));
+        let mut s = Session::new(id, cache_salt);
+        s.last_activity = now;
+        self.sessions.insert(id, s);
         id
+    }
+
+    /// Expire parked sessions: first any idle strictly longer than the
+    /// TTL, then — beyond the session cap — oldest-idle first until the
+    /// table fits. Expired sessions release their prefix lease and leave
+    /// the table (counted in `sessions_expired_total`); their next turn
+    /// or DELETE is an unknown-session error, exactly like an explicit
+    /// delete. Sessions with a turn in flight never expire. Returns the
+    /// expired ids (ascending idle age, deterministic).
+    pub fn expire_idle<D: EngineDriver>(&mut self, engine: &mut D) -> Vec<SessionId> {
+        let now = engine.clock();
+        let mut parked: Vec<(f64, SessionId)> = self
+            .sessions
+            .values()
+            .filter(|s| s.in_flight().is_none())
+            .map(|s| (s.last_activity, s.id))
+            .collect();
+        // Oldest first; equal stamps break by id so sweeps are
+        // deterministic across map iteration orders.
+        parked.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut victims: Vec<SessionId> = Vec::new();
+        let mut victim_set = FxHashSet::default();
+        if let Some(ttl) = self.idle_ttl {
+            for &(stamp, id) in &parked {
+                if now - stamp > ttl {
+                    victims.push(id);
+                    victim_set.insert(id);
+                }
+            }
+        }
+        if let Some(cap) = self.max_sessions {
+            let mut live = self.sessions.len() - victims.len();
+            for &(_, id) in &parked {
+                if live <= cap {
+                    break;
+                }
+                if victim_set.insert(id) {
+                    victims.push(id);
+                    live -= 1;
+                }
+            }
+        }
+        for id in &victims {
+            engine.release_lease(id.0);
+            self.sessions.remove(id);
+            engine.metrics_mut().sessions_expired += 1;
+        }
+        victims
     }
 
     pub fn get(&self, id: SessionId) -> Option<&Session> {
@@ -91,15 +171,34 @@ impl SessionManager {
             .ok_or_else(|| anyhow::anyhow!("unknown session {}", sid.0))?;
         let prompt = s.compose_prompt(&delta)?;
         let prompt_len = prompt.len();
-        let id = engine.submit_sticky(
+        // Hash the turn's chain HERE, through the session's cached chain:
+        // a delta turn pays O(delta) hashing instead of re-hashing the
+        // whole conversation (the hot-path scaling this layer exists
+        // for). Unknown adapters fall through with an empty chain so the
+        // target replica's own admission emits the canonical error.
+        let cache = &engine.config().cache;
+        let (bs, ba) = (cache.block_size as usize, cache.base_aligned_hashing);
+        let chain = match engine.registry().request_hash_context(
+            target.adapter(),
+            &prompt,
+            ba,
+            s.cache_salt,
+        ) {
+            Some((_, ctx)) => s.turn_chain(&prompt, bs, &ctx),
+            None => Vec::new(),
+        };
+        let id = engine.submit_sticky_prehashed(
             target,
             prompt,
             SamplingParams { max_new_tokens, ..Default::default() },
             true, // continuation priority (paper §4.3)
             s.cache_salt,
             s.last_request,
+            Some(sid.0),
+            chain,
         )?;
         let turn = s.note_submitted(id, target, delta, append, prompt_len);
+        s.last_activity = engine.clock();
         Ok((turn, id))
     }
 
@@ -118,7 +217,14 @@ impl SessionManager {
             .ok_or_else(|| anyhow::anyhow!("unknown session {}", sid.0))?;
         let record = s.apply_finished(out)?;
         engine.metrics_mut().observe_turn(out);
-        s.leased_blocks = engine.acquire_lease(sid.0, s.tokens(), s.cache_salt, Some(out.id));
+        // Re-lease over the cached chain: the turn extended the history,
+        // so this is an O(delta) chain extension + an O(delta) lease
+        // extension on the holding replica — never a full re-hash or
+        // full re-pin of the conversation.
+        let bs = engine.config().cache.block_size as usize;
+        let chain = s.cached_chain(bs).to_vec();
+        s.leased_blocks = engine.acquire_lease_prehashed(sid.0, &chain, Some(out.id));
+        s.last_activity = engine.clock();
         Ok(record)
     }
 
@@ -558,6 +664,77 @@ mod tests {
         mgr.delete(&mut e, sid).unwrap();
         assert!(mgr.get(sid).is_none());
         assert!(mgr.delete(&mut e, sid).is_err(), "double delete");
+    }
+
+    #[test]
+    fn idle_sessions_expire_and_release_leases() {
+        let mut e = engine();
+        let mut mgr = SessionManager::with_limits(Some(100.0), None);
+        let a = mgr.create(0);
+        let b = mgr.create(0);
+        mgr.run_turn(&mut e, a, ModelTarget::Base, (0..64).collect(), 8, true)
+            .unwrap();
+        mgr.run_turn(&mut e, b, ModelTarget::Base, (100..164).collect(), 8, true)
+            .unwrap();
+        assert!(e.leased_blocks() > 0);
+        // Nothing is stale yet: the sweep is a no-op.
+        assert!(mgr.expire_idle(&mut e).is_empty());
+        assert_eq!(mgr.len(), 2);
+        // Let both go stale, then refresh only `b` with a fresh turn.
+        let t = e.clock();
+        e.advance_clock_to(t + 250.0);
+        mgr.run_turn(&mut e, b, ModelTarget::Base, (200..208).collect(), 8, true)
+            .unwrap();
+        let before = e.leased_blocks();
+        let expired = mgr.expire_idle(&mut e);
+        assert_eq!(expired, vec![a], "only the stale parked session expires");
+        assert_eq!(e.metrics.sessions_expired, 1);
+        assert!(e.leased_blocks() < before, "expiry released the lease");
+        // The expired session is GONE — its next DELETE (or turn) is an
+        // unknown-session error, same as an explicit delete.
+        assert!(mgr.delete(&mut e, a).is_err());
+        mgr.delete(&mut e, b).unwrap();
+        assert_eq!(e.leased_blocks(), 0);
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn session_cap_evicts_oldest_idle_first() {
+        let mut d = DeadEndDriver::new();
+        let mut mgr = SessionManager::with_limits(None, Some(2));
+        let a = mgr.create_at(0, 10.0);
+        let b = mgr.create_at(0, 20.0);
+        let c = mgr.create_at(0, 5.0);
+        let expired = mgr.expire_idle(&mut d);
+        assert_eq!(expired, vec![c], "oldest-idle evicted down to the cap");
+        assert_eq!(mgr.len(), 2);
+        assert!(mgr.get(a).is_some() && mgr.get(b).is_some());
+        assert_eq!(d.metrics.sessions_expired, 1);
+        // Under the cap again: no-op.
+        assert!(mgr.expire_idle(&mut d).is_empty());
+    }
+
+    #[test]
+    fn in_flight_sessions_never_expire() {
+        let mut d = DeadEndDriver::new();
+        let mut mgr = SessionManager::with_limits(Some(10.0), None);
+        let busy = mgr.create(0);
+        let parked = mgr.create(0);
+        let (_t, rid) = mgr
+            .begin_turn(&mut d, busy, ModelTarget::Base, vec![1, 2], 4, true)
+            .unwrap();
+        for sid in [busy, parked] {
+            mgr.sessions.get_mut(&sid).unwrap().last_activity = -100.0;
+        }
+        let expired = mgr.expire_idle(&mut d);
+        assert_eq!(expired, vec![parked], "mid-turn session is immune");
+        assert!(mgr.get(busy).is_some());
+        // Once aborted the session is parked — and collectable.
+        assert_eq!(mgr.abort_turn(busy), Some(rid));
+        mgr.sessions.get_mut(&busy).unwrap().last_activity = -100.0;
+        assert_eq!(mgr.expire_idle(&mut d), vec![busy]);
+        assert!(mgr.is_empty());
+        assert_eq!(d.metrics.sessions_expired, 2);
     }
 
     #[test]

@@ -70,43 +70,134 @@ impl Welford {
     }
 }
 
-/// Sample set with exact percentiles. Used for per-stage latency summaries
-/// (Table 2 metrics) where request counts are modest.
-#[derive(Debug, Clone, Default)]
+/// Retained samples per series. Exact percentiles below this; a seeded
+/// reservoir (algorithm R) above it, so per-series memory is O(1) no
+/// matter how many observations flow through (the million-session bound).
+pub const RESERVOIR_CAP: usize = 4096;
+
+/// Sample set with bounded memory: exact count/sum/min/max always, exact
+/// percentiles while under [`RESERVOIR_CAP`], reservoir-sampled percentiles
+/// beyond it. Replacement decisions come from a private splitmix64 stream
+/// with a fixed seed, so quantiles are bit-identical across runs.
+#[derive(Debug, Clone)]
 pub struct Samples {
     xs: Vec<f64>,
     sorted: bool,
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    rng: u64,
+}
+
+impl Default for Samples {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Samples {
     pub fn new() -> Self {
-        Samples { xs: Vec::new(), sorted: true }
+        Samples {
+            xs: Vec::new(),
+            sorted: true,
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            rng: 0x5A4D_9E37_C0FF_EE01,
+        }
+    }
+
+    #[inline]
+    fn next_rand(&mut self) -> u64 {
+        self.rng = self.rng.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.rng;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
     }
 
     #[inline]
     pub fn push(&mut self, x: f64) {
-        self.xs.push(x);
-        self.sorted = false;
+        self.n += 1;
+        self.sum += x;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+        if self.xs.len() < RESERVOIR_CAP {
+            self.xs.push(x);
+            self.sorted = false;
+        } else {
+            // Algorithm R: the i-th observation replaces a retained slot
+            // with probability cap/i, keeping the reservoir a uniform
+            // sample of the whole stream.
+            let j = self.next_rand() % self.n;
+            if (j as usize) < RESERVOIR_CAP {
+                self.xs[j as usize] = x;
+                self.sorted = false;
+            }
+        }
     }
 
+    /// Merge another sample set. Exact while the combined count fits the
+    /// reservoir; beyond that the merged reservoir draws each slot from
+    /// one side with probability proportional to its true count, so
+    /// quantiles stay weighted by observation volume, not retention.
     pub fn extend_from(&mut self, other: &Samples) {
-        self.xs.extend_from_slice(&other.xs);
-        self.sorted = false;
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let total = self.n + other.n;
+        if total as usize <= RESERVOIR_CAP {
+            // Both sides are below cap, hence exact.
+            self.xs.extend_from_slice(&other.xs);
+            self.sorted = false;
+        } else {
+            let mut merged = Vec::with_capacity(RESERVOIR_CAP);
+            for _ in 0..RESERVOIR_CAP {
+                let from_self = self.next_rand() % total < self.n;
+                let src = if from_self { &self.xs } else { &other.xs };
+                let j = (self.next_rand() % src.len() as u64) as usize;
+                merged.push(src[j]);
+            }
+            self.xs = merged;
+            self.sorted = false;
+        }
+        self.n = total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
     }
 
+    /// Exact observation count (not the retained-sample count).
     pub fn len(&self) -> usize {
-        self.xs.len()
+        self.n as usize
     }
     pub fn is_empty(&self) -> bool {
-        self.xs.is_empty()
+        self.n == 0
     }
 
+    /// Retained samples — bounded by [`RESERVOIR_CAP`] (memory audits).
+    pub fn retained(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Exact running sum.
     pub fn sum(&self) -> f64 {
-        self.xs.iter().sum()
+        self.sum
     }
 
+    /// Exact mean (sum/count — not reservoir-approximated).
     pub fn mean(&self) -> f64 {
-        if self.xs.is_empty() { 0.0 } else { self.sum() / self.xs.len() as f64 }
+        if self.n == 0 { 0.0 } else { self.sum / self.n as f64 }
     }
 
     fn ensure_sorted(&mut self) {
@@ -116,10 +207,18 @@ impl Samples {
         }
     }
 
-    /// Exact percentile by linear interpolation; `p` in [0, 100].
+    /// Percentile by linear interpolation over the retained samples; `p`
+    /// in [0, 100]. Exact below [`RESERVOIR_CAP`]; the endpoints are
+    /// always exact (tracked min/max).
     pub fn percentile(&mut self, p: f64) -> f64 {
-        if self.xs.is_empty() {
+        if self.n == 0 {
             return 0.0;
+        }
+        if p <= 0.0 {
+            return self.min;
+        }
+        if p >= 100.0 {
+            return self.max;
         }
         self.ensure_sorted();
         let rank = (p / 100.0) * (self.xs.len() - 1) as f64;
@@ -140,11 +239,13 @@ impl Samples {
         self.percentile(99.0)
     }
 
+    /// Exact minimum (0.0 when empty).
     pub fn min(&mut self) -> f64 {
-        self.percentile(0.0)
+        if self.n == 0 { 0.0 } else { self.min }
     }
+    /// Exact maximum (0.0 when empty).
     pub fn max(&mut self) -> f64 {
-        self.percentile(100.0)
+        if self.n == 0 { 0.0 } else { self.max }
     }
 }
 
@@ -278,6 +379,131 @@ mod tests {
     fn percentile_empty_is_zero() {
         let mut s = Samples::new();
         assert_eq!(s.median(), 0.0);
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_keeps_exact_moments() {
+        let mut s = Samples::new();
+        let n = 100_000u64;
+        for i in 0..n {
+            s.push(i as f64);
+        }
+        assert_eq!(s.len(), n as usize, "count is exact");
+        assert!(s.retained() <= RESERVOIR_CAP, "memory bounded");
+        assert!((s.sum() - (n * (n - 1) / 2) as f64).abs() < 1e-3);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), (n - 1) as f64);
+        assert!((s.mean() - (n - 1) as f64 / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reservoir_quantiles_near_exact_and_deterministic() {
+        // Uniform 0..100k: reservoir p50/p99 must land within a few
+        // percent of truth, and two identical runs must agree bit-for-bit
+        // (fixed seed — the determinism contract figures rely on).
+        let run = || {
+            let mut s = Samples::new();
+            for i in 0..100_000u64 {
+                // Bit-mixed insertion order so sortedness isn't an accident.
+                let x = (i.wrapping_mul(0x9E37_79B9_7F4A_7C15) % 100_000) as f64;
+                s.push(x);
+            }
+            (s.median(), s.p99())
+        };
+        let (m1, p1) = run();
+        let (m2, p2) = run();
+        assert_eq!(m1.to_bits(), m2.to_bits(), "median deterministic");
+        assert_eq!(p1.to_bits(), p2.to_bits(), "p99 deterministic");
+        assert!((m1 - 50_000.0).abs() < 3_000.0, "median={m1}");
+        assert!((p1 - 99_000.0).abs() < 1_500.0, "p99={p1}");
+    }
+
+    #[test]
+    fn reservoir_merge_weights_by_count() {
+        // 90k low values + 10k high values merged over-cap: p50 must stay
+        // low (count-weighted), and the merge must be deterministic.
+        let build = || {
+            let mut a = Samples::new();
+            for i in 0..90_000 {
+                a.push((i % 100) as f64);
+            }
+            let mut b = Samples::new();
+            for i in 0..10_000 {
+                b.push(1_000.0 + (i % 100) as f64);
+            }
+            a.extend_from(&b);
+            a
+        };
+        let mut m = build();
+        let mut m2 = build();
+        assert_eq!(m.len(), 100_000);
+        assert!(m.retained() <= RESERVOIR_CAP);
+        assert_eq!(m.median().to_bits(), m2.median().to_bits());
+        assert!(m.median() < 200.0, "median weighted to the 90% side");
+        assert_eq!(m.min(), 0.0);
+        assert_eq!(m.max(), 1_099.0);
+    }
+
+    #[test]
+    fn property_reservoir_quantiles_track_exact() {
+        // Satellite (c): on random distributions, reservoir quantiles stay
+        // within tolerance of an exact (unbounded) computation, and repeat
+        // runs are bit-identical.
+        use crate::util::prop;
+        prop::check("reservoir-quantiles", 8, |rng, _| {
+            let n = rng.range(20_000, 60_000) as usize;
+            let scale = rng.range(1, 1000) as f64;
+            let xs: Vec<f64> = (0..n)
+                .map(|_| match rng.next_below(3) {
+                    0 => rng.next_f64() * scale,
+                    1 => rng.exponential(1.0 / scale),
+                    _ => rng.gaussian().abs() * scale,
+                })
+                .collect();
+            let mut exact = xs.clone();
+            exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let exact_at = |p: f64| exact[((p / 100.0) * (n - 1) as f64) as usize];
+            let fill = |xs: &[f64]| {
+                let mut s = Samples::new();
+                for &x in xs {
+                    s.push(x);
+                }
+                s
+            };
+            let mut s = fill(&xs);
+            let mut s2 = fill(&xs);
+            for p in [50.0, 90.0, 99.0] {
+                let got = s.percentile(p);
+                let want = exact_at(p);
+                let tol = 0.15 * (exact_at(99.9) - exact_at(0.1)).max(1e-9);
+                if (got - want).abs() > tol {
+                    return Err(format!("p{p}: got {got}, exact {want}, tol {tol}"));
+                }
+                if got.to_bits() != s2.percentile(p).to_bits() {
+                    return Err(format!("p{p} not deterministic"));
+                }
+            }
+            if s.len() != n || s.retained() > RESERVOIR_CAP {
+                return Err("count/retention broken".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn small_merges_stay_exact() {
+        let mut a = Samples::new();
+        let mut b = Samples::new();
+        for i in 1..=50 {
+            a.push(i as f64);
+        }
+        for i in 51..=100 {
+            b.push(i as f64);
+        }
+        a.extend_from(&b);
+        assert_eq!(a.len(), 100);
+        assert!((a.median() - 50.5).abs() < 1e-9);
+        assert_eq!(a.percentile(100.0), 100.0);
     }
 
     #[test]
