@@ -1,0 +1,79 @@
+//! `bench_concurrency`: the lock-split serving hot path under handler
+//! contention (ISSUE 7).
+//!
+//! Sweeps 1..=16 client threads (`--quick`: 1..=8) against a live server
+//! over real HTTP — each thread creating sessions and driving delta
+//! turns — and records aggregate turn throughput and the p50/p99 TTFT
+//! the clients observe. Writes `BENCH_concurrency.json` at the repo
+//! root — CI uploads it and diffs only the DETERMINISTIC columns
+//! (session/turn counts) against the committed baseline: wall-clock
+//! throughput and TTFT-under-contention depend on the runner and are
+//! informational.
+
+use alora_serve::figures::concurrency::{run_contention, ContentionConfig};
+use alora_serve::util::bench::section;
+use alora_serve::util::json::Json;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (threads, per): (&[usize], usize) =
+        if quick { (&[1, 2, 4, 8], 8) } else { (&[1, 2, 4, 8, 16], 16) };
+    section(&format!(
+        "concurrency harness: {:?} client threads x {per} sessions ({})",
+        threads,
+        if quick { "quick tier" } else { "full tier" }
+    ));
+    let mut tiers: Vec<Json> = Vec::new();
+    for &n in threads {
+        let cfg = ContentionConfig::sized(n, per);
+        let r = run_contention(&cfg);
+        assert_eq!(r.sessions, (n * per) as u64, "lost or duplicated sessions");
+        assert_eq!(
+            r.turns,
+            (n * per * cfg.turns_per_session) as u64,
+            "lost or duplicated turns"
+        );
+        println!(
+            "{:2} threads: {} turns in {:.2}s wall  ({:.0} turns/s)  \
+             TTFT p50 {:.4}s p99 {:.4}s  delta-hit {:.3}",
+            n,
+            r.turns,
+            r.wall_s,
+            r.turns_per_s(),
+            r.ttft.percentile(50.0),
+            r.ttft.p99(),
+            r.delta_hit_rate
+        );
+        tiers.push(Json::obj(vec![
+            ("threads", Json::num(n as f64)),
+            ("sessions", Json::num(r.sessions as f64)),
+            ("turns", Json::num(r.turns as f64)),
+            ("wall_s", Json::num(r.wall_s)),
+            ("turns_per_s", Json::num(r.turns_per_s())),
+            (
+                "ttft_s",
+                Json::obj(vec![
+                    ("p50", Json::num(r.ttft.percentile(50.0))),
+                    ("p99", Json::num(r.ttft.p99())),
+                ]),
+            ),
+            ("delta_hit_rate", Json::num(r.delta_hit_rate)),
+        ]));
+    }
+    let report = Json::obj(vec![
+        ("bench", Json::str("concurrency")),
+        ("quick", Json::Bool(quick)),
+        ("tiers", Json::Arr(tiers)),
+        (
+            "note",
+            Json::str(
+                "real wall-clock HTTP contention run; only sessions/turns are \
+                 deterministic — regenerate with \
+                 `cargo bench --bench bench_concurrency -- --quick` (make bench-smoke)",
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_concurrency.json", format!("{report}\n"))
+        .expect("write BENCH_concurrency.json");
+    println!("wrote BENCH_concurrency.json");
+}

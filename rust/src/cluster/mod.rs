@@ -40,6 +40,7 @@ use crate::adapter::AdapterRegistry;
 use crate::config::EngineConfig;
 use crate::engine::{Engine, EngineDriver, EvacuatedRequest, Executor};
 use crate::kvcache::block::BlockHash;
+use crate::kvcache::chain::ChainRef;
 use crate::kvcache::prefix::{block_hashes, HashContext};
 use crate::metrics::{Metrics, RoutingMetrics};
 use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams, TurnEvent};
@@ -601,21 +602,22 @@ impl<E: Executor> Cluster<E> {
 
     /// Score every replica for one request. The chain is hashed ONCE —
     /// each replica contributes only a summary probe plus an O(1)
-    /// residency lookup (no pool walks) — and returned so submission can
-    /// pre-seed the request with it (admission then skips rehashing the
-    /// same prompt).
+    /// residency lookup (no pool walks) — and returned as an interned
+    /// [`ChainRef`] so submission can pre-seed the request with it
+    /// (admission then skips rehashing the same prompt, and handing the
+    /// handle to a replica shares arena nodes instead of copying).
     fn views_for(
         &self,
         target: ModelTarget,
         prompt: &[u32],
         cache_salt: u64,
-    ) -> (Vec<ReplicaView>, Vec<BlockHash>) {
+    ) -> (Vec<ReplicaView>, ChainRef) {
         let chain = if self.router.needs_chain() {
             let ctx = self.routing_context(target, prompt, cache_salt);
             let bs = self.replicas[0].cfg.cache.block_size as usize;
-            block_hashes(prompt, bs, &ctx)
+            ChainRef::from_hashes(&block_hashes(prompt, bs, &ctx))
         } else {
-            Vec::new()
+            ChainRef::empty()
         };
         let views = self.views_for_chain(target, &chain, None);
         (views, chain)
@@ -627,9 +629,11 @@ impl<E: Executor> Cluster<E> {
     ///   that replica's summary maintains the chain's matched run
     ///   incrementally (see `HashSummary::track`), so its affinity is
     ///   read in O(1) (plus a probe per delta block past the tracked
-    ///   chain) instead of scanning. The hint is validated in O(1):
-    ///   block hashes chain each block to its parent, so a matching last
-    ///   hash means the tracked chain IS a prefix of the query chain.
+    ///   chain) instead of scanning. The hint is validated in O(delta):
+    ///   chains are interned in one arena, so "the tracked chain IS a
+    ///   prefix of the query chain" is a parent walk to the tracked
+    ///   head plus a node-identity compare — no hash comparison and no
+    ///   materialization.
     /// - **Probe watermark** — replicas whose best possible score
     ///   (`chain.len() + adapter_blocks - penalty × load`) cannot beat
     ///   the best score already seen are reported with affinity 0 and
@@ -645,11 +649,18 @@ impl<E: Executor> Cluster<E> {
     fn views_for_chain(
         &self,
         target: ModelTarget,
-        chain: &[BlockHash],
+        chain: &ChainRef,
         lease: Option<u64>,
     ) -> Vec<ReplicaView> {
         let penalty = self.router.load_penalty();
         let mut best = f64::NEG_INFINITY;
+        // A cold scan (no usable lease hint on that replica) walks the
+        // chain front-to-back, which needs a materialized slice. It is
+        // built at most ONCE per placement, lazily — a sticky-warm fleet
+        // where every probed replica rides the tracked-chain fast path
+        // never pays the copy, and delta turns never reach here at all
+        // (they take the sticky no-scan path in `submit_sticky_prehashed`).
+        let mut full: Option<Vec<BlockHash>> = None;
         let mut views = Vec::with_capacity(self.replicas.len());
         for (i, r) in self.replicas.iter().enumerate() {
             let load = r.num_running() + r.num_waiting();
@@ -671,9 +682,11 @@ impl<E: Executor> Cluster<E> {
                     let summary = r.routing_summary();
                     let tracked = lease.and_then(|key| {
                         let (matched, len) = summary.tracked_prefix(key)?;
-                        let tc = summary.tracked_chain(key)?;
-                        let valid =
-                            len > 0 && len <= chain.len() && tc[len - 1] == chain[len - 1];
+                        let tc = summary.tracked_chain_ref(key)?;
+                        // Interned-node identity: the query extends the
+                        // tracked chain iff walking back (len − tc.len)
+                        // parents lands on tc's head node. O(delta).
+                        let valid = len > 0 && chain.is_extension_of(tc);
                         if !valid {
                             return None;
                         }
@@ -682,10 +695,13 @@ impl<E: Executor> Cluster<E> {
                             // scan would stop exactly there.
                             matched
                         } else {
-                            len + summary.matching_prefix(&chain[len..])
+                            len + summary.matching_prefix(&chain.suffix(len))
                         })
                     });
-                    let a = tracked.unwrap_or_else(|| summary.matching_prefix(chain));
+                    let a = tracked.unwrap_or_else(|| {
+                        let hashes = full.get_or_insert_with(|| chain.hashes());
+                        summary.matching_prefix(hashes)
+                    });
                     best = best.max((a + adapter_blocks) as f64 - penalty * load as f64);
                     a
                 }
@@ -843,7 +859,7 @@ impl<E: Executor> EngineDriver for Cluster<E> {
         cache_salt: u64,
         peer: Option<RequestId>,
         lease: Option<u64>,
-        chain: Vec<BlockHash>,
+        chain: ChainRef,
     ) -> anyhow::Result<RequestId> {
         let sticky = peer.map(|p| self.replica_of(p));
         match sticky {
@@ -870,8 +886,9 @@ impl<E: Executor> EngineDriver for Cluster<E> {
                 }
                 // Chain-blind policies never look at affinity; don't pay
                 // for probes they'd ignore (mirrors `views_for`).
-                let score_chain: &[BlockHash] =
-                    if self.router.needs_chain() { &chain } else { &[] };
+                let empty = ChainRef::empty();
+                let score_chain =
+                    if self.router.needs_chain() { &chain } else { &empty };
                 let views = self.views_for_chain(target, score_chain, lease);
                 let placement = self.router.choose(&views);
                 let now = self.clock();
@@ -939,7 +956,7 @@ impl<E: Executor> EngineDriver for Cluster<E> {
     fn acquire_lease_prehashed(
         &mut self,
         lease: u64,
-        chain: &[BlockHash],
+        chain: &ChainRef,
         peer: Option<RequestId>,
     ) -> usize {
         let Some(peer) = peer else { return 0 };

@@ -19,7 +19,7 @@
 use crate::adapter::AdapterRegistry;
 use crate::config::EngineConfig;
 use crate::engine::{Engine, Executor};
-use crate::kvcache::block::BlockHash;
+use crate::kvcache::chain::ChainRef;
 use crate::metrics::Metrics;
 use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams, TurnEvent};
 
@@ -74,7 +74,7 @@ pub trait EngineDriver {
         cache_salt: u64,
         peer: Option<RequestId>,
         lease: Option<u64>,
-        chain: Vec<BlockHash>,
+        chain: ChainRef,
     ) -> anyhow::Result<RequestId> {
         let _ = (lease, chain);
         self.submit_sticky(target, prompt, params, priority, cache_salt, peer)
@@ -121,7 +121,7 @@ pub trait EngineDriver {
     fn acquire_lease_prehashed(
         &mut self,
         lease: u64,
-        chain: &[BlockHash],
+        chain: &ChainRef,
         peer: Option<RequestId>,
     ) -> usize {
         let _ = (lease, chain, peer);
@@ -318,7 +318,7 @@ impl<E: Executor> EngineDriver for Engine<E> {
         cache_salt: u64,
         _peer: Option<RequestId>,
         _lease: Option<u64>,
-        chain: Vec<BlockHash>,
+        chain: ChainRef,
     ) -> anyhow::Result<RequestId> {
         Engine::submit_prehashed(self, target, prompt, params, priority, cache_salt, chain)
     }
@@ -336,7 +336,7 @@ impl<E: Executor> EngineDriver for Engine<E> {
     fn acquire_lease_prehashed(
         &mut self,
         lease: u64,
-        chain: &[BlockHash],
+        chain: &ChainRef,
         _peer: Option<RequestId>,
     ) -> usize {
         Engine::lease_prefix_prehashed(self, lease, chain)

@@ -22,7 +22,7 @@ use crate::util::fxmap::{FxHashMap, FxHashSet};
 
 use crate::adapter::{AdapterId, AdapterRegistry, AdapterResidency};
 use crate::config::EngineConfig;
-use crate::kvcache::block::BlockHash;
+use crate::kvcache::chain::ChainRef;
 use crate::kvcache::manager::KvCacheManager;
 use crate::kvcache::prefix::{block_hashes, next_block_hash};
 use crate::metrics::Metrics;
@@ -277,7 +277,7 @@ impl<E: Executor> Engine<E> {
         priority: bool,
         cache_salt: u64,
     ) -> anyhow::Result<RequestId> {
-        self.submit_prehashed(target, prompt, params, priority, cache_salt, Vec::new())
+        self.submit_prehashed(target, prompt, params, priority, cache_salt, ChainRef::empty())
     }
 
     /// Like [`submit_salted`](Self::submit_salted), pre-seeding the
@@ -301,7 +301,7 @@ impl<E: Executor> Engine<E> {
         params: SamplingParams,
         priority: bool,
         cache_salt: u64,
-        chain: Vec<BlockHash>,
+        chain: ChainRef,
     ) -> anyhow::Result<RequestId> {
         let id = RequestId(self.next_id);
         let req =
@@ -323,7 +323,7 @@ impl<E: Executor> Engine<E> {
         params: SamplingParams,
         arrival: f64,
         cache_salt: u64,
-        chain: Vec<BlockHash>,
+        chain: ChainRef,
     ) -> anyhow::Result<Request> {
         let final_len = prompt.len() + params.max_new_tokens as usize;
         anyhow::ensure!(
@@ -454,7 +454,7 @@ impl<E: Executor> Engine<E> {
     pub(crate) fn submit_evacuated(
         &mut self,
         ev: EvacuatedRequest,
-        chain: Vec<BlockHash>,
+        chain: ChainRef,
     ) -> anyhow::Result<()> {
         anyhow::ensure!(
             !self.reqs.contains_key(&ev.id),
@@ -560,19 +560,22 @@ impl<E: Executor> Engine<E> {
             let full_blocks = r.num_computed_tokens / block_size;
             if full_blocks > r.hash_chain.len() {
                 let tokens = r.all_tokens();
-                let mut parent = r.hash_chain.last().copied();
+                let mut parent = r.hash_chain.last();
+                let mut delta = Vec::with_capacity(full_blocks - r.hash_chain.len());
                 for idx in r.hash_chain.len()..full_blocks {
                     let h = next_block_hash(parent, &tokens, idx, block_size, &r.hash_ctx);
-                    r.hash_chain.push(h);
+                    delta.push(h);
                     parent = Some(h);
                 }
+                r.hash_chain = r.hash_chain.extend(&delta);
             }
-            // Commit without cloning the chain: `reqs` and `kv` are
-            // disjoint fields, so the borrows split (perf pass: this was
-            // a per-seq Vec allocation on the hot loop).
+            // Commit only fully computed blocks: during chunked prefill a
+            // pre-seeded chain can run ahead of the computed KV. The
+            // prefix handle is an O(tail) walk + refcount bump — no
+            // per-seq hash copy on this hot loop.
             let upto = full_blocks.min(r.hash_chain.len());
-            let chain = &self.reqs[&s.id].hash_chain[..upto];
-            self.kv.commit_full_blocks(s.id.0, chain);
+            let chain = r.hash_chain.prefix(upto);
+            self.kv.commit_full_blocks(s.id.0, &chain);
 
             // Finish?
             let r = self.reqs.get_mut(&s.id).unwrap();
@@ -685,7 +688,11 @@ impl<E: Executor> Engine<E> {
             )
             .map(|(_, ctx)| ctx)
             .expect("base target always has a hash context");
-        let chain = block_hashes(tokens, self.cfg.cache.block_size as usize, &ctx);
+        let chain = ChainRef::from_hashes(&block_hashes(
+            tokens,
+            self.cfg.cache.block_size as usize,
+            &ctx,
+        ));
         self.lease_prefix_prehashed(lease, &chain)
     }
 
@@ -694,7 +701,7 @@ impl<E: Executor> Engine<E> {
     /// turn, so re-leasing must not rehash the whole history. The same
     /// trust rule as [`Self::submit_prehashed`] applies: the chain must
     /// come from the engine's own `request_hash_context` salting.
-    pub(crate) fn lease_prefix_prehashed(&mut self, lease: u64, chain: &[BlockHash]) -> usize {
+    pub(crate) fn lease_prefix_prehashed(&mut self, lease: u64, chain: &ChainRef) -> usize {
         let pinned = self.kv.acquire_lease(lease, chain);
         // Refresh the gauge here, not just per step: leases change while
         // the engine is idle (between turns), and /metrics must not lag.
@@ -1032,11 +1039,11 @@ mod tests {
         e.run_to_completion(warm);
         // A router-style pre-seeded chain must hit exactly what a lazily
         // hashed submission of the same prompt hits.
-        let chain = block_hashes(
+        let chain = ChainRef::from_hashes(&block_hashes(
             &prompt,
             e.cfg.cache.block_size as usize,
             &HashContext::base(),
-        );
+        ));
         let pre = e
             .submit_prehashed(ModelTarget::Base, prompt.clone(), p, false, 0, chain)
             .unwrap();
@@ -1228,7 +1235,7 @@ mod tests {
         let arrival = evs[0].arrival;
         survivor.advance_clock_to(arrival); // fleet time at failover
         for ev in evs {
-            survivor.submit_evacuated(ev, Vec::new()).unwrap();
+            survivor.submit_evacuated(ev, ChainRef::empty()).unwrap();
         }
         let out = survivor.run_to_completion(running);
         assert_eq!(out.id, running);
@@ -1257,8 +1264,8 @@ mod tests {
             watched: false,
         };
         let mut busy = tiny_engine();
-        busy.submit_evacuated(dup.clone(), Vec::new()).unwrap();
-        assert!(busy.submit_evacuated(dup, Vec::new()).is_err());
+        busy.submit_evacuated(dup.clone(), ChainRef::empty()).unwrap();
+        assert!(busy.submit_evacuated(dup, ChainRef::empty()).is_err());
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! `concurrency` figure + the handler-contention bench harness (ISSUE 7).
+//!
+//! Hammers a live [`crate::server::Server`] over real HTTP from 1..=N
+//! client threads, each driving its own sessions through delta turns, and
+//! reports aggregate turn throughput plus TTFT tails as seen by the
+//! clients. The shape under test is the lock-split hot path: handler
+//! threads enqueue commands and park on sharded wait slots instead of
+//! contending on an engine mutex, so adding client threads must not
+//! collapse throughput. Like `scale`, this is a bench-tier figure
+//! (reachable via `figure --id concurrency`, deliberately not part of
+//! `all`); `bench_concurrency` runs the same harness and writes
+//! `BENCH_concurrency.json`.
+//!
+//! Wall-clock numbers here are REAL time (thread scheduling, TCP), not
+//! the virtual clock — they vary run to run. The deterministic columns
+//! (sessions, turns) are what CI diffs against the committed baseline;
+//! throughput and tails are informational.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use super::Table;
+use crate::config::presets;
+use crate::engine::Engine;
+use crate::pipeline::workload;
+use crate::server::Server;
+use crate::simulator::SimExecutor;
+use crate::util::json::Json;
+use crate::util::stats::Samples;
+
+/// One contention run's knobs. Token sizes are small on purpose: the
+/// harness measures the serving control plane under handler concurrency
+/// (submit queue, waiter shards, session shards), not model compute.
+#[derive(Debug, Clone)]
+pub struct ContentionConfig {
+    /// Concurrent client threads.
+    pub threads: usize,
+    /// Sessions each thread creates and drives to completion.
+    pub sessions_per_thread: usize,
+    /// Turns per session (first turn + delta follow-ups).
+    pub turns_per_session: usize,
+    /// First-turn prompt length (tokens).
+    pub first_len: usize,
+    /// Follow-up delta length (tokens).
+    pub delta_len: usize,
+    pub gen_tokens: u32,
+}
+
+impl ContentionConfig {
+    /// Shared shape; only the thread count sweeps between rows.
+    pub fn sized(threads: usize, sessions_per_thread: usize) -> Self {
+        ContentionConfig {
+            threads,
+            sessions_per_thread,
+            turns_per_session: 4,
+            first_len: 64,
+            delta_len: 16,
+            gen_tokens: 2,
+        }
+    }
+}
+
+/// What one contention run measured (client-side view).
+#[derive(Debug)]
+pub struct ContentionReport {
+    pub threads: usize,
+    pub sessions: u64,
+    pub turns: u64,
+    /// Real elapsed seconds for the whole run (nondeterministic).
+    pub wall_s: f64,
+    /// Client-observed TTFT per turn, from the turn summaries.
+    pub ttft: Samples,
+    /// Mean cache hit rate across delta (non-first) turns — the reuse
+    /// signal surviving under concurrency.
+    pub delta_hit_rate: f64,
+}
+
+impl ContentionReport {
+    pub fn turns_per_s(&self) -> f64 {
+        self.turns as f64 / self.wall_s.max(1e-9)
+    }
+}
+
+fn http(addr: SocketAddr, req: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect to bench server");
+    s.write_all(req.as_bytes()).expect("write request");
+    let mut out = String::new();
+    s.read_to_string(&mut out).expect("read response");
+    out
+}
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> String {
+    http(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn body_json(resp: &str) -> Json {
+    Json::parse(resp.lines().last().expect("response body")).expect("json body")
+}
+
+/// What one client thread brings back: per-turn TTFTs and the delta-turn
+/// hit rates it observed.
+struct ThreadTally {
+    ttfts: Vec<f64>,
+    delta_hits: Vec<f64>,
+}
+
+/// Deterministic token stream: distinct across (thread, session, turn) so
+/// tenants don't accidentally share prefixes, stable across runs so the
+/// session/turn counts in the report are exactly reproducible.
+fn turn_tokens(th: usize, sess: usize, turn: usize, len: usize, vocab: u32) -> Vec<u32> {
+    (0..len)
+        .map(|t| ((th * 7919 + sess * 613 + turn * 131 + t) as u32) % vocab)
+        .collect()
+}
+
+/// Run one contention tier: start a fresh single-replica sim server, turn
+/// `threads` client threads loose on it, and collect the client-side
+/// tallies. Every response is asserted OK — a single dropped or
+/// double-counted turn fails the run, which is the correctness half of
+/// the contention story.
+pub fn run_contention(cfg: &ContentionConfig) -> ContentionReport {
+    let e_cfg = presets::granite_8b();
+    let vocab = e_cfg.model.vocab_size;
+    let reg = workload::build_registry(2, vocab, true);
+    let exec = SimExecutor::new(&e_cfg);
+    let mut srv = Server::start(Engine::with_registry(e_cfg, reg, exec), "127.0.0.1:0")
+        .expect("bench server start");
+    let addr = srv.addr();
+
+    let start = std::time::Instant::now();
+    let handles: Vec<std::thread::JoinHandle<ThreadTally>> = (0..cfg.threads)
+        .map(|th| {
+            let cfg = cfg.clone();
+            std::thread::spawn(move || {
+                let mut tally = ThreadTally { ttfts: Vec::new(), delta_hits: Vec::new() };
+                for sess in 0..cfg.sessions_per_thread {
+                    let r = post(
+                        addr,
+                        "/v1/sessions",
+                        &format!(r#"{{"cache_salt": {}}}"#, th * 100_003 + sess),
+                    );
+                    assert!(r.contains("200 OK"), "create: {r}");
+                    let sid = body_json(&r)
+                        .get("session")
+                        .and_then(Json::as_u64)
+                        .expect("session id");
+                    for turn in 0..cfg.turns_per_session {
+                        let len = if turn == 0 { cfg.first_len } else { cfg.delta_len };
+                        let tokens = turn_tokens(th, sess, turn, len, vocab);
+                        let toks: Vec<String> =
+                            tokens.iter().map(u32::to_string).collect();
+                        let body = format!(
+                            r#"{{"tokens": [{}], "max_new_tokens": {}}}"#,
+                            toks.join(","),
+                            cfg.gen_tokens
+                        );
+                        let r = post(addr, &format!("/v1/sessions/{sid}/turns"), &body);
+                        assert!(r.contains("200 OK"), "turn: {r}");
+                        let j = body_json(&r);
+                        tally.ttfts.push(
+                            j.get("ttft_s").and_then(Json::as_f64).expect("ttft_s"),
+                        );
+                        if turn > 0 {
+                            tally.delta_hits.push(
+                                j.get("cache_hit_rate")
+                                    .and_then(Json::as_f64)
+                                    .expect("cache_hit_rate"),
+                            );
+                        }
+                    }
+                    let r = http(
+                        addr,
+                        &format!("DELETE /v1/sessions/{sid} HTTP/1.1\r\nHost: x\r\n\r\n"),
+                    );
+                    assert!(r.contains("200 OK"), "delete: {r}");
+                }
+                tally
+            })
+        })
+        .collect();
+    let tallies: Vec<ThreadTally> =
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect();
+    let wall_s = start.elapsed().as_secs_f64();
+    srv.shutdown();
+
+    let mut ttft = Samples::new();
+    let (mut hit_sum, mut hit_n) = (0.0f64, 0u64);
+    for t in &tallies {
+        for &v in &t.ttfts {
+            ttft.push(v);
+        }
+        for &h in &t.delta_hits {
+            hit_sum += h;
+            hit_n += 1;
+        }
+    }
+    let sessions = (cfg.threads * cfg.sessions_per_thread) as u64;
+    ContentionReport {
+        threads: cfg.threads,
+        sessions,
+        turns: sessions * cfg.turns_per_session as u64,
+        wall_s,
+        ttft,
+        delta_hit_rate: if hit_n == 0 { 0.0 } else { hit_sum / hit_n as f64 },
+    }
+}
+
+/// The `concurrency` figure: a client-thread sweep over one server. The
+/// acceptance shape: the session/turn counts are exact at every tier
+/// (nothing lost, nothing duplicated under contention) and delta turns
+/// keep their cache hits; throughput columns are informational real-time.
+pub fn run(quick: bool) -> Table {
+    let (threads, per): (&[usize], usize) =
+        if quick { (&[1, 2, 4, 8], 4) } else { (&[1, 2, 4, 8, 16], 8) };
+    let mut t = Table::new(
+        "concurrency",
+        "handler-contention sweep: turn throughput + TTFT tails vs client threads",
+        &[
+            "threads",
+            "sessions",
+            "turns",
+            "wall_s",
+            "turns_per_s",
+            "ttft_p50_s",
+            "ttft_p99_s",
+            "delta_hit_rate",
+        ],
+    );
+    for &n in threads {
+        let cfg = ContentionConfig::sized(n, per);
+        let r = run_contention(&cfg);
+        assert_eq!(r.sessions, (n * per) as u64);
+        assert_eq!(r.turns, (n * per * cfg.turns_per_session) as u64);
+        let row = [
+            n as f64,
+            r.sessions as f64,
+            r.turns as f64,
+            r.wall_s,
+            r.turns_per_s(),
+            r.ttft.percentile(50.0),
+            r.ttft.p99(),
+            r.delta_hit_rate,
+        ];
+        t.push(&[], &row);
+    }
+    t
+}

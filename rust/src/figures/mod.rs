@@ -22,6 +22,7 @@
 pub mod ablations;
 pub mod adapter_memory;
 pub mod cluster_scaling;
+pub mod concurrency;
 pub mod failover;
 pub mod fig10;
 pub mod fig11;
@@ -257,12 +258,14 @@ pub fn run_by_id(id: &str, quick: bool) -> Vec<Table> {
         "adapter_memory" => vec![adapter_memory::run(quick)],
         "failover" => vec![failover::run(quick)],
         "ablations" => ablations::run_all(),
-        // Deliberately not part of `all`: the scale harness is a
-        // long-running bench-tier figure (like `ablations`).
+        // Deliberately not part of `all`: the scale and concurrency
+        // harnesses are long-running bench-tier figures (like
+        // `ablations`), and `concurrency` measures REAL wall-clock.
         "scale" => vec![scale::run(quick)],
+        "concurrency" => vec![concurrency::run(quick)],
         other => panic!(
             "unknown figure id `{other}` (try table1, fig6..fig15, cluster, \
-             adapter_memory, failover, ablations, scale, all)"
+             adapter_memory, failover, ablations, scale, concurrency, all)"
         ),
     }
 }

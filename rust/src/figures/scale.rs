@@ -137,7 +137,7 @@ pub fn run_harness(cfg: &ScaleConfig) -> ScaleReport {
         Engine::with_registry(e_cfg, reg, exec)
     })
     .expect("cluster construction");
-    let mut mgr = SessionManager::with_limits(Some(cfg.idle_ttl), None);
+    let mgr = SessionManager::with_limits(Some(cfg.idle_ttl), None, None);
     let mut rng = Rng::new(cfg.seed);
     let total = cfg.sessions + cfg.followups;
     let mut in_flight: FxHashMap<RequestId, SessionId> = FxHashMap::default();

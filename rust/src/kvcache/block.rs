@@ -118,7 +118,7 @@ impl BlockPool {
 
     /// Register a lease's chain with the summary for incremental affinity
     /// maintenance (fed by the same commit/evict events as the sketch).
-    pub fn track_chain(&mut self, key: u64, chain: &[BlockHash]) {
+    pub fn track_chain(&mut self, key: u64, chain: &super::chain::ChainRef) {
         self.summary.track(key, chain);
     }
 

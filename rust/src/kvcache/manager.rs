@@ -7,10 +7,16 @@
 //! later requests can reuse them. Whether *cross-model* hits occur is
 //! decided entirely by the hash chain the request presents
 //! (prefix::HashContext) — this module is policy-free.
+//!
+//! Chains arrive as interned [`ChainRef`] handles (ISSUE 7): admission
+//! walks a chain in place without materializing it, a lease verifies the
+//! delta-turn extension by node identity in O(delta), and commit reads
+//! only the yet-uncommitted suffix.
 
 use crate::util::fxmap::FxHashMap;
 
 use super::block::{BlockHash, BlockId, BlockPool, PoolStats};
+use super::chain::ChainRef;
 use super::summary::HashSummary;
 
 /// Opaque request key (the engine's RequestId.0).
@@ -63,10 +69,10 @@ impl CacheStats {
 #[derive(Debug)]
 struct Lease {
     blocks: Vec<BlockId>,
-    /// Hash chain covering exactly the pinned blocks (same length), so a
-    /// re-acquire whose chain extends it keeps the existing pins and only
-    /// pins the delta — O(new turn), not O(conversation).
-    hashes: Vec<BlockHash>,
+    /// Interned chain covering exactly the pinned blocks (same length), so
+    /// a re-acquire whose chain extends it — verified by node identity in
+    /// O(delta) — keeps the existing pins and only pins the delta.
+    chain: ChainRef,
 }
 
 #[derive(Debug)]
@@ -149,10 +155,15 @@ impl KvCacheManager {
     /// leases retain what exists, they never allocate. Returns the number
     /// of blocks pinned.
     ///
+    /// The delta-turn fast path is zero-copy: `is_extension_of` is an
+    /// O(delta) node-identity walk, pinning visits only the unpinned
+    /// suffix in place, and the stored lease chain is an O(unpinned-tail)
+    /// `prefix` handle — no `Vec<BlockHash>` is ever materialized.
+    ///
     /// Leases are best-effort: under allocation pressure they are broken
     /// oldest-first (see [`KvCacheManager::ensure_capacity`]) so a parked
     /// session can never wedge running work.
-    pub fn acquire_lease(&mut self, lease: u64, chain: &[BlockHash]) -> usize {
+    pub fn acquire_lease(&mut self, lease: u64, chain: &ChainRef) -> usize {
         if !self.enable_prefix_caching {
             return 0;
         }
@@ -160,11 +171,7 @@ impl KvCacheManager {
         // append-only conversation grew a turn). Keep the pins, continue
         // from where pinning stopped last time.
         let start = match self.leases.get(&lease) {
-            Some(l) if chain.len() >= l.hashes.len()
-                && chain[..l.hashes.len()] == l.hashes[..] =>
-            {
-                l.hashes.len()
-            }
+            Some(l) if chain.is_extension_of(&l.chain) => l.chain.len(),
             // Diverged chain (salt change / rewrite): full re-pin.
             Some(_) => {
                 self.release_lease(lease);
@@ -173,11 +180,15 @@ impl KvCacheManager {
             None => 0,
         };
         let mut new_blocks = Vec::new();
-        for h in &chain[start..] {
-            match self.pool.pin(*h) {
-                Some(b) => new_blocks.push(b),
-                None => break,
-            }
+        {
+            let pool = &mut self.pool;
+            chain.visit_from(start, |h| match pool.pin(h) {
+                Some(b) => {
+                    new_blocks.push(b);
+                    true
+                }
+                None => false,
+            });
         }
         let delta = new_blocks.len();
         self.stats.leases_acquired += 1;
@@ -188,11 +199,12 @@ impl KvCacheManager {
             return 0;
         }
         self.stats.lease_blocks_pinned += delta as u64;
+        let pinned_chain = chain.prefix(start + delta);
         let entry = self
             .leases
             .entry(lease)
-            .or_insert_with(|| Lease { blocks: Vec::new(), hashes: Vec::new() });
-        entry.hashes.extend_from_slice(&chain[start..start + delta]);
+            .or_insert_with(|| Lease { blocks: Vec::new(), chain: ChainRef::empty() });
+        entry.chain = pinned_chain;
         entry.blocks.extend(new_blocks);
         let total = entry.blocks.len();
         // A re-acquire freshens the lease's reclaim age.
@@ -296,24 +308,27 @@ impl KvCacheManager {
 
     /// Peek: how many leading blocks of this hash chain are cached right
     /// now? (No refcounts taken; the scheduler uses this to budget tokens.)
-    pub fn peek_cached_prefix(&self, hashes: &[BlockHash]) -> CachedPrefix {
+    pub fn peek_cached_prefix(&self, chain: &ChainRef) -> CachedPrefix {
         if !self.enable_prefix_caching {
             return CachedPrefix { blocks: 0, tokens: 0 };
         }
         let mut n = 0;
-        for h in hashes {
-            if self.pool.contains(*h) {
+        let pool = &self.pool;
+        chain.visit_from(0, |h| {
+            if pool.contains(h) {
                 n += 1;
+                true
             } else {
-                break;
+                false
             }
-        }
+        });
         CachedPrefix { blocks: n, tokens: n * self.block_size }
     }
 
     /// Admit a request: take references on every cached prefix block (the
     /// chain prefix that hits), create its block table, and report the
-    /// cached span. `prompt_tokens` is used for hit-rate accounting.
+    /// cached span. `prompt_tokens` is used for hit-rate accounting. The
+    /// chain is walked in place — never materialized.
     ///
     /// The caller must cap usable cached tokens at prompt_len - 1 (at least
     /// one token must be computed to produce logits); that cap is scheduler
@@ -321,7 +336,7 @@ impl KvCacheManager {
     pub fn start_request(
         &mut self,
         key: ReqKey,
-        hashes: &[BlockHash],
+        chain: &ChainRef,
         prompt_tokens: usize,
     ) -> CachedPrefix {
         assert!(
@@ -330,12 +345,14 @@ impl KvCacheManager {
         );
         let mut blocks = Vec::new();
         if self.enable_prefix_caching {
-            for h in hashes {
-                match self.pool.lookup(*h) {
-                    Some(b) => blocks.push(b),
-                    None => break,
+            let pool = &mut self.pool;
+            chain.visit_from(0, |h| match pool.lookup(h) {
+                Some(b) => {
+                    blocks.push(b);
+                    true
                 }
-            }
+                None => false,
+            });
         }
         let cached = CachedPrefix {
             blocks: blocks.len(),
@@ -385,19 +402,25 @@ impl KvCacheManager {
         needed.saturating_sub(have)
     }
 
-    /// Commit hashes for blocks that have become full. `hashes` is the full
+    /// Commit hashes for blocks that have become full. `chain` is the full
     /// chain for the request's current token stream; only yet-uncommitted
-    /// positions covered by the table are committed.
-    pub fn commit_full_blocks(&mut self, key: ReqKey, hashes: &[BlockHash]) {
+    /// positions covered by the table are committed — read as an O(delta)
+    /// suffix (a first prefill commit is the one honest O(prompt) read).
+    pub fn commit_full_blocks(&mut self, key: ReqKey, chain: &ChainRef) {
         if !self.enable_prefix_caching {
             return;
         }
         let table = self.tables.get_mut(&key).expect("unknown request");
-        let upto = hashes.len().min(table.blocks.len());
-        for i in table.committed..upto {
-            self.pool.commit_hash(table.blocks[i], hashes[i]);
+        let upto = chain.len().min(table.blocks.len());
+        if upto <= table.committed {
+            return;
         }
-        table.committed = table.committed.max(upto);
+        let start = table.committed;
+        for (off, h) in chain.range(start, upto).into_iter().enumerate() {
+            self.pool.commit_hash(table.blocks[start + off], h);
+        }
+        let table = self.tables.get_mut(&key).expect("unknown request");
+        table.committed = upto;
     }
 
     /// The request's current physical block table (for executors).
@@ -455,11 +478,11 @@ impl KvCacheManager {
             if !self.lease_order.contains(l) {
                 return Err(format!("lease {l} missing from reclaim order"));
             }
-            if lease.hashes.len() != lease.blocks.len() {
+            if lease.chain.len() != lease.blocks.len() {
                 return Err(format!(
                     "lease {l}: {} pinned blocks but {} recorded hashes",
                     lease.blocks.len(),
-                    lease.hashes.len()
+                    lease.chain.len()
                 ));
             }
             for b in &lease.blocks {
@@ -485,20 +508,26 @@ mod tests {
         KvCacheManager::new(blocks, 16, true)
     }
 
+    /// Intern a hash slice (tests model chains as Vecs for readability;
+    /// production code holds ChainRefs end to end).
+    fn ch(hs: &[BlockHash]) -> ChainRef {
+        ChainRef::from_hashes(hs)
+    }
+
     #[test]
     fn cold_start_no_hits_then_warm_hits() {
         let mut m = mgr(16);
         let t = toks(64);
         let hs = block_hashes(&t, 16, &HashContext::base());
 
-        let c = m.start_request(1, &hs, 64);
+        let c = m.start_request(1, &ch(&hs), 64);
         assert_eq!(c.blocks, 0);
         assert!(m.ensure_capacity(1, 64));
-        m.commit_full_blocks(1, &hs);
+        m.commit_full_blocks(1, &ch(&hs));
         m.free_request(1);
 
         // Second identical request: full prefix hit from the free pool.
-        let c2 = m.start_request(2, &hs, 64);
+        let c2 = m.start_request(2, &ch(&hs), 64);
         assert_eq!(c2, CachedPrefix { blocks: 4, tokens: 64 });
         assert!((m.stats().hit_rate() - 0.5).abs() < 1e-9); // 64 of 128
         m.free_request(2);
@@ -510,11 +539,11 @@ mod tests {
         let mut m = mgr(16);
         let t = toks(32);
         let hs = block_hashes(&t, 16, &HashContext::base());
-        m.start_request(1, &hs, 32);
+        m.start_request(1, &ch(&hs), 32);
         assert!(m.ensure_capacity(1, 32));
-        m.commit_full_blocks(1, &hs);
+        m.commit_full_blocks(1, &ch(&hs));
         // Request 2 shares the blocks while 1 is still running.
-        let c = m.start_request(2, &hs, 32);
+        let c = m.start_request(2, &ch(&hs), 32);
         assert_eq!(c.blocks, 2);
         let b0 = m.blocks_of(1)[0];
         assert_eq!(m.blocks_of(2)[0], b0, "same physical block shared");
@@ -530,9 +559,9 @@ mod tests {
         let mut m = mgr(4);
         let t = toks(64);
         let hs = block_hashes(&t, 16, &HashContext::base());
-        m.start_request(1, &hs, 64);
+        m.start_request(1, &ch(&hs), 64);
         assert!(m.ensure_capacity(1, 64)); // exactly 4 blocks
-        m.start_request(2, &hs[..0], 64);
+        m.start_request(2, &ChainRef::empty(), 64);
         assert!(!m.ensure_capacity(2, 32), "no free blocks left");
         assert_eq!(m.blocks_of(2).len(), 0, "failed alloc leaves no residue");
         m.free_request(1);
@@ -546,11 +575,11 @@ mod tests {
         let t = toks(40); // 2 full + partial
         let hs = block_hashes(&t, 16, &HashContext::base());
         assert_eq!(hs.len(), 2);
-        m.start_request(1, &hs, 40);
+        m.start_request(1, &ch(&hs), 40);
         assert!(m.ensure_capacity(1, 40)); // 3 blocks
-        m.commit_full_blocks(1, &hs);
+        m.commit_full_blocks(1, &ch(&hs));
         m.free_request(1);
-        let c = m.start_request(2, &hs, 40);
+        let c = m.start_request(2, &ch(&hs), 40);
         assert_eq!(c.blocks, 2, "only full blocks reusable");
         m.free_request(2);
     }
@@ -563,9 +592,9 @@ mod tests {
         let mut m = mgr(16);
         let prompt = toks(64);
         let base_hs = block_hashes(&prompt, 16, &HashContext::base());
-        m.start_request(1, &base_hs, 64);
+        m.start_request(1, &ch(&base_hs), 64);
         assert!(m.ensure_capacity(1, 64));
-        m.commit_full_blocks(1, &base_hs);
+        m.commit_full_blocks(1, &ch(&base_hs));
         m.free_request(1);
 
         // aLoRA over prompt + invocation (activation at 64): pre-activation
@@ -580,7 +609,7 @@ mod tests {
             cache_salt: 0,
         };
         let alora_hs = block_hashes(&ev, 16, &alora_ctx);
-        let c = m.start_request(2, &alora_hs, ev.len());
+        let c = m.start_request(2, &ch(&alora_hs), ev.len());
         assert_eq!(c.blocks, 4, "aLoRA reuses base blocks");
         m.free_request(2);
 
@@ -593,7 +622,7 @@ mod tests {
             cache_salt: 0,
         };
         let lora_hs = block_hashes(&ev, 16, &lora_ctx);
-        let c = m.start_request(3, &lora_hs, ev.len());
+        let c = m.start_request(3, &ch(&lora_hs), ev.len());
         assert_eq!(c.blocks, 0, "LoRA cannot reuse base blocks");
         m.free_request(3);
     }
@@ -611,13 +640,13 @@ mod tests {
         };
         // aLoRA prefills the conversation (all blocks pre-activation).
         let a_hs = block_hashes(&prompt, 16, &alora_ctx);
-        m.start_request(1, &a_hs, 48);
+        m.start_request(1, &ch(&a_hs), 48);
         assert!(m.ensure_capacity(1, 48));
-        m.commit_full_blocks(1, &a_hs);
+        m.commit_full_blocks(1, &ch(&a_hs));
         m.free_request(1);
         // Base model hits everything.
         let b_hs = block_hashes(&prompt, 16, &HashContext::base());
-        let c = m.start_request(2, &b_hs, 48);
+        let c = m.start_request(2, &ch(&b_hs), 48);
         assert_eq!(c.blocks, 3);
         m.free_request(2);
     }
@@ -627,11 +656,11 @@ mod tests {
         let mut m = KvCacheManager::new(8, 16, false);
         let t = toks(32);
         let hs = block_hashes(&t, 16, &HashContext::base());
-        m.start_request(1, &hs, 32);
+        m.start_request(1, &ch(&hs), 32);
         assert!(m.ensure_capacity(1, 32));
-        m.commit_full_blocks(1, &hs);
+        m.commit_full_blocks(1, &ch(&hs));
         m.free_request(1);
-        let c = m.start_request(2, &hs, 32);
+        let c = m.start_request(2, &ch(&hs), 32);
         assert_eq!(c.blocks, 0);
     }
 
@@ -640,18 +669,18 @@ mod tests {
         let mut m = mgr(4);
         let t1 = toks(32);
         let hs1 = block_hashes(&t1, 16, &HashContext::base());
-        m.start_request(1, &hs1, 32);
+        m.start_request(1, &ch(&hs1), 32);
         assert!(m.ensure_capacity(1, 32));
-        m.commit_full_blocks(1, &hs1);
+        m.commit_full_blocks(1, &ch(&hs1));
         m.free_request(1);
         // A different 64-token request needs all 4 blocks → evicts t1's.
         let t2: Vec<u32> = (0..64).map(|i| 1000 + i).collect();
         let hs2 = block_hashes(&t2, 16, &HashContext::base());
-        m.start_request(2, &hs2, 64);
+        m.start_request(2, &ch(&hs2), 64);
         assert!(m.ensure_capacity(2, 64));
-        m.commit_full_blocks(2, &hs2);
+        m.commit_full_blocks(2, &ch(&hs2));
         m.free_request(2);
-        let c = m.start_request(3, &hs1, 32);
+        let c = m.start_request(3, &ch(&hs1), 32);
         assert_eq!(c.blocks, 0, "t1's blocks were evicted");
         m.free_request(3);
     }
@@ -661,7 +690,7 @@ mod tests {
         let mut m = mgr(4);
         let t = toks(64);
         let hs = block_hashes(&t, 16, &HashContext::base());
-        m.start_request(1, &hs, 64);
+        m.start_request(1, &ch(&hs), 64);
         assert!(m.ensure_capacity(1, 64));
         m.preempt_request(1);
         assert_eq!(m.stats().preemptions, 1);
@@ -676,11 +705,11 @@ mod tests {
         let mut m = mgr(8);
         let t = toks(64);
         let hs = block_hashes(&t, 16, &HashContext::base());
-        m.start_request(1, &hs, 64);
+        m.start_request(1, &ch(&hs), 64);
         assert!(m.ensure_capacity(1, 64));
-        m.commit_full_blocks(1, &hs);
+        m.commit_full_blocks(1, &ch(&hs));
         m.free_request(1);
-        assert_eq!(m.acquire_lease(7, &hs), 4);
+        assert_eq!(m.acquire_lease(7, &ch(&hs)), 4);
         assert_eq!(m.leased_blocks(), 4);
         assert_eq!(m.lease_size(7), 4);
         // Fresh traffic churns the remaining 4 blocks twice over: every
@@ -688,12 +717,12 @@ mod tests {
         for round in 0..2u32 {
             let t2: Vec<u32> = (0..64).map(|i| 10_000 + round * 100 + i).collect();
             let hs2 = block_hashes(&t2, 16, &HashContext::base());
-            m.start_request(100 + round as u64, &hs2, 64);
+            m.start_request(100 + round as u64, &ch(&hs2), 64);
             assert!(m.ensure_capacity(100 + round as u64, 64));
-            m.commit_full_blocks(100 + round as u64, &hs2);
+            m.commit_full_blocks(100 + round as u64, &ch(&hs2));
             m.free_request(100 + round as u64);
         }
-        let c = m.start_request(2, &hs, 64);
+        let c = m.start_request(2, &ch(&hs), 64);
         assert_eq!(c.blocks, 4, "leased prefix survived the churn");
         m.free_request(2);
         m.release_lease(7);
@@ -702,11 +731,11 @@ mod tests {
         // Re-leasing after release and with the hashes evicted pins 0.
         let t3: Vec<u32> = (0..128).map(|i| 90_000 + i).collect();
         let hs3 = block_hashes(&t3, 16, &HashContext::base());
-        m.start_request(3, &hs3, 128);
+        m.start_request(3, &ch(&hs3), 128);
         assert!(m.ensure_capacity(3, 128));
-        m.commit_full_blocks(3, &hs3);
+        m.commit_full_blocks(3, &ch(&hs3));
         m.free_request(3);
-        assert_eq!(m.acquire_lease(7, &hs), 0, "chain evicted: nothing to pin");
+        assert_eq!(m.acquire_lease(7, &ch(&hs)), 0, "chain evicted: nothing to pin");
         m.check_invariants().unwrap();
     }
 
@@ -718,24 +747,24 @@ mod tests {
         let mut m = mgr(4);
         let a = toks(32);
         let ha = block_hashes(&a, 16, &HashContext::base());
-        m.start_request(1, &ha, 32);
+        m.start_request(1, &ch(&ha), 32);
         assert!(m.ensure_capacity(1, 32));
-        m.commit_full_blocks(1, &ha);
+        m.commit_full_blocks(1, &ch(&ha));
         m.free_request(1);
         let b: Vec<u32> = (0..32).map(|i| 5000 + i).collect();
         let hb = block_hashes(&b, 16, &HashContext::base());
-        m.start_request(2, &hb, 32);
+        m.start_request(2, &ch(&hb), 32);
         assert!(m.ensure_capacity(2, 32));
-        m.commit_full_blocks(2, &hb);
+        m.commit_full_blocks(2, &ch(&hb));
         m.free_request(2);
-        assert_eq!(m.acquire_lease(1, &ha), 2); // older lease
-        assert_eq!(m.acquire_lease(2, &hb), 2); // newer lease
+        assert_eq!(m.acquire_lease(1, &ch(&ha)), 2); // older lease
+        assert_eq!(m.acquire_lease(2, &ch(&hb)), 2); // newer lease
         assert_eq!(m.num_free_blocks(), 0);
         // A 3-block request: breaking lease 1 frees 2, still short, so
         // lease 2 breaks too.
         let c: Vec<u32> = (0..48).map(|i| 9000 + i).collect();
         let hc = block_hashes(&c, 16, &HashContext::base());
-        m.start_request(3, &hc, 48);
+        m.start_request(3, &ch(&hc), 48);
         assert!(m.ensure_capacity(3, 48), "leases reclaimed to make room");
         assert_eq!(m.stats().leases_reclaimed, 2);
         assert_eq!(m.num_leases(), 0);
@@ -755,19 +784,19 @@ mod tests {
         let mut m = mgr(4);
         let t = toks(64);
         let hs = block_hashes(&t, 16, &HashContext::base());
-        m.start_request(1, &hs, 64);
+        m.start_request(1, &ch(&hs), 64);
         assert!(m.ensure_capacity(1, 64));
-        m.commit_full_blocks(1, &hs);
+        m.commit_full_blocks(1, &ch(&hs));
         m.free_request(1);
         assert_eq!(m.routing_summary().committed_blocks(), 4);
-        assert_eq!(m.acquire_lease(9, &hs), 4);
+        assert_eq!(m.acquire_lease(9, &ch(&hs)), 4);
         m.check_invariants().unwrap();
         // Pressure: a 4-block request breaks the lease. The chain is still
         // cached (break ≠ evict — the blocks go back to the free list with
         // hashes intact), so the summary must NOT lose entries yet...
         let t2: Vec<u32> = (0..64).map(|i| 70_000 + i).collect();
         let hs2 = block_hashes(&t2, 16, &HashContext::base());
-        m.start_request(2, &hs2, 64);
+        m.start_request(2, &ch(&hs2), 64);
         assert!(m.ensure_capacity(2, 64), "lease reclaimed to make room");
         assert_eq!(m.stats().leases_reclaimed, 1);
         assert_eq!(m.num_leases(), 0);
@@ -775,14 +804,14 @@ mod tests {
         // lease's blocks: committed count now reflects only what survived.
         m.check_invariants().unwrap();
         assert_eq!(m.routing_summary().matching_prefix(&hs), 0, "chain evicted");
-        m.commit_full_blocks(2, &hs2);
+        m.commit_full_blocks(2, &ch(&hs2));
         m.free_request(2);
         m.check_invariants().unwrap();
         assert_eq!(m.routing_summary().committed_blocks(), 4);
         // Full churn back to zero: every +1 has met exactly one −1.
         let t3: Vec<u32> = (0..64).map(|i| 80_000 + i).collect();
         let hs3 = block_hashes(&t3, 16, &HashContext::base());
-        m.start_request(3, &hs3, 64);
+        m.start_request(3, &ch(&hs3), 64);
         assert!(m.ensure_capacity(3, 64));
         m.free_request(3); // uncommitted: hashless frees
         m.check_invariants().unwrap();
@@ -802,18 +831,18 @@ mod tests {
         let mut m = mgr(8);
         let a = toks(32);
         let ha = block_hashes(&a, 16, &HashContext::base());
-        m.start_request(1, &ha, 32);
+        m.start_request(1, &ch(&ha), 32);
         assert!(m.ensure_capacity(1, 32));
-        m.commit_full_blocks(1, &ha);
+        m.commit_full_blocks(1, &ch(&ha));
         m.free_request(1);
         let b: Vec<u32> = (0..32).map(|i| 5_000 + i).collect();
         let hb = block_hashes(&b, 16, &HashContext::base());
-        m.start_request(2, &hb, 32);
+        m.start_request(2, &ch(&hb), 32);
         assert!(m.ensure_capacity(2, 32));
-        m.commit_full_blocks(2, &hb);
+        m.commit_full_blocks(2, &ch(&hb));
         m.free_request(2);
-        assert_eq!(m.acquire_lease(11, &ha), 2);
-        assert_eq!(m.acquire_lease(22, &hb), 2);
+        assert_eq!(m.acquire_lease(11, &ch(&ha)), 2);
+        assert_eq!(m.acquire_lease(22, &ch(&hb)), 2);
         let mut keys = m.release_all_leases();
         keys.sort_unstable();
         assert_eq!(keys, vec![11, 22]);
@@ -830,7 +859,7 @@ mod tests {
         m.check_invariants().unwrap();
         assert_eq!(m.routing_summary().committed_blocks(), 0);
         assert_eq!(m.num_free_blocks(), 8);
-        assert_eq!(m.start_request(3, &ha, 32).blocks, 0, "cache reads empty");
+        assert_eq!(m.start_request(3, &ch(&ha), 32).blocks, 0, "cache reads empty");
         m.free_request(3);
     }
 
@@ -839,12 +868,12 @@ mod tests {
         let mut m = mgr(8);
         let t = toks(32);
         let hs = block_hashes(&t, 16, &HashContext::base());
-        m.start_request(1, &hs, 32);
+        m.start_request(1, &ch(&hs), 32);
         assert!(m.ensure_capacity(1, 32));
-        m.commit_full_blocks(1, &hs);
+        m.commit_full_blocks(1, &ch(&hs));
         m.free_request(1);
-        assert_eq!(m.acquire_lease(10, &hs), 2);
-        assert_eq!(m.acquire_lease(11, &hs), 2);
+        assert_eq!(m.acquire_lease(10, &ch(&hs)), 2);
+        assert_eq!(m.acquire_lease(11, &ch(&hs)), 2);
         assert_eq!(m.leased_blocks(), 4, "per-lease gauge double counts");
         assert_eq!(m.leased_distinct_blocks(), 2, "physical occupancy doesn't");
         m.release_lease(10);
@@ -857,11 +886,11 @@ mod tests {
         let mut m = mgr(16);
         let t = toks(64);
         let hs = block_hashes(&t, 16, &HashContext::base());
-        m.start_request(1, &hs, 64);
+        m.start_request(1, &ch(&hs), 64);
         assert!(m.ensure_capacity(1, 64));
-        m.commit_full_blocks(1, &hs);
+        m.commit_full_blocks(1, &ch(&hs));
         m.free_request(1);
-        assert_eq!(m.acquire_lease(7, &hs), 4);
+        assert_eq!(m.acquire_lease(7, &ch(&hs)), 4);
         assert_eq!(m.stats().lease_blocks_pinned, 4);
 
         // The conversation grows a 2-block turn; commit the new tail.
@@ -869,32 +898,37 @@ mod tests {
         t2.extend((0..32).map(|i| 7_000 + i as u32));
         let hs2 = block_hashes(&t2, 16, &HashContext::base());
         assert_eq!(hs2[..4], hs[..], "chain is prefix-stable");
-        m.start_request(2, &hs2, 96);
+        m.start_request(2, &ch(&hs2), 96);
         assert!(m.ensure_capacity(2, 96));
-        m.commit_full_blocks(2, &hs2);
+        m.commit_full_blocks(2, &ch(&hs2));
         m.free_request(2);
 
         // Re-acquire with the grown chain: the 4 existing pins are kept
-        // and only the 2-block delta is newly pinned.
-        assert_eq!(m.acquire_lease(7, &hs2), 6);
+        // and only the 2-block delta is newly pinned — and the fast path
+        // never materializes a hash vector (chain-op counters pin it).
+        let grown = ch(&hs).extend(&hs2[4..]);
+        crate::kvcache::chain::take_chain_ops();
+        assert_eq!(m.acquire_lease(7, &grown), 6);
+        let (_appends, full_copies) = crate::kvcache::chain::take_chain_ops();
+        assert_eq!(full_copies, 0, "lease re-acquire is zero-copy");
         assert_eq!(m.stats().lease_blocks_pinned, 6, "delta-only accounting");
         assert_eq!(m.lease_size(7), 6);
         assert_eq!(m.num_leases(), 1);
         assert_eq!(m.routing_summary().tracked_prefix(7), Some((6, 6)));
 
         // Idempotent re-acquire: nothing new to pin.
-        assert_eq!(m.acquire_lease(7, &hs2), 6);
+        assert_eq!(m.acquire_lease(7, &grown), 6);
         assert_eq!(m.stats().lease_blocks_pinned, 6);
         m.check_invariants().unwrap();
 
         // A diverged chain (session rewrite) falls back to a full re-pin.
         let t3: Vec<u32> = (0..64).map(|i| 50_000 + i).collect();
         let hs3 = block_hashes(&t3, 16, &HashContext::base());
-        m.start_request(3, &hs3, 64);
+        m.start_request(3, &ch(&hs3), 64);
         assert!(m.ensure_capacity(3, 64));
-        m.commit_full_blocks(3, &hs3);
+        m.commit_full_blocks(3, &ch(&hs3));
         m.free_request(3);
-        assert_eq!(m.acquire_lease(7, &hs3), 4);
+        assert_eq!(m.acquire_lease(7, &ch(&hs3)), 4);
         assert_eq!(m.lease_size(7), 4);
         assert_eq!(m.routing_summary().tracked_prefix(7), Some((4, 4)));
         m.check_invariants().unwrap();
@@ -918,9 +952,10 @@ mod tests {
             let mut next_key = 10_000u64;
             let mut run_turn = |m: &mut KvCacheManager, t: &[u32], key: u64| {
                 let hs = block_hashes(t, 16, &HashContext::base());
-                m.start_request(key, &hs, t.len());
+                let c = ChainRef::from_hashes(&hs);
+                m.start_request(key, &c, t.len());
                 if m.ensure_capacity(key, t.len()) {
-                    m.commit_full_blocks(key, &hs);
+                    m.commit_full_blocks(key, &c);
                 }
                 m.free_request(key);
                 hs
@@ -944,7 +979,7 @@ mod tests {
                             (0..n).map(|_| rng.next_below(96) as u32).collect();
                         let hs = run_turn(&mut m, &t, next_key);
                         next_key += 1;
-                        m.acquire_lease(next_lease, &hs);
+                        m.acquire_lease(next_lease, &ch(&hs));
                         convs.push((next_lease, t));
                     }
                     3 => {
@@ -957,7 +992,7 @@ mod tests {
                             let lease = convs[i].0;
                             let hs = run_turn(&mut m, &t, next_key);
                             next_key += 1;
-                            m.acquire_lease(lease, &hs);
+                            m.acquire_lease(lease, &ch(&hs));
                             convs[i].1 = t;
                         }
                     }
@@ -1010,9 +1045,9 @@ mod tests {
                         let hs = block_hashes(&t, 16, &HashContext::base());
                         let key = next_key;
                         next_key += 1;
-                        m.start_request(key, &hs, n);
+                        m.start_request(key, &ch(&hs), n);
                         if m.ensure_capacity(key, n) {
-                            m.commit_full_blocks(key, &hs);
+                            m.commit_full_blocks(key, &ch(&hs));
                             live.push((key, hs, n));
                         } else {
                             m.free_request(key);

@@ -4,17 +4,22 @@
 //! - [`hash`]: chained block hashing primitive with adapter/cache salts.
 //! - [`prefix`]: per-request salting policy — where the paper's
 //!   base-aligned hashing lives (Figure 3).
+//! - [`chain`]: interned, refcounted, prefix-sharing chain arena — cheap
+//!   [`ChainRef`] handles replace `Vec<BlockHash>` clones at the
+//!   session/submit/lease boundaries.
 //! - [`manager`]: per-request block tables, admission, commit, preemption.
 //! - [`summary`]: routable sketch of the committed hashes — what a cluster
 //!   router reads to score replica affinity without touching the pool.
 
 pub mod block;
+pub mod chain;
 pub mod hash;
 pub mod manager;
 pub mod prefix;
 pub mod summary;
 
 pub use block::{BlockHash, BlockId, BlockPool, PoolStats};
+pub use chain::ChainRef;
 pub use manager::{CacheStats, CachedPrefix, KvCacheManager, ReqKey};
 pub use prefix::{block_hashes, HashContext};
 pub use summary::HashSummary;

@@ -18,6 +18,7 @@ use std::cell::Cell;
 use crate::util::fxmap::FxHashMap;
 
 use super::block::BlockHash;
+use super::chain::ChainRef;
 
 /// Default slot count: 4096 × 4 bytes = 16 KiB per replica, collision
 /// probability ~n/4096 for n committed blocks — plenty for routing.
@@ -41,6 +42,9 @@ pub fn take_probe_ops() -> u64 {
 /// frontier and shrinking on 1→0 transitions inside the matched run.
 #[derive(Debug, Clone)]
 struct TrackedChain {
+    /// Interned handle to the tracked chain — the O(delta) identity check
+    /// for extensions, and what the router's lease hint validates against.
+    chain: ChainRef,
     hashes: Vec<BlockHash>,
     slots: Vec<usize>,
     matched: usize,
@@ -161,16 +165,19 @@ impl HashSummary {
     /// When the new chain extends the previously tracked one (the common
     /// delta-turn case) the matched state carries over and only the tail
     /// is scanned — O(delta). Anything else rebuilds from scratch.
-    pub fn track(&mut self, key: u64, chain: &[BlockHash]) {
+    pub fn track(&mut self, key: u64, chain: &ChainRef) {
         let extend = self
             .tracked
             .get(&key)
-            .is_some_and(|tc| chain.len() >= tc.hashes.len() && chain[..tc.hashes.len()] == tc.hashes[..]);
+            .is_some_and(|tc| chain.is_extension_of(&tc.chain));
         if extend {
             let tc = self.tracked.get_mut(&key).expect("checked");
             let old_len = tc.hashes.len();
-            tc.hashes.extend_from_slice(&chain[old_len..]);
-            let new_slots: Vec<usize> = chain[old_len..]
+            // O(delta): read only the tail past the already-tracked run.
+            let delta = chain.range(old_len, chain.len());
+            tc.hashes.extend_from_slice(&delta);
+            tc.chain = chain.clone();
+            let new_slots: Vec<usize> = delta
                 .iter()
                 .map(|h| (h.0 % self.counts.len() as u64) as usize)
                 .collect();
@@ -182,13 +189,23 @@ impl HashSummary {
                 self.advance_chain(key);
             }
         } else {
+            // New or diverged chain: the one place a tracked chain is
+            // materialized in full (counted by the chain-op probes).
             self.next_gen += 1;
             let gen = self.next_gen;
+            let hashes = chain.hashes();
             let slots: Vec<usize> =
-                chain.iter().map(|h| (h.0 % self.counts.len() as u64) as usize).collect();
+                hashes.iter().map(|h| (h.0 % self.counts.len() as u64) as usize).collect();
             self.tracked.insert(
                 key,
-                TrackedChain { hashes: chain.to_vec(), slots, matched: 0, parked: None, gen },
+                TrackedChain {
+                    chain: chain.clone(),
+                    hashes,
+                    slots,
+                    matched: 0,
+                    parked: None,
+                    gen,
+                },
             );
             self.advance_chain(key);
         }
@@ -210,6 +227,13 @@ impl HashSummary {
     /// The hashes registered under a tracked lease (equivalence checks).
     pub fn tracked_chain(&self, key: u64) -> Option<&[BlockHash]> {
         self.tracked.get(&key).map(|tc| tc.hashes.as_slice())
+    }
+
+    /// The interned handle registered under a tracked lease — lets the
+    /// router validate a lease hint by node identity instead of hash
+    /// comparison.
+    pub fn tracked_chain_ref(&self, key: u64) -> Option<&ChainRef> {
+        self.tracked.get(&key).map(|tc| &tc.chain)
     }
 
     /// Advance `key`'s matched run over present slots, then park at the

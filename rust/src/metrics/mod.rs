@@ -201,6 +201,9 @@ pub struct Metrics {
     pub sessions_expired: u64,
     /// Session prefix leases broken under memory pressure.
     pub lease_reclaims: u64,
+    /// Leases broken (oldest-first) because their tenant exceeded its
+    /// per-tenant leased-block budget.
+    pub tenant_lease_breaks: u64,
 
     // gauges (last observed)
     pub running_requests: u64,
@@ -343,6 +346,7 @@ impl Metrics {
         self.sessions_closed += o.sessions_closed;
         self.sessions_expired += o.sessions_expired;
         self.lease_reclaims += o.lease_reclaims;
+        self.tenant_lease_breaks += o.tenant_lease_breaks;
         self.running_requests += o.running_requests;
         self.waiting_requests += o.waiting_requests;
         self.free_blocks += o.free_blocks;
@@ -450,6 +454,11 @@ impl Metrics {
             "lease_reclaims_total",
             "Session prefix leases broken under memory pressure",
             self.lease_reclaims as f64,
+        );
+        counter(
+            "tenant_lease_breaks_total",
+            "Leases broken because a tenant exceeded its leased-block budget",
+            self.tenant_lease_breaks as f64,
         );
 
         let mut gauge = |name: &str, help: &str, v: f64| {

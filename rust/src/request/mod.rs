@@ -8,7 +8,7 @@
 pub mod session;
 
 use crate::adapter::AdapterId;
-use crate::kvcache::block::BlockHash;
+use crate::kvcache::chain::ChainRef;
 use crate::kvcache::prefix::HashContext;
 
 pub use session::{Session, SessionId, TurnId, TurnRecord};
@@ -149,9 +149,12 @@ pub struct Request {
     /// Block-hash salting policy (set by the engine at submit time from
     /// the adapter registry + feature flag).
     pub hash_ctx: HashContext,
-    /// Incrementally-maintained chain of full-block hashes over
-    /// `all_tokens()` (engine-maintained; avoids O(n²) rehashing).
-    pub hash_chain: Vec<BlockHash>,
+    /// Incrementally-maintained interned chain of full-block hashes over
+    /// `all_tokens()` (engine-maintained; avoids O(n²) rehashing). A
+    /// [`ChainRef`] handle: extending by a decode block is O(1) arena
+    /// appends, and handing the chain to the KV manager shares nodes
+    /// instead of copying a `Vec<BlockHash>`.
+    pub hash_chain: ChainRef,
 }
 
 impl Request {
@@ -179,7 +182,7 @@ impl Request {
             preemptions: 0,
             admission_cold_load: false,
             hash_ctx: HashContext::base(),
-            hash_chain: Vec::new(),
+            hash_chain: ChainRef::empty(),
         }
     }
 

@@ -22,7 +22,7 @@
 //! [`crate::session::SessionManager`]; this module is pure state so the
 //! types stay usable from any layer.
 
-use crate::kvcache::block::BlockHash;
+use crate::kvcache::chain::ChainRef;
 use crate::kvcache::prefix::{block_hashes, next_block_hash, HashContext};
 use crate::request::{ModelTarget, RequestId, RequestOutput};
 
@@ -79,13 +79,13 @@ pub struct Session {
     /// generated output, in order). This is the chain the server
     /// reconstructs for each delta submission.
     tokens: Vec<u32>,
-    /// Cached block-hash chain over `tokens` under the base context +
-    /// `cache_salt` — the chain every base follow-up turn (and, via
-    /// base-aligned hashing, every pre-activation aLoRA block) presents.
-    /// `tokens` is append-only, so the cache is always a valid prefix and
-    /// each turn extends it by O(delta) instead of rehashing the
-    /// conversation (see DESIGN.md §16).
-    chain: Vec<BlockHash>,
+    /// Cached interned block-hash chain over `tokens` under the base
+    /// context + `cache_salt` — the chain every base follow-up turn (and,
+    /// via base-aligned hashing, every pre-activation aLoRA block)
+    /// presents. `tokens` is append-only, so the cache is always a valid
+    /// prefix and each turn extends it by O(delta) arena appends instead
+    /// of rehashing — or copying — the conversation (DESIGN.md §16, §17).
+    chain: ChainRef,
     turns: Vec<TurnRecord>,
     pending: Option<PendingTurn>,
     /// The most recent turn's request id — the stickiness peer a cluster
@@ -105,7 +105,7 @@ impl Session {
             id,
             cache_salt,
             tokens: Vec::new(),
-            chain: Vec::new(),
+            chain: ChainRef::empty(),
             turns: Vec::new(),
             pending: None,
             last_request: None,
@@ -221,8 +221,9 @@ impl Session {
     /// The session's base-context hash chain over its full blocks,
     /// extended incrementally: only blocks beyond the cached frontier are
     /// hashed, so the amortized cost per turn is O(delta), independent of
-    /// conversation length.
-    pub fn cached_chain(&mut self, block_size: usize) -> &[BlockHash] {
+    /// conversation length. Returns an O(1) handle clone — sharing the
+    /// chain with leases and routing never copies hashes.
+    pub fn cached_chain(&mut self, block_size: usize) -> ChainRef {
         let total = self.tokens.len() / block_size;
         debug_assert!(
             self.chain.len() <= total,
@@ -230,14 +231,16 @@ impl Session {
         );
         if self.chain.len() < total {
             let ctx = HashContext { cache_salt: self.cache_salt, ..HashContext::base() };
-            let mut parent = self.chain.last().copied();
+            let mut parent = self.chain.last();
+            let mut delta = Vec::with_capacity(total - self.chain.len());
             for idx in self.chain.len()..total {
                 let h = next_block_hash(parent, &self.tokens, idx, block_size, &ctx);
-                self.chain.push(h);
+                delta.push(h);
                 parent = Some(h);
             }
+            self.chain = self.chain.extend(&delta);
         }
-        &self.chain
+        self.chain.clone()
     }
 
     /// Full-prompt hash chain for a turn over `prompt` (history + delta)
@@ -256,7 +259,7 @@ impl Session {
         prompt: &[u32],
         block_size: usize,
         ctx: &HashContext,
-    ) -> Vec<BlockHash> {
+    ) -> ChainRef {
         debug_assert!(
             prompt.len() >= self.tokens.len() && prompt[..self.tokens.len()] == self.tokens[..],
             "turn prompt must extend the session history"
@@ -268,17 +271,22 @@ impl Session {
                     && ctx.base_aligned
                     && ctx.inv_start >= hist_blocks * block_size));
         if !reusable {
-            return block_hashes(prompt, block_size, ctx);
+            return ChainRef::from_hashes(&block_hashes(prompt, block_size, ctx));
         }
-        let mut chain = self.cached_chain(block_size).to_vec();
+        // Delta path: share the cached history chain's nodes and append
+        // only the turn's blocks — zero full-chain copies (an aLoRA
+        // `append:false` branch simply interns a second child of the same
+        // history node).
+        let base = self.cached_chain(block_size);
         let total = prompt.len() / block_size;
-        let mut parent = chain.last().copied();
+        let mut parent = base.last();
+        let mut delta = Vec::with_capacity(total.saturating_sub(hist_blocks));
         for idx in hist_blocks..total {
             let h = next_block_hash(parent, prompt, idx, block_size, ctx);
-            chain.push(h);
+            delta.push(h);
             parent = Some(h);
         }
-        chain
+        base.extend(&delta)
     }
 
     /// Drop the in-flight turn without applying it (client abandoned the
@@ -377,7 +385,7 @@ mod tests {
                 let base_ctx = HashContext { cache_salt: salt, ..HashContext::base() };
                 let inc = s.turn_chain(&prompt, bs, &base_ctx);
                 let full = block_hashes(&prompt, bs, &base_ctx);
-                if inc != full {
+                if inc.hashes() != full {
                     return Err(format!("turn {turn}: base chain diverged"));
                 }
                 // Base-aligned aLoRA activating inside the delta: history
@@ -390,7 +398,9 @@ mod tests {
                     base_aligned: true,
                     cache_salt: salt,
                 };
-                if s.turn_chain(&prompt, bs, &a_ctx) != block_hashes(&prompt, bs, &a_ctx) {
+                if s.turn_chain(&prompt, bs, &a_ctx).hashes()
+                    != block_hashes(&prompt, bs, &a_ctx)
+                {
                     return Err(format!("turn {turn}: alora chain diverged"));
                 }
                 // Standard LoRA forces the full-rehash fallback; still equal.
@@ -401,7 +411,9 @@ mod tests {
                     base_aligned: true,
                     cache_salt: salt,
                 };
-                if s.turn_chain(&prompt, bs, &l_ctx) != block_hashes(&prompt, bs, &l_ctx) {
+                if s.turn_chain(&prompt, bs, &l_ctx).hashes()
+                    != block_hashes(&prompt, bs, &l_ctx)
+                {
                     return Err(format!("turn {turn}: lora chain diverged"));
                 }
                 // Apply the turn (with some generated tokens) and check the
@@ -416,7 +428,7 @@ mod tests {
                     bs,
                     &HashContext { cache_salt: salt, ..HashContext::base() },
                 );
-                if s.cached_chain(bs) != &want[..] {
+                if s.cached_chain(bs).hashes() != want {
                     return Err(format!("turn {turn}: history cache diverged"));
                 }
             }

@@ -17,6 +17,7 @@ use crate::util::fxmap::FxHashMap;
 
 use crate::adapter::AdapterResidency;
 use crate::config::SchedulerConfig;
+use crate::kvcache::chain::ChainRef;
 use crate::kvcache::manager::KvCacheManager;
 use crate::kvcache::prefix::block_hashes;
 use crate::request::{Request, RequestId, State};
@@ -253,13 +254,18 @@ impl Scheduler {
                 // to what a rebuild would produce.
                 let tokens = r.all_tokens();
                 if r.hash_chain.len() < tokens.len() / kv.block_size() {
-                    r.hash_chain = block_hashes(&tokens, kv.block_size(), &r.hash_ctx);
+                    r.hash_chain = ChainRef::from_hashes(&block_hashes(
+                        &tokens,
+                        kv.block_size(),
+                        &r.hash_ctx,
+                    ));
                 }
                 // At least one token must be computed to produce logits:
                 // cap usable cached blocks below the full stream length.
                 let max_usable_blocks = (r.total_len() - 1) / kv.block_size();
                 let usable = r.hash_chain.len().min(max_usable_blocks);
-                let cached = kv.start_request(id.0, &r.hash_chain[..usable], r.total_len());
+                let cached =
+                    kv.start_request(id.0, &r.hash_chain.prefix(usable), r.total_len());
                 r.num_cached_tokens = cached.tokens;
                 r.num_computed_tokens = cached.tokens;
                 let want = r.total_len() - r.num_computed_tokens;
@@ -432,8 +438,7 @@ mod tests {
                 let r = self.reqs.get_mut(&s.id).unwrap();
                 r.num_computed_tokens = s.chunk_start + s.chunk_len;
                 let full = r.num_computed_tokens / self.kv.block_size();
-                let chain: Vec<_> =
-                    r.hash_chain[..full.min(r.hash_chain.len())].to_vec();
+                let chain = r.hash_chain.prefix(full.min(r.hash_chain.len()));
                 self.kv.commit_full_blocks(s.id.0, &chain);
                 let r = self.reqs.get_mut(&s.id).unwrap();
                 if s.produces_token {

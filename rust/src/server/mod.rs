@@ -4,13 +4,24 @@
 //! Hand-rolled HTTP/1.1 over std TCP (no tokio in the offline build — see
 //! DESIGN.md §7). The server drives any [`EngineDriver`] — one engine or a
 //! replica [`crate::cluster::Cluster`] (every submission is routed; session
-//! turns are sticky-routed to their conversation's replica). A dedicated
-//! driver thread owns stepping; handler threads submit requests and block
-//! on a condvar until their request completes — or, for streaming turns,
-//! consume the engine's [`TurnEvent`] emission incrementally and forward
-//! it as HTTP/1.1 chunked SSE. Request lifecycle timestamps still come
-//! from the virtual clock, so `/metrics` exposes the same Table-2 series
-//! the figure harness reads.
+//! turns are sticky-routed to their conversation's replica).
+//!
+//! Concurrency architecture (DESIGN.md §17): the engine is owned
+//! EXCLUSIVELY by the driver thread — there is no engine mutex for handler
+//! threads to contend on. Handlers interact with it only by enqueuing
+//! commands onto an MPSC submit queue ([`Shared::call`]); the driver
+//! drains the queue FIFO between steps and executes each command with the
+//! engine and the shared state in hand. Completion delivery goes the other
+//! way through the sharded [`WaiterTable`]: each submission registers a
+//! per-request wait slot / stream sink / pipeline group in the same
+//! command that submits it (so no step can slip an output past the
+//! registration), and the driver routes step emissions straight into
+//! those slots. Session state lives in the sharded
+//! [`SessionManager`] on [`Shared`], so snapshot reads (`GET
+//! /v1/sessions`, turn aborts) never touch the driver at all. A single
+//! driver thread still interleaves {drain commands}{step} sequentially,
+//! so single-threaded figures and per-request token streams stay
+//! bit-identical to the old mutex server.
 //!
 //! API (full reference with curl examples: API.md; semantics: DESIGN.md
 //! §14):
@@ -52,7 +63,7 @@
 
 pub mod v1;
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -73,30 +84,345 @@ pub const MAX_BODY_BYTES: usize = 8 << 20;
 /// (virtual work is fast; this guards against stalls, not slow models).
 pub(crate) const REQUEST_TIMEOUT: Duration = Duration::from_secs(60);
 
+/// A unit of work for the driver thread: runs with exclusive access to the
+/// engine plus the shared state. Commands are executed strictly FIFO and
+/// never interleave with a step, which is what makes
+/// submit-and-register atomic.
+type Cmd<D> = Box<dyn FnOnce(&mut D, &Shared<D>) + Send>;
+
+/// State shared between handler threads and the driver thread. Note what
+/// is NOT here: the engine. It is owned by the driver thread; handlers
+/// reach it only through the command queue.
 pub(crate) struct Shared<D: EngineDriver> {
-    pub(crate) engine: Mutex<EngineState<D>>,
-    pub(crate) cv: Condvar,
+    /// MPSC submit queue, drained FIFO by the driver between steps.
+    queue: Mutex<VecDeque<Cmd<D>>>,
+    queue_cv: Condvar,
+    /// Conversation state behind the v1 endpoints. Sharded internally, so
+    /// handler threads read and abort directly without a driver
+    /// round-trip.
+    pub(crate) sessions: SessionManager,
+    /// Sharded per-request delivery registry (wait slots, stream sinks,
+    /// pipeline groups).
+    pub(crate) waiters: WaiterTable,
     stop: AtomicBool,
 }
 
-pub(crate) struct EngineState<D: EngineDriver> {
-    pub(crate) engine: D,
-    /// Conversation state behind the v1 endpoints.
-    pub(crate) sessions: SessionManager,
-    pub(crate) done: HashMap<RequestId, RequestOutput>,
-    /// Requests abandoned by their handler (e.g. a timed-out request):
-    /// the driver drops their outputs instead of parking them in `done`
-    /// forever.
-    pub(crate) orphaned: HashSet<RequestId>,
-    /// Streaming turns: per-request event sinks the driver thread fills
-    /// from `take_events` and the streaming handler drains. Requests with
-    /// a sink get their finished output through it (as
-    /// [`TurnEvent::Finished`]), not through `done`.
-    pub(crate) streams: HashMap<RequestId, Vec<TurnEvent>>,
-    /// Requests that will NEVER produce an output (failover requeue
-    /// rejected them on every survivor). Waiters resolve against this
-    /// immediately instead of burning the full 60 s deadline.
-    pub(crate) failed: HashSet<RequestId>,
+impl<D: EngineDriver> Shared<D> {
+    fn enqueue(&self, cmd: Cmd<D>) {
+        self.queue.lock().unwrap().push_back(cmd);
+        self.queue_cv.notify_all();
+    }
+
+    /// Run `f` on the driver thread — FIFO with every other command — and
+    /// block until its result is back. The engine reference it receives
+    /// is exclusive for the command's duration: no step, no other
+    /// handler. Commands must never call `call` themselves (the driver
+    /// would wait on itself).
+    pub(crate) fn call<T, F>(&self, f: F) -> T
+    where
+        T: Send + 'static,
+        F: FnOnce(&mut D, &Shared<D>) -> T + Send + 'static,
+    {
+        let slot: Arc<(Mutex<Option<T>>, Condvar)> = Arc::new((Mutex::new(None), Condvar::new()));
+        let reply = Arc::clone(&slot);
+        self.enqueue(Box::new(move |engine, shared| {
+            let v = f(engine, shared);
+            *reply.0.lock().unwrap() = Some(v);
+            reply.1.notify_all();
+        }));
+        let mut g = slot.0.lock().unwrap();
+        loop {
+            if let Some(v) = g.take() {
+                return v;
+            }
+            g = slot.1.wait(g).unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sharded waiter/sink registry: how the driver hands outputs and events
+// back to the handler threads that registered for them.
+
+const WAITER_SHARDS: usize = 16;
+
+/// How one wait for a single request ended.
+pub(crate) enum WaitOutcome {
+    Done(RequestOutput),
+    /// Lost to a replica failure; the requeue was rejected on every
+    /// survivor, so no output will ever come.
+    Lost,
+}
+
+/// A one-shot rendezvous for a single blocking request.
+pub(crate) struct WaitSlot {
+    state: Mutex<Option<WaitOutcome>>,
+    cv: Condvar,
+}
+
+impl WaitSlot {
+    pub(crate) fn new() -> Arc<Self> {
+        Arc::new(WaitSlot { state: Mutex::new(None), cv: Condvar::new() })
+    }
+
+    fn put(&self, v: WaitOutcome) {
+        *self.state.lock().unwrap() = Some(v);
+        self.cv.notify_all();
+    }
+
+    /// Absolute-deadline wait; `None` on timeout.
+    pub(crate) fn wait(&self, deadline: Instant) -> Option<WaitOutcome> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(v) = g.take() {
+                return Some(v);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+}
+
+/// What one wake-up of a streaming wait produced.
+pub(crate) enum SinkWait {
+    Events(Vec<TurnEvent>),
+    /// Failover tombstone: no more events will ever arrive.
+    Lost,
+    TimedOut,
+}
+
+/// A streaming turn's event channel: the driver pushes, the handler
+/// drains and forwards as SSE.
+pub(crate) struct StreamSink {
+    state: Mutex<SinkState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct SinkState {
+    events: Vec<TurnEvent>,
+    lost: bool,
+}
+
+impl StreamSink {
+    pub(crate) fn new() -> Arc<Self> {
+        Arc::new(StreamSink { state: Mutex::new(SinkState::default()), cv: Condvar::new() })
+    }
+
+    fn push(&self, ev: TurnEvent) {
+        self.state.lock().unwrap().events.push(ev);
+        self.cv.notify_all();
+    }
+
+    fn fail(&self) {
+        self.state.lock().unwrap().lost = true;
+        self.cv.notify_all();
+    }
+
+    pub(crate) fn wait(&self, deadline: Instant) -> SinkWait {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if g.lost {
+                return SinkWait::Lost;
+            }
+            if !g.events.is_empty() {
+                return SinkWait::Events(std::mem::take(&mut g.events));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return SinkWait::TimedOut;
+            }
+            let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Disconnect cleanup: a `Finished` output still sitting undelivered
+    /// in the sink.
+    pub(crate) fn find_finished(&self) -> Option<RequestOutput> {
+        let st = self.state.lock().unwrap();
+        st.events.iter().find_map(|ev| match ev {
+            TurnEvent::Finished { output, .. } => Some(output.clone()),
+            _ => None,
+        })
+    }
+}
+
+/// What one wake-up of a pipeline wait produced.
+enum GroupWait {
+    Ready(Vec<RequestOutput>),
+    /// Stages lost to a replica failure (requeue rejected everywhere).
+    Lost(Vec<RequestId>),
+    TimedOut,
+}
+
+/// A pipeline run's completion channel: every stage request of the run
+/// registers against the same group, so the handler wakes once per batch
+/// of retirements instead of once per driver step.
+pub(crate) struct PipeGroup {
+    state: Mutex<GroupState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct GroupState {
+    ready: Vec<RequestOutput>,
+    lost: Vec<RequestId>,
+}
+
+impl PipeGroup {
+    fn new() -> Arc<Self> {
+        Arc::new(PipeGroup { state: Mutex::new(GroupState::default()), cv: Condvar::new() })
+    }
+
+    fn push_done(&self, out: RequestOutput) {
+        self.state.lock().unwrap().ready.push(out);
+        self.cv.notify_all();
+    }
+
+    fn push_lost(&self, id: RequestId) {
+        self.state.lock().unwrap().lost.push(id);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self, deadline: Instant) -> GroupWait {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if !g.ready.is_empty() {
+                return GroupWait::Ready(std::mem::take(&mut g.ready));
+            }
+            if !g.lost.is_empty() {
+                return GroupWait::Lost(std::mem::take(&mut g.lost));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return GroupWait::TimedOut;
+            }
+            let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Drop a delivered-but-unprocessed output (abandon path). True if
+    /// the output was present.
+    fn discard_ready(&self, id: RequestId) -> bool {
+        let mut g = self.state.lock().unwrap();
+        match g.ready.iter().position(|o| o.id == id) {
+            Some(pos) => {
+                g.ready.remove(pos);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+/// What a registered request delivers into.
+enum Entry {
+    Waiter(Arc<WaitSlot>),
+    Stream(Arc<StreamSink>),
+    Group(Arc<PipeGroup>),
+}
+
+/// RequestId -> delivery entry, sharded 16 ways so concurrent handlers
+/// registering/removing and the driver delivering rarely touch the same
+/// lock. A request with NO entry delivers nowhere: removing an entry IS
+/// the orphan operation (the driver drops the output on arrival), which
+/// replaces the old server's `done`/`orphaned`/`failed` maps outright.
+pub(crate) struct WaiterTable {
+    shards: Vec<Mutex<HashMap<RequestId, Entry>>>,
+}
+
+impl WaiterTable {
+    fn new() -> Self {
+        WaiterTable {
+            shards: (0..WAITER_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    fn shard(&self, id: RequestId) -> &Mutex<HashMap<RequestId, Entry>> {
+        // Fleet request ids stripe by replica; mix the bits so shard
+        // choice doesn't correlate with replica count.
+        let h = id.0.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 56;
+        &self.shards[h as usize % WAITER_SHARDS]
+    }
+
+    pub(crate) fn register_waiter(&self, id: RequestId, slot: Arc<WaitSlot>) {
+        self.shard(id).lock().unwrap().insert(id, Entry::Waiter(slot));
+    }
+
+    pub(crate) fn register_stream(&self, id: RequestId, sink: Arc<StreamSink>) {
+        self.shard(id).lock().unwrap().insert(id, Entry::Stream(sink));
+    }
+
+    /// Pipeline stages register if absent (roots once at setup, children
+    /// as chaining submits them; stages already registered stay put).
+    fn register_group(&self, id: RequestId, group: &Arc<PipeGroup>) {
+        self.shard(id)
+            .lock()
+            .unwrap()
+            .entry(id)
+            .or_insert_with(|| Entry::Group(Arc::clone(group)));
+    }
+
+    /// Deregister. For a live request this is the orphan operation: its
+    /// output (and events) are dropped on arrival.
+    pub(crate) fn remove(&self, id: RequestId) {
+        self.shard(id).lock().unwrap().remove(&id);
+    }
+
+    /// Route one finished output (driver thread). Waiter entries are
+    /// consumed; stream entries keep delivering through their event sink
+    /// (the output rides the `Finished` event); group entries stay until
+    /// the handler's chaining command removes them, so a later abandon
+    /// can tell delivered-unprocessed from still-running.
+    fn deliver(&self, out: RequestOutput) {
+        let mut shard = self.shard(out.id).lock().unwrap();
+        if matches!(shard.get(&out.id), Some(Entry::Waiter(_))) {
+            let Some(Entry::Waiter(slot)) = shard.remove(&out.id) else { unreachable!() };
+            drop(shard);
+            slot.put(WaitOutcome::Done(out));
+            return;
+        }
+        if let Some(Entry::Group(g)) = shard.get(&out.id) {
+            let g = Arc::clone(g);
+            drop(shard);
+            g.push_done(out);
+        }
+        // Stream entries keep delivering through their event sink (the
+        // output rides the `Finished` event); no entry = orphaned or
+        // never registered: drop the output.
+    }
+
+    /// Route one turn event (driver thread) into its stream sink, if the
+    /// subscription is still registered.
+    fn push_event(&self, ev: TurnEvent) {
+        let sink = {
+            let shard = self.shard(ev.id()).lock().unwrap();
+            match shard.get(&ev.id()) {
+                Some(Entry::Stream(sink)) => Some(Arc::clone(sink)),
+                _ => None, // abandoned between emission and drain: drop
+            }
+        };
+        if let Some(sink) = sink {
+            sink.push(ev);
+        }
+    }
+
+    /// Failover tombstone: the request will NEVER produce an output, so
+    /// whoever is waiting fails NOW instead of at the 60 s deadline.
+    pub(crate) fn reject(&self, id: RequestId) {
+        match self.shard(id).lock().unwrap().remove(&id) {
+            Some(Entry::Waiter(slot)) => slot.put(WaitOutcome::Lost),
+            Some(Entry::Stream(sink)) => sink.fail(),
+            Some(Entry::Group(g)) => g.push_lost(id),
+            None => {}
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -204,62 +530,65 @@ impl<D: EngineDriver + Send + 'static> Server<D> {
     /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and start
     /// the driver + listener threads. `engine` is any [`EngineDriver`]:
     /// pass an [`crate::engine::Engine`] for single-replica serving or a
-    /// [`crate::cluster::Cluster`] for routed fleet serving.
+    /// [`crate::cluster::Cluster`] for routed fleet serving. The engine
+    /// moves INTO the driver thread — nothing else ever touches it.
     pub fn start(engine: D, addr: &str) -> anyhow::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let shared = Arc::new(Shared {
-            engine: Mutex::new(EngineState {
-                engine,
-                sessions: SessionManager::new(),
-                done: HashMap::new(),
-                orphaned: HashSet::new(),
-                streams: HashMap::new(),
-                failed: HashSet::new(),
-            }),
-            cv: Condvar::new(),
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            sessions: SessionManager::new(),
+            waiters: WaiterTable::new(),
             stop: AtomicBool::new(false),
         });
 
-        // Driver thread: steps the engine whenever there is work, then
-        // routes the step's emissions — turn events into their streaming
-        // sinks, finished outputs into `done` (streamed requests deliver
-        // through their sink instead; orphans are dropped).
+        // Driver thread: owns the engine. Loop = drain every queued
+        // command FIFO, then (if there is work) one step, then route the
+        // step's emissions into the waiter table. Commands therefore
+        // never interleave with a step, and a single thread sequences
+        // everything that touches the engine.
         let driver = {
             let shared = Arc::clone(&shared);
-            std::thread::spawn(move || loop {
-                if shared.stop.load(Ordering::Relaxed) {
-                    break;
+            std::thread::spawn(move || {
+                let mut engine = engine;
+                loop {
+                    if shared.stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let cmds: Vec<Cmd<D>> = {
+                        let mut q = shared.queue.lock().unwrap();
+                        if q.is_empty() && !engine.has_work() {
+                            // Idle: sleep until a submission lands (short
+                            // timeout so shutdown is prompt).
+                            let (guard, _) = shared
+                                .queue_cv
+                                .wait_timeout(q, Duration::from_millis(10))
+                                .unwrap();
+                            q = guard;
+                        }
+                        q.drain(..).collect()
+                    };
+                    for cmd in cmds {
+                        cmd(&mut engine, &shared);
+                    }
+                    if engine.has_work() {
+                        engine.step();
+                        route_emissions(&mut engine, &shared);
+                    }
                 }
-                let mut st = shared.engine.lock().unwrap();
-                if st.engine.has_work() {
-                    st.engine.step();
-                    let events = st.engine.take_events();
-                    for ev in events {
-                        if let Some(sink) = st.streams.get_mut(&ev.id()) {
-                            sink.push(ev);
-                        }
-                        // No sink: the subscription was abandoned between
-                        // emission and drain — drop the event.
+                // Final drain: commands enqueued while we were breaking
+                // still run, so no handler stays blocked on its reply.
+                loop {
+                    let cmds: Vec<Cmd<D>> =
+                        shared.queue.lock().unwrap().drain(..).collect();
+                    if cmds.is_empty() {
+                        break;
                     }
-                    let finished = st.engine.take_finished();
-                    for out in finished {
-                        if st.streams.contains_key(&out.id) {
-                            continue; // delivered via the event sink
-                        }
-                        if !st.orphaned.remove(&out.id) {
-                            st.done.insert(out.id, out);
-                        }
+                    for cmd in cmds {
+                        cmd(&mut engine, &shared);
                     }
-                    shared.cv.notify_all();
-                    drop(st);
-                } else {
-                    // Idle: wait for submissions.
-                    let _ = shared
-                        .cv
-                        .wait_timeout(st, Duration::from_millis(10))
-                        .unwrap();
                 }
             })
         };
@@ -300,7 +629,7 @@ impl<D: EngineDriver + Send + 'static> Server<D> {
 
     pub fn shutdown(&mut self) {
         self.shared.stop.store(true, Ordering::Relaxed);
-        self.shared.cv.notify_all();
+        self.shared.queue_cv.notify_all();
         if let Some(h) = self.listener_handle.take() {
             let _ = h.join();
         }
@@ -313,6 +642,17 @@ impl<D: EngineDriver + Send + 'static> Server<D> {
 impl<D: EngineDriver + Send + 'static> Drop for Server<D> {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+/// Route one step's emissions (driver thread): turn events into their
+/// stream sinks, finished outputs into their wait slots / groups.
+fn route_emissions<D: EngineDriver>(engine: &mut D, shared: &Shared<D>) {
+    for ev in engine.take_events() {
+        shared.waiters.push_event(ev);
+    }
+    for out in engine.take_finished() {
+        shared.waiters.deliver(out);
     }
 }
 
@@ -434,18 +774,16 @@ fn route<D: EngineDriver>(method: &str, path: &str, body: &[u8], shared: &Shared
                 ctype: "application/json",
                 body: r#"{"status":"ok"}"#.into(),
             },
-            "/metrics" => {
-                let st = shared.engine.lock().unwrap();
-                Reply::Full {
-                    status: "200 OK",
-                    ctype: "text/plain; version=0.0.4",
-                    body: st.engine.render_prometheus(),
-                }
-            }
+            "/metrics" => Reply::Full {
+                status: "200 OK",
+                ctype: "text/plain; version=0.0.4",
+                body: shared.call(|engine, _| engine.render_prometheus()),
+            },
             "/cluster" => {
-                let st = shared.engine.lock().unwrap();
-                match st.engine.cluster_stats() {
-                    Some(cs) => full_ok(cs.to_json().to_string()),
+                let stats =
+                    shared.call(|engine, _| engine.cluster_stats().map(|cs| cs.to_json().to_string()));
+                match stats {
+                    Some(body) => full_ok(body),
                     // Unreachable for the in-tree drivers (a single engine
                     // reports a one-replica document), kept for third-party
                     // EngineDriver impls without stats.
@@ -540,24 +878,26 @@ fn parse_replica_action(path: &str) -> Option<(usize, &str)> {
 /// `fail` additionally repairs the session layer — orphaned leases are
 /// forgotten, stranded conversations lose their stickiness peer (they
 /// re-stick on their next turn), and turns whose requeue was rejected are
-/// aborted — and wakes the driver so requeued work starts immediately.
+/// aborted. Runs as one driver command, so the evacuation, the session
+/// repair, and the waiter tombstones are atomic with respect to steps.
 fn replica_action<D: EngineDriver>(
     shared: &Shared<D>,
     i: usize,
     action: &str,
 ) -> Result<Json, ApiError> {
-    let mut g = shared.engine.lock().unwrap();
-    let st = &mut *g;
     match action {
-        "fail" => {
-            let report = st.engine.fail_replica(i).map_err(classify)?;
+        "fail" => shared.call(move |engine, sh| {
+            let report = match engine.fail_replica(i) {
+                Ok(r) => r,
+                Err(e) => return Err(classify(e)),
+            };
             let (leases_dropped, resticks_pending, turns_aborted) =
-                st.sessions.repair_after_failover(&mut st.engine, &report);
-            // Requests no survivor accepted will never finish: tombstone
-            // them so their blocked waiters fail NOW, not at the 60 s
-            // deadline.
-            st.failed.extend(report.rejected.iter().copied());
-            shared.cv.notify_all();
+                sh.sessions.repair_after_failover(&mut *engine, &report);
+            // Requests no survivor accepted will never finish: fail their
+            // blocked waiters NOW, not at the 60 s deadline.
+            for id in &report.rejected {
+                sh.waiters.reject(*id);
+            }
             Ok(Json::obj(vec![
                 ("replica", Json::num(i as f64)),
                 ("health", Json::str("down")),
@@ -571,21 +911,21 @@ fn replica_action<D: EngineDriver>(
                 ("sessions_unstuck", Json::num(resticks_pending as f64)),
                 ("turns_aborted", Json::num(turns_aborted as f64)),
             ]))
-        }
-        "drain" => {
-            st.engine.drain_replica(i).map_err(classify)?;
-            Ok(Json::obj(vec![
+        }),
+        "drain" => shared.call(move |engine, _| match engine.drain_replica(i) {
+            Err(e) => Err(classify(e)),
+            Ok(()) => Ok(Json::obj(vec![
                 ("replica", Json::num(i as f64)),
                 ("health", Json::str("draining")),
-            ]))
-        }
-        "restore" => {
-            st.engine.restore_replica(i).map_err(classify)?;
-            Ok(Json::obj(vec![
+            ])),
+        }),
+        "restore" => shared.call(move |engine, _| match engine.restore_replica(i) {
+            Err(e) => Err(classify(e)),
+            Ok(()) => Ok(Json::obj(vec![
                 ("replica", Json::num(i as f64)),
                 ("health", Json::str("up")),
-            ]))
-        }
+            ])),
+        }),
         _ => unreachable!("parse_replica_action filtered"),
     }
 }
@@ -620,39 +960,27 @@ pub(crate) fn parse_cache_salt(req: &Json) -> anyhow::Result<u64> {
     }
 }
 
-/// Block until the driver thread finishes `id`, with an absolute deadline
-/// (the condvar is woken on every driver step, so a per-wait timeout
-/// would reset forever under concurrent traffic). Shared by `/generate`
-/// and non-streaming turns — the legacy endpoint is a shim over the same
-/// wait the v1 path uses.
+/// Block on a request's wait slot with the absolute deadline. Shared by
+/// `/generate` and non-streaming turns — the legacy endpoint is a shim
+/// over the same wait the v1 path uses.
 pub(crate) fn wait_done<D: EngineDriver>(
     shared: &Shared<D>,
     id: RequestId,
+    slot: &WaitSlot,
 ) -> Result<RequestOutput, ApiError> {
-    let deadline = Instant::now() + REQUEST_TIMEOUT;
-    let mut st = shared.engine.lock().unwrap();
-    loop {
-        if let Some(out) = st.done.remove(&id) {
-            return Ok(out);
+    match slot.wait(Instant::now() + REQUEST_TIMEOUT) {
+        Some(WaitOutcome::Done(out)) => Ok(out),
+        Some(WaitOutcome::Lost) => Err(ApiError::new(
+            "502 Bad Gateway",
+            "request_failed",
+            format!("request {id:?} was lost to a replica failure and could not be requeued"),
+        )),
+        None => {
+            // Abandon the request: deregistering makes the driver drop
+            // its output on arrival instead of parking it forever.
+            shared.waiters.remove(id);
+            Err(ApiError::timeout(format!("request {id:?} timed out")))
         }
-        if st.failed.remove(&id) {
-            // Lost to a replica failure and rejected by every survivor:
-            // no output will ever come.
-            return Err(ApiError::new(
-                "502 Bad Gateway",
-                "request_failed",
-                format!("request {id:?} was lost to a replica failure and could not be requeued"),
-            ));
-        }
-        let now = Instant::now();
-        if now >= deadline {
-            // Abandoning the request: let the driver drop its output
-            // instead of parking it in `done` forever.
-            st.orphaned.insert(id);
-            return Err(ApiError::timeout(format!("request {id:?} timed out")));
-        }
-        let (guard, _) = shared.cv.wait_timeout(st, deadline - now).unwrap();
-        st = guard;
     }
 }
 
@@ -685,71 +1013,101 @@ fn generate<D: EngineDriver>(j: &Json, shared: &Shared<D>) -> Result<Json, ApiEr
     let adapter_name = j.get("adapter").and_then(Json::as_str).map(str::to_string);
     let cache_salt = parse_cache_salt(j).map_err(classify)?;
 
-    let id = {
-        let mut st = shared.engine.lock().unwrap();
-        let target = resolve_target(st.engine.registry(), adapter_name.as_deref())?;
-        let id = st
-            .engine
-            .submit_salted(
+    let slot = WaitSlot::new();
+    let submitted = {
+        let slot = Arc::clone(&slot);
+        shared.call(move |engine, sh| {
+            let target = match resolve_target(engine.registry(), adapter_name.as_deref()) {
+                Ok(t) => t,
+                Err(e) => return Err(e),
+            };
+            let id = match engine.submit_salted(
                 target,
                 prompt,
                 SamplingParams { max_new_tokens: max_new, ..Default::default() },
                 false,
                 cache_salt,
-            )
-            .map_err(classify)?;
-        shared.cv.notify_all();
-        id
+            ) {
+                Ok(id) => id,
+                Err(e) => return Err(classify(e)),
+            };
+            // Registered in the same command as the submission: the
+            // driver cannot step in between, so the output cannot slip
+            // past the slot.
+            sh.waiters.register_waiter(id, slot);
+            Ok(id)
+        })
     };
-    wait_done(shared, id).map(|out| generate_response(&out))
+    let id = submitted?;
+    wait_done(shared, id, &slot).map(|out| generate_response(&out))
+}
+
+// ---------------------------------------------------------------------------
+// Pipelines over the command queue.
+
+/// What the pipeline setup command hands back to its handler.
+struct PipeSetup {
+    co: Coordinator,
+    /// Per input spec: the conversation index it became, or its error.
+    convs: Vec<Result<usize, String>>,
+    batched: bool,
+    n_stages: usize,
+    t0: f64,
+}
+
+/// What one chaining command hands back: the coordinator makes a round
+/// trip through the driver thread (it is plain data — the handler owns it
+/// between commands).
+struct ChainOutcome {
+    co: Coordinator,
+    convs: Vec<Result<usize, String>>,
+    failed: Option<anyhow::Error>,
 }
 
 /// Orphan every in-flight stage of an abandoned coordinator run: drop
-/// outputs already in `done`, mark the rest so the driver discards them
-/// on arrival. The single cleanup used by every /pipeline abort path.
-fn orphan_in_flight<D: EngineDriver>(st: &mut EngineState<D>, co: &Coordinator) {
+/// outputs already delivered to the group and deregister the rest so the
+/// driver discards them on arrival. The single cleanup used by every
+/// /pipeline abort path. Safe from the handler thread — both structures
+/// take their own locks.
+fn orphan_run<D: EngineDriver>(shared: &Shared<D>, group: &PipeGroup, co: &Coordinator) {
     for id in co.in_flight_ids() {
-        if st.done.remove(&id).is_none() {
-            st.orphaned.insert(id);
-        }
+        shared.waiters.remove(id);
+        group.discard_ready(id);
     }
 }
 
 /// Abandon one batch-`/pipeline` conversation after a submission failure:
-/// hand its in-flight outputs to the orphan list (the driver discards
-/// them) and record the per-entry error in input order. Shared by the
-/// root-submission and chain-time failure paths so their bookkeeping
-/// cannot diverge.
+/// deregister its in-flight stages (the driver discards their outputs),
+/// drop anything already delivered, and record the per-entry error in
+/// input order. Shared by the root-submission and chain-time failure
+/// paths so their bookkeeping cannot diverge.
 fn abandon_batch_entry<D: EngineDriver>(
     co: &mut Coordinator,
-    st: &mut EngineState<D>,
+    sh: &Shared<D>,
+    group: &PipeGroup,
     convs: &mut [Result<usize, String>],
     ci: usize,
     err: String,
 ) {
     for id in co.abandon_conversation(ci) {
-        if st.done.remove(&id).is_none() {
-            st.orphaned.insert(id);
-        }
+        sh.waiters.remove(id);
+        group.discard_ready(id);
     }
     if let Some(idx) = convs.iter().position(|c| c.as_ref().ok() == Some(&ci)) {
         convs[idx] = Err(err);
     }
 }
 
-/// Drive one or many stage-graph conversations to completion over the
-/// shared engine. The driver thread does the stepping; this handler
-/// consumes its conversations' completions from `done` and lets the
-/// coordinator chain children the moment their parents retire.
-///
-/// Batch form (`{"pipelines": [spec, ...]}`): every parseable graph runs;
-/// graphs that fail validation — or whose submission the engine rejects
-/// at runtime (e.g. a stage exceeding max_seq_len) — get a per-entry
-/// `error` in the response instead of failing the whole request (a 400
-/// is reserved for structural problems — non-array `pipelines`, empty
-/// batch, unparseable body).
-fn run_pipeline<D: EngineDriver>(spec_json: &Json, shared: &Shared<D>) -> anyhow::Result<Json> {
-    let mut st = shared.engine.lock().unwrap();
+/// The pipeline setup command: parse, build the coordinator, submit every
+/// root, and register the surviving in-flight stages with the run's
+/// group. Runs as ONE driver command, so registration is atomic with
+/// submission.
+fn pipeline_setup<D: EngineDriver>(
+    engine: &mut D,
+    sh: &Shared<D>,
+    spec_json: &Json,
+    group: &Arc<PipeGroup>,
+) -> anyhow::Result<PipeSetup> {
     let (specs, batched): (Vec<&Json>, bool) = match spec_json.get("pipelines") {
         Some(pj) => {
             let arr = pj
@@ -761,10 +1119,9 @@ fn run_pipeline<D: EngineDriver>(spec_json: &Json, shared: &Shared<D>) -> anyhow
         None => (vec![spec_json], false),
     };
     let mut co = Coordinator::new();
-    // Per input spec: the conversation index it became, or its error.
     let mut convs: Vec<Result<usize, String>> = Vec::new();
     for &sj in &specs {
-        let parsed = spec::graph_from_json(sj, st.engine.registry())
+        let parsed = spec::graph_from_json(sj, engine.registry())
             .and_then(|g| co.add_conversation(g));
         convs.push(parsed.map_err(|e| e.to_string()));
     }
@@ -774,93 +1131,126 @@ fn run_pipeline<D: EngineDriver>(spec_json: &Json, shared: &Shared<D>) -> anyhow
             anyhow::bail!("{e}");
         }
     }
-    let n_stages: usize = convs
-        .iter()
-        .flatten()
-        .map(|&ci| co.graph(ci).len())
-        .sum();
-    let t0 = st.engine.clock();
-    // Every failure past this point must fall through to the cleanup arm
-    // below (partially-submitted roots are already in flight), so no `?`.
-    let deadline = Instant::now() + REQUEST_TIMEOUT;
-    let mut outcome = Ok(());
+    let n_stages: usize = convs.iter().flatten().map(|&ci| co.graph(ci).len()).sum();
+    let t0 = engine.clock();
     for idx in 0..convs.len() {
         let Ok(&ci) = convs[idx].as_ref() else { continue };
-        if let Err(e) = co.submit_ready(&mut st.engine, ci) {
+        if let Err(e) = co.submit_ready(&mut *engine, ci) {
             if batched {
                 // Isolate the failing graph: abandon it (its partially
                 // submitted roots keep running; their outputs get
                 // discarded) and report it per-entry — a runtime reject
                 // in one graph must not fail the rest of the batch.
-                abandon_batch_entry(&mut co, &mut st, &mut convs, ci, e.to_string());
+                abandon_batch_entry(&mut co, sh, group, &mut convs, ci, e.to_string());
             } else {
-                outcome = Err(e);
-                break;
+                // Partially submitted roots were never registered: their
+                // outputs are dropped on arrival.
+                return Err(e);
             }
         }
     }
-    shared.cv.notify_all();
+    for id in co.in_flight_ids() {
+        sh.waiters.register_group(id, group);
+    }
+    Ok(PipeSetup { co, convs, batched, n_stages, t0 })
+}
 
-    while outcome.is_ok() && !co.is_done() {
-        let ready: Vec<RequestId> =
-            st.done.keys().copied().filter(|id| co.owns(*id)).collect();
-        if ready.is_empty() {
-            // A stage lost to a replica failure (requeue rejected) will
-            // never retire: fail the conversation now, not at deadline.
-            let lost: Vec<RequestId> =
-                st.failed.iter().copied().filter(|id| co.owns(*id)).collect();
-            if !lost.is_empty() {
-                for id in &lost {
-                    st.failed.remove(id);
+/// One chaining command: consume a batch of delivered outputs, let the
+/// coordinator submit children the moment their parents retire, and
+/// register the new in-flight stages — all atomic with respect to steps.
+fn pipeline_chain<D: EngineDriver>(
+    engine: &mut D,
+    sh: &Shared<D>,
+    mut co: Coordinator,
+    mut convs: Vec<Result<usize, String>>,
+    batched: bool,
+    group: &Arc<PipeGroup>,
+    outs: Vec<RequestOutput>,
+) -> ChainOutcome {
+    let mut failed: Option<anyhow::Error> = None;
+    for out in outs {
+        sh.waiters.remove(out.id);
+        // An abandonment earlier in this drain may have already disowned
+        // a sibling stage's output.
+        if !co.owns(out.id) {
+            continue;
+        }
+        let ci = co.conversation_of(out.id);
+        if let Err(e) = co.on_finished(&mut *engine, out) {
+            // Child-stage submission can fail at chaining time (e.g. a
+            // composed prompt outgrowing max_seq_len). In batch mode that
+            // conversation alone is abandoned and reported per-entry,
+            // same as a root-submission failure.
+            match ci {
+                Some(ci) if batched => {
+                    abandon_batch_entry(&mut co, sh, group, &mut convs, ci, e.to_string());
                 }
-                outcome = Err(anyhow::anyhow!(
+                _ => {
+                    failed = Some(e);
+                    break;
+                }
+            }
+        }
+    }
+    if failed.is_none() {
+        for id in co.in_flight_ids() {
+            sh.waiters.register_group(id, group);
+        }
+    }
+    ChainOutcome { co, convs, failed }
+}
+
+/// Drive one or many stage-graph conversations to completion over the
+/// shared engine. The driver thread does the stepping; this handler
+/// blocks on the run's [`PipeGroup`] and issues one chaining command per
+/// batch of retirements.
+///
+/// Batch form (`{"pipelines": [spec, ...]}`): every parseable graph runs;
+/// graphs that fail validation — or whose submission the engine rejects
+/// at runtime (e.g. a stage exceeding max_seq_len) — get a per-entry
+/// `error` in the response instead of failing the whole request (a 400
+/// is reserved for structural problems — non-array `pipelines`, empty
+/// batch, unparseable body).
+fn run_pipeline<D: EngineDriver>(spec_json: &Json, shared: &Shared<D>) -> anyhow::Result<Json> {
+    let group = PipeGroup::new();
+    let setup = {
+        let spec = spec_json.clone();
+        let group = Arc::clone(&group);
+        shared.call(move |engine, sh| pipeline_setup(engine, sh, &spec, &group))
+    };
+    let PipeSetup { mut co, mut convs, batched, n_stages, t0 } = setup?;
+    let deadline = Instant::now() + REQUEST_TIMEOUT;
+    let mut outcome: Option<anyhow::Error> = None;
+    while outcome.is_none() && !co.is_done() {
+        match group.wait(deadline) {
+            GroupWait::Ready(outs) => {
+                let g = Arc::clone(&group);
+                let step = shared
+                    .call(move |engine, sh| pipeline_chain(engine, sh, co, convs, batched, &g, outs));
+                co = step.co;
+                convs = step.convs;
+                outcome = step.failed;
+            }
+            GroupWait::Lost(lost) => {
+                // A stage lost to a replica failure (requeue rejected)
+                // will never retire: fail the conversation now, not at
+                // deadline.
+                outcome = Some(anyhow::anyhow!(
                     "pipeline stage request {lost:?} was lost to a replica failure"
                 ));
-                break;
             }
-            // Absolute deadline: the condvar is woken on every driver
-            // step, so a per-wait timeout would reset forever under
-            // concurrent traffic.
-            let now = Instant::now();
-            if now >= deadline {
-                outcome = Err(anyhow::anyhow!(
+            GroupWait::TimedOut => {
+                outcome = Some(anyhow::anyhow!(
                     "pipeline timed out with {} of {n_stages} stages unfinished",
                     co.in_flight()
                 ));
-                break;
-            }
-            let (guard, _) = shared.cv.wait_timeout(st, deadline - now).unwrap();
-            st = guard;
-            continue;
-        }
-        for id in ready {
-            // An abandonment earlier in this drain may have already
-            // discarded a sibling stage's output.
-            let Some(out) = st.done.remove(&id) else { continue };
-            let ci = co.conversation_of(id);
-            if let Err(e) = co.on_finished(&mut st.engine, out) {
-                // Child-stage submission can fail at chaining time (e.g. a
-                // composed prompt outgrowing max_seq_len). In batch mode
-                // that conversation alone is abandoned and reported
-                // per-entry, same as a root-submission failure.
-                match ci {
-                    Some(ci) if batched => {
-                        abandon_batch_entry(&mut co, &mut st, &mut convs, ci, e.to_string());
-                    }
-                    _ => {
-                        outcome = Err(e);
-                        break;
-                    }
-                }
             }
         }
-        // Children were just submitted — wake the driver.
-        shared.cv.notify_all();
     }
 
     match outcome {
-        Ok(()) => {
-            let makespan = st.engine.clock() - t0;
+        None => {
+            let makespan = shared.call(|engine, _| engine.clock()) - t0;
             let result = co.into_result(makespan);
             if batched {
                 Ok(spec::batch_result_to_json(&result, &convs))
@@ -868,11 +1258,8 @@ fn run_pipeline<D: EngineDriver>(spec_json: &Json, shared: &Shared<D>) -> anyhow
                 Ok(spec::result_to_json(&result))
             }
         }
-        Err(e) => {
-            // Abandoning the conversation: drop anything of ours already
-            // in `done` and mark the still-running stages orphaned so the
-            // driver discards their outputs instead of leaking them.
-            orphan_in_flight(&mut st, &co);
+        Some(e) => {
+            orphan_run(shared, &group, &co);
             Err(e)
         }
     }
@@ -885,6 +1272,35 @@ enum StreamStep {
     Fail(ApiError),
 }
 
+/// The single-conversation chaining command used by the streaming path.
+/// Returns (coordinator, failure, clock).
+fn pipeline_stream_chain<D: EngineDriver>(
+    engine: &mut D,
+    sh: &Shared<D>,
+    mut co: Coordinator,
+    group: &Arc<PipeGroup>,
+    outs: Vec<RequestOutput>,
+) -> (Coordinator, Option<anyhow::Error>, f64) {
+    let mut failed: Option<anyhow::Error> = None;
+    for out in outs {
+        sh.waiters.remove(out.id);
+        if !co.owns(out.id) {
+            continue;
+        }
+        if let Err(e) = co.on_finished(&mut *engine, out) {
+            failed = Some(e);
+            break;
+        }
+    }
+    if failed.is_none() {
+        for id in co.in_flight_ids() {
+            sh.waiters.register_group(id, group);
+        }
+    }
+    let clock = engine.clock();
+    (co, failed, clock)
+}
+
 /// Streaming `/pipeline` (single spec): per-stage SSE emission through
 /// the coordinator's completion stream — a `stage` event the moment each
 /// stage retires (ROADMAP "streaming per-stage results over HTTP"), then
@@ -894,32 +1310,39 @@ fn stream_pipeline<D: EngineDriver>(
     shared: &Shared<D>,
     spec_json: &Json,
 ) -> anyhow::Result<()> {
-    let mut co = Coordinator::new();
-    let t0 = {
-        let mut g = shared.engine.lock().unwrap();
-        let st = &mut *g;
-        let submitted = spec::graph_from_json(spec_json, st.engine.registry())
-            .and_then(|graph| co.add_conversation(graph))
-            .and_then(|ci| co.submit_ready(&mut st.engine, ci));
-        match submitted {
-            Ok(_) => {
-                shared.cv.notify_all();
-                st.engine.clock()
+    let group = PipeGroup::new();
+    let setup = {
+        let spec = spec_json.clone();
+        let group = Arc::clone(&group);
+        shared.call(move |engine, sh| {
+            let mut co = Coordinator::new();
+            let submitted = spec::graph_from_json(&spec, engine.registry())
+                .and_then(|graph| co.add_conversation(graph))
+                .and_then(|ci| co.submit_ready(&mut *engine, ci));
+            match submitted {
+                Ok(_) => {
+                    for id in co.in_flight_ids() {
+                        sh.waiters.register_group(id, &group);
+                    }
+                    Ok((co, engine.clock()))
+                }
+                // Nothing registered: any partially submitted root's
+                // output is dropped on arrival.
+                Err(e) => Err(classify(e)),
             }
-            Err(e) => {
-                // Nothing streamed yet: plain error response.
-                let err = classify(e);
-                return write_response(stream, err.status, "application/json", &err.body());
-            }
-        }
+        })
     };
-    let result = stream_pipeline_events(stream, shared, &mut co, t0);
+    let (mut co, t0) = match setup {
+        Ok(v) => v,
+        // Nothing streamed yet: plain error response.
+        Err(err) => return write_response(stream, err.status, "application/json", &err.body()),
+    };
+    let result = stream_pipeline_events(stream, shared, &group, &mut co, t0);
     if result.is_err() {
         // A socket write failed mid-stream (client went away): orphan the
         // coordinator's in-flight stages so the driver discards their
-        // outputs instead of leaking them into the shared `done` map.
-        let mut g = shared.engine.lock().unwrap();
-        orphan_in_flight(&mut g, &co);
+        // outputs instead of leaking them.
+        orphan_run(shared, &group, &co);
     }
     result
 }
@@ -927,10 +1350,11 @@ fn stream_pipeline<D: EngineDriver>(
 /// The emission phase of a streaming pipeline. Any `Err` here is a dead
 /// client socket — `stream_pipeline` orphans the leftovers; engine-side
 /// failures are reported in-band as `error` events (with their own
-/// orphan handling under the lock).
+/// orphan handling before the event is written).
 fn stream_pipeline_events<D: EngineDriver>(
     stream: &mut TcpStream,
     shared: &Shared<D>,
+    group: &Arc<PipeGroup>,
     co: &mut Coordinator,
     t0: f64,
 ) -> anyhow::Result<()> {
@@ -938,63 +1362,45 @@ fn stream_pipeline_events<D: EngineDriver>(
     let deadline = Instant::now() + REQUEST_TIMEOUT;
     let mut emitted = 0usize;
     loop {
-        let step = {
-            let mut g = shared.engine.lock().unwrap();
-            loop {
-                let st = &mut *g;
-                let ready: Vec<RequestId> =
-                    st.done.keys().copied().filter(|id| co.owns(*id)).collect();
-                let mut failed: Option<anyhow::Error> = None;
-                let mut chained = false;
-                for id in ready {
-                    let Some(out) = st.done.remove(&id) else { continue };
-                    if let Err(e) = co.on_finished(&mut st.engine, out) {
-                        failed = Some(e);
-                        break;
+        let step = match group.wait(deadline) {
+            GroupWait::Ready(outs) => {
+                let owned = std::mem::replace(co, Coordinator::new());
+                let g = Arc::clone(group);
+                let (owned, failed, clock) = shared
+                    .call(move |engine, sh| pipeline_stream_chain(engine, sh, owned, &g, outs));
+                *co = owned;
+                match failed {
+                    Some(e) => {
+                        orphan_run(shared, group, co);
+                        StreamStep::Fail(classify(e))
                     }
-                    chained = true;
+                    None => {
+                        let new: Vec<Json> = co
+                            .finished_since(emitted)
+                            .iter()
+                            .map(spec::stage_output_to_json)
+                            .collect();
+                        emitted = co.finished_stages().len();
+                        StreamStep::Emit(new, co.is_done(), clock - t0)
+                    }
                 }
-                if chained {
-                    shared.cv.notify_all();
-                }
-                if let Some(e) = failed {
-                    orphan_in_flight(st, co);
-                    break StreamStep::Fail(classify(e));
-                }
-                let new: Vec<Json> = co
-                    .finished_since(emitted)
-                    .iter()
-                    .map(spec::stage_output_to_json)
-                    .collect();
-                if !new.is_empty() || co.is_done() {
-                    emitted = co.finished_stages().len();
-                    break StreamStep::Emit(new, co.is_done(), st.engine.clock() - t0);
-                }
+            }
+            GroupWait::Lost(lost) => {
                 // A stage lost to a replica failure never retires: fail
                 // the stream now instead of at the deadline.
-                let lost: Vec<RequestId> =
-                    st.failed.iter().copied().filter(|id| co.owns(*id)).collect();
-                if !lost.is_empty() {
-                    for id in &lost {
-                        st.failed.remove(id);
-                    }
-                    orphan_in_flight(st, co);
-                    break StreamStep::Fail(ApiError::new(
-                        "502 Bad Gateway",
-                        "request_failed",
-                        format!("pipeline stage request {lost:?} was lost to a replica failure"),
-                    ));
-                }
-                let now = Instant::now();
-                if now >= deadline {
-                    orphan_in_flight(st, co);
-                    break StreamStep::Fail(ApiError::timeout(format!(
-                        "pipeline timed out with {} stages in flight",
-                        co.in_flight()
-                    )));
-                }
-                let (guard, _) = shared.cv.wait_timeout(g, deadline - now).unwrap();
-                g = guard;
+                orphan_run(shared, group, co);
+                StreamStep::Fail(ApiError::new(
+                    "502 Bad Gateway",
+                    "request_failed",
+                    format!("pipeline stage request {lost:?} was lost to a replica failure"),
+                ))
+            }
+            GroupWait::TimedOut => {
+                orphan_run(shared, group, co);
+                StreamStep::Fail(ApiError::timeout(format!(
+                    "pipeline timed out with {} stages in flight",
+                    co.in_flight()
+                )))
             }
         };
         match step {
@@ -1457,5 +1863,63 @@ mod tests {
         assert_eq!(parse_session_path("/v1/sessions/3/other"), None);
         assert_eq!(parse_session_path("/v1/sessions/3/turns/4"), None);
         assert_eq!(parse_session_path("/v2/sessions/3"), None);
+    }
+
+    /// The lock-split smoke test (ISSUE 7 satellite): 8 handler threads
+    /// hammer the session API concurrently; afterwards the engine's pool
+    /// invariant must hold (free + adapter-resident + leased == total)
+    /// and every request must have been counted exactly once.
+    #[test]
+    fn concurrent_handlers_keep_pool_invariant_and_exact_counts() {
+        let mut srv = start_sim_server();
+        let addr = srv.addr();
+        const THREADS: u64 = 8;
+        const TURNS: u64 = 3;
+        let handles: Vec<_> = (0..THREADS)
+            .map(|th| {
+                std::thread::spawn(move || {
+                    let r = post(addr, "/v1/sessions", &format!(r#"{{"cache_salt": {th}}}"#));
+                    assert!(r.contains("200 OK"), "{r}");
+                    let sid = body_json(&r).get("session").and_then(Json::as_u64).unwrap();
+                    for turn in 0..TURNS {
+                        let tokens: Vec<String> = (0..48)
+                            .map(|t| ((th * 7919 + turn * 131 + t) % 4000).to_string())
+                            .collect();
+                        let body = format!(
+                            r#"{{"tokens": [{}], "max_new_tokens": 2}}"#,
+                            tokens.join(",")
+                        );
+                        let r = post(addr, &format!("/v1/sessions/{sid}/turns"), &body);
+                        assert!(r.contains("200 OK"), "{r}");
+                    }
+                    sid
+                })
+            })
+            .collect();
+        let sids: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let unique: std::collections::HashSet<u64> = sids.iter().copied().collect();
+        assert_eq!(unique.len(), THREADS as usize, "session ids must be distinct");
+        assert_eq!(srv.shared.sessions.len(), THREADS as usize);
+        // Exactly one received + one finished per turn, across all
+        // threads — nothing double-counted, nothing dropped.
+        let (received, finished) = srv.shared.call(|engine, _| {
+            let m = engine.metrics_mut();
+            (m.requests_received, m.requests_finished)
+        });
+        assert_eq!(received, THREADS * TURNS);
+        assert_eq!(finished, THREADS * TURNS);
+        srv.shared.call(|engine, _| engine.check_invariants()).unwrap();
+        // Closing every session releases its lease; the pool must still
+        // balance afterwards.
+        for sid in unique {
+            let r = http(
+                addr,
+                &format!("DELETE /v1/sessions/{sid} HTTP/1.1\r\nHost: x\r\n\r\n"),
+            );
+            assert!(r.contains("200 OK"), "{r}");
+        }
+        assert_eq!(srv.shared.sessions.len(), 0);
+        srv.shared.call(|engine, _| engine.check_invariants()).unwrap();
+        srv.shutdown();
     }
 }

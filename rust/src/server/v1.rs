@@ -5,20 +5,25 @@
 //! parse, resolve adapter names, and wait — all conversation semantics
 //! (delta composition, continuation priority, sticky placement, prefix
 //! leases, per-turn metrics) live in the session layer so the engine-level
-//! tests exercise exactly what HTTP serves.
+//! tests exercise exactly what HTTP serves. Under the lock-split server
+//! (DESIGN.md §17) engine work runs as driver commands; pure session-table
+//! reads and turn aborts go straight at the sharded [`SessionManager`]
+//! without a driver round-trip.
 
 use std::net::TcpStream;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::adapter::AdapterRegistry;
 use crate::engine::EngineDriver;
-use crate::request::session::{SessionId, TurnRecord};
+use crate::request::session::{Session, SessionId, TurnRecord};
 use crate::request::{ModelTarget, RequestId, RequestOutput, TurnEvent};
 use crate::util::json::Json;
 
 use super::{
     classify, end_stream, parse_cache_salt, resolve_target, start_stream, wait_done,
-    write_response, write_sse, ApiError, Shared, REQUEST_TIMEOUT,
+    write_response, write_sse, ApiError, Shared, SinkWait, StreamSink, WaitSlot,
+    REQUEST_TIMEOUT,
 };
 
 /// A parsed `POST /v1/sessions/{id}/turns` body.
@@ -95,9 +100,13 @@ pub(crate) fn create_session<D: EngineDriver>(
     shared: &Shared<D>,
 ) -> Result<Json, ApiError> {
     let cache_salt = parse_cache_salt(j).map_err(classify)?;
-    let mut st = shared.engine.lock().unwrap();
-    let sid = st.sessions.create(cache_salt);
-    st.engine.metrics_mut().sessions_created += 1;
+    // A command only for the metrics bump + the engine clock the manager
+    // stamps: session creation itself is sharded-table work.
+    let sid = shared.call(move |engine, sh| {
+        let sid = sh.sessions.create(cache_salt);
+        engine.metrics_mut().sessions_created += 1;
+        sid
+    });
     Ok(Json::obj(vec![
         ("session", Json::num(sid.0 as f64)),
         // Salts are u64 (tenant hashes exceed f64's exact range): string.
@@ -106,8 +115,8 @@ pub(crate) fn create_session<D: EngineDriver>(
 }
 
 pub(crate) fn list_sessions<D: EngineDriver>(shared: &Shared<D>) -> Result<Json, ApiError> {
-    let st = shared.engine.lock().unwrap();
-    let ids = st.sessions.ids();
+    // Pure table read: straight at the sharded manager, no driver.
+    let ids = shared.sessions.ids();
     Ok(Json::obj(vec![
         ("count", Json::num(ids.len() as f64)),
         (
@@ -117,17 +126,12 @@ pub(crate) fn list_sessions<D: EngineDriver>(shared: &Shared<D>) -> Result<Json,
     ]))
 }
 
-pub(crate) fn get_session<D: EngineDriver>(
-    shared: &Shared<D>,
-    sid: u64,
-) -> Result<Json, ApiError> {
-    let st = shared.engine.lock().unwrap();
-    let s = st.sessions.get(SessionId(sid)).ok_or_else(|| {
-        ApiError::not_found("session_not_found", format!("unknown session {sid}"))
-    })?;
-    let registry = st.engine.registry();
-    Ok(Json::obj(vec![
-        ("session", Json::num(sid as f64)),
+/// The session document: a consistent clone snapshot out of the sharded
+/// table (no driver round-trip for the read; one command only to reach
+/// the registry for adapter names).
+fn session_doc(registry: &AdapterRegistry, s: &Session) -> Json {
+    Json::obj(vec![
+        ("session", Json::num(s.id.0 as f64)),
         ("cache_salt", Json::str(s.cache_salt.to_string())),
         ("history_len", Json::num(s.history_len() as f64)),
         (
@@ -140,25 +144,78 @@ pub(crate) fn get_session<D: EngineDriver>(
             "turns",
             Json::Arr(s.turns().iter().map(|r| turn_json(registry, s.id, r)).collect()),
         ),
-    ]))
+    ])
+}
+
+pub(crate) fn get_session<D: EngineDriver>(
+    shared: &Shared<D>,
+    sid: u64,
+) -> Result<Json, ApiError> {
+    let s = shared.sessions.get(SessionId(sid)).ok_or_else(|| {
+        ApiError::not_found("session_not_found", format!("unknown session {sid}"))
+    })?;
+    Ok(shared.call(move |engine, _| session_doc(engine.registry(), &s)))
 }
 
 pub(crate) fn delete_session<D: EngineDriver>(
     shared: &Shared<D>,
     sid: u64,
 ) -> Result<Json, ApiError> {
-    let mut g = shared.engine.lock().unwrap();
-    let st = &mut *g;
-    let s = st
-        .sessions
-        .delete(&mut st.engine, SessionId(sid))
-        .map_err(classify)?;
-    st.engine.metrics_mut().sessions_closed += 1;
-    Ok(Json::obj(vec![
-        ("deleted", Json::num(sid as f64)),
-        ("turns", Json::num(s.num_turns() as f64)),
-        ("history_len", Json::num(s.history_len() as f64)),
-    ]))
+    // A command: deletion releases the prefix lease, which is engine work.
+    shared.call(move |engine, sh| {
+        let s = match sh.sessions.delete(&mut *engine, SessionId(sid)) {
+            Ok(s) => s,
+            Err(e) => return Err(classify(e)),
+        };
+        engine.metrics_mut().sessions_closed += 1;
+        Ok(Json::obj(vec![
+            ("deleted", Json::num(sid as f64)),
+            ("turns", Json::num(s.num_turns() as f64)),
+            ("history_len", Json::num(s.history_len() as f64)),
+        ]))
+    })
+}
+
+/// Where a turn's completion gets delivered.
+enum TurnEntry {
+    Wait(Arc<WaitSlot>),
+    Stream(Arc<StreamSink>),
+}
+
+/// Validate + submit a turn as ONE driver command, registering the
+/// delivery entry in the same command — no step can interleave between
+/// submission and registration, so the output cannot slip past it.
+fn submit_turn<D: EngineDriver>(
+    shared: &Shared<D>,
+    sid: SessionId,
+    t: &TurnBody,
+    entry: TurnEntry,
+) -> Result<RequestId, ApiError> {
+    let tokens = t.tokens.clone();
+    let adapter = t.adapter.clone();
+    let (max_new, append) = (t.max_new_tokens, t.append);
+    shared.call(move |engine, sh| {
+        // Unknown sessions surface from begin_turn, which classify() maps
+        // to the 404 envelope — one translation point, no duplicate
+        // pre-check.
+        let target = match resolve_target(engine.registry(), adapter.as_deref()) {
+            Ok(t) => t,
+            Err(e) => return Err(e),
+        };
+        let (_turn, rid) =
+            match sh.sessions.begin_turn(&mut *engine, sid, target, tokens, max_new, append) {
+                Ok(v) => v,
+                Err(e) => return Err(classify(e)),
+            };
+        match entry {
+            TurnEntry::Wait(slot) => sh.waiters.register_waiter(rid, slot),
+            TurnEntry::Stream(sink) => {
+                engine.watch(rid);
+                sh.waiters.register_stream(rid, sink);
+            }
+        }
+        Ok(rid)
+    })
 }
 
 /// Non-streaming turn: submit the delta, wait for the driver thread,
@@ -169,13 +226,12 @@ pub(crate) fn run_turn<D: EngineDriver>(
     t: TurnBody,
 ) -> Result<Json, ApiError> {
     let sid = SessionId(sid);
-    let rid = submit_turn(shared, sid, &t, false)?;
-    match wait_done(shared, rid) {
-        Ok(out) => {
-            let mut g = shared.engine.lock().unwrap();
-            let st = &mut *g;
-            match st.sessions.complete_turn(&mut st.engine, sid, &out) {
-                Ok(rec) => Ok(turn_json(st.engine.registry(), sid, &rec)),
+    let slot = WaitSlot::new();
+    let rid = submit_turn(shared, sid, &t, TurnEntry::Wait(Arc::clone(&slot)))?;
+    match wait_done(shared, rid, &slot) {
+        Ok(out) => shared.call(move |engine, sh| {
+            match sh.sessions.complete_turn(&mut *engine, sid, &out) {
+                Ok(rec) => Ok(turn_json(engine.registry(), sid, &rec)),
                 Err(e) => {
                     // A completion the session cannot apply must still
                     // clear OUR in-flight turn — every error exit routes
@@ -183,45 +239,19 @@ pub(crate) fn run_turn<D: EngineDriver>(
                     // stuck-turn bug). Guarded on the id: failover repair
                     // may have aborted this turn already and a NEWER live
                     // turn must not be destroyed.
-                    st.sessions.abort_turn_if(sid, rid);
+                    sh.sessions.abort_turn_if(sid, rid);
                     Err(classify(e))
                 }
             }
-        }
+        }),
         Err(e) => {
             // The request was orphaned by wait_done; detach the session's
             // pending turn (if it is still ours) so the conversation
-            // stays usable.
-            let mut st = shared.engine.lock().unwrap();
-            st.sessions.abort_turn_if(sid, rid);
+            // stays usable. Pure table write — no driver needed.
+            shared.sessions.abort_turn_if(sid, rid);
             Err(e)
         }
     }
-}
-
-/// Validate + submit a turn under the lock. `streaming` additionally
-/// subscribes the request to turn events and installs its sink.
-fn submit_turn<D: EngineDriver>(
-    shared: &Shared<D>,
-    sid: SessionId,
-    t: &TurnBody,
-    streaming: bool,
-) -> Result<RequestId, ApiError> {
-    let mut g = shared.engine.lock().unwrap();
-    let st = &mut *g;
-    // Unknown sessions surface from begin_turn, which classify() maps to
-    // the 404 envelope — one translation point, no duplicate pre-check.
-    let target = resolve_target(st.engine.registry(), t.adapter.as_deref())?;
-    let (_turn, rid) = st
-        .sessions
-        .begin_turn(&mut st.engine, sid, target, t.tokens.clone(), t.max_new_tokens, t.append)
-        .map_err(classify)?;
-    if streaming {
-        st.engine.watch(rid);
-        st.streams.insert(rid, Vec::new());
-    }
-    shared.cv.notify_all();
-    Ok(rid)
 }
 
 /// One wake-up's worth of a streaming turn wait.
@@ -241,7 +271,8 @@ pub(crate) fn stream_turn<D: EngineDriver>(
     t: TurnBody,
 ) -> anyhow::Result<()> {
     let sid = SessionId(sid);
-    let rid = match submit_turn(shared, sid, &t, true) {
+    let sink = StreamSink::new();
+    let rid = match submit_turn(shared, sid, &t, TurnEntry::Stream(Arc::clone(&sink))) {
         Ok(rid) => rid,
         // Nothing streamed yet: plain error response.
         Err(e) => return write_response(stream, e.status, "application/json", &e.body()),
@@ -250,42 +281,37 @@ pub(crate) fn stream_turn<D: EngineDriver>(
     // applied to the session — carried across a write failure so cleanup
     // can still commit a turn that genuinely completed server-side.
     let mut unapplied: Option<RequestOutput> = None;
-    let result = stream_turn_events(stream, shared, sid, rid, &mut unapplied);
+    let result = stream_turn_events(stream, shared, &sink, sid, rid, &mut unapplied);
     if result.is_err() {
         // A socket write failed mid-stream (client went away). The
         // session must not stay wedged and nothing may leak: drop the
-        // sink and subscription; if the turn actually finished (output in
-        // hand, or still sitting undelivered in the sink), apply it —
-        // only the client missed the final event. Otherwise detach the
-        // turn and orphan the request so the driver discards its output
-        // instead of parking it in `done` forever.
-        let mut g = shared.engine.lock().unwrap();
-        let st = &mut *g;
+        // sink registration and the event subscription; if the turn
+        // actually finished (output in hand, or still sitting undelivered
+        // in the sink), apply it — only the client missed the final
+        // event. Otherwise detach the turn and deregister the request so
+        // the driver discards its output on arrival.
         if unapplied.is_none() {
-            if let Some(sink) = st.streams.get(&rid) {
-                unapplied = sink.iter().find_map(|ev| match ev {
-                    TurnEvent::Finished { output, .. } => Some(output.clone()),
-                    _ => None,
-                });
-            }
+            unapplied = sink.find_finished();
         }
-        st.streams.remove(&rid);
-        st.engine.unwatch(rid);
-        let turn_pending =
-            st.sessions.get(sid).map(|s| s.in_flight() == Some(rid)).unwrap_or(false);
-        if turn_pending {
-            match &unapplied {
-                Some(out) => {
-                    // Completed server-side: keep the history truthful.
-                    let _ = st.sessions.complete_turn(&mut st.engine, sid, out);
-                }
-                None => {
-                    // Still running: the driver must discard its output.
-                    st.sessions.abort_turn_if(sid, rid);
-                    st.orphaned.insert(rid);
+        let finished = unapplied.take();
+        shared.call(move |engine, sh| {
+            sh.waiters.remove(rid);
+            engine.unwatch(rid);
+            let turn_pending =
+                sh.sessions.get(sid).map(|s| s.in_flight() == Some(rid)).unwrap_or(false);
+            if turn_pending {
+                match &finished {
+                    Some(out) => {
+                        // Completed server-side: keep the history truthful.
+                        let _ = sh.sessions.complete_turn(&mut *engine, sid, out);
+                    }
+                    None => {
+                        // Still running: the driver must discard its output.
+                        sh.sessions.abort_turn_if(sid, rid);
+                    }
                 }
             }
-        }
+        });
     }
     result
 }
@@ -298,6 +324,7 @@ pub(crate) fn stream_turn<D: EngineDriver>(
 fn stream_turn_events<D: EngineDriver>(
     stream: &mut TcpStream,
     shared: &Shared<D>,
+    sink: &StreamSink,
     sid: SessionId,
     rid: RequestId,
     unapplied: &mut Option<RequestOutput>,
@@ -306,48 +333,31 @@ fn stream_turn_events<D: EngineDriver>(
     let deadline = Instant::now() + REQUEST_TIMEOUT;
     let mut finished: Option<RequestOutput> = None;
     'stream: while finished.is_none() {
-        let step = {
-            let mut g = shared.engine.lock().unwrap();
-            loop {
-                if g.failed.remove(&rid) {
-                    // Failover rejected this request on every survivor:
-                    // no more events will ever arrive (repair already
-                    // aborted the session's turn).
-                    let st = &mut *g;
-                    st.streams.remove(&rid);
-                    st.engine.unwatch(rid);
-                    break TurnWait::Fail(ApiError::new(
-                        "502 Bad Gateway",
-                        "request_failed",
-                        format!(
-                            "turn request {rid:?} was lost to a replica failure and could not be requeued"
-                        ),
-                    ));
-                }
-                let Some(sink) = g.streams.get_mut(&rid) else {
-                    break TurnWait::Fail(ApiError::new(
-                        "500 Internal Server Error",
-                        "internal",
-                        "stream sink vanished",
-                    ));
-                };
-                let events = std::mem::take(sink);
-                if !events.is_empty() {
-                    break TurnWait::Events(events);
-                }
-                let now = Instant::now();
-                if now >= deadline {
-                    let st = &mut *g;
-                    st.streams.remove(&rid);
-                    st.orphaned.insert(rid);
-                    st.engine.unwatch(rid);
-                    st.sessions.abort_turn_if(sid, rid);
-                    break TurnWait::Fail(ApiError::timeout(format!(
-                        "turn request {rid:?} timed out"
-                    )));
-                }
-                let (guard, _) = shared.cv.wait_timeout(g, deadline - now).unwrap();
-                g = guard;
+        let step = match sink.wait(deadline) {
+            SinkWait::Events(events) => TurnWait::Events(events),
+            SinkWait::Lost => {
+                // Failover rejected this request on every survivor: no
+                // more events will ever arrive. reject() already dropped
+                // the registration and the failover repair aborted the
+                // session's turn; only the event subscription remains.
+                shared.call(move |engine, _| engine.unwatch(rid));
+                TurnWait::Fail(ApiError::new(
+                    "502 Bad Gateway",
+                    "request_failed",
+                    format!(
+                        "turn request {rid:?} was lost to a replica failure and could not be requeued"
+                    ),
+                ))
+            }
+            SinkWait::TimedOut => {
+                // Abandon: deregister (the driver discards the output on
+                // arrival), unsubscribe, detach the session's turn.
+                shared.call(move |engine, sh| {
+                    sh.waiters.remove(rid);
+                    engine.unwatch(rid);
+                    sh.sessions.abort_turn_if(sid, rid);
+                });
+                TurnWait::Fail(ApiError::timeout(format!("turn request {rid:?} timed out")))
             }
         };
         match step {
@@ -393,27 +403,21 @@ fn stream_turn_events<D: EngineDriver>(
         }
     }
     let out = finished.expect("loop exits only with an output");
-    let reply = {
-        let mut g = shared.engine.lock().unwrap();
-        let st = &mut *g;
-        st.streams.remove(&rid);
-        let completed = st.sessions.complete_turn(&mut st.engine, sid, &out);
-        match completed {
-            Ok(rec) => {
-                *unapplied = None; // applied: cleanup must not re-apply
-                Ok(turn_json(st.engine.registry(), sid, &rec))
-            }
+    let reply = shared.call(move |engine, sh| {
+        sh.waiters.remove(rid);
+        match sh.sessions.complete_turn(&mut *engine, sid, &out) {
+            Ok(rec) => Ok(turn_json(engine.registry(), sid, &rec)),
             Err(e) => {
                 // Unapplicable completion: clear OUR in-flight turn so the
                 // session keeps accepting turns (stuck-409 bugfix; id
                 // guard protects a newer turn), and stop the cleanup path
                 // from retrying the same apply.
-                st.sessions.abort_turn_if(sid, rid);
-                *unapplied = None;
+                sh.sessions.abort_turn_if(sid, rid);
                 Err(classify(e))
             }
         }
-    };
+    });
+    *unapplied = None; // applied (or aborted): cleanup must not re-apply
     match reply {
         Ok(j) => write_sse(stream, "finished", &j)?,
         Err(e) => write_sse(stream, "error", &e.event_json())?,

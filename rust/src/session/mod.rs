@@ -22,21 +22,55 @@
 //!   (`EngineDriver::acquire_lease`), so the blocks survive between turns
 //!   even under cache churn from unrelated traffic; `DELETE` releases
 //!   them. Leases are best-effort: the KV manager breaks them
-//!   oldest-first under allocation pressure.
+//!   oldest-first under allocation pressure, and a per-tenant leased-
+//!   block budget (see [`SessionManager::with_limits`]) breaks a hoarding
+//!   tenant's oldest leases so one tenant cannot pin the whole pool.
 //! - **Per-turn metrics** — every completed turn lands in the driver's
 //!   `Metrics::turn` series (TTFT / ITL at the serving boundary).
+//!
+//! The session table is **sharded**: sessions hash (by id) onto
+//! [`SHARDS`] independently locked maps, so turn submission, expiry
+//! sweeps and failover repair touching *different* sessions never
+//! serialize on one table lock (DESIGN.md §17). All manager methods take
+//! `&self`; a method locks at most one shard at a time (the tenant
+//! ledger is a separate lock, always acquired *after* releasing shard
+//! locks — never nested inside one while another shard is taken).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::engine::EngineDriver;
+use crate::kvcache::chain::ChainRef;
 use crate::request::session::{Session, SessionId, TurnId, TurnRecord};
 use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams};
 use crate::util::fxmap::{FxHashMap, FxHashSet};
 
+/// Shard count for the session table. Power of two, sized so a handful
+/// of handler threads rarely collide; the shard index is a multiplicative
+/// hash of the session id (ids are sequential, so `id % SHARDS` alone
+/// would put a burst of new sessions on consecutive shards — fine — but
+/// the hash also spreads any id-structured access pattern).
+const SHARDS: usize = 16;
+
+fn shard_index(sid: SessionId) -> usize {
+    (sid.0.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 56) as usize % SHARDS
+}
+
+/// One tenant's lease bookkeeping: which sessions hold leases, how many
+/// blocks each pins, and the running total the budget is enforced on.
+#[derive(Debug, Default)]
+struct TenantLedger {
+    total: usize,
+    /// session → (acquisition stamp, pinned blocks).
+    leases: FxHashMap<SessionId, (f64, usize)>,
+}
+
 /// Owns every live session of one server (or one test harness) and
 /// drives their turns over an [`EngineDriver`].
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct SessionManager {
-    sessions: FxHashMap<SessionId, Session>,
-    next_id: u64,
+    shards: Vec<Mutex<FxHashMap<SessionId, Session>>>,
+    next_id: AtomicU64,
     /// Idle TTL in virtual seconds: a PARKED session (no turn in flight)
     /// idle strictly longer than this expires on the next
     /// [`SessionManager::expire_idle`] sweep — its lease is released and
@@ -46,6 +80,27 @@ pub struct SessionManager {
     /// Hard cap on live sessions: expiry sweeps evict oldest-idle parked
     /// sessions beyond it. None = unbounded.
     max_sessions: Option<usize>,
+    /// Per-tenant (per-`cache_salt`) ceiling on leased blocks: when a
+    /// tenant's sessions collectively pin more, its OLDEST leases break
+    /// first until the tenant fits (counted in
+    /// `tenant_lease_breaks_total`). None = no tenant budget.
+    tenant_lease_budget: Option<usize>,
+    /// cache_salt → ledger. Locked independently of the shards; only
+    /// taken with no shard lock held (see module doc).
+    tenants: Mutex<FxHashMap<u64, TenantLedger>>,
+}
+
+impl Default for SessionManager {
+    fn default() -> Self {
+        SessionManager {
+            shards: (0..SHARDS).map(|_| Mutex::new(FxHashMap::default())).collect(),
+            next_id: AtomicU64::new(0),
+            idle_ttl: None,
+            max_sessions: None,
+            tenant_lease_budget: None,
+            tenants: Mutex::new(FxHashMap::default()),
+        }
+    }
 }
 
 impl SessionManager {
@@ -54,9 +109,14 @@ impl SessionManager {
     }
 
     /// A manager with retention limits (the million-session harness needs
-    /// both: unbounded tables are exactly what it exists to rule out).
-    pub fn with_limits(idle_ttl: Option<f64>, max_sessions: Option<usize>) -> Self {
-        SessionManager { idle_ttl, max_sessions, ..Self::default() }
+    /// them: unbounded tables are exactly what it exists to rule out) and
+    /// an optional per-tenant leased-block budget.
+    pub fn with_limits(
+        idle_ttl: Option<f64>,
+        max_sessions: Option<usize>,
+        tenant_lease_budget: Option<usize>,
+    ) -> Self {
+        SessionManager { idle_ttl, max_sessions, tenant_lease_budget, ..Self::default() }
     }
 
     pub fn set_idle_ttl(&mut self, ttl: Option<f64>) {
@@ -67,21 +127,28 @@ impl SessionManager {
         self.max_sessions = cap;
     }
 
+    pub fn set_tenant_lease_budget(&mut self, budget: Option<usize>) {
+        self.tenant_lease_budget = budget;
+    }
+
+    fn shard(&self, sid: SessionId) -> &Mutex<FxHashMap<SessionId, Session>> {
+        &self.shards[shard_index(sid)]
+    }
+
     /// Open a session under a tenant cache salt (0 = unsalted shared
     /// cache, vLLM semantics).
-    pub fn create(&mut self, cache_salt: u64) -> SessionId {
+    pub fn create(&self, cache_salt: u64) -> SessionId {
         self.create_at(cache_salt, 0.0)
     }
 
     /// [`SessionManager::create`] stamped with the driver's current
     /// virtual clock, so a session that never runs a turn still ages out
     /// of the idle TTL from its creation instant (and not from t=0).
-    pub fn create_at(&mut self, cache_salt: u64, now: f64) -> SessionId {
-        let id = SessionId(self.next_id);
-        self.next_id += 1;
+    pub fn create_at(&self, cache_salt: u64, now: f64) -> SessionId {
+        let id = SessionId(self.next_id.fetch_add(1, Ordering::Relaxed));
         let mut s = Session::new(id, cache_salt);
         s.last_activity = now;
-        self.sessions.insert(id, s);
+        self.shard(id).lock().unwrap().insert(id, s);
         id
     }
 
@@ -91,15 +158,23 @@ impl SessionManager {
     /// the table (counted in `sessions_expired_total`); their next turn
     /// or DELETE is an unknown-session error, exactly like an explicit
     /// delete. Sessions with a turn in flight never expire. Returns the
-    /// expired ids (ascending idle age, deterministic).
-    pub fn expire_idle<D: EngineDriver>(&mut self, engine: &mut D) -> Vec<SessionId> {
+    /// expired ids (ascending idle age, deterministic regardless of the
+    /// shard layout: candidates are gathered shard by shard, then sorted
+    /// globally by (stamp, id) before victims are chosen).
+    pub fn expire_idle<D: EngineDriver>(&self, engine: &mut D) -> Vec<SessionId> {
         let now = engine.clock();
-        let mut parked: Vec<(f64, SessionId)> = self
-            .sessions
-            .values()
-            .filter(|s| s.in_flight().is_none())
-            .map(|s| (s.last_activity, s.id))
-            .collect();
+        let mut parked: Vec<(f64, SessionId)> = Vec::new();
+        let mut total = 0usize;
+        for shard in &self.shards {
+            let shard = shard.lock().unwrap();
+            total += shard.len();
+            parked.extend(
+                shard
+                    .values()
+                    .filter(|s| s.in_flight().is_none())
+                    .map(|s| (s.last_activity, s.id)),
+            );
+        }
         // Oldest first; equal stamps break by id so sweeps are
         // deterministic across map iteration orders.
         parked.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
@@ -114,7 +189,7 @@ impl SessionManager {
             }
         }
         if let Some(cap) = self.max_sessions {
-            let mut live = self.sessions.len() - victims.len();
+            let mut live = total - victims.len();
             for &(_, id) in &parked {
                 if live <= cap {
                     break;
@@ -125,29 +200,58 @@ impl SessionManager {
                 }
             }
         }
-        for id in &victims {
-            engine.release_lease(id.0);
-            self.sessions.remove(id);
-            engine.metrics_mut().sessions_expired += 1;
+        let mut expired = Vec::with_capacity(victims.len());
+        for id in victims {
+            // Re-check under the shard lock: between the scan and now a
+            // concurrent begin_turn may have put the session mid-turn
+            // (in-flight sessions never expire).
+            let removed = {
+                let mut shard = self.shard(id).lock().unwrap();
+                match shard.get(&id) {
+                    Some(s) if s.in_flight().is_none() => shard.remove(&id),
+                    _ => None,
+                }
+            };
+            if let Some(s) = removed {
+                engine.release_lease(id.0);
+                engine.metrics_mut().sessions_expired += 1;
+                self.forget_lease(s.cache_salt, id);
+                expired.push(id);
+            }
         }
-        victims
+        expired
     }
 
-    pub fn get(&self, id: SessionId) -> Option<&Session> {
-        self.sessions.get(&id)
+    /// Snapshot of one session (a clone — the live record sits behind a
+    /// shard lock). `None` for unknown ids.
+    pub fn get(&self, id: SessionId) -> Option<Session> {
+        self.shard(id).lock().unwrap().get(&id).cloned()
+    }
+
+    /// Test hook: mutate one session in place under its shard lock.
+    #[doc(hidden)]
+    pub fn with_session_mut<R>(
+        &self,
+        sid: SessionId,
+        f: impl FnOnce(&mut Session) -> R,
+    ) -> Option<R> {
+        self.shard(sid).lock().unwrap().get_mut(&sid).map(f)
     }
 
     pub fn len(&self) -> usize {
-        self.sessions.len()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.sessions.is_empty()
+        self.shards.iter().all(|s| s.lock().unwrap().is_empty())
     }
 
     /// Live session ids, ascending.
     pub fn ids(&self) -> Vec<SessionId> {
-        let mut ids: Vec<SessionId> = self.sessions.keys().copied().collect();
+        let mut ids: Vec<SessionId> = Vec::new();
+        for shard in &self.shards {
+            ids.extend(shard.lock().unwrap().keys().copied());
+        }
         ids.sort();
         ids
     }
@@ -157,7 +261,7 @@ impl SessionManager {
     /// id; the turn stays in flight until [`SessionManager::complete_turn`]
     /// (or [`SessionManager::abort_turn`]).
     pub fn begin_turn<D: EngineDriver>(
-        &mut self,
+        &self,
         engine: &mut D,
         sid: SessionId,
         target: ModelTarget,
@@ -165,8 +269,8 @@ impl SessionManager {
         max_new_tokens: u32,
         append: bool,
     ) -> anyhow::Result<(TurnId, RequestId)> {
-        let s = self
-            .sessions
+        let mut shard = self.shard(sid).lock().unwrap();
+        let s = shard
             .get_mut(&sid)
             .ok_or_else(|| anyhow::anyhow!("unknown session {}", sid.0))?;
         let prompt = s.compose_prompt(&delta)?;
@@ -174,8 +278,10 @@ impl SessionManager {
         // Hash the turn's chain HERE, through the session's cached chain:
         // a delta turn pays O(delta) hashing instead of re-hashing the
         // whole conversation (the hot-path scaling this layer exists
-        // for). Unknown adapters fall through with an empty chain so the
-        // target replica's own admission emits the canonical error.
+        // for), and the resulting ChainRef shares the cached history's
+        // arena nodes. Unknown adapters fall through with an empty chain
+        // so the target replica's own admission emits the canonical
+        // error.
         let cache = &engine.config().cache;
         let (bs, ba) = (cache.block_size as usize, cache.base_aligned_hashing);
         let chain = match engine.registry().request_hash_context(
@@ -185,7 +291,7 @@ impl SessionManager {
             s.cache_salt,
         ) {
             Some((_, ctx)) => s.turn_chain(&prompt, bs, &ctx),
-            None => Vec::new(),
+            None => ChainRef::empty(),
         };
         let id = engine.submit_sticky_prehashed(
             target,
@@ -206,26 +312,97 @@ impl SessionManager {
     /// on the driver, and re-acquire the session's prefix lease over the
     /// grown chain (pinned on the replica that just ran the turn).
     pub fn complete_turn<D: EngineDriver>(
-        &mut self,
+        &self,
         engine: &mut D,
         sid: SessionId,
         out: &RequestOutput,
     ) -> anyhow::Result<TurnRecord> {
-        let s = self
-            .sessions
-            .get_mut(&sid)
-            .ok_or_else(|| anyhow::anyhow!("unknown session {}", sid.0))?;
-        let record = s.apply_finished(out)?;
-        engine.metrics_mut().observe_turn(out);
-        // Re-lease over the cached chain: the turn extended the history,
-        // so this is an O(delta) chain extension + an O(delta) lease
-        // extension on the holding replica — never a full re-hash or
-        // full re-pin of the conversation.
-        let bs = engine.config().cache.block_size as usize;
-        let chain = s.cached_chain(bs).to_vec();
-        s.leased_blocks = engine.acquire_lease_prehashed(sid.0, &chain, Some(out.id));
-        s.last_activity = engine.clock();
+        let (record, salt, stamp, blocks) = {
+            let mut shard = self.shard(sid).lock().unwrap();
+            let s = shard
+                .get_mut(&sid)
+                .ok_or_else(|| anyhow::anyhow!("unknown session {}", sid.0))?;
+            let record = s.apply_finished(out)?;
+            engine.metrics_mut().observe_turn(out);
+            // Re-lease over the cached chain: the turn extended the
+            // history, so this is an O(delta) chain extension + an
+            // O(delta) lease extension on the holding replica. The
+            // ChainRef handle shares the session's interned nodes —
+            // no full-chain copy on this per-turn path.
+            let bs = engine.config().cache.block_size as usize;
+            let chain = s.cached_chain(bs);
+            s.leased_blocks = engine.acquire_lease_prehashed(sid.0, &chain, Some(out.id));
+            s.last_activity = engine.clock();
+            (record, s.cache_salt, s.last_activity, s.leased_blocks)
+        };
+        // Shard lock dropped: tenant-budget bookkeeping takes the ledger
+        // lock and possibly other shards' locks.
+        self.note_lease(engine, salt, sid, stamp, blocks);
         Ok(record)
+    }
+
+    /// Record a (re)acquired lease in its tenant's ledger and enforce the
+    /// budget: while the tenant pins more than its ceiling, break its
+    /// OLDEST lease (stamp order, id tie-break) — release it on the
+    /// engine, zero the victim session's gauge, count the break.
+    fn note_lease<D: EngineDriver>(
+        &self,
+        engine: &mut D,
+        salt: u64,
+        sid: SessionId,
+        stamp: f64,
+        blocks: usize,
+    ) {
+        let Some(budget) = self.tenant_lease_budget else { return };
+        let mut victims: Vec<SessionId> = Vec::new();
+        {
+            let mut tenants = self.tenants.lock().unwrap();
+            let ledger = tenants.entry(salt).or_default();
+            let old = if blocks == 0 {
+                ledger.leases.remove(&sid)
+            } else {
+                ledger.leases.insert(sid, (stamp, blocks))
+            };
+            ledger.total = ledger.total + blocks - old.map_or(0, |(_, b)| b);
+            while ledger.total > budget {
+                let victim = ledger
+                    .leases
+                    .iter()
+                    .min_by(|a, b| a.1 .0.total_cmp(&b.1 .0).then(a.0.cmp(b.0)))
+                    .map(|(id, _)| *id);
+                let Some(v) = victim else { break };
+                let (_, b) = ledger.leases.remove(&v).expect("picked above");
+                ledger.total -= b;
+                victims.push(v);
+            }
+            if ledger.leases.is_empty() {
+                tenants.remove(&salt);
+            }
+        }
+        for v in victims {
+            engine.release_lease(v.0);
+            engine.metrics_mut().tenant_lease_breaks += 1;
+            if let Some(s) = self.shard(v).lock().unwrap().get_mut(&v) {
+                s.leased_blocks = 0;
+            }
+        }
+    }
+
+    /// Drop a session's ledger entry (lease released or orphaned outside
+    /// the budget path). No-op without a tenant budget.
+    fn forget_lease(&self, salt: u64, sid: SessionId) {
+        if self.tenant_lease_budget.is_none() {
+            return;
+        }
+        let mut tenants = self.tenants.lock().unwrap();
+        if let Some(ledger) = tenants.get_mut(&salt) {
+            if let Some((_, b)) = ledger.leases.remove(&sid) {
+                ledger.total -= b;
+            }
+            if ledger.leases.is_empty() {
+                tenants.remove(&salt);
+            }
+        }
     }
 
     /// Drive one turn to completion synchronously (tests and offline
@@ -239,7 +416,7 @@ impl SessionManager {
     /// (the stuck-409 bug — the pending turn could only be cleared by a
     /// completion that will never come).
     pub fn run_turn<D: EngineDriver>(
-        &mut self,
+        &self,
         engine: &mut D,
         sid: SessionId,
         target: ModelTarget,
@@ -272,12 +449,12 @@ impl SessionManager {
     /// without the abort every later turn would 409, the stuck-turn bug).
     /// Returns (leases dropped, stickiness cleared, turns aborted).
     pub fn repair_after_failover<D: EngineDriver>(
-        &mut self,
+        &self,
         engine: &mut D,
         report: &crate::cluster::FailoverReport,
     ) -> (usize, usize, usize) {
         // Hash the report's id lists once: this loop runs over every live
-        // session while the serving lock is held, so per-session linear
+        // session while its shard lock is held, so per-session linear
         // scans of a loaded victim's lists would go quadratic exactly
         // when latency matters most.
         let orphaned: FxHashSet<u64> = report.orphaned_leases.iter().copied().collect();
@@ -289,33 +466,41 @@ impl SessionManager {
                 && !relocated.contains(&rid)
         };
         let (mut leases, mut unstuck, mut aborted) = (0, 0, 0);
-        for s in self.sessions.values_mut() {
-            if s.leased_blocks > 0 && orphaned.contains(&s.id.0) {
-                s.leased_blocks = 0;
-                leases += 1;
-            }
-            // Clear stickiness only for PARKED sessions (no turn in
-            // flight). A session mid-turn is re-homed by that turn's own
-            // completion — requeued turns finish on a survivor and
-            // overwrite `last_request`, and a turn that finished on the
-            // victim (or was rejected and aborted below) leaves a stale
-            // peer that `submit_sticky`'s health check re-sticks — and
-            // counts — exactly once. Clearing here too would count the
-            // same migration twice.
-            if s.in_flight().is_none() {
-                if let Some(rid) = s.last_request {
-                    if stranded(rid) {
-                        s.last_request = None;
-                        unstuck += 1;
+        let mut dropped: Vec<(u64, SessionId)> = Vec::new();
+        for shard in &self.shards {
+            let mut shard = shard.lock().unwrap();
+            for s in shard.values_mut() {
+                if s.leased_blocks > 0 && orphaned.contains(&s.id.0) {
+                    s.leased_blocks = 0;
+                    dropped.push((s.cache_salt, s.id));
+                    leases += 1;
+                }
+                // Clear stickiness only for PARKED sessions (no turn in
+                // flight). A session mid-turn is re-homed by that turn's
+                // own completion — requeued turns finish on a survivor
+                // and overwrite `last_request`, and a turn that finished
+                // on the victim (or was rejected and aborted below)
+                // leaves a stale peer that `submit_sticky`'s health check
+                // re-sticks — and counts — exactly once. Clearing here
+                // too would count the same migration twice.
+                if s.in_flight().is_none() {
+                    if let Some(rid) = s.last_request {
+                        if stranded(rid) {
+                            s.last_request = None;
+                            unstuck += 1;
+                        }
+                    }
+                }
+                if let Some(rid) = s.in_flight() {
+                    if rejected.contains(&rid) {
+                        s.abort_pending();
+                        aborted += 1;
                     }
                 }
             }
-            if let Some(rid) = s.in_flight() {
-                if rejected.contains(&rid) {
-                    s.abort_pending();
-                    aborted += 1;
-                }
-            }
+        }
+        for (salt, sid) in dropped {
+            self.forget_lease(salt, sid);
         }
         engine.note_resticks(unstuck as u64);
         (leases, unstuck, aborted)
@@ -325,8 +510,8 @@ impl SessionManager {
     /// running the request; the returned id lets the caller discard its
     /// eventual output. The session history stays at the last completed
     /// turn.
-    pub fn abort_turn(&mut self, sid: SessionId) -> Option<RequestId> {
-        self.sessions.get_mut(&sid).and_then(Session::abort_pending)
+    pub fn abort_turn(&self, sid: SessionId) -> Option<RequestId> {
+        self.shard(sid).lock().unwrap().get_mut(&sid).and_then(Session::abort_pending)
     }
 
     /// Abort the in-flight turn only if it is `rid` — the guard every
@@ -334,8 +519,8 @@ impl SessionManager {
     /// its socket dies, failover repair may already have aborted its turn
     /// and the session may be running a NEWER turn, which an
     /// unconditional abort would destroy. True if the abort happened.
-    pub fn abort_turn_if(&mut self, sid: SessionId, rid: RequestId) -> bool {
-        match self.sessions.get_mut(&sid) {
+    pub fn abort_turn_if(&self, sid: SessionId, rid: RequestId) -> bool {
+        match self.shard(sid).lock().unwrap().get_mut(&sid) {
             Some(s) if s.in_flight() == Some(rid) => {
                 s.abort_pending();
                 true
@@ -347,19 +532,23 @@ impl SessionManager {
     /// Close a session: release its prefix lease and drop its state.
     /// Refuses while a turn is in flight (abort it first).
     pub fn delete<D: EngineDriver>(
-        &mut self,
+        &self,
         engine: &mut D,
         sid: SessionId,
     ) -> anyhow::Result<Session> {
-        let s = self
-            .sessions
-            .get(&sid)
-            .ok_or_else(|| anyhow::anyhow!("unknown session {}", sid.0))?;
-        if let Some(rid) = s.in_flight() {
-            anyhow::bail!("session {}: turn {rid:?} is still in flight", sid.0);
-        }
+        let removed = {
+            let mut shard = self.shard(sid).lock().unwrap();
+            let s = shard
+                .get(&sid)
+                .ok_or_else(|| anyhow::anyhow!("unknown session {}", sid.0))?;
+            if let Some(rid) = s.in_flight() {
+                anyhow::bail!("session {}: turn {rid:?} is still in flight", sid.0);
+            }
+            shard.remove(&sid).expect("checked above")
+        };
         engine.release_lease(sid.0);
-        Ok(self.sessions.remove(&sid).expect("checked above"))
+        self.forget_lease(removed.cache_salt, sid);
+        Ok(removed)
     }
 }
 
@@ -477,7 +666,7 @@ mod tests {
         // request dies without a RequestOutput must not leave the session
         // rejecting every later turn as `turn_in_flight`.
         let mut d = DeadEndDriver::new();
-        let mut mgr = SessionManager::new();
+        let mgr = SessionManager::new();
         let sid = mgr.create(0);
         // While a turn is live the session 409s...
         let (_t, rid) = mgr
@@ -510,17 +699,17 @@ mod tests {
     #[test]
     fn failover_repair_aborts_rejected_turns_and_clears_dead_state() {
         let mut d = DeadEndDriver::new();
-        let mut mgr = SessionManager::new();
+        let mgr = SessionManager::new();
         let sid = mgr.create(0);
         let (_t, rid) = mgr
             .begin_turn(&mut d, sid, ModelTarget::Base, vec![1, 2], 4, true)
             .unwrap();
         // Fake a session that already completed a turn on "replica 0".
-        {
-            let s = mgr.sessions.get_mut(&sid).unwrap();
+        mgr.with_session_mut(sid, |s| {
             s.last_request = Some(RequestId(100)); // 100 % 2 == 0: stranded
             s.leased_blocks = 3;
-        }
+        })
+        .unwrap();
         let report = crate::cluster::FailoverReport {
             replica: 0,
             num_replicas: 2,
@@ -546,7 +735,8 @@ mod tests {
         // first session, now aborted, is parked too, so a second repair
         // clears both.
         let parked = mgr.create(0);
-        mgr.sessions.get_mut(&parked).unwrap().last_request = Some(RequestId(100));
+        mgr.with_session_mut(parked, |s| s.last_request = Some(RequestId(100)))
+            .unwrap();
         let (_, unstuck, _) = mgr.repair_after_failover(&mut d, &report);
         assert_eq!(unstuck, 2, "parked sessions' stickiness cleared");
         assert!(mgr.get(parked).unwrap().last_request.is_none());
@@ -568,7 +758,7 @@ mod tests {
     #[test]
     fn delta_turns_reuse_prior_turn_kv() {
         let mut e = engine();
-        let mut mgr = SessionManager::new();
+        let mgr = SessionManager::new();
         let sid = mgr.create(0);
         let t1 = mgr
             .run_turn(&mut e, sid, ModelTarget::Base, (0..256).collect(), 32, true)
@@ -611,7 +801,7 @@ mod tests {
     #[test]
     fn tenant_salts_isolate_sessions_sharing_a_prompt() {
         let mut e = engine();
-        let mut mgr = SessionManager::new();
+        let mgr = SessionManager::new();
         let a = mgr.create(111);
         let b = mgr.create(222);
         let c = mgr.create(111); // same tenant as `a`
@@ -638,9 +828,56 @@ mod tests {
     }
 
     #[test]
+    fn tenant_lease_budget_breaks_oldest_and_isolates_tenants() {
+        // Per-tenant leased-block ceiling: tenant A runs two sessions
+        // whose leases together exceed the budget — A's OLDEST lease
+        // breaks; tenant B (its own salt, its own budget) keeps its lease
+        // untouched.
+        let mut e = engine();
+        let mgr = SessionManager::with_limits(None, None, Some(24));
+        let a1 = mgr.create(111);
+        let a2 = mgr.create(111);
+        let b = mgr.create(222);
+        // Tenant B leases ~17 blocks (264 tokens / bs 16): within budget.
+        mgr.run_turn(&mut e, b, ModelTarget::Base, (500..756).collect(), 8, true)
+            .unwrap();
+        let b_leased = mgr.get(b).unwrap().leased_blocks;
+        assert!(b_leased > 0 && b_leased <= 24, "b leased {b_leased}");
+        // Tenant A's first session: also within budget on its own.
+        mgr.run_turn(&mut e, a1, ModelTarget::Base, (0..256).collect(), 8, true)
+            .unwrap();
+        let a1_leased = mgr.get(a1).unwrap().leased_blocks;
+        assert!(a1_leased > 0 && a1_leased <= 24, "a1 leased {a1_leased}");
+        assert_eq!(e.metrics.tenant_lease_breaks, 0);
+        // A's second session pushes the tenant past 24 blocks: the OLDEST
+        // lease (a1's) breaks; the fresh one survives.
+        mgr.run_turn(&mut e, a2, ModelTarget::Base, (2000..2256).collect(), 8, true)
+            .unwrap();
+        assert_eq!(
+            mgr.get(a1).unwrap().leased_blocks,
+            0,
+            "tenant over budget: oldest lease broken"
+        );
+        assert!(mgr.get(a2).unwrap().leased_blocks > 0, "newest lease kept");
+        assert_eq!(e.metrics.tenant_lease_breaks, 1);
+        // Tenant isolation: B's lease is untouched by A's overage.
+        assert_eq!(mgr.get(b).unwrap().leased_blocks, b_leased, "tenant B isolated");
+        // The engine agrees: only a2's and b's chains stay pinned.
+        assert_eq!(
+            e.leased_blocks(),
+            mgr.get(a2).unwrap().leased_blocks + b_leased
+        );
+        for sid in [a1, a2, b] {
+            mgr.delete(&mut e, sid).unwrap();
+        }
+        assert_eq!(e.leased_blocks(), 0);
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
     fn sequential_turn_discipline_and_delete_guard() {
         let mut e = engine();
-        let mut mgr = SessionManager::new();
+        let mgr = SessionManager::new();
         let sid = mgr.create(0);
         let (_t, rid) = mgr
             .begin_turn(&mut e, sid, ModelTarget::Base, vec![1, 2, 3, 4], 4, true)
@@ -669,7 +906,7 @@ mod tests {
     #[test]
     fn idle_sessions_expire_and_release_leases() {
         let mut e = engine();
-        let mut mgr = SessionManager::with_limits(Some(100.0), None);
+        let mgr = SessionManager::with_limits(Some(100.0), None, None);
         let a = mgr.create(0);
         let b = mgr.create(0);
         mgr.run_turn(&mut e, a, ModelTarget::Base, (0..64).collect(), 8, true)
@@ -701,7 +938,7 @@ mod tests {
     #[test]
     fn session_cap_evicts_oldest_idle_first() {
         let mut d = DeadEndDriver::new();
-        let mut mgr = SessionManager::with_limits(None, Some(2));
+        let mgr = SessionManager::with_limits(None, Some(2), None);
         let a = mgr.create_at(0, 10.0);
         let b = mgr.create_at(0, 20.0);
         let c = mgr.create_at(0, 5.0);
@@ -717,21 +954,21 @@ mod tests {
     #[test]
     fn in_flight_sessions_never_expire() {
         let mut d = DeadEndDriver::new();
-        let mut mgr = SessionManager::with_limits(Some(10.0), None);
+        let mgr = SessionManager::with_limits(Some(10.0), None, None);
         let busy = mgr.create(0);
         let parked = mgr.create(0);
         let (_t, rid) = mgr
             .begin_turn(&mut d, busy, ModelTarget::Base, vec![1, 2], 4, true)
             .unwrap();
         for sid in [busy, parked] {
-            mgr.sessions.get_mut(&sid).unwrap().last_activity = -100.0;
+            mgr.with_session_mut(sid, |s| s.last_activity = -100.0).unwrap();
         }
         let expired = mgr.expire_idle(&mut d);
         assert_eq!(expired, vec![parked], "mid-turn session is immune");
         assert!(mgr.get(busy).is_some());
         // Once aborted the session is parked — and collectable.
         assert_eq!(mgr.abort_turn(busy), Some(rid));
-        mgr.sessions.get_mut(&busy).unwrap().last_activity = -100.0;
+        mgr.with_session_mut(busy, |s| s.last_activity = -100.0).unwrap();
         assert_eq!(mgr.expire_idle(&mut d), vec![busy]);
         assert!(mgr.is_empty());
         assert_eq!(d.metrics.sessions_expired, 2);
@@ -740,7 +977,7 @@ mod tests {
     #[test]
     fn aborted_turn_leaves_history_and_engine_consistent() {
         let mut e = engine();
-        let mut mgr = SessionManager::new();
+        let mgr = SessionManager::new();
         let sid = mgr.create(0);
         mgr.run_turn(&mut e, sid, ModelTarget::Base, (0..64).collect(), 8, true)
             .unwrap();
@@ -762,5 +999,20 @@ mod tests {
         assert!(t.cached_tokens > 0);
         mgr.delete(&mut e, sid).unwrap();
         e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharded_table_spreads_sessions_and_keeps_ids_ascending() {
+        let mgr = SessionManager::new();
+        let ids: Vec<SessionId> = (0..64).map(|_| mgr.create(0)).collect();
+        assert_eq!(mgr.len(), 64);
+        assert_eq!(mgr.ids(), ids, "ids() is ascending and complete");
+        // Sequential ids must not pile onto one shard.
+        let mut per_shard = [0usize; SHARDS];
+        for id in &ids {
+            per_shard[shard_index(*id)] += 1;
+        }
+        let populated = per_shard.iter().filter(|&&n| n > 0).count();
+        assert!(populated > SHARDS / 2, "shard spread: {per_shard:?}");
     }
 }
