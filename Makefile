@@ -38,18 +38,23 @@ bench:
 # Fast end-to-end smoke over the fleet + memory-budget + failover paths:
 # the cluster bench on its quick grid, the adapter-memory figure, the
 # failover figure (kill 1 of 4 replicas mid-burst) in quick mode, the
-# session-scale harness at its quick tier (10^5 concurrent sessions —
-# writes BENCH_scale.json at the repo root; CI uploads it and diffs the
-# p99 TTFT against the committed baseline, advisory), and the
-# handler-contention harness at its quick tier (1..=8 client threads over
-# real HTTP — writes BENCH_concurrency.json; CI diffs only its
-# deterministic session/turn counts).
+# migration figure (migrate-vs-recompute TTFT sweep + fork fan-out) in
+# quick mode, the session-scale harness at its quick tier (10^5
+# concurrent sessions — writes BENCH_scale.json at the repo root; CI
+# uploads it and diffs the p99 TTFT against the committed baseline,
+# advisory), the handler-contention harness at its quick tier (1..=8
+# client threads over real HTTP — writes BENCH_concurrency.json; CI
+# diffs only its deterministic session/turn counts), and the migration
+# harness (writes BENCH_migration.json; CI diffs the long-prefix
+# speedup, advisory).
 bench-smoke:
 	cargo bench --bench bench_cluster -- --quick
 	cargo run --release -- figure --id adapter_memory --quick
 	cargo run --release -- figure --id failover --quick
+	cargo run --release -- figure --id migration --quick
 	cargo bench --bench bench_scale -- --quick
 	cargo bench --bench bench_concurrency -- --quick
+	cargo bench --bench bench_migration -- --quick
 
 # HTTP surface smoke (mirrors the CI step): the HTTP integration suite
 # plus the v1 sessions suite, which includes the streaming smoke

@@ -1,0 +1,78 @@
+//! `bench_migration`: migrate-vs-recompute and fork fan-out (ISSUE 8).
+//!
+//! Runs the `migration` figure's two sweeps — post-failover next-turn
+//! TTFT across prefix lengths with cross-replica block migration on vs
+//! off, and K-way session forking vs K independent sessions — and
+//! writes `BENCH_migration.json` at the repo root. CI runs the `--quick`
+//! tier, uploads the report, and diffs the long-prefix migration speedup
+//! against the committed baseline (advisory only; virtual-time results
+//! are seeded and deterministic, so a real diff means a real behavior
+//! change).
+
+use alora_serve::figures::migration::run_curve;
+use alora_serve::util::bench::section;
+use alora_serve::util::json::Json;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    section(&format!(
+        "migration harness: prefix sweep + fork fan-out ({})",
+        if quick { "quick tier" } else { "full tier" }
+    ));
+    let t0 = std::time::Instant::now();
+    let curve = run_curve(quick);
+    let wall_s = t0.elapsed().as_secs_f64();
+    curve.table.print();
+
+    let long = curve.failover.last().expect("at least one prefix point");
+    let speedup = long.ttft_recompute / long.ttft_migrate;
+    println!(
+        "\nlong-prefix ({} tokens): migrate {:.4}s vs recompute {:.4}s — {speedup:.2}x",
+        long.prefix_tokens, long.ttft_migrate, long.ttft_recompute
+    );
+
+    let failover = curve
+        .failover
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("prefix_tokens", Json::num(p.prefix_tokens as f64)),
+                ("ttft_migrate_s", Json::num(p.ttft_migrate)),
+                ("ttft_recompute_s", Json::num(p.ttft_recompute)),
+                ("migrated_blocks", Json::num(p.migrated_blocks as f64)),
+            ])
+        })
+        .collect();
+    let fork = curve
+        .fork
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("k", Json::num(p.k as f64)),
+                ("ttft_forked_s", Json::num(p.ttft_forked)),
+                ("ttft_independent_s", Json::num(p.ttft_independent)),
+                ("new_blocks_forked", Json::num(p.blocks_forked as f64)),
+                ("new_blocks_independent", Json::num(p.blocks_independent as f64)),
+            ])
+        })
+        .collect();
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("migration")),
+        ("quick", Json::Bool(quick)),
+        ("wall_s", Json::num(wall_s)),
+        ("long_prefix_speedup", Json::num(speedup)),
+        ("failover", Json::Arr(failover)),
+        ("fork", Json::Arr(fork)),
+        (
+            "note",
+            Json::str(
+                "seeded virtual-time run; regenerate with \
+                 `cargo bench --bench bench_migration -- --quick` (make bench-smoke)",
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_migration.json", format!("{report}\n"))
+        .expect("write BENCH_migration.json");
+    println!("wrote BENCH_migration.json");
+}

@@ -44,6 +44,7 @@ use crate::kvcache::chain::ChainRef;
 use crate::kvcache::prefix::{block_hashes, HashContext};
 use crate::metrics::{Metrics, RoutingMetrics};
 use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams, TurnEvent};
+use crate::simulator::CostModel;
 use crate::util::fxmap::FxHashMap;
 use crate::util::json::Json;
 
@@ -105,7 +106,12 @@ impl FailoverReport {
 /// partition — for stickiness the health check degrades that to one
 /// policy-routed (possibly cold) turn. Re-relocation refreshes an id's
 /// age, so forgetting a STILL-RUNNING request's re-home would take 4096
-/// newer requeues landing within its lifetime.
+/// newer requeues landing within its lifetime. Refreshing is O(1): the
+/// id re-enters the order queue under a fresh epoch stamp and its old
+/// entry stays behind as a tombstone, skipped (not acted on) when it
+/// reaches the front — a tombstone transiently dilutes the effective
+/// capacity by one slot until it drains, which only trims the grace
+/// window, never evicts out of order.
 const MAX_RELOCATIONS: usize = 4096;
 
 pub struct Cluster<E: Executor> {
@@ -113,14 +119,19 @@ pub struct Cluster<E: Executor> {
     router: Router,
     /// Per-replica serving state; routing only sees `Up` replicas.
     health: Vec<ReplicaHealth>,
-    /// Failover re-homes: request id → replica it was requeued onto.
-    /// Overrides the construction-time `id % n` mapping for stickiness,
-    /// leases, and event routing. Bounded by [`MAX_RELOCATIONS`]
-    /// (FIFO, `relocation_order`).
-    relocated: FxHashMap<RequestId, usize>,
-    /// Insertion order of `relocated` entries (front = oldest = first
-    /// forgotten past the cap).
-    relocation_order: std::collections::VecDeque<RequestId>,
+    /// Failover re-homes: request id → (replica it was requeued onto,
+    /// epoch of that re-home). Overrides the construction-time `id % n`
+    /// mapping for stickiness, leases, and event routing. Bounded by
+    /// [`MAX_RELOCATIONS`] (FIFO, `relocation_order`); the epoch lets
+    /// eviction tell a live entry from a tombstone left by re-relocation.
+    relocated: FxHashMap<RequestId, (usize, u64)>,
+    /// Insertion order of `relocated` entries, stamped with the epoch of
+    /// the insertion (front = oldest = first forgotten past the cap; an
+    /// entry whose stamp no longer matches the map's is a tombstone and
+    /// is skipped).
+    relocation_order: std::collections::VecDeque<(RequestId, u64)>,
+    /// Monotone stamp source for `relocation_order` entries.
+    relocation_epoch: u64,
     /// Fleet-level registry: the coordinator's per-stage series land here;
     /// `/metrics` renders this merged with every replica's counters.
     metrics: Metrics,
@@ -225,6 +236,13 @@ impl ClusterStats {
                     ("requeued_requests", Json::num(self.routing.requeued_requests as f64)),
                     ("orphaned_leases", Json::num(self.routing.orphaned_leases as f64)),
                     ("resticks", Json::num(self.routing.resticks as f64)),
+                    ("migrations", Json::num(self.routing.migrations as f64)),
+                    ("migrated_blocks", Json::num(self.routing.migrated_blocks as f64)),
+                    (
+                        "migration_recompute_fallbacks",
+                        Json::num(self.routing.migration_recompute_fallbacks as f64),
+                    ),
+                    ("session_forks", Json::num(self.routing.session_forks as f64)),
                     ("imbalance", Json::num(self.routing.imbalance())),
                 ]),
             ),
@@ -316,6 +334,7 @@ impl<E: Executor> Cluster<E> {
             health: vec![ReplicaHealth::Up; n],
             relocated: FxHashMap::default(),
             relocation_order: std::collections::VecDeque::new(),
+            relocation_epoch: 0,
             metrics: Metrics::new(),
         })
     }
@@ -355,7 +374,7 @@ impl<E: Executor> Cluster<E> {
     fn replica_of(&self, id: RequestId) -> usize {
         self.relocated
             .get(&id)
-            .copied()
+            .map(|&(ri, _)| ri)
             .unwrap_or((id.0 % self.replicas.len() as u64) as usize)
     }
 
@@ -421,19 +440,29 @@ impl<E: Executor> Cluster<E> {
         Ok(report)
     }
 
-    /// Record a failover re-home, evicting the oldest entry past the cap
-    /// (see [`MAX_RELOCATIONS`] for the degradation semantics). A
-    /// re-relocated id (its survivor failed too) moves to the BACK of the
-    /// order — its freshest re-home is also its freshest fact, and must
-    /// not be the first forgotten.
+    /// Record a failover re-home, evicting the oldest LIVE entry past the
+    /// cap (see [`MAX_RELOCATIONS`] for the degradation semantics). A
+    /// re-relocated id (its survivor failed too) re-enters the order at
+    /// the BACK under a fresh epoch stamp — its freshest re-home is also
+    /// its freshest fact, and must not be the first forgotten. The stale
+    /// front entry becomes a tombstone (its stamp no longer matches the
+    /// map's) and is skipped at eviction time, so re-relocation is O(1)
+    /// instead of an O(n) scan of the order queue — under a mass requeue
+    /// (a replica failing with thousands of re-homed requests aboard,
+    /// every one of them re-relocating) the old `retain` walk made each
+    /// re-home cost the whole window.
     fn note_relocation(&mut self, id: RequestId, ri: usize) {
-        if self.relocated.insert(id, ri).is_some() {
-            self.relocation_order.retain(|x| *x != id);
-        }
-        self.relocation_order.push_back(id);
-        if self.relocation_order.len() > MAX_RELOCATIONS {
-            if let Some(old) = self.relocation_order.pop_front() {
-                self.relocated.remove(&old);
+        self.relocation_epoch += 1;
+        let epoch = self.relocation_epoch;
+        self.relocated.insert(id, (ri, epoch));
+        self.relocation_order.push_back((id, epoch));
+        while self.relocation_order.len() > MAX_RELOCATIONS {
+            if let Some((old, stamp)) = self.relocation_order.pop_front() {
+                let live =
+                    self.relocated.get(&old).map(|&(_, cur)| cur == stamp).unwrap_or(false);
+                if live {
+                    self.relocated.remove(&old);
+                }
             }
         }
     }
@@ -710,6 +739,55 @@ impl<E: Executor> Cluster<E> {
         }
         views
     }
+
+    /// Ship a leased chain's blocks to `dest` instead of letting the next
+    /// turn recompute them (DESIGN.md §18). The decision is a cost-model
+    /// call on the destination's config: when the modeled transfer time
+    /// beats prefilling the same blocks from token zero, the chain is
+    /// installed into `dest`'s pool under the lease and the transfer time
+    /// is charged on `dest`'s clock — the blocks are unusable before they
+    /// arrive, so the cost lands in the next turn's TTFT exactly like the
+    /// (more expensive) prefill it replaces would have. When the model
+    /// says recompute wins — or the destination cannot take the blocks —
+    /// NOTHING is mutated beyond the fallback counter, so the path is
+    /// bit-identical to a fleet without migration.
+    ///
+    /// Returns the number of blocks installed (0 = recompute fallback).
+    fn migrate_lease_to(&mut self, lease: u64, chain: &ChainRef, dest: usize) -> usize {
+        if chain.is_empty() || self.health[dest] != ReplicaHealth::Up {
+            return 0;
+        }
+        let cm = CostModel::new(&self.replicas[dest].cfg);
+        if !cm.migration_wins(chain.len()) {
+            self.router.stats.migration_recompute_fallbacks += 1;
+            return 0;
+        }
+        // Exactly one replica ever pins a session's chain: drop any stale
+        // copy elsewhere before installing (the draining source keeps its
+        // unpinned committed blocks — same as a lease break — while a
+        // down source already lost everything at `fail_storage`).
+        for (i, r) in self.replicas.iter_mut().enumerate() {
+            if i != dest {
+                r.release_prefix_lease(lease);
+            }
+        }
+        let now = self.clock();
+        let r = &mut self.replicas[dest];
+        if !r.has_work() && r.clock() < now {
+            r.advance_clock_to(now);
+        }
+        let installed = r.install_migrated_lease(lease, chain);
+        if installed == 0 {
+            // No room at the destination: the prefix recomputes on demand.
+            self.router.stats.migration_recompute_fallbacks += 1;
+            return 0;
+        }
+        let arrival = r.clock() + cm.migration_time(installed);
+        r.advance_clock_to(arrival);
+        self.router.stats.migrations += 1;
+        self.router.stats.migrated_blocks += installed as u64;
+        installed
+    }
 }
 
 /// The shared per-replica config summary (replicas are identical by
@@ -891,6 +969,27 @@ impl<E: Executor> EngineDriver for Cluster<E> {
                     if self.router.needs_chain() { &chain } else { &empty };
                 let views = self.views_for_chain(target, score_chain, lease);
                 let placement = self.router.choose(&views);
+                // Drain migration (DESIGN.md §18): if the conversation's
+                // old replica still pins its chain — only a DRAINING
+                // source can; a down one released everything at
+                // `fail_storage` — and this turn extends that chain but
+                // lands elsewhere, ship the pinned blocks to the new home
+                // instead of recomputing them (cost model permitting).
+                if self.replicas[0].cfg.cache.prefix_migration {
+                    if let Some(key) = lease {
+                        let src = (0..self.replicas.len()).find_map(|i| {
+                            self.replicas[i].lease_chain(key).map(|c| (i, c))
+                        });
+                        if let Some((src, leased)) = src {
+                            if src != placement.replica
+                                && !leased.is_empty()
+                                && chain.is_extension_of(&leased)
+                            {
+                                self.migrate_lease_to(key, &leased, placement.replica);
+                            }
+                        }
+                    }
+                }
                 let now = self.clock();
                 let r = &mut self.replicas[placement.replica];
                 if !r.has_work() && r.clock() < now {
@@ -1103,6 +1202,44 @@ impl<E: Executor> EngineDriver for Cluster<E> {
     fn note_resticks(&mut self, n: u64) {
         self.router.stats.resticks += n;
     }
+
+    /// Re-home a session's pinned chain after failover (DESIGN.md §18):
+    /// the destination is the peer's replica when that replica is up (the
+    /// session's requeued turn already landed there, so the blocks must
+    /// follow it), else the routing policy's pick for the chain — chosen
+    /// but NOT recorded, because a migration is not a request placement.
+    /// Gated on `cache.prefix_migration`; off (the default), every call
+    /// returns 0 and the fleet recomputes exactly as before the flag
+    /// existed.
+    fn migrate_lease(&mut self, lease: u64, chain: &ChainRef, peer: Option<RequestId>) -> usize {
+        if !self.replicas[0].cfg.cache.prefix_migration || chain.is_empty() {
+            return 0;
+        }
+        // Decide BEFORE picking a destination: `Router::choose` may
+        // advance policy state (the round-robin cursor), and a declined
+        // migration must leave the fleet bit-identical to one that never
+        // considered migrating. Replicas are identical by construction,
+        // so replica 0's cost model speaks for any destination.
+        if !CostModel::new(&self.replicas[0].cfg).migration_wins(chain.len()) {
+            self.router.stats.migration_recompute_fallbacks += 1;
+            return 0;
+        }
+        let dest = match peer.map(|p| self.replica_of(p)) {
+            Some(ri) if self.health[ri] == ReplicaHealth::Up => ri,
+            _ => {
+                if self.num_healthy() == 0 {
+                    return 0;
+                }
+                let views = self.views_for_chain(ModelTarget::Base, chain, Some(lease));
+                self.router.choose(&views).replica
+            }
+        };
+        self.migrate_lease_to(lease, chain, dest)
+    }
+
+    fn note_session_forks(&mut self, n: u64) {
+        self.router.stats.session_forks += n;
+    }
 }
 
 #[cfg(test)]
@@ -1116,6 +1253,20 @@ mod tests {
     fn cluster(n: usize, policy: RoutePolicy) -> Cluster<SimExecutor> {
         Cluster::from_factory(n, policy, |_| {
             let cfg = presets::granite_8b();
+            let reg = workload::build_registry(2, cfg.model.vocab_size, true);
+            let exec = SimExecutor::new(&cfg);
+            Engine::with_registry(cfg, reg, exec)
+        })
+        .unwrap()
+    }
+
+    /// Two-replica affinity fleet with prefix migration switchable — the
+    /// migration tests run both arms of the flag on otherwise identical
+    /// fleets and compare.
+    fn session_cluster(migrate: bool) -> Cluster<SimExecutor> {
+        Cluster::from_factory(2, RoutePolicy::PrefixAffinity, |_| {
+            let mut cfg = presets::granite_8b();
+            cfg.cache.prefix_migration = migrate;
             let reg = workload::build_registry(2, cfg.model.vocab_size, true);
             let exec = SimExecutor::new(&cfg);
             Engine::with_registry(cfg, reg, exec)
@@ -1565,5 +1716,171 @@ mod tests {
         let routed = c.router().stats.routed.clone();
         assert_eq!(routed, vec![4, 4], "cold uniform load must split evenly");
         c.run_until_idle();
+    }
+
+    #[test]
+    fn relocation_refresh_is_constant_time_and_evicts_in_order() {
+        // ISSUE-8 satellite: re-relocating an id must not scan the order
+        // queue. The refreshed entry re-enters at the back under a fresh
+        // epoch; the stale front entry drains as a tombstone without
+        // forgetting the live re-home.
+        let mut c = cluster(2, RoutePolicy::RoundRobin);
+        let x = RequestId(9); // id % 2 == 1 once forgotten
+        c.note_relocation(x, 0);
+        c.note_relocation(x, 0); // refresh: front entry is now a tombstone
+        assert_eq!(c.replica_of(x), 0);
+        // Fill the window. The tombstone is evicted first (it dilutes
+        // capacity by one slot) but x's live entry — re-stamped at the
+        // back — must survive the whole sweep.
+        for i in 0..(MAX_RELOCATIONS as u64 - 1) {
+            c.note_relocation(RequestId(1_000 + i), 1);
+        }
+        assert_eq!(c.replica_of(x), 0, "refreshed re-home outlives its tombstone");
+        // One more push evicts x's LIVE entry — oldest surviving fact,
+        // forgotten in order — and x resolves back to its partition.
+        c.note_relocation(RequestId(999_999_999), 1);
+        assert_eq!(c.replica_of(x), 1, "past the cap x resolves to id % n");
+        // The map never exceeds the cap.
+        assert!(c.relocated.len() <= MAX_RELOCATIONS);
+    }
+
+    #[test]
+    fn failover_migration_beats_recompute_and_reports_counters() {
+        // ISSUE-8 acceptance (a), long-prefix half: killing a session's
+        // home with migration enabled must make the victim's next turn
+        // strictly faster than the recompute path — the chain is shipped
+        // to the survivor (rebuilt from the host-recoverable checkpoint,
+        // DESIGN.md §18) at a modeled transfer cost instead of being
+        // re-prefilled from token zero.
+        let run = |migrate: bool| {
+            let mut c = session_cluster(migrate);
+            let mut mgr = crate::session::SessionManager::new();
+            let sid = mgr.create(0);
+            let t1 = mgr
+                .run_turn(&mut c, sid, ModelTarget::Base, (0..2048).collect(), 16, true)
+                .unwrap();
+            assert_eq!(t1.cached_tokens, 0);
+            let home = (mgr.get(sid).unwrap().last_request.unwrap().0 % 2) as usize;
+            let report = c.fail_replica(home).unwrap();
+            assert_eq!(report.orphaned_leases, vec![sid.0]);
+            mgr.repair_after_failover(&mut c, &report);
+            let t2 = mgr
+                .run_turn(&mut c, sid, ModelTarget::Base, (3000..3032).collect(), 16, true)
+                .unwrap();
+            let survivor = 1 - home;
+            let committed: Vec<u64> = (0..2)
+                .map(|i| c.replica(i).routing_summary().committed_blocks())
+                .collect();
+            c.replica(survivor).check_invariants().unwrap();
+            let stats = c.router().stats.clone();
+            let json = c.stats().to_json().to_string();
+            mgr.delete(&mut c, sid).unwrap();
+            (t2.ttft_s, t2.cached_tokens, committed, stats, json, home)
+        };
+        let (ttft_m, cached_m, committed_m, stats_m, json_m, home_m) = run(true);
+        let (ttft_r, cached_r, committed_r, stats_r, _, home_r) = run(false);
+        assert_eq!(home_m, home_r, "deterministic placement across arms");
+        assert!(cached_m >= 2048, "migrated chain lands warm: {cached_m}");
+        assert_eq!(cached_r, 0, "recompute path starts cold");
+        assert!(
+            ttft_m < ttft_r,
+            "migration must beat recompute: {ttft_m} vs {ttft_r}"
+        );
+        assert_eq!(stats_m.migrations, 1);
+        assert_eq!(stats_m.migrated_blocks, 129, "2064-token chain = 129 blocks");
+        assert_eq!(stats_m.migration_recompute_fallbacks, 0);
+        assert_eq!(stats_r.migrations, 0);
+        // ISSUE-8 satellite: fleet-wide summary totals match the
+        // fresh-prefill run — migration commits exactly the hashes a
+        // recompute would have, nothing extra, nothing missing.
+        assert_eq!(committed_m, committed_r, "summary symmetry after migration");
+        // Counters surface in the fleet document, not just Prometheus.
+        assert!(json_m.contains("\"migrations\":1"), "{json_m}");
+        assert!(json_m.contains("\"migrated_blocks\":129"), "{json_m}");
+        assert!(json_m.contains("\"migration_recompute_fallbacks\":0"), "{json_m}");
+        assert!(json_m.contains("\"session_forks\":0"), "{json_m}");
+    }
+
+    #[test]
+    fn failover_migration_short_prefix_recomputes_bit_identically() {
+        // ISSUE-8 acceptance (a), short-prefix half: below the cost-model
+        // crossover the fixed transfer setup loses to a short prefill, so
+        // the fallback must leave the serving path bit-identical to a
+        // fleet with migration disabled — same cold turn, same TTFT, same
+        // clock — with only the fallback counter recording the decline.
+        let run = |migrate: bool| {
+            let mut c = session_cluster(migrate);
+            let mut mgr = crate::session::SessionManager::new();
+            let sid = mgr.create(0);
+            mgr.run_turn(&mut c, sid, ModelTarget::Base, (0..64).collect(), 16, true)
+                .unwrap();
+            let home = (mgr.get(sid).unwrap().last_request.unwrap().0 % 2) as usize;
+            let report = c.fail_replica(home).unwrap();
+            mgr.repair_after_failover(&mut c, &report);
+            let t2 = mgr
+                .run_turn(&mut c, sid, ModelTarget::Base, (900..932).collect(), 16, true)
+                .unwrap();
+            let stats = c.router().stats.clone();
+            let clock = c.clock();
+            mgr.delete(&mut c, sid).unwrap();
+            (t2.ttft_s, t2.cached_tokens, clock, stats)
+        };
+        let (ttft_m, cached_m, clock_m, stats_m) = run(true);
+        let (ttft_r, cached_r, clock_r, stats_r) = run(false);
+        assert_eq!(cached_m, 0, "short chain recomputes");
+        assert_eq!(cached_r, 0);
+        assert_eq!(ttft_m, ttft_r, "declined migration must not perturb the sim");
+        assert_eq!(clock_m, clock_r);
+        assert_eq!(stats_m.migrations, 0);
+        assert_eq!(stats_m.migrated_blocks, 0);
+        assert_eq!(stats_m.migration_recompute_fallbacks, 1);
+        assert_eq!(stats_r.migration_recompute_fallbacks, 0);
+    }
+
+    #[test]
+    fn drain_migration_ships_lease_and_keeps_summaries_symmetric() {
+        // Drain path: the old home still holds the pinned chain (planned
+        // maintenance loses nothing), so migration does a live transfer —
+        // the re-stuck turn lands warm on the new home while the lease
+        // moves with it. Without the flag this is the pinned recompute
+        // behavior of `sticky_turn_to_draining_replica_resticks_via_policy`.
+        let run = |migrate: bool| {
+            let mut c = session_cluster(migrate);
+            let mut mgr = crate::session::SessionManager::new();
+            let sid = mgr.create(0);
+            mgr.run_turn(&mut c, sid, ModelTarget::Base, (0..2048).collect(), 16, true)
+                .unwrap();
+            let home = (mgr.get(sid).unwrap().last_request.unwrap().0 % 2) as usize;
+            c.drain_replica(home).unwrap();
+            let t2 = mgr
+                .run_turn(&mut c, sid, ModelTarget::Base, (900..932).collect(), 16, true)
+                .unwrap();
+            let healthy = 1 - home;
+            let leased =
+                (c.replica(home).leased_blocks(), c.replica(healthy).leased_blocks());
+            let committed: Vec<u64> = (0..2)
+                .map(|i| c.replica(i).routing_summary().committed_blocks())
+                .collect();
+            c.replica(home).check_invariants().unwrap();
+            c.replica(healthy).check_invariants().unwrap();
+            let stats = c.router().stats.clone();
+            mgr.delete(&mut c, sid).unwrap();
+            (t2.cached_tokens, t2.ttft_s, leased, committed, stats)
+        };
+        let (cached_m, ttft_m, leased_m, committed_m, stats_m) = run(true);
+        let (cached_r, ttft_r, leased_r, committed_r, stats_r) = run(false);
+        assert!(cached_m >= 2048, "drained home's chain shipped warm: {cached_m}");
+        assert_eq!(cached_r, 0, "without the flag the turn recomputes cold");
+        assert!(ttft_m < ttft_r, "live transfer beats recompute");
+        assert_eq!(leased_m.0, 0, "source pin released by the migration");
+        assert!(leased_m.1 > 0, "destination pins the shipped chain");
+        assert_eq!(leased_m, leased_r, "final lease placement identical either way");
+        assert_eq!(stats_m.migrations, 1);
+        assert_eq!(stats_m.resticks, 1);
+        assert_eq!(stats_r.migrations, 0);
+        // Summary symmetry on BOTH replicas: the drained source keeps its
+        // unpinned committed copy in each arm, the destination ends up
+        // with the same committed set whether installed or recomputed.
+        assert_eq!(committed_m, committed_r, "fleet summaries symmetric");
     }
 }

@@ -105,6 +105,14 @@ pub struct CacheConfig {
     /// pre-paging semantics: every adapter is permanently resident and
     /// weight memory is unaccounted (DESIGN.md §13).
     pub adapter_paging: bool,
+    /// Cross-replica prefix migration (DESIGN.md §18): when true, a
+    /// cluster may ship a session's leased chain to a new home replica —
+    /// at a modeled transfer cost charged to the destination's clock —
+    /// instead of recomputing the prefix after failover, drain, or a
+    /// cross-replica fork, whenever the cost model says transfer beats
+    /// prefill. When false (default), replica moves recompute from token
+    /// zero, exactly as before this switch existed.
+    pub prefix_migration: bool,
 }
 
 impl CacheConfig {
@@ -205,6 +213,10 @@ impl EngineConfig {
                     "adapter_paging" => {
                         cfg.cache.adapter_paging =
                             v.as_bool().unwrap_or(cfg.cache.adapter_paging)
+                    }
+                    "prefix_migration" => {
+                        cfg.cache.prefix_migration =
+                            v.as_bool().unwrap_or(cfg.cache.prefix_migration)
                     }
                     "max_batch_tokens" => {
                         cfg.scheduler.max_batch_tokens =

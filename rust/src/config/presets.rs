@@ -49,6 +49,7 @@ pub fn tiny() -> EngineConfig {
             enable_prefix_caching: true,
             base_aligned_hashing: true,
             adapter_paging: false,
+            prefix_migration: false,
         },
         scheduler: SchedulerConfig {
             max_batch_tokens: 256,
@@ -82,6 +83,7 @@ pub fn granite_8b() -> EngineConfig {
             enable_prefix_caching: true,
             base_aligned_hashing: true,
             adapter_paging: false,
+            prefix_migration: false,
         },
         scheduler: SchedulerConfig {
             max_batch_tokens: 8192,
@@ -115,6 +117,7 @@ pub fn llama_70b() -> EngineConfig {
             enable_prefix_caching: true,
             base_aligned_hashing: true,
             adapter_paging: false,
+            prefix_migration: false,
         },
         scheduler: SchedulerConfig {
             max_batch_tokens: 8192,
@@ -148,6 +151,7 @@ pub fn mistral_large_2() -> EngineConfig {
             enable_prefix_caching: true,
             base_aligned_hashing: true,
             adapter_paging: false,
+            prefix_migration: false,
         },
         scheduler: SchedulerConfig {
             max_batch_tokens: 8192,

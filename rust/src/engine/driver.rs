@@ -133,6 +133,26 @@ pub trait EngineDriver {
         let _ = lease;
     }
 
+    /// Ship a leased chain's blocks to wherever `peer` (the session's
+    /// latest request) now lives, instead of letting the next turn
+    /// recompute the prefix from token zero (DESIGN.md §18). Only a
+    /// multi-replica cluster with `cache.prefix_migration` enabled has
+    /// anywhere to ship to — and even then the migrate-vs-recompute cost
+    /// model may decline — so the default is the universal fallback:
+    /// migrate nothing, recompute as before. Returns blocks installed at
+    /// the destination (0 = recompute path).
+    fn migrate_lease(&mut self, lease: u64, chain: &ChainRef, peer: Option<RequestId>) -> usize {
+        let _ = (lease, chain, peer);
+        0
+    }
+
+    /// Count session forks (`POST /v1/sessions/{id}/fork`); the fleet
+    /// owns the `session_forks_total` counter. No-op off-cluster, like
+    /// [`EngineDriver::note_resticks`].
+    fn note_session_forks(&mut self, n: u64) {
+        let _ = n;
+    }
+
     fn submit_with_priority(
         &mut self,
         target: ModelTarget,

@@ -716,6 +716,26 @@ impl<E: Executor> Engine<E> {
         self.metrics.leased_blocks = self.kv.leased_blocks() as u64;
     }
 
+    /// Destination side of a cross-replica migration (DESIGN.md §18):
+    /// splice a shipped chain's blocks into this replica's pool and
+    /// register them under `lease`. The transfer-time charge and the
+    /// migrate-vs-recompute decision live in `Cluster::migrate_lease`;
+    /// this is only the storage splice. Returns blocks installed.
+    pub(crate) fn install_migrated_lease(&mut self, lease: u64, chain: &ChainRef) -> usize {
+        let installed = self.kv.install_migrated_lease(lease, chain);
+        self.metrics.leased_blocks = self.kv.leased_blocks() as u64;
+        // Freshly allocated blocks went through the pool's allocator, so
+        // the blocks_allocated gauge must not lag the idle-time install.
+        self.refresh_gauges();
+        installed
+    }
+
+    /// The chain a lease currently pins here (None if this replica holds
+    /// no such lease) — the source-side read of a migration.
+    pub(crate) fn lease_chain(&self, lease: u64) -> Option<ChainRef> {
+        self.kv.lease_chain(lease)
+    }
+
     /// Drain finished request records (ownership transferred).
     pub fn take_finished(&mut self) -> Vec<RequestOutput> {
         std::mem::take(&mut self.finished)

@@ -1,0 +1,273 @@
+//! Migration: the last full-prefix recompute, killed (or deliberately
+//! kept — DESIGN.md §18).
+//!
+//! Two sweeps, one story: what does moving a conversation's KV cost
+//! versus rebuilding it?
+//!
+//! Part 1 (`failover` rows): a 2-replica fleet serves one sticky
+//! conversation per prefix length L; its home replica is killed after
+//! the first turn. With `prefix_migration` off, the victim's next turn
+//! re-prefills the whole chain cold on the survivor. With it on, the
+//! repair ships the leased blocks at the cost model's transfer rate
+//! (`migration_bw`, plus `migration_setup`) and charges the time on the
+//! destination clock — the next-turn TTFT is the figure's y-axis. Short
+//! chains sit below the transfer crossover, so the cost model declines
+//! and both arms are bit-identical; long chains migrate and win.
+//!
+//! Part 2 (`fork` rows): fan a parent with a warm prefix out to K
+//! children via `SessionManager::fork` versus opening K independent
+//! conversations with the same history length. Forked children pin the
+//! parent's blocks (zero new prefill blocks) and their first turns ride
+//! the shared prefix warm; independent sessions pay K full prefills.
+
+use crate::cluster::{Cluster, RoutePolicy};
+use crate::config::{presets, EngineConfig};
+use crate::engine::Engine;
+use crate::pipeline::workload;
+use crate::request::ModelTarget;
+use crate::session::SessionManager;
+use crate::simulator::SimExecutor;
+
+use super::Table;
+
+pub const REPLICAS: usize = 2;
+
+/// One prefix-length point of the failover sweep.
+pub struct MigratePoint {
+    pub prefix_tokens: usize,
+    /// Victim's next-turn TTFT with migration on / off.
+    pub ttft_migrate: f64,
+    pub ttft_recompute: f64,
+    /// Blocks the migrate arm actually shipped (0 = cost model declined
+    /// and fell back to recompute).
+    pub migrated_blocks: u64,
+}
+
+/// One fan-out point of the fork sweep.
+pub struct ForkPoint {
+    pub k: usize,
+    /// Mean first-turn TTFT of the K children / K independent sessions.
+    pub ttft_forked: f64,
+    pub ttft_independent: f64,
+    /// New KV blocks allocated to serve the K branches.
+    pub blocks_forked: u64,
+    pub blocks_independent: u64,
+}
+
+/// The measured curves, exposed for the acceptance assertions.
+pub struct MigrationCurve {
+    pub table: Table,
+    pub failover: Vec<MigratePoint>,
+    pub fork: Vec<ForkPoint>,
+}
+
+fn engine(migrate: bool) -> Engine<SimExecutor> {
+    let mut cfg: EngineConfig = presets::by_name("granite-8b").expect("preset");
+    cfg.cache.base_aligned_hashing = true;
+    cfg.cache.prefix_migration = migrate;
+    let reg = workload::build_registry(2, cfg.model.vocab_size, true);
+    let exec = SimExecutor::new(&cfg);
+    Engine::with_registry(cfg, reg, exec)
+}
+
+/// Kill-and-next-turn for one prefix length on one arm: returns the
+/// victim conversation's post-failover TTFT, its cached tokens, and the
+/// blocks migrated.
+fn failover_arm(prefix: usize, migrate: bool) -> (f64, usize, u64) {
+    let mut c: Cluster<SimExecutor> =
+        Cluster::from_factory(REPLICAS, RoutePolicy::PrefixAffinity, |_| engine(migrate))
+            .expect("cluster construction");
+    let mgr = SessionManager::new();
+    let sid = mgr.create(0);
+    let base = 10_000u32;
+    mgr.run_turn(&mut c, sid, ModelTarget::Base, (base..base + prefix as u32).collect(), 16, true)
+        .expect("first turn");
+    let home = (0..REPLICAS)
+        .find(|&i| c.replica(i).leased_blocks() > 0)
+        .expect("lease pinned on the home replica");
+    let report = c.fail_replica(home).expect("failover");
+    mgr.repair_after_failover(&mut c, &report);
+    let rec = mgr
+        .run_turn(&mut c, sid, ModelTarget::Base, vec![77; 32], 16, true)
+        .expect("post-failover turn");
+    (rec.ttft_s, rec.cached_tokens, c.router().stats.migrated_blocks)
+}
+
+/// Fork-vs-independent for one fan-out K: (mean TTFT forked, blocks
+/// forked, mean TTFT independent, blocks independent).
+fn fork_arm(k: usize, history: usize) -> ForkPoint {
+    // Forked: one parent prefill, K children riding it.
+    let mut e = engine(false);
+    let mgr = SessionManager::new();
+    let parent = mgr.create(0);
+    mgr.run_turn(&mut e, parent, ModelTarget::Base, (0..history as u32).collect(), 16, true)
+        .expect("parent turn");
+    let before = e.metrics.blocks_allocated;
+    let kids = mgr.fork(&mut e, parent, k, &[]).expect("fork");
+    let mut ttft_forked = 0.0;
+    for (i, kid) in kids.iter().enumerate() {
+        let rec = mgr
+            .run_turn(&mut e, *kid, ModelTarget::Base, vec![900 + i as u32; 16], 8, true)
+            .expect("child turn");
+        ttft_forked += rec.ttft_s;
+    }
+    let blocks_forked = e.metrics.blocks_allocated - before;
+
+    // Independent: K sessions, each with its own (distinct) history of
+    // the same length plus the same 16-token tail — K full prefills.
+    let mut e2 = engine(false);
+    let mgr2 = SessionManager::new();
+    let before2 = e2.metrics.blocks_allocated;
+    let mut ttft_independent = 0.0;
+    for i in 0..k {
+        let sid = mgr2.create(0);
+        let base = (i as u32 + 1) * 100_000;
+        let mut prompt: Vec<u32> = (base..base + history as u32).collect();
+        prompt.extend(std::iter::repeat(900 + i as u32).take(16));
+        let rec = mgr2
+            .run_turn(&mut e2, sid, ModelTarget::Base, prompt, 8, true)
+            .expect("independent turn");
+        ttft_independent += rec.ttft_s;
+    }
+    let blocks_independent = e2.metrics.blocks_allocated - before2;
+
+    ForkPoint {
+        k,
+        ttft_forked: ttft_forked / k as f64,
+        ttft_independent: ttft_independent / k as f64,
+        blocks_forked,
+        blocks_independent,
+    }
+}
+
+pub fn run_curve(quick: bool) -> MigrationCurve {
+    // 128 sits below the transfer crossover (the cost model declines and
+    // recomputes); everything above it migrates.
+    let lens: Vec<usize> =
+        if quick { vec![128, 2048] } else { vec![128, 256, 512, 1024, 2048, 4096, 8192] };
+    let ks: Vec<usize> = if quick { vec![2, 4] } else { vec![2, 4, 8, 16] };
+
+    let mut table = Table::new(
+        "migration",
+        &format!(
+            "cross-replica prefix migration vs recompute after failover \
+             ({REPLICAS} replicas), and K-way session forking vs K \
+             independent sessions"
+        ),
+        &[
+            "case",
+            "prefix_tokens",
+            "k",
+            "ttft_migrate_s",
+            "ttft_recompute_s",
+            "migrated_blocks",
+            "new_blocks_forked",
+            "new_blocks_independent",
+        ],
+    );
+
+    let mut failover = Vec::with_capacity(lens.len());
+    for &prefix in &lens {
+        let (ttft_migrate, _cached_m, migrated_blocks) = failover_arm(prefix, true);
+        let (ttft_recompute, _cached_r, _) = failover_arm(prefix, false);
+        table.push(
+            &["failover".into()],
+            &[
+                prefix as f64,
+                0.0,
+                ttft_migrate,
+                ttft_recompute,
+                migrated_blocks as f64,
+                0.0,
+                0.0,
+            ],
+        );
+        failover.push(MigratePoint { prefix_tokens: prefix, ttft_migrate, ttft_recompute, migrated_blocks });
+    }
+
+    let history = 1024;
+    let mut fork = Vec::with_capacity(ks.len());
+    for &k in &ks {
+        let p = fork_arm(k, history);
+        table.push(
+            &["fork".into()],
+            &[
+                history as f64,
+                k as f64,
+                p.ttft_forked,
+                p.ttft_independent,
+                0.0,
+                p.blocks_forked as f64,
+                p.blocks_independent as f64,
+            ],
+        );
+        fork.push(p);
+    }
+
+    MigrationCurve { table, failover, fork }
+}
+
+pub fn run(quick: bool) -> Table {
+    run_curve(quick).table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn long_prefixes_migrate_and_win_short_ones_recompute_identically() {
+        let curve = run_curve(true);
+        let short = &curve.failover[0];
+        let long = curve.failover.last().unwrap();
+        // Below the crossover the cost model declines: zero blocks moved
+        // and the recompute arm is reproduced exactly.
+        assert_eq!(short.migrated_blocks, 0, "short prefix must not migrate");
+        assert_eq!(
+            short.ttft_migrate, short.ttft_recompute,
+            "declined migration must be bit-identical to recompute"
+        );
+        // Above it the transfer is strictly cheaper than the re-prefill.
+        assert!(long.migrated_blocks > 0, "long prefix must migrate");
+        assert!(
+            long.ttft_migrate < long.ttft_recompute,
+            "migration lost to recompute at {} tokens: {:.4}s vs {:.4}s",
+            long.prefix_tokens,
+            long.ttft_migrate,
+            long.ttft_recompute
+        );
+    }
+
+    #[test]
+    fn forking_beats_independent_sessions_on_blocks_and_ttft() {
+        let curve = run_curve(true);
+        for p in &curve.fork {
+            // Children allocate only their own divergent tails; the
+            // shared prefix is pinned, not re-prefilled. Independent
+            // sessions pay ~K × the full history in fresh blocks.
+            assert!(
+                p.blocks_forked < p.blocks_independent / 2,
+                "k={}: forked {} vs independent {} blocks",
+                p.k,
+                p.blocks_forked,
+                p.blocks_independent
+            );
+            assert!(
+                p.ttft_forked < p.ttft_independent,
+                "k={}: warm fork TTFT {:.4}s vs cold {:.4}s",
+                p.k,
+                p.ttft_forked,
+                p.ttft_independent
+            );
+        }
+    }
+
+    #[test]
+    fn table_shape() {
+        let t = run(true);
+        assert_eq!(t.rows.len(), 4); // 2 prefix points + 2 fan-outs
+        for v in t.col("ttft_migrate_s") {
+            assert!(v > 0.0);
+        }
+    }
+}

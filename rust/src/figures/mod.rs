@@ -17,7 +17,9 @@
 //! adapter_memory (ours): adapter-count × memory-budget sweep of the
 //! unified KV + adapter-weight budget vs the always-resident baseline ·
 //! failover (ours): kill one of four replicas mid-burst — per-round
-//! hit-rate dip and re-warm, zero lost requests.
+//! hit-rate dip and re-warm, zero lost requests · migration (ours):
+//! migrate-vs-recompute next-turn TTFT across prefix lengths after a
+//! home-replica kill, plus K-way fork fan-out vs K independent sessions.
 
 pub mod ablations;
 pub mod adapter_memory;
@@ -33,6 +35,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod migration;
 pub mod scale;
 pub mod table1;
 pub mod table2;
@@ -236,6 +239,7 @@ pub fn run_all(quick: bool) -> Vec<Table> {
     out.push(cluster_scaling::run(quick));
     out.push(adapter_memory::run(quick));
     out.push(failover::run(quick));
+    out.push(migration::run(quick));
     out
 }
 
@@ -257,6 +261,7 @@ pub fn run_by_id(id: &str, quick: bool) -> Vec<Table> {
         "cluster" | "cluster_scaling" => vec![cluster_scaling::run(quick)],
         "adapter_memory" => vec![adapter_memory::run(quick)],
         "failover" => vec![failover::run(quick)],
+        "migration" => vec![migration::run(quick)],
         "ablations" => ablations::run_all(),
         // Deliberately not part of `all`: the scale and concurrency
         // harnesses are long-running bench-tier figures (like
@@ -265,7 +270,8 @@ pub fn run_by_id(id: &str, quick: bool) -> Vec<Table> {
         "concurrency" => vec![concurrency::run(quick)],
         other => panic!(
             "unknown figure id `{other}` (try table1, fig6..fig15, cluster, \
-             adapter_memory, failover, ablations, scale, concurrency, all)"
+             adapter_memory, failover, migration, ablations, scale, \
+             concurrency, all)"
         ),
     }
 }

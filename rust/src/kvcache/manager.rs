@@ -216,6 +216,57 @@ impl KvCacheManager {
         total
     }
 
+    /// Splice a migrated chain into this replica (DESIGN.md §18): the
+    /// destination side of `Cluster::migrate_lease`. For each hash in
+    /// order, an already-cached block is pinned (the dedup case — the
+    /// destination already had some of the prefix committed) and a
+    /// missing one is allocated and committed as the transferred KV
+    /// lands, stopping at pool exhaustion (a partial prefix is still a
+    /// head start). The installed span is registered as a lease exactly
+    /// like `acquire_lease` would, so refcounts, the reclaim order, the
+    /// routing summary (+1 per newly committed hash) and the tracked
+    /// chain all stay symmetric with the native-prefill path. Returns
+    /// blocks installed (0 = nothing transferable / caching disabled).
+    pub fn install_migrated_lease(&mut self, lease: u64, chain: &ChainRef) -> usize {
+        if !self.enable_prefix_caching || chain.is_empty() {
+            return 0;
+        }
+        // A stale local lease under the same key (e.g. a pre-divergence
+        // copy) is replaced wholesale, mirroring acquire_lease's diverged
+        // path.
+        self.release_lease(lease);
+        let mut blocks = Vec::new();
+        for h in chain.hashes() {
+            if let Some(b) = self.pool.pin(h) {
+                blocks.push(b);
+            } else if let Some(b) = self.pool.alloc() {
+                self.pool.commit_hash(b, h);
+                blocks.push(b);
+            } else {
+                break;
+            }
+        }
+        let n = blocks.len();
+        if n == 0 {
+            return 0;
+        }
+        self.stats.leases_acquired += 1;
+        self.stats.lease_blocks_pinned += n as u64;
+        let pinned_chain = chain.prefix(n);
+        self.leases.insert(lease, Lease { blocks, chain: pinned_chain });
+        self.lease_order.retain(|l| *l != lease);
+        self.lease_order.push(lease);
+        // Track the full chain for routing affinity, as acquire_lease does.
+        self.pool.track_chain(lease, chain);
+        n
+    }
+
+    /// The chain a lease currently pins (None for unknown keys) — the
+    /// source-side read of a migration: which hashes to ship.
+    pub fn lease_chain(&self, lease: u64) -> Option<ChainRef> {
+        self.leases.get(&lease).map(|l| l.chain.clone())
+    }
+
     /// Release a lease's pins (session deleted, or re-acquire). Unknown
     /// lease keys are a no-op (a cluster broadcasts releases).
     pub fn release_lease(&mut self, lease: u64) {
@@ -1027,6 +1078,108 @@ mod tests {
             prop_assert!(m.num_leases() == 0, "leases linger");
             Ok(())
         });
+    }
+
+    #[test]
+    fn fork_shared_lease_refcounts_drain_across_replicas() {
+        // Fork leak pin (ISSUE 8 satellite): K children forked from one
+        // parent all lease the SAME interned chain — on the home replica
+        // as pure refcount pins, and on a second replica via the
+        // migration splice. Releasing every lease in seeded-random order
+        // across both managers must drain both leased gauges to exactly
+        // zero, and once the last handle drops the arena must hold no
+        // node of the chain: the shared prefix is refcounted, never
+        // copied, and never leaked. Hashes carry a unique tag byte so
+        // concurrently-running tests can't perturb the arena count.
+        fn tagged(x: u64) -> BlockHash {
+            BlockHash(0xB8u64 << 56 | x)
+        }
+        fn count_tag() -> usize {
+            crate::kvcache::chain::arena_count_nodes(|h| h.0 >> 56 == 0xB8)
+        }
+        let live0 = count_tag();
+        let hs: Vec<BlockHash> = (0..6u64).map(tagged).collect();
+        {
+            let chain = ch(&hs);
+            let mut a = mgr(8); // home replica
+            let mut b = mgr(8); // migration destination
+            // Commit the prefix on the home replica via the normal
+            // request flow (the parent's prefill).
+            a.start_request(1, &chain, 96);
+            assert!(a.ensure_capacity(1, 96));
+            a.commit_full_blocks(1, &chain);
+            a.free_request(1);
+            let free_a = a.num_free_blocks();
+            // Parent + 3 same-replica children: each lease pins the same
+            // six physical blocks — zero new allocations (acceptance (b)
+            // at the pool level).
+            let keys_a = [100u64, 101, 102, 103];
+            for &k in &keys_a {
+                assert_eq!(a.acquire_lease(k, &chain), 6);
+            }
+            assert_eq!(a.num_free_blocks(), free_a, "fork allocated blocks");
+            assert_eq!(a.leased_blocks(), 24, "per-lease gauge counts each pin");
+            assert_eq!(a.leased_distinct_blocks(), 6, "one physical copy");
+            // A fourth child lands cross-replica: the migration splice
+            // installs the same chain cold on B.
+            assert_eq!(b.install_migrated_lease(200, &chain), 6);
+            assert_eq!(b.leased_blocks(), 6);
+            assert_eq!(b.routing_summary().matching_prefix(&hs), 6);
+            // Release all five leases in seeded-random order, interleaved
+            // across the two replicas.
+            let mut work: Vec<(usize, u64)> =
+                keys_a.iter().map(|&k| (0, k)).collect();
+            work.push((1, 200));
+            crate::util::rng::Rng::new(0xB8).shuffle(&mut work);
+            for (replica, key) in work {
+                let m = if replica == 0 { &mut a } else { &mut b };
+                m.release_lease(key);
+                m.check_invariants().unwrap();
+            }
+            assert_eq!(a.leased_blocks(), 0, "home pins linger");
+            assert_eq!(b.leased_blocks(), 0, "migrated pins linger");
+            assert_eq!(a.num_leases(), 0);
+            assert_eq!(b.num_leases(), 0);
+            // Releasing unpins without evicting: both replicas still
+            // serve the prefix from cache.
+            assert_eq!(a.routing_summary().matching_prefix(&hs), 6);
+            assert_eq!(b.routing_summary().matching_prefix(&hs), 6);
+        }
+        // Managers and the local handle dropped: every refcount the fork
+        // fan-out took has been given back.
+        assert_eq!(count_tag(), live0, "fork-shared chain leaked arena nodes");
+    }
+
+    #[test]
+    fn migrated_lease_install_is_idempotent_and_degrades_at_exhaustion() {
+        // The destination-side splice: re-installing the same chain under
+        // the same key replaces (not stacks) the lease; a full pool
+        // installs only the prefix that fits; a caching-disabled replica
+        // declines outright (the cluster then falls back to recompute).
+        let mut m = mgr(4);
+        let t = toks(64);
+        let hs = block_hashes(&t, 16, &HashContext::base());
+        assert_eq!(m.install_migrated_lease(7, &ch(&hs)), 4);
+        assert_eq!(m.install_migrated_lease(7, &ch(&hs)), 4, "idempotent");
+        assert_eq!(m.num_leases(), 1);
+        assert_eq!(m.leased_blocks(), 4);
+        m.check_invariants().unwrap();
+        m.release_lease(7);
+        // Exhaustion: a second, disjoint chain finds no free blocks left
+        // to overwrite while the first is pinned... so only dedup'd
+        // prefixes install.
+        assert_eq!(m.install_migrated_lease(8, &ch(&hs)), 4);
+        let t2: Vec<u32> = (0..64).map(|i| 30_000 + i).collect();
+        let hs2 = block_hashes(&t2, 16, &HashContext::base());
+        assert_eq!(m.install_migrated_lease(9, &ch(&hs2)), 0, "pool exhausted");
+        assert_eq!(m.num_leases(), 1, "no phantom lease registered");
+        m.release_lease(8);
+        m.check_invariants().unwrap();
+        // Caching disabled: nothing to splice into.
+        let mut off = KvCacheManager::new(8, 16, false);
+        assert_eq!(off.install_migrated_lease(1, &ch(&hs)), 0);
+        assert_eq!(off.num_leases(), 0);
+        off.check_invariants().unwrap();
     }
 
     #[test]

@@ -96,6 +96,16 @@ pub struct RoutingMetrics {
     /// Sticky turns whose conversation replica was down/draining and were
     /// re-placed through the routing policy instead (re-stick).
     pub resticks: u64,
+    /// Cross-replica prefix migrations performed (transfer beat prefill).
+    pub migrations: u64,
+    /// KV blocks installed at destinations by those migrations.
+    pub migrated_blocks: u64,
+    /// Migration attempts the cost model (or pool pressure) declined —
+    /// the session recomputed its prefix instead, exactly as before
+    /// migration existed.
+    pub migration_recompute_fallbacks: u64,
+    /// Child sessions created by `POST /v1/sessions/{id}/fork`.
+    pub session_forks: u64,
 }
 
 impl RoutingMetrics {
@@ -149,6 +159,10 @@ impl RoutingMetrics {
             ("requeued_requests_total", "Requests requeued onto survivors at failover", self.requeued_requests),
             ("orphaned_leases_total", "Session prefix leases lost to replica failure", self.orphaned_leases),
             ("resticks_total", "Sticky turns re-placed after their replica died or drained", self.resticks),
+            ("migrations_total", "Cross-replica prefix migrations performed", self.migrations),
+            ("migrated_blocks_total", "KV blocks installed at destinations by migrations", self.migrated_blocks),
+            ("migration_recompute_fallbacks_total", "Migration attempts declined by the cost model", self.migration_recompute_fallbacks),
+            ("session_forks_total", "Child sessions created by session fork", self.session_forks),
         ] {
             s.push_str(&format!(
                 "# HELP alora_serve_{name} {help}\n# TYPE alora_serve_{name} counter\nalora_serve_{name} {v}\n"

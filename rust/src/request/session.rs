@@ -97,6 +97,11 @@ pub struct Session {
     /// Virtual-clock stamp of the last turn submitted or completed (or
     /// session creation) — what idle-TTL expiry measures against.
     pub last_activity: f64,
+    /// The target a forked child was created to serve (None = plain
+    /// session, runs base). Turns that don't name an adapter run against
+    /// this, so a K-way fork over K adapters needs no per-turn adapter
+    /// plumbing in the client.
+    pub preferred_target: Option<ModelTarget>,
 }
 
 impl Session {
@@ -111,6 +116,34 @@ impl Session {
             last_request: None,
             leased_blocks: 0,
             last_activity: 0.0,
+            preferred_target: None,
+        }
+    }
+
+    /// Child session created by a fork (`POST /v1/sessions/{id}/fork`):
+    /// shares the parent's accumulated tokens and — O(1), the chain is
+    /// arena-interned — its hash-chain handle, so K children reference ONE
+    /// copy of the conversation prefix instead of K. Turn records and
+    /// in-flight state start fresh (the fork point begins a new branch);
+    /// stickiness inherits the parent's last request so the child's first
+    /// turn lands on the replica where the prefix lives.
+    pub fn forked(
+        id: SessionId,
+        parent: &Session,
+        preferred_target: Option<ModelTarget>,
+        now: f64,
+    ) -> Self {
+        Session {
+            id,
+            cache_salt: parent.cache_salt,
+            tokens: parent.tokens.clone(),
+            chain: parent.chain.clone(),
+            turns: Vec::new(),
+            pending: None,
+            last_request: parent.last_request,
+            leased_blocks: 0,
+            last_activity: now,
+            preferred_target,
         }
     }
 
@@ -434,6 +467,39 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn forked_child_shares_history_and_chain_but_not_turn_state() {
+        use crate::adapter::AdapterId;
+        let mut s = Session::new(SessionId(5), 3);
+        s.note_submitted(RequestId(1), ModelTarget::Base, (0..40).collect(), true, 40);
+        s.apply_finished(&out(1, vec![7, 8], 0)).unwrap();
+        let parent_chain = s.cached_chain(4);
+        let child = Session::forked(
+            SessionId(6),
+            &s,
+            Some(ModelTarget::Adapter(AdapterId(1))),
+            2.5,
+        );
+        assert_eq!(child.id, SessionId(6));
+        assert_eq!(child.cache_salt, s.cache_salt, "tenant salt inherited");
+        assert_eq!(child.tokens(), s.tokens(), "history shared at the fork point");
+        assert_eq!(child.num_turns(), 0, "turn records start fresh");
+        assert_eq!(child.in_flight(), None);
+        assert_eq!(child.leased_blocks, 0, "pins are the manager's to take");
+        assert_eq!(child.last_request, s.last_request, "stickiness inherited");
+        assert_eq!(child.last_activity, 2.5);
+        assert_eq!(child.preferred_target, Some(ModelTarget::Adapter(AdapterId(1))));
+        // The chain handle was cloned, not rebuilt: same interned hashes.
+        let mut child = child;
+        assert_eq!(child.cached_chain(4).hashes(), parent_chain.hashes());
+        // The branch is independent: a child turn must not touch the parent.
+        let p = child.compose_prompt(&[9]).unwrap();
+        child.note_submitted(RequestId(2), ModelTarget::Base, vec![9], true, p.len());
+        child.apply_finished(&out(2, vec![1], 0)).unwrap();
+        assert_eq!(s.history_len(), 42);
+        assert_eq!(child.history_len(), 44, "child branch diverged alone");
     }
 
     #[test]

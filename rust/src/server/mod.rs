@@ -35,6 +35,11 @@
 //!     -> turn summary JSON; with "stream": true -> chunked SSE events
 //!        (`started`, `token`*, `finished`) whose token sequence is
 //!        byte-identical to the non-streaming `tokens`
+//!   POST   /v1/sessions/{id}/fork    {"count": 4 (opt, default 1),
+//!                                     "adapters": [name|null, ...] (opt)}
+//!     -> {"parent", "count", "children": [{"session", "adapter"}]} —
+//!        K children sharing the parent's history and cached prefix
+//!        (zero-copy refcount pins; DESIGN.md §18)
 //!   GET    /v1/sessions              {"sessions": [ids], "count": n}
 //!   GET    /v1/sessions/{id}         session document (history, turns)
 //!   DELETE /v1/sessions/{id}         close + release the prefix lease
@@ -795,7 +800,7 @@ fn route<D: EngineDriver>(method: &str, path: &str, body: &[u8], shared: &Shared
             }
             "/v1/sessions" => from_result(v1::list_sessions(shared)),
             p => match parse_session_path(p) {
-                Some((sid, false)) => from_result(v1::get_session(shared, sid)),
+                Some((sid, SessionRoute::Root)) => from_result(v1::get_session(shared, sid)),
                 _ => full_err(ApiError::not_found("not_found", format!("no route for GET {p}"))),
             },
         },
@@ -839,11 +844,14 @@ fn route<D: EngineDriver>(method: &str, path: &str, body: &[u8], shared: &Shared
                 }
                 "/v1/sessions" => from_result(v1::create_session(&j, shared)),
                 p => match parse_session_path(p) {
-                    Some((sid, true)) => match v1::parse_turn(&j) {
+                    Some((sid, SessionRoute::Turns)) => match v1::parse_turn(&j) {
                         Err(e) => full_err(e),
                         Ok(turn) if turn.stream => Reply::TurnStream { session: sid, turn },
                         Ok(turn) => from_result(v1::run_turn(shared, sid, turn)),
                     },
+                    Some((sid, SessionRoute::Fork)) => {
+                        from_result(v1::fork_session(&j, shared, sid))
+                    }
                     _ => full_err(ApiError::not_found(
                         "not_found",
                         format!("no route for POST {p}"),
@@ -852,7 +860,7 @@ fn route<D: EngineDriver>(method: &str, path: &str, body: &[u8], shared: &Shared
             }
         }
         "DELETE" => match parse_session_path(path) {
-            Some((sid, false)) => from_result(v1::delete_session(shared, sid)),
+            Some((sid, SessionRoute::Root)) => from_result(v1::delete_session(shared, sid)),
             _ => full_err(ApiError::not_found(
                 "not_found",
                 format!("no route for DELETE {path}"),
@@ -930,17 +938,33 @@ fn replica_action<D: EngineDriver>(
     }
 }
 
-/// Parse `/v1/sessions/{id}` and `/v1/sessions/{id}/turns` paths into
-/// (id, is_turns). None for anything else.
-fn parse_session_path(path: &str) -> Option<(u64, bool)> {
+/// The sub-resource a `/v1/sessions/{id}[/...]` path addresses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SessionRoute {
+    /// `/v1/sessions/{id}` — the session document itself.
+    Root,
+    /// `/v1/sessions/{id}/turns` — submit a delta turn.
+    Turns,
+    /// `/v1/sessions/{id}/fork` — fork K prefix-sharing children.
+    Fork,
+}
+
+/// Parse `/v1/sessions/{id}`, `/v1/sessions/{id}/turns` and
+/// `/v1/sessions/{id}/fork` paths. None for anything else.
+fn parse_session_path(path: &str) -> Option<(u64, SessionRoute)> {
     let rest = path.strip_prefix("/v1/sessions/")?;
     let mut parts = rest.split('/');
     let id: u64 = parts.next()?.parse().ok()?;
-    match parts.next() {
-        None => Some((id, false)),
-        Some("turns") if parts.next().is_none() => Some((id, true)),
-        _ => None,
+    let route = match parts.next() {
+        None => return Some((id, SessionRoute::Root)),
+        Some("turns") => SessionRoute::Turns,
+        Some("fork") => SessionRoute::Fork,
+        _ => return None,
+    };
+    if parts.next().is_some() {
+        return None;
     }
+    Some((id, route))
 }
 
 /// Parse the optional multi-tenant `cache_salt` field: a raw u64, or a
@@ -1857,12 +1881,98 @@ mod tests {
 
     #[test]
     fn session_path_parser() {
-        assert_eq!(parse_session_path("/v1/sessions/3"), Some((3, false)));
-        assert_eq!(parse_session_path("/v1/sessions/3/turns"), Some((3, true)));
+        assert_eq!(parse_session_path("/v1/sessions/3"), Some((3, SessionRoute::Root)));
+        assert_eq!(
+            parse_session_path("/v1/sessions/3/turns"),
+            Some((3, SessionRoute::Turns))
+        );
+        assert_eq!(
+            parse_session_path("/v1/sessions/3/fork"),
+            Some((3, SessionRoute::Fork))
+        );
         assert_eq!(parse_session_path("/v1/sessions/x"), None);
         assert_eq!(parse_session_path("/v1/sessions/3/other"), None);
         assert_eq!(parse_session_path("/v1/sessions/3/turns/4"), None);
+        assert_eq!(parse_session_path("/v1/sessions/3/fork/2"), None);
         assert_eq!(parse_session_path("/v2/sessions/3"), None);
+    }
+
+    /// `POST /v1/sessions/{id}/fork` end to end: children share the
+    /// parent's history, a per-child adapter becomes that child's
+    /// default turn target, and validation rejects garbage before any
+    /// child exists.
+    #[test]
+    fn fork_endpoint_creates_prefix_sharing_children() {
+        let mut srv = start_sim_server();
+        let addr = srv.addr();
+        let r = post(addr, "/v1/sessions", r#"{"cache_salt": 5}"#);
+        assert!(r.contains("200 OK"), "{r}");
+        let sid = body_json(&r).get("session").and_then(Json::as_u64).unwrap();
+        let tokens: Vec<String> = (0..64).map(|t| (t % 4000).to_string()).collect();
+        let r = post(
+            addr,
+            &format!("/v1/sessions/{sid}/turns"),
+            &format!(r#"{{"tokens": [{}], "max_new_tokens": 2}}"#, tokens.join(",")),
+        );
+        assert!(r.contains("200 OK"), "{r}");
+        let history = body_json(&r).get("prompt_len").and_then(Json::as_u64).unwrap() + 2;
+
+        // Fork 3 ways: child 0 pinned to alora-0, children 1–2 plain.
+        let r = post(
+            addr,
+            &format!("/v1/sessions/{sid}/fork"),
+            r#"{"count": 3, "adapters": ["alora-0", null]}"#,
+        );
+        assert!(r.contains("200 OK"), "{r}");
+        let j = body_json(&r);
+        assert_eq!(j.get("parent").and_then(Json::as_u64), Some(sid));
+        assert_eq!(j.get("count").and_then(Json::as_u64), Some(3));
+        let kids = j.get("children").and_then(Json::as_arr).unwrap();
+        assert_eq!(kids.len(), 3);
+        assert_eq!(
+            kids[0].get("adapter").and_then(Json::as_str),
+            Some("alora-0"),
+            "{j}"
+        );
+        assert!(matches!(kids[1].get("adapter"), Some(Json::Null)));
+        let child0 = kids[0].get("session").and_then(Json::as_u64).unwrap();
+        let child1 = kids[1].get("session").and_then(Json::as_u64).unwrap();
+
+        // Children carry the parent's full history, zero turns of their own.
+        let r = http(addr, &format!("GET /v1/sessions/{child1} HTTP/1.1\r\nHost: x\r\n\r\n"));
+        let doc = body_json(&r);
+        assert_eq!(doc.get("history_len").and_then(Json::as_u64), Some(history));
+        assert_eq!(doc.get("turns").and_then(Json::as_arr).map(Vec::len), Some(0));
+
+        // A turn on child 0 with no adapter in the body runs the child's
+        // preferred target — the fork-time adapter, not base.
+        let r = post(
+            addr,
+            &format!("/v1/sessions/{child0}/turns"),
+            r#"{"tokens": [9, 9, 9], "max_new_tokens": 2}"#,
+        );
+        assert!(r.contains("200 OK"), "{r}");
+        assert_eq!(
+            body_json(&r).get("adapter").and_then(Json::as_str),
+            Some("alora-0"),
+            "forked child must default to its preferred adapter"
+        );
+
+        // Validation: unknown parent 404s, silly counts and unknown
+        // adapters reject without creating children.
+        let before = srv.shared.sessions.len();
+        let r = post(addr, "/v1/sessions/999/fork", r#"{"count": 1}"#);
+        assert!(r.contains("404"), "{r}");
+        let r = post(addr, &format!("/v1/sessions/{sid}/fork"), r#"{"count": 0}"#);
+        assert!(r.contains("400"), "{r}");
+        let r = post(
+            addr,
+            &format!("/v1/sessions/{sid}/fork"),
+            r#"{"count": 1, "adapters": ["nope"]}"#,
+        );
+        assert!(r.contains("404"), "{r}");
+        assert_eq!(srv.shared.sessions.len(), before, "failed forks leak sessions");
+        srv.shutdown();
     }
 
     /// The lock-split smoke test (ISSUE 7 satellite): 8 handler threads

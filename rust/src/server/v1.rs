@@ -176,6 +176,99 @@ pub(crate) fn delete_session<D: EngineDriver>(
     })
 }
 
+/// Cap on `POST /v1/sessions/{id}/fork` fan-out — one request may not
+/// pin an unbounded multiple of the parent's prefix.
+const MAX_FORK_CHILDREN: usize = 64;
+
+/// `POST /v1/sessions/{id}/fork`: K children sharing the parent's
+/// history and cached prefix (semantics: [`crate::session::SessionManager::fork`];
+/// DESIGN.md §18). Body: `{"count": K, "adapters": [name|null, ...]}` —
+/// both optional; a null (or missing) adapter entry inherits the
+/// parent's preferred target.
+pub(crate) fn fork_session<D: EngineDriver>(
+    j: &Json,
+    shared: &Shared<D>,
+    sid: u64,
+) -> Result<Json, ApiError> {
+    let count = match j.get("count") {
+        None | Some(Json::Null) => 1,
+        Some(v) => match v.as_u64() {
+            Some(n) if (1..=MAX_FORK_CHILDREN as u64).contains(&n) => n as usize,
+            _ => {
+                return Err(ApiError::bad_request(
+                    "invalid_request",
+                    format!("`count` must be an integer in 1..={MAX_FORK_CHILDREN}"),
+                ))
+            }
+        },
+    };
+    let adapters: Vec<Option<String>> = match j.get("adapters") {
+        None | Some(Json::Null) => Vec::new(),
+        Some(Json::Arr(xs)) if xs.len() <= count => {
+            let mut names = Vec::with_capacity(xs.len());
+            for v in xs {
+                names.push(match v {
+                    Json::Null => None,
+                    v => Some(
+                        v.as_str()
+                            .ok_or_else(|| {
+                                ApiError::bad_request(
+                                    "invalid_request",
+                                    "`adapters` entries must be registry names or null",
+                                )
+                            })?
+                            .to_string(),
+                    ),
+                });
+            }
+            names
+        }
+        Some(_) => {
+            return Err(ApiError::bad_request(
+                "invalid_request",
+                "`adapters` must be an array of at most `count` names/nulls",
+            ))
+        }
+    };
+    let parent = SessionId(sid);
+    shared.call(move |engine, sh| {
+        // Resolve names up front so an unknown adapter 404s before any
+        // child exists (fork is all-or-nothing on validation).
+        let mut targets: Vec<Option<ModelTarget>> = Vec::with_capacity(adapters.len());
+        for a in &adapters {
+            targets.push(match a {
+                None => None,
+                Some(n) => Some(resolve_target(engine.registry(), Some(n))?),
+            });
+        }
+        let children =
+            sh.sessions.fork(&mut *engine, parent, count, &targets).map_err(classify)?;
+        engine.metrics_mut().sessions_created += children.len() as u64;
+        let kids = children
+            .iter()
+            .map(|&c| {
+                let adapter = match sh.sessions.preferred_target(c) {
+                    Some(ModelTarget::Adapter(aid)) => engine
+                        .registry()
+                        .get(aid)
+                        .map(|a| Json::str(a.name.clone()))
+                        .unwrap_or(Json::Null),
+                    _ => Json::Null,
+                };
+                Json::obj(vec![
+                    ("session", Json::num(c.0 as f64)),
+                    ("adapter", adapter),
+                ])
+            })
+            .collect();
+        Ok(Json::obj(vec![
+            ("parent", Json::num(parent.0 as f64)),
+            ("count", Json::num(children.len() as f64)),
+            ("children", Json::Arr(kids)),
+        ]))
+    })
+}
+
 /// Where a turn's completion gets delivered.
 enum TurnEntry {
     Wait(Arc<WaitSlot>),
@@ -197,10 +290,14 @@ fn submit_turn<D: EngineDriver>(
     shared.call(move |engine, sh| {
         // Unknown sessions surface from begin_turn, which classify() maps
         // to the 404 envelope — one translation point, no duplicate
-        // pre-check.
-        let target = match resolve_target(engine.registry(), adapter.as_deref()) {
-            Ok(t) => t,
-            Err(e) => return Err(e),
+        // pre-check. A body that names no adapter falls back to the
+        // target the session was forked to serve (plain sessions: base).
+        let target = match adapter.as_deref() {
+            None => sh.sessions.preferred_target(sid).unwrap_or(ModelTarget::Base),
+            Some(n) => match resolve_target(engine.registry(), Some(n)) {
+                Ok(t) => t,
+                Err(e) => return Err(e),
+            },
         };
         let (_turn, rid) =
             match sh.sessions.begin_turn(&mut *engine, sid, target, tokens, max_new, append) {

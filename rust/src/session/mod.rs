@@ -228,6 +228,14 @@ impl SessionManager {
         self.shard(id).lock().unwrap().get(&id).cloned()
     }
 
+    /// The target a forked child was created to serve (`None` for plain
+    /// sessions and unknown ids) — the server uses it to default a
+    /// turn's target when the body names no adapter. A cheap shard read:
+    /// no session clone on the per-turn path.
+    pub fn preferred_target(&self, id: SessionId) -> Option<ModelTarget> {
+        self.shard(id).lock().unwrap().get(&id).and_then(|s| s.preferred_target)
+    }
+
     /// Test hook: mutate one session in place under its shard lock.
     #[doc(hidden)]
     pub fn with_session_mut<R>(
@@ -437,6 +445,65 @@ impl SessionManager {
         self.complete_turn(engine, sid, &out)
     }
 
+    /// Fork a parked session into `k` children
+    /// (`POST /v1/sessions/{id}/fork`). Each child shares the parent's
+    /// token history and — O(1), arena-interned — its hash-chain handle at
+    /// the fork point, then takes its OWN prefix lease over the shared
+    /// chain: on the parent's replica that pins the very same blocks
+    /// (pure refcount bumps, zero allocations, zero prefill), and the
+    /// pool's block refcounts already give last-release-frees semantics —
+    /// the shared prefix outlives the parent and every sibling until the
+    /// final holder lets go. On a cluster whose parent replica has died,
+    /// the child's pin falls back to [`EngineDriver::migrate_lease`]
+    /// (cost model permitting) and to plain recompute otherwise.
+    ///
+    /// `targets[i]` assigns child `i` its preferred target (what turns
+    /// without an explicit adapter run against) — the fan-out-K-adapters-
+    /// over-one-conversation shape from the paper; missing entries
+    /// inherit the parent's. Refuses mid-turn (the fork point would be
+    /// ambiguous while the history is still growing).
+    pub fn fork<D: EngineDriver>(
+        &self,
+        engine: &mut D,
+        parent: SessionId,
+        k: usize,
+        targets: &[Option<ModelTarget>],
+    ) -> anyhow::Result<Vec<SessionId>> {
+        anyhow::ensure!(k >= 1, "fork count must be at least 1");
+        let now = engine.clock();
+        let snapshot = {
+            let shard = self.shard(parent).lock().unwrap();
+            let s = shard
+                .get(&parent)
+                .ok_or_else(|| anyhow::anyhow!("unknown session {}", parent.0))?;
+            if let Some(rid) = s.in_flight() {
+                anyhow::bail!("session {}: turn {rid:?} is still in flight", parent.0);
+            }
+            s.clone()
+        };
+        let bs = engine.config().cache.block_size as usize;
+        let mut children = Vec::with_capacity(k);
+        for i in 0..k {
+            let id = SessionId(self.next_id.fetch_add(1, Ordering::Relaxed));
+            let target = targets.get(i).copied().flatten().or(snapshot.preferred_target);
+            let mut child = Session::forked(id, &snapshot, target, now);
+            let chain = child.cached_chain(bs);
+            let mut pinned = engine.acquire_lease_prehashed(id.0, &chain, child.last_request);
+            if pinned == 0 && !chain.is_empty() {
+                pinned = engine.migrate_lease(id.0, &chain, child.last_request);
+            }
+            child.leased_blocks = pinned;
+            let (salt, stamp) = (child.cache_salt, child.last_activity);
+            self.shard(id).lock().unwrap().insert(id, child);
+            if pinned > 0 {
+                self.note_lease(engine, salt, id, stamp, pinned);
+            }
+            children.push(id);
+        }
+        engine.note_session_forks(k as u64);
+        Ok(children)
+    }
+
     /// Repair sessions after a replica failure
     /// ([`crate::cluster::Cluster::fail_replica`]): sessions whose prefix
     /// lease died with the replica forget it (the next turn transparently
@@ -447,6 +514,14 @@ impl SessionManager {
     /// `resticks_total` through the driver), and sessions whose in-flight
     /// turn was REJECTED at requeue abort it (no output will ever come —
     /// without the abort every later turn would 409, the stuck-turn bug).
+    ///
+    /// With `cache.prefix_migration` on, each orphaned session's chain is
+    /// then offered to [`EngineDriver::migrate_lease`]: the session layer
+    /// still holds the conversation tokens (and the leased KV is host-
+    /// recoverable, DESIGN.md §18), so the fleet may rebuild the pinned
+    /// prefix on a survivor at a modeled transfer cost instead of letting
+    /// the next turn re-prefill from token zero. A declined or failed
+    /// migration leaves the recompute behavior above exactly as it was.
     /// Returns (leases dropped, stickiness cleared, turns aborted).
     pub fn repair_after_failover<D: EngineDriver>(
         &self,
@@ -466,7 +541,14 @@ impl SessionManager {
                 && !relocated.contains(&rid)
         };
         let (mut leases, mut unstuck, mut aborted) = (0, 0, 0);
+        let bs = engine.config().cache.block_size as usize;
         let mut dropped: Vec<(u64, SessionId)> = Vec::new();
+        // Orphaned chains worth offering to migration: (salt, id, chain,
+        // stickiness peer at repair time — the requeued in-flight turn's
+        // survivor if any, else the stale last request the policy pick
+        // falls back from). Gathered under the shard locks, migrated
+        // after they drop (the driver call may take its own locks).
+        let mut migrate: Vec<(u64, SessionId, ChainRef, Option<RequestId>)> = Vec::new();
         for shard in &self.shards {
             let mut shard = shard.lock().unwrap();
             for s in shard.values_mut() {
@@ -474,6 +556,8 @@ impl SessionManager {
                     s.leased_blocks = 0;
                     dropped.push((s.cache_salt, s.id));
                     leases += 1;
+                    let peer = s.in_flight().or(s.last_request);
+                    migrate.push((s.cache_salt, s.id, s.cached_chain(bs), peer));
                 }
                 // Clear stickiness only for PARKED sessions (no turn in
                 // flight). A session mid-turn is re-homed by that turn's
@@ -501,6 +585,20 @@ impl SessionManager {
         }
         for (salt, sid) in dropped {
             self.forget_lease(salt, sid);
+        }
+        // Offer each orphaned chain to the fleet's migration path. The
+        // driver decides (flag, cost model, destination health) and a 0
+        // return changes nothing — the session stays unleased and the
+        // next turn recomputes, exactly the pre-migration behavior.
+        for (salt, sid, chain, peer) in migrate {
+            let pinned = engine.migrate_lease(sid.0, &chain, peer);
+            if pinned > 0 {
+                let stamp = engine.clock();
+                if let Some(s) = self.shard(sid).lock().unwrap().get_mut(&sid) {
+                    s.leased_blocks = pinned;
+                }
+                self.note_lease(engine, salt, sid, stamp, pinned);
+            }
         }
         engine.note_resticks(unstuck as u64);
         (leases, unstuck, aborted)
@@ -999,6 +1097,84 @@ mod tests {
         assert!(t.cached_tokens > 0);
         mgr.delete(&mut e, sid).unwrap();
         e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_shares_parent_prefix_with_zero_new_blocks() {
+        // ISSUE-8 acceptance (b): a K=4 fork on one replica pins the
+        // shared chain four more times without allocating a single new
+        // block — the children reference the parent's KV, not copies.
+        let mut e = engine();
+        let mgr = SessionManager::new();
+        let parent = mgr.create(0);
+        mgr.run_turn(&mut e, parent, ModelTarget::Base, (0..256).collect(), 32, true)
+            .unwrap();
+        let parent_leased = mgr.get(parent).unwrap().leased_blocks;
+        assert!(parent_leased > 0);
+        let allocated_before = e.metrics.blocks_allocated;
+        let kids = mgr.fork(&mut e, parent, 4, &[]).unwrap();
+        assert_eq!(kids.len(), 4);
+        assert_eq!(
+            e.metrics.blocks_allocated, allocated_before,
+            "fork must not prefill or copy a single block"
+        );
+        for k in &kids {
+            let c = mgr.get(*k).unwrap();
+            assert_eq!(c.leased_blocks, parent_leased, "child pins the shared chain");
+            assert_eq!(c.history_len(), 288, "history shared at the fork point");
+            assert_eq!(c.num_turns(), 0);
+        }
+        // Each child's first turn rides the shared prefix warm, and the
+        // branches diverge without touching the parent.
+        for (i, k) in kids.iter().enumerate() {
+            let t = mgr
+                .run_turn(&mut e, *k, ModelTarget::Base, vec![900 + i as u32; 16], 8, true)
+                .unwrap();
+            assert!(t.cached_tokens >= 256, "child {i} warm: {}", t.cached_tokens);
+        }
+        assert_eq!(mgr.get(parent).unwrap().history_len(), 288, "parent untouched");
+        // Releases in arbitrary order: the shared blocks stay pinned until
+        // the LAST holder lets go, then everything drains to zero.
+        mgr.delete(&mut e, kids[2]).unwrap();
+        mgr.delete(&mut e, parent).unwrap();
+        assert!(e.leased_blocks() > 0, "surviving children still pin the chain");
+        for k in [kids[0], kids[3], kids[1]] {
+            mgr.delete(&mut e, k).unwrap();
+        }
+        assert_eq!(e.leased_blocks(), 0, "last release freed the shared prefix");
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_guards_unknown_mid_turn_and_zero_count() {
+        let mut d = DeadEndDriver::new();
+        let mgr = SessionManager::new();
+        let sid = mgr.create(7);
+        assert!(mgr.fork(&mut d, SessionId(999), 2, &[]).is_err(), "unknown parent");
+        assert!(mgr.fork(&mut d, sid, 0, &[]).is_err(), "zero children");
+        mgr.begin_turn(&mut d, sid, ModelTarget::Base, vec![1, 2], 4, true).unwrap();
+        let err = mgr.fork(&mut d, sid, 2, &[]).unwrap_err();
+        assert!(err.to_string().contains("in flight"), "{err}");
+        mgr.abort_turn(sid);
+        // Parked again: the fork works even on a driver that can't lease
+        // (leased_blocks stays 0; the chain simply recomputes on demand),
+        // and per-child targets land on the children in order.
+        let kids = mgr
+            .fork(
+                &mut d,
+                sid,
+                2,
+                &[Some(ModelTarget::Adapter(AdapterId(0))), None],
+            )
+            .unwrap();
+        assert_eq!(kids.len(), 2);
+        assert_eq!(
+            mgr.get(kids[0]).unwrap().preferred_target,
+            Some(ModelTarget::Adapter(AdapterId(0)))
+        );
+        assert_eq!(mgr.get(kids[1]).unwrap().preferred_target, None);
+        assert_eq!(mgr.get(kids[0]).unwrap().cache_salt, 7, "tenant salt inherited");
+        assert_eq!(mgr.len(), 3);
     }
 
     #[test]

@@ -62,10 +62,22 @@ pub struct CostModel {
     /// d_model (for the attention quadratic term).
     d_model: f64,
     n_layers: f64,
+    /// Tokens per KV block (for migrate-vs-recompute comparisons).
+    block_size: usize,
     /// Per-new-block constant (s).
     pub block_alloc_cost: f64,
     /// Per-step constant (s): launch + host sync.
     pub step_overhead: f64,
+    /// Cross-replica interconnect bandwidth for KV migration, bytes/s
+    /// (200 Gb/s InfiniBand-class ≈ 25 GB/s effective).
+    pub migration_bw: f64,
+    /// Fixed per-migration setup cost (s): control-plane round trip,
+    /// dest-side block registration, transfer kickoff. This constant is
+    /// what creates the migrate-vs-recompute crossover — both the
+    /// per-block transfer and the per-token prefill are linear, and
+    /// transfer is the cheaper slope, so without a fixed cost migration
+    /// would always win.
+    pub migration_setup: f64,
 }
 
 impl CostModel {
@@ -83,8 +95,11 @@ impl CostModel {
             adapter_flops_per_tok: 3.0 * 2.0 * 2.0 * m.d_model as f64 * r * m.n_layers as f64,
             d_model: m.d_model as f64,
             n_layers: m.n_layers as f64,
+            block_size: cfg.cache.block_size as usize,
             block_alloc_cost: 2.0e-6,
             step_overhead: 40.0e-6,
+            migration_bw: 25.0e9,
+            migration_setup: 5.0e-3,
         }
     }
 
@@ -140,6 +155,27 @@ impl CostModel {
             prefill_ctx_tokens: ctx,
             ..Default::default()
         })
+    }
+
+    // -- cross-replica prefix migration (DESIGN.md §18) ---------------------
+
+    /// Modeled time to ship `blocks` KV blocks to another replica:
+    /// fixed setup plus bytes over the interconnect. Charged to the
+    /// destination's clock by `Cluster::migrate_lease`, so the transfer
+    /// shows up honestly in the next turn's TTFT.
+    pub fn migration_time(&self, blocks: usize) -> f64 {
+        let kv_bytes_per_block = self.kv_bytes * self.block_size as f64;
+        self.migration_setup + blocks as f64 * kv_bytes_per_block / self.migration_bw
+    }
+
+    /// The migrate-vs-recompute decision: transfer the chain's blocks only
+    /// when doing so is strictly cheaper than prefilling the same span
+    /// from token zero. Per-block transfer is the cheaper slope (~105 µs
+    /// vs ~590 µs per granite-8b block), so the fixed setup cost sets the
+    /// crossover at roughly a dozen blocks: short prefixes recompute,
+    /// long conversations migrate.
+    pub fn migration_wins(&self, blocks: usize) -> bool {
+        self.migration_time(blocks) < self.prefill_time(blocks * self.block_size, 0)
     }
 }
 
@@ -235,5 +271,20 @@ mod tests {
     fn empty_step_is_free() {
         let m = model("granite-8b");
         assert_eq!(m.step_time(&StepWork::default()), 0.0);
+    }
+
+    #[test]
+    fn migration_crossover_short_recomputes_long_migrates() {
+        let m = model("granite-8b");
+        // A handful of blocks: the fixed setup dominates, prefill wins.
+        assert!(!m.migration_wins(4), "short prefix must recompute");
+        // A long conversation: per-block transfer is ~5x cheaper than
+        // per-block prefill, so once setup amortizes migration wins —
+        // and keeps winning as the prefix grows.
+        assert!(m.migration_wins(64), "long prefix must migrate");
+        assert!(m.migration_wins(1024));
+        // Monotone linear transfer: time grows with block count.
+        assert!(m.migration_time(128) > m.migration_time(64));
+        assert!(m.migration_time(0) > 0.0, "setup cost never free");
     }
 }
