@@ -1,7 +1,7 @@
 # Tier-1 gate (mirrors .github/workflows/ci.yml): make check
 # fmt + clippy are advisory in both (leading `-`) until a toolchain-run
 # `make fmt` / clippy pass lands — the repo was authored offline without
-# rustfmt/clippy (still true as of 2026-07-30, PR 3); see ROADMAP.md
+# rustfmt/clippy (still true as of 2026-08-08, PR 9); see ROADMAP.md
 # "Lint debt".
 .PHONY: check build build-matrix test fmt fmt-check clippy bench bench-smoke server-smoke artifacts
 
@@ -39,22 +39,27 @@ bench:
 # the cluster bench on its quick grid, the adapter-memory figure, the
 # failover figure (kill 1 of 4 replicas mid-burst) in quick mode, the
 # migration figure (migrate-vs-recompute TTFT sweep + fork fan-out) in
-# quick mode, the session-scale harness at its quick tier (10^5
-# concurrent sessions — writes BENCH_scale.json at the repo root; CI
-# uploads it and diffs the p99 TTFT against the committed baseline,
-# advisory), the handler-contention harness at its quick tier (1..=8
-# client threads over real HTTP — writes BENCH_concurrency.json; CI
-# diffs only its deterministic session/turn counts), and the migration
+# quick mode, the self-driving figure (silenced-replica detection +
+# diurnal autoscale) in quick mode, the session-scale harness at its
+# quick tier (10^5 concurrent sessions — writes BENCH_scale.json at the
+# repo root; CI uploads it and diffs the p99 TTFT against the committed
+# baseline, advisory), the handler-contention harness at its quick tier
+# (1..=8 client threads over real HTTP — writes BENCH_concurrency.json;
+# CI diffs only its deterministic session/turn counts), the migration
 # harness (writes BENCH_migration.json; CI diffs the long-prefix
-# speedup, advisory).
+# speedup, advisory), and the self-driving harness (writes
+# BENCH_selfdriving.json; CI diffs detection latency and recovered
+# hit-rate, advisory).
 bench-smoke:
 	cargo bench --bench bench_cluster -- --quick
 	cargo run --release -- figure --id adapter_memory --quick
 	cargo run --release -- figure --id failover --quick
 	cargo run --release -- figure --id migration --quick
+	cargo run --release -- figure --id selfdriving --quick
 	cargo bench --bench bench_scale -- --quick
 	cargo bench --bench bench_concurrency -- --quick
 	cargo bench --bench bench_migration -- --quick
+	cargo bench --bench bench_selfdriving -- --quick
 
 # HTTP surface smoke (mirrors the CI step): the HTTP integration suite
 # plus the v1 sessions suite, which includes the streaming smoke

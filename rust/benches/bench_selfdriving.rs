@@ -1,0 +1,79 @@
+//! `bench_selfdriving`: unattended failure detection + autoscaling (ISSUE 9).
+//!
+//! Runs the `selfdriving` figure's two arms — a silenced replica walked
+//! Up → Suspected → Down by the heartbeat monitor with the ordinary
+//! failover pipeline evacuating it (no admin call), and a diurnal load
+//! cycle driving the autoscaler up to standbys and back down to the
+//! minimum — and writes `BENCH_selfdriving.json` at the repo root. CI
+//! runs the `--quick` tier, uploads the report, and diffs the detection
+//! latency and recovered hit-rate against the committed baseline
+//! (advisory only; virtual-time results are seeded and deterministic, so
+//! a real diff means a real behavior change).
+
+use alora_serve::figures::selfdriving::run_curves;
+use alora_serve::util::bench::section;
+use alora_serve::util::json::Json;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    section(&format!(
+        "self-driving fleet harness: detection + diurnal autoscale ({})",
+        if quick { "quick tier" } else { "full tier" }
+    ));
+    let t0 = std::time::Instant::now();
+    let curves = run_curves(quick);
+    let wall_s = t0.elapsed().as_secs_f64();
+    curves.detect.print();
+    curves.autoscale.print();
+
+    println!(
+        "\ndetection: {} steps to declare; hit-rate dip {:.3} -> recovered {:.3}; \
+         {} requeued, {}/{} turns completed",
+        curves.detection_steps,
+        curves.dip(),
+        curves.recovered(),
+        curves.requeued,
+        curves.turns_completed,
+        curves.turns_submitted,
+    );
+    println!(
+        "autoscale: peak {} active, final {}; {} scale-ups / {} scale-downs; \
+         {}/{} requests completed",
+        curves.peak_active,
+        curves.final_active,
+        curves.scale_ups,
+        curves.scale_downs,
+        curves.reqs_completed,
+        curves.reqs_submitted,
+    );
+
+    let hit_rates = curves.hit_rates.iter().map(|&h| Json::num(h)).collect();
+    let report = Json::obj(vec![
+        ("bench", Json::str("selfdriving")),
+        ("quick", Json::Bool(quick)),
+        ("wall_s", Json::num(wall_s)),
+        ("detection_steps", Json::num(curves.detection_steps as f64)),
+        ("dip_hit_rate", Json::num(curves.dip())),
+        ("recovered_hit_rate", Json::num(curves.recovered())),
+        ("hit_rates", Json::Arr(hit_rates)),
+        ("requeued", Json::num(curves.requeued as f64)),
+        ("turns_submitted", Json::num(curves.turns_submitted as f64)),
+        ("turns_completed", Json::num(curves.turns_completed as f64)),
+        ("peak_active", Json::num(curves.peak_active as f64)),
+        ("final_active", Json::num(curves.final_active as f64)),
+        ("scale_ups", Json::num(curves.scale_ups as f64)),
+        ("scale_downs", Json::num(curves.scale_downs as f64)),
+        ("reqs_submitted", Json::num(curves.reqs_submitted as f64)),
+        ("reqs_completed", Json::num(curves.reqs_completed as f64)),
+        (
+            "note",
+            Json::str(
+                "seeded virtual-time run; regenerate with \
+                 `cargo bench --bench bench_selfdriving -- --quick` (make bench-smoke)",
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_selfdriving.json", format!("{report}\n"))
+        .expect("write BENCH_selfdriving.json");
+    println!("wrote BENCH_selfdriving.json");
+}

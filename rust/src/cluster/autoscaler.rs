@@ -1,0 +1,236 @@
+//! Fleet autoscaler control loop (DESIGN.md §19).
+//!
+//! A pure, deterministic controller over the signals the cluster already
+//! exports: total queue depth across active replicas (normalized per
+//! replica) and KV-pool pressure against the admission watermark. It
+//! decides *when* to scale; the cluster decides *how* (activate the
+//! lowest-index standby, or drain the highest-index active replica and
+//! batch-migrate its leases — see `Cluster::step`).
+//!
+//! Invariants the controller enforces by construction:
+//! - never a decision during cooldown (streaks keep accumulating, so a
+//!   sustained condition fires on the first post-cooldown step);
+//! - scale-up requires `scale_up_after_steps` *consecutive* pressured
+//!   steps, scale-down `scale_down_after_steps` consecutive idle steps —
+//!   one calm step resets the streak;
+//! - scale-up wins ties (pressure is never answered by shrinking);
+//! - the fleet stays within `[min_replicas, max]` — `max` is the number
+//!   of pre-provisioned engines, fixed at construction so request-id
+//!   striping never changes.
+
+use crate::config::FleetConfig;
+
+/// One step's worth of fleet signals, gathered by the cluster.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScaleSignals {
+    /// Active (routable, `Up`) replicas, including warming ones.
+    pub active_replicas: usize,
+    /// Whether any standby replica is available to activate.
+    pub standby_available: bool,
+    /// Total waiting (queued, unadmitted) requests across active replicas.
+    pub waiting: usize,
+    /// Worst per-replica KV-pool usage fraction (1 - free/total).
+    pub kv_pressure: f64,
+    /// The engines' configured admission watermark: pool pressure at or
+    /// above it means admissions are about to stall.
+    pub admission_watermark: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    /// Activate one standby replica.
+    Up,
+    /// Drain one active replica toward standby.
+    Down,
+}
+
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    cfg: FleetConfig,
+    high_streak: u32,
+    low_streak: u32,
+    cooldown: u32,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: FleetConfig) -> Self {
+        Autoscaler { cfg, high_streak: 0, low_streak: 0, cooldown: 0 }
+    }
+
+    /// Feed one step's signals; returns at most one scale decision. The
+    /// caller must call [`Autoscaler::note_scaled`] once it actually
+    /// executes a decision (activation succeeded / drain began), which
+    /// starts the cooldown and clears both streaks.
+    pub fn observe(&mut self, s: &ScaleSignals) -> ScaleDecision {
+        if s.active_replicas == 0 {
+            return ScaleDecision::Hold;
+        }
+        let queue_per_replica = s.waiting as f64 / s.active_replicas as f64;
+        let pressured = queue_per_replica > self.cfg.queue_high
+            || s.kv_pressure >= s.admission_watermark;
+        let idle = queue_per_replica < self.cfg.queue_low
+            && s.kv_pressure < s.admission_watermark;
+        self.high_streak = if pressured { self.high_streak + 1 } else { 0 };
+        self.low_streak = if idle { self.low_streak + 1 } else { 0 };
+
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return ScaleDecision::Hold;
+        }
+        if self.high_streak >= self.cfg.scale_up_after_steps && s.standby_available {
+            return ScaleDecision::Up;
+        }
+        if self.low_streak >= self.cfg.scale_down_after_steps
+            && s.active_replicas > self.cfg.min_replicas
+        {
+            return ScaleDecision::Down;
+        }
+        ScaleDecision::Hold
+    }
+
+    /// A decision was executed: start the cooldown, clear the streaks.
+    pub fn note_scaled(&mut self) {
+        self.cooldown = self.cfg.cooldown_steps;
+        self.high_streak = 0;
+        self.low_streak = 0;
+    }
+
+    pub fn cooldown_remaining(&self) -> u32 {
+        self.cooldown
+    }
+
+    pub fn high_streak(&self) -> u32 {
+        self.high_streak
+    }
+
+    pub fn low_streak(&self) -> u32 {
+        self.low_streak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> FleetConfig {
+        FleetConfig {
+            autoscale: true,
+            min_replicas: 1,
+            scale_up_after_steps: 3,
+            scale_down_after_steps: 4,
+            queue_high: 4.0,
+            queue_low: 0.5,
+            cooldown_steps: 5,
+            ..FleetConfig::default()
+        }
+    }
+
+    fn pressured(active: usize) -> ScaleSignals {
+        ScaleSignals {
+            active_replicas: active,
+            standby_available: true,
+            waiting: active * 10, // 10 per replica >> queue_high
+            kv_pressure: 0.2,
+            admission_watermark: 0.9,
+        }
+    }
+
+    fn idle(active: usize) -> ScaleSignals {
+        ScaleSignals {
+            active_replicas: active,
+            standby_available: true,
+            waiting: 0,
+            kv_pressure: 0.1,
+            admission_watermark: 0.9,
+        }
+    }
+
+    #[test]
+    fn scale_up_needs_a_sustained_streak() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.observe(&pressured(2)), ScaleDecision::Hold);
+        assert_eq!(a.observe(&pressured(2)), ScaleDecision::Hold);
+        // One calm step resets the streak entirely.
+        assert_eq!(a.observe(&idle(2)), ScaleDecision::Hold);
+        assert_eq!(a.observe(&pressured(2)), ScaleDecision::Hold);
+        assert_eq!(a.observe(&pressured(2)), ScaleDecision::Hold);
+        assert_eq!(a.observe(&pressured(2)), ScaleDecision::Up, "3rd consecutive");
+    }
+
+    #[test]
+    fn kv_pressure_alone_triggers_scale_up() {
+        let mut a = Autoscaler::new(cfg());
+        let s = ScaleSignals {
+            active_replicas: 2,
+            standby_available: true,
+            waiting: 0, // queues empty, but the pool is nearly full
+            kv_pressure: 0.95,
+            admission_watermark: 0.9,
+        };
+        for _ in 0..2 {
+            assert_eq!(a.observe(&s), ScaleDecision::Hold);
+        }
+        assert_eq!(a.observe(&s), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn no_scale_up_without_standby_capacity() {
+        let mut a = Autoscaler::new(cfg());
+        let mut s = pressured(4);
+        s.standby_available = false;
+        for _ in 0..20 {
+            assert_eq!(a.observe(&s), ScaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn scale_down_respects_min_replicas() {
+        let mut a = Autoscaler::new(cfg());
+        for _ in 0..3 {
+            assert_eq!(a.observe(&idle(2)), ScaleDecision::Hold);
+        }
+        assert_eq!(a.observe(&idle(2)), ScaleDecision::Down, "4th consecutive");
+        // At the floor the same idle stream holds forever.
+        let mut a = Autoscaler::new(cfg());
+        for _ in 0..20 {
+            assert_eq!(a.observe(&idle(1)), ScaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn cooldown_blocks_decisions_but_streaks_accumulate() {
+        let mut a = Autoscaler::new(cfg());
+        for _ in 0..2 {
+            a.observe(&pressured(2));
+        }
+        assert_eq!(a.observe(&pressured(2)), ScaleDecision::Up);
+        a.note_scaled();
+        assert_eq!(a.cooldown_remaining(), 5);
+        // 5 cooldown steps: pressure persists but decisions hold.
+        for _ in 0..5 {
+            assert_eq!(a.observe(&pressured(3)), ScaleDecision::Hold);
+        }
+        // Streak (now 5 >= 3) fires on the first post-cooldown step.
+        assert_eq!(a.observe(&pressured(3)), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn empty_fleet_and_middling_load_hold() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.observe(&ScaleSignals::default()), ScaleDecision::Hold);
+        // Between the watermarks: neither streak moves.
+        let s = ScaleSignals {
+            active_replicas: 2,
+            standby_available: true,
+            waiting: 4, // 2 per replica: above low, below high
+            kv_pressure: 0.2,
+            admission_watermark: 0.9,
+        };
+        for _ in 0..50 {
+            assert_eq!(a.observe(&s), ScaleDecision::Hold);
+        }
+        assert_eq!(a.high_streak(), 0);
+        assert_eq!(a.low_streak(), 0);
+    }
+}

@@ -1,0 +1,277 @@
+//! Heartbeat-driven replica failure detection (DESIGN.md §19).
+//!
+//! Every cluster step, each participating replica either delivers a
+//! heartbeat or misses one; the [`HealthMonitor`] counts *consecutive*
+//! misses per replica and walks the state machine
+//!
+//! ```text
+//!   Up --(suspect_after_misses)--> Suspected(n) --(down_after_misses)--> Down
+//!    ^            |
+//!    +--resumed beat (Recovered)
+//! ```
+//!
+//! `Suspected` is a routing penalty, not an evacuation: the replica keeps
+//! its requests and leases, and a resumed beat restores it with zero
+//! loss. `Down` is terminal from the monitor's point of view — the
+//! cluster runs the same failover pipeline an operator-declared
+//! `POST /cluster/replicas/{i}/fail` would, and only an explicit
+//! `restore_replica` re-arms monitoring.
+//!
+//! The monitor is deliberately dumb and deterministic: pure counters on
+//! the shared simulated step clock, no timers, no randomness. Detection
+//! latency in steps equals the configured miss threshold *exactly*,
+//! which the unit tests pin.
+
+use crate::config::FleetConfig;
+
+/// Monitor-visible state of one replica, derived from its miss count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    Up,
+    /// `n` consecutive heartbeats missed (`suspect_after <= n < down_after`).
+    Suspected(u32),
+    Down,
+}
+
+impl HealthState {
+    /// The `health_detail` rendering (`up | suspected(n) | down`).
+    pub fn detail(&self) -> String {
+        match self {
+            HealthState::Up => "up".to_string(),
+            HealthState::Suspected(n) => format!("suspected({n})"),
+            HealthState::Down => "down".to_string(),
+        }
+    }
+}
+
+/// One replica's input to a monitoring round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Beat {
+    /// Heartbeat received this step.
+    Seen,
+    /// Heartbeat expected but absent (silenced or dead replica).
+    Missed,
+    /// Replica is not participating (operator-down, standby, already
+    /// declared down): hold state, count nothing.
+    Ignore,
+}
+
+/// State-machine edges crossed during one monitoring round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transition {
+    /// Crossed the suspect threshold this round.
+    Suspected { replica: usize, misses: u32 },
+    /// Crossed the down threshold this round: the caller must run its
+    /// failover pipeline.
+    Down { replica: usize },
+    /// A suspected replica resumed beating; miss count cleared.
+    Recovered { replica: usize },
+}
+
+/// Result of one monitoring round.
+#[derive(Debug, Clone, Default)]
+pub struct Observation {
+    pub transitions: Vec<Transition>,
+    /// Heartbeats missed this round (feeds the
+    /// `alora_serve_heartbeat_misses_total` counter).
+    pub misses: u32,
+}
+
+#[derive(Debug, Clone)]
+pub struct HealthMonitor {
+    suspect_after: u32,
+    down_after: u32,
+    /// Consecutive misses per replica; saturates at `down_after` (a dead
+    /// replica's counter must not wrap or grow unbounded).
+    misses: Vec<u32>,
+}
+
+impl HealthMonitor {
+    pub fn new(n_replicas: usize, fleet: &FleetConfig) -> Self {
+        assert!(
+            fleet.down_after_misses > fleet.suspect_after_misses
+                && fleet.suspect_after_misses > 0,
+            "fleet config not validated"
+        );
+        HealthMonitor {
+            suspect_after: fleet.suspect_after_misses,
+            down_after: fleet.down_after_misses,
+            misses: vec![0; n_replicas],
+        }
+    }
+
+    /// One monitoring round over the per-replica beats. Deterministic:
+    /// transitions are emitted in replica order.
+    pub fn observe(&mut self, beats: &[Beat]) -> Observation {
+        assert_eq!(beats.len(), self.misses.len(), "beat vector sized to fleet");
+        let mut obs = Observation::default();
+        for (i, beat) in beats.iter().enumerate() {
+            match beat {
+                Beat::Ignore => {}
+                Beat::Seen => {
+                    if (self.suspect_after..self.down_after).contains(&self.misses[i]) {
+                        obs.transitions.push(Transition::Recovered { replica: i });
+                    }
+                    // A Down counter stays pinned: only an explicit
+                    // `reset` (restore_replica) re-arms a declared death.
+                    if self.misses[i] < self.down_after {
+                        self.misses[i] = 0;
+                    }
+                }
+                Beat::Missed => {
+                    if self.misses[i] >= self.down_after {
+                        continue; // already declared; nothing new to say
+                    }
+                    self.misses[i] += 1;
+                    obs.misses += 1;
+                    if self.misses[i] == self.suspect_after {
+                        obs.transitions.push(Transition::Suspected {
+                            replica: i,
+                            misses: self.misses[i],
+                        });
+                    } else if self.misses[i] == self.down_after {
+                        obs.transitions.push(Transition::Down { replica: i });
+                    }
+                }
+            }
+        }
+        obs
+    }
+
+    pub fn state(&self, i: usize) -> HealthState {
+        let m = self.misses[i];
+        if m >= self.down_after {
+            HealthState::Down
+        } else if m >= self.suspect_after {
+            HealthState::Suspected(m)
+        } else {
+            HealthState::Up
+        }
+    }
+
+    /// Consecutive misses currently held against replica `i`.
+    pub fn misses(&self, i: usize) -> u32 {
+        self.misses[i]
+    }
+
+    /// Re-arm monitoring for a restored / freshly activated replica.
+    pub fn reset(&mut self, i: usize) {
+        self.misses[i] = 0;
+    }
+
+    /// Record an operator-declared death so the monitor agrees with the
+    /// cluster's health table (and never re-fires Down for this replica).
+    pub fn mark_down(&mut self, i: usize) {
+        self.misses[i] = self.down_after;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(suspect: u32, down: u32) -> FleetConfig {
+        FleetConfig {
+            suspect_after_misses: suspect,
+            down_after_misses: down,
+            ..FleetConfig::default()
+        }
+    }
+
+    #[test]
+    fn detection_latency_is_exactly_the_miss_threshold() {
+        // Acceptance criterion: a silenced replica is declared Down after
+        // exactly `down_after_misses` monitoring rounds — not one early,
+        // not one late. Count the rounds like an op counter.
+        let f = fleet(3, 6);
+        let mut m = HealthMonitor::new(2, &f);
+        let mut rounds_to_down = 0u32;
+        let mut suspected_at = None;
+        for round in 1..=10u32 {
+            let obs = m.observe(&[Beat::Missed, Beat::Seen]);
+            for t in &obs.transitions {
+                match t {
+                    Transition::Suspected { replica, misses } => {
+                        assert_eq!(*replica, 0);
+                        assert_eq!(*misses, 3);
+                        suspected_at = Some(round);
+                    }
+                    Transition::Down { replica } => {
+                        assert_eq!(*replica, 0);
+                        assert_eq!(rounds_to_down, 0, "Down fires once");
+                        rounds_to_down = round;
+                    }
+                    Transition::Recovered { .. } => panic!("no recovery here"),
+                }
+            }
+        }
+        assert_eq!(suspected_at, Some(3), "suspected at exactly suspect_after");
+        assert_eq!(rounds_to_down, 6, "down at exactly down_after");
+        assert_eq!(m.state(0), HealthState::Down);
+        assert_eq!(m.state(1), HealthState::Up);
+    }
+
+    #[test]
+    fn resumed_beats_recover_a_suspected_replica() {
+        let f = fleet(2, 5);
+        let mut m = HealthMonitor::new(1, &f);
+        m.observe(&[Beat::Missed]);
+        let obs = m.observe(&[Beat::Missed]);
+        assert!(matches!(
+            obs.transitions[..],
+            [Transition::Suspected { replica: 0, misses: 2 }]
+        ));
+        assert_eq!(m.state(0), HealthState::Suspected(2));
+        // Beat resumes: Recovered edge, counter cleared, back to Up.
+        let obs = m.observe(&[Beat::Seen]);
+        assert!(matches!(obs.transitions[..], [Transition::Recovered { replica: 0 }]));
+        assert_eq!(m.state(0), HealthState::Up);
+        assert_eq!(m.misses(0), 0);
+        // The next miss starts the count from scratch.
+        let obs = m.observe(&[Beat::Missed]);
+        assert!(obs.transitions.is_empty());
+        assert_eq!(m.state(0), HealthState::Up);
+    }
+
+    #[test]
+    fn down_is_terminal_until_reset() {
+        let f = fleet(1, 2);
+        let mut m = HealthMonitor::new(1, &f);
+        m.observe(&[Beat::Missed]);
+        m.observe(&[Beat::Missed]);
+        assert_eq!(m.state(0), HealthState::Down);
+        // Neither further misses nor a late beat move a Down replica.
+        let obs = m.observe(&[Beat::Missed]);
+        assert!(obs.transitions.is_empty());
+        assert_eq!(obs.misses, 0, "declared replicas stop accruing misses");
+        let obs = m.observe(&[Beat::Seen]);
+        assert!(obs.transitions.is_empty());
+        assert_eq!(m.state(0), HealthState::Down);
+        // Only an explicit restore re-arms.
+        m.reset(0);
+        assert_eq!(m.state(0), HealthState::Up);
+    }
+
+    #[test]
+    fn ignored_replicas_hold_state_and_count_nothing() {
+        let f = fleet(2, 4);
+        let mut m = HealthMonitor::new(1, &f);
+        m.observe(&[Beat::Missed]);
+        for _ in 0..10 {
+            let obs = m.observe(&[Beat::Ignore]);
+            assert!(obs.transitions.is_empty());
+            assert_eq!(obs.misses, 0);
+        }
+        assert_eq!(m.misses(0), 1, "Ignore froze the counter");
+    }
+
+    #[test]
+    fn miss_counter_feeds_the_metrics_surface() {
+        let f = fleet(2, 4);
+        let mut m = HealthMonitor::new(3, &f);
+        let obs = m.observe(&[Beat::Missed, Beat::Missed, Beat::Seen]);
+        assert_eq!(obs.misses, 2);
+        m.mark_down(0);
+        assert_eq!(m.state(0), HealthState::Down);
+    }
+}

@@ -32,16 +32,21 @@
 //! [`FailoverReport`] hands the serving layer what it needs to repair
 //! affected sessions (DESIGN.md §15).
 
+pub mod autoscaler;
+pub mod health;
 pub mod router;
 
+pub use autoscaler::{Autoscaler, ScaleDecision, ScaleSignals};
+pub use health::{Beat, HealthMonitor, HealthState, Transition};
 pub use router::{Placement, PlacementKind, ReplicaView, RoutePolicy, Router, RouterConfig};
 
 use crate::adapter::AdapterRegistry;
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, FleetConfig};
 use crate::engine::{Engine, EngineDriver, EvacuatedRequest, Executor};
 use crate::kvcache::block::BlockHash;
 use crate::kvcache::chain::ChainRef;
 use crate::kvcache::prefix::{block_hashes, HashContext};
+use crate::kvcache::summary::HashSummary;
 use crate::metrics::{Metrics, RoutingMetrics};
 use crate::request::{ModelTarget, RequestId, RequestOutput, SamplingParams, TurnEvent};
 use crate::simulator::CostModel;
@@ -57,6 +62,11 @@ pub enum ReplicaHealth {
     Up,
     Draining,
     Down,
+    /// Pre-provisioned but inactive (DESIGN.md §19): the engine exists —
+    /// so request-id striping is fixed at construction for the MAXIMUM
+    /// fleet size — but it neither routes, steps, nor heartbeats until
+    /// the autoscaler activates it.
+    Standby,
 }
 
 impl ReplicaHealth {
@@ -65,6 +75,7 @@ impl ReplicaHealth {
             ReplicaHealth::Up => "up",
             ReplicaHealth::Draining => "draining",
             ReplicaHealth::Down => "down",
+            ReplicaHealth::Standby => "standby",
         }
     }
 }
@@ -135,14 +146,48 @@ pub struct Cluster<E: Executor> {
     /// Fleet-level registry: the coordinator's per-stage series land here;
     /// `/metrics` renders this merged with every replica's counters.
     metrics: Metrics,
+    /// Self-driving knobs (DESIGN.md §19). The default config makes every
+    /// control path below a strict no-op: live summaries, no autoscaler,
+    /// and a monitor that only matters once a replica is silenced.
+    fleet: FleetConfig,
+    /// Heartbeat failure detector, fed one beat vector per fleet step.
+    monitor: HealthMonitor,
+    /// Scale decision controller; consulted only with `fleet.autoscale`.
+    autoscaler: Autoscaler,
+    /// Fault injection: a silenced replica keeps its state and keeps
+    /// stepping (a network partition, not a crash) but stops delivering
+    /// heartbeats and gossip until `restore_replica`.
+    silenced: Vec<bool>,
+    /// Freshly activated replicas take only overflow placements until
+    /// their (gossiped) summary holds `fleet.warmup_min_blocks` blocks.
+    warming: Vec<bool>,
+    /// Gossiped routing-summary snapshots: `(summary, round stamp)`.
+    /// `None` = nothing gossiped yet (fresh activation / wiped storage).
+    /// Probed by `views_for_chain` instead of the live summary whenever
+    /// `fleet.gossip_period_steps > 0`.
+    gossip: Vec<Option<(HashSummary, u64)>>,
+    /// Monotone gossip round counter (stamps snapshots for staleness).
+    gossip_round: u64,
+    /// Steps since the last gossip round.
+    steps_since_gossip: u32,
+    /// Failovers run by the detector (not an admin call): the serving
+    /// layer drains these via `take_failover_reports` and runs the same
+    /// session repair an operator-declared failure gets.
+    pending_failovers: Vec<FailoverReport>,
+    /// The replica currently draining toward `Standby` under a scale-down
+    /// decision; retired (leases batch-migrated) once its work drains.
+    descaling: Option<usize>,
 }
 
 /// One replica's headline numbers for `GET /cluster`.
 #[derive(Debug, Clone)]
 pub struct ReplicaStats {
     pub replica: usize,
-    /// Serving state: "up", "draining", or "down".
+    /// Serving state: "up", "draining", "down", or "standby".
     pub health: &'static str,
+    /// Finer-grained serving state for dashboards:
+    /// `up | suspected(n) | warming | draining | down | standby`.
+    pub health_detail: String,
     pub clock: f64,
     pub running: usize,
     pub waiting: usize,
@@ -178,6 +223,39 @@ pub struct ReplicaConfigSummary {
     pub adapter_paging: bool,
 }
 
+/// Self-driving control-loop snapshot for `GET /cluster` (DESIGN.md §19).
+#[derive(Debug, Clone)]
+pub struct FleetStats {
+    pub autoscale: bool,
+    /// Routable (`Up`) replicas, warming ones included.
+    pub active_replicas: usize,
+    pub standby_replicas: usize,
+    pub cooldown_remaining: u32,
+    pub high_streak: u32,
+    pub low_streak: u32,
+    pub gossip_period_steps: u32,
+    pub gossip_round: u64,
+    /// Replica currently draining toward standby under a scale-down.
+    pub descaling: Option<usize>,
+}
+
+impl FleetStats {
+    /// The shape a fleet of one (or a disabled controller) reports.
+    pub fn single() -> Self {
+        FleetStats {
+            autoscale: false,
+            active_replicas: 1,
+            standby_replicas: 0,
+            cooldown_remaining: 0,
+            high_streak: 0,
+            low_streak: 0,
+            gossip_period_steps: 0,
+            gossip_round: 0,
+            descaling: None,
+        }
+    }
+}
+
 /// Fleet snapshot for `GET /cluster` and tests.
 #[derive(Debug, Clone)]
 pub struct ClusterStats {
@@ -186,6 +264,7 @@ pub struct ClusterStats {
     pub config: ReplicaConfigSummary,
     pub replicas: Vec<ReplicaStats>,
     pub routing: RoutingMetrics,
+    pub fleet: FleetStats,
     /// Token-weighted prefix hit rate across the fleet.
     pub aggregate_hit_rate: f64,
     /// Fleet fraction of adapter admissions that found weights resident.
@@ -243,7 +322,57 @@ impl ClusterStats {
                         Json::num(self.routing.migration_recompute_fallbacks as f64),
                     ),
                     ("session_forks", Json::num(self.routing.session_forks as f64)),
+                    (
+                        "heartbeat_misses",
+                        Json::num(self.routing.heartbeat_misses as f64),
+                    ),
+                    (
+                        "suspected_transitions",
+                        Json::num(self.routing.suspected_transitions as f64),
+                    ),
+                    (
+                        "detected_failures",
+                        Json::num(self.routing.detected_failures as f64),
+                    ),
+                    ("scale_ups", Json::num(self.routing.scale_ups as f64)),
+                    ("scale_downs", Json::num(self.routing.scale_downs as f64)),
+                    (
+                        "stale_sketch_decays",
+                        Json::num(self.routing.stale_sketch_decays as f64),
+                    ),
                     ("imbalance", Json::num(self.routing.imbalance())),
+                ]),
+            ),
+            (
+                "fleet",
+                Json::obj(vec![
+                    ("autoscale", Json::Bool(self.fleet.autoscale)),
+                    (
+                        "active_replicas",
+                        Json::num(self.fleet.active_replicas as f64),
+                    ),
+                    (
+                        "standby_replicas",
+                        Json::num(self.fleet.standby_replicas as f64),
+                    ),
+                    (
+                        "cooldown_remaining",
+                        Json::num(self.fleet.cooldown_remaining as f64),
+                    ),
+                    ("high_streak", Json::num(self.fleet.high_streak as f64)),
+                    ("low_streak", Json::num(self.fleet.low_streak as f64)),
+                    (
+                        "gossip_period_steps",
+                        Json::num(self.fleet.gossip_period_steps as f64),
+                    ),
+                    ("gossip_round", Json::num(self.fleet.gossip_round as f64)),
+                    (
+                        "descaling",
+                        match self.fleet.descaling {
+                            Some(i) => Json::num(i as f64),
+                            None => Json::Null,
+                        },
+                    ),
                 ]),
             ),
             (
@@ -255,6 +384,7 @@ impl ClusterStats {
                             Json::obj(vec![
                                 ("replica", Json::num(r.replica as f64)),
                                 ("health", Json::str(r.health)),
+                                ("health_detail", Json::str(r.health_detail.clone())),
                                 ("clock_s", Json::num(r.clock)),
                                 ("running", Json::num(r.running as f64)),
                                 ("waiting", Json::num(r.waiting as f64)),
@@ -328,6 +458,9 @@ impl<E: Executor> Cluster<E> {
             r.set_id_namespace(i as u64, n as u64);
         }
         let router = Router::new(rcfg, n);
+        let fleet = FleetConfig::default();
+        let monitor = HealthMonitor::new(n, &fleet);
+        let autoscaler = Autoscaler::new(fleet.clone());
         Ok(Cluster {
             replicas,
             router,
@@ -336,6 +469,16 @@ impl<E: Executor> Cluster<E> {
             relocation_order: std::collections::VecDeque::new(),
             relocation_epoch: 0,
             metrics: Metrics::new(),
+            fleet,
+            monitor,
+            autoscaler,
+            silenced: vec![false; n],
+            warming: vec![false; n],
+            gossip: vec![None; n],
+            gossip_round: 0,
+            steps_since_gossip: 0,
+            pending_failovers: Vec::new(),
+            descaling: None,
         })
     }
 
@@ -346,6 +489,59 @@ impl<E: Executor> Cluster<E> {
         mut f: impl FnMut(usize) -> Engine<E>,
     ) -> anyhow::Result<Self> {
         Self::new((0..n).map(&mut f).collect(), policy)
+    }
+
+    /// A self-driving fleet (DESIGN.md §19): `replicas.len()` is the
+    /// MAXIMUM size — request-id striping is fixed to it forever — and
+    /// replicas past `initial_active` start as [`ReplicaHealth::Standby`]
+    /// for the autoscaler to activate under sustained pressure.
+    pub fn with_fleet(
+        replicas: Vec<Engine<E>>,
+        rcfg: RouterConfig,
+        fleet: FleetConfig,
+        initial_active: usize,
+    ) -> anyhow::Result<Self> {
+        fleet.validate()?;
+        anyhow::ensure!(
+            (1..=replicas.len()).contains(&initial_active),
+            "initial_active must be in 1..={} (the pre-provisioned maximum)",
+            replicas.len()
+        );
+        anyhow::ensure!(
+            fleet.min_replicas <= replicas.len(),
+            "min_replicas {} exceeds the pre-provisioned maximum {}",
+            fleet.min_replicas,
+            replicas.len()
+        );
+        let mut c = Self::with_config(replicas, rcfg)?;
+        for i in initial_active..c.replicas.len() {
+            c.health[i] = ReplicaHealth::Standby;
+        }
+        c.set_fleet_config(fleet)?;
+        Ok(c)
+    }
+
+    /// Swap in a validated [`FleetConfig`], rebuilding the monitor and the
+    /// autoscaler against it. Replicas already declared `Down` stay
+    /// declared (the fresh monitor is pinned to agree with the health
+    /// table, so it never re-fires their failover).
+    pub fn set_fleet_config(&mut self, fleet: FleetConfig) -> anyhow::Result<()> {
+        fleet.validate()?;
+        let n = self.replicas.len();
+        self.monitor = HealthMonitor::new(n, &fleet);
+        for i in 0..n {
+            if self.health[i] == ReplicaHealth::Down {
+                self.monitor.mark_down(i);
+            }
+        }
+        self.autoscaler = Autoscaler::new(fleet.clone());
+        self.steps_since_gossip = 0;
+        self.fleet = fleet;
+        Ok(())
+    }
+
+    pub fn fleet_config(&self) -> &FleetConfig {
+        &self.fleet
     }
 
     pub fn num_replicas(&self) -> usize {
@@ -367,6 +563,55 @@ impl<E: Executor> Cluster<E> {
     /// Replicas accepting new placements.
     pub fn num_healthy(&self) -> usize {
         self.health.iter().filter(|h| **h == ReplicaHealth::Up).count()
+    }
+
+    /// Pre-provisioned replicas the autoscaler could still activate.
+    pub fn num_standby(&self) -> usize {
+        self.health.iter().filter(|h| **h == ReplicaHealth::Standby).count()
+    }
+
+    /// Is replica `i` routing-penalized by the failure detector? True
+    /// only for an `Up` replica inside the monitor's suspected band —
+    /// the penalty is the router's job (see `ReplicaView::suspected`).
+    pub fn is_suspected(&self, i: usize) -> bool {
+        self.health[i] == ReplicaHealth::Up
+            && matches!(self.monitor.state(i), HealthState::Suspected(_))
+    }
+
+    /// The `health_detail` string for replica `i`:
+    /// `up | suspected(n) | warming | draining | down | standby`.
+    pub fn health_detail(&self, i: usize) -> String {
+        match self.health[i] {
+            ReplicaHealth::Down => "down".to_string(),
+            ReplicaHealth::Draining => "draining".to_string(),
+            ReplicaHealth::Standby => "standby".to_string(),
+            ReplicaHealth::Up if self.is_suspected(i) => self.monitor.state(i).detail(),
+            ReplicaHealth::Up if self.warming[i] => "warming".to_string(),
+            ReplicaHealth::Up => "up".to_string(),
+        }
+    }
+
+    /// Fault injection (DESIGN.md §19): replica `i` stops delivering
+    /// heartbeats and gossip while keeping its state and its work — a
+    /// network partition, not a crash. The monitor walks it through
+    /// `Suspected` into `Down` (which runs the ordinary failover
+    /// pipeline) unless `restore_replica` lifts the silence first.
+    pub fn silence_replica(&mut self, i: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(i < self.replicas.len(), "no replica {i}");
+        anyhow::ensure!(
+            matches!(self.health[i], ReplicaHealth::Up | ReplicaHealth::Draining),
+            "replica {i} is {} (only an up or draining replica can be silenced)",
+            self.health[i].name()
+        );
+        self.silenced[i] = true;
+        Ok(())
+    }
+
+    /// Detector-initiated failovers not yet repaired by the serving
+    /// layer. Drained once per server step; each report gets the same
+    /// session repair an operator-declared failure gets.
+    pub fn take_failover_reports(&mut self) -> Vec<FailoverReport> {
+        std::mem::take(&mut self.pending_failovers)
     }
 
     /// The replica holding `id`'s state: its failover re-home if it was
@@ -400,6 +645,15 @@ impl<E: Executor> Cluster<E> {
             "cannot fail replica {i}: no healthy survivor to requeue onto"
         );
         self.health[i] = ReplicaHealth::Down;
+        // Pin the monitor to agree: a silenced replica the operator (or
+        // the detector itself) declared dead must never fire a SECOND
+        // failover when its misses keep accruing.
+        self.monitor.mark_down(i);
+        self.gossip[i] = None;
+        self.warming[i] = false;
+        if self.descaling == Some(i) {
+            self.descaling = None;
+        }
         self.router.stats.replica_failures += 1;
         let evacuated = self.replicas[i].evacuate_requests();
         let orphaned_leases = self.replicas[i].fail_storage();
@@ -521,14 +775,30 @@ impl<E: Executor> Cluster<E> {
 
     /// Bring replica `i` back into rotation. A previously failed replica
     /// returns cold (its cache was wiped at failure); a drained one
-    /// returns exactly as it was.
+    /// returns exactly as it was. Restoring also lifts any silence and
+    /// re-arms the failure detector from zero misses — so it applies to
+    /// an `Up` replica too when that replica is silenced or suspected
+    /// (its beats "resume", it keeps every request and lease it holds).
     pub fn restore_replica(&mut self, i: usize) -> anyhow::Result<()> {
         anyhow::ensure!(i < self.replicas.len(), "no replica {i}");
         anyhow::ensure!(
-            self.health[i] != ReplicaHealth::Up,
+            self.health[i] != ReplicaHealth::Up
+                || self.silenced[i]
+                || self.is_suspected(i),
             "replica {i} is already up"
         );
+        if self.health[i] == ReplicaHealth::Down {
+            // Its storage was wiped at failure; whatever snapshot other
+            // replicas hold of it describes blocks that no longer exist.
+            self.gossip[i] = None;
+        }
+        if self.descaling == Some(i) {
+            self.descaling = None;
+        }
         self.health[i] = ReplicaHealth::Up;
+        self.silenced[i] = false;
+        self.warming[i] = false;
+        self.monitor.reset(i);
         Ok(())
     }
 
@@ -597,13 +867,75 @@ impl<E: Executor> Cluster<E> {
                 .iter()
                 .enumerate()
                 .map(|(i, r)| {
-                    replica_stats(i, r, self.router.stats.routed[i], self.health[i].name())
+                    replica_stats(
+                        i,
+                        r,
+                        self.router.stats.routed[i],
+                        self.health[i].name(),
+                        self.health_detail(i),
+                    )
                 })
                 .collect(),
             routing: self.router.stats.clone(),
+            fleet: FleetStats {
+                autoscale: self.fleet.autoscale,
+                active_replicas: self.num_healthy(),
+                standby_replicas: self.num_standby(),
+                cooldown_remaining: self.autoscaler.cooldown_remaining(),
+                high_streak: self.autoscaler.high_streak(),
+                low_streak: self.autoscaler.low_streak(),
+                gossip_period_steps: self.fleet.gossip_period_steps,
+                gossip_round: self.gossip_round,
+                descaling: self.descaling,
+            },
             aggregate_hit_rate: self.aggregate_hit_rate(),
             aggregate_adapter_hit_rate: self.aggregate_adapter_hit_rate(),
         }
+    }
+
+    /// The `GET /cluster/health` document (DESIGN.md §19): the failure
+    /// detector's view of every replica plus the thresholds it runs on —
+    /// what an operator pages on before `GET /cluster`'s full snapshot.
+    pub fn health_doc(&self) -> Json {
+        Json::obj(vec![
+            (
+                "suspect_after_misses",
+                Json::num(self.fleet.suspect_after_misses as f64),
+            ),
+            (
+                "down_after_misses",
+                Json::num(self.fleet.down_after_misses as f64),
+            ),
+            ("num_healthy", Json::num(self.num_healthy() as f64)),
+            ("num_standby", Json::num(self.num_standby() as f64)),
+            (
+                "detected_failures",
+                Json::num(self.router.stats.detected_failures as f64),
+            ),
+            (
+                "replicas",
+                Json::Arr(
+                    (0..self.replicas.len())
+                        .map(|i| {
+                            Json::obj(vec![
+                                ("replica", Json::num(i as f64)),
+                                ("health", Json::str(self.health[i].name())),
+                                (
+                                    "health_detail",
+                                    Json::str(self.health_detail(i)),
+                                ),
+                                (
+                                    "heartbeat_misses",
+                                    Json::num(self.monitor.misses(i) as f64),
+                                ),
+                                ("silenced", Json::Bool(self.silenced[i])),
+                                ("warming", Json::Bool(self.warming[i])),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
     }
 
     /// The salting context a request will hash under — the SAME derivation
@@ -701,41 +1033,89 @@ impl<E: Executor> Cluster<E> {
                 .map(|aid| r.adapter_affinity_blocks(aid))
                 .unwrap_or(0);
             let healthy = self.health[i] == ReplicaHealth::Up;
+            // Gossip interposition (DESIGN.md §19): with a nonzero gossip
+            // period the router scores the replica's last gossiped
+            // snapshot instead of its live summary, scaled down once the
+            // snapshot's round stamp falls past the staleness bound. At
+            // period 0 this arm is NEVER taken and the probe below reads
+            // the live summary through the identical code path — the
+            // bit-identity the tests pin.
+            let gossiped: Option<(Option<&HashSummary>, f64)> =
+                if self.fleet.gossip_period_steps > 0 {
+                    Some(match &self.gossip[i] {
+                        Some((snap, stamp)) => {
+                            let over = self
+                                .gossip_round
+                                .saturating_sub(*stamp)
+                                .saturating_sub(self.fleet.gossip_stale_rounds as u64);
+                            let factor = (1.0
+                                - self.fleet.gossip_decay_slope * over as f64)
+                                .max(0.0);
+                            (Some(snap), factor)
+                        }
+                        // Nothing gossiped yet (fresh activation): no
+                        // routable affinity — decay all the way to the
+                        // least-loaded fallback.
+                        None => (None, 0.0),
+                    })
+                } else {
+                    None
+                };
             let affinity_blocks = if chain.is_empty() || !healthy {
                 0
             } else {
                 let ub = (chain.len() + adapter_blocks) as f64 - penalty * load as f64;
-                if ub <= best {
-                    0 // cannot win: skip the probe, report no affinity
-                } else {
-                    let summary = r.routing_summary();
-                    let tracked = lease.and_then(|key| {
-                        let (matched, len) = summary.tracked_prefix(key)?;
-                        let tc = summary.tracked_chain_ref(key)?;
-                        // Interned-node identity: the query extends the
-                        // tracked chain iff walking back (len − tc.len)
-                        // parents lands on tc's head node. O(delta).
-                        let valid = len > 0 && chain.is_extension_of(tc);
-                        if !valid {
-                            return None;
-                        }
-                        Some(if matched < len {
-                            // First miss inside the tracked prefix: a
-                            // scan would stop exactly there.
-                            matched
+                let (summary, factor) = match &gossiped {
+                    Some((snap, factor)) => (*snap, *factor),
+                    None => (Some(r.routing_summary()), 1.0),
+                };
+                match summary {
+                    _ if ub <= best => 0, // cannot win: skip the probe
+                    None => 0,
+                    Some(_) if factor <= 0.0 => 0, // fully decayed
+                    Some(summary) => {
+                        let tracked = lease.and_then(|key| {
+                            let (matched, len) = summary.tracked_prefix(key)?;
+                            let tc = summary.tracked_chain_ref(key)?;
+                            // Interned-node identity: the query extends the
+                            // tracked chain iff walking back (len − tc.len)
+                            // parents lands on tc's head node. O(delta).
+                            let valid = len > 0 && chain.is_extension_of(tc);
+                            if !valid {
+                                return None;
+                            }
+                            Some(if matched < len {
+                                // First miss inside the tracked prefix: a
+                                // scan would stop exactly there.
+                                matched
+                            } else {
+                                len + summary.matching_prefix(&chain.suffix(len))
+                            })
+                        });
+                        let a = tracked.unwrap_or_else(|| {
+                            let hashes = full.get_or_insert_with(|| chain.hashes());
+                            summary.matching_prefix(hashes)
+                        });
+                        // Staleness decay: a sketch past the bound loses
+                        // `decay_slope` of its value per further round.
+                        let a = if factor < 1.0 {
+                            (a as f64 * factor).floor() as usize
                         } else {
-                            len + summary.matching_prefix(&chain.suffix(len))
-                        })
-                    });
-                    let a = tracked.unwrap_or_else(|| {
-                        let hashes = full.get_or_insert_with(|| chain.hashes());
-                        summary.matching_prefix(hashes)
-                    });
-                    best = best.max((a + adapter_blocks) as f64 - penalty * load as f64);
-                    a
+                            a
+                        };
+                        best = best.max((a + adapter_blocks) as f64 - penalty * load as f64);
+                        a
+                    }
                 }
             };
-            views.push(ReplicaView { load, affinity_blocks, adapter_blocks, healthy });
+            views.push(ReplicaView {
+                load,
+                affinity_blocks,
+                adapter_blocks,
+                healthy,
+                suspected: healthy && self.is_suspected(i),
+                warming: healthy && self.warming[i],
+            });
         }
         views
     }
@@ -788,6 +1168,276 @@ impl<E: Executor> Cluster<E> {
         self.router.stats.migrated_blocks += installed as u64;
         installed
     }
+
+    /// Ship a retiring replica's leased chains to survivors in ONE batch
+    /// transfer (DESIGN.md §19): the per-destination clock charge pays
+    /// `migration_setup` once for the whole group instead of once per
+    /// session. Membership is cost-model-gated: if any chain justifies a
+    /// transfer on its own (`migration_wins` — it would ship even solo,
+    /// the acceptance bar), the batch forms and every chain whose
+    /// marginal transfer beats its recompute
+    /// (`batch_migration_member_wins`) rides along; without such an
+    /// anchor nothing pays the setup and every chain recomputes. Returns
+    /// the number of leases shipped.
+    fn batch_migrate_leases(&mut self, victim: usize) -> usize {
+        if !self.replicas[0].cfg.cache.prefix_migration || self.num_healthy() == 0 {
+            return 0;
+        }
+        let cm = CostModel::new(&self.replicas[0].cfg);
+        // Enumerate oldest-first (deterministic), decide membership
+        // BEFORE any routing choice — a declined batch must leave the
+        // router bit-identical to a fleet that never considered it.
+        let mut anchor = false;
+        let mut candidates: Vec<(u64, ChainRef)> = Vec::new();
+        for key in self.replicas[victim].lease_keys() {
+            let Some(chain) = self.replicas[victim].lease_chain(key) else {
+                continue;
+            };
+            if chain.is_empty() {
+                continue;
+            }
+            anchor |= cm.migration_wins(chain.len());
+            candidates.push((key, chain));
+        }
+        let mut shipped = 0usize;
+        // Blocks installed per destination: the one-time setup charge
+        // lands once per destination clock, after all installs.
+        let mut per_dest: FxHashMap<usize, usize> = FxHashMap::default();
+        for (key, chain) in candidates {
+            let wins = if anchor {
+                cm.batch_migration_member_wins(chain.len())
+            } else {
+                cm.migration_wins(chain.len())
+            };
+            if !wins {
+                self.router.stats.migration_recompute_fallbacks += 1;
+                continue;
+            }
+            let views = self.views_for_chain(ModelTarget::Base, &chain, Some(key));
+            let dest = self.router.choose(&views).replica;
+            if self.health[dest] != ReplicaHealth::Up {
+                self.router.stats.migration_recompute_fallbacks += 1;
+                continue;
+            }
+            for i in 0..self.replicas.len() {
+                if i != dest {
+                    self.replicas[i].release_prefix_lease(key);
+                }
+            }
+            let installed = self.replicas[dest].install_migrated_lease(key, &chain);
+            if installed == 0 {
+                // No room at the destination: recompute on demand.
+                self.router.stats.migration_recompute_fallbacks += 1;
+                continue;
+            }
+            self.router.stats.migrations += 1;
+            self.router.stats.migrated_blocks += installed as u64;
+            *per_dest.entry(dest).or_insert(0) += installed;
+            shipped += 1;
+        }
+        let now = self.clock();
+        let mut dests: Vec<(usize, usize)> = per_dest.into_iter().collect();
+        dests.sort_unstable();
+        for (dest, blocks) in dests {
+            let r = &mut self.replicas[dest];
+            if !r.has_work() && r.clock() < now {
+                r.advance_clock_to(now);
+            }
+            let arrival = r.clock() + cm.batch_migration_time(blocks);
+            r.advance_clock_to(arrival);
+        }
+        shipped
+    }
+
+    /// Activate a standby replica under a scale-up decision. It starts
+    /// COLD: `warming` keeps it overflow-only (see `ReplicaView::warming`)
+    /// until its gossiped summary holds `warmup_min_blocks` blocks.
+    fn activate_standby(&mut self, i: usize) {
+        debug_assert_eq!(self.health[i], ReplicaHealth::Standby);
+        self.health[i] = ReplicaHealth::Up;
+        self.silenced[i] = false;
+        self.gossip[i] = None;
+        self.warming[i] = self.fleet.warmup_min_blocks > 0;
+        self.monitor.reset(i);
+        self.router.stats.scale_ups += 1;
+        self.autoscaler.note_scaled();
+        // It genuinely sat idle until this instant.
+        let now = self.clock();
+        let r = &mut self.replicas[i];
+        if r.clock() < now {
+            r.advance_clock_to(now);
+        }
+    }
+
+    /// A scale-down victim finished draining: batch-migrate its leased
+    /// chains to survivors, release whatever the cost model declined,
+    /// and park the replica in `Standby`. Its finished-but-undrained
+    /// outputs survive (the completion ledger is serving-layer state).
+    fn retire_drained(&mut self, victim: usize) {
+        debug_assert_eq!(self.health[victim], ReplicaHealth::Draining);
+        self.descaling = None;
+        self.batch_migrate_leases(victim);
+        for key in self.replicas[victim].lease_keys() {
+            self.replicas[victim].release_prefix_lease(key);
+        }
+        self.gossip[victim] = None;
+        self.warming[victim] = false;
+        self.silenced[victim] = false;
+        self.monitor.reset(victim);
+        self.health[victim] = ReplicaHealth::Standby;
+        self.router.stats.scale_downs += 1;
+    }
+
+    /// The self-driving control loop (DESIGN.md §19), run once at the end
+    /// of every fleet step on the shared simulated clock: heartbeats →
+    /// detection → gossip refresh → warm-up promotion → descale drain
+    /// completion → autoscale decision. With the default [`FleetConfig`]
+    /// and no silenced replica every branch below is a strict no-op, so a
+    /// fleet that never opts in behaves bit-identically to one built
+    /// before this loop existed.
+    fn fleet_control(&mut self) {
+        // 1. Heartbeats + failure detection. Detection latency is exact:
+        //    one beat per step, Down on the `down_after_misses`-th miss.
+        let beats: Vec<Beat> = (0..self.replicas.len())
+            .map(|i| match self.health[i] {
+                ReplicaHealth::Down | ReplicaHealth::Standby => Beat::Ignore,
+                _ if self.silenced[i] => Beat::Missed,
+                _ => Beat::Seen,
+            })
+            .collect();
+        let obs = self.monitor.observe(&beats);
+        self.router.stats.heartbeat_misses += obs.misses as u64;
+        for t in obs.transitions {
+            match t {
+                Transition::Suspected { .. } => {
+                    self.router.stats.suspected_transitions += 1;
+                }
+                Transition::Recovered { .. } => {}
+                Transition::Down { replica } => {
+                    self.router.stats.detected_failures += 1;
+                    // The SAME pipeline an operator-declared
+                    // `fail_replica` runs — evacuation, reversed requeue,
+                    // lease orphaning — and exactly once (the monitor
+                    // saturates, `fail_replica` re-pins it). If no
+                    // healthy survivor exists the declaration is refused
+                    // and the replica keeps its work: a lone partitioned
+                    // replica has nowhere to fail over TO.
+                    if let Ok(report) = Cluster::fail_replica(self, replica) {
+                        self.pending_failovers.push(report);
+                    }
+                }
+            }
+        }
+        // 2. Gossip refresh: every `gossip_period_steps` steps each
+        //    participating replica publishes a snapshot of its routing
+        //    summary stamped with the new round. A silenced replica stops
+        //    publishing; once its last stamp falls `gossip_stale_rounds`
+        //    behind, each further round counts one sketch decay.
+        if self.fleet.gossip_period_steps > 0 {
+            self.steps_since_gossip += 1;
+            if self.steps_since_gossip >= self.fleet.gossip_period_steps {
+                self.steps_since_gossip = 0;
+                self.gossip_round += 1;
+                for i in 0..self.replicas.len() {
+                    match self.health[i] {
+                        ReplicaHealth::Down | ReplicaHealth::Standby => {
+                            self.gossip[i] = None;
+                        }
+                        _ if !self.silenced[i] => {
+                            self.gossip[i] = Some((
+                                self.replicas[i].routing_summary().clone(),
+                                self.gossip_round,
+                            ));
+                        }
+                        _ => {
+                            if let Some((_, stamp)) = &self.gossip[i] {
+                                let stale = self.gossip_round - stamp;
+                                if stale > self.fleet.gossip_stale_rounds as u64 {
+                                    self.router.stats.stale_sketch_decays += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // 3. Warm-up promotion: a warming replica graduates once the
+        //    summary the ROUTER sees for it (gossiped if gossip is on,
+        //    live otherwise) holds enough blocks to score.
+        for i in 0..self.replicas.len() {
+            if !self.warming[i] {
+                continue;
+            }
+            let committed = if self.fleet.gossip_period_steps > 0 {
+                self.gossip[i].as_ref().map(|(s, _)| s.committed_blocks()).unwrap_or(0)
+            } else {
+                self.replicas[i].routing_summary().committed_blocks()
+            };
+            if committed as usize >= self.fleet.warmup_min_blocks {
+                self.warming[i] = false;
+            }
+        }
+        // 4. Descale drain completion: the victim retires only once its
+        //    running AND waiting work is gone — an in-flight turn always
+        //    finishes where it started.
+        if let Some(victim) = self.descaling {
+            if !self.replicas[victim].has_work() {
+                self.retire_drained(victim);
+            }
+        }
+        // 5. Autoscale decision.
+        if !self.fleet.autoscale {
+            return;
+        }
+        let mut active = 0usize;
+        let mut waiting = 0usize;
+        let mut kv_pressure = 0.0f64;
+        let mut last_active = None;
+        for i in 0..self.replicas.len() {
+            if self.health[i] != ReplicaHealth::Up {
+                continue;
+            }
+            active += 1;
+            last_active = Some(i);
+            let r = &self.replicas[i];
+            waiting += r.num_waiting();
+            let total = r.num_total_blocks() as f64;
+            if total > 0.0 {
+                kv_pressure =
+                    kv_pressure.max(1.0 - r.num_free_blocks() as f64 / total);
+            }
+        }
+        let standby =
+            (0..self.replicas.len()).find(|&i| self.health[i] == ReplicaHealth::Standby);
+        let signals = ScaleSignals {
+            active_replicas: active,
+            standby_available: standby.is_some(),
+            waiting,
+            kv_pressure,
+            admission_watermark: self.replicas[0].cfg.scheduler.admission_watermark,
+        };
+        match self.autoscaler.observe(&signals) {
+            ScaleDecision::Hold => {}
+            ScaleDecision::Up => {
+                if let Some(i) = standby {
+                    self.activate_standby(i);
+                }
+            }
+            ScaleDecision::Down => {
+                // Highest-index active replica drains toward standby —
+                // one descale in flight at a time, never the last
+                // healthy replica (`drain_replica` enforces both floors).
+                if self.descaling.is_none() {
+                    if let Some(victim) = last_active {
+                        if Cluster::drain_replica(self, victim).is_ok() {
+                            self.descaling = Some(victim);
+                            self.autoscaler.note_scaled();
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// The shared per-replica config summary (replicas are identical by
@@ -812,10 +1462,12 @@ fn replica_stats<E: Executor>(
     r: &Engine<E>,
     routed: u64,
     health: &'static str,
+    health_detail: String,
 ) -> ReplicaStats {
     ReplicaStats {
         replica: i,
         health,
+        health_detail,
         clock: r.clock(),
         running: r.num_running(),
         waiting: r.num_waiting(),
@@ -842,8 +1494,15 @@ pub fn single_engine_stats<E: Executor>(e: &Engine<E>) -> ClusterStats {
     ClusterStats {
         policy: "single",
         config: config_summary(&e.cfg),
-        replicas: vec![replica_stats(0, e, e.metrics.requests_received, "up")],
+        replicas: vec![replica_stats(
+            0,
+            e,
+            e.metrics.requests_received,
+            "up",
+            "up".to_string(),
+        )],
         routing,
+        fleet: FleetStats::single(),
         aggregate_hit_rate: e.kv_stats().hit_rate(),
         aggregate_adapter_hit_rate: e.residency().stats().hit_rate(),
     }
@@ -1042,7 +1701,7 @@ impl<E: Executor> EngineDriver for Cluster<E> {
                 r.release_prefix_lease(lease);
             }
         }
-        if self.health[ri] == ReplicaHealth::Down {
+        if matches!(self.health[ri], ReplicaHealth::Down | ReplicaHealth::Standby) {
             return 0;
         }
         self.replicas[ri].lease_prefix(lease, tokens, cache_salt)
@@ -1065,7 +1724,7 @@ impl<E: Executor> EngineDriver for Cluster<E> {
                 r.release_prefix_lease(lease);
             }
         }
-        if self.health[ri] == ReplicaHealth::Down {
+        if matches!(self.health[ri], ReplicaHealth::Down | ReplicaHealth::Standby) {
             return 0;
         }
         self.replicas[ri].lease_prefix_prehashed(lease, chain)
@@ -1080,17 +1739,21 @@ impl<E: Executor> EngineDriver for Cluster<E> {
     /// One fleet step: every live replica with work advances by one batch
     /// (they are parallel machines). Down replicas never step — their
     /// work was evacuated at failure, and a dead machine computes
-    /// nothing. False only when no replica progressed.
+    /// nothing; standby replicas are not running. The self-driving
+    /// control loop (heartbeats, gossip, autoscaling — DESIGN.md §19)
+    /// runs after the compute, once per step. False only when no replica
+    /// progressed.
     fn step(&mut self) -> bool {
         let mut progressed = false;
         for (i, r) in self.replicas.iter_mut().enumerate() {
-            if self.health[i] == ReplicaHealth::Down {
+            if matches!(self.health[i], ReplicaHealth::Down | ReplicaHealth::Standby) {
                 continue;
             }
             if r.has_work() {
                 progressed |= r.step();
             }
         }
+        self.fleet_control();
         progressed
     }
 
@@ -1197,6 +1860,18 @@ impl<E: Executor> EngineDriver for Cluster<E> {
 
     fn restore_replica(&mut self, i: usize) -> anyhow::Result<()> {
         Cluster::restore_replica(self, i)
+    }
+
+    fn silence_replica(&mut self, i: usize) -> anyhow::Result<()> {
+        Cluster::silence_replica(self, i)
+    }
+
+    fn take_failover_reports(&mut self) -> Vec<FailoverReport> {
+        Cluster::take_failover_reports(self)
+    }
+
+    fn cluster_health(&self) -> Option<Json> {
+        Some(self.health_doc())
     }
 
     fn note_resticks(&mut self, n: u64) {
@@ -1882,5 +2557,396 @@ mod tests {
         // unpinned committed copy in each arm, the destination ends up
         // with the same committed set whether installed or recomputed.
         assert_eq!(committed_m, committed_r, "fleet summaries symmetric");
+    }
+
+    #[test]
+    fn default_fleet_is_bit_identical_to_a_plain_cluster() {
+        // ISSUE-9 acceptance: gossip period 0 (the default) must leave
+        // routing BIT-identical to the pre-gossip fleet — same
+        // placements, same summary probes, same chain hashing, same
+        // clock. `with_fleet` with every replica active is the same
+        // machine as `from_factory`.
+        let run = |fleeted: bool| {
+            let mut c = if fleeted {
+                let engines: Vec<_> = (0..3)
+                    .map(|_| {
+                        let cfg = presets::granite_8b();
+                        let reg = workload::build_registry(2, cfg.model.vocab_size, true);
+                        let exec = SimExecutor::new(&cfg);
+                        Engine::with_registry(cfg, reg, exec)
+                    })
+                    .collect();
+                Cluster::with_fleet(engines, RouterConfig::default(), FleetConfig::default(), 3)
+                    .unwrap()
+            } else {
+                cluster(3, RoutePolicy::PrefixAffinity)
+            };
+            let vocab = c.config().model.vocab_size;
+            crate::kvcache::summary::take_probe_ops();
+            crate::kvcache::prefix::take_hash_ops();
+            let p = SamplingParams { max_new_tokens: 8, ..Default::default() };
+            let mut ids = Vec::new();
+            let mut prompts = Vec::new();
+            for k in 0..6u32 {
+                let prompt: Vec<u32> = (0..192).map(|t| (t * 7 + 389 * k) % vocab).collect();
+                ids.push(c.submit(ModelTarget::Base, prompt.clone(), p).unwrap());
+                prompts.push(prompt);
+            }
+            c.run_until_idle();
+            let outs: std::collections::HashMap<_, _> =
+                c.take_finished().into_iter().map(|o| (o.id, o)).collect();
+            // Warm follow-ups exercise the affinity probes the gossip
+            // layer interposes on.
+            for (k, id) in ids.iter().enumerate() {
+                let mut follow = prompts[k].clone();
+                follow.extend(&outs[id].output_tokens);
+                follow.push(7);
+                c.submit(ModelTarget::Base, follow, p).unwrap();
+            }
+            c.run_until_idle();
+            let n2 = c.take_finished().len();
+            (
+                c.router().stats.routed.clone(),
+                c.router().stats.affinity_hits,
+                crate::kvcache::summary::take_probe_ops(),
+                crate::kvcache::prefix::take_hash_ops(),
+                c.clock().to_bits(),
+                outs.len(),
+                n2,
+            )
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    /// The shared pin for "detection runs the declared pipeline": every
+    /// observable consequence of the failover — victim, requeue set,
+    /// orphaned leases, drops, re-homes — must be identical whether the
+    /// monitor declared the death or an operator did.
+    fn assert_failover_parity(auto: &FailoverReport, declared: &FailoverReport) {
+        assert_eq!(auto.replica, declared.replica, "same victim");
+        assert_eq!(auto.num_replicas, declared.num_replicas);
+        assert_eq!(auto.requeued, declared.requeued, "identical requeue count");
+        assert_eq!(auto.orphaned_leases, declared.orphaned_leases, "identical orphans");
+        assert_eq!(auto.rejected, declared.rejected, "identical drops");
+        assert_eq!(auto.relocated, declared.relocated, "identical re-homes");
+    }
+
+    #[test]
+    fn silence_detection_runs_the_declared_failover_pipeline() {
+        // ISSUE-9 acceptance: silencing a replica mid-burst walks
+        // Up → Suspected → Down in exactly `down_after_misses` steps and
+        // runs the SAME pipeline `POST /cluster/replicas/{i}/fail`
+        // would — with zero lost requests — and runs it exactly once.
+        let run = |silence: bool| {
+            let mut c = cluster(3, RoutePolicy::RoundRobin);
+            let p = SamplingParams { max_new_tokens: 8, ..Default::default() };
+            // One finished conversation per replica, with a lease pinned
+            // on the future victim so orphan parity is non-trivial.
+            let mut victim_prompt = Vec::new();
+            let mut victim_id = None;
+            for k in 0..3u32 {
+                let prompt: Vec<u32> = (k * 500..k * 500 + 256).collect();
+                let id = c.submit(ModelTarget::Base, prompt.clone(), p).unwrap();
+                if k == 1 {
+                    victim_prompt = prompt;
+                    victim_id = Some(id);
+                }
+            }
+            c.run_until_idle();
+            c.take_finished();
+            assert_eq!((victim_id.unwrap().0 % 3) as usize, 1, "RR: k=1 → replica 1");
+            let pinned = c.acquire_lease(77, &victim_prompt, 0, victim_id);
+            assert!(pinned > 0, "lease pinned on the victim");
+            // Mid-burst: 9 slow requests in flight, 3 per replica.
+            let ids: Vec<_> = (0..9u32)
+                .map(|k| {
+                    c.submit(
+                        ModelTarget::Base,
+                        vec![100 + k; 64],
+                        SamplingParams { max_new_tokens: 32, ..Default::default() },
+                    )
+                    .unwrap()
+                })
+                .collect();
+            let report = if silence {
+                c.silence_replica(1).unwrap();
+                let mut reports = Vec::new();
+                for s in 1..=6u32 {
+                    c.step();
+                    if s == 3 {
+                        assert!(c.is_suspected(1), "suspected at suspect_after_misses");
+                        assert_eq!(c.health_detail(1), "suspected(3)");
+                        assert_eq!(c.router().stats.suspected_transitions, 1);
+                    }
+                    let r = c.take_failover_reports();
+                    if s < 6 {
+                        assert!(r.is_empty(), "no failover before miss {s} hits the threshold");
+                    }
+                    reports.extend(r);
+                }
+                assert_eq!(reports.len(), 1, "detection fired exactly once");
+                assert_eq!(c.router().stats.heartbeat_misses, 6, "latency == down_after");
+                assert_eq!(c.router().stats.detected_failures, 1);
+                // More silent steps: the monitor is saturated, the
+                // pipeline never re-fires.
+                for _ in 0..3 {
+                    c.step();
+                }
+                assert!(c.take_failover_reports().is_empty(), "failover runs once");
+                assert_eq!(c.router().stats.replica_failures, 1);
+                reports.pop().unwrap()
+            } else {
+                for _ in 0..6 {
+                    c.step();
+                }
+                c.fail_replica(1).unwrap()
+            };
+            assert_eq!(c.health(1), ReplicaHealth::Down);
+            // Zero lost requests: every mid-burst id still produces its
+            // output on a survivor.
+            let mut done = std::collections::HashSet::new();
+            let mut guard = 0;
+            while done.len() < ids.len() {
+                for o in c.take_finished() {
+                    if ids.contains(&o.id) {
+                        done.insert(o.id);
+                    }
+                }
+                if done.len() == ids.len() {
+                    break;
+                }
+                guard += 1;
+                assert!(guard < 10_000, "lost requests: {}/{}", done.len(), ids.len());
+                c.step();
+            }
+            (report, c.router().stats.routed.clone())
+        };
+        let (auto, routed_a) = run(true);
+        let (declared, routed_d) = run(false);
+        assert_failover_parity(&auto, &declared);
+        assert_eq!(auto.requeued, 3, "the victim's in-flight requests requeued");
+        assert_eq!(auto.orphaned_leases, vec![77]);
+        assert_eq!(routed_a, routed_d, "identical placements either way");
+    }
+
+    #[test]
+    fn stale_gossip_snapshots_decay_affinity_toward_least_loaded() {
+        // Gossip on: the router scores last-gossiped snapshots. A
+        // silenced replica stops publishing; its snapshot's affinity
+        // decays linearly past the staleness bound until the replica is
+        // scored like a cold one (least-loaded fallback).
+        let engines: Vec<_> = (0..2)
+            .map(|_| {
+                let cfg = presets::granite_8b();
+                let reg = workload::build_registry(2, cfg.model.vocab_size, true);
+                let exec = SimExecutor::new(&cfg);
+                Engine::with_registry(cfg, reg, exec)
+            })
+            .collect();
+        let fleet = FleetConfig {
+            gossip_period_steps: 1,
+            gossip_stale_rounds: 1,
+            gossip_decay_slope: 0.25,
+            // Keep the failure detector far away: this test is about
+            // routing, not detection.
+            suspect_after_misses: 50,
+            down_after_misses: 60,
+            ..FleetConfig::default()
+        };
+        let mut c = Cluster::with_fleet(engines, RouterConfig::default(), fleet, 2).unwrap();
+        let prompt: Vec<u32> = (0..256).collect();
+        let p = SamplingParams { max_new_tokens: 8, ..Default::default() };
+        // Warm replica 0 (cold fallback → first index) and let gossip
+        // publish its summary.
+        c.submit(ModelTarget::Base, prompt.clone(), p).unwrap();
+        c.run_until_idle();
+        c.take_finished();
+        assert_eq!(c.router().stats.affinity_fallbacks, 1);
+        // A same-prefix submission scores the gossiped snapshot: warm.
+        c.submit(ModelTarget::Base, prompt.clone(), p).unwrap();
+        c.run_until_idle();
+        c.take_finished();
+        assert_eq!(c.router().stats.affinity_hits, 1);
+        assert_eq!(c.router().stats.routed, vec![2, 0]);
+        // Silence replica 0: it stops publishing. Idle steps advance the
+        // gossip round; the stale snapshot's score decays monotonically
+        // to zero.
+        c.silence_replica(0).unwrap();
+        let mut last = usize::MAX;
+        for _ in 0..8 {
+            c.step();
+            let (views, _) = c.views_for(ModelTarget::Base, &prompt, 0);
+            assert!(views[0].affinity_blocks <= last, "decay is monotone");
+            last = views[0].affinity_blocks;
+        }
+        assert_eq!(last, 0, "fully decayed past the staleness bound");
+        assert!(c.router().stats.stale_sketch_decays > 0);
+        // The same warm prefix now routes as cold: a fallback, not a hit.
+        c.submit(ModelTarget::Base, prompt.clone(), p).unwrap();
+        assert_eq!(c.router().stats.affinity_hits, 1, "no new hit: the sketch is stale");
+        assert_eq!(c.router().stats.affinity_fallbacks, 2);
+        c.run_until_idle();
+        c.take_finished();
+    }
+
+    #[test]
+    fn autoscaler_grows_under_pressure_and_shrinks_back_idle() {
+        // ISSUE-9 acceptance: a burst beyond one tiny replica's capacity
+        // drives sustained queue pressure → the autoscaler activates
+        // standbys (cold: warming until their summary fills); when the
+        // burst drains, the idle streak shrinks the fleet back to
+        // `min_replicas`, with zero lost requests.
+        let engines: Vec<_> = (0..3)
+            .map(|_| {
+                let cfg = presets::tiny();
+                let reg = workload::build_registry(2, cfg.model.vocab_size, true);
+                let exec = SimExecutor::new(&cfg);
+                Engine::with_registry(cfg, reg, exec)
+            })
+            .collect();
+        let fleet = FleetConfig {
+            autoscale: true,
+            min_replicas: 1,
+            scale_up_after_steps: 2,
+            scale_down_after_steps: 4,
+            queue_high: 2.0,
+            queue_low: 0.5,
+            cooldown_steps: 2,
+            warmup_min_blocks: 4,
+            ..FleetConfig::default()
+        };
+        let rcfg = RouterConfig { policy: RoutePolicy::LeastLoaded, ..Default::default() };
+        let mut c = Cluster::with_fleet(engines, rcfg, fleet, 1).unwrap();
+        assert_eq!((c.num_healthy(), c.num_standby()), (1, 2));
+        let p = SamplingParams { max_new_tokens: 2, ..Default::default() };
+        let ids: Vec<_> = (0..40u32)
+            .map(|k| c.submit(ModelTarget::Base, vec![1 + (k % 7); 32], p).unwrap())
+            .collect();
+        // tiny admits 8 sequences: the rest wait → sustained pressure.
+        // Two streak steps fire the first activation; it comes up COLD.
+        c.step();
+        assert_eq!(c.num_healthy(), 1, "one pressured step is not a streak");
+        c.step();
+        assert_eq!(c.num_healthy(), 2, "second consecutive pressured step scales up");
+        assert_eq!(c.router().stats.scale_ups, 1);
+        assert_eq!(c.health_detail(1), "warming", "fresh activation is cold");
+        // Queued work stays home; pressure persists through the cooldown
+        // and the fleet grows to its pre-provisioned maximum.
+        let mut outs = Vec::new();
+        for _ in 0..6 {
+            c.step();
+            outs.extend(c.take_finished());
+        }
+        assert_eq!(c.router().stats.scale_ups, 2, "cooldown paced the second activation");
+        assert_eq!(c.num_standby(), 0);
+        // Overflow lands on the activated replicas (the settled replica
+        // is busy), which warms them up for real.
+        let more: Vec<_> = (0..12u32)
+            .map(|k| c.submit(ModelTarget::Base, vec![50 + k; 32], p).unwrap())
+            .collect();
+        let routed = c.router().stats.routed.clone();
+        assert!(routed[1] + routed[2] > 0, "activated replicas take overflow: {routed:?}");
+        // Drain everything, then sit idle: the low streak retires the
+        // extra replicas one at a time, back down to min_replicas.
+        let mut steps = 0;
+        while c.has_work() {
+            c.step();
+            outs.extend(c.take_finished());
+            steps += 1;
+            assert!(steps < 10_000, "burst never drained");
+        }
+        for _ in 0..40 {
+            c.step();
+        }
+        outs.extend(c.take_finished());
+        assert_eq!(c.num_healthy(), 1, "idle fleet shrank to min_replicas");
+        assert_eq!(c.num_standby(), 2);
+        assert_eq!(c.router().stats.scale_downs, 2);
+        assert_eq!(c.stats().fleet.descaling, None);
+        // Zero lost requests across the whole swing.
+        let got: std::collections::HashSet<_> = outs.iter().map(|o| o.id).collect();
+        assert_eq!(got.len(), ids.len() + more.len());
+        for i in 0..3 {
+            c.replica(i).check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn autoscale_down_waits_for_drain_and_batch_migrates_leases() {
+        // ISSUE-9 acceptance: a scale-down victim retires only after its
+        // in-flight turn finishes, and its leased chains ship to the
+        // survivor in ONE batch (setup paid once) because the cost model
+        // says migration wins at this prefix length.
+        let mut c = Cluster::from_factory(2, RoutePolicy::RoundRobin, |_| {
+            let mut cfg = presets::granite_8b();
+            cfg.cache.prefix_migration = true;
+            let reg = workload::build_registry(2, cfg.model.vocab_size, true);
+            let exec = SimExecutor::new(&cfg);
+            Engine::with_registry(cfg, reg, exec)
+        })
+        .unwrap();
+        let p = SamplingParams { max_new_tokens: 4, ..Default::default() };
+        // Two long conversations land on replica 1 (RR: odd submissions)
+        // and pin their 64-block chains under leases.
+        let pa: Vec<u32> = (0..1024).collect();
+        let pb: Vec<u32> = (10_000..10_000 + 1024).collect();
+        let _f0 = c.submit(ModelTarget::Base, vec![1; 64], p).unwrap(); // → 0
+        let idb = c.submit(ModelTarget::Base, pa.clone(), p).unwrap(); // → 1
+        let _f1 = c.submit(ModelTarget::Base, vec![2; 64], p).unwrap(); // → 0
+        let idc = c.submit(ModelTarget::Base, pb.clone(), p).unwrap(); // → 1
+        c.run_until_idle();
+        c.take_finished();
+        assert_eq!((idb.0 % 2, idc.0 % 2), (1, 1));
+        let pinned_a = c.acquire_lease(41, &pa, 0, Some(idb));
+        let pinned_b = c.acquire_lease(42, &pb, 0, Some(idc));
+        assert!(pinned_a >= 60 && pinned_b >= 60, "{pinned_a}/{pinned_b}");
+        // A long turn starts on the future victim...
+        let _d0 = c.submit(ModelTarget::Base, vec![3; 64], p).unwrap(); // → 0
+        let d1 = c
+            .submit(
+                ModelTarget::Base,
+                vec![4; 64],
+                SamplingParams { max_new_tokens: 64, ..Default::default() },
+            )
+            .unwrap(); // → 1
+        // ...then the autoscaler starts shrinking: the queues are "idle"
+        // (the signal is waiting depth, not running work).
+        let fleet = FleetConfig {
+            autoscale: true,
+            min_replicas: 1,
+            scale_down_after_steps: 2,
+            queue_low: 10.0,
+            queue_high: 20.0,
+            cooldown_steps: 2,
+            ..FleetConfig::default()
+        };
+        c.set_fleet_config(fleet).unwrap();
+        let mut outs = Vec::new();
+        let mut saw_draining_with_work = false;
+        for _ in 0..400 {
+            c.step();
+            outs.extend(c.take_finished());
+            if c.health(1) == ReplicaHealth::Draining && c.replica(1).has_work() {
+                saw_draining_with_work = true;
+                assert_eq!(c.stats().fleet.descaling, Some(1));
+            }
+            if !c.has_work() && c.health(1) == ReplicaHealth::Standby {
+                break;
+            }
+        }
+        assert!(saw_draining_with_work, "victim drained while a turn was in flight");
+        assert!(outs.iter().any(|o| o.id == d1), "in-flight turn finished where it started");
+        assert_eq!(c.health(1), ReplicaHealth::Standby);
+        assert_eq!(c.router().stats.scale_downs, 1);
+        // Both leased chains shipped to the survivor in one batch.
+        assert_eq!(c.router().stats.migrations, 2);
+        assert!(c.router().stats.migrated_blocks >= 120, "{}", c.router().stats.migrated_blocks);
+        assert!(c.replica(0).lease_chain(41).is_some());
+        assert!(c.replica(0).lease_chain(42).is_some());
+        assert!(c.replica(1).lease_chain(41).is_none());
+        assert_eq!(c.replica(1).leased_blocks(), 0, "the retired replica pins nothing");
+        for i in 0..2 {
+            c.replica(i).check_invariants().unwrap();
+        }
     }
 }

@@ -71,6 +71,15 @@ pub struct ReplicaView {
     /// a draining replica still finishes its in-flight work but accepts
     /// nothing new, a down replica holds nothing at all.
     pub healthy: bool,
+    /// The health monitor holds missed heartbeats against this replica
+    /// (DESIGN.md §19). Still routable — suspicion is not death — but
+    /// charged [`SUSPECT_LOAD_PENALTY`] virtual load so traffic drifts
+    /// away while the monitor decides.
+    pub suspected: bool,
+    /// Freshly activated replica still warming its gossiped summary:
+    /// routed overflow-only — eligible just when every settled healthy
+    /// replica already has work in flight.
+    pub warming: bool,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -108,6 +117,12 @@ pub struct Placement {
     pub replica: usize,
     pub kind: PlacementKind,
 }
+
+/// Virtual load charged to a monitor-suspected replica: one suspected
+/// replica is "worth" this many queued requests when trading affinity
+/// against placement risk. Round-robin, which has no load axis, instead
+/// skips suspected replicas whenever a trusted one exists.
+pub const SUSPECT_LOAD_PENALTY: usize = 8;
 
 #[derive(Debug)]
 pub struct Router {
@@ -160,6 +175,38 @@ impl Router {
             views.iter().any(|v| v.healthy),
             "routing over zero healthy replicas"
         );
+        // Self-driving adjustments (DESIGN.md §19). Both are strict
+        // no-ops on a settled fleet (no warming, no suspicion), so the
+        // pre-§19 placement stream is bit-identical — pinned by tests.
+        let adjusted: Option<Vec<ReplicaView>> =
+            if views.iter().any(|v| v.healthy && (v.warming || v.suspected)) {
+                let mut vs = views.to_vec();
+                // Warming replicas take only overflow: while any settled
+                // healthy replica sits idle, a cold summary must not win
+                // a placement it cannot score honestly.
+                if vs.iter().any(|v| v.healthy && !v.warming && v.load == 0) {
+                    for v in vs.iter_mut() {
+                        if v.warming {
+                            v.healthy = false;
+                        }
+                    }
+                }
+                // Suspected replicas carry virtual load; round-robin has
+                // no load axis, so it skips them when it has a choice.
+                let have_trusted = vs.iter().any(|v| v.healthy && !v.suspected);
+                for v in vs.iter_mut() {
+                    if v.healthy && v.suspected {
+                        v.load += SUSPECT_LOAD_PENALTY;
+                        if have_trusted && self.cfg.policy == RoutePolicy::RoundRobin {
+                            v.healthy = false;
+                        }
+                    }
+                }
+                Some(vs)
+            } else {
+                None
+            };
+        let views = adjusted.as_deref().unwrap_or(views);
         match self.cfg.policy {
             RoutePolicy::RoundRobin => {
                 // Advance the cursor past unhealthy replicas (at most one
@@ -266,6 +313,8 @@ mod tests {
                 affinity_blocks: aff,
                 adapter_blocks: 0,
                 healthy: true,
+                suspected: false,
+                warming: false,
             })
             .collect()
     }
@@ -279,6 +328,8 @@ mod tests {
                 affinity_blocks: aff,
                 adapter_blocks: ad,
                 healthy: true,
+                suspected: false,
+                warming: false,
             })
             .collect()
     }
@@ -446,6 +497,74 @@ mod tests {
         assert_eq!(r.stats.total_routed(), 0);
         assert_eq!(r.stats.affinity_hits, 0);
         assert_eq!(r.stats.affinity_fallbacks, 0);
+    }
+
+    #[test]
+    fn suspected_replicas_are_penalized_not_excluded() {
+        // LeastLoaded: a suspected idle replica (0 + 8 virtual) loses to
+        // a trusted replica with 5 queued — but still wins against one
+        // with 9 queued: penalized, not evacuated.
+        let mut r = router(RoutePolicy::LeastLoaded, 2);
+        let mut v = views(&[(0, 0), (5, 0)]);
+        v[0].suspected = true;
+        assert_eq!(r.choose(&v).replica, 1);
+        let mut v = views(&[(0, 0), (9, 0)]);
+        v[0].suspected = true;
+        assert_eq!(r.choose(&v).replica, 0);
+        // PrefixAffinity: the suspected warm replica's score drops by
+        // penalty × SUSPECT_LOAD_PENALTY (2.0 × 8 = 16 blocks) — an
+        // 8-block prefix no longer carries it past a clean cold replica.
+        let mut r = router(RoutePolicy::PrefixAffinity, 2);
+        let mut v = views(&[(0, 8), (0, 0)]);
+        v[0].suspected = true;
+        let p = r.choose(&v);
+        assert_eq!(p.replica, 1);
+        assert_eq!(p.kind, PlacementKind::Cold);
+        // ... but a long-enough prefix still wins: suspicion is a
+        // penalty, and 40 - 16 = 24 > 0.
+        let mut v = views(&[(0, 40), (0, 0)]);
+        v[0].suspected = true;
+        let p = r.choose(&v);
+        assert_eq!(p.replica, 0);
+        assert_eq!(p.kind, PlacementKind::Warm { blocks: 40 });
+        // RoundRobin: skipped while a trusted replica exists, used when
+        // every healthy replica is suspected.
+        let mut r = router(RoutePolicy::RoundRobin, 2);
+        let mut v = views(&[(0, 0), (0, 0)]);
+        v[0].suspected = true;
+        let picks: Vec<usize> = (0..3).map(|_| r.choose(&v).replica).collect();
+        assert_eq!(picks, vec![1, 1, 1]);
+        v[1].suspected = true;
+        // All suspected: no trusted alternative, so the cursor (now at
+        // index 0 after three skip-advances) proceeds through them.
+        assert_eq!(r.choose(&v).replica, 0, "all suspected: cursor proceeds");
+    }
+
+    #[test]
+    fn warming_replicas_take_only_overflow() {
+        // A settled replica is idle: the warming replica is invisible to
+        // every policy, even as the least-loaded candidate.
+        let mut r = router(RoutePolicy::LeastLoaded, 2);
+        let mut v = views(&[(3, 0), (0, 0)]);
+        v[1].warming = true;
+        assert_eq!(r.choose(&v).replica, 0, "idle settled replica absorbs");
+        // Every settled replica is busy: overflow flows to the warming
+        // replica (it is the least-loaded healthy candidate now).
+        let mut v = views(&[(3, 0), (1, 0)]);
+        v[1].warming = true;
+        assert_eq!(r.choose(&v).replica, 1, "overflow reaches the cold replica");
+        // Same under PrefixAffinity's cold fallback.
+        let mut r = router(RoutePolicy::PrefixAffinity, 2);
+        let mut v = views(&[(2, 0), (0, 0)]);
+        v[1].warming = true;
+        let p = r.choose(&v);
+        assert_eq!(p.replica, 1);
+        assert_eq!(p.kind, PlacementKind::Cold);
+        // A fleet that is ALL warming still routes (bootstrap).
+        let mut v = views(&[(0, 0), (2, 0)]);
+        v[0].warming = true;
+        v[1].warming = true;
+        assert_eq!(r.choose(&v).replica, 0);
     }
 
     #[test]

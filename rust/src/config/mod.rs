@@ -143,6 +143,155 @@ pub struct SchedulerConfig {
     pub admission_watermark: f64,
 }
 
+/// Fleet-level self-driving knobs (DESIGN.md §19): heartbeat failure
+/// detection, routing-summary gossip, and the autoscaler. Lives outside
+/// [`EngineConfig`] because it configures the *cluster* control loop, not
+/// any single replica; every default reproduces the pre-§19 behavior
+/// exactly (live summaries, no monitor-driven failover, fixed fleet).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Consecutive missed heartbeats before a replica is `Suspected`
+    /// (routing-penalized, not evacuated).
+    pub suspect_after_misses: u32,
+    /// Consecutive missed heartbeats before a replica is declared `Down`
+    /// and the failover pipeline runs without any admin call. Detection
+    /// latency in steps equals this number, exactly.
+    pub down_after_misses: u32,
+    /// Steps between gossip rounds for routing summaries. 0 = live
+    /// gossip: affinity scoring reads each replica's summary directly,
+    /// bit-identical to the pre-gossip router (pinned by tests).
+    pub gossip_period_steps: u32,
+    /// Gossip rounds of staleness tolerated before a snapshot's affinity
+    /// score starts decaying toward least-loaded.
+    pub gossip_stale_rounds: u32,
+    /// Decay slope per round past the staleness bound: a snapshot
+    /// `s` rounds past the bound scores `max(0, 1 - slope*s)` of its
+    /// affinity value. A stale sketch loses arguments, it never mis-routes.
+    pub gossip_decay_slope: f64,
+    /// Master switch for the autoscaler control loop.
+    pub autoscale: bool,
+    /// Fleet never shrinks below this many active replicas.
+    pub min_replicas: usize,
+    /// Consecutive steps of queue pressure above `queue_high` (per active
+    /// replica) before a standby replica is activated.
+    pub scale_up_after_steps: u32,
+    /// Consecutive steps of queue depth below `queue_low` before the
+    /// highest-index active replica starts draining toward standby.
+    pub scale_down_after_steps: u32,
+    /// Queue-depth-per-active-replica high watermark (scale-up signal;
+    /// KV-pool pressure above the admission watermark also counts).
+    pub queue_high: f64,
+    /// Queue-depth-per-active-replica low watermark (scale-down signal).
+    pub queue_low: f64,
+    /// Steps after any scale event during which the autoscaler holds.
+    pub cooldown_steps: u32,
+    /// A freshly activated replica is `warming` — routed overflow only —
+    /// until its gossiped summary holds at least this many blocks.
+    pub warmup_min_blocks: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            suspect_after_misses: 3,
+            down_after_misses: 6,
+            gossip_period_steps: 0,
+            gossip_stale_rounds: 2,
+            gossip_decay_slope: 0.5,
+            autoscale: false,
+            min_replicas: 1,
+            scale_up_after_steps: 8,
+            scale_down_after_steps: 64,
+            queue_high: 4.0,
+            queue_low: 0.5,
+            cooldown_steps: 32,
+            warmup_min_blocks: 8,
+        }
+    }
+}
+
+impl FleetConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.suspect_after_misses > 0,
+            "suspect_after_misses must be > 0"
+        );
+        anyhow::ensure!(
+            self.down_after_misses > self.suspect_after_misses,
+            "down_after_misses ({}) must exceed suspect_after_misses ({})",
+            self.down_after_misses,
+            self.suspect_after_misses
+        );
+        anyhow::ensure!(self.gossip_decay_slope >= 0.0, "negative decay slope");
+        anyhow::ensure!(self.min_replicas > 0, "min_replicas must be > 0");
+        anyhow::ensure!(
+            self.queue_high > self.queue_low,
+            "queue_high must exceed queue_low"
+        );
+        anyhow::ensure!(self.scale_up_after_steps > 0, "zero scale_up_after_steps");
+        anyhow::ensure!(
+            self.scale_down_after_steps > 0,
+            "zero scale_down_after_steps"
+        );
+        Ok(())
+    }
+
+    /// Load from a JSON object (`serve --fleet-config`); unknown keys are
+    /// rejected to catch typos, exactly like `EngineConfig::from_json`.
+    pub fn from_json(j: &Json) -> anyhow::Result<FleetConfig> {
+        let mut f = FleetConfig::default();
+        if let Some(obj) = j.as_obj() {
+            for (k, v) in obj {
+                match k.as_str() {
+                    "suspect_after_misses" => {
+                        f.suspect_after_misses =
+                            v.as_u64().unwrap_or(f.suspect_after_misses as u64) as u32
+                    }
+                    "down_after_misses" => {
+                        f.down_after_misses =
+                            v.as_u64().unwrap_or(f.down_after_misses as u64) as u32
+                    }
+                    "gossip_period_steps" => {
+                        f.gossip_period_steps =
+                            v.as_u64().unwrap_or(f.gossip_period_steps as u64) as u32
+                    }
+                    "gossip_stale_rounds" => {
+                        f.gossip_stale_rounds =
+                            v.as_u64().unwrap_or(f.gossip_stale_rounds as u64) as u32
+                    }
+                    "gossip_decay_slope" => {
+                        f.gossip_decay_slope = v.as_f64().unwrap_or(f.gossip_decay_slope)
+                    }
+                    "autoscale" => f.autoscale = v.as_bool().unwrap_or(f.autoscale),
+                    "min_replicas" => {
+                        f.min_replicas = v.as_u64().unwrap_or(f.min_replicas as u64) as usize
+                    }
+                    "scale_up_after_steps" => {
+                        f.scale_up_after_steps =
+                            v.as_u64().unwrap_or(f.scale_up_after_steps as u64) as u32
+                    }
+                    "scale_down_after_steps" => {
+                        f.scale_down_after_steps =
+                            v.as_u64().unwrap_or(f.scale_down_after_steps as u64) as u32
+                    }
+                    "queue_high" => f.queue_high = v.as_f64().unwrap_or(f.queue_high),
+                    "queue_low" => f.queue_low = v.as_f64().unwrap_or(f.queue_low),
+                    "cooldown_steps" => {
+                        f.cooldown_steps = v.as_u64().unwrap_or(f.cooldown_steps as u64) as u32
+                    }
+                    "warmup_min_blocks" => {
+                        f.warmup_min_blocks =
+                            v.as_u64().unwrap_or(f.warmup_min_blocks as u64) as usize
+                    }
+                    other => anyhow::bail!("unknown fleet config key `{other}`"),
+                }
+            }
+        }
+        f.validate()?;
+        Ok(f)
+    }
+}
+
 /// Everything the engine needs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EngineConfig {
@@ -285,6 +434,36 @@ mod tests {
         let mut cfg = presets::tiny();
         cfg.scheduler.max_seq_len = 150; // not multiple of 16
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn fleet_defaults_validate_and_json_roundtrips() {
+        let d = FleetConfig::default();
+        d.validate().unwrap();
+        assert_eq!(d.gossip_period_steps, 0, "default gossip is live");
+        assert!(!d.autoscale, "autoscaler is opt-in");
+        let j = Json::parse(
+            r#"{"autoscale": true, "min_replicas": 2, "gossip_period_steps": 4,
+                "suspect_after_misses": 2, "down_after_misses": 5}"#,
+        )
+        .unwrap();
+        let f = FleetConfig::from_json(&j).unwrap();
+        assert!(f.autoscale);
+        assert_eq!(f.min_replicas, 2);
+        assert_eq!(f.gossip_period_steps, 4);
+        assert_eq!(f.down_after_misses, 5);
+    }
+
+    #[test]
+    fn fleet_rejects_unknown_keys_and_bad_thresholds() {
+        let j = Json::parse(r#"{"autoscael": true}"#).unwrap();
+        assert!(FleetConfig::from_json(&j).is_err());
+        let mut f = FleetConfig::default();
+        f.down_after_misses = f.suspect_after_misses; // down must be strictly later
+        assert!(f.validate().is_err());
+        let mut f = FleetConfig::default();
+        f.queue_low = f.queue_high + 1.0;
+        assert!(f.validate().is_err());
     }
 
     #[test]

@@ -481,6 +481,15 @@ impl Coordinator {
         self.owner.get(&id).map(|(ci, _)| *ci)
     }
 
+    /// The stage name behind an in-flight request (None once retired or
+    /// never owned) — lets a streaming server label per-token events with
+    /// the stage they belong to while the stage is still generating.
+    pub fn stage_name_of(&self, id: RequestId) -> Option<&str> {
+        self.owner
+            .get(&id)
+            .map(|(ci, sid)| self.convs[*ci].graph.stage(*sid).name.as_str())
+    }
+
     /// The request ids of every submitted-but-unfinished stage (for
     /// external drivers that must hand leftovers back on abort).
     pub fn in_flight_ids(&self) -> Vec<RequestId> {

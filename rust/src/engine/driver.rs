@@ -244,6 +244,29 @@ pub trait EngineDriver {
         anyhow::bail!("no fleet: replica {i} administration needs a multi-replica cluster")
     }
 
+    /// Fault injection (`POST /cluster/replicas/{i}/silence`): stop a
+    /// replica's heartbeats and gossip while it keeps its state and its
+    /// work — a network partition the failure detector must notice
+    /// (DESIGN.md §19). Only meaningful on a fleet.
+    fn silence_replica(&mut self, i: usize) -> anyhow::Result<()> {
+        anyhow::bail!("no fleet: replica {i} administration needs a multi-replica cluster")
+    }
+
+    /// Failovers the fleet's failure detector ran on its own (no admin
+    /// call). The serving layer drains these once per driver step and
+    /// applies the same session repair an operator-declared failure
+    /// gets. Empty off-cluster.
+    fn take_failover_reports(&mut self) -> Vec<crate::cluster::FailoverReport> {
+        Vec::new()
+    }
+
+    /// The `GET /cluster/health` document: the failure detector's view
+    /// of every replica. None off-cluster (a single engine has no
+    /// detector; the endpoint 404s).
+    fn cluster_health(&self) -> Option<crate::util::json::Json> {
+        None
+    }
+
     /// Count conversations whose stickiness the serving layer cleared
     /// during failover repair (the sessions re-stick on their next turn;
     /// the fleet owns the `resticks_total` counter). No-op off-cluster.

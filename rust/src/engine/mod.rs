@@ -736,6 +736,12 @@ impl<E: Executor> Engine<E> {
         self.kv.lease_chain(lease)
     }
 
+    /// Every lease key this replica holds, oldest first — the enumeration
+    /// a batched autoscale-down evacuation walks (DESIGN.md §19).
+    pub(crate) fn lease_keys(&self) -> Vec<u64> {
+        self.kv.lease_keys()
+    }
+
     /// Drain finished request records (ownership transferred).
     pub fn take_finished(&mut self) -> Vec<RequestOutput> {
         std::mem::take(&mut self.finished)

@@ -19,7 +19,10 @@
 //! failover (ours): kill one of four replicas mid-burst — per-round
 //! hit-rate dip and re-warm, zero lost requests · migration (ours):
 //! migrate-vs-recompute next-turn TTFT across prefix lengths after a
-//! home-replica kill, plus K-way fork fan-out vs K independent sessions.
+//! home-replica kill, plus K-way fork fan-out vs K independent sessions ·
+//! selfdriving (ours): the failure detector declaring a silenced
+//! replica's failover unattended, and the autoscaler riding a diurnal
+//! load cycle up and back down with zero lost requests.
 
 pub mod ablations;
 pub mod adapter_memory;
@@ -37,6 +40,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod migration;
 pub mod scale;
+pub mod selfdriving;
 pub mod table1;
 pub mod table2;
 
@@ -240,6 +244,7 @@ pub fn run_all(quick: bool) -> Vec<Table> {
     out.push(adapter_memory::run(quick));
     out.push(failover::run(quick));
     out.push(migration::run(quick));
+    out.extend(selfdriving::run(quick));
     out
 }
 
@@ -262,6 +267,7 @@ pub fn run_by_id(id: &str, quick: bool) -> Vec<Table> {
         "adapter_memory" => vec![adapter_memory::run(quick)],
         "failover" => vec![failover::run(quick)],
         "migration" => vec![migration::run(quick)],
+        "selfdriving" => selfdriving::run(quick),
         "ablations" => ablations::run_all(),
         // Deliberately not part of `all`: the scale and concurrency
         // harnesses are long-running bench-tier figures (like
@@ -270,8 +276,8 @@ pub fn run_by_id(id: &str, quick: bool) -> Vec<Table> {
         "concurrency" => vec![concurrency::run(quick)],
         other => panic!(
             "unknown figure id `{other}` (try table1, fig6..fig15, cluster, \
-             adapter_memory, failover, migration, ablations, scale, \
-             concurrency, all)"
+             adapter_memory, failover, migration, selfdriving, ablations, \
+             scale, concurrency, all)"
         ),
     }
 }

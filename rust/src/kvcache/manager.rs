@@ -296,6 +296,15 @@ impl KvCacheManager {
         self.leases.len()
     }
 
+    /// Every live lease key in acquisition order (oldest first) — the
+    /// deterministic enumeration a batched evacuation walks when a
+    /// draining replica ships all its parked sessions at once
+    /// (DESIGN.md §19). Order matters: it fixes both the destination
+    /// round-robin and the op-count of the transfer, so tests can pin it.
+    pub fn lease_keys(&self) -> Vec<u64> {
+        self.lease_order.clone()
+    }
+
     /// Distinct physical blocks held by leases (for idle-leak accounting:
     /// two sessions sharing a tenant prefix pin the same block twice but
     /// occupy it once).

@@ -106,6 +106,22 @@ pub struct RoutingMetrics {
     pub migration_recompute_fallbacks: u64,
     /// Child sessions created by `POST /v1/sessions/{id}/fork`.
     pub session_forks: u64,
+    /// Heartbeats the health monitor expected but did not receive
+    /// (DESIGN.md §19; one per silent replica per step).
+    pub heartbeat_misses: u64,
+    /// `Up -> Suspected` transitions recorded by the health monitor.
+    pub suspected_transitions: u64,
+    /// Replicas the monitor declared `Down` after sustained misses —
+    /// failures *detected*, as opposed to `replica_failures` which also
+    /// counts operator-declared deaths.
+    pub detected_failures: u64,
+    /// Standby replicas activated by the autoscaler.
+    pub scale_ups: u64,
+    /// Active replicas drained back to standby by the autoscaler.
+    pub scale_downs: u64,
+    /// Affinity scores decayed because a gossiped summary snapshot was
+    /// older than the staleness bound.
+    pub stale_sketch_decays: u64,
 }
 
 impl RoutingMetrics {
@@ -163,6 +179,12 @@ impl RoutingMetrics {
             ("migrated_blocks_total", "KV blocks installed at destinations by migrations", self.migrated_blocks),
             ("migration_recompute_fallbacks_total", "Migration attempts declined by the cost model", self.migration_recompute_fallbacks),
             ("session_forks_total", "Child sessions created by session fork", self.session_forks),
+            ("heartbeat_misses_total", "Heartbeats expected but not received", self.heartbeat_misses),
+            ("suspected_transitions_total", "Replicas transitioned Up -> Suspected", self.suspected_transitions),
+            ("detected_failures_total", "Replicas declared Down by the health monitor", self.detected_failures),
+            ("scale_ups_total", "Standby replicas activated by the autoscaler", self.scale_ups),
+            ("scale_downs_total", "Active replicas drained to standby by the autoscaler", self.scale_downs),
+            ("stale_sketch_decays_total", "Affinity scores decayed for stale gossip snapshots", self.stale_sketch_decays),
         ] {
             s.push_str(&format!(
                 "# HELP alora_serve_{name} {help}\n# TYPE alora_serve_{name} counter\nalora_serve_{name} {v}\n"
@@ -849,6 +871,27 @@ mod tests {
         assert!(text.contains("alora_serve_requeued_requests_total 4"), "{text}");
         assert!(text.contains("alora_serve_orphaned_leases_total 2"), "{text}");
         assert!(text.contains("alora_serve_resticks_total 3"), "{text}");
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.split_whitespace().count() == 2, "bad line: {line}");
+        }
+    }
+
+    #[test]
+    fn selfdriving_counters_render() {
+        let mut r = RoutingMetrics::new(2);
+        r.heartbeat_misses = 9;
+        r.suspected_transitions = 2;
+        r.detected_failures = 1;
+        r.scale_ups = 3;
+        r.scale_downs = 2;
+        r.stale_sketch_decays = 7;
+        let text = r.render_prometheus();
+        assert!(text.contains("alora_serve_heartbeat_misses_total 9"), "{text}");
+        assert!(text.contains("alora_serve_suspected_transitions_total 2"), "{text}");
+        assert!(text.contains("alora_serve_detected_failures_total 1"), "{text}");
+        assert!(text.contains("alora_serve_scale_ups_total 3"), "{text}");
+        assert!(text.contains("alora_serve_scale_downs_total 2"), "{text}");
+        assert!(text.contains("alora_serve_stale_sketch_decays_total 7"), "{text}");
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             assert!(line.split_whitespace().count() == 2, "bad line: {line}");
         }

@@ -47,17 +47,24 @@
 //!   POST /generate   legacy one-shot (bit-identical response shape);
 //!                    thin shim over the same submit/wait internals
 //!   POST /pipeline   stage-graph spec (single or {"pipelines": [...]});
-//!                    "stream": true on a single spec -> SSE `stage`
-//!                    events as stages retire, then `done`
+//!                    "stream": true on a single spec -> SSE
+//!                    `stage_started` / `token` / `stage_finished` events
+//!                    as stages generate and retire, then `done`
 //!   GET  /metrics    Prometheus text exposition
 //!   GET  /cluster    fleet stats JSON incl. per-replica health (single
 //!                    engines report a one-replica document — never 404)
-//!   POST /cluster/replicas/{i}/{fail|drain|restore}
+//!   GET  /cluster/health
+//!                    failure-detector document: per-replica health state
+//!                    machine, miss counters, silenced/warming flags
+//!                    (404 on a single engine — no heartbeat surface)
+//!   POST /cluster/replicas/{i}/{fail|drain|restore|silence}
 //!                    replica administration (no body): fail evacuates +
 //!                    requeues the replica's work onto survivors and
 //!                    repairs affected sessions; drain excludes it from
 //!                    new placements while it finishes; restore returns
-//!                    it to rotation (cold after a failure)
+//!                    it to rotation (cold after a failure) or lifts a
+//!                    silence; silence injects a heartbeat fault (the
+//!                    detector walks it Up -> Suspected -> Down)
 //!   GET  /health     {"status": "ok"}
 //!
 //! Every error is a structured envelope with a meaningful status code:
@@ -259,7 +266,10 @@ impl StreamSink {
 
 /// What one wake-up of a pipeline wait produced.
 enum GroupWait {
-    Ready(Vec<RequestOutput>),
+    /// Per-token events (streaming runs only — empty otherwise) plus
+    /// newly retired stage outputs. Either vector may be empty, never
+    /// both.
+    Ready { events: Vec<TurnEvent>, outs: Vec<RequestOutput> },
     /// Stages lost to a replica failure (requeue rejected everywhere).
     Lost(Vec<RequestId>),
     TimedOut,
@@ -267,7 +277,9 @@ enum GroupWait {
 
 /// A pipeline run's completion channel: every stage request of the run
 /// registers against the same group, so the handler wakes once per batch
-/// of retirements instead of once per driver step.
+/// of retirements instead of once per driver step. A streaming run
+/// additionally watches its stage requests; their `started`/`token`
+/// events ride the same channel.
 pub(crate) struct PipeGroup {
     state: Mutex<GroupState>,
     cv: Condvar,
@@ -275,6 +287,7 @@ pub(crate) struct PipeGroup {
 
 #[derive(Default)]
 struct GroupState {
+    events: Vec<TurnEvent>,
     ready: Vec<RequestOutput>,
     lost: Vec<RequestId>,
 }
@@ -289,6 +302,17 @@ impl PipeGroup {
         self.cv.notify_all();
     }
 
+    fn push_event(&self, ev: TurnEvent) {
+        // The `Finished` copy is redundant here: the canonical output
+        // arrives via `deliver` → `push_done`, which also drives the
+        // coordinator's chaining. Buffering both would double-retire.
+        if matches!(ev, TurnEvent::Finished { .. }) {
+            return;
+        }
+        self.state.lock().unwrap().events.push(ev);
+        self.cv.notify_all();
+    }
+
     fn push_lost(&self, id: RequestId) {
         self.state.lock().unwrap().lost.push(id);
         self.cv.notify_all();
@@ -297,8 +321,11 @@ impl PipeGroup {
     fn wait(&self, deadline: Instant) -> GroupWait {
         let mut g = self.state.lock().unwrap();
         loop {
-            if !g.ready.is_empty() {
-                return GroupWait::Ready(std::mem::take(&mut g.ready));
+            if !g.events.is_empty() || !g.ready.is_empty() {
+                return GroupWait::Ready {
+                    events: std::mem::take(&mut g.events),
+                    outs: std::mem::take(&mut g.ready),
+                };
             }
             if !g.lost.is_empty() {
                 return GroupWait::Lost(std::mem::take(&mut g.lost));
@@ -403,18 +430,25 @@ impl WaiterTable {
         // never registered: drop the output.
     }
 
-    /// Route one turn event (driver thread) into its stream sink, if the
-    /// subscription is still registered.
+    /// Route one turn event (driver thread) into its stream sink or
+    /// pipeline group, if the subscription is still registered.
     fn push_event(&self, ev: TurnEvent) {
-        let sink = {
+        enum Target {
+            Sink(Arc<StreamSink>),
+            Group(Arc<PipeGroup>),
+        }
+        let target = {
             let shard = self.shard(ev.id()).lock().unwrap();
             match shard.get(&ev.id()) {
-                Some(Entry::Stream(sink)) => Some(Arc::clone(sink)),
+                Some(Entry::Stream(sink)) => Some(Target::Sink(Arc::clone(sink))),
+                Some(Entry::Group(g)) => Some(Target::Group(Arc::clone(g))),
                 _ => None, // abandoned between emission and drain: drop
             }
         };
-        if let Some(sink) = sink {
-            sink.push(ev);
+        match target {
+            Some(Target::Sink(sink)) => sink.push(ev),
+            Some(Target::Group(g)) => g.push_event(ev),
+            None => {}
         }
     }
 
@@ -493,6 +527,7 @@ pub(crate) fn classify(e: anyhow::Error) -> ApiError {
     } else if message.contains("already down")
         || message.contains("already up")
         || message.contains("only an up replica")
+        || message.contains("can be silenced")
         || message.contains("last healthy")
         || message.contains("no healthy survivor")
     {
@@ -581,6 +616,7 @@ impl<D: EngineDriver + Send + 'static> Server<D> {
                     if engine.has_work() {
                         engine.step();
                         route_emissions(&mut engine, &shared);
+                        repair_detected_failovers(&mut engine, &shared);
                     }
                 }
                 // Final drain: commands enqueued while we were breaking
@@ -658,6 +694,21 @@ fn route_emissions<D: EngineDriver>(engine: &mut D, shared: &Shared<D>) {
     }
     for out in engine.take_finished() {
         shared.waiters.deliver(out);
+    }
+}
+
+/// Failovers the fleet's failure detector declared during the step just
+/// taken (DESIGN.md §19) get the SAME session repair an operator-declared
+/// `POST /cluster/replicas/{i}/fail` gets — orphaned leases forgotten,
+/// stranded sessions unstuck, rejected waiters failed now rather than at
+/// their timeout. Runs on the driver thread right after the step, so no
+/// command can observe stale stickiness in between.
+fn repair_detected_failovers<D: EngineDriver>(engine: &mut D, shared: &Shared<D>) {
+    for report in engine.take_failover_reports() {
+        shared.sessions.repair_after_failover(engine, &report);
+        for id in &report.rejected {
+            shared.waiters.reject(*id);
+        }
     }
 }
 
@@ -798,6 +849,18 @@ fn route<D: EngineDriver>(method: &str, path: &str, body: &[u8], shared: &Shared
                     )),
                 }
             }
+            "/cluster/health" => {
+                let doc = shared.call(|engine, _| engine.cluster_health().map(|j| j.to_string()));
+                match doc {
+                    Some(body) => full_ok(body),
+                    // Single engines have no heartbeat surface — unlike
+                    // `GET /cluster` there is no one-replica equivalent.
+                    None => full_err(ApiError::not_found(
+                        "not_found",
+                        "health detection needs a multi-replica cluster",
+                    )),
+                }
+            }
             "/v1/sessions" => from_result(v1::list_sessions(shared)),
             p => match parse_session_path(p) {
                 Some((sid, SessionRoute::Root)) => from_result(v1::get_session(shared, sid)),
@@ -813,7 +876,7 @@ fn route<D: EngineDriver>(method: &str, path: &str, body: &[u8], shared: &Shared
             if path.starts_with("/cluster/replicas/") {
                 return full_err(ApiError::not_found(
                     "not_found",
-                    format!("no route for POST {path} (actions: fail, drain, restore)"),
+                    format!("no route for POST {path} (actions: fail, drain, restore, silence)"),
                 ));
             }
             if body.is_empty() {
@@ -870,19 +933,19 @@ fn route<D: EngineDriver>(method: &str, path: &str, body: &[u8], shared: &Shared
     }
 }
 
-/// Parse `/cluster/replicas/{i}/{fail|drain|restore}` admin paths.
+/// Parse `/cluster/replicas/{i}/{fail|drain|restore|silence}` admin paths.
 fn parse_replica_action(path: &str) -> Option<(usize, &str)> {
     let rest = path.strip_prefix("/cluster/replicas/")?;
     let mut parts = rest.split('/');
     let i: usize = parts.next()?.parse().ok()?;
     let action = parts.next()?;
-    if parts.next().is_some() || !matches!(action, "fail" | "drain" | "restore") {
+    if parts.next().is_some() || !matches!(action, "fail" | "drain" | "restore" | "silence") {
         return None;
     }
     Some((i, action))
 }
 
-/// Replica administration (`POST /cluster/replicas/{i}/{fail|drain|restore}`).
+/// Replica administration (`POST /cluster/replicas/{i}/{fail|drain|restore|silence}`).
 /// `fail` additionally repairs the session layer — orphaned leases are
 /// forgotten, stranded conversations lose their stickiness peer (they
 /// re-stick on their next turn), and turns whose requeue was rejected are
@@ -932,6 +995,16 @@ fn replica_action<D: EngineDriver>(
             Ok(()) => Ok(Json::obj(vec![
                 ("replica", Json::num(i as f64)),
                 ("health", Json::str("up")),
+            ])),
+        }),
+        // Fault injection (DESIGN.md §19): the replica stops heartbeating
+        // while keeping its state and its work; the failure detector walks
+        // it Up → Suspected → Down unless `restore` lifts the silence.
+        "silence" => shared.call(move |engine, _| match engine.silence_replica(i) {
+            Err(e) => Err(classify(e)),
+            Ok(()) => Ok(Json::obj(vec![
+                ("replica", Json::num(i as f64)),
+                ("silenced", Json::Bool(true)),
             ])),
         }),
         _ => unreachable!("parse_replica_action filtered"),
@@ -1247,7 +1320,9 @@ fn run_pipeline<D: EngineDriver>(spec_json: &Json, shared: &Shared<D>) -> anyhow
     let mut outcome: Option<anyhow::Error> = None;
     while outcome.is_none() && !co.is_done() {
         match group.wait(deadline) {
-            GroupWait::Ready(outs) => {
+            // Non-streaming runs never watch their stage requests, so
+            // `events` is always empty here.
+            GroupWait::Ready { outs, .. } => {
                 let g = Arc::clone(&group);
                 let step = shared
                     .call(move |engine, sh| pipeline_chain(engine, sh, co, convs, batched, &g, outs));
@@ -1291,13 +1366,16 @@ fn run_pipeline<D: EngineDriver>(spec_json: &Json, shared: &Shared<D>) -> anyhow
 
 /// What one wake-up of a streaming wait produced.
 enum StreamStep {
-    /// Newly retired stage JSONs, whether the run completed, makespan.
-    Emit(Vec<Json>, bool, f64),
+    /// Per-token events labeled with their stage name, newly retired
+    /// stage JSONs, whether the run completed, makespan.
+    Emit(Vec<(String, TurnEvent)>, Vec<Json>, bool, f64),
     Fail(ApiError),
 }
 
 /// The single-conversation chaining command used by the streaming path.
-/// Returns (coordinator, failure, clock).
+/// Returns (coordinator, failure, clock). Freshly submitted downstream
+/// stages are watched so their `started`/`token` events ride the group;
+/// finished ones unwatch themselves when the engine emits `Finished`.
 fn pipeline_stream_chain<D: EngineDriver>(
     engine: &mut D,
     sh: &Shared<D>,
@@ -1319,16 +1397,35 @@ fn pipeline_stream_chain<D: EngineDriver>(
     if failed.is_none() {
         for id in co.in_flight_ids() {
             sh.waiters.register_group(id, group);
+            engine.watch(id);
         }
     }
     let clock = engine.clock();
     (co, failed, clock)
 }
 
-/// Streaming `/pipeline` (single spec): per-stage SSE emission through
-/// the coordinator's completion stream — a `stage` event the moment each
-/// stage retires (ROADMAP "streaming per-stage results over HTTP"), then
-/// `done` with the makespan.
+/// Streaming-path orphan: drop group registrations AND cancel the event
+/// subscriptions of every in-flight stage (non-streaming runs never
+/// watch, so plain [`orphan_run`] suffices there).
+fn orphan_stream_run<D: EngineDriver>(
+    shared: &Shared<D>,
+    group: &Arc<PipeGroup>,
+    co: &Coordinator,
+) {
+    orphan_run(shared, group, co);
+    let ids = co.in_flight_ids();
+    shared.call(move |engine, _| {
+        for id in ids {
+            engine.unwatch(id);
+        }
+    });
+}
+
+/// Streaming `/pipeline` (single spec): per-token SSE emission through
+/// the coordinator's completion stream — `stage_started` the moment a
+/// stage is scheduled, `token` per generated token, `stage_finished`
+/// when it retires (ROADMAP "streaming per-stage results over HTTP"),
+/// then `done` with the makespan.
 fn stream_pipeline<D: EngineDriver>(
     stream: &mut TcpStream,
     shared: &Shared<D>,
@@ -1347,6 +1444,7 @@ fn stream_pipeline<D: EngineDriver>(
                 Ok(_) => {
                     for id in co.in_flight_ids() {
                         sh.waiters.register_group(id, &group);
+                        engine.watch(id);
                     }
                     Ok((co, engine.clock()))
                 }
@@ -1365,8 +1463,9 @@ fn stream_pipeline<D: EngineDriver>(
     if result.is_err() {
         // A socket write failed mid-stream (client went away): orphan the
         // coordinator's in-flight stages so the driver discards their
-        // outputs instead of leaking them.
-        orphan_run(shared, &group, &co);
+        // outputs instead of leaking them, and drop their event
+        // subscriptions.
+        orphan_stream_run(shared, &group, &co);
     }
     result
 }
@@ -1387,7 +1486,16 @@ fn stream_pipeline_events<D: EngineDriver>(
     let mut emitted = 0usize;
     loop {
         let step = match group.wait(deadline) {
-            GroupWait::Ready(outs) => {
+            GroupWait::Ready { events, outs } => {
+                // Label events BEFORE chaining: the chaining command
+                // retires finished stages from the coordinator's owner
+                // map, and with it the id → stage-name association.
+                let labeled: Vec<(String, TurnEvent)> = events
+                    .into_iter()
+                    .filter_map(|ev| {
+                        co.stage_name_of(ev.id()).map(|n| (n.to_string(), ev))
+                    })
+                    .collect();
                 let owned = std::mem::replace(co, Coordinator::new());
                 let g = Arc::clone(group);
                 let (owned, failed, clock) = shared
@@ -1395,7 +1503,7 @@ fn stream_pipeline_events<D: EngineDriver>(
                 *co = owned;
                 match failed {
                     Some(e) => {
-                        orphan_run(shared, group, co);
+                        orphan_stream_run(shared, group, co);
                         StreamStep::Fail(classify(e))
                     }
                     None => {
@@ -1405,14 +1513,14 @@ fn stream_pipeline_events<D: EngineDriver>(
                             .map(spec::stage_output_to_json)
                             .collect();
                         emitted = co.finished_stages().len();
-                        StreamStep::Emit(new, co.is_done(), clock - t0)
+                        StreamStep::Emit(labeled, new, co.is_done(), clock - t0)
                     }
                 }
             }
             GroupWait::Lost(lost) => {
                 // A stage lost to a replica failure never retires: fail
                 // the stream now instead of at the deadline.
-                orphan_run(shared, group, co);
+                orphan_stream_run(shared, group, co);
                 StreamStep::Fail(ApiError::new(
                     "502 Bad Gateway",
                     "request_failed",
@@ -1420,7 +1528,7 @@ fn stream_pipeline_events<D: EngineDriver>(
                 ))
             }
             GroupWait::TimedOut => {
-                orphan_run(shared, group, co);
+                orphan_stream_run(shared, group, co);
                 StreamStep::Fail(ApiError::timeout(format!(
                     "pipeline timed out with {} stages in flight",
                     co.in_flight()
@@ -1432,9 +1540,35 @@ fn stream_pipeline_events<D: EngineDriver>(
                 write_sse(stream, "error", &e.event_json())?;
                 return end_stream(stream);
             }
-            StreamStep::Emit(new, done, makespan) => {
+            StreamStep::Emit(labeled, new, done, makespan) => {
+                for (stage, ev) in &labeled {
+                    match ev {
+                        TurnEvent::Started { id, clock, arrival } => write_sse(
+                            stream,
+                            "stage_started",
+                            &Json::obj(vec![
+                                ("stage", Json::str(stage.as_str())),
+                                ("id", Json::num(id.0 as f64)),
+                                ("t_s", Json::num(*clock)),
+                                ("queue_s", Json::num(clock - arrival)),
+                            ]),
+                        )?,
+                        TurnEvent::Token { index, token, clock, .. } => write_sse(
+                            stream,
+                            "token",
+                            &Json::obj(vec![
+                                ("stage", Json::str(stage.as_str())),
+                                ("index", Json::num(*index as f64)),
+                                ("token", Json::num(*token as f64)),
+                                ("t_s", Json::num(*clock)),
+                            ]),
+                        )?,
+                        // `Finished` never reaches the group buffer.
+                        TurnEvent::Finished { .. } => {}
+                    }
+                }
                 for j in &new {
-                    write_sse(stream, "stage", j)?;
+                    write_sse(stream, "stage_finished", j)?;
                 }
                 if done {
                     write_sse(
@@ -1670,28 +1804,110 @@ mod tests {
         assert!(r.contains("200 OK"), "{r}");
         assert!(r.contains("Transfer-Encoding: chunked"), "{r}");
         assert!(r.contains("text/event-stream"), "{r}");
-        // Two stage events in completion order, then done.
-        let events: Vec<&str> = r
-            .lines()
-            .filter(|l| l.starts_with("event: "))
-            .map(|l| l.trim_start_matches("event: "))
+        // Per-stage lifecycle in completion order: each stage announces
+        // itself, streams every token, then retires — and the run ends
+        // with `done`.
+        let pairs: Vec<(&str, Json)> = sse_pairs(&r);
+        let kinds: Vec<&str> = pairs.iter().map(|(k, _)| *k).collect();
+        let expect: Vec<&str> = std::iter::once("stage_started")
+            .chain(std::iter::repeat("token").take(8))
+            .chain(["stage_finished", "stage_started"])
+            .chain(std::iter::repeat("token").take(4))
+            .chain(["stage_finished", "done"])
             .collect();
-        assert_eq!(events, vec!["stage", "stage", "done"], "{r}");
-        let datas: Vec<Json> = r
-            .lines()
-            .filter(|l| l.starts_with("data: "))
-            .map(|l| Json::parse(l.trim_start_matches("data: ")).unwrap())
-            .collect();
-        assert_eq!(datas[0].get("name").and_then(Json::as_str), Some("draft"));
-        assert_eq!(datas[1].get("name").and_then(Json::as_str), Some("check"));
-        assert!(datas[1].get("cache_hit_rate").and_then(Json::as_f64).unwrap() > 0.5);
-        assert!(datas[2].get("makespan_s").and_then(Json::as_f64).unwrap() > 0.0);
+        assert_eq!(kinds, expect, "{r}");
+        // stage_started / token events carry their stage's name.
+        assert_eq!(pairs[0].1.get("stage").and_then(Json::as_str), Some("draft"));
+        assert_eq!(pairs[1].1.get("stage").and_then(Json::as_str), Some("draft"));
+        assert_eq!(pairs[10].1.get("stage").and_then(Json::as_str), Some("check"));
+        assert_eq!(pairs[11].1.get("stage").and_then(Json::as_str), Some("check"));
+        // Token indices count up from 0 within each stage.
+        assert_eq!(pairs[1].1.get("index").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(pairs[8].1.get("index").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(pairs[11].1.get("index").and_then(Json::as_f64), Some(0.0));
+        // stage_finished keeps the per-stage result payload.
+        assert_eq!(pairs[9].1.get("name").and_then(Json::as_str), Some("draft"));
+        let check = &pairs[15].1;
+        assert_eq!(check.get("name").and_then(Json::as_str), Some("check"));
+        assert!(check.get("cache_hit_rate").and_then(Json::as_f64).unwrap() > 0.5);
+        assert!(pairs[16].1.get("makespan_s").and_then(Json::as_f64).unwrap() > 0.0);
         // A bad streaming spec fails as a plain error response (nothing
         // was streamed yet), and batches can't stream.
         let r = post(srv.addr(), "/pipeline", r#"{"stream": true, "stages": []}"#);
         assert!(r.contains("400"), "{r}");
         let r = post(srv.addr(), "/pipeline", r#"{"stream": true, "pipelines": []}"#);
         assert!(r.contains("400"), "{r}");
+        srv.shutdown();
+    }
+
+    /// Parse an SSE response body into (event, data) pairs.
+    fn sse_pairs(r: &str) -> Vec<(&str, Json)> {
+        let events: Vec<&str> = r
+            .lines()
+            .filter(|l| l.starts_with("event: "))
+            .map(|l| l.trim_start_matches("event: "))
+            .collect();
+        let datas: Vec<Json> = r
+            .lines()
+            .filter(|l| l.starts_with("data: "))
+            .map(|l| Json::parse(l.trim_start_matches("data: ")).unwrap())
+            .collect();
+        assert_eq!(events.len(), datas.len(), "{r}");
+        events.into_iter().zip(datas).collect()
+    }
+
+    #[test]
+    fn pipeline_stream_tokens_match_non_streamed_run() {
+        // Same spec against two fresh engines: the streamed token events,
+        // concatenated per stage, must be byte-identical to the
+        // non-streamed response's token arrays — streaming is an
+        // observation channel, not a different execution.
+        let stages = r#""stages": [
+            {"name": "draft", "gen": 8, "prompt": [[1,2,3,4,5,6,7,8]]},
+            {"name": "check", "adapter": "alora-0", "gen": 4, "invoke": true,
+             "prompt": [{"prompt_of": "draft"}, {"output_of": "draft"}]}
+        ]"#;
+        let mut plain = start_sim_server();
+        let r = post(plain.addr(), "/pipeline", &format!("{{{stages}}}"));
+        assert!(r.contains("200 OK"), "{r}");
+        let j = body_json(&r);
+        let mut want: Vec<(String, Vec<u32>)> = j
+            .get("stages")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|s| {
+                let name = s.get("name").and_then(Json::as_str).unwrap().to_string();
+                let toks = s
+                    .get("tokens")
+                    .and_then(Json::as_arr)
+                    .unwrap()
+                    .iter()
+                    .map(|t| t.as_f64().unwrap() as u32)
+                    .collect();
+                (name, toks)
+            })
+            .collect();
+        want.sort();
+        plain.shutdown();
+
+        let mut srv = start_sim_server();
+        let r = post(srv.addr(), "/pipeline", &format!(r#"{{"stream": true, {stages}}}"#));
+        assert!(r.contains("200 OK"), "{r}");
+        let mut streamed: std::collections::BTreeMap<String, Vec<u32>> =
+            std::collections::BTreeMap::new();
+        for (kind, data) in sse_pairs(&r) {
+            if kind != "token" {
+                continue;
+            }
+            let stage = data.get("stage").and_then(Json::as_str).unwrap().to_string();
+            let toks = streamed.entry(stage).or_default();
+            // In-order delivery: each token's index is its position.
+            assert_eq!(data.get("index").and_then(Json::as_f64), Some(toks.len() as f64));
+            toks.push(data.get("token").and_then(Json::as_f64).unwrap() as u32);
+        }
+        let got: Vec<(String, Vec<u32>)> = streamed.into_iter().collect();
+        assert_eq!(got, want);
         srv.shutdown();
     }
 
@@ -1872,11 +2088,84 @@ mod tests {
             parse_replica_action("/cluster/replicas/12/restore"),
             Some((12, "restore"))
         );
+        assert_eq!(
+            parse_replica_action("/cluster/replicas/2/silence"),
+            Some((2, "silence"))
+        );
         assert_eq!(parse_replica_action("/cluster/replicas/x/fail"), None);
         assert_eq!(parse_replica_action("/cluster/replicas/0/explode"), None);
         assert_eq!(parse_replica_action("/cluster/replicas/0/fail/extra"), None);
+        assert_eq!(parse_replica_action("/cluster/replicas/0/silence/extra"), None);
         assert_eq!(parse_replica_action("/cluster/replicas/0"), None);
         assert_eq!(parse_replica_action("/cluster"), None);
+    }
+
+    #[test]
+    fn cluster_health_endpoint_and_silence_action() {
+        let mut srv = start_cluster_server(2);
+        let addr = srv.addr();
+        let prompt: Vec<String> = (0..64).map(|t| t.to_string()).collect();
+        let gen_body = format!(r#"{{"prompt": [{}], "max_new_tokens": 8}}"#, prompt.join(","));
+
+        // The detector's view before any traffic: everyone up, nobody
+        // silenced, thresholds from the default fleet config.
+        let r = http(addr, "GET /cluster/health HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(r.contains("200 OK"), "{r}");
+        let j = body_json(&r);
+        assert_eq!(j.get("suspect_after_misses").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(j.get("down_after_misses").and_then(Json::as_f64), Some(6.0));
+        assert_eq!(j.get("num_healthy").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.get("detected_failures").and_then(Json::as_f64), Some(0.0));
+        let reps = j.get("replicas").and_then(Json::as_arr).unwrap();
+        assert_eq!(reps.len(), 2);
+        assert_eq!(reps[0].get("health_detail").and_then(Json::as_str), Some("up"));
+        assert_eq!(reps[1].get("silenced"), Some(&Json::Bool(false)));
+
+        // GET /cluster carries the same fine-grained state per replica.
+        let j = body_json(&http(addr, "GET /cluster HTTP/1.1\r\nHost: x\r\n\r\n"));
+        let reps = j.get("replicas").and_then(Json::as_arr).unwrap();
+        assert_eq!(reps[0].get("health_detail").and_then(Json::as_str), Some("up"));
+        assert_eq!(reps[1].get("health_detail").and_then(Json::as_str), Some("up"));
+
+        // Silence replica 1 (a partition, not a crash) ...
+        let r = post(addr, "/cluster/replicas/1/silence", "");
+        assert!(r.contains("200 OK"), "{r}");
+        let j = body_json(&r);
+        assert_eq!(j.get("replica").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("silenced"), Some(&Json::Bool(true)));
+
+        // ... then just serve: driver steps double as monitoring rounds,
+        // so ordinary traffic walks the victim Up → Suspected → Down and
+        // runs the failover pipeline with no admin call. The request
+        // itself still completes (zero lost requests).
+        assert!(post(addr, "/generate", &gen_body).contains("200 OK"));
+        let j = body_json(&http(addr, "GET /cluster/health HTTP/1.1\r\nHost: x\r\n\r\n"));
+        assert_eq!(j.get("num_healthy").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("detected_failures").and_then(Json::as_f64), Some(1.0));
+        let reps = j.get("replicas").and_then(Json::as_arr).unwrap();
+        assert_eq!(reps[1].get("health").and_then(Json::as_str), Some("down"));
+        let m = http(addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(m.contains("alora_serve_detected_failures_total 1"), "{m}");
+        assert!(m.contains("alora_serve_suspected_transitions_total 1"), "{m}");
+        assert!(m.contains("alora_serve_heartbeat_misses_total 6"), "{m}");
+
+        // Conflicts and unknowns map to the usual envelopes.
+        let r = post(addr, "/cluster/replicas/1/silence", "");
+        assert!(r.contains("409"), "{r}");
+        assert!(r.contains("\"code\":\"replica_state\""), "{r}");
+        let r = post(addr, "/cluster/replicas/9/silence", "");
+        assert!(r.contains("404"), "{r}");
+        assert!(r.contains("\"code\":\"replica_not_found\""), "{r}");
+        srv.shutdown();
+
+        // Single engines: no detector, no heartbeat surface.
+        let mut single = start_sim_server();
+        let r = http(single.addr(), "GET /cluster/health HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(r.contains("404"), "{r}");
+        let r = post(single.addr(), "/cluster/replicas/0/silence", "");
+        assert!(r.contains("400"), "{r}");
+        assert!(r.contains("no fleet"), "{r}");
+        single.shutdown();
     }
 
     #[test]

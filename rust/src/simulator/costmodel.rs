@@ -177,6 +177,28 @@ impl CostModel {
     pub fn migration_wins(&self, blocks: usize) -> bool {
         self.migration_time(blocks) < self.prefill_time(blocks * self.block_size, 0)
     }
+
+    /// Batched multi-lease transfer (autoscale-down / drain evacuation,
+    /// DESIGN.md §19): `k` chains totaling `blocks` KV blocks ship as one
+    /// transfer, paying `migration_setup` once instead of `k` times. With
+    /// `k <= 1` this is exactly [`CostModel::migration_time`].
+    pub fn batch_migration_time(&self, blocks: usize) -> f64 {
+        self.migration_time(blocks)
+    }
+
+    /// Membership test for a batch that has already paid its setup: the
+    /// marginal cost of adding this chain is pure per-block transfer, so
+    /// the crossover sits lower than the standalone
+    /// [`CostModel::migration_wins`] — chains too short to justify their
+    /// own control-plane round trip still ride along for free.
+    pub fn batch_migration_member_wins(&self, blocks: usize) -> bool {
+        if blocks == 0 {
+            return false;
+        }
+        let kv_bytes_per_block = self.kv_bytes * self.block_size as f64;
+        blocks as f64 * kv_bytes_per_block / self.migration_bw
+            < self.prefill_time(blocks * self.block_size, 0)
+    }
 }
 
 #[cfg(test)]
@@ -286,5 +308,27 @@ mod tests {
         // Monotone linear transfer: time grows with block count.
         assert!(m.migration_time(128) > m.migration_time(64));
         assert!(m.migration_time(0) > 0.0, "setup cost never free");
+    }
+
+    #[test]
+    fn batch_migration_pays_setup_once() {
+        let m = model("granite-8b");
+        // K sessions of B blocks each: one coalesced transfer vs K
+        // per-session transfers differ by exactly (K-1) setup charges.
+        let (k, b) = (8, 16);
+        let per_session = k as f64 * m.migration_time(b);
+        let batched = m.batch_migration_time(k * b);
+        assert!(
+            (per_session - batched - (k - 1) as f64 * m.migration_setup).abs() < 1e-12,
+            "batched={batched} per_session={per_session}"
+        );
+        assert!(batched < per_session);
+        // Inside a batch the crossover drops: 4 blocks recompute when
+        // shipped alone (setup dominates) but ride along once the batch
+        // has paid the setup.
+        assert!(!m.migration_wins(4));
+        assert!(m.batch_migration_member_wins(4));
+        assert!(m.batch_migration_member_wins(64));
+        assert!(!m.batch_migration_member_wins(0), "empty chain never ships");
     }
 }

@@ -297,6 +297,258 @@ fn drain_finishes_in_flight_conversations_before_exclusion() {
     c.replica(1).check_invariants().unwrap();
 }
 
+// ---------------------------------------------------------------------------
+// ISSUE-9 self-driving fleet: detection edge cases via the public API.
+
+#[test]
+fn suspected_replica_recovering_mid_burst_loses_nothing_and_keeps_leases() {
+    // A replica that misses enough beats to be Suspected — but resumes
+    // before the down threshold — must lose no requests, keep its
+    // sessions' leases, and stay sticky-routable.
+    let mut c = cluster(2, RoutePolicy::PrefixAffinity);
+    let mut mgr = SessionManager::new();
+    let sessions: Vec<SessionId> = (0..6).map(|_| mgr.create(0)).collect();
+    for round in 0..2u32 {
+        let mut pending = Vec::new();
+        for (si, &sid) in sessions.iter().enumerate() {
+            let base = (si as u32 + 1) * 10_000 + round * 100;
+            let delta: Vec<u32> = if round == 0 {
+                (base..base + 256).collect()
+            } else {
+                (base..base + 32).collect()
+            };
+            let (_t, rid) = mgr
+                .begin_turn(&mut c, sid, ModelTarget::Base, delta, 16, true)
+                .unwrap();
+            pending.push((sid, rid));
+        }
+        drain_round(&mut c, &mut mgr, &pending);
+    }
+    let victim = (mgr.get(sessions[0]).unwrap().last_request.unwrap().0 % 2) as usize;
+    let leased_before = c.replica(victim).leased_blocks();
+    assert!(leased_before > 0, "warm sessions hold leases");
+
+    // Round 2 in flight everywhere, then the victim goes silent.
+    let mut pending = Vec::new();
+    for (si, &sid) in sessions.iter().enumerate() {
+        let base = (si as u32 + 1) * 10_000 + 200;
+        let (_t, rid) = mgr
+            .begin_turn(&mut c, sid, ModelTarget::Base, (base..base + 32).collect(), 16, true)
+            .unwrap();
+        pending.push((sid, rid));
+    }
+    for _ in 0..2 {
+        c.step();
+    }
+    c.silence_replica(victim).unwrap();
+    // 4 missed beats: past the suspect threshold (3), short of down (6).
+    for _ in 0..4 {
+        c.step();
+    }
+    assert_eq!(c.health(victim), ReplicaHealth::Up, "suspicion is not evacuation");
+    assert_eq!(c.health_detail(victim), "suspected(4)");
+    assert_eq!(c.router().stats.heartbeat_misses, 4);
+    assert_eq!(c.router().stats.suspected_transitions, 1);
+    assert!(c.take_failover_reports().is_empty(), "no failover below the threshold");
+
+    // The partition heals: restore lifts the silence, the next beat
+    // clears the suspicion.
+    c.restore_replica(victim).unwrap();
+    c.step();
+    assert_eq!(c.health_detail(victim), "up");
+    assert!(!c.is_suspected(victim));
+
+    // Every round-2 turn finishes under its original id, nothing was
+    // requeued, and the victim kept its leases.
+    let outs = drain_round(&mut c, &mut mgr, &pending);
+    assert_eq!(outs.len(), pending.len(), "zero lost requests");
+    assert_eq!(c.router().stats.detected_failures, 0);
+    assert_eq!(c.router().stats.replica_failures, 0);
+    assert_eq!(c.router().stats.requeued_requests, 0);
+    assert!(c.replica(victim).leased_blocks() >= leased_before, "leases survived");
+
+    // Round 3: still sticky, and the victim's sessions are still warm.
+    let sticky_before = c.router().stats.sticky_routed;
+    let mut pending = Vec::new();
+    for (si, &sid) in sessions.iter().enumerate() {
+        let base = (si as u32 + 1) * 10_000 + 300;
+        let (_t, rid) = mgr
+            .begin_turn(&mut c, sid, ModelTarget::Base, (base..base + 32).collect(), 16, true)
+            .unwrap();
+        pending.push((sid, rid));
+    }
+    drain_round(&mut c, &mut mgr, &pending);
+    assert_eq!(c.router().stats.sticky_routed - sticky_before, 6);
+    for &sid in &sessions {
+        let rec = mgr.get(sid).unwrap().turns().last().unwrap().clone();
+        assert!(rec.cached_tokens > 256, "turn stayed warm: {}", rec.cached_tokens);
+    }
+    for sid in sessions {
+        mgr.delete(&mut c, sid).unwrap();
+    }
+    c.replica(0).check_invariants().unwrap();
+    c.replica(1).check_invariants().unwrap();
+}
+
+#[test]
+fn silenced_then_declared_failed_runs_failover_exactly_once() {
+    let mut c = cluster(2, RoutePolicy::PrefixAffinity);
+    let p = SamplingParams { max_new_tokens: 32, ..Default::default() };
+    let mut ids = Vec::new();
+    for i in 0..8u32 {
+        let base = (i + 1) * 1000;
+        ids.push(c.submit(ModelTarget::Base, (base..base + 64).collect(), p).unwrap());
+    }
+    for _ in 0..2 {
+        c.step();
+    }
+    c.silence_replica(1).unwrap();
+    // Detection latency is exactly the down threshold: 6 silent steps.
+    let mut reports = Vec::new();
+    for _ in 0..6 {
+        c.step();
+        reports.append(&mut c.take_failover_reports());
+    }
+    assert_eq!(reports.len(), 1, "detection fired exactly once");
+    assert_eq!(reports[0].replica, 1);
+    assert!(reports[0].rejected.is_empty(), "survivor accepted the requeue");
+    assert_eq!(c.health(1), ReplicaHealth::Down);
+    assert_eq!(c.router().stats.detected_failures, 1);
+    assert_eq!(c.router().stats.replica_failures, 1);
+
+    // An operator declaring the same death afterwards is a state
+    // conflict, not a second evacuation.
+    let err = c.fail_replica(1).unwrap_err().to_string();
+    assert!(err.contains("already down"), "{err}");
+    assert_eq!(c.router().stats.replica_failures, 1);
+
+    // Zero lost requests: every submission finishes under its original
+    // id on the survivor.
+    let mut done = HashMap::new();
+    while done.len() < ids.len() {
+        for o in c.take_finished() {
+            done.insert(o.id, o);
+        }
+        if done.len() == ids.len() {
+            break;
+        }
+        assert!(c.step(), "stalled with requests outstanding");
+    }
+    for id in &ids {
+        assert!(done.contains_key(id), "{id:?} lost in failover");
+    }
+    // Detection stays quiet on later steps (Down is terminal until
+    // restore).
+    for _ in 0..8 {
+        c.step();
+    }
+    assert!(c.take_failover_reports().is_empty());
+    assert_eq!(c.router().stats.detected_failures, 1);
+    c.replica(0).check_invariants().unwrap();
+}
+
+#[test]
+fn autoscale_down_waits_for_in_flight_session_turn() {
+    // Scale-down with a session turn in flight on the victim: the drain
+    // finishes the turn in place, then retirement ships the session's
+    // lease to the survivor — the next turn re-sticks there, warm.
+    let engine = || {
+        let mut cfg = presets::granite_8b();
+        cfg.cache.prefix_migration = true;
+        let reg = workload::build_registry(N_ADAPTERS, cfg.model.vocab_size, true);
+        let exec = SimExecutor::new(&cfg);
+        Engine::with_registry(cfg, reg, exec)
+    };
+    // Autoscaling stays off for the warm-up rounds (an idle fleet would
+    // descale before the sessions even exist), then flips on with tight
+    // thresholds just before the long turn.
+    let mut c = Cluster::with_fleet(
+        vec![engine(), engine()],
+        alora_serve::cluster::RouterConfig::default(),
+        alora_serve::config::FleetConfig::default(),
+        2,
+    )
+    .unwrap();
+    let mut mgr = SessionManager::new();
+    // Two sessions submitted together: least-loaded spreads one first
+    // turn onto each replica.
+    let sa = mgr.create(0);
+    let sb = mgr.create(0);
+    let mut pending = Vec::new();
+    for (i, &sid) in [sa, sb].iter().enumerate() {
+        let base = (i as u32 + 1) * 50_000;
+        let (_t, rid) = mgr
+            .begin_turn(&mut c, sid, ModelTarget::Base, (base..base + 1024).collect(), 16, true)
+            .unwrap();
+        pending.push((sid, rid));
+    }
+    drain_round(&mut c, &mut mgr, &pending);
+    let on_replica = |mgr: &SessionManager, sid: SessionId| {
+        (mgr.get(sid).unwrap().last_request.unwrap().0 % 2) as usize
+    };
+    let victim_session = if on_replica(&mgr, sa) == 1 { sa } else { sb };
+    assert_eq!(on_replica(&mgr, victim_session), 1, "one session per replica");
+    assert!(c.replica(1).leased_blocks() > 0);
+
+    // A long turn holds replica 1 busy while the otherwise-idle fleet
+    // decides to descale.
+    let (_t, rid) = mgr
+        .begin_turn(&mut c, victim_session, ModelTarget::Base, (90_000..90_064).collect(), 64, true)
+        .unwrap();
+    c.set_fleet_config(alora_serve::config::FleetConfig {
+        autoscale: true,
+        min_replicas: 1,
+        scale_down_after_steps: 2,
+        queue_low: 10.0,
+        queue_high: 20.0,
+        cooldown_steps: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut saw_draining_with_work = false;
+    let mut outs = HashMap::new();
+    for _ in 0..400 {
+        if c.health(1) == ReplicaHealth::Standby {
+            break;
+        }
+        if c.health(1) == ReplicaHealth::Draining && c.replica(1).has_work() {
+            saw_draining_with_work = true;
+            assert_eq!(
+                c.cluster_stats().unwrap().fleet.descaling,
+                Some(1),
+                "drain-in-progress surfaces in fleet stats"
+            );
+        }
+        c.step();
+        for o in c.take_finished() {
+            outs.insert(o.id, o);
+        }
+    }
+    assert!(saw_draining_with_work, "descale overlapped the in-flight turn");
+    assert_eq!(c.health(1), ReplicaHealth::Standby, "victim retired after drain");
+    let out = outs.get(&rid).expect("in-flight turn completed, not requeued");
+    mgr.complete_turn(&mut c, victim_session, out).unwrap();
+    assert_eq!(c.replica(1).metrics.requests_finished, 2, "turn finished in place");
+    assert_eq!(c.router().stats.requeued_requests, 0, "drain is not failover");
+    assert_eq!(c.router().stats.scale_downs, 1);
+
+    // Retirement batch-migrated the session's lease to the survivor.
+    assert_eq!(c.replica(1).leased_blocks(), 0, "victim holds no pins in standby");
+    assert!(c.router().stats.migrations > 0, "lease shipped, not dropped");
+    // Next turn re-sticks on the survivor and is warm off the migrated
+    // prefix.
+    let rec = mgr
+        .run_turn(&mut c, victim_session, ModelTarget::Base, (91_000..91_032).collect(), 8, true)
+        .unwrap();
+    assert_eq!(on_replica(&mgr, victim_session), 0);
+    assert!(rec.cached_tokens >= 1024, "re-stuck warm: {}", rec.cached_tokens);
+    for sid in [sa, sb] {
+        mgr.delete(&mut c, sid).unwrap();
+    }
+    c.replica(0).check_invariants().unwrap();
+    c.replica(1).check_invariants().unwrap();
+}
+
 #[test]
 fn single_engine_tests_equivalence_through_cluster_of_one() {
     // A 1-replica cluster must reproduce the plain engine's behaviour on
