@@ -3,7 +3,7 @@
 # `make fmt` / clippy pass lands — the repo was authored offline without
 # rustfmt/clippy (still true as of 2026-08-08, PR 9); see ROADMAP.md
 # "Lint debt".
-.PHONY: check build build-matrix test fmt fmt-check clippy bench bench-smoke server-smoke artifacts
+.PHONY: check build build-matrix test fmt fmt-check clippy bench bench-smoke bench-lint server-smoke artifacts
 
 check: build test
 	-cargo fmt --check
@@ -47,12 +47,15 @@ bench:
 # (1..=8 client threads over real HTTP — writes BENCH_concurrency.json;
 # CI diffs only its deterministic session/turn counts), the migration
 # harness (writes BENCH_migration.json; CI diffs the long-prefix
-# speedup, advisory), and the self-driving harness (writes
+# speedup, advisory), the self-driving harness (writes
 # BENCH_selfdriving.json; CI diffs detection latency and recovered
-# hit-rate, advisory).
+# hit-rate, advisory), and the adapter-tiering harness (writes
+# BENCH_adapter_tiering.json; CI diffs the prefetch stall reduction and
+# the fleet hit-rates, advisory).
 bench-smoke:
 	cargo bench --bench bench_cluster -- --quick
 	cargo run --release -- figure --id adapter_memory --quick
+	cargo run --release -- figure --id adapter_tiering --quick
 	cargo run --release -- figure --id failover --quick
 	cargo run --release -- figure --id migration --quick
 	cargo run --release -- figure --id selfdriving --quick
@@ -60,6 +63,23 @@ bench-smoke:
 	cargo bench --bench bench_concurrency -- --quick
 	cargo bench --bench bench_migration -- --quick
 	cargo bench --bench bench_selfdriving -- --quick
+	cargo bench --bench bench_adapter_tiering -- --quick
+
+# Schema lint for the committed bench baselines: every BENCH_*.json in
+# HEAD must be a JSON object carrying the shared keys the CI diff steps
+# rely on, plus a boolean `offline_estimate` provenance flag (the
+# committed baselines were authored without a toolchain; drop the flag
+# — and this check — once real runs replace them). Reads the committed
+# copies, so it is safe to run after bench-smoke has overwritten the
+# working tree. Advisory if jq is absent.
+bench-lint:
+	@if ! command -v jq >/dev/null; then echo "jq not installed; skipping"; exit 0; fi; \
+	for f in $$(git ls-files 'BENCH_*.json'); do \
+		git show HEAD:$$f | jq -e 'type == "object" and has("bench") and has("quick") \
+			and has("note") and (.offline_estimate | type == "boolean")' >/dev/null \
+			|| { echo "$$f: missing required bench keys"; exit 1; }; \
+		echo "$$f: ok"; \
+	done
 
 # HTTP surface smoke (mirrors the CI step): the HTTP integration suite
 # plus the v1 sessions suite, which includes the streaming smoke

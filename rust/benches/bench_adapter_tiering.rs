@@ -1,0 +1,74 @@
+//! `bench_adapter_tiering`: tiered adapter memory (ISSUE 10).
+//!
+//! Runs the `adapter_tiering` figure — the churn sweep (drop vs host-tier
+//! demotion vs prefetch vs the zero-cost baseline) and the equal-budget
+//! heterogeneous-vs-homogeneous fleet comparison — and writes
+//! `BENCH_adapter_tiering.json` at the repo root. CI runs the `--quick`
+//! tier, uploads the report, and diffs the headline ratios against the
+//! committed baseline (advisory only; virtual-time results are seeded and
+//! deterministic, so a real diff means a real behavior change).
+
+use alora_serve::figures::adapter_tiering::{run_churn, run_fleet, LOAD_BW};
+use alora_serve::util::bench::section;
+use alora_serve::util::json::Json;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    section(&format!(
+        "adapter tiering harness: churn arms + fleet packing ({})",
+        if quick { "quick tier" } else { "full tier" }
+    ));
+    let t0 = std::time::Instant::now();
+    let table = alora_serve::figures::adapter_tiering::run(quick);
+    table.print();
+
+    // Headline ratios re-measured at this tier's sizes (same runners the
+    // figure rows came from; the rerun keeps the JSON self-contained).
+    let n_requests = if quick { 9 } else { 18 };
+    let rounds = if quick { 4 } else { 8 };
+    let plain = run_churn(96, LOAD_BW, false, n_requests);
+    let prefetch = run_churn(96, LOAD_BW, true, n_requests);
+    let drop = run_churn(0, LOAD_BW, false, n_requests);
+    let hetero = run_fleet(true, rounds);
+    let homo = run_fleet(false, rounds);
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let stall_reduction = plain.stall_steps.saturating_sub(prefetch.stall_steps);
+    let demote_speedup = drop.makespan / plain.makespan;
+    println!(
+        "\nprefetch: {} -> {} stall steps (-{stall_reduction}); \
+         demote vs drop makespan: {:.4}s vs {:.4}s ({demote_speedup:.3}x); \
+         fleet hit-rate hetero {:.3} vs homo {:.3}",
+        plain.stall_steps,
+        prefetch.stall_steps,
+        plain.makespan,
+        drop.makespan,
+        hetero.aggregate_adapter_hit_rate,
+        homo.aggregate_adapter_hit_rate
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("adapter_tiering")),
+        ("quick", Json::Bool(quick)),
+        ("wall_s", Json::num(wall_s)),
+        ("stall_steps_plain", Json::num(plain.stall_steps as f64)),
+        ("stall_steps_prefetch", Json::num(prefetch.stall_steps as f64)),
+        ("prefetch_stall_reduction", Json::num(stall_reduction as f64)),
+        ("makespan_drop_s", Json::num(drop.makespan)),
+        ("makespan_demote_s", Json::num(plain.makespan)),
+        ("demote_reload_speedup", Json::num(demote_speedup)),
+        ("hetero_hit_rate", Json::num(hetero.aggregate_adapter_hit_rate)),
+        ("homo_hit_rate", Json::num(homo.aggregate_adapter_hit_rate)),
+        (
+            "note",
+            Json::str(
+                "seeded virtual-time run; regenerate with \
+                 `cargo bench --bench bench_adapter_tiering -- --quick` \
+                 (make bench-smoke)",
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_adapter_tiering.json", format!("{report}\n"))
+        .expect("write BENCH_adapter_tiering.json");
+    println!("wrote BENCH_adapter_tiering.json");
+}

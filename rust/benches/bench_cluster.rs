@@ -39,7 +39,10 @@ fn main() {
             load: i,
             affinity_blocks: 256 - i,
             adapter_blocks: 0,
+            free_blocks: 0,
             healthy: true,
+            suspected: false,
+            warming: false,
         })
         .collect();
     let mut router = Router::new(

@@ -11,7 +11,7 @@ pub mod residency;
 use crate::config::ModelConfig;
 use crate::kvcache::prefix::HashContext;
 
-pub use residency::{AdapterResidency, ResidencyStats};
+pub use residency::{AdapterResidency, AdmitGate, ResidencyStats};
 
 /// Internal adapter ID (index into the registry).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]

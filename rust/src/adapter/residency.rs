@@ -1,5 +1,6 @@
 //! Adapter-weight residency: ref-counted loads with LRU eviction, paged
-//! against the unified KV memory budget.
+//! against the unified KV memory budget — now with a time-costed
+//! two-tier model (DESIGN.md §20).
 //!
 //! Before this module the engine pretended every registered adapter's
 //! weights were permanently GPU-resident — free capacity the KV cache
@@ -9,17 +10,26 @@
 //!
 //! - **Load** claims `weight_blocks` pages from the shared
 //!   [`crate::kvcache::KvCacheManager`] pool (evicting cold cached KV
-//!   content if needed, never referenced blocks).
+//!   content if needed, never referenced blocks). With a configured
+//!   transfer cost a load is a STATE MACHINE, not an event: the entry
+//!   sits in `Loading` until its modeled host→device transfer completes
+//!   at `ready_at` on the sim clock, and admission stalls (counted in
+//!   [`ResidencyStats::load_stall_steps`]) until it matures. With the
+//!   default zero cost, loads complete inline — bit-identical to the
+//!   instantaneous accounting this module started as.
 //! - **Refs** count running requests using the adapter. Admission acquires,
 //!   preemption and completion release; at zero refs the adapter stays
 //!   resident (warm) but becomes evictable.
-//! - **Eviction** is LRU over idle (ref == 0) residents, triggered when a
-//!   load or a KV allocation needs room — the two sides reclaim from each
-//!   other under one policy (FASTLIBRA-style co-management).
-//!
-//! Loads are modeled as instantaneous (accounting, not transfer time);
-//! what the engine observes is the *admission stall* when memory is not
-//! reclaimable yet, surfaced via [`ResidencyStats::load_stall_steps`].
+//! - **Eviction** is LRU over idle (ref == 0, fully loaded) residents,
+//!   triggered when a load or a KV allocation needs room — the two sides
+//!   reclaim from each other under one policy (FASTLIBRA-style
+//!   co-management). With a host tier configured, device eviction
+//!   *demotes* the weights to pinned host memory (a later reload skips
+//!   the setup cost — strictly cheaper); only host-tier pressure *drops*
+//!   them outright (full-cost reload).
+//! - **Prefetch** (scheduler-driven): a queued request's cold adapter can
+//!   start its transfer while the request waits for admission,
+//!   overlapping load with queue time.
 
 use crate::config::ModelConfig;
 use crate::kvcache::block::BlockId;
@@ -32,16 +42,31 @@ use super::{AdapterId, AdapterRegistry};
 /// (`alora_serve_adapter_*`) and `GET /cluster`.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ResidencyStats {
-    /// Weight loads performed (adapter became resident).
+    /// Full-cost weight loads performed (adapter became device-resident
+    /// from cold — host-tier promotions are counted separately).
     pub loads: u64,
-    /// Idle adapters evicted to reclaim memory.
+    /// Idle adapters evicted from the device to reclaim memory
+    /// (demotions included — an eviction that found host room is still
+    /// an eviction).
     pub evictions: u64,
-    /// Scheduler steps where admission stalled on a failed weight load.
+    /// Scheduler steps where admission stalled on adapter weights —
+    /// either the load could not claim memory or its transfer was still
+    /// in flight.
     pub load_stall_steps: u64,
     /// Adapter-targeted admissions.
     pub adapter_admissions: u64,
     /// ...whose adapter was already resident (no load on the critical path).
     pub adapter_admission_hits: u64,
+    /// Device evictions that parked the weights in the host tier.
+    pub demotions: u64,
+    /// Loads served from the host tier (setup cost skipped).
+    pub promotions: u64,
+    /// Host-tier entries dropped under host pressure (next use pays a
+    /// full-cost reload).
+    pub host_drops: u64,
+    /// Loads started by the scheduler's prefetch pass (overlapping
+    /// transfer with queue wait) rather than at admission.
+    pub prefetches: u64,
 }
 
 impl ResidencyStats {
@@ -56,6 +81,15 @@ impl ResidencyStats {
     }
 }
 
+/// Device-entry transfer state (DESIGN.md §20). `Loading` entries hold
+/// their claimed pages (the budget is charged for the whole transfer)
+/// but cannot serve admissions or be evicted until they mature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DeviceState {
+    Loading,
+    Ready,
+}
+
 #[derive(Debug)]
 struct Resident {
     /// Pages claimed from the shared pool (hashless, budget-charged).
@@ -64,6 +98,36 @@ struct Resident {
     refs: u32,
     /// Monotonic LRU stamp (load / acquire / release all touch it).
     last_used: u64,
+    /// Transfer state; `Ready` immediately under zero-cost config.
+    state: DeviceState,
+    /// Sim time at which an in-flight transfer completes (== the load's
+    /// start time under zero-cost config).
+    ready_at: f64,
+}
+
+/// A demoted adapter parked in pinned host memory: no physical
+/// `BlockId`s (the device pool never sees the host tier), just a block
+/// count charged against the host ledger and an LRU stamp.
+#[derive(Debug)]
+struct HostEntry {
+    blocks: usize,
+    last_used: u64,
+}
+
+/// What an admission attempt learned about its adapter's weights.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmitGate {
+    /// Already resident and ready — a warm hit.
+    Hit,
+    /// A load (or promotion) completed inline: zero-cost config, or a
+    /// transfer that matured exactly now. The admission is cold.
+    LoadedNow,
+    /// Transfer in flight; ready at the contained sim time. The caller
+    /// defers admission and counts a stall.
+    Loading(f64),
+    /// Memory not reclaimable right now — the caller defers admission
+    /// and counts a stall.
+    NoMemory,
 }
 
 /// Ref-counted adapter-weight residency with LRU eviction of idle
@@ -74,8 +138,17 @@ pub struct AdapterResidency {
     /// Per-adapter weight cost in KV-block-equivalents (registry order).
     weight_blocks: Vec<usize>,
     resident: FxHashMap<u32, Resident>,
+    /// Demoted adapters parked in the host tier (DESIGN.md §20).
+    host: FxHashMap<u32, HostEntry>,
     tick: u64,
     stats: ResidencyStats,
+    /// Fixed setup cost of a cold host→device load, seconds (0 = the
+    /// instantaneous-accounting default).
+    load_setup_s: f64,
+    /// Per-block transfer cost, seconds; promotions pay only this slope.
+    load_per_block_s: f64,
+    /// Scheduler prefetch opt-in (`cache.adapter_prefetch`).
+    prefetch: bool,
 }
 
 impl AdapterResidency {
@@ -95,8 +168,12 @@ impl AdapterResidency {
                 .map(|a| a.weight_blocks(model, block_size))
                 .collect(),
             resident: FxHashMap::default(),
+            host: FxHashMap::default(),
             tick: 0,
             stats: ResidencyStats::default(),
+            load_setup_s: 0.0,
+            load_per_block_s: 0.0,
+            prefetch: false,
         }
     }
 
@@ -106,9 +183,42 @@ impl AdapterResidency {
             enabled: false,
             weight_blocks: Vec::new(),
             resident: FxHashMap::default(),
+            host: FxHashMap::default(),
             tick: 0,
             stats: ResidencyStats::default(),
+            load_setup_s: 0.0,
+            load_per_block_s: 0.0,
+            prefetch: false,
         }
+    }
+
+    /// Configure the transfer-cost model and the prefetch opt-in
+    /// (construction-time; mirrors `CostModel::adapter_load_time`). The
+    /// defaults — all zero, prefetch off — keep every load inline and
+    /// instantaneous, bit-identical to the pre-tiering engine.
+    pub fn configure_tiering(&mut self, setup_s: f64, per_block_s: f64, prefetch: bool) {
+        self.load_setup_s = setup_s;
+        self.load_per_block_s = per_block_s;
+        self.prefetch = prefetch;
+    }
+
+    /// Is the scheduler's prefetch pass enabled?
+    pub fn prefetch_enabled(&self) -> bool {
+        self.enabled && self.prefetch
+    }
+
+    /// Modeled cold-load transfer time for `blocks` weight pages.
+    fn cold_load_time(&self, blocks: usize) -> f64 {
+        if self.load_per_block_s == 0.0 && self.load_setup_s == 0.0 {
+            return 0.0;
+        }
+        self.load_setup_s + blocks as f64 * self.load_per_block_s
+    }
+
+    /// Modeled promotion time: pure bandwidth, no setup — the demoted
+    /// weights stay staged and pinned on the host (DESIGN.md §20).
+    fn promote_time(&self, blocks: usize) -> f64 {
+        blocks as f64 * self.load_per_block_s
     }
 
     pub fn enabled(&self) -> bool {
@@ -120,20 +230,40 @@ impl AdapterResidency {
     }
 
     /// Weight cost of one adapter in blocks; 0 when paging is disabled
-    /// (weights are free under always-resident semantics).
+    /// (weights are free under always-resident semantics). An id outside
+    /// the registry is a caller bug: it trips a debug assertion, and in
+    /// release builds conservatively costs 1 block rather than silently
+    /// under-charging as 0 would.
     pub fn weight_blocks_of(&self, aid: AdapterId) -> usize {
         if !self.enabled {
             return 0;
         }
-        self.weight_blocks.get(aid.0 as usize).copied().unwrap_or(1)
+        match self.weight_blocks.get(aid.0 as usize) {
+            Some(&n) => n,
+            None => {
+                debug_assert!(
+                    false,
+                    "weight_blocks_of: adapter id {} not in registry (len {})",
+                    aid.0,
+                    self.weight_blocks.len()
+                );
+                1
+            }
+        }
     }
 
     pub fn is_resident(&self, aid: AdapterId) -> bool {
         !self.enabled || self.resident.contains_key(&aid.0)
     }
 
+    /// Is `aid` parked in the host tier awaiting promotion?
+    pub fn is_host_resident(&self, aid: AdapterId) -> bool {
+        self.enabled && self.host.contains_key(&aid.0)
+    }
+
     /// Blocks an admission of `adapter` would add for weights on top of its
-    /// KV demand — the admission watermark's adapter-load term.
+    /// KV demand — the admission watermark's adapter-load term. An entry
+    /// already `Loading` has claimed its pages, so it reports 0.
     pub fn pending_load_blocks(&self, adapter: Option<AdapterId>) -> usize {
         match adapter {
             Some(aid) if self.enabled && !self.resident.contains_key(&aid.0) => {
@@ -150,13 +280,25 @@ impl AdapterResidency {
         ids
     }
 
+    /// Host-tier adapter ids, ascending (stable for stats/JSON).
+    pub fn host_resident_ids(&self) -> Vec<u32> {
+        let mut ids: Vec<u32> = self.host.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
     pub fn num_resident(&self) -> usize {
         self.resident.len()
     }
 
-    /// Total pages currently charged to adapter weights.
+    /// Total pages currently charged to adapter weights on the device.
     pub fn resident_blocks(&self) -> usize {
         self.resident.values().map(|e| e.blocks.len()).sum()
+    }
+
+    /// Total block-equivalents charged to demoted weights on the host.
+    pub fn host_resident_blocks(&self) -> usize {
+        self.host.values().map(|e| e.blocks).sum()
     }
 
     fn touch(&mut self) -> u64 {
@@ -165,31 +307,162 @@ impl AdapterResidency {
         t
     }
 
-    /// Make `aid` resident, loading its weights if needed. A load claims
-    /// pages from the shared pool; under pressure it evicts idle adapters
-    /// (LRU first, never `aid` itself, never one with running users) until
-    /// the claim fits. False = memory not reclaimable right now — the
-    /// caller defers admission and counts a stall.
-    pub fn ensure_resident(&mut self, aid: AdapterId, kv: &mut KvCacheManager) -> bool {
-        if !self.enabled || self.resident.contains_key(&aid.0) {
-            return true;
+    /// Mature every in-flight transfer whose `ready_at` has passed. The
+    /// engine calls this once per step before scheduling; the admission
+    /// gate also settles its own target lazily.
+    pub fn settle(&mut self, now: f64) {
+        if !self.enabled {
+            return;
         }
-        let need = self.weight_blocks_of(aid);
-        loop {
-            if let Some(blocks) = kv.claim_adapter_blocks(need) {
-                let t = self.touch();
-                self.resident.insert(aid.0, Resident { blocks, refs: 0, last_used: t });
-                self.stats.loads += 1;
-                return true;
-            }
-            if !self.evict_one_idle_except(kv, Some(aid)) {
-                return false;
+        for e in self.resident.values_mut() {
+            if e.state == DeviceState::Loading && e.ready_at <= now {
+                e.state = DeviceState::Ready;
             }
         }
     }
 
+    /// Earliest completion time among in-flight transfers — the engine's
+    /// clock-advance target when nothing else is runnable (an admission
+    /// stalled on a transfer must see time pass, or the sim would wedge).
+    pub fn earliest_pending_ready(&self) -> Option<f64> {
+        self.resident
+            .values()
+            .filter(|e| e.state == DeviceState::Loading)
+            .map(|e| e.ready_at)
+            .min_by(|a, b| a.partial_cmp(b).expect("NaN ready_at"))
+    }
+
+    /// Start (or observe) the residency of `aid` for an admission at sim
+    /// time `now` — the tiering state machine's single entry point:
+    ///
+    /// - already `Ready` → [`AdmitGate::Hit`];
+    /// - already `Loading` → [`AdmitGate::Loading`] (matures via
+    ///   [`Self::settle`] once `now` passes `ready_at`);
+    /// - absent → claim pages (LRU-evicting idle adapters as needed) and
+    ///   start the transfer: a host-tier hit promotes (no setup cost), a
+    ///   cold load pays setup + bandwidth. Zero modeled cost completes
+    ///   inline ([`AdmitGate::LoadedNow`] — the PR-3 instantaneous path);
+    /// - pages unclaimable → [`AdmitGate::NoMemory`].
+    pub fn admission_gate(
+        &mut self,
+        aid: AdapterId,
+        kv: &mut KvCacheManager,
+        now: f64,
+    ) -> AdmitGate {
+        if !self.enabled {
+            return AdmitGate::Hit;
+        }
+        if let Some(e) = self.resident.get_mut(&aid.0) {
+            if e.state == DeviceState::Loading && e.ready_at <= now {
+                e.state = DeviceState::Ready;
+            }
+            return match e.state {
+                DeviceState::Ready => AdmitGate::Hit,
+                DeviceState::Loading => AdmitGate::Loading(e.ready_at),
+            };
+        }
+        match self.start_load(aid, kv, now) {
+            None => AdmitGate::NoMemory,
+            Some(ready_at) if ready_at <= now => {
+                self.resident.get_mut(&aid.0).expect("just inserted").state =
+                    DeviceState::Ready;
+                AdmitGate::LoadedNow
+            }
+            Some(ready_at) => AdmitGate::Loading(ready_at),
+        }
+    }
+
+    /// Claim pages and start the transfer for an absent adapter. Returns
+    /// the transfer's completion time, or None when memory is not
+    /// reclaimable. The entry is inserted as `Loading` with its pages
+    /// charged; callers settle it against `now`.
+    fn start_load(
+        &mut self,
+        aid: AdapterId,
+        kv: &mut KvCacheManager,
+        now: f64,
+    ) -> Option<f64> {
+        let need = self.weight_blocks_of(aid);
+        // A host-tier hit is a promotion: the staged host copy converts
+        // into the device copy, so its host charge is released UP FRONT —
+        // before any demotion this load's evictions trigger competes for
+        // host room (otherwise promoting could drop its own staged copy).
+        let promoted = if let Some(h) = self.host.remove(&aid.0) {
+            kv.release_host_adapter_blocks(h.blocks);
+            true
+        } else {
+            false
+        };
+        loop {
+            if let Some(blocks) = kv.claim_adapter_blocks(need) {
+                let cost = if promoted {
+                    self.stats.promotions += 1;
+                    self.promote_time(need)
+                } else {
+                    self.stats.loads += 1;
+                    self.cold_load_time(need)
+                };
+                let t = self.touch();
+                self.resident.insert(
+                    aid.0,
+                    Resident {
+                        blocks,
+                        refs: 0,
+                        last_used: t,
+                        state: DeviceState::Loading,
+                        ready_at: now + cost,
+                    },
+                );
+                return Some(now + cost);
+            }
+            if !self.evict_one_idle_except(kv, Some(aid)) {
+                // Failed promotion: re-park the staged copy if the tier
+                // still has room (this load's demotions may have taken
+                // it); otherwise the staged weights are lost too.
+                if promoted {
+                    if kv.charge_host_adapter_blocks(need) {
+                        let t = self.touch();
+                        self.host.insert(aid.0, HostEntry { blocks: need, last_used: t });
+                    } else {
+                        self.stats.host_drops += 1;
+                    }
+                }
+                return None;
+            }
+        }
+    }
+
+    /// Make `aid` resident, loading its weights if needed (the legacy
+    /// entry point: transfer time is started at sim time 0.0, so under a
+    /// costed config the entry may still be `Loading` — use
+    /// [`Self::admission_gate`] on the scheduler path). False = memory
+    /// not reclaimable right now.
+    pub fn ensure_resident(&mut self, aid: AdapterId, kv: &mut KvCacheManager) -> bool {
+        !matches!(self.admission_gate(aid, kv, 0.0), AdmitGate::NoMemory)
+    }
+
+    /// Scheduler prefetch (DESIGN.md §20): start a queued request's cold
+    /// adapter transfer so it overlaps queue wait. Quiet best-effort — a
+    /// failed claim is NOT a stall (the request wasn't admissible anyway)
+    /// and a zero-cost config makes this a no-op (nothing to overlap).
+    /// True iff a transfer was started.
+    pub fn try_prefetch(&mut self, aid: AdapterId, kv: &mut KvCacheManager, now: f64) -> bool {
+        if !self.prefetch_enabled() || self.resident.contains_key(&aid.0) {
+            return false;
+        }
+        if self.cold_load_time(self.weight_blocks_of(aid)) == 0.0 {
+            return false;
+        }
+        if self.start_load(aid, kv, now).is_some() {
+            self.stats.prefetches += 1;
+            true
+        } else {
+            false
+        }
+    }
+
     /// Count an adapter admission: bump the adapter's ref (it must be
-    /// resident — the scheduler calls [`Self::ensure_resident`] first) and
+    /// resident — the scheduler calls [`Self::admission_gate`] first) and
     /// record whether the weights were already warm when admission began.
     pub fn acquire(&mut self, aid: AdapterId, was_resident: bool) {
         if !self.enabled {
@@ -204,6 +477,7 @@ impl AdapterResidency {
             .resident
             .get_mut(&aid.0)
             .expect("acquire of a non-resident adapter");
+        debug_assert_eq!(e.state, DeviceState::Ready, "acquire of an in-flight load");
         e.refs += 1;
         e.last_used = t;
     }
@@ -224,8 +498,10 @@ impl AdapterResidency {
         e.last_used = t;
     }
 
-    /// Evict the least-recently-used idle adapter (ref == 0), returning its
-    /// pages to the shared pool. False when no adapter is evictable.
+    /// Evict the least-recently-used idle adapter (ref == 0, fully
+    /// loaded), returning its pages to the shared pool — and, with a host
+    /// tier configured, demoting the weights there instead of dropping
+    /// them. False when no adapter is evictable.
     pub fn evict_one_idle(&mut self, kv: &mut KvCacheManager) -> bool {
         self.evict_one_idle_except(kv, None)
     }
@@ -237,56 +513,110 @@ impl AdapterResidency {
         kv: &mut KvCacheManager,
         except: Option<AdapterId>,
     ) -> bool {
+        self.evict_inner(kv, except, true)
+    }
+
+    /// Eviction core. `demote` gates the host tier: the failover path
+    /// evicts with `demote = false` because the device's pages are GONE —
+    /// there is nothing to stage host-side.
+    fn evict_inner(
+        &mut self,
+        kv: &mut KvCacheManager,
+        except: Option<AdapterId>,
+        demote: bool,
+    ) -> bool {
         if !self.enabled {
             return false;
         }
         // Deterministic LRU: `last_used` stamps are unique (monotonic
-        // tick), so the min is unambiguous regardless of map order.
+        // tick), so the min is unambiguous regardless of map order; the
+        // id tie-break is belt-and-suspenders for a future stamp scheme.
+        // In-flight loads are skipped — their pages hold a transfer.
         let victim = self
             .resident
             .iter()
-            .filter(|(id, e)| e.refs == 0 && Some(AdapterId(**id)) != except)
+            .filter(|(id, e)| {
+                e.refs == 0
+                    && e.state == DeviceState::Ready
+                    && Some(AdapterId(**id)) != except
+            })
             .min_by_key(|(id, e)| (e.last_used, **id))
             .map(|(id, _)| *id);
         match victim {
             Some(id) => {
                 let e = self.resident.remove(&id).expect("victim vanished");
+                let n = e.blocks.len();
                 kv.release_adapter_blocks(&e.blocks);
                 self.stats.evictions += 1;
+                if demote && kv.budget().host_total_blocks() > 0 {
+                    self.demote_to_host(id, n, kv);
+                }
                 true
             }
             None => false,
         }
     }
 
+    /// Park an evicted adapter's weights in the host tier, dropping
+    /// host-LRU entries until the charge fits. If the weights exceed the
+    /// whole host capacity they are dropped outright (a plain eviction).
+    fn demote_to_host(&mut self, id: u32, blocks: usize, kv: &mut KvCacheManager) {
+        while !kv.charge_host_adapter_blocks(blocks) {
+            let victim = self
+                .host
+                .iter()
+                .min_by_key(|(hid, e)| (e.last_used, **hid))
+                .map(|(hid, _)| *hid);
+            match victim {
+                Some(hid) => {
+                    let dropped = self.host.remove(&hid).expect("host victim vanished");
+                    kv.release_host_adapter_blocks(dropped.blocks);
+                    self.stats.host_drops += 1;
+                }
+                None => return, // weights larger than the whole tier: drop
+            }
+        }
+        let t = self.touch();
+        self.host.insert(id, HostEntry { blocks, last_used: t });
+        self.stats.demotions += 1;
+    }
+
     /// Evict every idle resident (replica failover: the device's weight
-    /// pages are gone; the caller has already released all refs). Returns
+    /// pages are gone; the caller has already released all refs). Never
+    /// demotes — a dead device has nothing to stage host-side. Returns
     /// adapters evicted.
     pub fn evict_all_idle(&mut self, kv: &mut KvCacheManager) -> usize {
         let mut n = 0;
-        while self.evict_one_idle(kv) {
+        while self.evict_inner(kv, None, false) {
             n += 1;
         }
         n
     }
 
-    /// Count one scheduler step that stalled admission on a failed load.
+    /// Count one scheduler step that stalled admission on adapter weights.
     pub fn note_stall(&mut self) {
         if self.enabled {
             self.stats.load_stall_steps += 1;
         }
     }
 
-    /// Test hook: per-entry consistency (page counts match the cost model).
+    /// Test hook: per-entry consistency (page counts match the cost
+    /// model, host charge matches the host map).
     #[doc(hidden)]
     pub fn check_invariants(&self) -> Result<(), String> {
         for (id, e) in &self.resident {
-            let want = self.weight_blocks.get(*id as usize).copied().unwrap_or(1);
+            let want = match self.weight_blocks.get(*id as usize) {
+                Some(&n) => n,
+                None => return Err(format!("adapter {id} resident but not in registry")),
+            };
             if e.blocks.len() != want {
                 return Err(format!(
                     "adapter {id}: holds {} pages, cost model says {want}",
                     e.blocks.len()
                 ));
+            }
+            if self.host.contains_key(id) {
+                return Err(format!("adapter {id} resident on BOTH tiers"));
             }
         }
         Ok(())
@@ -416,5 +746,182 @@ mod tests {
         res.note_stall();
         assert_eq!(res.stats(), ResidencyStats::default());
         assert_eq!(kv.num_free_blocks(), 4, "nothing charged");
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "not in registry"))]
+    fn weight_blocks_of_unknown_id_is_a_bug() {
+        // Regression (ISSUE 10 satellite): the old code silently costed
+        // unknown ids at 1 block; with paging enabled an out-of-registry
+        // id now trips a debug assertion instead of under-charging.
+        let (res, _kv) = fixture(20);
+        let _ = res.weight_blocks_of(a(99));
+    }
+
+    #[test]
+    fn costed_load_is_a_state_machine() {
+        let (mut res, mut kv) = fixture(20);
+        res.configure_tiering(2.0e-3, 1.0e-4, false);
+        // Gate at t=1.0: cold load starts, in flight until setup + 8 blocks.
+        let g = res.admission_gate(a(0), &mut kv, 1.0);
+        let expect_ready = 1.0 + (2.0e-3 + 8.0 * 1.0e-4);
+        assert_eq!(g, AdmitGate::Loading(expect_ready));
+        assert_eq!(res.stats().loads, 1);
+        // Pages are charged for the whole transfer...
+        assert_eq!(kv.budget().adapter_blocks(), 8);
+        assert_eq!(res.pending_load_blocks(Some(a(0))), 0, "already claimed");
+        // ...the entry is resident-but-loading, and cannot be evicted.
+        assert!(res.is_resident(a(0)));
+        assert!(!res.evict_one_idle(&mut kv), "in-flight load is not evictable");
+        // Before ready_at the gate still reports Loading; no second load.
+        assert_eq!(res.admission_gate(a(0), &mut kv, 1.001), AdmitGate::Loading(expect_ready));
+        assert_eq!(res.stats().loads, 1);
+        assert_eq!(res.earliest_pending_ready(), Some(expect_ready));
+        // At ready_at it matures into a warm hit.
+        assert_eq!(res.admission_gate(a(0), &mut kv, expect_ready), AdmitGate::Hit);
+        assert_eq!(res.earliest_pending_ready(), None);
+        res.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn zero_cost_load_completes_inline() {
+        let (mut res, mut kv) = fixture(20);
+        // Default tiering config: the gate collapses to PR-3 semantics.
+        assert_eq!(res.admission_gate(a(0), &mut kv, 5.0), AdmitGate::LoadedNow);
+        assert_eq!(res.admission_gate(a(0), &mut kv, 5.0), AdmitGate::Hit);
+        assert_eq!(res.earliest_pending_ready(), None);
+        assert_eq!(res.stats().loads, 1);
+    }
+
+    #[test]
+    fn demote_promote_drop_lifecycle() {
+        // Pool and host tier each sized for exactly ONE adapter (8 blocks):
+        // every load forces an eviction, every eviction a demotion attempt.
+        let (mut res, mut kv) = fixture(8);
+        kv.set_host_adapter_blocks(8);
+        res.configure_tiering(2.0e-3, 1.0e-4, false);
+        assert!(matches!(res.admission_gate(a(0), &mut kv, 0.0), AdmitGate::Loading(_)));
+        res.settle(1.0);
+        assert!(matches!(res.admission_gate(a(1), &mut kv, 1.0), AdmitGate::Loading(_)));
+        // Loading 1 at a full pool evicted idle 0 → demoted to host.
+        assert_eq!(res.resident_ids(), vec![1]);
+        assert_eq!(res.host_resident_ids(), vec![0]);
+        assert!(res.is_host_resident(a(0)));
+        assert_eq!(res.host_resident_blocks(), 8);
+        assert_eq!(kv.budget().host_blocks(), 8);
+        let s = res.stats();
+        assert_eq!((s.evictions, s.demotions), (1, 1));
+        res.settle(2.0);
+        // Re-loading 0 is a PROMOTION: no setup cost, host charge released.
+        let g = res.admission_gate(a(0), &mut kv, 2.0);
+        assert_eq!(g, AdmitGate::Loading(2.0 + 8.0 * 1.0e-4), "promotion skips setup");
+        let s = res.stats();
+        assert_eq!((s.loads, s.promotions), (2, 1));
+        assert!(!res.is_host_resident(a(0)));
+        // The promotion released 0's host charge up front, then its
+        // eviction of idle 1 demoted 1 into the freed host room.
+        assert_eq!(res.host_resident_ids(), vec![1]);
+        assert_eq!(kv.budget().host_blocks(), 8, "0 released, 1 charged");
+        res.settle(3.0);
+        // Host pressure: demoting 0 (via loading 2) drops host-LRU 1.
+        assert!(matches!(res.admission_gate(a(2), &mut kv, 3.0), AdmitGate::Loading(_)));
+        assert_eq!(res.host_resident_ids(), vec![0]);
+        let s = res.stats();
+        assert_eq!(s.host_drops, 1, "host-tier pressure drops, never grows");
+        assert_eq!(kv.budget().host_blocks(), 8, "exactly one entry charged");
+        res.check_invariants().unwrap();
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn refcounted_adapters_never_demote_mid_use() {
+        let (mut res, mut kv) = fixture(16);
+        kv.set_host_adapter_blocks(16);
+        assert!(res.ensure_resident(a(0), &mut kv));
+        res.acquire(a(0), false);
+        assert!(res.ensure_resident(a(1), &mut kv));
+        res.acquire(a(1), false);
+        // Both in use, pool exhausted: nothing evictable, nothing demoted.
+        assert!(!res.evict_one_idle(&mut kv));
+        assert!(matches!(res.admission_gate(a(2), &mut kv, 0.0), AdmitGate::NoMemory));
+        assert_eq!(res.stats().demotions, 0);
+        assert_eq!(res.host_resident_blocks(), 0);
+        // Released → evictable → demoted.
+        res.release(a(0));
+        assert!(res.evict_one_idle(&mut kv));
+        assert_eq!(res.host_resident_ids(), vec![0]);
+        res.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn host_drop_returns_budget_to_exactly_zero() {
+        let (mut res, mut kv) = fixture(20);
+        kv.set_host_adapter_blocks(16);
+        assert!(res.ensure_resident(a(0), &mut kv));
+        assert!(res.ensure_resident(a(1), &mut kv));
+        assert!(res.evict_one_idle(&mut kv));
+        assert!(res.evict_one_idle(&mut kv));
+        assert_eq!(kv.budget().host_blocks(), 16, "both demoted");
+        assert_eq!(kv.budget().adapter_blocks(), 0, "device side fully released");
+        // A fresh load of a third adapter: both host entries outlive it.
+        assert!(res.ensure_resident(a(2), &mut kv));
+        assert_eq!(res.host_resident_ids(), vec![0, 1]);
+        // Evicting 2 under a FULL host drops host-LRU (0) to make room.
+        assert!(res.evict_one_idle(&mut kv));
+        assert_eq!(res.host_resident_ids(), vec![1, 2]);
+        assert_eq!(res.stats().host_drops, 1);
+        assert_eq!(kv.budget().host_blocks(), 16);
+        // Failover-style teardown: everything idle drains; host releases
+        // land the ledger on exactly zero.
+        for id in res.host_resident_ids() {
+            let e = res.host.remove(&id).unwrap();
+            kv.release_host_adapter_blocks(e.blocks);
+        }
+        assert_eq!(kv.budget().host_blocks(), 0);
+        assert_eq!(kv.budget().host_free_blocks(), 16);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lru_tie_break_is_deterministic_over_load_order() {
+        // Untouched adapters evict in exact load order — the (stamp, id)
+        // key is total, so eviction order is reproducible run-to-run.
+        let (mut res, mut kv) = fixture(24);
+        assert!(res.ensure_resident(a(0), &mut kv));
+        assert!(res.ensure_resident(a(1), &mut kv));
+        assert!(res.ensure_resident(a(2), &mut kv));
+        assert!(res.evict_one_idle(&mut kv));
+        assert_eq!(res.resident_ids(), vec![1, 2]);
+        assert!(res.evict_one_idle(&mut kv));
+        assert_eq!(res.resident_ids(), vec![2]);
+        // An acquire/release cycle refreshes the stamp: 2 (just touched)
+        // now outlives a reloaded 0.
+        assert!(res.ensure_resident(a(0), &mut kv));
+        res.acquire(a(2), true);
+        res.release(a(2));
+        assert!(res.evict_one_idle(&mut kv));
+        assert_eq!(res.resident_ids(), vec![2], "refreshed stamp survives");
+    }
+
+    #[test]
+    fn prefetch_starts_transfer_without_stall_and_counts() {
+        let (mut res, mut kv) = fixture(20);
+        res.configure_tiering(2.0e-3, 1.0e-4, true);
+        assert!(res.prefetch_enabled());
+        assert!(res.try_prefetch(a(0), &mut kv, 1.0));
+        let s = res.stats();
+        assert_eq!((s.prefetches, s.loads, s.load_stall_steps), (1, 1, 0));
+        // Already in flight: a second prefetch is a no-op.
+        assert!(!res.try_prefetch(a(0), &mut kv, 1.0));
+        assert_eq!(res.stats().prefetches, 1);
+        // Once matured, admission is a warm hit — the transfer rode the
+        // queue wait instead of the critical path.
+        let ready = res.earliest_pending_ready().unwrap();
+        assert_eq!(res.admission_gate(a(0), &mut kv, ready), AdmitGate::Hit);
+        // Zero-cost config: prefetch is a documented no-op.
+        let (mut res2, mut kv2) = fixture(20);
+        res2.configure_tiering(0.0, 0.0, true);
+        assert!(!res2.try_prefetch(a(0), &mut kv2, 1.0));
+        assert_eq!(res2.stats().prefetches, 0);
     }
 }

@@ -205,6 +205,15 @@ pub struct ReplicaStats {
     pub adapter_resident_blocks: usize,
     pub adapter_loads: u64,
     pub adapter_evictions: u64,
+    /// Modeled host-tier capacity in blocks (0 = no host tier;
+    /// DESIGN.md §20). Per-replica: heterogeneous fleets differ here.
+    pub host_total_blocks: u64,
+    /// Adapter blocks currently demoted to (parked on) the host tier.
+    pub adapter_host_blocks: usize,
+    pub adapter_demotions: u64,
+    pub adapter_promotions: u64,
+    pub adapter_host_drops: u64,
+    pub adapter_prefetches: u64,
 }
 
 /// The per-replica engine configuration summary `GET /cluster` reports so
@@ -412,6 +421,30 @@ impl ClusterStats {
                                     "adapter_evictions",
                                     Json::num(r.adapter_evictions as f64),
                                 ),
+                                (
+                                    "host_total_blocks",
+                                    Json::num(r.host_total_blocks as f64),
+                                ),
+                                (
+                                    "adapter_host_blocks",
+                                    Json::num(r.adapter_host_blocks as f64),
+                                ),
+                                (
+                                    "adapter_demotions",
+                                    Json::num(r.adapter_demotions as f64),
+                                ),
+                                (
+                                    "adapter_promotions",
+                                    Json::num(r.adapter_promotions as f64),
+                                ),
+                                (
+                                    "adapter_host_drops",
+                                    Json::num(r.adapter_host_drops as f64),
+                                ),
+                                (
+                                    "adapter_prefetches",
+                                    Json::num(r.adapter_prefetches as f64),
+                                ),
                             ])
                         })
                         .collect(),
@@ -439,15 +472,25 @@ impl<E: Executor> Cluster<E> {
         // and config()/registry() report replica 0's — so replicas must
         // genuinely be identical, not merely block-size-compatible
         // (a base_aligned_hashing or adapter mismatch would silently
-        // zero the affinity scores on the divergent replicas).
+        // zero the affinity scores on the divergent replicas). The ONLY
+        // tolerated divergence is capacity (DESIGN.md §20): per-replica
+        // device budget and host-tier size never enter hashing or token
+        // accounting, so heterogeneous fleets stay routable.
+        let normalized = |r: &Engine<E>| {
+            let mut cfg = r.cfg.clone();
+            cfg.cache.max_kv_tokens = 0;
+            cfg.cache.host_adapter_blocks = 0;
+            cfg
+        };
+        let reference = normalized(&replicas[0]);
         for (i, r) in replicas.iter().enumerate() {
             anyhow::ensure!(
                 r.is_fresh(),
                 "replica {i} has already served traffic (clusters wrap fresh engines)"
             );
             anyhow::ensure!(
-                r.cfg == replicas[0].cfg,
-                "replica {i} config differs from replica 0"
+                normalized(r) == reference,
+                "replica {i} config differs from replica 0 beyond capacity"
             );
             anyhow::ensure!(
                 r.registry.iter().eq(replicas[0].registry.iter()),
@@ -489,6 +532,33 @@ impl<E: Executor> Cluster<E> {
         mut f: impl FnMut(usize) -> Engine<E>,
     ) -> anyhow::Result<Self> {
         Self::new((0..n).map(&mut f).collect(), policy)
+    }
+
+    /// Build a (possibly heterogeneous) fleet from a base config and
+    /// `fleet.replica_specs` (DESIGN.md §20): replica `i` runs the base
+    /// config with spec `i` applied — differing device budget and
+    /// host-tier size only, so routing's shared chain hashing still
+    /// holds. Specs shorter than the fleet leave the tail on the base;
+    /// an empty spec list reproduces `with_fleet` on identical replicas
+    /// exactly. The factory receives the replica's specialized config.
+    pub fn from_specs(
+        n: usize,
+        base: &EngineConfig,
+        rcfg: RouterConfig,
+        fleet: FleetConfig,
+        initial_active: usize,
+        mut f: impl FnMut(usize, EngineConfig) -> Engine<E>,
+    ) -> anyhow::Result<Self> {
+        let replicas = (0..n)
+            .map(|i| {
+                let mut cfg = base.clone();
+                if let Some(spec) = fleet.replica_specs.get(i) {
+                    spec.apply(&mut cfg);
+                }
+                f(i, cfg)
+            })
+            .collect();
+        Self::with_fleet(replicas, rcfg, fleet, initial_active)
     }
 
     /// A self-driving fleet (DESIGN.md §19): `replicas.len()` is the
@@ -1112,6 +1182,11 @@ impl<E: Executor> Cluster<E> {
                 load,
                 affinity_blocks,
                 adapter_blocks,
+                free_blocks: if healthy {
+                    self.replicas[i].num_free_blocks() as usize
+                } else {
+                    0
+                },
                 healthy,
                 suspected: healthy && self.is_suspected(i),
                 warming: healthy && self.warming[i],
@@ -1481,6 +1556,12 @@ fn replica_stats<E: Executor>(
         adapter_resident_blocks: r.residency().resident_blocks(),
         adapter_loads: r.residency().stats().loads,
         adapter_evictions: r.residency().stats().evictions,
+        host_total_blocks: r.cfg.cache.host_adapter_blocks,
+        adapter_host_blocks: r.residency().host_resident_blocks(),
+        adapter_demotions: r.residency().stats().demotions,
+        adapter_promotions: r.residency().stats().promotions,
+        adapter_host_drops: r.residency().stats().host_drops,
+        adapter_prefetches: r.residency().stats().prefetches,
     }
 }
 
@@ -2948,5 +3029,71 @@ mod tests {
         for i in 0..2 {
             c.replica(i).check_invariants().unwrap();
         }
+    }
+
+    #[test]
+    fn from_specs_builds_heterogeneous_fleet_and_reports_tiers() {
+        use crate::config::ReplicaSpec;
+        let base = presets::granite_8b();
+        let fleet = FleetConfig {
+            replica_specs: vec![
+                ReplicaSpec { max_kv_tokens: 200_704, host_adapter_blocks: 256 },
+                ReplicaSpec { max_kv_tokens: 501_760, host_adapter_blocks: 0 },
+            ],
+            ..FleetConfig::default()
+        };
+        let c = Cluster::from_specs(
+            2,
+            &base,
+            RouterConfig::default(),
+            fleet,
+            2,
+            |_, cfg| {
+                let reg = workload::build_registry(2, cfg.model.vocab_size, true);
+                let exec = SimExecutor::new(&cfg);
+                Engine::with_registry(cfg, reg, exec)
+            },
+        )
+        .unwrap();
+        // Capacity diverges per replica; everything else is shared.
+        let s = c.stats();
+        assert_eq!(s.replicas[0].total_blocks, 200_704 / 16);
+        assert_eq!(s.replicas[1].total_blocks, 501_760 / 16);
+        assert_eq!(s.replicas[0].host_total_blocks, 256);
+        assert_eq!(s.replicas[1].host_total_blocks, 0);
+        assert_eq!(s.replicas[0].adapter_host_blocks, 0, "nothing demoted yet");
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"host_total_blocks\":256"), "{j}");
+        // Views surface per-replica headroom for the cold fallback.
+        let v = c.views_for(ModelTarget::Base, &[1, 2, 3], 0).0;
+        assert_eq!(v[0].free_blocks, 200_704 / 16);
+        assert_eq!(v[1].free_blocks, 501_760 / 16);
+    }
+
+    #[test]
+    fn divergence_beyond_capacity_is_still_rejected() {
+        let mk = |aligned: bool| {
+            let mut cfg = presets::granite_8b();
+            cfg.cache.base_aligned_hashing = aligned;
+            let reg = workload::build_registry(2, cfg.model.vocab_size, true);
+            let exec = SimExecutor::new(&cfg);
+            Engine::with_registry(cfg, reg, exec)
+        };
+        let err = Cluster::new(vec![mk(true), mk(false)], RoutePolicy::PrefixAffinity)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("beyond capacity"), "{err}");
+        // But capacity-only divergence is fine without from_specs too.
+        let bigger = |grow: bool| {
+            let mut cfg = presets::granite_8b();
+            if grow {
+                cfg.cache.max_kv_tokens *= 2;
+            }
+            let reg = workload::build_registry(2, cfg.model.vocab_size, true);
+            let exec = SimExecutor::new(&cfg);
+            Engine::with_registry(cfg, reg, exec)
+        };
+        assert!(Cluster::new(vec![bigger(false), bigger(true)], RoutePolicy::PrefixAffinity)
+            .is_ok());
     }
 }

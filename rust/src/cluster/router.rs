@@ -67,6 +67,12 @@ pub struct ReplicaView {
     /// replica (0 for base requests, non-resident adapters, or when
     /// adapter paging is off — then every replica is equally "resident").
     pub adapter_blocks: usize,
+    /// Free device blocks right now — the heterogeneous-fleet term
+    /// (DESIGN.md §20): replicas may carry different block budgets, and a
+    /// COLD placement seeds a new adapter/prefix footprint, so headroom
+    /// matters where affinity offers nothing. Scored only when
+    /// [`RouterConfig::free_budget_weight`] is nonzero.
+    pub free_blocks: usize,
     /// False for down or draining replicas: every policy must skip them —
     /// a draining replica still finishes its in-flight work but accepts
     /// nothing new, a down replica holds nothing at all.
@@ -90,11 +96,22 @@ pub struct RouterConfig {
     /// penalty × load. Low values chase cache hits harder; high values
     /// behave closer to least-loaded.
     pub load_penalty_blocks: f64,
+    /// Heterogeneous-fleet cold placement (DESIGN.md §20): when an
+    /// affinity policy finds no warm replica, score the fallback as
+    /// `free_budget_weight × free_blocks − load_penalty_blocks × load`
+    /// instead of pure least-loaded, steering new adapter/prefix
+    /// footprints toward the replicas with room to keep them resident.
+    /// 0.0 (the default) is bit-identical to the least-loaded fallback.
+    pub free_budget_weight: f64,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        RouterConfig { policy: RoutePolicy::PrefixAffinity, load_penalty_blocks: 2.0 }
+        RouterConfig {
+            policy: RoutePolicy::PrefixAffinity,
+            load_penalty_blocks: 2.0,
+            free_budget_weight: 0.0,
+        }
     }
 }
 
@@ -251,8 +268,9 @@ impl Router {
             .max()
             .unwrap_or(0);
         if best == 0 {
-            // Cold: nothing to gain anywhere, balance load.
-            return Placement { replica: least_loaded(views), kind: PlacementKind::Cold };
+            // Cold: nothing to gain anywhere — balance load, weighing
+            // free device budget when configured (heterogeneous fleets).
+            return Placement { replica: self.cold_fallback(views), kind: PlacementKind::Cold };
         }
         let score =
             |v: &ReplicaView| value(v) as f64 - self.cfg.load_penalty_blocks * v.load as f64;
@@ -278,6 +296,32 @@ impl Router {
         } else {
             Placement { replica: pick, kind: PlacementKind::Warm { blocks } }
         }
+    }
+
+    /// The cold-placement fallback: pure least-loaded unless
+    /// `free_budget_weight` is set, in which case replicas with device
+    /// headroom win the tie for a new footprint. Ties resolve to the
+    /// lowest index, matching every other policy's determinism contract.
+    fn cold_fallback(&self, views: &[ReplicaView]) -> usize {
+        if self.cfg.free_budget_weight <= 0.0 {
+            return least_loaded(views);
+        }
+        let score = |v: &ReplicaView| {
+            self.cfg.free_budget_weight * v.free_blocks as f64
+                - self.cfg.load_penalty_blocks * v.load as f64
+        };
+        let mut pick = views.iter().position(|v| v.healthy).expect("no healthy replicas");
+        let mut pick_score = score(&views[pick]);
+        for (j, v) in views.iter().enumerate() {
+            if v.healthy {
+                let sc = score(v);
+                if sc > pick_score {
+                    pick = j;
+                    pick_score = sc;
+                }
+            }
+        }
+        pick
     }
 
     /// Count a successfully-submitted placement into the routing stats.
@@ -312,6 +356,7 @@ mod tests {
                 load,
                 affinity_blocks: aff,
                 adapter_blocks: 0,
+                free_blocks: 0,
                 healthy: true,
                 suspected: false,
                 warming: false,
@@ -327,6 +372,7 @@ mod tests {
                 load,
                 affinity_blocks: aff,
                 adapter_blocks: ad,
+                free_blocks: 0,
                 healthy: true,
                 suspected: false,
                 warming: false,
@@ -378,6 +424,51 @@ mod tests {
         r.record(p);
         assert_eq!(r.stats.affinity_fallbacks, 1);
         assert_eq!(r.stats.affinity_hits, 0);
+    }
+
+    #[test]
+    fn cold_fallback_weighs_free_budget_on_heterogeneous_fleets() {
+        // Equal load, no affinity anywhere: weight 0.0 (the default) must
+        // reproduce least-loaded exactly (ties → lowest index), while a
+        // positive weight steers the cold footprint to the replica with
+        // device headroom. DESIGN.md §20.
+        let mut v = views(&[(2, 0), (2, 0), (2, 0)]);
+        v[0].free_blocks = 8;
+        v[1].free_blocks = 64;
+        v[2].free_blocks = 64;
+
+        let mut r = router(RoutePolicy::PrefixAffinity, 3);
+        let p = r.choose(&v);
+        assert_eq!(p.replica, 0, "weight 0.0 is exactly least-loaded");
+        assert_eq!(p.kind, PlacementKind::Cold);
+
+        let mut r = Router::new(
+            RouterConfig {
+                policy: RoutePolicy::PrefixAffinity,
+                free_budget_weight: 0.5,
+                ..Default::default()
+            },
+            3,
+        );
+        let p = r.choose(&v);
+        assert_eq!(p.replica, 1, "headroom wins the cold tie, ties → lowest index");
+        assert_eq!(p.kind, PlacementKind::Cold);
+
+        // The weight is traded against load, not absolute: 64 extra free
+        // blocks at 0.5/block (= 32) lose to 20 fewer queued requests at
+        // the default 2.0 penalty (= 40).
+        v[0].load = 2;
+        v[1].load = 22;
+        v[2].load = 22;
+        assert_eq!(r.choose(&v).replica, 0);
+
+        // Warm affinity still short-circuits the fallback entirely.
+        v[1].load = 2;
+        v[2].load = 2;
+        v[0].affinity_blocks = 6;
+        let p = r.choose(&v);
+        assert_eq!(p.replica, 0);
+        assert_eq!(p.kind, PlacementKind::Warm { blocks: 6 });
     }
 
     #[test]

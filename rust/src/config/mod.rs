@@ -113,6 +113,27 @@ pub struct CacheConfig {
     /// prefill. When false (default), replica moves recompute from token
     /// zero, exactly as before this switch existed.
     pub prefix_migration: bool,
+    /// Host→device transfer bandwidth for adapter weight loads, bytes/s
+    /// (DESIGN.md §20). 0.0 (default) keeps PR-3 semantics: loads are
+    /// instantaneous accounting and an admitted cold adapter costs only
+    /// the admission stall it always cost — bit-identical to the
+    /// pre-tiering engine. A realistic value is PCIe-class, ~25e9.
+    pub adapter_load_bw: f64,
+    /// Fixed per-load setup cost (s): host-side staging, descriptor
+    /// setup, transfer kickoff. Only meaningful with a nonzero
+    /// `adapter_load_bw`; promotion from the host tier skips it (the
+    /// weights are already staged and pinned).
+    pub adapter_load_setup: f64,
+    /// Host-memory tier capacity for demoted adapter weights, in the same
+    /// KV-block-equivalent units as the device budget (DESIGN.md §20).
+    /// 0 (default) disables the tier: device eviction drops weights and
+    /// the next use pays a full-cost reload, exactly as before.
+    pub host_adapter_blocks: u64,
+    /// Adapter prefetch: when true, the scheduler starts loading a queued
+    /// request's cold adapter while the request waits for admission,
+    /// overlapping transfer with queue time. Off by default; a no-op with
+    /// zero `adapter_load_bw` (loads complete instantly anyway).
+    pub adapter_prefetch: bool,
 }
 
 impl CacheConfig {
@@ -188,6 +209,34 @@ pub struct FleetConfig {
     /// A freshly activated replica is `warming` — routed overflow only —
     /// until its gossiped summary holds at least this many blocks.
     pub warmup_min_blocks: usize,
+    /// Heterogeneous fleet shape (DESIGN.md §20): per-replica overrides
+    /// applied positionally at construction. Empty (default) keeps the
+    /// uniform fleet — every replica uses the engine config verbatim.
+    /// When non-empty the list length must equal the fleet size.
+    pub replica_specs: Vec<ReplicaSpec>,
+}
+
+/// One replica's deviation from the shared [`EngineConfig`] in a
+/// heterogeneous fleet (DESIGN.md §20). Only memory geometry may vary —
+/// model/hash config must stay identical or routing's shared chain
+/// hashing would silently break (see `Cluster::with_config`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicaSpec {
+    /// Device KV budget override in tokens; 0 = keep the engine default.
+    pub max_kv_tokens: u64,
+    /// Host-tier capacity override in KV-block-equivalents. Applied
+    /// verbatim (0 = no host tier on this replica).
+    pub host_adapter_blocks: u64,
+}
+
+impl ReplicaSpec {
+    /// Apply this spec to a replica's engine config.
+    pub fn apply(&self, cfg: &mut EngineConfig) {
+        if self.max_kv_tokens > 0 {
+            cfg.cache.max_kv_tokens = self.max_kv_tokens;
+        }
+        cfg.cache.host_adapter_blocks = self.host_adapter_blocks;
+    }
 }
 
 impl Default for FleetConfig {
@@ -206,6 +255,7 @@ impl Default for FleetConfig {
             queue_low: 0.5,
             cooldown_steps: 32,
             warmup_min_blocks: 8,
+            replica_specs: Vec::new(),
         }
     }
 }
@@ -283,6 +333,24 @@ impl FleetConfig {
                         f.warmup_min_blocks =
                             v.as_u64().unwrap_or(f.warmup_min_blocks as u64) as usize
                     }
+                    "replica_specs" => {
+                        let arr = v
+                            .as_arr()
+                            .ok_or_else(|| anyhow::anyhow!("replica_specs must be an array"))?;
+                        f.replica_specs = arr
+                            .iter()
+                            .map(|s| ReplicaSpec {
+                                max_kv_tokens: s
+                                    .get("max_kv_tokens")
+                                    .and_then(Json::as_u64)
+                                    .unwrap_or(0),
+                                host_adapter_blocks: s
+                                    .get("host_adapter_blocks")
+                                    .and_then(Json::as_u64)
+                                    .unwrap_or(0),
+                            })
+                            .collect();
+                    }
                     other => anyhow::bail!("unknown fleet config key `{other}`"),
                 }
             }
@@ -328,6 +396,14 @@ impl EngineConfig {
             self.model.d_model % self.model.n_heads == 0,
             "d_model not divisible by n_heads"
         );
+        anyhow::ensure!(
+            self.cache.adapter_load_bw >= 0.0,
+            "adapter_load_bw must be >= 0"
+        );
+        anyhow::ensure!(
+            self.cache.adapter_load_setup >= 0.0,
+            "adapter_load_setup must be >= 0"
+        );
         Ok(())
     }
 
@@ -366,6 +442,22 @@ impl EngineConfig {
                     "prefix_migration" => {
                         cfg.cache.prefix_migration =
                             v.as_bool().unwrap_or(cfg.cache.prefix_migration)
+                    }
+                    "adapter_load_bw" => {
+                        cfg.cache.adapter_load_bw =
+                            v.as_f64().unwrap_or(cfg.cache.adapter_load_bw)
+                    }
+                    "adapter_load_setup" => {
+                        cfg.cache.adapter_load_setup =
+                            v.as_f64().unwrap_or(cfg.cache.adapter_load_setup)
+                    }
+                    "host_adapter_blocks" => {
+                        cfg.cache.host_adapter_blocks =
+                            v.as_u64().unwrap_or(cfg.cache.host_adapter_blocks)
+                    }
+                    "adapter_prefetch" => {
+                        cfg.cache.adapter_prefetch =
+                            v.as_bool().unwrap_or(cfg.cache.adapter_prefetch)
                     }
                     "max_batch_tokens" => {
                         cfg.scheduler.max_batch_tokens =
@@ -427,6 +519,49 @@ mod tests {
     fn from_json_rejects_unknown_keys() {
         let j = Json::parse(r#"{"preset": "tiny", "blok_size": 4}"#).unwrap();
         assert!(EngineConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn tiering_knobs_default_off_and_parse() {
+        let d = presets::tiny();
+        assert_eq!(d.cache.adapter_load_bw, 0.0, "default loads are instantaneous");
+        assert_eq!(d.cache.adapter_load_setup, 0.0);
+        assert_eq!(d.cache.host_adapter_blocks, 0, "default has no host tier");
+        assert!(!d.cache.adapter_prefetch);
+        let j = Json::parse(
+            r#"{"preset": "tiny", "adapter_load_bw": 25e9,
+                "adapter_load_setup": 0.002, "host_adapter_blocks": 64,
+                "adapter_prefetch": true}"#,
+        )
+        .unwrap();
+        let cfg = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.cache.adapter_load_bw, 25e9);
+        assert_eq!(cfg.cache.adapter_load_setup, 0.002);
+        assert_eq!(cfg.cache.host_adapter_blocks, 64);
+        assert!(cfg.cache.adapter_prefetch);
+        let bad = Json::parse(r#"{"preset": "tiny", "adapter_load_bw": -1.0}"#).unwrap();
+        assert!(EngineConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn replica_specs_parse_and_apply() {
+        let j = Json::parse(
+            r#"{"replica_specs": [
+                {"max_kv_tokens": 4096, "host_adapter_blocks": 32},
+                {}
+            ]}"#,
+        )
+        .unwrap();
+        let f = FleetConfig::from_json(&j).unwrap();
+        assert_eq!(f.replica_specs.len(), 2);
+        let mut cfg = presets::tiny();
+        f.replica_specs[0].apply(&mut cfg);
+        assert_eq!(cfg.cache.max_kv_tokens, 4096);
+        assert_eq!(cfg.cache.host_adapter_blocks, 32);
+        let mut cfg2 = presets::tiny();
+        f.replica_specs[1].apply(&mut cfg2);
+        assert_eq!(cfg2.cache.max_kv_tokens, presets::tiny().cache.max_kv_tokens);
+        assert_eq!(cfg2.cache.host_adapter_blocks, 0);
     }
 
     #[test]

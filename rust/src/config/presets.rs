@@ -50,6 +50,10 @@ pub fn tiny() -> EngineConfig {
             base_aligned_hashing: true,
             adapter_paging: false,
             prefix_migration: false,
+            adapter_load_bw: 0.0,
+            adapter_load_setup: 0.0,
+            host_adapter_blocks: 0,
+            adapter_prefetch: false,
         },
         scheduler: SchedulerConfig {
             max_batch_tokens: 256,
@@ -84,6 +88,10 @@ pub fn granite_8b() -> EngineConfig {
             base_aligned_hashing: true,
             adapter_paging: false,
             prefix_migration: false,
+            adapter_load_bw: 0.0,
+            adapter_load_setup: 0.0,
+            host_adapter_blocks: 0,
+            adapter_prefetch: false,
         },
         scheduler: SchedulerConfig {
             max_batch_tokens: 8192,
@@ -118,6 +126,10 @@ pub fn llama_70b() -> EngineConfig {
             base_aligned_hashing: true,
             adapter_paging: false,
             prefix_migration: false,
+            adapter_load_bw: 0.0,
+            adapter_load_setup: 0.0,
+            host_adapter_blocks: 0,
+            adapter_prefetch: false,
         },
         scheduler: SchedulerConfig {
             max_batch_tokens: 8192,
@@ -152,6 +164,10 @@ pub fn mistral_large_2() -> EngineConfig {
             base_aligned_hashing: true,
             adapter_paging: false,
             prefix_migration: false,
+            adapter_load_bw: 0.0,
+            adapter_load_setup: 0.0,
+            host_adapter_blocks: 0,
+            adapter_prefetch: false,
         },
         scheduler: SchedulerConfig {
             max_batch_tokens: 8192,

@@ -382,6 +382,9 @@ pub struct Coordinator {
     /// Whether submissions honor per-stage priority (event mode: yes;
     /// lockstep mode: no, matching the paper's fixed-batch §4.2 runs).
     honor_priority: bool,
+    /// Rotating start for [`Coordinator::pump`]'s within-level round-robin
+    /// across conversations (fairness across DAG depths).
+    fair_cursor: usize,
 }
 
 impl Default for Coordinator {
@@ -398,6 +401,7 @@ impl Coordinator {
             finished: Vec::new(),
             remaining_total: 0,
             honor_priority: true,
+            fair_cursor: 0,
         }
     }
 
@@ -670,6 +674,17 @@ impl Coordinator {
 
     /// Drain the engine's finished queue for coordinator-owned requests
     /// (leaving other traffic's outputs in place) and chain follow-ups.
+    ///
+    /// Fairness across DAG depths: every drained stage is retired FIRST,
+    /// and only then are the unlocked children submitted — ordered
+    /// shallowest graph level first, round-robin across conversations
+    /// within a level (rotating start). Submitting per-completion instead
+    /// (the old behavior, still what [`Coordinator::on_finished`] does for
+    /// single completions) lets a deep chain whose stage happens to drain
+    /// first enqueue its level-N follow-up ahead of conversations still
+    /// near their roots, every single pump — FIFO admission then starves
+    /// the shallow graphs under sustained load.
+    ///
     /// Returns the number of stages retired.
     pub fn pump<D: EngineDriver>(&mut self, engine: &mut D) -> anyhow::Result<usize> {
         let outs = {
@@ -677,8 +692,31 @@ impl Coordinator {
             engine.take_finished_where(|o| owner.contains_key(&o.id))
         };
         let n = outs.len();
+        // Phase 1: retire everything drained, collecting unlocked
+        // children. A child with several parents in this batch is pushed
+        // exactly once — pending_parents only reaches 0 on the last one.
+        let mut ready: Vec<(usize, StageId)> = Vec::new();
         for out in outs {
-            self.on_finished(engine, out)?;
+            let (ci, sid) = self.retire(engine, out)?;
+            let conv = &self.convs[ci];
+            for c in &conv.children[sid.0] {
+                if conv.pending_parents[c.0] == 0 && !conv.submitted[c.0] {
+                    ready.push((ci, *c));
+                }
+            }
+        }
+        // Phase 2: submit shallow-first, conversations rotating within a
+        // level so equal-depth peers take turns going first.
+        if ready.len() > 1 {
+            let nc = self.convs.len();
+            let start = self.fair_cursor % nc;
+            ready.sort_by_key(|&(ci, sid)| {
+                (self.convs[ci].graph.level(sid), (ci + nc - start) % nc, sid)
+            });
+            self.fair_cursor = self.fair_cursor.wrapping_add(1);
+        }
+        for (ci, sid) in ready {
+            self.submit_stage(engine, ci, sid)?;
         }
         Ok(n)
     }
@@ -981,6 +1019,51 @@ mod tests {
         let leftovers = e.take_finished();
         assert_eq!(leftovers.len(), 1, "abandoned root finished unclaimed");
         assert_eq!(leftovers[0].id, orphans[0]);
+    }
+
+    #[test]
+    fn pump_submits_unlocked_stages_shallow_first_across_conversations() {
+        let mut e = engine(1);
+        let mut co = Coordinator::new();
+        let chain_graph = |len: usize, seed: u32| {
+            let mut g = StageGraph::new();
+            let mut prev = g.root("s0", ModelTarget::Base, vec![seed; 64], 8);
+            for i in 1..len {
+                prev =
+                    g.chain(&format!("s{i}"), ModelTarget::Base, prev, vec![seed + i as u32], 8);
+            }
+            g
+        };
+        let a = co.add_conversation(chain_graph(3, 1)).unwrap();
+        let b = co.add_conversation(chain_graph(2, 1001)).unwrap();
+        // Drive A one level ahead of B: a0 retires and a1 runs to
+        // completion before B's root is even submitted.
+        co.submit_ready(&mut e, a).unwrap();
+        e.run_until_idle();
+        co.pump(&mut e).unwrap(); // retires a0, submits a1
+        e.run_until_idle(); // a1 finishes, sits in the queue
+        co.submit_ready(&mut e, b).unwrap();
+        e.run_until_idle(); // b0 finishes behind it
+        // One pump now retires a1 and b0 together (a1 drained first),
+        // unlocking a2 (level 2) and b1 (level 1). The fair pump submits
+        // the shallower b1 first — the deep chain cannot keep enqueueing
+        // its next level ahead of a conversation still near its root.
+        // RequestIds are monotonic, so the order is directly observable.
+        co.pump(&mut e).unwrap();
+        let id_of = |co: &Coordinator, ci: usize| {
+            co.owner
+                .iter()
+                .find(|(_, (c, _))| *c == ci)
+                .map(|(id, _)| *id)
+                .expect("stage in flight")
+        };
+        assert!(
+            id_of(&co, b) < id_of(&co, a),
+            "shallow stage must be submitted before the deep chain's next level"
+        );
+        e.run_until_idle();
+        co.pump(&mut e).unwrap();
+        assert!(co.is_done());
     }
 
     #[test]

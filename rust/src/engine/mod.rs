@@ -112,18 +112,33 @@ impl<E: Executor> Engine<E> {
 
     pub fn with_registry(cfg: EngineConfig, registry: AdapterRegistry, exec: E) -> Self {
         cfg.validate().expect("invalid engine config");
-        let kv = KvCacheManager::new(
+        let mut kv = KvCacheManager::new(
             cfg.cache.num_blocks() as u32,
             cfg.cache.block_size,
             cfg.cache.enable_prefix_caching,
         );
+        kv.set_host_adapter_blocks(cfg.cache.host_adapter_blocks as usize);
         let sched = Scheduler::new(cfg.scheduler.clone());
-        let residency = AdapterResidency::new(
+        let mut residency = AdapterResidency::new(
             &registry,
             &cfg.model,
             cfg.cache.block_size,
             cfg.cache.adapter_paging,
         );
+        // Transfer-cost scalars for the residency state machine — the
+        // same per-block figure `CostModel::adapter_load_time` models
+        // (kv_bytes/token × block_size / host→device bandwidth). Zero
+        // bandwidth (the default) keeps loads instantaneous.
+        let (setup_s, per_block_s) = if cfg.cache.adapter_load_bw > 0.0 {
+            (
+                cfg.cache.adapter_load_setup,
+                cfg.model.kv_bytes_per_token() * cfg.cache.block_size as f64
+                    / cfg.cache.adapter_load_bw,
+            )
+        } else {
+            (0.0, 0.0)
+        };
+        residency.configure_tiering(setup_s, per_block_s, cfg.cache.adapter_prefetch);
         Engine {
             kv,
             sched,
@@ -489,9 +504,28 @@ impl<E: Executor> Engine<E> {
     /// Drive one engine step. Returns false when nothing was schedulable
     /// (idle: caller advances the clock to the next arrival or stops).
     pub fn step(&mut self) -> bool {
-        let step = self.sched.schedule(&mut self.reqs, &mut self.kv, &mut self.residency);
+        // Mature any adapter-weight transfer whose completion time has
+        // passed, BEFORE packing: a load that finished during the last
+        // step's elapsed time must admit this step (DESIGN.md §20).
+        self.residency.settle(self.clock);
+        let step =
+            self.sched
+                .schedule(&mut self.reqs, &mut self.kv, &mut self.residency, self.clock);
         self.metrics.engine_steps += 1;
         if step.is_empty() {
+            // Nothing runnable, but an adapter-weight transfer may still
+            // be in flight (every admission stalled behind it): advance
+            // the clock to its completion so the stall is charged in sim
+            // time and the next step can admit. This is the load-stall
+            // analogue of execution advancing the clock.
+            if let Some(ready_at) = self.residency.earliest_pending_ready() {
+                if ready_at > self.clock {
+                    self.clock = ready_at;
+                    self.residency.settle(self.clock);
+                    self.refresh_gauges();
+                    return true;
+                }
+            }
             self.refresh_gauges();
             return false;
         }
@@ -615,6 +649,11 @@ impl<E: Executor> Engine<E> {
         self.metrics.adapter_evictions = rs.evictions;
         self.metrics.adapter_load_stall_steps = rs.load_stall_steps;
         self.metrics.adapter_resident_blocks = self.residency.resident_blocks() as u64;
+        self.metrics.adapter_demotions = rs.demotions;
+        self.metrics.adapter_promotions = rs.promotions;
+        self.metrics.adapter_host_drops = rs.host_drops;
+        self.metrics.adapter_prefetches = rs.prefetches;
+        self.metrics.adapter_host_blocks = self.residency.host_resident_blocks() as u64;
         self.metrics.leased_blocks = self.kv.leased_blocks() as u64;
         self.metrics.lease_reclaims = ks.leases_reclaimed;
     }

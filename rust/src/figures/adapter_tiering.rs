@@ -1,0 +1,246 @@
+//! Adapter-tiering figure (ours, beyond the paper): what *time-costed*
+//! two-tier adapter memory buys over the instantaneous model
+//! (DESIGN.md §20).
+//!
+//! Two experiments share one table:
+//!
+//! 1. **Churn sweep** (single engine): the same adapter-churn workload —
+//!    requests cycling over more adapters than the device budget holds —
+//!    under four residency configurations:
+//!    - `drop` — costed transfers, no host tier: every eviction discards
+//!      the weights, every reload pays setup + per-block bandwidth.
+//!    - `demote` — host tier on: evictions park weights in host memory,
+//!      reloads promote at bandwidth-only cost (no setup).
+//!    - `demote+prefetch` — additionally overlaps a queued request's cold
+//!      transfer with its queue wait (scheduler phase 3).
+//!    - `zero-cost` — the pre-§20 instantaneous baseline (bw = 0): what
+//!      the old model claimed the same workload cost.
+//!    Headline shape: `drop → demote` cuts reload latency (promotions
+//!    replace cold loads; makespan drops by the saved setup times), and
+//!    `demote → demote+prefetch` strictly cuts load-stall steps.
+//!
+//! 2. **Fleet packing** (two replicas, equal TOTAL budget): five 32-block
+//!    adapters cannot split evenly over two 96-block replicas — whichever
+//!    replica ends with three adapters holds 96 blocks of weights and
+//!    zero room for KV, so it thrashes every round. A heterogeneous
+//!    136 + 56 split packs 4 + 1 cleanly, and the router's
+//!    `free_budget_weight` steers cold adapters toward the headroom.
+//!    Headline shape: heterogeneous aggregate residency hit-rate strictly
+//!    beats homogeneous at the same total budget.
+
+use crate::adapter::AdapterId;
+use crate::cluster::{Cluster, RoutePolicy, RouterConfig};
+use crate::config::{presets, EngineConfig, FleetConfig, ReplicaSpec};
+use crate::engine::{Engine, EngineDriver};
+use crate::pipeline::workload;
+use crate::request::{ModelTarget, SamplingParams};
+use crate::simulator::SimExecutor;
+
+use super::Table;
+
+/// Engine config for the churn sweep: a 96-block device (two 32-block
+/// adapters + KV), costed transfers unless `bw` is 0.
+pub fn cfg_for(host_blocks: u64, bw: f64, prefetch: bool) -> EngineConfig {
+    let mut cfg = presets::granite_8b();
+    cfg.scheduler.max_seq_len = 256;
+    cfg.scheduler.max_batch_tokens = 2048;
+    cfg.scheduler.max_num_seqs = 8;
+    cfg.cache.max_kv_tokens = 96 * cfg.cache.block_size as u64;
+    cfg.cache.adapter_paging = true;
+    cfg.cache.adapter_load_bw = bw;
+    cfg.cache.adapter_load_setup = if bw > 0.0 { 2.0e-3 } else { 0.0 };
+    cfg.cache.host_adapter_blocks = host_blocks;
+    cfg.cache.adapter_prefetch = prefetch;
+    cfg
+}
+
+/// PCIe-gen4-ish host→device bandwidth used by the costed arms.
+pub const LOAD_BW: f64 = 64e9;
+
+/// One churn-sweep measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChurnResult {
+    pub loads: u64,
+    pub evictions: u64,
+    pub demotions: u64,
+    pub promotions: u64,
+    pub host_drops: u64,
+    pub prefetches: u64,
+    pub stall_steps: u64,
+    pub adapter_hit_rate: f64,
+    pub ttft_mean: f64,
+    pub makespan: f64,
+}
+
+/// Run `n_requests` cycling over 3 adapters (96 weight blocks — more than
+/// the 96-block device can hold beside KV) on one engine. All requests
+/// are submitted up front so transfers can overlap queue waits.
+pub fn run_churn(host_blocks: u64, bw: f64, prefetch: bool, n_requests: usize) -> ChurnResult {
+    let cfg = cfg_for(host_blocks, bw, prefetch);
+    let reg = workload::build_registry(3, cfg.model.vocab_size, true);
+    let exec = SimExecutor::new(&cfg);
+    let mut e = Engine::with_registry(cfg, reg, exec);
+    let params = SamplingParams { max_new_tokens: 8, ..Default::default() };
+    for k in 0..n_requests {
+        let prompt = vec![100 + k as u32; 64];
+        e.submit(ModelTarget::Adapter(AdapterId((k % 3) as u32)), prompt, params)
+            .unwrap();
+    }
+    e.run_until_idle();
+    let rs = e.residency().stats();
+    ChurnResult {
+        loads: rs.loads,
+        evictions: rs.evictions,
+        demotions: rs.demotions,
+        promotions: rs.promotions,
+        host_drops: rs.host_drops,
+        prefetches: rs.prefetches,
+        stall_steps: rs.load_stall_steps,
+        adapter_hit_rate: rs.hit_rate(),
+        ttft_mean: e.metrics.all.mean("ttft"),
+        makespan: e.clock(),
+    }
+}
+
+/// One fleet-packing measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetResult {
+    pub aggregate_adapter_hit_rate: f64,
+    pub loads: u64,
+    pub evictions: u64,
+    pub makespan: f64,
+}
+
+/// Two replicas at equal TOTAL budget (192 blocks): heterogeneous
+/// 136 + 56 vs homogeneous 96 + 96, serving `rounds` round-robin passes
+/// over 5 adapters sequentially (placement is then driven purely by
+/// residency affinity and free budget, never by queue depth).
+pub fn run_fleet(hetero: bool, rounds: usize) -> FleetResult {
+    let mut base = presets::granite_8b();
+    base.scheduler.max_seq_len = 256;
+    base.scheduler.max_batch_tokens = 1024;
+    base.scheduler.max_num_seqs = 4;
+    base.cache.adapter_paging = true;
+    let bs = base.cache.block_size as u64;
+    let blocks: [u64; 2] = if hetero { [136, 56] } else { [96, 96] };
+    let fleet = FleetConfig {
+        replica_specs: blocks
+            .iter()
+            .map(|&b| ReplicaSpec { max_kv_tokens: b * bs, host_adapter_blocks: 0 })
+            .collect(),
+        ..FleetConfig::default()
+    };
+    let rcfg = RouterConfig {
+        policy: RoutePolicy::AdapterAffinity,
+        free_budget_weight: 1.0,
+        ..Default::default()
+    };
+    let mut c = Cluster::from_specs(2, &base, rcfg, fleet, 2, |_, cfg| {
+        let reg = workload::build_registry(5, cfg.model.vocab_size, true);
+        let exec = SimExecutor::new(&cfg);
+        Engine::with_registry(cfg, reg, exec)
+    })
+    .unwrap();
+    let params = SamplingParams { max_new_tokens: 4, ..Default::default() };
+    for k in 0..rounds * 5 {
+        let prompt = vec![1000 + k as u32; 17];
+        c.submit(ModelTarget::Adapter(AdapterId((k % 5) as u32)), prompt, params)
+            .unwrap();
+        c.run_until_idle();
+        c.take_finished();
+    }
+    let s = c.stats();
+    FleetResult {
+        aggregate_adapter_hit_rate: s.aggregate_adapter_hit_rate,
+        loads: s.replicas.iter().map(|r| r.adapter_loads).sum(),
+        evictions: s.replicas.iter().map(|r| r.adapter_evictions).sum(),
+        makespan: c.clock(),
+    }
+}
+
+fn sizes(quick: bool) -> (usize, usize) {
+    if quick {
+        (9, 4)
+    } else {
+        (18, 8)
+    }
+}
+
+pub fn run(quick: bool) -> Table {
+    let (n_requests, rounds) = sizes(quick);
+    let mut t = Table::new(
+        "adapter_tiering",
+        &format!(
+            "tiered adapter memory: costed transfers, host-tier demotion, \
+             prefetch, and heterogeneous packing ({n_requests} churn \
+             requests over 3 adapters; {rounds} fleet rounds over 5)"
+        ),
+        &[
+            "mode",
+            "loads",
+            "promotions",
+            "demotions",
+            "host_drops",
+            "prefetches",
+            "stall_steps",
+            "adapter_hit_rate",
+            "ttft_mean_s",
+            "makespan_s",
+        ],
+    );
+    let arms: [(&str, u64, f64, bool); 4] = [
+        ("drop", 0, LOAD_BW, false),
+        ("demote", 96, LOAD_BW, false),
+        ("demote+prefetch", 96, LOAD_BW, true),
+        ("zero-cost", 0, 0.0, false),
+    ];
+    for (mode, host, bw, prefetch) in arms {
+        let p = run_churn(host, bw, prefetch, n_requests);
+        t.push(
+            &[mode.to_string()],
+            &[
+                p.loads as f64,
+                p.promotions as f64,
+                p.demotions as f64,
+                p.host_drops as f64,
+                p.prefetches as f64,
+                p.stall_steps as f64,
+                p.adapter_hit_rate,
+                p.ttft_mean,
+                p.makespan,
+            ],
+        );
+    }
+    for hetero in [false, true] {
+        let p = run_fleet(hetero, rounds);
+        t.push(
+            &[if hetero { "fleet-hetero" } else { "fleet-homo" }.to_string()],
+            &[
+                p.loads as f64,
+                0.0,
+                0.0,
+                0.0,
+                0.0,
+                0.0,
+                p.aggregate_adapter_hit_rate,
+                0.0,
+                p.makespan,
+            ],
+        );
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_shape() {
+        let t = run(true);
+        assert_eq!(t.rows.len(), 6); // 4 churn arms + 2 fleet arms
+        for v in t.col("makespan_s") {
+            assert!(v > 0.0);
+        }
+    }
+}

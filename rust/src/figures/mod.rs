@@ -22,10 +22,14 @@
 //! home-replica kill, plus K-way fork fan-out vs K independent sessions ·
 //! selfdriving (ours): the failure detector declaring a silenced
 //! replica's failover unattended, and the autoscaler riding a diurnal
-//! load cycle up and back down with zero lost requests.
+//! load cycle up and back down with zero lost requests ·
+//! adapter_tiering (ours): time-costed host↔device adapter transfers —
+//! drop vs host-tier demotion vs prefetch, plus heterogeneous vs
+//! homogeneous fleet packing at equal total budget.
 
 pub mod ablations;
 pub mod adapter_memory;
+pub mod adapter_tiering;
 pub mod cluster_scaling;
 pub mod concurrency;
 pub mod failover;
@@ -242,6 +246,7 @@ pub fn run_all(quick: bool) -> Vec<Table> {
     out.push(fig15::run(quick));
     out.push(cluster_scaling::run(quick));
     out.push(adapter_memory::run(quick));
+    out.push(adapter_tiering::run(quick));
     out.push(failover::run(quick));
     out.push(migration::run(quick));
     out.extend(selfdriving::run(quick));
@@ -265,6 +270,7 @@ pub fn run_by_id(id: &str, quick: bool) -> Vec<Table> {
         "fig15" => vec![fig15::run(quick)],
         "cluster" | "cluster_scaling" => vec![cluster_scaling::run(quick)],
         "adapter_memory" => vec![adapter_memory::run(quick)],
+        "adapter_tiering" => vec![adapter_tiering::run(quick)],
         "failover" => vec![failover::run(quick)],
         "migration" => vec![migration::run(quick)],
         "selfdriving" => selfdriving::run(quick),
@@ -276,8 +282,8 @@ pub fn run_by_id(id: &str, quick: bool) -> Vec<Table> {
         "concurrency" => vec![concurrency::run(quick)],
         other => panic!(
             "unknown figure id `{other}` (try table1, fig6..fig15, cluster, \
-             adapter_memory, failover, migration, selfdriving, ablations, \
-             scale, concurrency, all)"
+             adapter_memory, adapter_tiering, failover, migration, \
+             selfdriving, ablations, scale, concurrency, all)"
         ),
     }
 }

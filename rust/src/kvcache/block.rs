@@ -132,6 +132,14 @@ impl BlockPool {
         &self.budget
     }
 
+    /// Mutable ledger access for the host tier (DESIGN.md §20): host
+    /// blocks are modeled capacity with no physical `BlockId`s, so the
+    /// residency layer charges them directly — the pool's free list and
+    /// device invariants are never involved.
+    pub fn budget_mut(&mut self) -> &mut MemoryBudget {
+        &mut self.budget
+    }
+
     // -- free-list plumbing --------------------------------------------------
 
     fn push_free(&mut self, b: BlockId) {

@@ -133,6 +133,25 @@ impl KvCacheManager {
         self.pool.budget()
     }
 
+    /// Configure the host-tier capacity for demoted adapter weights
+    /// (construction-time; DESIGN.md §20). 0 disables the tier.
+    pub fn set_host_adapter_blocks(&mut self, blocks: usize) {
+        self.pool.budget_mut().set_host_capacity(blocks);
+    }
+
+    /// Charge a demoted adapter's weight pages to the host tier. False —
+    /// and no charge — when the tier lacks headroom; the residency layer
+    /// then drops its host-LRU entries to make room (or gives up and the
+    /// demotion becomes a plain drop).
+    pub fn charge_host_adapter_blocks(&mut self, n: usize) -> bool {
+        self.pool.budget_mut().try_charge_host(n)
+    }
+
+    /// Return a promoted (or dropped) adapter's pages from the host tier.
+    pub fn release_host_adapter_blocks(&mut self, n: usize) {
+        self.pool.budget_mut().release_host(n);
+    }
+
     /// Claim `n` pages for adapter weights from the shared pool (see
     /// [`BlockPool::claim_blocks`]). Atomic; None under pressure — the
     /// residency manager then evicts idle adapters and retries. Session

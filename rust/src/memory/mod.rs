@@ -28,20 +28,46 @@
 //! stall admission) lives in [`crate::adapter::residency::AdapterResidency`]
 //! and the scheduler; this module is the accounting substrate.
 
-/// The device-memory ledger, denominated in KV-block-equivalents.
+/// The memory ledger, denominated in KV-block-equivalents. Two tiers
+/// (DESIGN.md §20):
 ///
-/// Invariant: `adapter_blocks <= total_blocks`, and physically the pool
-/// guarantees `adapter_blocks + kv_referenced + free == total_blocks`
-/// (checked by `BlockPool::check_invariants`).
+/// - **Device**: the pool's physical arena, split between KV pages and
+///   resident adapter weights. Invariant: `adapter_blocks <=
+///   total_blocks`, and physically the pool guarantees `adapter_blocks +
+///   kv_referenced + free == total_blocks` (checked by
+///   `BlockPool::check_invariants`).
+/// - **Host**: a SEPARATE capacity for demoted adapter weights parked in
+///   pinned host memory awaiting cheap promotion. Host blocks are purely
+///   modeled (no physical `BlockId`s — the pool never sees them), so the
+///   device invariant above is untouched by the tier. Invariant:
+///   `host_blocks <= host_total_blocks`; a zero-capacity host tier
+///   (the default) can never be charged.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct MemoryBudget {
     total_blocks: usize,
     adapter_blocks: usize,
+    host_total_blocks: usize,
+    host_blocks: usize,
 }
 
 impl MemoryBudget {
     pub fn new(total_blocks: usize) -> Self {
-        MemoryBudget { total_blocks, adapter_blocks: 0 }
+        MemoryBudget {
+            total_blocks,
+            adapter_blocks: 0,
+            host_total_blocks: 0,
+            host_blocks: 0,
+        }
+    }
+
+    /// Set the host-tier capacity (construction-time; DESIGN.md §20).
+    pub(crate) fn set_host_capacity(&mut self, blocks: usize) {
+        assert!(
+            self.host_blocks <= blocks,
+            "shrinking host tier below {} charged blocks",
+            self.host_blocks
+        );
+        self.host_total_blocks = blocks;
     }
 
     /// Whole-device capacity in blocks (KV arena size at construction).
@@ -77,6 +103,38 @@ impl MemoryBudget {
         assert!(n <= self.adapter_blocks, "adapter release {n} without charge");
         self.adapter_blocks -= n;
     }
+
+    /// Host-tier capacity in blocks (0 = tier disabled).
+    pub fn host_total_blocks(&self) -> usize {
+        self.host_total_blocks
+    }
+
+    /// Blocks currently charged to demoted adapter weights on the host.
+    pub fn host_blocks(&self) -> usize {
+        self.host_blocks
+    }
+
+    /// Host-tier headroom.
+    pub fn host_free_blocks(&self) -> usize {
+        self.host_total_blocks - self.host_blocks
+    }
+
+    /// Charge `n` blocks to the host tier (a demotion). Returns false —
+    /// charging nothing — when the tier lacks headroom; the caller
+    /// decides what to drop (residency's host-LRU).
+    pub(crate) fn try_charge_host(&mut self, n: usize) -> bool {
+        if self.host_blocks + n > self.host_total_blocks {
+            return false;
+        }
+        self.host_blocks += n;
+        true
+    }
+
+    /// Return `n` blocks from the host tier (a promotion or a drop).
+    pub(crate) fn release_host(&mut self, n: usize) {
+        assert!(n <= self.host_blocks, "host release {n} without charge");
+        self.host_blocks -= n;
+    }
 }
 
 #[cfg(test)]
@@ -111,5 +169,32 @@ mod tests {
     fn release_without_charge_panics() {
         let mut b = MemoryBudget::new(4);
         b.release_adapter(1);
+    }
+
+    #[test]
+    fn host_tier_charges_independently_of_device() {
+        let mut b = MemoryBudget::new(10);
+        assert_eq!(b.host_total_blocks(), 0);
+        assert!(!b.try_charge_host(1), "zero-capacity tier never charges");
+        b.set_host_capacity(6);
+        assert_eq!(b.host_free_blocks(), 6);
+        assert!(b.try_charge_host(4));
+        assert_eq!(b.host_blocks(), 4);
+        assert!(!b.try_charge_host(3), "over host capacity");
+        assert_eq!(b.host_blocks(), 4, "failed charge mutates nothing");
+        // Host tier never touches the device split.
+        assert_eq!(b.adapter_blocks(), 0);
+        assert_eq!(b.kv_capacity_blocks(), 10);
+        b.release_host(4);
+        assert_eq!(b.host_blocks(), 0);
+        assert_eq!(b.host_free_blocks(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "host release")]
+    fn host_release_without_charge_panics() {
+        let mut b = MemoryBudget::new(4);
+        b.set_host_capacity(2);
+        b.release_host(1);
     }
 }

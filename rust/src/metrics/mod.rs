@@ -224,6 +224,13 @@ pub struct Metrics {
     pub adapter_loads: u64,
     pub adapter_evictions: u64,
     pub adapter_load_stall_steps: u64,
+    /// Tiered adapter memory (DESIGN.md §20; zero without a host tier):
+    /// device evictions parked host-side, host-tier reloads, host-pressure
+    /// drops, and scheduler-initiated prefetch loads.
+    pub adapter_demotions: u64,
+    pub adapter_promotions: u64,
+    pub adapter_host_drops: u64,
+    pub adapter_prefetches: u64,
     /// Streaming-turn event surface (`alora_serve_stream_*`): watch
     /// subscriptions taken, events emitted, of which token events.
     pub stream_subscriptions: u64,
@@ -247,6 +254,9 @@ pub struct Metrics {
     pub free_blocks: u64,
     /// Blocks currently charged to resident adapter weights.
     pub adapter_resident_blocks: u64,
+    /// Block-equivalents charged to demoted adapter weights on the host
+    /// tier (0 = tier disabled).
+    pub adapter_host_blocks: u64,
     /// Blocks currently pinned by session prefix leases.
     pub leased_blocks: u64,
     pub clock: f64,
@@ -375,6 +385,10 @@ impl Metrics {
         self.adapter_loads += o.adapter_loads;
         self.adapter_evictions += o.adapter_evictions;
         self.adapter_load_stall_steps += o.adapter_load_stall_steps;
+        self.adapter_demotions += o.adapter_demotions;
+        self.adapter_promotions += o.adapter_promotions;
+        self.adapter_host_drops += o.adapter_host_drops;
+        self.adapter_prefetches += o.adapter_prefetches;
         self.stream_subscriptions += o.stream_subscriptions;
         self.stream_events += o.stream_events;
         self.stream_token_events += o.stream_token_events;
@@ -387,6 +401,7 @@ impl Metrics {
         self.waiting_requests += o.waiting_requests;
         self.free_blocks += o.free_blocks;
         self.adapter_resident_blocks += o.adapter_resident_blocks;
+        self.adapter_host_blocks += o.adapter_host_blocks;
         self.leased_blocks += o.leased_blocks;
         self.clock = self.clock.max(o.clock);
         self.e2e_hist.merge(&o.e2e_hist);
@@ -465,6 +480,26 @@ impl Metrics {
             self.adapter_load_stall_steps as f64,
         );
         counter(
+            "adapter_demotions_total",
+            "Device evictions that parked adapter weights in the host tier",
+            self.adapter_demotions as f64,
+        );
+        counter(
+            "adapter_promotions_total",
+            "Adapter loads served from the host tier (setup cost skipped)",
+            self.adapter_promotions as f64,
+        );
+        counter(
+            "adapter_host_drops_total",
+            "Host-tier adapter entries dropped under host pressure",
+            self.adapter_host_drops as f64,
+        );
+        counter(
+            "adapter_prefetches_total",
+            "Adapter loads started by the scheduler prefetch pass",
+            self.adapter_prefetches as f64,
+        );
+        counter(
             "stream_subscriptions_total",
             "Streaming turn-event subscriptions taken",
             self.stream_subscriptions as f64,
@@ -509,6 +544,11 @@ impl Metrics {
             "adapter_resident_blocks",
             "Blocks charged to resident adapter weights",
             self.adapter_resident_blocks as f64,
+        );
+        gauge(
+            "adapter_host_blocks",
+            "Block-equivalents charged to demoted adapter weights on the host tier",
+            self.adapter_host_blocks as f64,
         );
         gauge(
             "leased_blocks",
@@ -838,6 +878,33 @@ mod tests {
         // Means stay exact and percentiles stay available.
         assert!(m.turn.mean("ttft") > 0.0);
         assert!(m.turn.ttft.p99() > 0.0);
+    }
+
+    #[test]
+    fn tiering_counters_render_and_absorb() {
+        let mut m = Metrics::new();
+        m.adapter_demotions = 4;
+        m.adapter_promotions = 3;
+        m.adapter_host_drops = 2;
+        m.adapter_prefetches = 5;
+        m.adapter_host_blocks = 24;
+        let text = m.render_prometheus();
+        assert!(text.contains("alora_serve_adapter_demotions_total 4"), "{text}");
+        assert!(text.contains("alora_serve_adapter_promotions_total 3"), "{text}");
+        assert!(text.contains("alora_serve_adapter_host_drops_total 2"), "{text}");
+        assert!(text.contains("alora_serve_adapter_prefetches_total 5"), "{text}");
+        assert!(text.contains("alora_serve_adapter_host_blocks 24"), "{text}");
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.split_whitespace().count() == 2, "bad line: {line}");
+        }
+        let mut agg = Metrics::new();
+        agg.absorb_scalars(&m);
+        agg.absorb_scalars(&m);
+        assert_eq!(agg.adapter_demotions, 8);
+        assert_eq!(agg.adapter_promotions, 6);
+        assert_eq!(agg.adapter_host_drops, 4);
+        assert_eq!(agg.adapter_prefetches, 10);
+        assert_eq!(agg.adapter_host_blocks, 48);
     }
 
     #[test]

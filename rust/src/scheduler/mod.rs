@@ -15,6 +15,7 @@ use std::collections::VecDeque;
 
 use crate::util::fxmap::FxHashMap;
 
+use crate::adapter::residency::AdmitGate;
 use crate::adapter::AdapterResidency;
 use crate::config::SchedulerConfig;
 use crate::kvcache::chain::ChainRef;
@@ -118,12 +119,16 @@ impl Scheduler {
     /// Pack one step. Mutates request progress fields (`num_computed_tokens`
     /// is NOT advanced here — the engine advances it after execution), the
     /// KV manager's block tables, and adapter residency (loads at
-    /// admission, ref releases on preemption).
+    /// admission, ref releases on preemption). `now` is the engine's sim
+    /// clock: adapter-weight transfers started here complete at
+    /// `now + transfer_time` (instantaneous under the default zero-cost
+    /// config, where `now` is inert).
     pub fn schedule(
         &mut self,
         reqs: &mut FxHashMap<RequestId, Request>,
         kv: &mut KvCacheManager,
         residency: &mut AdapterResidency,
+        now: f64,
     ) -> ScheduledStep {
         let mut step = ScheduledStep::default();
         let mut budget = self.cfg.max_batch_tokens as usize;
@@ -221,27 +226,37 @@ impl Scheduler {
                 }
             }
             // Adapter-residency gate: admission needs the adapter's weights
-            // on-device. A load may evict idle adapters and cold cached
-            // blocks — never a running request's blocks. Failure = memory
-            // not reclaimable yet: stall admission (FCFS) until running
-            // work drains or a preemption drops the last ref somewhere.
+            // on-device and READY. A load may evict idle adapters and cold
+            // cached blocks — never a running request's blocks. Two stall
+            // shapes, both FCFS (DESIGN.md §20): memory not reclaimable
+            // yet (wait for running work to drain or a preemption to drop
+            // a ref), or the weight transfer is still in flight (wait for
+            // the sim clock to pass its completion).
             let was_resident = match target.adapter() {
                 None => true,
-                Some(aid) => {
-                    if !residency.is_resident(aid) {
-                        if !residency.ensure_resident(aid, kv) {
-                            residency.note_stall();
-                            break;
-                        }
+                Some(aid) => match residency.admission_gate(aid, kv, now) {
+                    AdmitGate::Hit => !reqs[&id].admission_cold_load,
+                    AdmitGate::LoadedNow => {
                         // Remember the cold load on the request itself: if
                         // the capacity check below rolls this admission
                         // back, the retry next step finds the adapter
                         // resident but must still count as a cold
                         // admission — this request paid for the load.
                         reqs.get_mut(&id).unwrap().admission_cold_load = true;
+                        false
                     }
-                    !reqs[&id].admission_cold_load
-                }
+                    AdmitGate::Loading(_) => {
+                        // Transfer started (or already in flight) for this
+                        // request: a cold admission once it matures.
+                        reqs.get_mut(&id).unwrap().admission_cold_load = true;
+                        residency.note_stall();
+                        break;
+                    }
+                    AdmitGate::NoMemory => {
+                        residency.note_stall();
+                        break;
+                    }
+                },
             };
             let admitted_ok = {
                 let r = reqs.get_mut(&id).expect("unknown waiting request");
@@ -320,10 +335,29 @@ impl Scheduler {
             }
         }
 
+        // ---- phase 3: prefetch (DESIGN.md §20) ----------------------------
+        // Overlap a queued request's cold adapter transfer with its queue
+        // wait: scan front-to-back for the first cold adapter and start at
+        // most ONE transfer per step (bounded and deterministic; the claim
+        // may LRU-evict idle adapters but a failure is quiet — the request
+        // wasn't admissible this step anyway). No-op unless
+        // `cache.adapter_prefetch` is set AND loads have a modeled cost.
+        if residency.prefetch_enabled() {
+            for id in &self.waiting {
+                if let Some(aid) = reqs[id].target.adapter() {
+                    if !residency.is_resident(aid) {
+                        residency.try_prefetch(aid, kv, now);
+                        break;
+                    }
+                }
+            }
+        }
+
         // KV blocks newly allocated this step — adapter weight pages
-        // claimed/released while packing are excluded: loads are modeled
-        // as instantaneous accounting (DESIGN.md §13.2), so they must not
-        // feed the simulator's per-block allocation cost.
+        // claimed/released while packing are excluded: their cost is
+        // charged by the residency transfer state machine (DESIGN.md §20;
+        // zero under the default config), so they must not also feed the
+        // simulator's per-block allocation cost.
         let total = kv.num_total_blocks() as usize;
         let kv_in_use_before =
             total - free_before as usize - adapter_before;
@@ -427,7 +461,7 @@ mod tests {
         }
 
         fn step(&mut self) -> ScheduledStep {
-            self.sched.schedule(&mut self.reqs, &mut self.kv, &mut self.residency)
+            self.sched.schedule(&mut self.reqs, &mut self.kv, &mut self.residency, 0.0)
         }
 
         /// Simulate the engine applying execution results: advance

@@ -1956,6 +1956,14 @@ mod tests {
         let rep0 = &j.get("replicas").and_then(Json::as_arr).unwrap()[0];
         assert!(rep0.get("resident_adapters").and_then(Json::as_arr).is_some());
         assert!(rep0.get("adapter_loads").and_then(Json::as_u64).is_some());
+        // Tiered-memory fields (DESIGN.md §20): a uniform no-host-tier
+        // fleet reports zeros, but the keys are always present.
+        assert_eq!(rep0.get("host_total_blocks").and_then(Json::as_u64), Some(0));
+        assert_eq!(rep0.get("adapter_host_blocks").and_then(Json::as_u64), Some(0));
+        assert_eq!(rep0.get("adapter_demotions").and_then(Json::as_u64), Some(0));
+        assert_eq!(rep0.get("adapter_promotions").and_then(Json::as_u64), Some(0));
+        assert_eq!(rep0.get("adapter_host_drops").and_then(Json::as_u64), Some(0));
+        assert_eq!(rep0.get("adapter_prefetches").and_then(Json::as_u64), Some(0));
         let m = http(srv.addr(), "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
         assert!(m.contains("alora_serve_router_requests_routed_total"), "{m}");
         assert!(m.contains("alora_serve_replica_clock_seconds{replica=\"1\"}"));

@@ -78,6 +78,15 @@ pub struct CostModel {
     /// transfer is the cheaper slope, so without a fixed cost migration
     /// would always win.
     pub migration_setup: f64,
+    /// Host→device bandwidth for adapter weight loads, bytes/s
+    /// (DESIGN.md §20). Unlike the migration constants this is a CONFIG
+    /// knob (`cache.adapter_load_bw`): 0.0 — the default — models
+    /// instantaneous loads, preserving PR-3 accounting bit-for-bit.
+    pub adapter_load_bw: f64,
+    /// Fixed per-load setup cost (s) from `cache.adapter_load_setup`:
+    /// host-side staging + descriptor setup. A host-tier promotion skips
+    /// it — the weights are already staged and pinned (§20).
+    pub adapter_load_setup: f64,
 }
 
 impl CostModel {
@@ -100,6 +109,8 @@ impl CostModel {
             step_overhead: 40.0e-6,
             migration_bw: 25.0e9,
             migration_setup: 5.0e-3,
+            adapter_load_bw: cfg.cache.adapter_load_bw,
+            adapter_load_setup: cfg.cache.adapter_load_setup,
         }
     }
 
@@ -198,6 +209,36 @@ impl CostModel {
         let kv_bytes_per_block = self.kv_bytes * self.block_size as f64;
         blocks as f64 * kv_bytes_per_block / self.migration_bw
             < self.prefill_time(blocks * self.block_size, 0)
+    }
+
+    // -- tiered adapter memory (DESIGN.md §20) ------------------------------
+
+    /// Modeled host→device transfer time for a cold adapter's `blocks`
+    /// weight pages: fixed setup plus bytes over the link, exactly
+    /// analogous to [`CostModel::migration_time`]. Returns 0.0 when
+    /// `adapter_load_bw` is 0.0 (the default): loads are instantaneous
+    /// accounting and the tiering state machine collapses to PR-3
+    /// behavior, bit-identical.
+    pub fn adapter_load_time(&self, blocks: usize) -> f64 {
+        if self.adapter_load_bw <= 0.0 {
+            return 0.0;
+        }
+        let bytes_per_block = self.kv_bytes * self.block_size as f64;
+        self.adapter_load_setup + blocks as f64 * bytes_per_block / self.adapter_load_bw
+    }
+
+    /// Modeled promotion time from the host tier: pure bandwidth, no
+    /// setup — demoted weights stay staged and pinned on the host, so
+    /// re-loading them skips the control-plane round trip a cold load
+    /// pays. Strictly cheaper than [`CostModel::adapter_load_time`]
+    /// whenever `adapter_load_setup > 0`; this gap is what makes
+    /// demotion beat drop-and-reload (acceptance-pinned).
+    pub fn adapter_promote_time(&self, blocks: usize) -> f64 {
+        if self.adapter_load_bw <= 0.0 {
+            return 0.0;
+        }
+        let bytes_per_block = self.kv_bytes * self.block_size as f64;
+        blocks as f64 * bytes_per_block / self.adapter_load_bw
     }
 }
 
@@ -330,5 +371,28 @@ mod tests {
         assert!(m.batch_migration_member_wins(4));
         assert!(m.batch_migration_member_wins(64));
         assert!(!m.batch_migration_member_wins(0), "empty chain never ships");
+    }
+
+    #[test]
+    fn adapter_load_time_zero_by_default_and_costed_when_configured() {
+        // Default config: bw 0 → instantaneous, the PR-3 contract.
+        let m = model("granite-8b");
+        assert_eq!(m.adapter_load_time(32), 0.0);
+        assert_eq!(m.adapter_promote_time(32), 0.0);
+        // Costed config: setup + linear transfer; promotion skips setup.
+        let mut cfg = presets::granite_8b();
+        cfg.cache.adapter_load_bw = 25.0e9;
+        cfg.cache.adapter_load_setup = 2.0e-3;
+        let m = CostModel::new(&cfg);
+        let t8 = m.adapter_load_time(8);
+        let t32 = m.adapter_load_time(32);
+        assert!(t8 > 2.0e-3, "setup is always paid on a cold load");
+        assert!(t32 > t8, "transfer is monotone in block count");
+        // Linear slope: the marginal block costs kv_bytes*block_size/bw.
+        let per_block = 163840.0 * 16.0 / 25.0e9;
+        assert!((t32 - t8 - 24.0 * per_block).abs() < 1e-12);
+        // Promotion = the same slope with no setup: strictly cheaper.
+        assert!((m.adapter_promote_time(32) - 32.0 * per_block).abs() < 1e-12);
+        assert!(m.adapter_promote_time(32) < m.adapter_load_time(32));
     }
 }

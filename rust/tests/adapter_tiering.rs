@@ -1,0 +1,143 @@
+//! Integration: tiered adapter memory — time-costed host↔device
+//! transfers, prefetch, host-tier demotion, heterogeneous fleets
+//! (DESIGN.md §20).
+//!
+//! Acceptance bars (ISSUE 10):
+//! (a) with transfer costs on, scheduler prefetch strictly reduces
+//!     load-stall steps on an adapter-churn workload;
+//! (b) host-tier demotion beats drop-and-reload on reload latency: the
+//!     demote arm replaces cold loads with promotions and its makespan is
+//!     shorter by exactly the saved setup costs;
+//! (c) a heterogeneous fleet strictly beats a homogeneous fleet of equal
+//!     TOTAL block budget on aggregate adapter-residency hit-rate;
+//! (d) the default config (zero transfer cost, no host tier) is
+//!     behaviorally identical to the pre-tiering instantaneous model, and
+//!     the prefetch flag is inert at zero cost.
+
+use alora_serve::adapter::AdapterId;
+use alora_serve::engine::Engine;
+use alora_serve::figures::adapter_tiering::{cfg_for, run_churn, run_fleet, LOAD_BW};
+use alora_serve::pipeline::workload;
+use alora_serve::request::{ModelTarget, SamplingParams};
+use alora_serve::simulator::SimExecutor;
+
+#[test]
+fn acceptance_a_prefetch_strictly_reduces_load_stall_steps() {
+    // Same churn workload (9 requests cycling 3 adapters on a 96-block
+    // device), host tier on in both arms; only the prefetch flag differs.
+    let plain = run_churn(96, LOAD_BW, false, 9);
+    let prefetch = run_churn(96, LOAD_BW, true, 9);
+    assert_eq!(plain.prefetches, 0);
+    assert!(prefetch.prefetches >= 1, "prefetch never fired: {prefetch:?}");
+    assert!(
+        prefetch.stall_steps < plain.stall_steps,
+        "prefetch must strictly reduce load stalls: {} vs {}",
+        prefetch.stall_steps,
+        plain.stall_steps
+    );
+    // A transfer that matured during the queue wait is admitted warm, so
+    // overlap also shows up as residency hit-rate.
+    assert!(prefetch.adapter_hit_rate >= plain.adapter_hit_rate);
+}
+
+/// Sequential alternation over 2 adapters on a 64-block device (one
+/// adapter's weights + KV): every request evicts the other adapter, so
+/// every admission after the first two is a reload — promotion when the
+/// host tier holds the demoted copy, full-cost cold load when it dropped.
+fn alternate(host_blocks: u64) -> alora_serve::figures::adapter_tiering::ChurnResult {
+    let mut cfg = cfg_for(host_blocks, LOAD_BW, false);
+    cfg.cache.max_kv_tokens = 64 * cfg.cache.block_size as u64;
+    cfg.cache.host_adapter_blocks = host_blocks;
+    let reg = workload::build_registry(2, cfg.model.vocab_size, true);
+    let exec = SimExecutor::new(&cfg);
+    let mut e = Engine::with_registry(cfg, reg, exec);
+    let params = SamplingParams { max_new_tokens: 4, ..Default::default() };
+    for k in 0..6u32 {
+        let prompt = vec![500 + k; 17];
+        e.submit(ModelTarget::Adapter(AdapterId(k % 2)), prompt, params).unwrap();
+        e.run_until_idle();
+    }
+    let rs = e.residency().stats();
+    alora_serve::figures::adapter_tiering::ChurnResult {
+        loads: rs.loads,
+        evictions: rs.evictions,
+        demotions: rs.demotions,
+        promotions: rs.promotions,
+        host_drops: rs.host_drops,
+        prefetches: rs.prefetches,
+        stall_steps: rs.load_stall_steps,
+        adapter_hit_rate: rs.hit_rate(),
+        ttft_mean: e.metrics.all.mean("ttft"),
+        makespan: e.clock(),
+    }
+}
+
+#[test]
+fn acceptance_b_demotion_beats_drop_and_reload() {
+    // 32-block host tier holds exactly the one adapter evicted at a time.
+    let demote = alternate(32);
+    let drop = alternate(0);
+    // Drop arm: 2 cold loads + 4 full-cost reloads, nothing ever demoted.
+    assert_eq!(drop.loads, 6, "{drop:?}");
+    assert_eq!((drop.demotions, drop.promotions, drop.host_drops), (0, 0, 0));
+    // Demote arm: the same 4 reloads become setup-free promotions.
+    assert_eq!(demote.loads, 2, "{demote:?}");
+    assert_eq!(demote.promotions, 4, "{demote:?}");
+    assert!(demote.demotions >= 4, "{demote:?}");
+    assert_eq!(demote.host_drops, 0, "32-block tier never overflows");
+    assert!(
+        demote.makespan < drop.makespan,
+        "demotion must shorten reloads: {} vs {}",
+        demote.makespan,
+        drop.makespan
+    );
+    // The two arms differ ONLY in per-reload setup cost: the makespan gap
+    // is the 4 promotions' saved setup time (cfg_for pins setup = 2ms).
+    let saved = drop.makespan - demote.makespan;
+    assert!(
+        (saved - 4.0 * 2.0e-3).abs() < 1e-6,
+        "gap should be promotions x setup: saved {saved}"
+    );
+}
+
+#[test]
+fn acceptance_c_heterogeneous_fleet_beats_homogeneous_at_equal_budget() {
+    // 5 adapters x 32 blocks over two replicas, 192 total blocks in both
+    // fleets. 136+56 packs 4+1 with KV headroom; 96+96 pigeonholes three
+    // adapters onto one replica whose pool they fill completely, so it
+    // must evict one every round, forever.
+    let hetero = run_fleet(true, 4);
+    let homo = run_fleet(false, 4);
+    assert_eq!(hetero.loads, 5, "clean packing loads each adapter once: {hetero:?}");
+    assert_eq!(hetero.evictions, 0, "{hetero:?}");
+    assert!(homo.loads >= 8, "equal-split fleet must thrash: {homo:?}");
+    assert!(homo.evictions >= 1, "{homo:?}");
+    // Round 1 cold, rounds 2..4 all warm: 15/20 admissions hit.
+    assert!((hetero.aggregate_adapter_hit_rate - 0.75).abs() < 1e-12, "{hetero:?}");
+    assert!(
+        hetero.aggregate_adapter_hit_rate > homo.aggregate_adapter_hit_rate + 0.1,
+        "hetero {} vs homo {}",
+        hetero.aggregate_adapter_hit_rate,
+        homo.aggregate_adapter_hit_rate
+    );
+}
+
+#[test]
+fn acceptance_d_default_zero_cost_is_unchanged_and_prefetch_is_inert() {
+    // bw = 0 collapses the state machine to the pre-tiering instantaneous
+    // model: loads complete inline, nothing is ever in flight, and none
+    // of the new tier counters can move.
+    let base = run_churn(0, 0.0, false, 9);
+    assert_eq!(
+        (base.demotions, base.promotions, base.host_drops, base.prefetches),
+        (0, 0, 0, 0),
+        "{base:?}"
+    );
+    // The prefetch flag must be a documented no-op at zero cost: same
+    // counters, same stalls, same clock, same TTFT — bit-identical run.
+    let with_flag = run_churn(0, 0.0, true, 9);
+    assert_eq!(base, with_flag);
+    // And the costed arms really charge time the zero-cost model hid.
+    let costed = run_churn(0, LOAD_BW, false, 9);
+    assert!(costed.makespan > base.makespan, "{costed:?} vs {base:?}");
+}

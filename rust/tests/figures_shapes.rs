@@ -11,7 +11,8 @@ fn run_all_quick_produces_every_table() {
     for want in [
         "table1", "fig6", "fig6-speedup", "fig7", "fig8", "fig9", "fig10-eval",
         "fig10-base2", "fig10-multi", "fig11", "fig12", "fig13", "fig14", "fig15",
-        "cluster_scaling", "adapter_memory", "failover", "migration",
+        "cluster_scaling", "adapter_memory", "adapter_tiering", "failover",
+        "migration",
     ] {
         assert!(ids.contains(&want), "missing table `{want}` in {ids:?}");
     }
